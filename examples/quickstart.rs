@@ -1,0 +1,48 @@
+//! Quickstart: load the AOT-compiled small model, generate with the CPE
+//! selector, print tokens + retrieval stats.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use prhs::config::{EngineConfig, SelectorKind};
+use prhs::model::Engine;
+use prhs::util::rng::Rng;
+use prhs::workload;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Engine over the AOT artifacts (python ran once at `make
+    //    artifacts`; nothing here touches python).
+    let mut cfg = EngineConfig::default();
+    cfg.selector.kind = SelectorKind::Cpe;
+    cfg.selector.psaw_enabled = true;
+    cfg.selector.etf_enabled = true;
+    let mut engine = Engine::new(cfg)?;
+
+    // 2. A synthetic prompt (the repo has no tokenizer — workloads are
+    //    token-id streams; see DESIGN.md §4).
+    let mut rng = Rng::new(1);
+    let spec = workload::scaled(&workload::GSM8K, 384);
+    let req = workload::generate(&spec, engine.mm.vocab_size, &mut rng);
+
+    // 3. Prefill + decode.
+    let mut seq = engine.new_sequence(0, req.prompt.clone());
+    seq.max_new = 24;
+    let t0 = std::time::Instant::now();
+    let tokens = engine.generate(&mut seq)?;
+    let dt = t0.elapsed().as_secs_f64();
+
+    println!("prompt: {} tokens; generated: {:?}", req.prompt.len(), tokens);
+    println!(
+        "throughput: {:.1} tok/s | ρ̂ = {:.4} (fraction of head-steps that \
+         performed full scoring) | avg selected KV = {:.1} of {} cached",
+        tokens.len() as f64 / dt,
+        engine.retrieval_ratio(&seq, tokens.len() as u64),
+        engine.stats.avg_selected(),
+        seq.t(),
+    );
+    println!(
+        "dense layer calls: {} | sparse layer calls: {}",
+        engine.stats.dense_layer_calls, engine.stats.sparse_layer_calls
+    );
+    engine.release(&mut seq);
+    Ok(())
+}

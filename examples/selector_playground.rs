@@ -1,0 +1,66 @@
+//! Selector playground: run every selector on the same request and print
+//! the quality/cost profile side by side (δ, β_th, ρ̂, avg selected set).
+//!
+//!     cargo run --release --example selector_playground
+
+use prhs::config::{EngineConfig, SelectorConfig, SelectorKind};
+use prhs::model::{Engine, Probe};
+use prhs::runtime::{Runtime, WeightStore};
+use prhs::util::rng::Rng;
+use prhs::workload;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let mut base = EngineConfig::default();
+    base.artifacts_dir = std::env::var("PRHS_ARTIFACTS")
+        .unwrap_or_else(|_| "artifacts".to_string());
+    let rt = Arc::new(Runtime::new(&base.artifacts_dir)?);
+    let mm = rt.model("small")?.clone();
+    let ws = Arc::new(WeightStore::load(&rt, &mm)?);
+
+    let mut rng = Rng::new(7);
+    let spec = workload::scaled(&workload::COQA, if quick { 256 } else { 700 });
+    let req = workload::generate(&spec, mm.vocab_size, &mut rng);
+    let gen = if quick { 6 } else { 16 };
+
+    println!(
+        "{:<11} {:>7} {:>9} {:>9} {:>9} {:>9}",
+        "selector", "ρ̂", "avg_sel", "mean_δ", "β_th", "out_L2"
+    );
+    for kind in [
+        SelectorKind::TopKOracle,
+        SelectorKind::H2O,
+        SelectorKind::StreamingLlm,
+        SelectorKind::Quest,
+        SelectorKind::DoubleSparsity,
+        SelectorKind::HShare,
+        SelectorKind::Cis,
+        SelectorKind::Cpe,
+    ] {
+        let mut cfg = base.clone();
+        cfg.selector = SelectorConfig {
+            kind: kind.clone(),
+            psaw_enabled: kind == SelectorKind::Cpe,
+            ..Default::default()
+        };
+        let mut engine = Engine::with_shared(rt.clone(), ws.clone(), cfg);
+        engine.probe = Some(Probe::new(2));
+        let mut seq = engine.new_sequence(0, req.prompt.clone());
+        seq.max_new = gen;
+        engine.generate(&mut seq)?;
+        let p = engine.probe.take().unwrap();
+        println!(
+            "{:<11} {:>7.4} {:>9.1} {:>9.4} {:>9.4} {:>9.4}",
+            kind.name(),
+            engine.retrieval_ratio(&seq, gen as u64),
+            engine.stats.avg_selected(),
+            p.mean_delta(),
+            p.mean_beta(),
+            p.mean_out_l2(),
+        );
+        engine.release(&mut seq);
+    }
+    println!("\nreading: the top-k oracle minimizes δ at the budget (Theorem 3); CIS should sit near it at a fraction of the retrievals (PrHS, Eq. 9-10)");
+    Ok(())
+}

@@ -1,0 +1,272 @@
+"""AOT pipeline: lower every L2 stage to HLO *text* + export weights.
+
+Run once via ``make artifacts``; python never runs on the request path.
+
+Interchange format is HLO text, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published ``xla`` 0.1.6 crate) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import weights as W
+from .config import CONFIGS, ArtifactConfig, config_dict
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _io_entry(name, s):
+    return {"name": name, "dtype": str(s.dtype), "shape": list(s.shape)}
+
+
+class Builder:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.artifacts = []
+
+    def lower(self, name, stage, fn, arg_specs, out_names, params):
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*[s for _, s in arg_specs])
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        outs = jax.eval_shape(fn, *[s for _, s in arg_specs])
+        self.artifacts.append({
+            "name": name,
+            "file": fname,
+            "stage": stage,
+            "params": params,
+            "inputs": [_io_entry(n, s) for n, s in arg_specs],
+            "outputs": [
+                _io_entry(out_names[i], o) for i, o in enumerate(outs)
+            ],
+        })
+        print(f"  {name}: {len(text)//1024} KiB, {time.time()-t0:.1f}s",
+              flush=True)
+
+
+def layer_weight_specs(cfg):
+    h = cfg.n_heads * cfg.head_dim
+    hkv = cfg.n_kv_heads * cfg.head_dim
+    return [
+        ("attn_norm_w", spec([cfg.d_model])),
+        ("wq", spec([cfg.d_model, h])),
+        ("wk", spec([cfg.d_model, hkv])),
+        ("wv", spec([cfg.d_model, hkv])),
+        ("wo", spec([h, cfg.d_model])),
+        ("mlp_norm_w", spec([cfg.d_model])),
+        ("w_gate", spec([cfg.d_model, cfg.d_ff])),
+        ("w_up", spec([cfg.d_model, cfg.d_ff])),
+        ("w_down", spec([cfg.d_ff, cfg.d_model])),
+    ]
+
+
+def build_model_artifacts(b: Builder, cfg, art: ArtifactConfig,
+                          quick: bool = False):
+    """E2E serving stages for one model config."""
+    H, Hkv, d, dm, V = (cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+                        cfg.d_model, cfg.vocab_size)
+    lw = layer_weight_specs(cfg)
+    batches = art.batch_tiles if not quick else art.batch_tiles[:1]
+    sels = art.sel_buckets if not quick else art.sel_buckets[:1]
+    ctxs = art.ctx_buckets if not quick else art.ctx_buckets[:1]
+    pres = art.prefill_buckets if not quick else art.prefill_buckets[:1]
+
+    for bsz in batches:
+        b.lower(
+            f"{cfg.name}_embed_b{bsz}", "embed",
+            lambda tokens, ew: (M.embed(tokens, ew),),
+            [("tokens", spec([bsz], I32)),
+             ("embed_w", spec([V, dm]))],
+            ["hidden"], {"model": cfg.name, "batch": bsz},
+        )
+        b.lower(
+            f"{cfg.name}_lm_head_b{bsz}", "lm_head",
+            lambda hidden, nw, hw: (M.lm_head(hidden, nw, hw, cfg=cfg),),
+            [("hidden", spec([bsz, dm])),
+             ("final_norm_w", spec([dm])),
+             ("lm_head", spec([dm, V]))],
+            ["logits"], {"model": cfg.name, "batch": bsz},
+        )
+        for n in sels:
+            def step(hidden, pos, k_sel, v_sel, mask, *ws):
+                return M.layer_step(
+                    hidden, pos, k_sel, v_sel, mask, *ws, cfg=cfg)
+            b.lower(
+                f"{cfg.name}_layer_step_b{bsz}_n{n}", "layer_step",
+                step,
+                [("hidden", spec([bsz, dm])),
+                 ("pos", spec([bsz], I32)),
+                 ("k_sel", spec([bsz, H, n, d])),
+                 ("v_sel", spec([bsz, H, n, d])),
+                 ("sel_mask", spec([bsz, H, n]))] + lw,
+                ["hidden", "k_new", "v_new", "probs"],
+                {"model": cfg.name, "batch": bsz, "n_sel": n},
+            )
+        for l_max in ctxs:
+            def dstep(hidden, pos, kc, vc, length, *ws, _l=l_max):
+                return M.layer_step_dense(
+                    hidden, pos, kc, vc, length, *ws, cfg=cfg, l_max=_l)
+            b.lower(
+                f"{cfg.name}_layer_step_dense_b{bsz}_l{l_max}",
+                "layer_step_dense",
+                dstep,
+                [("hidden", spec([bsz, dm])),
+                 ("pos", spec([bsz], I32)),
+                 ("k_cache", spec([bsz, Hkv, l_max, d])),
+                 ("v_cache", spec([bsz, Hkv, l_max, d])),
+                 ("length", spec([bsz], I32))] + lw,
+                ["hidden", "k_new", "v_new", "probs"],
+                {"model": cfg.name, "batch": bsz, "l_max": l_max},
+            )
+
+    all_w_specs = [("embed_w", spec([V, dm]))]
+    for i in range(cfg.n_layers):
+        for nm, s in layer_weight_specs(cfg):
+            all_w_specs.append((f"layers.{i}.{nm}", s))
+    all_w_specs += [("final_norm_w", spec([dm])),
+                    ("lm_head", spec([dm, V]))]
+    for l_max in pres:
+        def pf(tokens, length, c_sink, ell_s, phi, alpha, psi, gamma,
+               psaw_on, etf_on, *ws, _l=l_max):
+            return M.prefill(
+                tokens, length, c_sink, ell_s, phi, alpha, psi, gamma,
+                psaw_on, etf_on, *ws, cfg=cfg, l_max=_l)
+        b.lower(
+            f"{cfg.name}_prefill_l{l_max}", "prefill",
+            pf,
+            [("tokens", spec([l_max], I32)),
+             ("length", spec([], I32)),
+             ("c_sink", spec([], F32)),
+             ("ell_s", spec([], F32)),
+             ("phi", spec([], F32)),
+             ("alpha", spec([], F32)),
+             ("psi", spec([], F32)),
+             ("gamma", spec([], F32)),
+             ("psaw_on", spec([], F32)),
+             ("etf_on", spec([], F32))] + all_w_specs,
+            ["k_cache", "v_cache", "last_hidden", "logits", "last_probs"],
+            {"model": cfg.name, "l_max": l_max},
+        )
+
+
+def build_op_artifacts(b: Builder, cfg, batches, sels, ctxs,
+                       pallas_sels=None):
+    """Standalone attention operators (Table IV/V benches, kernel parity)."""
+    H, d = cfg.n_heads, cfg.head_dim
+    pallas_sels = pallas_sels if pallas_sels is not None else sels[:1]
+    for bsz in batches:
+        for n in sels:
+            b.lower(
+                f"{cfg.name}_attn_tsa_xla_b{bsz}_n{n}", "attn_tsa_xla",
+                M.attn_tsa_xla,
+                [("q", spec([bsz, H, d])),
+                 ("k_sel", spec([bsz, H, n, d])),
+                 ("v_sel", spec([bsz, H, n, d])),
+                 ("mask", spec([bsz, H, n]))],
+                ["out"], {"model": cfg.name, "batch": bsz, "n_sel": n},
+            )
+        for n in pallas_sels:
+            b.lower(
+                f"{cfg.name}_attn_tsa_pallas_b{bsz}_n{n}",
+                "attn_tsa_pallas",
+                M.attn_tsa_pallas,
+                [("q", spec([bsz, H, d])),
+                 ("k_sel", spec([bsz, H, n, d])),
+                 ("v_sel", spec([bsz, H, n, d])),
+                 ("mask", spec([bsz, H, n]))],
+                ["out"], {"model": cfg.name, "batch": bsz, "n_sel": n},
+            )
+        for l_max in ctxs:
+            b.lower(
+                f"{cfg.name}_attn_dense_b{bsz}_l{l_max}", "attn_dense",
+                functools.partial(M.attn_dense, l_max=l_max),
+                [("q", spec([bsz, H, d])),
+                 ("k", spec([bsz, H, l_max, d])),
+                 ("v", spec([bsz, H, l_max, d])),
+                 ("length", spec([bsz], I32))],
+                ["out"], {"model": cfg.name, "batch": bsz, "l_max": l_max},
+            )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="minimal artifact set (CI/pytest smoke)")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    t0 = time.time()
+    manifest = {"version": 1, "models": {}}
+
+    small = CONFIGS["small"]
+    art = ArtifactConfig()
+    b = Builder(args.out_dir)
+    print(f"[aot] model={small.name} (~{small.params_estimate/1e6:.1f}M params)")
+    build_model_artifacts(b, small, art, quick=args.quick)
+
+    w = W.init_weights(small)
+    names = W.all_weight_names(small)
+    blob = f"weights_{small.name}.bin"
+    entries = W.export_blob(w, names, os.path.join(args.out_dir, blob))
+    manifest["models"][small.name] = {
+        "config": config_dict(small),
+        "weights_blob": blob,
+        "weights": entries,
+        "artifacts": b.artifacts,
+    }
+
+    bench = CONFIGS["bench"]
+    b2 = Builder(args.out_dir)
+    print(f"[aot] model={bench.name} (operator benches)")
+    if args.quick:
+        build_op_artifacts(b2, bench, [8], [128], [1024], pallas_sels=[128])
+    else:
+        build_op_artifacts(
+            b2, bench, [8, 16], [128, 160, 576], [1024, 2048, 4096],
+            pallas_sels=[128, 160],
+        )
+    wb = W.init_weights(bench)
+    namesb = W.all_weight_names(bench)
+    blobb = f"weights_{bench.name}.bin"
+    entriesb = W.export_blob(wb, namesb, os.path.join(args.out_dir, blobb))
+    manifest["models"][bench.name] = {
+        "config": config_dict(bench),
+        "weights_blob": blobb,
+        "weights": entriesb,
+        "artifacts": b2.artifacts,
+    }
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    n_art = len(b.artifacts) + len(b2.artifacts)
+    print(f"[aot] wrote {n_art} artifacts + manifest in {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

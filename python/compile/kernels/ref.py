@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for the L1 kernels.
+
+These are the correctness ground truth: every Pallas kernel in this package
+must match its oracle to float tolerance under pytest (see
+``python/tests/test_kernel.py``).  They are also lowered to HLO as the
+"xla"-variant operators the serving hot path uses by default (the Pallas
+interpret path is the TPU-shaped authoring artifact; see DESIGN.md
+§Hardware-Adaptation).
+"""
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def tsa_attention_ref(q, k_sel, v_sel, mask):
+    """Token-sparse attention over a gathered KV subset.
+
+    Args:
+      q:     [B, H, d]        query for the current decode step (scaling by
+                              1/sqrt(d) happens inside).
+      k_sel: [B, H, N, d]     gathered selected keys (already RoPE'd).
+      v_sel: [B, H, N, d]     gathered selected values.
+      mask:  [B, H, N]        1.0 for valid slots, 0.0 for padding.
+
+    Returns:
+      out:   [B, H, d]        attention output sum_i softmax_i * v_i.
+    """
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=jnp.float32))
+    qf = q.astype(jnp.float32)
+    kf = k_sel.astype(jnp.float32)
+    vf = v_sel.astype(jnp.float32)
+    scores = jnp.einsum("bhd,bhnd->bhn", qf, kf) * scale
+    scores = jnp.where(mask > 0, scores, NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    # Guard the all-masked row: keep exp finite and the denominator positive.
+    m = jnp.maximum(m, -1e29)
+    p = jnp.exp(scores - m) * (mask > 0)
+    denom = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    w = p / denom
+    out = jnp.einsum("bhn,bhnd->bhd", w, vf)
+    return out.astype(q.dtype)
+
+
+def tsa_attention_weights_ref(q, k_sel, mask):
+    """Attention *weights* over the selected set (same masking semantics)."""
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=jnp.float32))
+    scores = jnp.einsum(
+        "bhd,bhnd->bhn", q.astype(jnp.float32), k_sel.astype(jnp.float32)
+    ) * scale
+    scores = jnp.where(mask > 0, scores, NEG_INF)
+    m = jnp.maximum(jnp.max(scores, axis=-1, keepdims=True), -1e29)
+    p = jnp.exp(scores - m) * (mask > 0)
+    denom = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    return p / denom
+
+
+def dense_attention_ref(q, k, v, length, l_max):
+    """Dense (full-window) decode attention baseline.
+
+    Args:
+      q: [B, H, d]; k, v: [B, H, L_max, d]; length: [B] int32 valid prefix
+      lengths; l_max: static python int == L_max.
+
+    Returns [B, H, d].
+    """
+    idx = jnp.arange(l_max)[None, None, :]  # [1,1,L]
+    mask = (idx < length[:, None, None]).astype(jnp.float32)  # [B,1,L]
+    mask = jnp.broadcast_to(mask, (q.shape[0], q.shape[1], l_max))
+    return tsa_attention_ref(q, k, v, mask)
+
+
+def scores_ref(q, k, length, l_max):
+    """Raw scaled logits q.k/sqrt(d) with out-of-range positions at -inf."""
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=jnp.float32))
+    s = jnp.einsum(
+        "bhd,bhld->bhl", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    idx = jnp.arange(l_max)[None, None, :]
+    return jnp.where(idx < length[:, None, None], s, NEG_INF)

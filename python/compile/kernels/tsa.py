@@ -1,0 +1,109 @@
+"""L1 Pallas kernel: token-sparse attention (TSA) over a gathered KV subset.
+
+This is the paper's compute hot-spot (Fig. 6 "TSA scoring" + value
+aggregation), rethought for a TPU-shaped memory hierarchy per DESIGN.md
+§Hardware-Adaptation:
+
+- The paper's CUDA kernel fuses an index-gather warp with the sparse
+  attention threadblock.  Here the L3 coordinator performs the gather
+  (bandwidth ∝ N_sel — the paper's saving) and the kernel receives a
+  contiguous ``[N_sel, d]`` tile, which BlockSpec stages HBM→VMEM whole:
+  for the paper's budgets (N_sel ≤ 576, d = 64, f32) a (K,V) pair is
+  ≤ 294 KiB — comfortably inside a TPU core's ~16 MiB VMEM, so no inner
+  K-loop is needed and the kernel is single-pass (online softmax is not
+  required; max/exp/normalize happen on the whole tile in registers/VMEM).
+- The score contraction ``K_sel @ q`` is MXU-shaped ([N,d]x[d] matmul,
+  bf16-friendly); value aggregation ``pᵀ @ V_sel`` likewise.
+- Grid = (B, H): one program instance per (batch row, head), matching the
+  paper's per-head selection granularity.
+
+MUST be lowered with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls.  Correctness vs ``ref.tsa_attention_ref`` is enforced
+by pytest/hypothesis sweeps.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _tsa_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref):
+    """One (batch, head) program: attention over the selected-KV tile.
+
+    Block shapes (leading grid dims collapsed to 1):
+      q_ref: [1, 1, d]; k_ref/v_ref: [1, 1, N, d]; mask_ref: [1, 1, N];
+      o_ref: [1, 1, d].
+    """
+    q = q_ref[0, 0, :].astype(jnp.float32)          # [d]
+    k = k_ref[0, 0, :, :].astype(jnp.float32)       # [N, d]
+    v = v_ref[0, 0, :, :].astype(jnp.float32)       # [N, d]
+    mask = mask_ref[0, 0, :]                        # [N]
+
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=jnp.float32))
+    # MXU-shaped contraction: [N, d] @ [d] -> [N].
+    scores = jnp.dot(k, q) * scale
+    valid = mask > 0
+    scores = jnp.where(valid, scores, NEG_INF)
+    # Numerically-stable masked softmax over the tile (single pass: the
+    # whole selected set lives in VMEM, no online accumulation needed).
+    m = jnp.maximum(jnp.max(scores), -1e29)
+    p = jnp.exp(scores - m) * valid.astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(p), 1e-30)
+    w = p / denom                                    # [N]
+    o_ref[0, 0, :] = jnp.dot(w, v).astype(o_ref.dtype)  # [d]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def tsa_attention(q, k_sel, v_sel, mask, interpret=True):
+    """Pallas TSA attention. Shapes as in ``ref.tsa_attention_ref``.
+
+    q: [B,H,d], k_sel/v_sel: [B,H,N,d], mask: [B,H,N] -> out [B,H,d].
+    """
+    b, h, d = q.shape
+    n = k_sel.shape[2]
+    grid = (b, h)
+    return pl.pallas_call(
+        _tsa_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1, n, d), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, n, d), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, n), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        interpret=interpret,
+    )(q, k_sel, v_sel, mask)
+
+
+def vmem_footprint_bytes(n: int, d: int, dtype_bytes: int = 4) -> int:
+    """Static VMEM estimate for one program instance (perf-model input).
+
+    q + K + V + mask + out + softmax temporaries (scores, p, w: 3x [N]).
+    Used by DESIGN.md §Perf and the L1 structure audit in
+    python/tests/test_kernel.py::test_vmem_budget.
+    """
+    tile = d * dtype_bytes            # q
+    tile += 2 * n * d * dtype_bytes   # K, V
+    tile += n * dtype_bytes           # mask
+    tile += d * dtype_bytes           # out
+    tile += 3 * n * 4                 # f32 temporaries
+    return tile
+
+
+def mxu_utilization_estimate(n: int, d: int) -> float:
+    """Fraction of MXU 128x128 tile lanes busy for the score matmul.
+
+    The [N, d] x [d, 1] contraction maps to ceil(N/128) x ceil(d/128) MXU
+    passes with a single output column — a matrix-vector product, so lane
+    occupancy is d/128 per pass (bounded by the reduction width).  Reported
+    for the structure audit; on real TPU the batched-heads grid would be
+    fused into the matmul to raise this (future work, DESIGN.md §Perf).
+    """
+    return min(d, 128) / 128.0

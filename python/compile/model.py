@@ -1,0 +1,321 @@
+"""L2: the JAX compute graph — a LLaMA-family decoder expressed as per-stage
+step functions so the rust coordinator owns the serving loop.
+
+Stages (each lowered to one HLO-text artifact per shape bucket by aot.py):
+
+  embed        token ids -> hidden
+  layer_step   one decoder layer's decode step with *token-sparse attention*
+               over a gathered, padded selected-KV tile (the PrHS hot path)
+  layer_step_dense
+               same layer step but dense attention over the full KV bucket;
+               additionally returns the post-softmax attention row — this is
+               the "full scoring" retrieval step selectors amortize, and the
+               probe used by the Fig-1/Fig-2 analyses and H2O statistics
+  lm_head      hidden -> logits
+  prefill      whole-prompt forward with in-graph causal+PSAW masks and ETF
+               freezing; emits all-layer KV + last-token logits + last-row
+               attention probs per layer (seeds the first retrieval)
+  attn ops     standalone TSA (pallas & xla variants) and dense attention
+               operators for the Table IV/V benches and kernel parity tests
+
+All functions are pure and take weights as explicit positional args in the
+order defined by weights.layer_weight_names / all_weight_names.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .kernels import ref
+from .kernels.tsa import tsa_attention
+
+# ---------------------------------------------------------------------------
+# building blocks
+
+
+def rmsnorm(x, w, eps):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def rope_angles(pos, head_dim, base):
+    """pos: [...] int32 -> cos,sin of shape [..., head_dim/2]."""
+    half = head_dim // 2
+    inv_freq = base ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = pos.astype(jnp.float32)[..., None] * inv_freq  # [..., half]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: [..., head_dim]; cos/sin broadcastable to [..., head_dim/2].
+
+    Half-split rotation (rotate_half convention, equivalent to LLaMA's
+    interleaved pairs up to a fixed permutation baked consistently into both
+    K-cache and Q)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _project_qkv(x, wq, wk, wv, cfg: ModelConfig):
+    b = x.shape[0]
+    q = (x @ wq).reshape(b, cfg.n_heads, cfg.head_dim)
+    k = (x @ wk).reshape(b, cfg.n_kv_heads, cfg.head_dim)
+    v = (x @ wv).reshape(b, cfg.n_kv_heads, cfg.head_dim)
+    return q, k, v
+
+
+def _repeat_kv(x, cfg: ModelConfig):
+    """GQA: expand kv heads to n_heads if needed. x: [B, Hkv, ...]"""
+    if cfg.n_kv_heads == cfg.n_heads:
+        return x
+    rep = cfg.n_heads // cfg.n_kv_heads
+    return jnp.repeat(x, rep, axis=1)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    return (jax.nn.silu(x @ w_gate) * (x @ w_up)) @ w_down
+
+
+# ---------------------------------------------------------------------------
+# stages
+
+
+def embed(tokens, embed_w):
+    """tokens: [B] i32 -> [B, d_model]."""
+    return jnp.take(embed_w, tokens, axis=0)
+
+
+def layer_step(
+    hidden, pos, k_sel, v_sel, sel_mask,
+    attn_norm_w, wq, wk, wv, wo, mlp_norm_w, w_gate, w_up, w_down,
+    *, cfg: ModelConfig, use_pallas: bool = False,
+):
+    """One decoder layer, decode step, TSA attention over the selected set.
+
+    hidden: [B, dm]; pos: [B] i32; k_sel/v_sel: [B, H, N, d] gathered
+    (RoPE'd) KV; sel_mask: [B, H, N].
+
+    The current token's own (k, v) is appended in-graph (slot N), so the
+    coordinator's selected set never needs to include position t itself.
+
+    Returns (hidden', k_new [B,Hkv,d] RoPE'd, v_new [B,Hkv,d],
+             probs [B,H,N+1] — post-softmax weights over the selected set,
+             used by the coordinator for H2O-style accumulation and
+             selected-mass diagnostics).
+    """
+    x = rmsnorm(hidden, attn_norm_w, cfg.rms_eps)
+    q, k_new, v_new = _project_qkv(x, wq, wk, wv, cfg)
+    cos, sin = rope_angles(pos, cfg.head_dim, cfg.rope_base)  # [B, d/2]
+    q = apply_rope(q, cos[:, None, :], sin[:, None, :])
+    k_new = apply_rope(k_new, cos[:, None, :], sin[:, None, :])
+
+    k_self = _repeat_kv(k_new, cfg)[:, :, None, :]  # [B,H,1,d]
+    v_self = _repeat_kv(v_new, cfg)[:, :, None, :]
+    k_all = jnp.concatenate([k_sel, k_self], axis=2)  # [B,H,N+1,d]
+    v_all = jnp.concatenate([v_sel, v_self], axis=2)
+    ones = jnp.ones(sel_mask.shape[:2] + (1,), dtype=sel_mask.dtype)
+    m_all = jnp.concatenate([sel_mask, ones], axis=2)
+
+    probs = ref.tsa_attention_weights_ref(q, k_all, m_all)  # [B,H,N+1]
+    if use_pallas:
+        attn = tsa_attention(q, k_all, v_all, m_all, interpret=True)
+    else:
+        attn = jnp.einsum("bhn,bhnd->bhd", probs, v_all.astype(jnp.float32))
+        attn = attn.astype(q.dtype)
+
+    b = hidden.shape[0]
+    hidden = hidden + attn.reshape(b, -1) @ wo
+    x = rmsnorm(hidden, mlp_norm_w, cfg.rms_eps)
+    hidden = hidden + swiglu(x, w_gate, w_up, w_down)
+    return hidden, k_new, v_new, probs
+
+
+def layer_step_dense(
+    hidden, pos, k_cache, v_cache, length,
+    attn_norm_w, wq, wk, wv, wo, mlp_norm_w, w_gate, w_up, w_down,
+    *, cfg: ModelConfig, l_max: int,
+):
+    """Dense decode step over the full KV bucket — the retrieval/full-scoring
+    path (and the dense serving baseline).
+
+    k_cache/v_cache: [B, H, L_max, d] with valid prefix ``length`` [B].
+    The current token occupies slot ``pos`` logically but is handled
+    in-graph like layer_step (appended), so caches hold only past tokens.
+
+    Returns (hidden', k_new, v_new, probs [B, H, L_max+1]) where probs is
+    the post-softmax attention row (slot L_max = current token) used by the
+    coordinator for top-k retrieval, H2O statistics, and δ/τ accounting.
+    """
+    x = rmsnorm(hidden, attn_norm_w, cfg.rms_eps)
+    q, k_new, v_new = _project_qkv(x, wq, wk, wv, cfg)
+    cos, sin = rope_angles(pos, cfg.head_dim, cfg.rope_base)
+    q = apply_rope(q, cos[:, None, :], sin[:, None, :])
+    k_new = apply_rope(k_new, cos[:, None, :], sin[:, None, :])
+
+    k_self = _repeat_kv(k_new, cfg)[:, :, None, :]
+    v_self = _repeat_kv(v_new, cfg)[:, :, None, :]
+    k_all = jnp.concatenate([_repeat_kv(k_cache, cfg), k_self], axis=2)
+    v_all = jnp.concatenate([_repeat_kv(v_cache, cfg), v_self], axis=2)
+    idx = jnp.arange(l_max)[None, None, :]
+    mask = (idx < length[:, None, None]).astype(jnp.float32)
+    mask = jnp.broadcast_to(mask, (hidden.shape[0], cfg.n_heads, l_max))
+    ones = jnp.ones(mask.shape[:2] + (1,), dtype=mask.dtype)
+    m_all = jnp.concatenate([mask, ones], axis=2)
+
+    probs = ref.tsa_attention_weights_ref(q, k_all, m_all)  # [B,H,L+1]
+    attn = jnp.einsum("bhn,bhnd->bhd", probs, v_all)
+
+    b = hidden.shape[0]
+    hidden = hidden + attn.reshape(b, -1) @ wo
+    x = rmsnorm(hidden, mlp_norm_w, cfg.rms_eps)
+    hidden = hidden + swiglu(x, w_gate, w_up, w_down)
+    return hidden, k_new, v_new, probs
+
+
+def lm_head(hidden, final_norm_w, head_w, *, cfg: ModelConfig):
+    return rmsnorm(hidden, final_norm_w, cfg.rms_eps) @ head_w
+
+
+# ---------------------------------------------------------------------------
+# prefill with PSAW + ETF masks in-graph
+
+
+def psaw_start(t_q, layer, n_layers, ell_s, phi, alpha):
+    """P_ell(t): earliest visible non-sink position for query position t_q
+    (Eq. 15).  Returns 0 for layers below ell_s."""
+    frac = (layer - ell_s) / jnp.maximum(n_layers - ell_s, 1.0)
+    keep = phi ** (alpha * frac)
+    p = jnp.floor((1.0 - keep) * t_q.astype(jnp.float32))
+    return jnp.where(layer < ell_s, 0.0, p)
+
+
+def etf_boundary(t, layer, n_layers, ell_s, psi, gamma):
+    """E_ell(t): last frozen non-sink index (Eq. 16)."""
+    frac = (layer - ell_s) / jnp.maximum(n_layers - ell_s, 1.0)
+    keep = psi ** (gamma * frac)
+    e = jnp.floor((1.0 - keep) * t.astype(jnp.float32))
+    return jnp.where(layer < ell_s, 0.0, e)
+
+
+def _prefill_attn_mask(l_max, length, layer, n_layers, c_sink,
+                       ell_s, phi, alpha, psaw_on):
+    """[L, L] additive-free boolean mask: key j visible to query i iff
+    causal AND within-length AND (sink OR j >= P_layer(i)) when PSAW is on."""
+    qi = jnp.arange(l_max)[:, None].astype(jnp.float32)  # query pos
+    kj = jnp.arange(l_max)[None, :].astype(jnp.float32)  # key pos
+    causal = kj <= qi
+    inlen = kj < length.astype(jnp.float32)
+    p_start = psaw_start(qi, layer, n_layers, ell_s, phi, alpha)  # [L,1]
+    visible = jnp.logical_or(kj < c_sink, kj >= p_start)
+    visible = jnp.where(psaw_on > 0, visible, jnp.ones_like(visible))
+    return jnp.logical_and(jnp.logical_and(causal, inlen), visible)
+
+
+def prefill(
+    tokens, length, c_sink, ell_s, phi, alpha, psi, gamma, psaw_on, etf_on,
+    *weights, cfg: ModelConfig, l_max: int,
+):
+    """Whole-prompt forward for one sequence (B=1 folded away).
+
+    tokens: [L_max] i32 (padded); length: scalar i32; schedule params are
+    runtime scalars so one artifact serves every (φ,α,ψ,γ,ℓs) setting.
+
+    Returns (k_cache [nl,H,L,d], v_cache [nl,H,L,d], last_hidden [dm],
+             logits [V], last_probs [nl,H,L]).
+
+    ETF note (paper Sec. IV-C + cross-layer redundancy [34]): frozen rows
+    (C_sink <= i < E_ell(length)) reuse the *previous layer's* state — their
+    hidden stays and their K/V at this layer are taken from layer ell-1, so
+    their per-layer projection/update work is eliminated.  XLA still
+    *computes* the masked rows (select, not skip) — quality effects are
+    exact; the FLOP savings are reported analytically from the freeze
+    fraction (DESIGN.md §4).
+    """
+    n_layers = float(cfg.n_layers)
+    embed_w = weights[0]
+    per_layer = 9
+    h = embed(tokens, embed_w)  # [L, dm]
+    pos = jnp.arange(l_max, dtype=jnp.int32)
+    cos, sin = rope_angles(pos, cfg.head_dim, cfg.rope_base)  # [L, d/2]
+
+    k_layers, v_layers, prob_layers = [], [], []
+    scale = 1.0 / jnp.sqrt(jnp.asarray(cfg.head_dim, dtype=jnp.float32))
+    for i in range(cfg.n_layers):
+        lw = weights[1 + i * per_layer: 1 + (i + 1) * per_layer]
+        (attn_norm_w, wq, wk, wv, wo, mlp_norm_w, w_gate, w_up, w_down) = lw
+        layer_f = jnp.asarray(float(i), dtype=jnp.float32)
+
+        x = rmsnorm(h, attn_norm_w, cfg.rms_eps)
+        q = (x @ wq).reshape(l_max, cfg.n_heads, cfg.head_dim)
+        k = (x @ wk).reshape(l_max, cfg.n_kv_heads, cfg.head_dim)
+        v = (x @ wv).reshape(l_max, cfg.n_kv_heads, cfg.head_dim)
+        q = apply_rope(q, cos[:, None, :], sin[:, None, :])
+        k = apply_rope(k, cos[:, None, :], sin[:, None, :])
+        kh = _repeat_kv(k.transpose(1, 0, 2)[None], cfg)[0]  # [H, L, d]
+        vh = _repeat_kv(v.transpose(1, 0, 2)[None], cfg)[0]
+
+        # ETF: frozen rows reuse previous-layer KV (cross-layer sharing).
+        e_bound = etf_boundary(length, layer_f, n_layers, ell_s, psi, gamma)
+        row = jnp.arange(l_max, dtype=jnp.float32)
+        frozen = jnp.logical_and(row >= c_sink, row < e_bound)
+        frozen = jnp.logical_and(frozen, etf_on > 0)
+        if i > 0:
+            fz_kv = frozen[None, :, None]
+            kh = jnp.where(fz_kv, k_layers[i - 1], kh)
+            vh = jnp.where(fz_kv, v_layers[i - 1], vh)
+
+        mask = _prefill_attn_mask(
+            l_max, length, layer_f, n_layers, c_sink, ell_s, phi, alpha,
+            psaw_on,
+        )  # [L, L]
+        scores = jnp.einsum(
+            "lhd,hmd->hlm", q, kh
+        ) * scale  # [H, Lq, Lk]
+        scores = jnp.where(mask[None], scores, ref.NEG_INF)
+        m = jnp.maximum(jnp.max(scores, axis=-1, keepdims=True), -1e29)
+        p = jnp.exp(scores - m) * mask[None]
+        denom = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+        probs = p / denom  # [H, Lq, Lk]
+        attn = jnp.einsum("hlm,hmd->lhd", probs, vh)  # [L, H, d]
+
+        h_new = h + attn.reshape(l_max, -1) @ wo
+        x2 = rmsnorm(h_new, mlp_norm_w, cfg.rms_eps)
+        h_new = h_new + swiglu(x2, w_gate, w_up, w_down)
+
+        # ETF: frozen rows keep the previous layer's hidden state.
+        h = jnp.where(frozen[:, None], h, h_new)
+
+        k_layers.append(kh)
+        v_layers.append(vh)
+        # Attention row of the last valid token (retrieval seed).
+        last = jnp.clip(length - 1, 0, l_max - 1)
+        prob_layers.append(probs[:, last, :])  # [H, Lk]
+
+    final_norm_w, head_w = weights[-2], weights[-1]
+    last = jnp.clip(length - 1, 0, l_max - 1)
+    last_hidden = h[last]
+    logits = rmsnorm(last_hidden, final_norm_w, cfg.rms_eps) @ head_w
+    return (
+        jnp.stack(k_layers),          # [nl, H, L, d]
+        jnp.stack(v_layers),
+        last_hidden,                  # [dm]
+        logits,                       # [V]
+        jnp.stack(prob_layers),       # [nl, H, L]
+    )
+
+
+# ---------------------------------------------------------------------------
+# standalone attention operators (Table IV / kernel parity artifacts)
+
+
+def attn_tsa_xla(q, k_sel, v_sel, mask):
+    return (ref.tsa_attention_ref(q, k_sel, v_sel, mask),)
+
+
+def attn_tsa_pallas(q, k_sel, v_sel, mask):
+    return (tsa_attention(q, k_sel, v_sel, mask, interpret=True),)
+
+
+def attn_dense(q, k, v, length, *, l_max: int):
+    return (ref.dense_attention_ref(q, k, v, length, l_max),)

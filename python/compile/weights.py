@@ -1,0 +1,90 @@
+"""Deterministic weight initialization + flat-blob export.
+
+The rust runtime never sees python: weights are exported once by ``aot.py``
+as a flat little-endian f32 blob plus a JSON manifest entry per tensor
+(name, shape, element offset).  Initialization is seeded so every build of
+the artifacts is bit-identical (required for reproducible EXPERIMENTS.md
+numbers and for the rust integration tests' golden values).
+"""
+
+import numpy as np
+
+from .config import ModelConfig
+
+
+def init_weights(cfg: ModelConfig) -> "dict[str, np.ndarray]":
+    """LLaMA-style init with engineered phenomenology (config.aniso /
+    config.qk_std; see ModelConfig docstring + DESIGN.md §4): anisotropic
+    embeddings give the >0.8 adjacent-query cosine CIS exploits, and the
+    larger W_Q/W_K scale concentrates attention mass like a trained LLM."""
+    rng = np.random.RandomState(cfg.seed)
+    std = 0.02
+    h = cfg.n_heads * cfg.head_dim
+    hkv = cfg.n_kv_heads * cfg.head_dim
+    out_scale = std / np.sqrt(2.0 * cfg.n_layers)
+
+    def normal(shape, scale=std):
+        return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+    mu = normal((1, cfg.d_model), std * cfg.aniso)
+    w = {
+        "embed.weight": (mu + normal((cfg.vocab_size, cfg.d_model)))
+        .astype(np.float32)
+    }
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}."
+        w[p + "attn_norm.weight"] = np.ones(cfg.d_model, dtype=np.float32)
+        w[p + "wq"] = normal((cfg.d_model, h), cfg.qk_std)
+        w[p + "wk"] = normal((cfg.d_model, hkv), cfg.qk_std)
+        w[p + "wv"] = normal((cfg.d_model, hkv))
+        w[p + "wo"] = normal((h, cfg.d_model), out_scale)
+        w[p + "mlp_norm.weight"] = np.ones(cfg.d_model, dtype=np.float32)
+        w[p + "w_gate"] = normal((cfg.d_model, cfg.d_ff))
+        w[p + "w_up"] = normal((cfg.d_model, cfg.d_ff))
+        w[p + "w_down"] = normal((cfg.d_ff, cfg.d_model), out_scale)
+    w["final_norm.weight"] = np.ones(cfg.d_model, dtype=np.float32)
+    w["lm_head"] = normal((cfg.d_model, cfg.vocab_size))
+    return w
+
+
+def layer_weight_names(i: int) -> "list[str]":
+    """Per-layer weight order — MUST match model.layer_step's signature and
+    the rust runtime's input assembly (rust/src/runtime/weights.rs)."""
+    p = f"layers.{i}."
+    return [
+        p + "attn_norm.weight",
+        p + "wq",
+        p + "wk",
+        p + "wv",
+        p + "wo",
+        p + "mlp_norm.weight",
+        p + "w_gate",
+        p + "w_up",
+        p + "w_down",
+    ]
+
+
+def all_weight_names(cfg: ModelConfig) -> "list[str]":
+    """Full-model weight order used by the prefill artifact."""
+    names = ["embed.weight"]
+    for i in range(cfg.n_layers):
+        names.extend(layer_weight_names(i))
+    names.extend(["final_norm.weight", "lm_head"])
+    return names
+
+
+def export_blob(weights: "dict[str, np.ndarray]", names: "list[str]",
+                path: str) -> "list[dict]":
+    """Write tensors (in ``names`` order) into one f32 blob; return manifest
+    entries with element offsets."""
+    entries = []
+    offset = 0
+    with open(path, "wb") as f:
+        for name in names:
+            arr = np.ascontiguousarray(weights[name], dtype=np.float32)
+            f.write(arr.tobytes(order="C"))
+            entries.append(
+                {"name": name, "shape": list(arr.shape), "offset": offset}
+            )
+            offset += arr.size
+    return entries

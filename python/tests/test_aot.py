@@ -1,0 +1,109 @@
+"""AOT pipeline tests: HLO text artifacts + manifest integrity.
+
+These validate the python→rust interchange contract without requiring the
+rust side: HLO text must contain an ENTRY computation with the declared
+parameter count, and manifest offsets must tile the weight blob exactly.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    path = os.path.join(ART, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_manifest_lists_models(manifest):
+    assert "small" in manifest["models"]
+    assert "bench" in manifest["models"]
+
+
+def test_all_artifact_files_exist(manifest):
+    for model in manifest["models"].values():
+        for a in model["artifacts"]:
+            assert os.path.exists(os.path.join(ART, a["file"])), a["name"]
+
+
+def test_hlo_text_has_entry_and_params(manifest):
+    """Every artifact's HLO text declares an ENTRY with one parameter per
+    manifest input (the contract the rust loader assumes)."""
+    for model in manifest["models"].values():
+        for a in model["artifacts"][:10]:  # bounded for test speed
+            text = open(os.path.join(ART, a["file"])).read()
+            assert "ENTRY" in text, a["name"]
+            entry = text.split("ENTRY", 1)[1]
+            n_params = entry.count("parameter(")
+            assert n_params == len(a["inputs"]), (
+                a["name"], n_params, len(a["inputs"]))
+
+
+def test_weight_blob_offsets_tile_exactly(manifest):
+    for model in manifest["models"].values():
+        blob = os.path.join(ART, model["weights_blob"])
+        n_floats = os.path.getsize(blob) // 4
+        expected = 0
+        for e in model["weights"]:
+            assert e["offset"] == expected, e["name"]
+            expected += int(np.prod(e["shape"]))
+        assert expected == n_floats
+
+
+def test_weight_blob_matches_reinit(manifest):
+    """Blob contents must equal a fresh seeded init (reproducibility)."""
+    from compile import weights as W
+    from compile.config import CONFIGS
+
+    model = manifest["models"]["small"]
+    cfg = CONFIGS["small"]
+    w = W.init_weights(cfg)
+    blob = np.fromfile(os.path.join(ART, model["weights_blob"]),
+                       dtype=np.float32)
+    e = model["weights"][0]  # embed.weight
+    size = int(np.prod(e["shape"]))
+    got = blob[e["offset"]: e["offset"] + size].reshape(e["shape"])
+    np.testing.assert_array_equal(got, w["embed.weight"])
+
+
+def test_manifest_io_shapes_match_config(manifest):
+    small = manifest["models"]["small"]
+    cfg = small["config"]
+    for a in small["artifacts"]:
+        if a["stage"] == "layer_step":
+            ks = next(i for i in a["inputs"] if i["name"] == "k_sel")
+            assert ks["shape"][1] == cfg["n_heads"]
+            assert ks["shape"][3] == cfg["head_dim"]
+            assert ks["shape"][2] == a["params"]["n_sel"]
+        if a["stage"] == "prefill":
+            kc = next(o for o in a["outputs"] if o["name"] == "k_cache")
+            assert kc["shape"][0] == cfg["n_layers"]
+            assert kc["shape"][2] == a["params"]["l_max"]
+
+
+def test_quick_build_in_tmp(tmp_path):
+    """--quick must produce a loadable manifest from scratch."""
+    env = dict(os.environ)
+    r = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(tmp_path),
+         "--quick"],
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert r.returncode == 0, r.stderr[-2000:]
+    m = json.load(open(tmp_path / "manifest.json"))
+    assert m["models"]["small"]["artifacts"]
+    # HLO text (not proto) interchange
+    any_file = m["models"]["small"]["artifacts"][0]["file"]
+    head = open(tmp_path / any_file).read(200)
+    assert "HloModule" in head

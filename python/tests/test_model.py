@@ -1,0 +1,293 @@
+"""L2 model-stage tests: shapes, RoPE, PSAW/ETF schedules, prefill/decode
+consistency — the invariants the rust coordinator relies on."""
+
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import weights as W
+from compile.config import ModelConfig, CONFIGS
+
+
+TINY = ModelConfig(
+    name="tiny-test", n_layers=2, d_model=32, n_heads=4, n_kv_heads=4,
+    head_dim=8, d_ff=64, vocab_size=64,
+)
+
+GQA = ModelConfig(
+    name="gqa-test", n_layers=2, d_model=32, n_heads=4, n_kv_heads=2,
+    head_dim=8, d_ff=64, vocab_size=64,
+)
+
+
+@pytest.fixture(scope="module")
+def tiny_weights():
+    return W.init_weights(TINY)
+
+
+def test_weight_init_deterministic():
+    w1 = W.init_weights(TINY)
+    w2 = W.init_weights(TINY)
+    for n in w1:
+        np.testing.assert_array_equal(w1[n], w2[n])
+
+
+def test_weight_manifest_order_covers_all(tiny_weights):
+    names = W.all_weight_names(TINY)
+    assert set(names) == set(tiny_weights.keys())
+    assert names[0] == "embed.weight"
+    assert names[-1] == "lm_head"
+
+
+def test_params_estimate_close():
+    total = sum(v.size for v in W.init_weights(TINY).values())
+    # norm weights are excluded from the estimate; must be within 1%.
+    assert abs(total - TINY.params_estimate) / total < 0.01
+
+
+def test_rope_relative_property():
+    """RoPE: <rope(q,m), rope(k,n)> depends only on (m-n)."""
+    rng = np.random.default_rng(0)
+    d = 16
+    q = rng.standard_normal((1, d)).astype(np.float32)
+    k = rng.standard_normal((1, d)).astype(np.float32)
+
+    def dot_at(m, n):
+        cm, sm = M.rope_angles(np.array([m], np.int32), d, 10000.0)
+        cn, sn = M.rope_angles(np.array([n], np.int32), d, 10000.0)
+        qr = np.asarray(M.apply_rope(q, cm, sm))
+        kr = np.asarray(M.apply_rope(k, cn, sn))
+        return float((qr * kr).sum())
+
+    assert dot_at(5, 3) == pytest.approx(dot_at(12, 10), rel=1e-4)
+    assert dot_at(7, 7) == pytest.approx(dot_at(0, 0), rel=1e-4)
+
+
+def test_rope_zero_position_identity():
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal((2, 8)).astype(np.float32)
+    c, s = M.rope_angles(np.zeros(2, np.int32), 8, 10000.0)
+    np.testing.assert_allclose(np.asarray(M.apply_rope(x, c, s)), x, atol=1e-6)
+
+
+def test_layer_step_shapes(tiny_weights):
+    rng = np.random.default_rng(2)
+    B, H, d, N = 3, TINY.n_heads, TINY.head_dim, 8
+    lw = [tiny_weights[n] for n in W.layer_weight_names(0)]
+    h = rng.standard_normal((B, TINY.d_model)).astype(np.float32)
+    ks = rng.standard_normal((B, H, N, d)).astype(np.float32)
+    vs = rng.standard_normal((B, H, N, d)).astype(np.float32)
+    mask = np.ones((B, H, N), np.float32)
+    pos = np.array([3, 9, 1], np.int32)
+    h2, kn, vn, probs = M.layer_step(h, pos, ks, vs, mask, *lw, cfg=TINY)
+    assert probs.shape == (B, H, N + 1)
+    assert h2.shape == (B, TINY.d_model)
+    assert kn.shape == (B, TINY.n_kv_heads, d)
+    assert vn.shape == (B, TINY.n_kv_heads, d)
+
+
+def test_layer_step_pallas_variant_matches_xla(tiny_weights):
+    rng = np.random.default_rng(3)
+    B, H, d, N = 2, TINY.n_heads, TINY.head_dim, 8
+    lw = [tiny_weights[n] for n in W.layer_weight_names(1)]
+    h = rng.standard_normal((B, TINY.d_model)).astype(np.float32)
+    ks = rng.standard_normal((B, H, N, d)).astype(np.float32)
+    vs = rng.standard_normal((B, H, N, d)).astype(np.float32)
+    mask = (rng.random((B, H, N)) > 0.3).astype(np.float32)
+    pos = np.array([4, 6], np.int32)
+    a = M.layer_step(h, pos, ks, vs, mask, *lw, cfg=TINY, use_pallas=False)
+    b = M.layer_step(h, pos, ks, vs, mask, *lw, cfg=TINY, use_pallas=True)
+    for x, y in zip(a, b):
+        np.testing.assert_allclose(
+            np.asarray(x), np.asarray(y), rtol=1e-5, atol=1e-5)
+
+
+def test_layer_step_ignores_masked_slots(tiny_weights):
+    """Padding slots with garbage KV must not change the step output."""
+    rng = np.random.default_rng(4)
+    B, H, d, N = 1, TINY.n_heads, TINY.head_dim, 8
+    lw = [tiny_weights[n] for n in W.layer_weight_names(0)]
+    h = rng.standard_normal((B, TINY.d_model)).astype(np.float32)
+    ks = rng.standard_normal((B, H, N, d)).astype(np.float32)
+    vs = rng.standard_normal((B, H, N, d)).astype(np.float32)
+    mask = np.ones((B, H, N), np.float32)
+    mask[:, :, 5:] = 0.0
+    pos = np.array([9], np.int32)
+    out1 = M.layer_step(h, pos, ks, vs, mask, *lw, cfg=TINY)
+    ks2, vs2 = ks.copy(), vs.copy()
+    ks2[:, :, 5:] = 777.0
+    vs2[:, :, 5:] = -777.0
+    out2 = M.layer_step(h, pos, ks2, vs2, mask, *lw, cfg=TINY)
+    for x, y in zip(out1, out2):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-6)
+
+
+def test_dense_step_probs_sum_to_one(tiny_weights):
+    rng = np.random.default_rng(5)
+    B, H, d, L = 2, TINY.n_heads, TINY.head_dim, 16
+    lw = [tiny_weights[n] for n in W.layer_weight_names(0)]
+    h = rng.standard_normal((B, TINY.d_model)).astype(np.float32)
+    kc = rng.standard_normal((B, H, L, d)).astype(np.float32)
+    vc = rng.standard_normal((B, H, L, d)).astype(np.float32)
+    length = np.array([7, 16], np.int32)
+    pos = length.copy()
+    _, _, _, probs = M.layer_step_dense(
+        h, pos, kc, vc, length, *lw, cfg=TINY, l_max=L)
+    probs = np.asarray(probs)
+    np.testing.assert_allclose(probs.sum(-1), 1.0, rtol=1e-5)
+    # positions beyond `length` (except the appended self slot) are zero
+    assert (probs[0, :, 7:L] == 0.0).all()
+
+
+def test_sparse_equals_dense_when_all_selected(tiny_weights):
+    """TSA over the full set == dense attention (δ = 0 ⇒ identical)."""
+    rng = np.random.default_rng(6)
+    B, H, d, L = 1, TINY.n_heads, TINY.head_dim, 12
+    lw = [tiny_weights[n] for n in W.layer_weight_names(0)]
+    h = rng.standard_normal((B, TINY.d_model)).astype(np.float32)
+    kc = rng.standard_normal((B, H, L, d)).astype(np.float32)
+    vc = rng.standard_normal((B, H, L, d)).astype(np.float32)
+    length = np.array([L], np.int32)
+    pos = np.array([L], np.int32)
+    hd, knd, vnd, _ = M.layer_step_dense(
+        h, pos, kc, vc, length, *lw, cfg=TINY, l_max=L)
+    mask = np.ones((B, H, L), np.float32)
+    hs, kns, vns, _ = M.layer_step(h, pos, kc, vc, mask, *lw, cfg=TINY)
+    np.testing.assert_allclose(np.asarray(hd), np.asarray(hs), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(knd), np.asarray(kns), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(vnd), np.asarray(vns), atol=1e-6)
+
+
+def test_gqa_shapes():
+    w = W.init_weights(GQA)
+    rng = np.random.default_rng(7)
+    B, H, d, N = 2, GQA.n_heads, GQA.head_dim, 8
+    lw = [w[n] for n in W.layer_weight_names(0)]
+    h = rng.standard_normal((B, GQA.d_model)).astype(np.float32)
+    ks = rng.standard_normal((B, H, N, d)).astype(np.float32)
+    vs = rng.standard_normal((B, H, N, d)).astype(np.float32)
+    mask = np.ones((B, H, N), np.float32)
+    h2, kn, vn, _ = M.layer_step(h, np.array([1, 2], np.int32), ks, vs, mask,
+                                 *lw, cfg=GQA)
+    assert kn.shape == (B, GQA.n_kv_heads, d)
+
+
+# --- PSAW / ETF schedules ---------------------------------------------------
+
+def test_psaw_start_zero_below_ell_s():
+    t = np.array([100.0], np.float32)
+    assert float(M.psaw_start(t, 1.0, 8.0, 6.0, 0.7, 1.0)[0]) == 0.0
+
+
+def test_psaw_start_monotone_in_depth():
+    """Window start moves forward (shrinking window) with depth (Eq. 15)."""
+    t = np.array([1000.0], np.float32)
+    starts = [
+        float(M.psaw_start(t, float(l), 8.0, 4.0, 0.7, 1.0)[0])
+        for l in range(4, 9)
+    ]
+    assert all(b >= a for a, b in zip(starts, starts[1:]))
+    assert starts[0] == 0.0  # at ell == ell_s the exponent is 0 -> keep all
+
+
+def test_psaw_top_layer_truncation_strength():
+    """At the top layer the kept fraction is phi^alpha (Eq. 15)."""
+    t = np.array([1000.0], np.float32)
+    phi, alpha = 0.7, 1.0
+    start = float(M.psaw_start(t, 8.0, 8.0, 4.0, phi, alpha)[0])
+    assert start == pytest.approx(np.floor((1 - phi**alpha) * 1000.0))
+
+
+def test_etf_boundary_monotone_and_bounded():
+    t = np.array([500.0], np.float32)
+    es = [float(M.etf_boundary(t, float(l), 8.0, 4.0, 0.5, 1.0)[0])
+          for l in range(4, 9)]
+    assert all(b >= a for a, b in zip(es, es[1:]))
+    assert es[-1] <= 500.0 * (1 - 0.5) + 1
+
+
+def test_prefill_matches_incremental_decode(tiny_weights):
+    """With PSAW/ETF off, prefill == step-by-step dense decode (the rust
+    runtime depends on this equivalence when mixing the two paths)."""
+    cfg, w = TINY, tiny_weights
+    allw = [w[n] for n in W.all_weight_names(cfg)]
+    L = 12
+    toks = (np.arange(L) * 5 % cfg.vocab_size).astype(np.int32)
+    K, V, lh, logits, _ = M.prefill(
+        toks, np.int32(L), 0.0, 99.0, 0.7, 1.0, 0.5, 1.0, 0.0, 0.0,
+        *allw, cfg=cfg, l_max=L)
+    K, V, logits = np.asarray(K), np.asarray(V), np.asarray(logits)
+
+    nl = cfg.n_layers
+    kcs = [np.zeros((1, cfg.n_kv_heads, L, cfg.head_dim), np.float32)
+           for _ in range(nl)]
+    vcs = [np.zeros_like(kcs[0]) for _ in range(nl)]
+    hid = None
+    for t in range(L):
+        hid = np.asarray(M.embed(toks[t:t+1], w["embed.weight"]))
+        for i in range(nl):
+            lw = [w[n] for n in W.layer_weight_names(i)]
+            h2, kn, vn, _ = M.layer_step_dense(
+                hid, np.array([t], np.int32), kcs[i], vcs[i],
+                np.array([t], np.int32), *lw, cfg=cfg, l_max=L)
+            kcs[i][0, :, t, :] = np.asarray(kn[0])
+            vcs[i][0, :, t, :] = np.asarray(vn[0])
+            hid = np.asarray(h2)
+    lg = np.asarray(M.lm_head(hid, w["final_norm.weight"], w["lm_head"],
+                              cfg=cfg))[0]
+    for i in range(nl):
+        np.testing.assert_allclose(kcs[i][0], K[i], atol=1e-5)
+        np.testing.assert_allclose(vcs[i][0], V[i], atol=1e-5)
+    np.testing.assert_allclose(lg, logits, atol=1e-4, rtol=1e-4)
+
+
+def test_prefill_psaw_changes_only_deep_layers(tiny_weights):
+    """PSAW (ell_s=0 so layer 1 prunes; Eq. 15 gives zero pruning at
+    ell == ell_s) must leave layer-0 KV identical and perturb deeper
+    layers' outputs."""
+    cfg, w = TINY, tiny_weights
+    allw = [w[n] for n in W.all_weight_names(cfg)]
+    L = 16
+    toks = (np.arange(L) * 3 % cfg.vocab_size).astype(np.int32)
+    base = M.prefill(toks, np.int32(L), 2.0, 0.0, 0.3, 2.0, 0.5, 1.0,
+                     0.0, 0.0, *allw, cfg=cfg, l_max=L)
+    psaw = M.prefill(toks, np.int32(L), 2.0, 0.0, 0.3, 2.0, 0.5, 1.0,
+                     1.0, 0.0, *allw, cfg=cfg, l_max=L)
+    # layer 0 keys unaffected (Eq. 15: keep-fraction is 1 at ell_s)
+    np.testing.assert_allclose(
+        np.asarray(base[0][0]), np.asarray(psaw[0][0]), atol=1e-6)
+    # but deeper-layer logits change
+    assert not np.allclose(np.asarray(base[3]), np.asarray(psaw[3]))
+
+
+def test_prefill_etf_shares_kv_across_layers(tiny_weights):
+    """ETF: frozen rows at layer 1 must carry layer-0 K/V verbatim
+    (cross-layer sharing), and the last (unfrozen) rows must not."""
+    cfg, w = TINY, tiny_weights
+    allw = [w[n] for n in W.all_weight_names(cfg)]
+    L = 16
+    toks = (np.arange(L) * 7 % cfg.vocab_size).astype(np.int32)
+    c_sink = 2.0
+    psi, gamma = 0.1, 1.0
+    etf = M.prefill(toks, np.int32(L), c_sink, 0.0, 0.7, 1.0, psi, gamma,
+                    0.0, 1.0, *allw, cfg=cfg, l_max=L)
+    K = np.asarray(etf[0])  # [nl, H, L, d]
+    V = np.asarray(etf[1])
+    # E_1(L) with ell_s=0, nl=2: keep = psi^(gamma*0.5)
+    e_bound = int(np.floor((1 - psi ** (gamma * 0.5)) * L))
+    assert e_bound > int(c_sink) + 1, "test needs a non-trivial frozen range"
+    np.testing.assert_array_equal(
+        K[1][:, int(c_sink):e_bound], K[0][:, int(c_sink):e_bound])
+    np.testing.assert_array_equal(
+        V[1][:, int(c_sink):e_bound], V[0][:, int(c_sink):e_bound])
+    # sink rows and recent rows are NOT shared
+    assert not np.allclose(K[1][:, e_bound:], K[0][:, e_bound:])
+    base = M.prefill(toks, np.int32(L), c_sink, 0.0, 0.7, 1.0, psi, gamma,
+                     0.0, 0.0, *allw, cfg=cfg, l_max=L)
+    assert not np.allclose(np.asarray(base[3]), np.asarray(etf[3]))
+
+
+def test_configs_registered():
+    assert "small" in CONFIGS and "bench" in CONFIGS
+    assert CONFIGS["small"].head_dim * CONFIGS["small"].n_heads \
+        == CONFIGS["small"].d_model

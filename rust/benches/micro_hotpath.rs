@@ -1,0 +1,107 @@
+//! Micro-benchmarks of the L3 hot path pieces (perf-pass instrumentation,
+//! EXPERIMENTS.md §Perf): gather staging, selector planning, host query
+//! projection, top-k selection, JSON parse, dense-export staging.
+
+use prhs::config::{SelectorConfig, SelectorKind};
+use prhs::kvcache::{PagePool, SeqKvCache};
+use prhs::model::proj;
+use prhs::selector::{self, PlanKind, SelectorCtx};
+use prhs::util::bench::{Bencher, Report};
+use prhs::util::fx;
+use prhs::util::json::Json;
+use prhs::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let b = if quick { Bencher::quick() } else { Bencher::default() };
+    let mut report = Report::new("L3 hot-path micro-benchmarks");
+    let mut rng = Rng::new(0xF00D);
+
+    // --- KV gather staging: 8 heads x 160 indices x d32 -----------------
+    let (h, d, l) = (8usize, 32usize, 4096usize);
+    let mut pool = PagePool::new(h, d, 128);
+    let mut cache = SeqKvCache::new(1);
+    let row: Vec<f32> = (0..h * d).map(|_| rng.normal()).collect();
+    for _ in 0..l {
+        cache.append(&mut pool, 0, &row, &row).unwrap();
+        cache.commit_token();
+    }
+    let idx: Vec<usize> = (0..160).map(|i| (i * 25) % l).collect();
+    let mut out_k = vec![0f32; 160 * d];
+    let mut out_v = vec![0f32; 160 * d];
+    report.push(b.run("gather 8h x 160 x d32", || {
+        for head in 0..h {
+            cache.gather(&pool, 0, head, &idx, &mut out_k, &mut out_v);
+        }
+        std::hint::black_box(&out_k);
+    }));
+
+    // --- dense export (the retrieval-path staging, L = 4096) ------------
+    let mut dk = vec![0f32; h * l * d];
+    let mut dv = vec![0f32; h * l * d];
+    report.push(b.run("export_dense 8h x 4096 x d32", || {
+        cache.export_dense(&pool, 0, l, &mut dk, &mut dv);
+        std::hint::black_box(&dk);
+    }));
+
+    // --- host query projection (dm=256 -> 8 x d32 + rope) ---------------
+    let dm = 256;
+    let hidden: Vec<f32> = (0..dm).map(|_| rng.normal()).collect();
+    let norm = vec![1.0f32; dm];
+    let wq: Vec<f32> = (0..dm * h * d).map(|_| rng.normal() * 0.05).collect();
+    report.push(b.run("project_queries dm256 -> 8 x d32", || {
+        let q = proj::project_queries(&hidden, &norm, &wq, h, d, 1234, 1e4, 1e-5);
+        std::hint::black_box(q);
+    }));
+
+    // --- selector planning (CIS, 8 heads, seeded) ------------------------
+    let cfg = SelectorConfig { kind: SelectorKind::Cis, ..Default::default() };
+    let mut sel = selector::build(&cfg, 1, h, d);
+    let probs: Vec<f32> = {
+        let mut p: Vec<f32> = (0..2049).map(|_| rng.f32()).collect();
+        let s: f32 = p.iter().sum();
+        p.iter_mut().for_each(|x| *x /= s);
+        p
+    };
+    for head in 0..h {
+        sel.observe_probs(0, head, 2048, &probs);
+    }
+    let qs: Vec<Vec<f32>> = (0..h)
+        .map(|_| (0..d).map(|_| rng.normal()).collect())
+        .collect();
+    let t = 2048usize;
+    report.push(b.run("cis plan+sets 8 heads @2k ctx", || {
+        let ctx = SelectorCtx {
+            t,
+            q_heads: &qs,
+            q_heads_raw: &qs,
+            hidden: &hidden,
+            last_keys: None,
+        };
+        let p = sel.plan(0, &ctx);
+        if let PlanKind::Retrieve { heads } = p {
+            for (head, r) in heads.iter().enumerate() {
+                if *r {
+                    sel.observe_probs(0, head, t, &probs);
+                }
+            }
+        }
+        std::hint::black_box(sel.sets(0));
+    }));
+
+    // --- top-k over a 4k row ---------------------------------------------
+    let row4k: Vec<f32> = (0..4096).map(|_| rng.f32()).collect();
+    report.push(b.run("top_k 88 of 4096", || {
+        std::hint::black_box(fx::top_k_indices(&row4k, 88));
+    }));
+
+    // --- manifest JSON parse ---------------------------------------------
+    if let Ok(text) = std::fs::read_to_string("artifacts/manifest.json") {
+        report.push(b.run("parse manifest.json", || {
+            std::hint::black_box(Json::parse(&text).unwrap());
+        }));
+    }
+
+    report.save("results", "micro_hotpath")?;
+    Ok(())
+}

@@ -1,0 +1,70 @@
+//! Table V (bench form) — end-to-end decode throughput through the
+//! batched scheduler for a compact method set.  The full sweep lives in
+//! `prhs harness table5`; this bench keeps `cargo bench` bounded.
+
+use prhs::config::{EngineConfig, SelectorConfig, SelectorKind};
+use prhs::coordinator::{RequestIn, Scheduler};
+use prhs::model::Engine;
+use prhs::runtime::{Runtime, WeightStore};
+use prhs::util::rng::Rng;
+use prhs::workload;
+use std::sync::Arc;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::var("PRHS_ARTIFACTS")
+        .unwrap_or_else(|_| "artifacts".to_string());
+    let quick = std::env::args().any(|a| a == "--quick");
+    let mut base = EngineConfig::default();
+    base.artifacts_dir = dir;
+    let rt = Arc::new(Runtime::new(&base.artifacts_dir)?);
+    let mm = rt.model("small")?.clone();
+    let ws = Arc::new(WeightStore::load(&rt, &mm)?);
+
+    let bs = 8usize;
+    let ctx = if quick { 256 } else { 768 };
+    let gen = if quick { 8 } else { 24 };
+    let methods: Vec<(&str, SelectorKind, usize)> = vec![
+        ("dense", SelectorKind::Dense, 8),
+        ("hshare", SelectorKind::HShare, 8),
+        ("cis-16", SelectorKind::Cis, 16),
+        ("cpe-16", SelectorKind::Cpe, 16),
+    ];
+    println!("== Table V bench (BS {bs}, ctx {ctx}, gen {gen}) ==");
+    let mut md = String::from(
+        "## Table V (bench) — decode throughput\n\n| method | tok/s | step_p50_ms |\n|---|---|---|\n",
+    );
+    for (name, kind, s) in methods {
+        let mut cfg = base.clone();
+        cfg.selector = SelectorConfig {
+            kind: kind.clone(),
+            block_size: s,
+            hshare_stride: s,
+            psaw_enabled: kind == SelectorKind::Cpe,
+            etf_enabled: kind == SelectorKind::Cpe,
+            ..Default::default()
+        };
+        cfg.max_batch = bs;
+        cfg.max_new_tokens = gen;
+        let engine = Engine::with_shared(rt.clone(), ws.clone(), cfg);
+        let mut sched = Scheduler::new(engine);
+        let mut rng = Rng::new(3);
+        let spec = workload::scaled(&workload::GSM8K, ctx);
+        for id in 0..bs as u64 {
+            let req = workload::generate(&spec, mm.vocab_size, &mut rng);
+            sched.submit(RequestIn { id, prompt: req.prompt, max_new_tokens: gen });
+        }
+        let outs = sched.run_to_completion()?;
+        let toks: usize = outs.iter().map(|o| o.tokens.len()).sum();
+        let decode_s = sched.metrics.step_lat.mean_us()
+            * sched.metrics.step_lat.count() as f64
+            / 1e6;
+        let tps = toks as f64 / decode_s.max(1e-9);
+        let p50 = sched.metrics.step_lat.percentile_us(50.0) / 1e3;
+        println!("  {name:<8} {tps:8.1} tok/s   p50 {p50:6.1} ms/step");
+        md.push_str(&format!("| {name} | {tps:.1} | {p50:.1} |\n"));
+    }
+    std::fs::create_dir_all("results")?;
+    std::fs::write("results/table5_bench.md", md)?;
+    println!("→ results/table5_bench.md");
+    Ok(())
+}

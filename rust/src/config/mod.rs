@@ -1,0 +1,327 @@
+//! Typed configuration for the serving stack.
+//!
+//! Three layers of configuration compose:
+//!   1. model/artifact facts from `artifacts/manifest.json` (authoritative,
+//!      produced by the python AOT pipeline);
+//!   2. a serving config (this module) loadable from a JSON file;
+//!   3. CLI overrides (see `main.rs`).
+
+use crate::util::json::Json;
+
+/// Which KV-selection policy the engine runs.  Names follow the paper's
+/// baselines table (Sec. V-A).
+#[derive(Clone, Debug, PartialEq)]
+pub enum SelectorKind {
+    /// Full attention every step (GPT-Fast / FlashAttention-2 baseline).
+    Dense,
+    /// Top-k oracle: full scoring every step, keep the k heaviest (Eq. 5).
+    TopKOracle,
+    /// H2O heavy-hitter eviction (TDO) [25].
+    H2O,
+    /// StreamingLLM: sinks + recency window [26].
+    StreamingLlm,
+    /// Quest page-level min/max query-aware retrieval (QAA) [29].
+    Quest,
+    /// Double Sparsity label-channel approximation (QAA) [44].
+    DoubleSparsity,
+    /// HShare hierarchical KV-index sharing (PoHS SOTA) [33].
+    HShare,
+    /// CIS: clustered index sharing (ours, Sec. IV-A).
+    Cis,
+    /// CPE: CIS + PSAW (+ ETF during prefill) — the full system.
+    Cpe,
+}
+
+impl SelectorKind {
+    pub fn parse(s: &str) -> Option<SelectorKind> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "dense" => SelectorKind::Dense,
+            "oracle" | "topk" | "top-k" => SelectorKind::TopKOracle,
+            "h2o" => SelectorKind::H2O,
+            "streaming" | "streamingllm" => SelectorKind::StreamingLlm,
+            "quest" => SelectorKind::Quest,
+            "ds" | "double-sparsity" => SelectorKind::DoubleSparsity,
+            "hshare" => SelectorKind::HShare,
+            "cis" => SelectorKind::Cis,
+            "cpe" => SelectorKind::Cpe,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SelectorKind::Dense => "dense",
+            SelectorKind::TopKOracle => "oracle",
+            SelectorKind::H2O => "h2o",
+            SelectorKind::StreamingLlm => "streaming",
+            SelectorKind::Quest => "quest",
+            SelectorKind::DoubleSparsity => "ds",
+            SelectorKind::HShare => "hshare",
+            SelectorKind::Cis => "cis",
+            SelectorKind::Cpe => "cpe",
+        }
+    }
+}
+
+/// Budget split + selector hyperparameters (paper Sec. V defaults).
+#[derive(Clone, Debug)]
+pub struct SelectorConfig {
+    pub kind: SelectorKind,
+    /// Sink tokens always retained (C_sink).
+    pub c_sink: usize,
+    /// Local/recency tokens always retained (C_local).
+    pub c_local: usize,
+    /// Middle top-k budget (k); total budget C = C_sink + k + C_local.
+    pub k_middle: usize,
+
+    // --- CIS (Sec. IV-A) ---
+    /// Share-block size s: retrieval happens at block starts.
+    pub block_size: usize,
+    /// Cosine-similarity gate τ for head-level sharing (Eq. 12).
+    pub sim_threshold: f32,
+    /// Dilate the top-m indices (m = k/dilate_top_frac_inv).
+    pub dilate_m_frac: f32,
+    /// Dilation radius r (Eq. 13).
+    pub dilate_radius: usize,
+    /// Similarity space for Table VII ablation: "query" | "key" | "hidden".
+    pub sim_space: SimSpace,
+
+    // --- PSAW (Eq. 15) ---
+    pub psaw_enabled: bool,
+    pub psaw_phi: f32,
+    pub psaw_alpha: f32,
+    /// ℓ_s expressed as a fraction of depth.  The paper uses ⌊3N/4⌋ on
+    /// 32-80-layer models; Eq. 15/16 give *zero* pruning at ℓ = ℓ_s, so on
+    /// the 4-layer testbed model 3N/4 leaves no pruned layer at all — the
+    /// default here is N/2, preserving the "deep half prunes" intent
+    /// (DESIGN.md §Hardware-Adaptation).
+    pub sched_ell_s_frac: f32,
+
+    // --- ETF (Eq. 16, prefill only) ---
+    pub etf_enabled: bool,
+    pub etf_psi: f32,
+    pub etf_gamma: f32,
+
+    // --- baseline knobs ---
+    /// HShare share stride (its analogue of s).
+    pub hshare_stride: usize,
+    /// Quest page size.
+    pub quest_page: usize,
+    /// Double-Sparsity label channels per head.
+    pub ds_channels: usize,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimSpace {
+    Query,
+    Key,
+    Hidden,
+}
+
+impl SimSpace {
+    pub fn parse(s: &str) -> Option<SimSpace> {
+        Some(match s {
+            "query" => SimSpace::Query,
+            "key" => SimSpace::Key,
+            "hidden" => SimSpace::Hidden,
+            _ => return None,
+        })
+    }
+}
+
+impl Default for SelectorConfig {
+    /// Paper defaults (Sec. V-A): τ=0.8, m=⌊k/3⌋, r=1, ℓs=⌊3N/4⌋,
+    /// φ=0.7, α=1, ψ=0.5, γ=1; GSM8K/CoQA budget C=128 with
+    /// C_local=32, k=88 (C_sink=8).
+    fn default() -> Self {
+        SelectorConfig {
+            kind: SelectorKind::Cis,
+            c_sink: 8,
+            c_local: 32,
+            k_middle: 88,
+            block_size: 8,
+            sim_threshold: 0.8,
+            dilate_m_frac: 1.0 / 3.0,
+            dilate_radius: 1,
+            sim_space: SimSpace::Query,
+            psaw_enabled: false,
+            psaw_phi: 0.7,
+            psaw_alpha: 1.0,
+            sched_ell_s_frac: 0.5,
+            etf_enabled: false,
+            etf_psi: 0.5,
+            etf_gamma: 1.0,
+            hshare_stride: 8,
+            quest_page: 16,
+            ds_channels: 8,
+        }
+    }
+}
+
+impl SelectorConfig {
+    /// Total decode KV budget C = C_sink + k + C_local.
+    pub fn budget(&self) -> usize {
+        self.c_sink + self.k_middle + self.c_local
+    }
+
+    /// Number of dilated winners m = ⌊k·frac⌋ (paper: ⌊k/3⌋).
+    pub fn dilate_m(&self) -> usize {
+        (self.k_middle as f32 * self.dilate_m_frac) as usize
+    }
+
+    /// LongBench configuration (Sec. V-C): budget 512.
+    pub fn longbench(kind: SelectorKind) -> Self {
+        SelectorConfig {
+            kind,
+            c_sink: 16,
+            c_local: 64,
+            k_middle: 432,
+            ..Default::default()
+        }
+    }
+
+    /// Budget-matched CIS* (Sec. V-B: k=72 at C=128; Sec. V-C: k=388).
+    pub fn star(mut self) -> Self {
+        self.k_middle = match self.budget() {
+            128 => 72,
+            512 => 388,
+            other => (other as f32 * 0.75) as usize,
+        };
+        self
+    }
+}
+
+/// Engine-level serving configuration.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    pub artifacts_dir: String,
+    pub model: String,
+    pub selector: SelectorConfig,
+    /// Max decode steps per request (safety cap).
+    pub max_new_tokens: usize,
+    /// Batch tile sizes available (must match compiled artifacts).
+    pub batch_tiles: Vec<usize>,
+    /// Max sequences admitted per scheduler iteration.
+    pub max_batch: usize,
+    /// Use the Pallas-kernel attention variant where available.
+    pub use_pallas: bool,
+    pub seed: u64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            artifacts_dir: "artifacts".into(),
+            model: "small".into(),
+            selector: SelectorConfig::default(),
+            max_new_tokens: 64,
+            batch_tiles: vec![1, 8, 16],
+            max_batch: 16,
+            use_pallas: false,
+            seed: 0xC0FFEE,
+        }
+    }
+}
+
+impl EngineConfig {
+    /// Load overrides from a JSON file produced by hand or by harnesses.
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let mut cfg = EngineConfig::default();
+        if let Some(s) = j.get("artifacts_dir").and_then(Json::as_str) {
+            cfg.artifacts_dir = s.to_string();
+        }
+        if let Some(s) = j.get("model").and_then(Json::as_str) {
+            cfg.model = s.to_string();
+        }
+        if let Some(n) = j.get("max_new_tokens").and_then(Json::as_usize) {
+            cfg.max_new_tokens = n;
+        }
+        if let Some(sel) = j.get("selector") {
+            let sc = &mut cfg.selector;
+            if let Some(s) = sel.get("kind").and_then(Json::as_str) {
+                sc.kind = SelectorKind::parse(s)
+                    .ok_or_else(|| format!("unknown selector kind `{s}`"))?;
+            }
+            macro_rules! num {
+                ($field:ident, $key:expr, $ty:ty) => {
+                    if let Some(n) = sel.get($key).and_then(Json::as_f64) {
+                        sc.$field = n as $ty;
+                    }
+                };
+            }
+            num!(c_sink, "c_sink", usize);
+            num!(c_local, "c_local", usize);
+            num!(k_middle, "k_middle", usize);
+            num!(block_size, "block_size", usize);
+            num!(sim_threshold, "sim_threshold", f32);
+            num!(dilate_radius, "dilate_radius", usize);
+            num!(psaw_phi, "psaw_phi", f32);
+            num!(psaw_alpha, "psaw_alpha", f32);
+            num!(etf_psi, "etf_psi", f32);
+            num!(etf_gamma, "etf_gamma", f32);
+            num!(hshare_stride, "hshare_stride", usize);
+            num!(quest_page, "quest_page", usize);
+            num!(ds_channels, "ds_channels", usize);
+            if let Some(b) = sel.get("psaw_enabled").and_then(Json::as_bool) {
+                sc.psaw_enabled = b;
+            }
+            if let Some(b) = sel.get("etf_enabled").and_then(Json::as_bool) {
+                sc.etf_enabled = b;
+            }
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = SelectorConfig::default();
+        assert_eq!(c.budget(), 128);
+        assert_eq!(c.dilate_m(), 29); // ⌊88/3⌋
+        assert!((c.sim_threshold - 0.8).abs() < 1e-6);
+        assert_eq!(c.dilate_radius, 1);
+    }
+
+    #[test]
+    fn longbench_budget_is_512() {
+        let c = SelectorConfig::longbench(SelectorKind::Cis);
+        assert_eq!(c.budget(), 512);
+        assert_eq!(c.star().k_middle, 388);
+    }
+
+    #[test]
+    fn star_matches_paper_at_128() {
+        let c = SelectorConfig::default().star();
+        assert_eq!(c.k_middle, 72);
+    }
+
+    #[test]
+    fn selector_kind_roundtrip() {
+        for k in [
+            "dense", "oracle", "h2o", "streaming", "quest", "ds", "hshare",
+            "cis", "cpe",
+        ] {
+            let kind = SelectorKind::parse(k).unwrap();
+            assert_eq!(SelectorKind::parse(kind.name()).unwrap(), kind);
+        }
+        assert!(SelectorKind::parse("bogus").is_none());
+    }
+
+    #[test]
+    fn from_json_overrides() {
+        let j = Json::parse(
+            r#"{"model":"bench","selector":{"kind":"cpe","block_size":16,
+                "psaw_enabled":true,"sim_threshold":0.7}}"#,
+        )
+        .unwrap();
+        let c = EngineConfig::from_json(&j).unwrap();
+        assert_eq!(c.model, "bench");
+        assert_eq!(c.selector.kind, SelectorKind::Cpe);
+        assert_eq!(c.selector.block_size, 16);
+        assert!(c.selector.psaw_enabled);
+    }
+}

@@ -1,0 +1,216 @@
+//! L3 coordination: request queue, continuous (iteration-level) batcher,
+//! prefill/decode scheduler, sequence lifecycle.
+//!
+//! Scheduling model (Orca/vLLM-style, adapted to one CPU device):
+//!   * requests land in a FIFO admission queue;
+//!   * each scheduler iteration admits waiting requests up to
+//!     `max_batch` (prefill runs per-sequence on admission — chunked
+//!     prefill is future work, DESIGN.md §6);
+//!   * all running sequences advance one token per iteration via a single
+//!     batched decode step;
+//!   * finished sequences retire immediately and release their KV pages,
+//!     so a long request never blocks short ones beyond one iteration.
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::metrics::RunMetrics;
+use crate::model::{Engine, Sequence};
+
+/// Pure admission/retirement policy — kept engine-free for unit testing.
+#[derive(Debug)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+}
+
+impl BatchPolicy {
+    /// How many waiting sequences to admit given the running count.
+    pub fn admit(&self, running: usize, waiting: usize) -> usize {
+        self.max_batch.saturating_sub(running).min(waiting)
+    }
+}
+
+/// A request as submitted by a client.
+#[derive(Clone, Debug)]
+pub struct RequestIn {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+}
+
+/// A finished request.
+#[derive(Clone, Debug)]
+pub struct RequestOut {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    pub prefill_us: f64,
+    pub decode_us: f64,
+    pub steps: u64,
+    pub rho_hat: f64,
+}
+
+/// The scheduler: owns the engine and drives admission + decode.
+pub struct Scheduler {
+    pub engine: Engine,
+    pub policy: BatchPolicy,
+    waiting: VecDeque<RequestIn>,
+    running: Vec<RunningSeq>,
+    pub metrics: RunMetrics,
+    started: Instant,
+}
+
+struct RunningSeq {
+    seq: Sequence,
+    prefill_us: f64,
+    decode_us: f64,
+    steps: u64,
+    t0_retrievals: u64,
+}
+
+impl Scheduler {
+    pub fn new(engine: Engine) -> Self {
+        let max_batch = engine.cfg.max_batch;
+        Scheduler {
+            engine,
+            policy: BatchPolicy { max_batch },
+            waiting: VecDeque::new(),
+            running: Vec::new(),
+            metrics: RunMetrics::default(),
+            started: Instant::now(),
+        }
+    }
+
+    pub fn submit(&mut self, req: RequestIn) {
+        self.waiting.push_back(req);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.waiting.len() + self.running.len()
+    }
+
+    /// One scheduler iteration: admit → decode step → retire.
+    /// Returns the requests completed this iteration.
+    pub fn step(&mut self) -> Result<Vec<RequestOut>> {
+        // admit
+        let n_admit = self.policy.admit(self.running.len(), self.waiting.len());
+        for _ in 0..n_admit {
+            let req = self.waiting.pop_front().unwrap();
+            let mut seq = self.engine.new_sequence(req.id, req.prompt);
+            seq.max_new = req.max_new_tokens;
+            let t0 = Instant::now();
+            self.engine.prefill(&mut seq)?;
+            let prefill_us = t0.elapsed().as_secs_f64() * 1e6;
+            self.metrics
+                .prefill_lat
+                .record_us(prefill_us);
+            self.running.push(RunningSeq {
+                seq,
+                prefill_us,
+                decode_us: 0.0,
+                steps: 0,
+                t0_retrievals: 0,
+            });
+        }
+
+        // decode one token for everyone
+        if !self.running.is_empty() {
+            let t0 = Instant::now();
+            {
+                let mut group: Vec<&mut Sequence> =
+                    self.running.iter_mut().map(|r| &mut r.seq).collect();
+                self.engine.decode_step(&mut group)?;
+            }
+            let us = t0.elapsed().as_secs_f64() * 1e6;
+            self.metrics.step_lat.record_us(us);
+            let n = self.running.len() as f64;
+            for r in &mut self.running {
+                r.decode_us += us / n;
+                r.steps += 1;
+            }
+            self.metrics.tokens_out += self.running.len() as u64;
+        }
+
+        // retire
+        let mut done_out = Vec::new();
+        let mut i = 0;
+        while i < self.running.len() {
+            if self.running[i].seq.done {
+                let mut r = self.running.swap_remove(i);
+                let head_steps = self.engine.mm.n_heads as u64
+                    * self.engine.mm.n_layers as u64
+                    * r.steps;
+                let retr = r.seq.selector.retrievals() - r.t0_retrievals;
+                self.metrics.retrievals += retr;
+                self.metrics.head_steps += head_steps;
+                self.engine.release(&mut r.seq);
+                done_out.push(RequestOut {
+                    id: r.seq.id,
+                    tokens: r.seq.generated.clone(),
+                    prefill_us: r.prefill_us,
+                    decode_us: r.decode_us,
+                    steps: r.steps,
+                    rho_hat: if head_steps > 0 {
+                        retr as f64 / head_steps as f64
+                    } else {
+                        0.0
+                    },
+                });
+            } else {
+                i += 1;
+            }
+        }
+        self.metrics.wall_s = self.started.elapsed().as_secs_f64();
+        Ok(done_out)
+    }
+
+    /// Drive until all submitted requests finish.
+    pub fn run_to_completion(&mut self) -> Result<Vec<RequestOut>> {
+        self.started = Instant::now();
+        let mut out = Vec::new();
+        while self.pending() > 0 {
+            out.extend(self.step()?);
+        }
+        out.sort_by_key(|r| r.id);
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::Prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn admit_respects_capacity() {
+        let p = BatchPolicy { max_batch: 8 };
+        assert_eq!(p.admit(0, 20), 8);
+        assert_eq!(p.admit(5, 20), 3);
+        assert_eq!(p.admit(8, 20), 0);
+        assert_eq!(p.admit(3, 2), 2);
+    }
+
+    #[test]
+    fn prop_admission_never_exceeds_batch() {
+        Prop::new(200, 0xBA7C).forall(
+            |rng: &mut Rng| {
+                (rng.below(32), rng.below(64), 1 + rng.below(16))
+            },
+            |&(running, waiting, max_batch)| {
+                let p = BatchPolicy { max_batch };
+                let a = p.admit(running, waiting);
+                if running + a > max_batch && a > 0 {
+                    return Err(format!(
+                        "admit {a} pushes {running} past {max_batch}"
+                    ));
+                }
+                if a > waiting {
+                    return Err("admitted more than waiting".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,299 @@
+//! Shared harness machinery: shared-runtime lab, dense reference
+//! trajectories, teacher-forced replay, and fidelity metrics.
+//!
+//! Quality proxy (DESIGN.md §4): real-task accuracy is replaced by
+//! fidelity of the sparse engine to the dense engine on the *same* token
+//! trajectory — argmax agreement (EM-proxy), logit distance — plus the
+//! theory quantities (δ, β_th) the paper ties to accuracy.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::config::{EngineConfig, SelectorConfig, SelectorKind};
+use crate::model::{Engine, Probe};
+use crate::runtime::{Runtime, WeightStore};
+use crate::util::cli::Args;
+use crate::util::fx;
+use crate::util::rng::Rng;
+use crate::workload::Request;
+
+/// Shared runtime + weights so per-selector engines don't recompile.
+pub struct Lab {
+    pub rt: Arc<Runtime>,
+    pub weights: Arc<WeightStore>,
+    pub base: EngineConfig,
+}
+
+impl Lab {
+    pub fn from_args(args: &Args) -> Result<Lab> {
+        let mut base = EngineConfig::default();
+        base.artifacts_dir = args.get("artifacts").to_string();
+        base.model = "small".to_string();
+        let rt = Arc::new(Runtime::new(&base.artifacts_dir)?);
+        let mm = rt.model(&base.model)?.clone();
+        let weights = Arc::new(WeightStore::load(&rt, &mm)?);
+        Ok(Lab { rt, weights, base })
+    }
+
+    pub fn engine(&self, sel: SelectorConfig) -> Engine {
+        let mut cfg = self.base.clone();
+        cfg.selector = sel;
+        Engine::with_shared(self.rt.clone(), self.weights.clone(), cfg)
+    }
+
+    pub fn dense_engine(&self) -> Engine {
+        let mut sel = SelectorConfig::default();
+        sel.kind = SelectorKind::Dense;
+        self.engine(sel)
+    }
+}
+
+/// Greedy dense trajectory: the ground truth every selector is compared
+/// against.
+pub struct RefTraj {
+    /// Token fed at step i (tokens[0] is sampled from prompt logits).
+    pub tokens: Vec<i32>,
+    /// Logits observed after step i.
+    pub logits: Vec<Vec<f32>>,
+}
+
+pub fn reference(engine: &mut Engine, req: &Request) -> Result<RefTraj> {
+    let mut seq = engine.new_sequence(0, req.prompt.clone());
+    seq.max_new = req.gen_tokens;
+    engine.prefill(&mut seq)?;
+    let mut tokens = Vec::new();
+    let mut logits = Vec::new();
+    while !seq.done {
+        tokens.push(seq.next_token);
+        {
+            let mut group = [&mut seq];
+            engine.decode_step(&mut group)?;
+        }
+        logits.push(seq.last_logits.clone());
+    }
+    engine.release(&mut seq);
+    Ok(RefTraj { tokens, logits })
+}
+
+/// Fidelity of a selector engine replayed over the dense trajectory.
+#[derive(Clone, Debug, Default)]
+pub struct Fidelity {
+    pub steps: usize,
+    pub argmax_agree: f64,
+    pub top5_agree: f64,
+    pub logit_l2: f64,
+    pub logit_cos: f64,
+    pub rho_hat: f64,
+    pub avg_selected: f64,
+    pub mean_delta: f64,
+    pub mean_beta: f64,
+    pub mean_delta_oracle: f64,
+    pub mean_out_l2: f64,
+    pub oracle_overlap: f64,
+}
+
+pub fn replay(
+    engine: &mut Engine,
+    req: &Request,
+    traj: &RefTraj,
+    probe_every: usize,
+) -> Result<Fidelity> {
+    engine.probe = Some(Probe::new(probe_every));
+    engine.stats = Default::default();
+    let mut seq = engine.new_sequence(1, req.prompt.clone());
+    seq.max_new = traj.tokens.len();
+    engine.prefill(&mut seq)?;
+
+    let mut agree = 0usize;
+    let mut top5 = 0usize;
+    let mut l2 = 0.0f64;
+    let mut cos = 0.0f64;
+    for (step, &tok) in traj.tokens.iter().enumerate() {
+        seq.next_token = tok; // teacher forcing
+        {
+            let mut group = [&mut seq];
+            engine.decode_step(&mut group)?;
+        }
+        let got = &seq.last_logits;
+        let want = &traj.logits[step];
+        let am_got = fx::argmax(got);
+        let am_want = fx::argmax(want);
+        if am_got == am_want {
+            agree += 1;
+        }
+        if fx::top_k_indices(got, 5).contains(&am_want) {
+            top5 += 1;
+        }
+        let mut d2 = 0.0f64;
+        for (a, b) in got.iter().zip(want) {
+            d2 += ((a - b) as f64).powi(2);
+        }
+        l2 += d2.sqrt();
+        cos += fx::cosine(got, want) as f64;
+    }
+    let steps = traj.tokens.len().max(1);
+    let head_steps = engine.mm.n_heads as u64
+        * engine.mm.n_layers as u64
+        * steps as u64;
+    let probe = engine.probe.take().unwrap();
+    let fid = Fidelity {
+        steps,
+        argmax_agree: agree as f64 / steps as f64,
+        top5_agree: top5 as f64 / steps as f64,
+        logit_l2: l2 / steps as f64,
+        logit_cos: cos / steps as f64,
+        rho_hat: seq.selector.retrievals() as f64 / head_steps as f64,
+        avg_selected: engine.stats.avg_selected(),
+        mean_delta: probe.mean_delta(),
+        mean_beta: probe.mean_beta(),
+        mean_delta_oracle: probe.mean_delta_oracle(),
+        mean_out_l2: probe.mean_out_l2(),
+        oracle_overlap: probe.mean_overlap(),
+    };
+    engine.release(&mut seq);
+    Ok(fid)
+}
+
+/// Like `replay` but arms the probe with an oracle-budget split (Fig. 8).
+/// Returns (mean in-budget tokens, mean extra tokens, fidelity).
+pub fn replay_with_budget(
+    engine: &mut Engine,
+    req: &Request,
+    traj: &RefTraj,
+    probe_every: usize,
+    budget: usize,
+) -> Result<(f64, f64, Fidelity)> {
+    engine.stats = Default::default();
+    let mut seq = engine.new_sequence(1, req.prompt.clone());
+    seq.max_new = traj.tokens.len();
+    engine.prefill(&mut seq)?;
+    let mut p = Probe::new(probe_every);
+    p.budget = budget;
+    engine.probe = Some(p);
+    let mut agree = 0usize;
+    for (step, &tok) in traj.tokens.iter().enumerate() {
+        seq.next_token = tok;
+        {
+            let mut group = [&mut seq];
+            engine.decode_step(&mut group)?;
+        }
+        if fx::argmax(&seq.last_logits) == fx::argmax(&traj.logits[step]) {
+            agree += 1;
+        }
+    }
+    let steps = traj.tokens.len().max(1);
+    let probe = engine.probe.take().unwrap();
+    let fid = Fidelity {
+        steps,
+        argmax_agree: agree as f64 / steps as f64,
+        avg_selected: engine.stats.avg_selected(),
+        mean_delta: probe.mean_delta(),
+        oracle_overlap: probe.mean_overlap(),
+        ..Default::default()
+    };
+    let out = (probe.mean_in_budget(), probe.mean_out_budget(), fid);
+    engine.release(&mut seq);
+    Ok(out)
+}
+
+/// Average fidelity over several requests.
+pub fn eval_selector(
+    lab: &Lab,
+    sel: SelectorConfig,
+    reqs: &[Request],
+    trajs: &[RefTraj],
+    probe_every: usize,
+) -> Result<Fidelity> {
+    let mut engine = lab.engine(sel);
+    let mut acc = Fidelity::default();
+    for (req, traj) in reqs.iter().zip(trajs) {
+        let f = replay(&mut engine, req, traj, probe_every)?;
+        acc.steps += f.steps;
+        acc.argmax_agree += f.argmax_agree;
+        acc.top5_agree += f.top5_agree;
+        acc.logit_l2 += f.logit_l2;
+        acc.logit_cos += f.logit_cos;
+        acc.rho_hat += f.rho_hat;
+        acc.avg_selected += f.avg_selected;
+        acc.mean_delta += f.mean_delta;
+        acc.mean_beta += f.mean_beta;
+        acc.mean_delta_oracle += f.mean_delta_oracle;
+        acc.mean_out_l2 += f.mean_out_l2;
+        acc.oracle_overlap += f.oracle_overlap;
+    }
+    let n = reqs.len().max(1) as f64;
+    acc.argmax_agree /= n;
+    acc.top5_agree /= n;
+    acc.logit_l2 /= n;
+    acc.logit_cos /= n;
+    acc.rho_hat /= n;
+    acc.avg_selected /= n;
+    acc.mean_delta /= n;
+    acc.mean_beta /= n;
+    acc.mean_delta_oracle /= n;
+    acc.mean_out_l2 /= n;
+    acc.oracle_overlap /= n;
+    Ok(acc)
+}
+
+/// Generate n requests for a workload spec with a fixed seed.
+pub fn requests(
+    spec: &crate::workload::WorkloadSpec,
+    n: usize,
+    vocab: usize,
+    seed: u64,
+) -> Vec<Request> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| crate::workload::generate(spec, vocab, &mut rng)).collect()
+}
+
+/// Write a results table to `results/<stem>.{md,csv}` and stdout.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        println!("  {}", cells.join(" | "));
+        self.rows.push(cells);
+    }
+
+    pub fn save(&self, stem: &str) -> Result<()> {
+        std::fs::create_dir_all("results")?;
+        let mut md = format!("## {}\n\n| {} |\n|{}|\n",
+            self.title,
+            self.headers.join(" | "),
+            self.headers.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
+        let mut csv = self.headers.join(",") + "\n";
+        for r in &self.rows {
+            md.push_str(&format!("| {} |\n", r.join(" | ")));
+            csv.push_str(&(r.join(",") + "\n"));
+        }
+        std::fs::write(format!("results/{stem}.md"), md)?;
+        std::fs::write(format!("results/{stem}.csv"), csv)?;
+        println!("  → results/{stem}.md, results/{stem}.csv");
+        Ok(())
+    }
+}
+
+/// Standard harness CLI flags.
+pub fn standard_cli(name: &'static str, about: &'static str) -> crate::util::cli::Cli {
+    crate::util::cli::Cli::new(name, about)
+        .flag("artifacts", "artifacts", "artifacts directory")
+        .flag("requests", "3", "requests per workload")
+        .flag("gen", "32", "decode steps per request")
+        .flag("seed", "7", "workload seed")
+        .flag("probe-every", "4", "fidelity probe period (steps)")
+        .switch("quick", "smaller sweep for smoke runs")
+}

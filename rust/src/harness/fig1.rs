@@ -1,0 +1,104 @@
+//! Fig. 1 — (a) attention disturbance ‖A−Â‖₁ (= 2δ by Lemma 1),
+//! (b) output-level L2 deviation, (c) fidelity–consumption frontier,
+//! for every selector vs the top-k oracle.
+
+use anyhow::Result;
+
+use crate::config::{SelectorConfig, SelectorKind};
+use crate::util::cli::Args;
+use crate::workload;
+
+use super::common::{self, Lab, Table};
+
+pub fn run(args: &Args) -> Result<()> {
+    let lab = Lab::from_args(args)?;
+    let n_req = args.get_usize("requests");
+    let gen = args.get_usize("gen");
+    let seed = args.get_usize("seed") as u64;
+    let probe = args.get_usize("probe-every");
+
+    let mut spec = workload::COQA;
+    spec.gen_tokens = gen;
+    if args.get_bool("quick") {
+        spec = workload::scaled(&spec, 640);
+    }
+    let reqs = common::requests(&spec, n_req, lab.rt.model("small")?.vocab_size, seed);
+
+    println!("[fig1] building dense reference trajectories…");
+    let mut dense = lab.dense_engine();
+    let trajs: Vec<_> = reqs
+        .iter()
+        .map(|r| common::reference(&mut dense, r))
+        .collect::<Result<_>>()?;
+
+    let selectors: Vec<(&str, SelectorConfig)> = vec![
+        ("oracle", sel(SelectorKind::TopKOracle)),
+        ("h2o", sel(SelectorKind::H2O)),
+        ("streaming", sel(SelectorKind::StreamingLlm)),
+        ("quest", sel(SelectorKind::Quest)),
+        ("ds", sel(SelectorKind::DoubleSparsity)),
+        ("hshare", sel(SelectorKind::HShare)),
+        ("cis", sel(SelectorKind::Cis)),
+        ("cpe", cpe()),
+    ];
+
+    let mut table = Table::new(
+        "Fig 1 — attention/output perturbation and fidelity–consumption",
+        &[
+            "method", "attn_TV(=2δ/2)", "out_L2", "δ*(oracle)", "β_th",
+            "argmax_agree", "ρ̂", "avg_sel", "attn_ratio", "score_cost",
+        ],
+    );
+    let avg_ctx = reqs.iter().map(|r| r.prompt.len()).sum::<usize>() as f64
+        / reqs.len() as f64
+        + gen as f64 / 2.0;
+    for (name, cfg) in selectors {
+        let score_cost = score_cost(&cfg);
+        let f = common::eval_selector(&lab, cfg, &reqs, &trajs, probe)?;
+        table.row(vec![
+            name.to_string(),
+            format!("{:.4}", f.mean_delta),
+            format!("{:.4}", f.mean_out_l2),
+            format!("{:.4}", f.mean_delta_oracle),
+            format!("{:.4}", f.mean_beta),
+            format!("{:.3}", f.argmax_agree),
+            format!("{:.4}", f.rho_hat),
+            format!("{:.1}", f.avg_selected),
+            format!("{:.4}", f.avg_selected / avg_ctx),
+            format!("{:.4}", score_cost),
+        ]);
+    }
+    table.save("fig1")?;
+    println!(
+        "[fig1] shape check: oracle ≤ cis ≤ hshare ≤ streaming on δ; \
+         CIS tracks oracle (paper Fig. 1a/1b)"
+    );
+    Ok(())
+}
+
+fn sel(kind: SelectorKind) -> SelectorConfig {
+    SelectorConfig { kind, ..Default::default() }
+}
+
+fn cpe() -> SelectorConfig {
+    SelectorConfig {
+        kind: SelectorKind::Cpe,
+        psaw_enabled: true,
+        ..Default::default()
+    }
+}
+
+/// Analytic per-step scoring cost relative to dense scoring (Comp*).
+pub fn score_cost(cfg: &SelectorConfig) -> f64 {
+    match cfg.kind {
+        SelectorKind::Dense => 0.0,
+        SelectorKind::TopKOracle => 1.0,
+        SelectorKind::H2O => 0.0,
+        SelectorKind::StreamingLlm => 0.0,
+        SelectorKind::Quest => 2.0 / cfg.quest_page as f64,
+        SelectorKind::DoubleSparsity => cfg.ds_channels as f64 / 64.0,
+        // sharing methods amortize one full pass per block
+        SelectorKind::HShare => 1.0 / cfg.hshare_stride as f64,
+        SelectorKind::Cis | SelectorKind::Cpe => 1.0 / cfg.block_size as f64,
+    }
+}

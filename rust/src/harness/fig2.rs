@@ -1,0 +1,168 @@
+//! Fig. 2/3 — clustered critical indices across temporally-adjacent
+//! queries, and attention heatmap dumps.
+//!
+//! Runs the oracle selector with a row-capturing probe, then reports, for
+//! consecutive decode steps, the top-64 critical indices and their
+//! cluster-level overlap (the paper's observation that clusters persist
+//! under small query drift), plus per-(layer, head) attention-mass
+//! profiles for the heatmaps.
+
+use anyhow::Result;
+
+use crate::config::{SelectorConfig, SelectorKind};
+use crate::model::Probe;
+use crate::util::cli::Args;
+use crate::util::fx;
+use crate::workload;
+
+use super::common::{self, Lab, Table};
+
+pub fn run(args: &Args) -> Result<()> {
+    let lab = Lab::from_args(args)?;
+    let gen = args.get_usize("gen").max(8);
+    let seed = args.get_usize("seed") as u64;
+
+    let mut spec = workload::COQA;
+    spec.gen_tokens = gen;
+    if args.get_bool("quick") {
+        spec = workload::scaled(&spec, 640);
+    }
+    let vocab = lab.rt.model("small")?.vocab_size;
+    let req = common::requests(&spec, 1, vocab, seed).remove(0);
+
+    let mut engine = lab.engine(SelectorConfig {
+        kind: SelectorKind::TopKOracle,
+        ..Default::default()
+    });
+    let mut probe = Probe::new(1);
+    probe.keep_rows = true;
+    engine.probe = Some(probe);
+
+    let mut seq = engine.new_sequence(0, req.prompt.clone());
+    seq.max_new = gen.min(8); // a handful of adjacent queries suffices
+    engine.prefill(&mut seq)?;
+    while !seq.done {
+        let mut group = [&mut seq];
+        engine.decode_step(&mut group)?;
+    }
+    let probe = engine.probe.take().unwrap();
+
+    // --- Fig. 2: adjacent-query critical sets + cluster overlap ---------
+    let layer = engine.mm.n_layers - 1;
+    let head = 2 % engine.mm.n_heads;
+    let rows: Vec<_> = probe
+        .rows
+        .iter()
+        .filter(|r| r.layer == layer && r.head == head)
+        .collect();
+    let k = 64usize;
+    let mut table = Table::new(
+        &format!("Fig 2 — critical indices across adjacent queries (layer {layer}, head {head})"),
+        &["step", "top64_head", "n_clusters", "overlap_prev", "cluster_overlap_prev"],
+    );
+    let mut prev: Option<Vec<usize>> = None;
+    for r in &rows {
+        let mut top = fx::top_k_indices(&r.row, k.min(r.row.len()));
+        top.sort_unstable();
+        let clusters = cluster_count(&top, 4);
+        let (ov, cov) = match &prev {
+            Some(p) => (index_overlap(p, &top), cluster_overlap(p, &top, 4)),
+            None => (1.0, 1.0),
+        };
+        table.row(vec![
+            r.step.to_string(),
+            format!("{:?}", &top[..top.len().min(12)]),
+            clusters.to_string(),
+            format!("{ov:.3}"),
+            format!("{cov:.3}"),
+        ]);
+        prev = Some(top);
+    }
+    table.save("fig2")?;
+
+    // --- Fig. 3: attention heatmap data ---------------------------------
+    let mut heat = Table::new(
+        "Fig 3 — attention-mass profile per (layer, head): sink / middle / local mass",
+        &["layer", "head", "sink_mass", "middle_mass", "local_mass"],
+    );
+    for l in 0..engine.mm.n_layers {
+        for h in 0..engine.mm.n_heads {
+            if let Some(r) = probe
+                .rows
+                .iter()
+                .find(|r| r.layer == l && r.head == h)
+            {
+                let t = r.row.len();
+                let sink: f32 = r.row[..4.min(t)].iter().sum();
+                let local: f32 =
+                    r.row[t.saturating_sub(32)..].iter().sum();
+                let middle = (1.0 - sink - local).max(0.0);
+                heat.row(vec![
+                    l.to_string(),
+                    h.to_string(),
+                    format!("{sink:.3}"),
+                    format!("{middle:.3}"),
+                    format!("{local:.3}"),
+                ]);
+            }
+        }
+    }
+    heat.save("fig3")?;
+    println!("[fig2] expectation: high cluster_overlap_prev (paper: clusters persist across adjacent queries)");
+    Ok(())
+}
+
+/// Number of clusters when gaps > `gap` split runs of indices.
+pub fn cluster_count(sorted: &[usize], gap: usize) -> usize {
+    if sorted.is_empty() {
+        return 0;
+    }
+    1 + sorted
+        .windows(2)
+        .filter(|w| w[1] - w[0] > gap)
+        .count()
+}
+
+pub fn index_overlap(a: &[usize], b: &[usize]) -> f64 {
+    if a.is_empty() {
+        return 1.0;
+    }
+    let bs: std::collections::HashSet<_> = b.iter().collect();
+    a.iter().filter(|x| bs.contains(x)).count() as f64 / a.len() as f64
+}
+
+/// Overlap at cluster granularity: fraction of a's indices that fall
+/// within ±gap of any of b's indices (the paper's "cluster-level overlap
+/// remains large" even when exact indices shift).
+pub fn cluster_overlap(a: &[usize], b: &[usize], gap: usize) -> f64 {
+    if a.is_empty() {
+        return 1.0;
+    }
+    let hit = a
+        .iter()
+        .filter(|&&x| {
+            b.iter().any(|&y| x.abs_diff(y) <= gap)
+        })
+        .count();
+    hit as f64 / a.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cluster_count_splits_on_gaps() {
+        assert_eq!(cluster_count(&[1, 2, 3, 10, 11, 50], 4), 3);
+        assert_eq!(cluster_count(&[], 4), 0);
+        assert_eq!(cluster_count(&[5], 4), 1);
+    }
+
+    #[test]
+    fn overlaps() {
+        assert_eq!(index_overlap(&[1, 2, 3], &[2, 3, 4]), 2.0 / 3.0);
+        // 1 is within gap of 2; all others exact
+        assert_eq!(cluster_overlap(&[1, 2, 3], &[3, 4, 5], 2), 1.0);
+        assert_eq!(cluster_overlap(&[100], &[1], 2), 0.0);
+    }
+}

@@ -1,0 +1,134 @@
+//! Fig. 4 — CIS dilation coverage: sharing query t's critical set with
+//! queries t+1, t+2; true-positive coverage of the later queries' oracle
+//! sets, with and without neighbor dilation.
+
+use anyhow::Result;
+
+use crate::config::{SelectorConfig, SelectorKind};
+use crate::model::Probe;
+use crate::selector::{select_criteria, SelectedSet};
+use crate::util::cli::Args;
+use crate::util::fx;
+use crate::workload;
+
+use super::common::{self, Lab, Table};
+
+pub fn run(args: &Args) -> Result<()> {
+    let lab = Lab::from_args(args)?;
+    let seed = args.get_usize("seed") as u64;
+    let mut spec = workload::COQA;
+    spec.gen_tokens = 8;
+    if args.get_bool("quick") {
+        spec = workload::scaled(&spec, 640);
+    }
+    let vocab = lab.rt.model("small")?.vocab_size;
+    let req = common::requests(&spec, 1, vocab, seed).remove(0);
+
+    // Capture dense rows for consecutive queries.
+    let mut engine = lab.engine(SelectorConfig {
+        kind: SelectorKind::TopKOracle,
+        ..Default::default()
+    });
+    let mut probe = Probe::new(1);
+    probe.keep_rows = true;
+    engine.probe = Some(probe);
+    let mut seq = engine.new_sequence(0, req.prompt.clone());
+    seq.max_new = 4;
+    engine.prefill(&mut seq)?;
+    while !seq.done {
+        let mut group = [&mut seq];
+        engine.decode_step(&mut group)?;
+    }
+    let probe = engine.probe.take().unwrap();
+
+    let cfg = SelectorConfig::default();
+    let (c_sink, c_local, k) = (cfg.c_sink, cfg.c_local, cfg.k_middle);
+    let mut table = Table::new(
+        "Fig 4 — dilation true-positive coverage of adjacent queries' oracle sets",
+        &["layer", "head", "Δstep", "coverage_no_dilation", "coverage_r1", "coverage_r2"],
+    );
+    let mut means = [0.0f64; 3];
+    let mut count = 0.0f64;
+    for layer in 0..engine.mm.n_layers {
+        for head in 0..engine.mm.n_heads {
+            let rows: Vec<_> = probe
+                .rows
+                .iter()
+                .filter(|r| r.layer == layer && r.head == head)
+                .collect();
+            if rows.len() < 3 {
+                continue;
+            }
+            let t0 = rows[0].row.len();
+            let base = select_criteria(&rows[0].row, t0, c_sink, c_local, k);
+            for (dj, later) in rows[1..3].iter().enumerate() {
+                let t1 = later.row.len();
+                let oracle = oracle_middle(&later.row, t1, c_sink, c_local, k);
+                if oracle.is_empty() {
+                    continue;
+                }
+                let covs: Vec<f64> = [0usize, 1, 2]
+                    .iter()
+                    .map(|&r| {
+                        let mut s: SelectedSet = base.clone();
+                        s.dilate(cfg.dilate_m().max(1), r);
+                        let set = s.materialize(t1, c_sink, c_local);
+                        let hit = oracle
+                            .iter()
+                            .filter(|p| set.binary_search(p).is_ok())
+                            .count();
+                        hit as f64 / oracle.len() as f64
+                    })
+                    .collect();
+                if layer == engine.mm.n_layers - 1 && head < 4 {
+                    table.row(vec![
+                        layer.to_string(),
+                        head.to_string(),
+                        (dj + 1).to_string(),
+                        format!("{:.3}", covs[0]),
+                        format!("{:.3}", covs[1]),
+                        format!("{:.3}", covs[2]),
+                    ]);
+                }
+                for i in 0..3 {
+                    means[i] += covs[i];
+                }
+                count += 1.0;
+            }
+        }
+    }
+    if count > 0.0 {
+        table.row(vec![
+            "MEAN".into(),
+            "-".into(),
+            "-".into(),
+            format!("{:.3}", means[0] / count),
+            format!("{:.3}", means[1] / count),
+            format!("{:.3}", means[2] / count),
+        ]);
+    }
+    table.save("fig4")?;
+    println!("[fig4] expectation: coverage_r1 ≥ coverage_no_dilation (paper Fig. 4: dilation recovers drifted criticals)");
+    Ok(())
+}
+
+/// Oracle middle-region top-k for a later query's row.
+fn oracle_middle(
+    row: &[f32],
+    t: usize,
+    c_sink: usize,
+    c_local: usize,
+    k: usize,
+) -> Vec<usize> {
+    let sink_end = c_sink.min(t);
+    let local_start = t.saturating_sub(c_local).max(sink_end);
+    if local_start <= sink_end {
+        return Vec::new();
+    }
+    let mut v: Vec<usize> = fx::top_k_indices(&row[sink_end..local_start], k)
+        .into_iter()
+        .map(|i| i + sink_end)
+        .collect();
+    v.sort_unstable();
+    v
+}

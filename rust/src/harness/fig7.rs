@@ -1,0 +1,73 @@
+//! Fig. 7 — CIS vs HShare across computation (retrieval) ratios:
+//! fidelity (EM-proxy) and oracle overlap as ρ̂ shrinks.  The paper's
+//! claim: HShare collapses at low computation ratios while CIS holds.
+
+use anyhow::Result;
+
+use crate::config::{SelectorConfig, SelectorKind};
+use crate::util::cli::Args;
+use crate::workload;
+
+use super::common::{self, Lab, Table};
+
+pub fn run(args: &Args) -> Result<()> {
+    let lab = Lab::from_args(args)?;
+    let n_req = args.get_usize("requests");
+    let gen = args.get_usize("gen");
+    let seed = args.get_usize("seed") as u64;
+    let probe = args.get_usize("probe-every");
+
+    let mut spec = workload::GSM8K;
+    spec.gen_tokens = gen;
+    let vocab = lab.rt.model("small")?.vocab_size;
+    let reqs = common::requests(&spec, n_req, vocab, seed);
+    println!("[fig7] dense references…");
+    let mut dense = lab.dense_engine();
+    let trajs: Vec<_> = reqs
+        .iter()
+        .map(|r| common::reference(&mut dense, r))
+        .collect::<Result<_>>()?;
+
+    let strides: Vec<usize> = if args.get_bool("quick") {
+        vec![4, 16]
+    } else {
+        vec![2, 4, 8, 16, 32]
+    };
+    let mut table = Table::new(
+        "Fig 7 — CIS vs HShare across retrieval ratios",
+        &["method", "s", "ρ̂", "argmax_agree", "oracle_overlap", "mean_δ"],
+    );
+    for &s in &strides {
+        for (name, cfg) in [
+            (
+                "cis",
+                SelectorConfig {
+                    kind: SelectorKind::Cis,
+                    block_size: s,
+                    ..Default::default()
+                },
+            ),
+            (
+                "hshare",
+                SelectorConfig {
+                    kind: SelectorKind::HShare,
+                    hshare_stride: s,
+                    ..Default::default()
+                },
+            ),
+        ] {
+            let f = common::eval_selector(&lab, cfg, &reqs, &trajs, probe)?;
+            table.row(vec![
+                name.to_string(),
+                s.to_string(),
+                format!("{:.4}", f.rho_hat),
+                format!("{:.3}", f.argmax_agree),
+                format!("{:.3}", f.oracle_overlap),
+                format!("{:.4}", f.mean_delta),
+            ]);
+        }
+    }
+    table.save("fig7")?;
+    println!("[fig7] expectation: at large s (low ρ̂) CIS holds agreement/overlap, HShare degrades (paper Fig. 7)");
+    Ok(())
+}

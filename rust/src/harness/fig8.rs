@@ -1,0 +1,82 @@
+//! Fig. 8 — effect of the dilation count m on the processed KV set:
+//! stacked split of selected tokens into "also in the top-k oracle"
+//! (useful) vs "extra" (overhead), on a NarrativeQA-like workload.
+
+use anyhow::Result;
+
+use crate::config::{SelectorConfig, SelectorKind};
+use crate::util::cli::Args;
+use crate::workload;
+
+use super::common::{self, Lab, Table};
+
+pub fn run(args: &Args) -> Result<()> {
+    let lab = Lab::from_args(args)?;
+    let gen = args.get_usize("gen");
+    let seed = args.get_usize("seed") as u64;
+    let probe_every = args.get_usize("probe-every");
+    let scale = args.get_f64("scale");
+
+    let base = workload::longbench_tasks()
+        .into_iter()
+        .find(|t| t.name == "narrativeqa")
+        .unwrap();
+    let mut spec =
+        workload::scaled(&base, (base.mean_len as f64 * scale) as usize);
+    spec.gen_tokens = gen;
+    let vocab = lab.rt.model("small")?.vocab_size;
+    let reqs = common::requests(&spec, args.get_usize("requests"), vocab, seed);
+
+    println!("[fig8] dense references…");
+    let mut dense = lab.dense_engine();
+    let trajs: Vec<_> = reqs
+        .iter()
+        .map(|r| common::reference(&mut dense, r))
+        .collect::<Result<_>>()?;
+
+    // CIS* at LongBench budget; sweep the dilated-winner count m.
+    let m_fracs: Vec<f64> = if args.get_bool("quick") {
+        vec![0.0, 0.33]
+    } else {
+        vec![0.0, 0.1, 0.33, 0.66, 1.0]
+    };
+    let mut table = Table::new(
+        "Fig 8 — dilation m sweep: selected tokens in/out of the top-budget oracle set",
+        &["m_frac", "m", "avg_set", "in_oracle", "extra", "argmax_agree"],
+    );
+    for &mf in &m_fracs {
+        let cfg = SelectorConfig {
+            kind: SelectorKind::Cis,
+            dilate_m_frac: mf as f32,
+            ..SelectorConfig::longbench(SelectorKind::Cis).star()
+        };
+        let budget = cfg.budget();
+        let m = cfg.dilate_m();
+        let mut engine = lab.engine(cfg);
+        let mut in_b = 0.0;
+        let mut out_b = 0.0;
+        let mut avg_set = 0.0;
+        let mut agree = 0.0;
+        for (req, traj) in reqs.iter().zip(&trajs) {
+            let f = common::replay_with_budget(
+                &mut engine, req, traj, probe_every, budget,
+            )?;
+            in_b += f.0;
+            out_b += f.1;
+            avg_set += f.2.avg_selected;
+            agree += f.2.argmax_agree;
+        }
+        let n = reqs.len() as f64;
+        table.row(vec![
+            format!("{mf:.2}"),
+            m.to_string(),
+            format!("{:.1}", avg_set / n),
+            format!("{:.1}", in_b / n),
+            format!("{:.1}", out_b / n),
+            format!("{:.3}", agree / n),
+        ]);
+    }
+    table.save("fig8")?;
+    println!("[fig8] expectation: extra tokens stay small for moderate m and grow for large m (paper Fig. 8)");
+    Ok(())
+}

@@ -1,0 +1,38 @@
+//! Experiment harnesses: one driver per paper table / figure (DESIGN.md
+//! §5).  Each emits CSV + markdown under `results/` and prints the rows it
+//! reproduces.
+
+pub mod common;
+pub mod fig1;
+pub mod fig2;
+pub mod fig4;
+pub mod fig7;
+pub mod fig8;
+pub mod table2;
+pub mod table3;
+pub mod table5;
+pub mod table6;
+pub mod table7;
+pub mod theory_check;
+
+use anyhow::Result;
+
+/// Dispatch by experiment id (`fig1`, `table2`, ...).
+pub fn run(name: &str, args: &crate::util::cli::Args) -> Result<()> {
+    match name {
+        "fig1" => fig1::run(args),
+        "fig2" => fig2::run(args),
+        "fig4" => fig4::run(args),
+        "fig7" => fig7::run(args),
+        "fig8" => fig8::run(args),
+        "table2" => table2::run(args),
+        "table3" => table3::run(args),
+        "table5" => table5::run(args),
+        "table6" => table6::run(args),
+        "table7" => table7::run(args),
+        "theory" => theory_check::run(args),
+        other => anyhow::bail!(
+            "unknown experiment `{other}` (try fig1|fig2|fig4|fig7|fig8|table2|table3|table5|table6|table7|theory; table4 is `cargo bench --bench table4_latency`)"
+        ),
+    }
+}

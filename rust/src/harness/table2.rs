@@ -1,0 +1,107 @@
+//! Table II — GSM8K / CoQA fidelity vs retrieval cost for every method,
+//! including CIS at block sizes s ∈ {8, 16, 20} and the budget-matched
+//! CIS* variant.  Accuracy is proxied by argmax agreement with the dense
+//! trajectory; ρ̂ and Comp* follow the paper's definitions.
+
+use anyhow::Result;
+
+use crate::config::{SelectorConfig, SelectorKind};
+use crate::util::cli::Args;
+use crate::workload;
+
+use super::common::{self, Lab, Table};
+use super::fig1::score_cost;
+
+pub fn run(args: &Args) -> Result<()> {
+    let lab = Lab::from_args(args)?;
+    let n_req = args.get_usize("requests");
+    let gen = args.get_usize("gen");
+    let seed = args.get_usize("seed") as u64;
+    let probe = args.get_usize("probe-every");
+    let quick = args.get_bool("quick");
+
+    let vocab = lab.rt.model("small")?.vocab_size;
+    let mut workloads = vec![workload::GSM8K, workload::COQA];
+    if quick {
+        workloads = vec![workload::GSM8K];
+    }
+
+    let mut table = Table::new(
+        "Table II — GSM8K/CoQA fidelity vs retrieval (EM proxied by argmax agreement)",
+        &[
+            "workload", "method", "ρ̂", "agree(EM-proxy)", "top5", "mean_δ",
+            "avg_token", "Comp*",
+        ],
+    );
+
+    for mut spec in workloads {
+        spec.gen_tokens = gen;
+        if quick {
+            spec = workload::scaled(&spec, 384);
+        }
+        let reqs = common::requests(&spec, n_req, vocab, seed);
+        println!("[table2] {}: dense references…", spec.name);
+        let mut dense = lab.dense_engine();
+        let trajs: Vec<_> = reqs
+            .iter()
+            .map(|r| common::reference(&mut dense, r))
+            .collect::<Result<_>>()?;
+
+        let mut rows: Vec<(String, SelectorConfig)> = vec![
+            ("h2o".into(), sel(SelectorKind::H2O)),
+            ("quest".into(), sel(SelectorKind::Quest)),
+            ("ds".into(), sel(SelectorKind::DoubleSparsity)),
+            ("hshare-1".into(), hshare(4)),
+            ("hshare-2".into(), hshare(8)),
+        ];
+        let s_list: &[usize] = if quick { &[8] } else { &[8, 16, 20] };
+        for &s in s_list {
+            rows.push((format!("cis_s{s}"), cis(s, false)));
+        }
+        for &s in s_list {
+            rows.push((format!("cis*_s{s}"), cis(s, true)));
+        }
+        for (name, cfg) in rows {
+            let comp = score_cost(&cfg);
+            let f = common::eval_selector(&lab, cfg, &reqs, &trajs, probe)?;
+            table.row(vec![
+                spec.name.to_string(),
+                name,
+                format!("{:.4}", f.rho_hat),
+                format!("{:.3}", f.argmax_agree),
+                format!("{:.3}", f.top5_agree),
+                format!("{:.4}", f.mean_delta),
+                format!("{:.1}", f.avg_selected),
+                format!("{comp:.4}T"),
+            ]);
+        }
+    }
+    table.save("table2")?;
+    println!("[table2] expectation: CIS ≥ HShare agreement at lower ρ̂ (paper: 40-55% lower complexity at higher accuracy)");
+    Ok(())
+}
+
+fn sel(kind: SelectorKind) -> SelectorConfig {
+    SelectorConfig { kind, ..Default::default() }
+}
+
+fn hshare(stride: usize) -> SelectorConfig {
+    SelectorConfig {
+        kind: SelectorKind::HShare,
+        hshare_stride: stride,
+        ..Default::default()
+    }
+}
+
+fn cis(s: usize, star: bool) -> SelectorConfig {
+    let base = SelectorConfig {
+        kind: SelectorKind::Cis,
+        block_size: s,
+        ..Default::default()
+    };
+    if star {
+        base.star()
+    } else {
+        base
+    }
+}

@@ -1,0 +1,208 @@
+//! Table VI — hyperparameter tuning: CIS (s, τ, r), PSAW (φ, α) and ETF
+//! (ψ, γ) in isolation (prefill-fidelity = the paper's WikiText-PPL
+//! column), and the combined CPE rows.
+
+use anyhow::Result;
+
+use crate::config::{SelectorConfig, SelectorKind};
+use crate::util::cli::Args;
+use crate::util::fx;
+use crate::workload;
+
+use super::common::{self, Lab, Table};
+
+pub fn run(args: &Args) -> Result<()> {
+    let lab = Lab::from_args(args)?;
+    let n_req = args.get_usize("requests");
+    let gen = args.get_usize("gen");
+    let seed = args.get_usize("seed") as u64;
+    let probe = args.get_usize("probe-every");
+    let quick = args.get_bool("quick");
+
+    let vocab = lab.rt.model("small")?.vocab_size;
+    let mut spec = workload::GSM8K;
+    spec.gen_tokens = gen;
+    if quick {
+        spec = workload::scaled(&spec, 384);
+    }
+    let reqs = common::requests(&spec, n_req, vocab, seed);
+    println!("[table6] dense references…");
+    let mut dense = lab.dense_engine();
+    let trajs: Vec<_> = reqs
+        .iter()
+        .map(|r| common::reference(&mut dense, r))
+        .collect::<Result<_>>()?;
+
+    let mut table = Table::new(
+        "Table VI — hyperparameter tuning",
+        &[
+            "method", "s", "τ", "r", "φ/ψ", "α/γ", "ρ̂", "avg_token",
+            "prefill_KL(PPL-proxy)", "agree",
+        ],
+    );
+
+    // --- CIS rows (CIS* budget) -----------------------------------------
+    let cis_rows: Vec<(usize, f32, usize)> = if quick {
+        vec![(8, 0.8, 1)]
+    } else {
+        vec![(4, 0.8, 1), (8, 0.7, 1), (8, 0.8, 2), (32, 0.8, 1)]
+    };
+    for (s, tau, r) in cis_rows {
+        let cfg = SelectorConfig {
+            kind: SelectorKind::Cis,
+            block_size: s,
+            sim_threshold: tau,
+            dilate_radius: r,
+            ..SelectorConfig::default().star()
+        };
+        let f = common::eval_selector(&lab, cfg, &reqs, &trajs, probe)?;
+        table.row(vec![
+            "CIS".into(),
+            s.to_string(),
+            format!("{tau}"),
+            r.to_string(),
+            "-".into(),
+            "-".into(),
+            format!("{:.4}", f.rho_hat),
+            format!("{:.1}", f.avg_selected),
+            "-".into(),
+            format!("{:.3}", f.argmax_agree),
+        ]);
+    }
+
+    // --- PSAW / ETF in isolation: prefill fidelity ----------------------
+    let psaw_rows: Vec<(f32, f32)> =
+        if quick { vec![(0.7, 1.0)] } else { vec![(0.5, 1.0), (0.7, 1.5)] };
+    for (phi, alpha) in psaw_rows {
+        let kl = prefill_kl(&lab, &reqs, Some((phi, alpha)), None)?;
+        table.row(vec![
+            "PSAW".into(),
+            "-".into(),
+            "-".into(),
+            "-".into(),
+            format!("{phi}"),
+            format!("{alpha}"),
+            "-".into(),
+            "-".into(),
+            format!("{kl:.4}"),
+            "-".into(),
+        ]);
+    }
+    let etf_rows: Vec<(f32, f32)> =
+        if quick { vec![(0.5, 1.5)] } else { vec![(0.5, 1.5), (0.4, 1.0)] };
+    for (psi, gamma) in etf_rows {
+        let kl = prefill_kl(&lab, &reqs, None, Some((psi, gamma)))?;
+        table.row(vec![
+            "ETF".into(),
+            "-".into(),
+            "-".into(),
+            "-".into(),
+            format!("{psi}"),
+            format!("{gamma}"),
+            "-".into(),
+            "-".into(),
+            format!("{kl:.4}"),
+            "-".into(),
+        ]);
+    }
+
+    // --- combined CPE ----------------------------------------------------
+    let cpe_rows: Vec<(usize, usize)> =
+        if quick { vec![(8, 1)] } else { vec![(8, 2), (32, 1)] };
+    for (s, r) in cpe_rows {
+        let cfg = SelectorConfig {
+            kind: SelectorKind::Cpe,
+            block_size: s,
+            dilate_radius: r,
+            psaw_enabled: true,
+            etf_enabled: true,
+            psaw_phi: 0.7,
+            psaw_alpha: 1.0,
+            etf_psi: 0.5,
+            etf_gamma: 1.0,
+            ..SelectorConfig::default()
+        };
+        let kl = prefill_kl(&lab, &reqs, Some((0.7, 1.0)), Some((0.5, 1.0)))?;
+        let f = common::eval_selector(&lab, cfg, &reqs, &trajs, probe)?;
+        table.row(vec![
+            "CPE".into(),
+            s.to_string(),
+            "0.8".into(),
+            r.to_string(),
+            "0.7/0.5".into(),
+            "1/1".into(),
+            format!("{:.4}", f.rho_hat),
+            format!("{:.1}", f.avg_selected),
+            format!("{kl:.4}"),
+            format!("{:.3}", f.argmax_agree),
+        ]);
+    }
+    table.save("table6")?;
+    println!("[table6] expectation: s dominates efficiency; r=2 inflates avg_token with little gain; PSAW/ETF KL small (paper Table VI)");
+    Ok(())
+}
+
+/// Prefill-fidelity proxy for the paper's prefill-only WikiText PPL:
+/// symmetric KL between prompt-end next-token distributions with the
+/// schedule on vs off.
+fn prefill_kl(
+    lab: &Lab,
+    reqs: &[crate::workload::Request],
+    psaw: Option<(f32, f32)>,
+    etf: Option<(f32, f32)>,
+) -> Result<f64> {
+    let mk = |on: bool| -> SelectorConfig {
+        let mut c = SelectorConfig { kind: SelectorKind::Dense, ..Default::default() };
+        if on {
+            if let Some((phi, alpha)) = psaw {
+                c.psaw_enabled = true;
+                c.psaw_phi = phi;
+                c.psaw_alpha = alpha;
+            }
+            if let Some((psi, gamma)) = etf {
+                c.etf_enabled = true;
+                c.etf_psi = psi;
+                c.etf_gamma = gamma;
+            }
+        }
+        c
+    };
+    let mut base = lab.engine(mk(false));
+    let mut pruned = lab.engine(mk(true));
+    let mut total = 0.0;
+    for req in reqs {
+        let la = prompt_logits(&mut base, req)?;
+        let lb = prompt_logits(&mut pruned, req)?;
+        total += sym_kl(&la, &lb);
+    }
+    Ok(total / reqs.len().max(1) as f64)
+}
+
+fn prompt_logits(
+    engine: &mut crate::model::Engine,
+    req: &crate::workload::Request,
+) -> Result<Vec<f32>> {
+    // Prefill-only measurement (the paper's "PPL measured only during the
+    // prefilling stage"): compare the prompt-end logits directly — at the
+    // top layer PSAW only perturbs the final hidden state, not the KV
+    // caches, so a post-prefill decode step would mask the effect.
+    let mut seq = engine.new_sequence(9, req.prompt.clone());
+    seq.max_new = 1;
+    engine.prefill(&mut seq)?;
+    let l = seq.last_logits.clone();
+    engine.release(&mut seq);
+    Ok(l)
+}
+
+fn sym_kl(a: &[f32], b: &[f32]) -> f64 {
+    let mut pa = a.to_vec();
+    let mut pb = b.to_vec();
+    fx::softmax(&mut pa);
+    fx::softmax(&mut pb);
+    let mut kl = 0.0f64;
+    for (x, y) in pa.iter().zip(&pb) {
+        let (x, y) = (*x as f64 + 1e-12, *y as f64 + 1e-12);
+        kl += x * (x / y).ln() + y * (y / x).ln();
+    }
+    kl / 2.0
+}

@@ -1,0 +1,73 @@
+//! Table VII — similarity-space ablation for CIS: cosine gating on query
+//! vs key vs hidden representations (paper: query space is best; hidden
+//! worst).
+
+use anyhow::Result;
+
+use crate::config::{SelectorConfig, SelectorKind, SimSpace};
+use crate::util::cli::Args;
+use crate::workload;
+
+use super::common::{self, Lab, Table};
+
+pub fn run(args: &Args) -> Result<()> {
+    let lab = Lab::from_args(args)?;
+    let n_req = args.get_usize("requests");
+    let gen = args.get_usize("gen");
+    let seed = args.get_usize("seed") as u64;
+    let probe = args.get_usize("probe-every");
+    let quick = args.get_bool("quick");
+
+    let vocab = lab.rt.model("small")?.vocab_size;
+    let mut workloads = vec![workload::GSM8K, workload::COQA];
+    if quick {
+        workloads.truncate(1);
+    }
+
+    let mut table = Table::new(
+        "Table VII — CIS similarity-space ablation (CIS* config)",
+        &["workload", "space", "s", "ρ̂", "agree", "mean_δ"],
+    );
+    for mut spec in workloads {
+        spec.gen_tokens = gen;
+        if quick {
+            spec = workload::scaled(&spec, 384);
+        }
+        let reqs = common::requests(&spec, n_req, vocab, seed);
+        println!("[table7] {}: dense references…", spec.name);
+        let mut dense = lab.dense_engine();
+        let trajs: Vec<_> = reqs
+            .iter()
+            .map(|r| common::reference(&mut dense, r))
+            .collect::<Result<_>>()?;
+        let spaces = [
+            ("query", SimSpace::Query),
+            ("key", SimSpace::Key),
+            ("hidden", SimSpace::Hidden),
+        ];
+        let s_list: &[usize] = if quick { &[8] } else { &[8, 16] };
+        for &s in s_list {
+            for (name, space) in spaces {
+                let cfg = SelectorConfig {
+                    kind: SelectorKind::Cis,
+                    block_size: s,
+                    sim_space: space,
+                    ..SelectorConfig::default().star()
+                };
+                let f =
+                    common::eval_selector(&lab, cfg, &reqs, &trajs, probe)?;
+                table.row(vec![
+                    spec.name.to_string(),
+                    name.to_string(),
+                    s.to_string(),
+                    format!("{:.4}", f.rho_hat),
+                    format!("{:.3}", f.argmax_agree),
+                    format!("{:.4}", f.mean_delta),
+                ]);
+            }
+        }
+    }
+    table.save("table7")?;
+    println!("[table7] expectation: query-space gating ≥ key ≥ hidden (paper Table VII)");
+    Ok(())
+}

@@ -1,0 +1,459 @@
+//! Paged KV-cache manager (vLLM-style) owned by the L3 coordinator.
+//!
+//! Keys/values live in host memory in fixed-size pages drawn from a shared
+//! pool; each sequence holds a per-layer page table.  The coordinator
+//! gathers a selector's index set into a contiguous staging tile
+//! ([B, H, N_sel, d]) which is what the TSA executable consumes — so the
+//! bandwidth touched per step scales with N_sel, not context length (the
+//! paper's core saving; DESIGN.md §2).
+//!
+//! Keys are stored *post-RoPE* (positions are baked in at append time by
+//! the L2 graph), so gathers need no re-rotation.
+
+use anyhow::{anyhow, Result};
+
+/// Shared page pool.  One page stores `n_heads * page_len * head_dim` f32
+/// for keys and the same for values (a K page and V page are allocated as
+/// one unit to halve page-table overhead).
+pub struct PagePool {
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub page_len: usize,
+    k_pages: Vec<Box<[f32]>>,
+    v_pages: Vec<Box<[f32]>>,
+    free: Vec<usize>,
+}
+
+impl PagePool {
+    pub fn new(n_heads: usize, head_dim: usize, page_len: usize) -> Self {
+        PagePool {
+            n_heads,
+            head_dim,
+            page_len,
+            k_pages: Vec::new(),
+            v_pages: Vec::new(),
+            free: Vec::new(),
+        }
+    }
+
+    fn page_elems(&self) -> usize {
+        self.n_heads * self.page_len * self.head_dim
+    }
+
+    pub fn allocated_pages(&self) -> usize {
+        self.k_pages.len()
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn in_use_pages(&self) -> usize {
+        self.k_pages.len() - self.free.len()
+    }
+
+    fn alloc(&mut self) -> usize {
+        if let Some(id) = self.free.pop() {
+            return id;
+        }
+        let n = self.page_elems();
+        self.k_pages.push(vec![0f32; n].into_boxed_slice());
+        self.v_pages.push(vec![0f32; n].into_boxed_slice());
+        self.k_pages.len() - 1
+    }
+
+    fn release(&mut self, id: usize) {
+        debug_assert!(!self.free.contains(&id), "double free of page {id}");
+        self.free.push(id);
+    }
+
+    /// Row offset of (head, slot) inside a page.
+    #[inline]
+    fn row(&self, head: usize, slot: usize) -> usize {
+        (head * self.page_len + slot) * self.head_dim
+    }
+}
+
+/// Per-sequence, per-layer paged KV cache.
+pub struct SeqKvCache {
+    pub n_layers: usize,
+    len: usize,
+    /// page ids per layer, in position order.
+    tables: Vec<Vec<usize>>,
+}
+
+impl SeqKvCache {
+    pub fn new(n_layers: usize) -> Self {
+        SeqKvCache { n_layers, len: 0, tables: vec![Vec::new(); n_layers] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Append one token's K/V for `layer`. `k`/`v` are `[n_heads * d]`
+    /// head-major rows.  The position index is implicit (`self.len` after
+    /// the *last* layer's append advances it via `commit_token`).
+    pub fn append(
+        &mut self,
+        pool: &mut PagePool,
+        layer: usize,
+        k: &[f32],
+        v: &[f32],
+    ) -> Result<()> {
+        let d = pool.head_dim;
+        let h = pool.n_heads;
+        if k.len() != h * d || v.len() != h * d {
+            return Err(anyhow!(
+                "append: expected {} floats, got k={} v={}",
+                h * d,
+                k.len(),
+                v.len()
+            ));
+        }
+        let pos = self.len;
+        let (pi, slot) = (pos / pool.page_len, pos % pool.page_len);
+        while self.tables[layer].len() <= pi {
+            let id = pool.alloc();
+            self.tables[layer].push(id);
+        }
+        let page_id = self.tables[layer][pi];
+        for head in 0..h {
+            let off = pool.row(head, slot);
+            pool.k_pages[page_id][off..off + d]
+                .copy_from_slice(&k[head * d..(head + 1) * d]);
+            pool.v_pages[page_id][off..off + d]
+                .copy_from_slice(&v[head * d..(head + 1) * d]);
+        }
+        Ok(())
+    }
+
+    /// Advance the sequence length after all layers appended position
+    /// `self.len`.
+    pub fn commit_token(&mut self) {
+        self.len += 1;
+    }
+
+    /// Bulk-load a prefill result: `k`/`v` are `[n_layers, H, L, d]`
+    /// row-major with `length` valid positions.
+    pub fn load_prefill(
+        &mut self,
+        pool: &mut PagePool,
+        k: &[f32],
+        v: &[f32],
+        l_max: usize,
+        length: usize,
+    ) -> Result<()> {
+        let (h, d) = (pool.n_heads, pool.head_dim);
+        if k.len() != self.n_layers * h * l_max * d {
+            return Err(anyhow!("load_prefill: bad k size"));
+        }
+        for pos in 0..length {
+            for layer in 0..self.n_layers {
+                let mut krow = vec![0f32; h * d];
+                let mut vrow = vec![0f32; h * d];
+                for head in 0..h {
+                    let src = ((layer * h + head) * l_max + pos) * d;
+                    krow[head * d..(head + 1) * d]
+                        .copy_from_slice(&k[src..src + d]);
+                    vrow[head * d..(head + 1) * d]
+                        .copy_from_slice(&v[src..src + d]);
+                }
+                self.append(pool, layer, &krow, &vrow)?;
+            }
+            self.commit_token();
+        }
+        Ok(())
+    }
+
+    /// Key row accessor (selectors use this for Quest summaries / DS
+    /// channel scoring / similarity ablations).
+    pub fn key<'p>(
+        &self,
+        pool: &'p PagePool,
+        layer: usize,
+        head: usize,
+        pos: usize,
+    ) -> &'p [f32] {
+        debug_assert!(pos < self.len);
+        let (pi, slot) = (pos / pool.page_len, pos % pool.page_len);
+        let page = &pool.k_pages[self.tables[layer][pi]];
+        let off = pool.row(head, slot);
+        &page[off..off + pool.head_dim]
+    }
+
+    pub fn value<'p>(
+        &self,
+        pool: &'p PagePool,
+        layer: usize,
+        head: usize,
+        pos: usize,
+    ) -> &'p [f32] {
+        let (pi, slot) = (pos / pool.page_len, pos % pool.page_len);
+        let page = &pool.v_pages[self.tables[layer][pi]];
+        let off = pool.row(head, slot);
+        &page[off..off + pool.head_dim]
+    }
+
+    /// Gather `indices` rows of (K, V) for (layer, head) into `out_k` /
+    /// `out_v` (each `indices.len() * d` floats) — the hot-path staging
+    /// step feeding the TSA executable.
+    pub fn gather(
+        &self,
+        pool: &PagePool,
+        layer: usize,
+        head: usize,
+        indices: &[usize],
+        out_k: &mut [f32],
+        out_v: &mut [f32],
+    ) {
+        let d = pool.head_dim;
+        debug_assert!(out_k.len() >= indices.len() * d);
+        for (i, &pos) in indices.iter().enumerate() {
+            let (pi, slot) = (pos / pool.page_len, pos % pool.page_len);
+            let page_id = self.tables[layer][pi];
+            let off = pool.row(head, slot);
+            out_k[i * d..(i + 1) * d]
+                .copy_from_slice(&pool.k_pages[page_id][off..off + d]);
+            out_v[i * d..(i + 1) * d]
+                .copy_from_slice(&pool.v_pages[page_id][off..off + d]);
+        }
+    }
+
+    /// Densely export `[H, len, d]` K and V for one layer (retrieval /
+    /// dense-baseline path; bandwidth ∝ L by design — this is the cost the
+    /// paper's sparsity avoids).
+    pub fn export_dense(
+        &self,
+        pool: &PagePool,
+        layer: usize,
+        l_max: usize,
+        out_k: &mut [f32],
+        out_v: &mut [f32],
+    ) {
+        let (h, d) = (pool.n_heads, pool.head_dim);
+        debug_assert!(out_k.len() >= h * l_max * d);
+        let n = self.len.min(l_max);
+        // Per-(head, page) chunk copies: within a page, a head's rows are
+        // contiguous, so the inner loop is one memcpy of up to
+        // page_len*d floats (perf log §Perf item 2).
+        for head in 0..h {
+            let mut pos = 0usize;
+            while pos < n {
+                let pi = pos / pool.page_len;
+                let slot = pos % pool.page_len;
+                let run = (pool.page_len - slot).min(n - pos);
+                let page_id = self.tables[layer][pi];
+                let off = pool.row(head, slot);
+                let dst = (head * l_max + pos) * d;
+                out_k[dst..dst + run * d].copy_from_slice(
+                    &pool.k_pages[page_id][off..off + run * d],
+                );
+                out_v[dst..dst + run * d].copy_from_slice(
+                    &pool.v_pages[page_id][off..off + run * d],
+                );
+                pos += run;
+            }
+        }
+    }
+
+    /// Release all pages back to the pool (sequence finished).
+    pub fn release(&mut self, pool: &mut PagePool) {
+        for table in &mut self.tables {
+            for id in table.drain(..) {
+                pool.release(id);
+            }
+        }
+        self.len = 0;
+    }
+
+    pub fn pages_held(&self) -> usize {
+        self.tables.iter().map(Vec::len).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{gen, Prop};
+    use crate::util::rng::Rng;
+
+    fn mk(n_layers: usize) -> (PagePool, SeqKvCache) {
+        (PagePool::new(2, 4, 8), SeqKvCache::new(n_layers))
+    }
+
+    fn row(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    #[test]
+    fn append_then_read_roundtrip() {
+        let (mut pool, mut c) = mk(2);
+        let mut rng = Rng::new(1);
+        let mut rows = Vec::new();
+        for _t in 0..20 {
+            let (k0, v0) = (row(&mut rng, 8), row(&mut rng, 8));
+            let (k1, v1) = (row(&mut rng, 8), row(&mut rng, 8));
+            c.append(&mut pool, 0, &k0, &v0).unwrap();
+            c.append(&mut pool, 1, &k1, &v1).unwrap();
+            c.commit_token();
+            rows.push((k0, v0, k1, v1));
+        }
+        assert_eq!(c.len(), 20);
+        for (t, (k0, v0, k1, v1)) in rows.iter().enumerate() {
+            for h in 0..2 {
+                assert_eq!(c.key(&pool, 0, h, t), &k0[h * 4..(h + 1) * 4]);
+                assert_eq!(c.value(&pool, 0, h, t), &v0[h * 4..(h + 1) * 4]);
+                assert_eq!(c.key(&pool, 1, h, t), &k1[h * 4..(h + 1) * 4]);
+                assert_eq!(c.value(&pool, 1, h, t), &v1[h * 4..(h + 1) * 4]);
+            }
+        }
+    }
+
+    #[test]
+    fn gather_matches_key_accessor() {
+        let (mut pool, mut c) = mk(1);
+        let mut rng = Rng::new(2);
+        for _ in 0..30 {
+            c.append(&mut pool, 0, &row(&mut rng, 8), &row(&mut rng, 8))
+                .unwrap();
+            c.commit_token();
+        }
+        let idx = [0usize, 7, 8, 15, 16, 29];
+        let mut gk = vec![0f32; idx.len() * 4];
+        let mut gv = vec![0f32; idx.len() * 4];
+        c.gather(&pool, 0, 1, &idx, &mut gk, &mut gv);
+        for (i, &p) in idx.iter().enumerate() {
+            assert_eq!(&gk[i * 4..(i + 1) * 4], c.key(&pool, 0, 1, p));
+            assert_eq!(&gv[i * 4..(i + 1) * 4], c.value(&pool, 0, 1, p));
+        }
+    }
+
+    #[test]
+    fn export_dense_layout() {
+        let (mut pool, mut c) = mk(1);
+        let mut rng = Rng::new(3);
+        for _ in 0..10 {
+            c.append(&mut pool, 0, &row(&mut rng, 8), &row(&mut rng, 8))
+                .unwrap();
+            c.commit_token();
+        }
+        let l_max = 16;
+        let mut k = vec![0f32; 2 * l_max * 4];
+        let mut v = vec![0f32; 2 * l_max * 4];
+        c.export_dense(&pool, 0, l_max, &mut k, &mut v);
+        for h in 0..2 {
+            for p in 0..10 {
+                let dst = (h * l_max + p) * 4;
+                assert_eq!(&k[dst..dst + 4], c.key(&pool, 0, h, p));
+            }
+            // padding stays zero
+            let dst = (h * l_max + 12) * 4;
+            assert_eq!(&k[dst..dst + 4], &[0.0; 4]);
+        }
+    }
+
+    #[test]
+    fn release_returns_pages_and_reuse() {
+        let (mut pool, mut c) = mk(2);
+        let mut rng = Rng::new(4);
+        for _ in 0..17 {
+            for l in 0..2 {
+                c.append(&mut pool, l, &row(&mut rng, 8), &row(&mut rng, 8))
+                    .unwrap();
+            }
+            c.commit_token();
+        }
+        // 17 tokens, page_len 8 → 3 pages per layer → 6 pages.
+        assert_eq!(pool.in_use_pages(), 6);
+        c.release(&mut pool);
+        assert_eq!(pool.in_use_pages(), 0);
+        assert_eq!(pool.free_pages(), 6);
+        // A new sequence reuses freed pages without growing the pool.
+        let mut c2 = SeqKvCache::new(2);
+        for _ in 0..8 {
+            for l in 0..2 {
+                c2.append(&mut pool, l, &row(&mut rng, 8), &row(&mut rng, 8))
+                    .unwrap();
+            }
+            c2.commit_token();
+        }
+        assert_eq!(pool.allocated_pages(), 6);
+    }
+
+    #[test]
+    fn append_size_mismatch_errors() {
+        let (mut pool, mut c) = mk(1);
+        assert!(c.append(&mut pool, 0, &[0.0; 3], &[0.0; 8]).is_err());
+    }
+
+    #[test]
+    fn prop_pool_accounting_never_leaks() {
+        // Invariant: pages_held(seqs) == in_use_pages(pool) across a random
+        // schedule of appends and releases.
+        Prop::new(30, 0xCACE).forall(
+            |rng| {
+                let n_seqs = gen::usize_in(rng, 1, 5);
+                let ops: Vec<(usize, bool)> = (0..40)
+                    .map(|_| (rng.below(n_seqs), rng.f32() < 0.15))
+                    .collect();
+                (n_seqs, ops)
+            },
+            |(n_seqs, ops)| {
+                let mut pool = PagePool::new(2, 4, 4);
+                let mut seqs: Vec<SeqKvCache> =
+                    (0..*n_seqs).map(|_| SeqKvCache::new(2)).collect();
+                let mut rng = Rng::new(9);
+                for &(s, is_release) in ops {
+                    if is_release {
+                        seqs[s].release(&mut pool);
+                    } else {
+                        for l in 0..2 {
+                            let k = row(&mut rng, 8);
+                            let v = row(&mut rng, 8);
+                            seqs[s].append(&mut pool, l, &k, &v).unwrap();
+                        }
+                        seqs[s].commit_token();
+                    }
+                    let held: usize =
+                        seqs.iter().map(SeqKvCache::pages_held).sum();
+                    if held != pool.in_use_pages() {
+                        return Err(format!(
+                            "held {held} != in_use {}",
+                            pool.in_use_pages()
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn load_prefill_roundtrip() {
+        let (mut pool, mut c) = mk(2);
+        let (h, d, l_max, len) = (2, 4, 8, 5);
+        let mut rng = Rng::new(5);
+        let k: Vec<f32> =
+            (0..2 * h * l_max * d).map(|_| rng.normal()).collect();
+        let v: Vec<f32> =
+            (0..2 * h * l_max * d).map(|_| rng.normal()).collect();
+        c.load_prefill(&mut pool, &k, &v, l_max, len).unwrap();
+        assert_eq!(c.len(), len);
+        for layer in 0..2 {
+            for head in 0..h {
+                for pos in 0..len {
+                    let src = ((layer * h + head) * l_max + pos) * d;
+                    assert_eq!(
+                        c.key(&pool, layer, head, pos),
+                        &k[src..src + d]
+                    );
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,31 @@
+//! # PrHS / CPE — Near-Oracle KV Selection via Pre-hoc Sparsity
+//!
+//! Reproduction of "Near-Oracle KV Selection via Pre-hoc Sparsity for
+//! Long-Context Inference" (CS.LG 2026) as a three-layer Rust + JAX +
+//! Pallas serving stack:
+//!
+//! * **L3 (this crate)** — serving coordinator: request batching, paged KV
+//!   cache, the PrHS selector engine (CIS / PSAW / ETF = CPE) and all PoHS
+//!   baselines (H2O, StreamingLLM, Quest, Double Sparsity, HShare, top-k
+//!   oracle), PJRT runtime, metrics, harnesses for every paper table and
+//!   figure.
+//! * **L2 (python/compile/model.py, build-time)** — JAX decoder stages
+//!   lowered to HLO text by `make artifacts`.
+//! * **L1 (python/compile/kernels/tsa.py, build-time)** — Pallas TSA
+//!   kernel (interpret mode for CPU-PJRT execution).
+//!
+//! Python never runs on the request path; the rust binary is
+//! self-contained once `artifacts/` is built.
+
+pub mod config;
+pub mod coordinator;
+pub mod harness;
+pub mod kvcache;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod selector;
+pub mod server;
+pub mod theory;
+pub mod util;
+pub mod workload;

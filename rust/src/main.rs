@@ -1,0 +1,187 @@
+//! prhs — CLI entry for the PrHS/CPE serving stack.
+//!
+//! Subcommands:
+//!   serve    run the engine thread + submit a synthetic workload
+//!   run      one-shot generation for a synthetic prompt
+//!   harness  regenerate a paper table/figure (fig1|fig2|...|table7)
+//!   info     print manifest/artifact summary
+
+use anyhow::Result;
+use prhs::config::{EngineConfig, SelectorKind};
+use prhs::coordinator::RequestIn;
+use prhs::model::Engine;
+use prhs::util::cli::Cli;
+use prhs::util::rng::Rng;
+use prhs::workload;
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let (sub, rest) = match argv.split_first() {
+        Some((s, r)) => (s.clone(), r.to_vec()),
+        None => {
+            eprintln!("usage: prhs <serve|run|harness|info> [flags]  (--help per subcommand)");
+            std::process::exit(2);
+        }
+    };
+    match sub.as_str() {
+        "info" => info(&rest),
+        "run" => run_once(&rest),
+        "serve" => serve(&rest),
+        "harness" => harness(&rest),
+        other => {
+            eprintln!("unknown subcommand `{other}`");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn base_cli(name: &'static str, about: &'static str) -> Cli {
+    Cli::new(name, about)
+        .flag("artifacts", "artifacts", "artifacts directory")
+        .flag("model", "small", "model name from the manifest")
+        .flag("selector", "cis", "dense|oracle|h2o|streaming|quest|ds|hshare|cis|cpe")
+        .flag("block-size", "8", "CIS/HShare share-block size s")
+        .flag("sim-threshold", "0.8", "CIS cosine gate τ")
+        .flag("gen", "32", "decode steps per request")
+        .flag("seed", "7", "workload seed")
+}
+
+fn engine_from(args: &prhs::util::cli::Args) -> Result<Engine> {
+    let mut cfg = EngineConfig::default();
+    cfg.artifacts_dir = args.get("artifacts").to_string();
+    cfg.model = args.get("model").to_string();
+    cfg.selector.kind = SelectorKind::parse(args.get("selector"))
+        .ok_or_else(|| anyhow::anyhow!("bad --selector"))?;
+    cfg.selector.block_size = args.get_usize("block-size");
+    cfg.selector.sim_threshold = args.get_f64("sim-threshold") as f32;
+    cfg.max_new_tokens = args.get_usize("gen");
+    if cfg.selector.kind == SelectorKind::Cpe {
+        cfg.selector.psaw_enabled = true;
+        cfg.selector.etf_enabled = true;
+    }
+    Engine::new(cfg)
+}
+
+fn info(rest: &[String]) -> Result<()> {
+    let cli = Cli::new("prhs info", "print manifest summary")
+        .flag("artifacts", "artifacts", "artifacts directory");
+    let args = cli.parse(rest).map_err(anyhow::Error::msg)?;
+    let m = prhs::runtime::Manifest::load(args.get("artifacts"))?;
+    for (name, mm) in &m.models {
+        println!(
+            "model {name}: {} layers, d_model {}, {} heads x d{}, vocab {}",
+            mm.n_layers, mm.d_model, mm.n_heads, mm.head_dim, mm.vocab_size
+        );
+        println!("  {} artifacts, {} weights", mm.artifacts.len(), mm.weights.len());
+        for stage in ["layer_step", "layer_step_dense", "prefill", "attn_tsa_xla", "attn_tsa_pallas", "attn_dense"] {
+            let n = mm.artifacts.iter().filter(|a| a.stage == stage).count();
+            if n > 0 {
+                println!("    {stage}: {n}");
+            }
+        }
+    }
+    Ok(())
+}
+
+fn run_once(rest: &[String]) -> Result<()> {
+    let cli = base_cli("prhs run", "one-shot generation on a synthetic prompt")
+        .flag("prompt-len", "448", "synthetic prompt length");
+    let args = cli.parse(rest).map_err(anyhow::Error::msg)?;
+    let mut engine = engine_from(&args)?;
+    let mut rng = Rng::new(args.get_usize("seed") as u64);
+    let spec = workload::scaled(&workload::GSM8K, args.get_usize("prompt-len"));
+    let req = workload::generate(&spec, engine.mm.vocab_size, &mut rng);
+    let mut seq = engine.new_sequence(0, req.prompt.clone());
+    seq.max_new = args.get_usize("gen");
+    let t0 = std::time::Instant::now();
+    let out = engine.generate(&mut seq)?;
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "selector={} prompt={} generated={} tokens in {:.2}s ({:.1} tok/s)",
+        args.get("selector"), req.prompt.len(), out.len(), dt,
+        out.len() as f64 / dt
+    );
+    println!(
+        "ρ̂={:.4} avg_selected={:.1}",
+        engine.retrieval_ratio(&seq, out.len() as u64),
+        engine.stats.avg_selected()
+    );
+    println!("tokens: {:?}...", &out[..out.len().min(16)]);
+    Ok(())
+}
+
+fn serve(rest: &[String]) -> Result<()> {
+    let cli = base_cli("prhs serve", "serve a synthetic batched workload")
+        .flag("requests", "8", "number of requests")
+        .flag("batch", "8", "max concurrent batch")
+        .flag("prompt-len", "448", "synthetic prompt length");
+    let args = cli.parse(rest).map_err(anyhow::Error::msg)?;
+    let mut cfg = EngineConfig::default();
+    cfg.artifacts_dir = args.get("artifacts").to_string();
+    cfg.model = args.get("model").to_string();
+    cfg.selector.kind = SelectorKind::parse(args.get("selector"))
+        .ok_or_else(|| anyhow::anyhow!("bad --selector"))?;
+    cfg.selector.block_size = args.get_usize("block-size");
+    cfg.max_new_tokens = args.get_usize("gen");
+    cfg.max_batch = args.get_usize("batch");
+    // vocab comes from the manifest (read it without building an engine)
+    let vocab = prhs::runtime::Manifest::load(args.get("artifacts"))?
+        .model(&cfg.model)?
+        .vocab_size;
+    let server = prhs::server::Server::spawn_with_config(cfg, 64);
+    let client = server.client();
+
+    let mut rng = Rng::new(args.get_usize("seed") as u64);
+    let spec = workload::scaled(&workload::GSM8K, args.get_usize("prompt-len"));
+    let n = args.get_usize("requests");
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = (0..n as u64)
+        .map(|id| {
+            let req = workload::generate(&spec, vocab, &mut rng);
+            client
+                .submit(RequestIn {
+                    id,
+                    prompt: req.prompt,
+                    max_new_tokens: args.get_usize("gen"),
+                })
+                .expect("submit")
+        })
+        .collect();
+    let mut total_tokens = 0usize;
+    for rx in rxs {
+        let out = rx.recv()?;
+        total_tokens += out.tokens.len();
+        println!(
+            "req {}: {} tokens, prefill {:.1} ms, ρ̂ {:.4}",
+            out.id, out.tokens.len(), out.prefill_us / 1e3, out.rho_hat
+        );
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "served {n} requests / {total_tokens} tokens in {dt:.2}s → {:.1} tok/s",
+        total_tokens as f64 / dt
+    );
+    server.shutdown()?;
+    Ok(())
+}
+
+fn harness(rest: &[String]) -> Result<()> {
+    let (name, flags) = match rest.split_first() {
+        Some((n, f)) if !n.starts_with("--") => (n.clone(), f.to_vec()),
+        _ => {
+            eprintln!("usage: prhs harness <fig1|fig2|fig4|fig7|fig8|table2|table3|table5|table6|table7> [flags]");
+            std::process::exit(2);
+        }
+    };
+    let cli = Cli::new("prhs harness", "regenerate a paper table/figure")
+        .flag("artifacts", "artifacts", "artifacts directory")
+        .flag("requests", "2", "requests per workload")
+        .flag("gen", "24", "decode steps per request")
+        .flag("seed", "7", "workload seed")
+        .flag("probe-every", "4", "fidelity probe period")
+        .flag("scale", "0.5", "context-length scale for long workloads")
+        .flag("batch", "8", "batch size (table5)")
+        .switch("quick", "smaller sweep");
+    let args = cli.parse(&flags).map_err(anyhow::Error::msg)?;
+    prhs::harness::run(&name, &args)
+}

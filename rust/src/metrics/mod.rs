@@ -1,0 +1,131 @@
+//! Serving metrics: latency histograms, throughput counters, retrieval
+//! ratio (ρ̂) tracking, and the analytic FLOP model used by the
+//! efficiency harnesses.
+
+use std::time::Duration;
+
+/// Streaming latency histogram with exact percentile queries over a
+/// bounded reservoir (fine for harness-scale runs).
+#[derive(Clone, Debug, Default)]
+pub struct Histogram {
+    samples_us: Vec<f64>,
+}
+
+impl Histogram {
+    pub fn record(&mut self, d: Duration) {
+        self.samples_us.push(d.as_secs_f64() * 1e6);
+    }
+
+    pub fn record_us(&mut self, us: f64) {
+        self.samples_us.push(us);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_us.len()
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        self.samples_us.iter().sum::<f64>() / self.samples_us.len() as f64
+    }
+
+    pub fn percentile_us(&self, p: f64) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.samples_us.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((s.len() as f64 - 1.0) * p / 100.0).round() as usize;
+        s[idx]
+    }
+}
+
+/// Attention FLOP model (per decode step, per layer, per sequence).
+/// Score + aggregate FLOPs for n attended entries with head dim d and H
+/// heads: 2·H·n·d (QKᵀ) + 2·H·n·d (PV) = 4·H·n·d.
+pub fn attn_flops(n_attended: usize, n_heads: usize, head_dim: usize) -> u64 {
+    4 * n_heads as u64 * n_attended as u64 * head_dim as u64
+}
+
+/// Retrieval (full-scoring) FLOPs: 2·H·L·d per scoring pass, scaled by the
+/// selector's surrogate cost factor (e.g. DS scores r of d channels).
+pub fn retrieval_flops(
+    l_context: usize,
+    n_heads: usize,
+    head_dim: usize,
+    cost_factor: f64,
+) -> u64 {
+    (2.0 * n_heads as f64 * l_context as f64 * head_dim as f64 * cost_factor)
+        as u64
+}
+
+/// Aggregated per-run serving metrics.
+#[derive(Clone, Debug, Default)]
+pub struct RunMetrics {
+    pub prefill_lat: Histogram,
+    pub step_lat: Histogram,
+    pub tokens_out: u64,
+    pub wall_s: f64,
+    pub retrievals: u64,
+    pub head_steps: u64,
+}
+
+impl RunMetrics {
+    pub fn throughput_tps(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            return 0.0;
+        }
+        self.tokens_out as f64 / self.wall_s
+    }
+
+    pub fn rho_hat(&self) -> f64 {
+        if self.head_steps == 0 {
+            return 0.0;
+        }
+        self.retrievals as f64 / self.head_steps as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_percentiles() {
+        let mut h = Histogram::default();
+        for i in 1..=100 {
+            h.record_us(i as f64);
+        }
+        assert_eq!(h.count(), 100);
+        assert!((h.mean_us() - 50.5).abs() < 1e-9);
+        assert!((h.percentile_us(50.0) - 50.0).abs() <= 1.0);
+        assert!((h.percentile_us(99.0) - 99.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn flop_model_ratios() {
+        // sparse/dense attention FLOP ratio == n/L
+        let dense = attn_flops(4096, 8, 64);
+        let sparse = attn_flops(128, 8, 64);
+        assert!((sparse as f64 / dense as f64 - 128.0 / 4096.0).abs() < 1e-9);
+        // DS retrieval at r/d = 1/16 costs 1/16 of a dense pass
+        let full = retrieval_flops(1024, 8, 64, 1.0);
+        let ds = retrieval_flops(1024, 8, 64, 1.0 / 16.0);
+        assert_eq!(ds * 16, full);
+    }
+
+    #[test]
+    fn run_metrics_rates() {
+        let m = RunMetrics {
+            tokens_out: 100,
+            wall_s: 2.0,
+            retrievals: 8,
+            head_steps: 64,
+            ..Default::default()
+        };
+        assert_eq!(m.throughput_tps(), 50.0);
+        assert_eq!(m.rho_hat(), 0.125);
+    }
+}

@@ -1,0 +1,777 @@
+//! The serving engine: orchestrates AOT PJRT executables (embed →
+//! layer_step[_dense] × n_layers → lm_head) around the paged KV cache and
+//! the per-sequence KV selector.  This is the L3 hot path — python never
+//! runs here.
+//!
+//! Execution paths per (step, layer), chosen by the selector's plan:
+//!   * `DenseOnly`   — dense attention artifact; its outputs are used
+//!                     directly (dense baseline).
+//!   * `Retrieve`    — dense artifact for full scoring (charged to the
+//!                     retrieving heads), probs fed back to the selector,
+//!                     then the sparse TSA artifact produces the step
+//!                     output over the refreshed sets (paper Fig. 6).
+//!   * `Sparse`      — sparse TSA artifact over the current sets.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::EngineConfig;
+use crate::kvcache::{PagePool, SeqKvCache};
+use crate::runtime::{ArtifactSpec, Input, ModelManifest, Runtime, WeightStore};
+use crate::selector::{KvSelector, PlanKind, SelectorCtx};
+use crate::util::rng::Rng;
+
+use super::proj;
+
+/// One in-flight sequence.
+pub struct Sequence {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub generated: Vec<i32>,
+    pub cache: SeqKvCache,
+    pub selector: Box<dyn KvSelector>,
+    pub next_token: i32,
+    pub max_new: usize,
+    pub done: bool,
+    /// Logits of the most recent step (harness fidelity comparisons).
+    pub last_logits: Vec<f32>,
+}
+
+impl Sequence {
+    pub fn new(
+        id: u64,
+        prompt: Vec<i32>,
+        selector: Box<dyn KvSelector>,
+        n_layers: usize,
+        max_new: usize,
+    ) -> Self {
+        Sequence {
+            id,
+            prompt,
+            generated: Vec::new(),
+            cache: SeqKvCache::new(n_layers),
+            selector,
+            next_token: 0,
+            max_new,
+            done: false,
+            last_logits: Vec::new(),
+        }
+    }
+
+    /// Current context length (cached tokens).
+    pub fn t(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+/// Engine-level counters feeding ρ̂ / Avg.Token / FLOP accounting.
+#[derive(Clone, Debug, Default)]
+pub struct StepStats {
+    pub decode_steps: u64,
+    pub dense_layer_calls: u64,
+    pub sparse_layer_calls: u64,
+    /// Σ selected-set sizes over (seq, layer, head) sparse steps.
+    pub selected_tokens: u64,
+    pub selected_sets: u64,
+    /// Σ context length over dense layer calls (FLOP model input).
+    pub dense_context_tokens: u64,
+}
+
+impl StepStats {
+    pub fn avg_selected(&self) -> f64 {
+        if self.selected_sets == 0 {
+            0.0
+        } else {
+            self.selected_tokens as f64 / self.selected_sets as f64
+        }
+    }
+}
+
+/// Per-(step, layer, head) fidelity probe: dense ground-truth row vs the
+/// selector's set (Fig. 1 / Tables II-III quality metrics).  When armed,
+/// the engine forces a dense scoring pass every `every` steps and records
+/// δ (dropped mass), β_th (gap vs top-k oracle at the same budget), and
+/// the attention-output L2 deviation.
+#[derive(Clone, Debug, Default)]
+pub struct Probe {
+    pub every: usize,
+    pub samples: u64,
+    pub sum_delta: f64,
+    pub sum_beta: f64,
+    pub sum_delta_oracle: f64,
+    pub sum_out_l2: f64,
+    pub sum_set_len: f64,
+    /// Σ |S ∩ Top_{|S|}(A)| / |S| — oracle overlap (Fig. 7 right).
+    pub sum_overlap: f64,
+    /// Budget for the in-oracle split (Fig. 8); 0 disables.
+    pub budget: usize,
+    /// Σ |S ∩ Top_budget(A)| and Σ |S| − that (Fig. 8 stacked bars).
+    pub sum_in_budget: f64,
+    pub sum_out_budget: f64,
+    /// Keep the renormalized dense rows at probe steps (Fig. 2/3/4).
+    pub keep_rows: bool,
+    pub rows: Vec<ProbeRow>,
+    /// Raw per-sample (delta, out_l2) pairs for distribution plots.
+    pub raw: Vec<(f64, f64)>,
+}
+
+/// One captured dense attention row (probe step).
+#[derive(Clone, Debug)]
+pub struct ProbeRow {
+    pub step: u64,
+    pub layer: usize,
+    pub head: usize,
+    pub row: Vec<f32>,
+}
+
+impl Probe {
+    pub fn new(every: usize) -> Self {
+        Probe { every: every.max(1), ..Default::default() }
+    }
+    pub fn mean_delta(&self) -> f64 {
+        if self.samples == 0 { 0.0 } else { self.sum_delta / self.samples as f64 }
+    }
+    pub fn mean_beta(&self) -> f64 {
+        if self.samples == 0 { 0.0 } else { self.sum_beta / self.samples as f64 }
+    }
+    pub fn mean_delta_oracle(&self) -> f64 {
+        if self.samples == 0 { 0.0 } else { self.sum_delta_oracle / self.samples as f64 }
+    }
+    pub fn mean_out_l2(&self) -> f64 {
+        if self.samples == 0 { 0.0 } else { self.sum_out_l2 / self.samples as f64 }
+    }
+    pub fn mean_set_len(&self) -> f64 {
+        if self.samples == 0 { 0.0 } else { self.sum_set_len / self.samples as f64 }
+    }
+    pub fn mean_overlap(&self) -> f64 {
+        if self.samples == 0 { 0.0 } else { self.sum_overlap / self.samples as f64 }
+    }
+    pub fn mean_in_budget(&self) -> f64 {
+        if self.samples == 0 { 0.0 } else { self.sum_in_budget / self.samples as f64 }
+    }
+    pub fn mean_out_budget(&self) -> f64 {
+        if self.samples == 0 { 0.0 } else { self.sum_out_budget / self.samples as f64 }
+    }
+}
+
+pub struct Engine {
+    pub rt: Arc<Runtime>,
+    pub mm: ModelManifest,
+    pub weights: Arc<WeightStore>,
+    pub pool: PagePool,
+    pub cfg: EngineConfig,
+    pub stats: StepStats,
+    pub rng: Rng,
+    pub temperature: f32,
+    pub probe: Option<Probe>,
+    // scratch (reused across steps to keep the hot loop allocation-free)
+    sc_kc: Vec<f32>,
+    sc_vc: Vec<f32>,
+    sc_ks: Vec<f32>,
+    sc_vs: Vec<f32>,
+    sc_mask: Vec<f32>,
+}
+
+impl Engine {
+    pub fn new(cfg: EngineConfig) -> Result<Self> {
+        let rt = Arc::new(Runtime::new(&cfg.artifacts_dir)?);
+        let mm = rt.model(&cfg.model)?.clone();
+        let weights = Arc::new(WeightStore::load(&rt, &mm)?);
+        Ok(Self::with_shared(rt, weights, cfg))
+    }
+
+    /// Build an engine over a shared runtime + weight store (harnesses
+    /// construct one engine per selector without recompiling artifacts or
+    /// re-uploading weights).
+    pub fn with_shared(
+        rt: Arc<Runtime>,
+        weights: Arc<WeightStore>,
+        cfg: EngineConfig,
+    ) -> Self {
+        let mm = rt.model(&cfg.model).expect("model in manifest").clone();
+        let pool = PagePool::new(mm.n_heads, mm.head_dim, 128);
+        let seed = cfg.seed;
+        Engine {
+            rt,
+            mm,
+            weights,
+            pool,
+            cfg,
+            stats: StepStats::default(),
+            rng: Rng::new(seed),
+            temperature: 0.0,
+            probe: None,
+            sc_kc: Vec::new(),
+            sc_vc: Vec::new(),
+            sc_ks: Vec::new(),
+            sc_vs: Vec::new(),
+            sc_mask: Vec::new(),
+        }
+    }
+
+    pub fn new_sequence(&self, id: u64, prompt: Vec<i32>) -> Sequence {
+        let sel = crate::selector::build(
+            &self.cfg.selector,
+            self.mm.n_layers,
+            self.mm.n_heads,
+            self.mm.head_dim,
+        );
+        Sequence::new(id, prompt, sel, self.mm.n_layers, self.cfg.max_new_tokens)
+    }
+
+    fn art(&self, stage: &str, params: &[(&str, usize)]) -> Result<ArtifactSpec> {
+        self.mm
+            .find(stage, params)
+            .cloned()
+            .ok_or_else(|| anyhow!("no artifact for {stage} {params:?}"))
+    }
+
+    fn batch_tile(&self, n: usize) -> Result<usize> {
+        self.mm
+            .bucket_for("layer_step", "batch", n)
+            .ok_or_else(|| anyhow!("no batch tile ≥ {n}"))
+    }
+
+    // -----------------------------------------------------------------
+    // prefill
+
+    /// Run the whole-prompt prefill artifact for one sequence, load the KV
+    /// cache, seed the selector, and sample the first generated token.
+    pub fn prefill(&mut self, seq: &mut Sequence) -> Result<()> {
+        let len = seq.prompt.len();
+        let l_max = self
+            .mm
+            .bucket_for("prefill", "l_max", len)
+            .ok_or_else(|| anyhow!("prompt of {len} exceeds prefill buckets"))?;
+        let art = self.art("prefill", &[("l_max", l_max)])?;
+
+        let mut tokens = seq.prompt.clone();
+        tokens.resize(l_max, 0);
+        let sc = &self.cfg.selector;
+        let nl = self.mm.n_layers;
+        let ell_s = (nl as f32 * sc.sched_ell_s_frac).floor();
+        let psaw_on = if sc.psaw_enabled { 1.0 } else { 0.0 };
+        let etf_on = if sc.etf_enabled { 1.0 } else { 0.0 };
+
+        let wbufs = self.weights.all_buffers();
+        let mut inputs: Vec<Input<'_>> = vec![
+            Input::I32(&tokens, vec![l_max]),
+            Input::ScalarI32(len as i32),
+            Input::ScalarF32(sc.c_sink as f32),
+            Input::ScalarF32(ell_s),
+            Input::ScalarF32(sc.psaw_phi),
+            Input::ScalarF32(sc.psaw_alpha),
+            Input::ScalarF32(sc.etf_psi),
+            Input::ScalarF32(sc.etf_gamma),
+            Input::ScalarF32(psaw_on),
+            Input::ScalarF32(etf_on),
+        ];
+        inputs.extend(wbufs.into_iter().map(Input::Buffer));
+        let outs = self.rt.execute(&art, &inputs)?;
+        let (k, v, _last_hidden, logits, last_probs) =
+            (&outs[0], &outs[1], &outs[2], &outs[3], &outs[4]);
+
+        seq.cache
+            .load_prefill(&mut self.pool, &k.data, &v.data, l_max, len)?;
+
+        // Seed the selector: per (layer, head) last-token attention row +
+        // every cached key (Quest summaries / DS caches).
+        let (h, d) = (self.mm.n_heads, self.mm.head_dim);
+        for layer in 0..nl {
+            for head in 0..h {
+                let base = (layer * h + head) * l_max;
+                let mut row = last_probs.data[base..base + len].to_vec();
+                row.push(0.0); // imaginary self slot at position `len`
+                seq.selector.observe_probs(layer, head, len, &row);
+            }
+        }
+        for layer in 0..nl {
+            for head in 0..h {
+                for pos in 0..len {
+                    let krow = seq.cache.key(&self.pool, layer, head, pos);
+                    // SAFETY of borrow: copy out to satisfy the borrow
+                    // checker (selector may not hold references).
+                    let kcopy: Vec<f32> = krow.to_vec();
+                    seq.selector.observe_new_key(layer, head, pos, &kcopy);
+                    let _ = d;
+                }
+            }
+        }
+
+        seq.last_logits = logits.data.clone();
+        seq.next_token =
+            proj::sample(&logits.data, self.temperature, &mut self.rng) as i32;
+        Ok(())
+    }
+
+    // -----------------------------------------------------------------
+    // decode
+
+    /// One decode step for a group of sequences (≤ max batch tile).
+    /// Feeds each sequence's `next_token`, appends KV, samples the next
+    /// token.  All sequences must use the same selector kind (the batcher
+    /// guarantees this).
+    pub fn decode_step(&mut self, seqs: &mut [&mut Sequence]) -> Result<()> {
+        let n = seqs.len();
+        if n == 0 {
+            return Ok(());
+        }
+        let b = self.batch_tile(n)?;
+        let (h, hkv, d, dm) = (
+            self.mm.n_heads,
+            self.mm.n_kv_heads,
+            self.mm.head_dim,
+            self.mm.d_model,
+        );
+        let nl = self.mm.n_layers;
+        let vocab = self.mm.vocab_size;
+
+        let mut tokens: Vec<i32> = seqs.iter().map(|s| s.next_token).collect();
+        tokens.resize(b, 0);
+        let mut pos: Vec<i32> =
+            seqs.iter().map(|s| s.t() as i32).collect();
+        pos.resize(b, 0);
+        let lengths: Vec<i32> = pos.clone();
+
+        // embed
+        let art_embed = self.art("embed", &[("batch", b)])?;
+        let embed_w = self.weights.device("embed.weight");
+        let outs = self.rt.execute(
+            &art_embed,
+            &[Input::I32(&tokens, vec![b]), Input::Buffer(embed_w)],
+        )?;
+        let mut hidden = outs[0].data.clone(); // [b, dm]
+
+        for layer in 0..nl {
+            // --- host-side query projection for planning ---------------
+            let (_, norm_w) =
+                self.weights.host(&self.weights.layer_name(layer, "attn_norm.weight"));
+            let (_, wq) = self.weights.host(&self.weights.layer_name(layer, "wq"));
+            let mut plans: Vec<PlanKind> = Vec::with_capacity(n);
+            for (i, seq) in seqs.iter_mut().enumerate() {
+                let t = seq.t();
+                let (qs, qs_raw) = proj::project_queries(
+                    &hidden[i * dm..(i + 1) * dm],
+                    norm_w,
+                    wq,
+                    h,
+                    d,
+                    t,
+                    10000.0,
+                    1e-5,
+                );
+                let last_keys: Option<Vec<Vec<f32>>> = if t > 0 {
+                    Some(
+                        (0..h)
+                            .map(|hh| {
+                                seq.cache
+                                    .key(&self.pool, layer, hh, t - 1)
+                                    .to_vec()
+                            })
+                            .collect(),
+                    )
+                } else {
+                    None
+                };
+                let ctx = SelectorCtx {
+                    t,
+                    q_heads: &qs,
+                    q_heads_raw: &qs_raw,
+                    hidden: &hidden[i * dm..(i + 1) * dm],
+                    last_keys: last_keys.as_deref(),
+                };
+                plans.push(seq.selector.plan(layer, &ctx));
+            }
+
+            let probing = self
+                .probe
+                .as_ref()
+                .map(|p| self.stats.decode_steps % p.every as u64 == 0)
+                .unwrap_or(false);
+            let any_dense = probing
+                || plans.iter().any(|p| {
+                    matches!(p, PlanKind::DenseOnly | PlanKind::Retrieve { .. })
+                });
+            let any_sparse = plans
+                .iter()
+                .any(|p| matches!(p, PlanKind::Sparse | PlanKind::Retrieve { .. }));
+
+            let wl = self.weights.layer_buffers(layer);
+
+            // --- dense / retrieval pass ---------------------------------
+            let mut dense_out: Option<Vec<crate::runtime::HostTensor>> = None;
+            let mut dense_lmax = 0usize;
+            if any_dense {
+                let max_t =
+                    seqs.iter().map(|s| s.t()).max().unwrap_or(0).max(1);
+                let l_max = self
+                    .mm
+                    .bucket_for("layer_step_dense", "l_max", max_t)
+                    .ok_or_else(|| anyhow!("context {max_t} exceeds buckets"))?;
+                dense_lmax = l_max;
+                let art =
+                    self.art("layer_step_dense", &[("batch", b), ("l_max", l_max)])?;
+                let kc_len = b * hkv * l_max * d;
+                if self.sc_kc.len() < kc_len {
+                    self.sc_kc.resize(kc_len, 0.0);
+                    self.sc_vc.resize(kc_len, 0.0);
+                }
+                self.sc_kc[..kc_len].fill(0.0);
+                self.sc_vc[..kc_len].fill(0.0);
+                for (i, seq) in seqs.iter().enumerate() {
+                    let kslice =
+                        &mut self.sc_kc[i * hkv * l_max * d..(i + 1) * hkv * l_max * d];
+                    let vslice =
+                        &mut self.sc_vc[i * hkv * l_max * d..(i + 1) * hkv * l_max * d];
+                    seq.cache
+                        .export_dense(&self.pool, layer, l_max, kslice, vslice);
+                }
+                let mut inputs: Vec<Input<'_>> = vec![
+                    Input::F32(&hidden, vec![b, dm]),
+                    Input::I32(&pos, vec![b]),
+                    Input::F32(&self.sc_kc[..kc_len], vec![b, hkv, l_max, d]),
+                    Input::F32(&self.sc_vc[..kc_len], vec![b, hkv, l_max, d]),
+                    Input::I32(&lengths, vec![b]),
+                ];
+                inputs.extend(wl.iter().map(|w| Input::Buffer(*w)));
+                let want_probs = probing
+                    || plans
+                        .iter()
+                        .any(|p| matches!(p, PlanKind::Retrieve { .. }));
+                let wanted = [true, true, true, want_probs];
+                let outs =
+                    self.rt.execute_select(&art, &inputs, Some(&wanted))?;
+                self.stats.dense_layer_calls += 1;
+                self.stats.dense_context_tokens +=
+                    seqs.iter().map(|s| s.t() as u64).sum::<u64>();
+                // feed probs to retrieving heads
+                for (i, seq) in seqs.iter_mut().enumerate() {
+                    if let PlanKind::Retrieve { heads } = &plans[i] {
+                        let t = seq.t();
+                        let probs = &outs[3].data;
+                        let row_w = l_max + 1;
+                        for (head, &r) in heads.iter().enumerate() {
+                            if !r {
+                                continue;
+                            }
+                            let base = (i * h + head) * row_w;
+                            let mut row =
+                                probs[base..base + t.min(l_max)].to_vec();
+                            row.push(probs[base + l_max]); // self slot
+                            seq.selector.observe_probs(layer, head, t, &row);
+                        }
+                    }
+                }
+                dense_out = Some(outs);
+            }
+
+            // --- sparse TSA pass ----------------------------------------
+            let mut sparse_out: Option<Vec<crate::runtime::HostTensor>> = None;
+            let mut sparse_n = 0usize;
+            if any_sparse {
+                let mut max_len = 1usize;
+                for (i, seq) in seqs.iter().enumerate() {
+                    if matches!(plans[i], PlanKind::DenseOnly) {
+                        continue;
+                    }
+                    for set in seq.selector.sets(layer) {
+                        max_len = max_len.max(set.len());
+                    }
+                }
+                let n_sel = self
+                    .mm
+                    .bucket_for("layer_step", "n_sel", max_len)
+                    .ok_or_else(|| {
+                        anyhow!("selected set of {max_len} exceeds buckets")
+                    })?;
+                sparse_n = n_sel;
+                let art =
+                    self.art("layer_step", &[("batch", b), ("n_sel", n_sel)])?;
+                let ks_len = b * h * n_sel * d;
+                if self.sc_ks.len() < ks_len {
+                    self.sc_ks.resize(ks_len, 0.0);
+                    self.sc_vs.resize(ks_len, 0.0);
+                }
+                if self.sc_mask.len() < b * h * n_sel {
+                    self.sc_mask.resize(b * h * n_sel, 0.0);
+                }
+                self.sc_mask[..b * h * n_sel].fill(0.0);
+                for (i, seq) in seqs.iter().enumerate() {
+                    if matches!(plans[i], PlanKind::DenseOnly) {
+                        continue;
+                    }
+                    for head in 0..h {
+                        let set = &seq.selector.sets(layer)[head];
+                        let off = (i * h + head) * n_sel * d;
+                        seq.cache.gather(
+                            &self.pool,
+                            layer,
+                            head,
+                            set,
+                            &mut self.sc_ks[off..off + set.len() * d],
+                            &mut self.sc_vs[off..off + set.len() * d],
+                        );
+                        let moff = (i * h + head) * n_sel;
+                        self.sc_mask[moff..moff + set.len()].fill(1.0);
+                        self.stats.selected_tokens += set.len() as u64;
+                        self.stats.selected_sets += 1;
+                    }
+                }
+                let mut inputs: Vec<Input<'_>> = vec![
+                    Input::F32(&hidden, vec![b, dm]),
+                    Input::I32(&pos, vec![b]),
+                    Input::F32(&self.sc_ks[..ks_len], vec![b, h, n_sel, d]),
+                    Input::F32(&self.sc_vs[..ks_len], vec![b, h, n_sel, d]),
+                    Input::F32(&self.sc_mask[..b * h * n_sel], vec![b, h, n_sel]),
+                ];
+                inputs.extend(wl.iter().map(|w| Input::Buffer(*w)));
+                let want_probs = seqs
+                    .iter()
+                    .any(|s| s.selector.needs_sparse_probs());
+                let wanted = [true, true, true, want_probs];
+                let outs =
+                    self.rt.execute_select(&art, &inputs, Some(&wanted))?;
+                self.stats.sparse_layer_calls += 1;
+                if want_probs {
+                    // H2O-style accumulation over the selected set
+                    for (i, seq) in seqs.iter_mut().enumerate() {
+                        if matches!(plans[i], PlanKind::DenseOnly) {
+                            continue;
+                        }
+                        let t = seq.t();
+                        let probs = &outs[3].data;
+                        let row_w = n_sel + 1;
+                        for head in 0..h {
+                            let set = seq.selector.sets(layer)[head].clone();
+                            let base = (i * h + head) * row_w;
+                            let mut row =
+                                probs[base..base + set.len()].to_vec();
+                            row.push(probs[base + n_sel]);
+                            seq.selector
+                                .observe_sparse(layer, head, t, &set, &row);
+                        }
+                    }
+                }
+                sparse_out = Some(outs);
+            }
+
+            // --- fidelity probe (Fig. 1 / quality tables) ----------------
+            if probing {
+                let dense = dense_out.as_ref().unwrap();
+                let probs_all = &dense[3].data;
+                let row_w = dense_lmax + 1;
+                let mut acc = Vec::new();
+                for (i, seq) in seqs.iter().enumerate() {
+                    if matches!(plans[i], PlanKind::DenseOnly) {
+                        continue;
+                    }
+                    let t = seq.t();
+                    if t == 0 {
+                        continue;
+                    }
+                    for head in 0..h {
+                        let base = (i * h + head) * row_w;
+                        // renormalize over cached positions (exclude self)
+                        let mut row = probs_all[base..base + t.min(dense_lmax)]
+                            .to_vec();
+                        let mass: f32 = row.iter().sum();
+                        if mass > 1e-9 {
+                            row.iter_mut().for_each(|x| *x /= mass);
+                        }
+                        let set = &seq.selector.sets(layer)[head];
+                        let delta = crate::theory::dropped_mass(&row, set);
+                        let beta = crate::theory::beta_th(&row, set);
+                        let d_star = crate::theory::oracle_dropped_mass(
+                            &row,
+                            set.len(),
+                        );
+                        // output-level L2: Σ (A - Â) v
+                        let tau = 1.0 - delta;
+                        let mut diff = vec![0f64; d];
+                        for (pos, &a) in row.iter().enumerate() {
+                            let in_set = set.binary_search(&pos).is_ok();
+                            let ahat = if in_set && tau > 1e-9 {
+                                a as f64 / tau
+                            } else {
+                                0.0
+                            };
+                            let w = a as f64 - ahat;
+                            if w.abs() < 1e-12 {
+                                continue;
+                            }
+                            let vrow =
+                                seq.cache.value(&self.pool, layer, head, pos);
+                            for (j, &vv) in vrow.iter().enumerate() {
+                                diff[j] += w * vv as f64;
+                            }
+                        }
+                        let out_l2 =
+                            diff.iter().map(|x| x * x).sum::<f64>().sqrt();
+                        // oracle-overlap and budget-split diagnostics
+                        let oracle_s = crate::util::fx::top_k_indices(
+                            &row,
+                            set.len(),
+                        );
+                        let oset: std::collections::HashSet<usize> =
+                            oracle_s.into_iter().collect();
+                        let inter =
+                            set.iter().filter(|p| oset.contains(p)).count();
+                        let overlap = if set.is_empty() {
+                            1.0
+                        } else {
+                            inter as f64 / set.len() as f64
+                        };
+                        let budget =
+                            self.probe.as_ref().map(|p| p.budget).unwrap_or(0);
+                        let (in_b, out_b) = if budget > 0 {
+                            let ob: std::collections::HashSet<usize> =
+                                crate::util::fx::top_k_indices(&row, budget)
+                                    .into_iter()
+                                    .collect();
+                            let ib = set
+                                .iter()
+                                .filter(|p| ob.contains(p))
+                                .count();
+                            (ib as f64, (set.len() - ib) as f64)
+                        } else {
+                            (0.0, 0.0)
+                        };
+                        acc.push((
+                            delta, beta, d_star, out_l2, set.len(), overlap,
+                            in_b, out_b,
+                        ));
+                        if self
+                            .probe
+                            .as_ref()
+                            .map(|p| p.keep_rows)
+                            .unwrap_or(false)
+                        {
+                            let step = self.stats.decode_steps;
+                            if let Some(p) = self.probe.as_mut() {
+                                p.rows.push(ProbeRow {
+                                    step,
+                                    layer,
+                                    head,
+                                    row: row.clone(),
+                                });
+                            }
+                        }
+                    }
+                }
+                if let Some(p) = self.probe.as_mut() {
+                    for (delta, beta, d_star, out_l2, sl, ov, ib, ob) in acc {
+                        p.samples += 1;
+                        p.sum_delta += delta;
+                        p.sum_beta += beta;
+                        p.sum_delta_oracle += d_star;
+                        p.sum_out_l2 += out_l2;
+                        p.sum_set_len += sl as f64;
+                        p.sum_overlap += ov;
+                        p.sum_in_budget += ib;
+                        p.sum_out_budget += ob;
+                        p.raw.push((delta, out_l2));
+                    }
+                }
+            }
+
+            // --- merge outputs, append KV --------------------------------
+            let mut new_hidden = vec![0f32; b * dm];
+            for (i, seq) in seqs.iter_mut().enumerate() {
+                let (src, k_new, v_new) = match &plans[i] {
+                    PlanKind::DenseOnly => {
+                        let o = dense_out.as_ref().unwrap();
+                        (&o[0], &o[1], &o[2])
+                    }
+                    _ => {
+                        let o = sparse_out.as_ref().unwrap();
+                        (&o[0], &o[1], &o[2])
+                    }
+                };
+                new_hidden[i * dm..(i + 1) * dm]
+                    .copy_from_slice(&src.data[i * dm..(i + 1) * dm]);
+                // expand kv heads if GQA
+                let mut krow = vec![0f32; h * d];
+                let mut vrow = vec![0f32; h * d];
+                let rep = h / hkv;
+                for hh in 0..h {
+                    let src_h = hh / rep;
+                    let base = (i * hkv + src_h) * d;
+                    krow[hh * d..(hh + 1) * d]
+                        .copy_from_slice(&k_new.data[base..base + d]);
+                    vrow[hh * d..(hh + 1) * d]
+                        .copy_from_slice(&v_new.data[base..base + d]);
+                }
+                let t = seq.t();
+                seq.cache.append(&mut self.pool, layer, &krow, &vrow)?;
+                for hh in 0..h {
+                    seq.selector.observe_new_key(
+                        layer,
+                        hh,
+                        t,
+                        &krow[hh * d..(hh + 1) * d],
+                    );
+                }
+            }
+            // fill padded rows (keep executing with finite values)
+            if n < b {
+                if let Some(o) = sparse_out.as_ref().or(dense_out.as_ref()) {
+                    new_hidden[n * dm..]
+                        .copy_from_slice(&o[0].data[n * dm..b * dm]);
+                }
+            }
+            hidden = new_hidden;
+            let _ = (dense_lmax, sparse_n);
+        }
+
+        // lm_head + sampling
+        let art_head = self.art("lm_head", &[("batch", b)])?;
+        let outs = self.rt.execute(
+            &art_head,
+            &[
+                Input::F32(&hidden, vec![b, dm]),
+                Input::Buffer(self.weights.device("final_norm.weight")),
+                Input::Buffer(self.weights.device("lm_head")),
+            ],
+        )?;
+        let logits = &outs[0].data;
+        for (i, seq) in seqs.iter_mut().enumerate() {
+            seq.cache.commit_token();
+            let row = &logits[i * vocab..(i + 1) * vocab];
+            seq.last_logits = row.to_vec();
+            let tok = proj::sample(row, self.temperature, &mut self.rng) as i32;
+            seq.generated.push(seq.next_token);
+            seq.next_token = tok;
+            if seq.generated.len() >= seq.max_new {
+                seq.done = true;
+            }
+        }
+        self.stats.decode_steps += 1;
+        Ok(())
+    }
+
+    /// Convenience: prefill + decode until done; returns generated tokens.
+    pub fn generate(&mut self, seq: &mut Sequence) -> Result<Vec<i32>> {
+        self.prefill(seq)?;
+        while !seq.done {
+            let mut group = [&mut *seq];
+            // SAFETY: rebuilding the slice of &mut each iteration.
+            self.decode_step(&mut group)?;
+        }
+        Ok(seq.generated.clone())
+    }
+
+    /// Release a finished sequence's pages.
+    pub fn release(&mut self, seq: &mut Sequence) {
+        seq.cache.release(&mut self.pool);
+    }
+
+    /// ρ̂ for a finished sequence: retrievals / (H · n_layers · steps).
+    pub fn retrieval_ratio(&self, seq: &Sequence, steps: u64) -> f64 {
+        if steps == 0 {
+            return 0.0;
+        }
+        seq.selector.retrievals() as f64
+            / (self.mm.n_heads as f64 * self.mm.n_layers as f64 * steps as f64)
+    }
+}

@@ -1,0 +1,8 @@
+//! Model driver: host-side projections + the serving engine that
+//! orchestrates the AOT PJRT executables around the paged KV cache and the
+//! KV selectors.
+
+pub mod engine;
+pub mod proj;
+
+pub use engine::{Engine, Probe, ProbeRow, Sequence, StepStats};

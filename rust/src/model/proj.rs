@@ -1,0 +1,173 @@
+//! Host-side projections used by the coordinator off the PJRT path:
+//! the per-layer query projection feeding CIS similarity gating and
+//! retrieval planning (a ~65k-MAC matvec — negligible next to attention),
+//! plus RoPE and sampling.  Must match the L2 graph bit-for-bit in
+//! structure (same rmsnorm/rope conventions); parity is enforced by the
+//! integration test `rust/tests/integration_runtime.rs`.
+
+use crate::util::rng::Rng;
+
+/// RMSNorm: x * rsqrt(mean(x²) + eps) * w.
+pub fn rmsnorm(x: &[f32], w: &[f32], eps: f32, out: &mut [f32]) {
+    let n = x.len();
+    let mut ss = 0.0f32;
+    for &v in x {
+        ss += v * v;
+    }
+    let scale = 1.0 / (ss / n as f32 + eps).sqrt();
+    for i in 0..n {
+        out[i] = x[i] * scale * w[i];
+    }
+}
+
+/// y = x @ W where W is [in, out] row-major.
+pub fn matvec(x: &[f32], w: &[f32], in_dim: usize, out_dim: usize, y: &mut [f32]) {
+    debug_assert_eq!(w.len(), in_dim * out_dim);
+    y[..out_dim].fill(0.0);
+    for (i, &xi) in x.iter().enumerate().take(in_dim) {
+        if xi == 0.0 {
+            continue;
+        }
+        let row = &w[i * out_dim..(i + 1) * out_dim];
+        for j in 0..out_dim {
+            y[j] += xi * row[j];
+        }
+    }
+}
+
+/// RoPE (half-split rotation, matching `model.apply_rope` in L2): rotates
+/// `x` (one head, `d` floats) in place for position `pos`.
+pub fn apply_rope(x: &mut [f32], pos: usize, base: f32) {
+    let d = x.len();
+    let half = d / 2;
+    for i in 0..half {
+        let freq = base.powf(-(i as f32) / half as f32);
+        let ang = pos as f32 * freq;
+        let (sin, cos) = ang.sin_cos();
+        let a = x[i];
+        let b = x[i + half];
+        x[i] = a * cos - b * sin;
+        x[i + half] = a * sin + b * cos;
+    }
+}
+
+/// Project per-head queries for one sequence at one layer.  Returns
+/// (RoPE'd at `pos`, raw pre-RoPE): attention/scoring uses the rotated
+/// form; CIS similarity gating (Eq. 12) uses the raw form — RoPE's
+/// high-frequency components rotate ~1 rad/position and would decorrelate
+/// otherwise-similar adjacent queries at small head dims.
+///
+/// `hidden`: [d_model]; `attn_norm_w`: [d_model]; `wq`: [d_model, H*d].
+pub fn project_queries(
+    hidden: &[f32],
+    attn_norm_w: &[f32],
+    wq: &[f32],
+    n_heads: usize,
+    head_dim: usize,
+    pos: usize,
+    rope_base: f32,
+    eps: f32,
+) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+    let dm = hidden.len();
+    let mut x = vec![0f32; dm];
+    rmsnorm(hidden, attn_norm_w, eps, &mut x);
+    let mut q = vec![0f32; n_heads * head_dim];
+    matvec(&x, wq, dm, n_heads * head_dim, &mut q);
+    let raw: Vec<Vec<f32>> = (0..n_heads)
+        .map(|h| q[h * head_dim..(h + 1) * head_dim].to_vec())
+        .collect();
+    let roped = raw
+        .iter()
+        .map(|r| {
+            let mut qa = r.clone();
+            apply_rope(&mut qa, pos, rope_base);
+            qa
+        })
+        .collect();
+    (roped, raw)
+}
+
+/// Greedy or temperature sampling over logits.
+pub fn sample(logits: &[f32], temperature: f32, rng: &mut Rng) -> usize {
+    if temperature <= 0.0 {
+        return crate::util::fx::argmax(logits);
+    }
+    let mut probs: Vec<f32> =
+        logits.iter().map(|&x| x / temperature).collect();
+    crate::util::fx::softmax(&mut probs);
+    rng.sample_weighted(&probs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rmsnorm_unit_variance() {
+        let x = [3.0f32, -3.0, 3.0, -3.0];
+        let w = [1.0f32; 4];
+        let mut out = [0f32; 4];
+        rmsnorm(&x, &w, 0.0, &mut out);
+        for v in out {
+            assert!((v.abs() - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn matvec_identity() {
+        let mut w = vec![0f32; 9];
+        for i in 0..3 {
+            w[i * 3 + i] = 1.0;
+        }
+        let mut y = [0f32; 3];
+        matvec(&[1.0, 2.0, 3.0], &w, 3, 3, &mut y);
+        assert_eq!(y, [1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn rope_preserves_norm_and_relative_angle() {
+        let mut a = vec![1.0f32, 0.5, -0.3, 0.8];
+        let n0: f32 = a.iter().map(|x| x * x).sum();
+        apply_rope(&mut a, 7, 10000.0);
+        let n1: f32 = a.iter().map(|x| x * x).sum();
+        assert!((n0 - n1).abs() < 1e-5);
+
+        // <rope(q,m), rope(k,n)> depends only on m-n
+        let q = vec![0.3f32, -0.7, 0.2, 0.9];
+        let k = vec![-0.5f32, 0.1, 0.6, 0.4];
+        let dot = |m: usize, n: usize| {
+            let mut qq = q.clone();
+            let mut kk = k.clone();
+            apply_rope(&mut qq, m, 10000.0);
+            apply_rope(&mut kk, n, 10000.0);
+            qq.iter().zip(&kk).map(|(a, b)| a * b).sum::<f32>()
+        };
+        assert!((dot(5, 3) - dot(12, 10)).abs() < 1e-4);
+    }
+
+    #[test]
+    fn rope_zero_position_is_identity() {
+        let mut a = vec![1.0f32, 2.0, 3.0, 4.0];
+        let orig = a.clone();
+        apply_rope(&mut a, 0, 10000.0);
+        for (x, y) in a.iter().zip(&orig) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn sample_greedy_is_argmax() {
+        let mut rng = Rng::new(0);
+        assert_eq!(sample(&[0.1, 5.0, 1.0], 0.0, &mut rng), 1);
+    }
+
+    #[test]
+    fn sample_temperature_respects_distribution() {
+        let mut rng = Rng::new(1);
+        let logits = [0.0f32, 10.0, 0.0];
+        let hits = (0..200)
+            .filter(|_| sample(&logits, 1.0, &mut rng) == 1)
+            .count();
+        assert!(hits > 190);
+    }
+}

@@ -1,0 +1,190 @@
+//! PJRT runtime: loads HLO-text artifacts, compiles them once, executes
+//! them from the serving hot path with device-resident weights.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+use xla::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+use super::manifest::{ArtifactSpec, Manifest, ModelManifest};
+
+/// Host-side f32 tensor used on the rust↔PJRT boundary.
+#[derive(Clone, Debug, Default)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        HostTensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; shape.iter().product()],
+        }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor { shape: shape.to_vec(), data }
+    }
+}
+
+/// One input to an executable: a device buffer (weights), f32 host data,
+/// or i32 host data (tokens, positions, lengths).
+pub enum Input<'a> {
+    Buffer(&'a PjRtBuffer),
+    F32(&'a [f32], Vec<usize>),
+    I32(&'a [i32], Vec<usize>),
+    /// Rank-0 scalars.
+    ScalarF32(f32),
+    ScalarI32(i32),
+}
+
+/// Compiled-executable registry with lazy compile + cache.
+pub struct Runtime {
+    pub client: PjRtClient,
+    pub manifest: Manifest,
+    exes: Mutex<BTreeMap<String, std::sync::Arc<PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: &str) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("{e:?}"))?;
+        Ok(Runtime { client, manifest, exes: Mutex::new(BTreeMap::new()) })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelManifest> {
+        self.manifest.model(name)
+    }
+
+    /// Compile (or fetch cached) executable for an artifact.
+    pub fn executable(
+        &self,
+        art: &ArtifactSpec,
+    ) -> Result<std::sync::Arc<PjRtLoadedExecutable>> {
+        {
+            let exes = self.exes.lock().unwrap();
+            if let Some(e) = exes.get(&art.name) {
+                return Ok(e.clone());
+            }
+        }
+        let path = self.manifest.dir.join(&art.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("{e:?}"))
+            .with_context(|| format!("loading HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("{e:?}"))
+            .with_context(|| format!("compiling {}", art.name))?;
+        let arc = std::sync::Arc::new(exe);
+        self.exes
+            .lock()
+            .unwrap()
+            .insert(art.name.clone(), arc.clone());
+        Ok(arc)
+    }
+
+    /// Upload an f32 host slice to a device buffer (used for weights once
+    /// at startup; the per-step path uses `execute`).
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer::<f32>(data, dims, None)
+            .map_err(|e| anyhow!("{e:?}"))
+    }
+
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer::<i32>(data, dims, None)
+            .map_err(|e| anyhow!("{e:?}"))
+    }
+
+    /// Execute an artifact with mixed inputs, returning each output as an
+    /// f32 host tensor (i32/bool outputs are not produced by our stages).
+    ///
+    /// All executables are lowered with `return_tuple=True`, so the single
+    /// result buffer is a tuple literal that we decompose.
+    pub fn execute(
+        &self,
+        art: &ArtifactSpec,
+        inputs: &[Input<'_>],
+    ) -> Result<Vec<HostTensor>> {
+        self.execute_select(art, inputs, None)
+    }
+
+    /// Like `execute`, but when `wanted` is given, outputs whose flag is
+    /// false are returned as empty HostTensors without the device→host
+    /// literal conversion — the perf lever for outputs the coordinator
+    /// doesn't consume on this step (e.g. the probs row when no selector
+    /// observes it; EXPERIMENTS.md §Perf).
+    pub fn execute_select(
+        &self,
+        art: &ArtifactSpec,
+        inputs: &[Input<'_>],
+        wanted: Option<&[bool]>,
+    ) -> Result<Vec<HostTensor>> {
+        if inputs.len() != art.inputs.len() {
+            return Err(anyhow!(
+                "{}: got {} inputs, artifact declares {}",
+                art.name,
+                inputs.len(),
+                art.inputs.len()
+            ));
+        }
+        let exe = self.executable(art)?;
+        // Pass 1: stage host inputs as device buffers (weights arrive as
+        // already-resident buffers and are passed through untouched).
+        let mut owned: Vec<Option<PjRtBuffer>> =
+            Vec::with_capacity(inputs.len());
+        for (i, inp) in inputs.iter().enumerate() {
+            let staged = match inp {
+                Input::Buffer(_) => None,
+                Input::F32(data, dims) => Some(
+                    self.upload_f32(data, dims)
+                        .with_context(|| format!("{} input {}", art.name, i))?,
+                ),
+                Input::I32(data, dims) => Some(
+                    self.upload_i32(data, dims)
+                        .with_context(|| format!("{} input {}", art.name, i))?,
+                ),
+                Input::ScalarF32(x) => Some(self.upload_f32(&[*x], &[])?),
+                Input::ScalarI32(x) => Some(self.upload_i32(&[*x], &[])?),
+            };
+            owned.push(staged);
+        }
+        // Pass 2: assemble the reference list (no further mutation of
+        // `owned`, so these borrows are stable).
+        let refs: Vec<&PjRtBuffer> = inputs
+            .iter()
+            .zip(owned.iter())
+            .map(|(inp, o)| match inp {
+                Input::Buffer(b) => *b,
+                _ => o.as_ref().unwrap(),
+            })
+            .collect();
+        let result = exe
+            .execute_b(&refs)
+            .map_err(|e| anyhow!("{e:?}"))
+            .with_context(|| format!("executing {}", art.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{e:?}"))?;
+        let parts: Vec<Literal> =
+            tuple.to_tuple().map_err(|e| anyhow!("{e:?}"))?;
+        let mut outs = Vec::with_capacity(parts.len());
+        for (i, lit) in parts.into_iter().enumerate() {
+            let spec = &art.outputs[i];
+            if wanted.map(|w| !w[i]).unwrap_or(false) {
+                outs.push(HostTensor { shape: spec.shape.clone(), data: Vec::new() });
+                continue;
+            }
+            let data = lit.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+            outs.push(HostTensor { shape: spec.shape.clone(), data });
+        }
+        Ok(outs)
+    }
+}
+

@@ -1,0 +1,280 @@
+//! `artifacts/manifest.json` parsing — the python→rust interchange contract.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub stage: String,
+    /// Shape-bucket parameters: batch, n_sel, l_max (as present).
+    pub params: BTreeMap<String, usize>,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct WeightEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// Element (f32) offset into the blob.
+    pub offset: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelManifest {
+    pub name: String,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub vocab_size: usize,
+    pub weights_blob: String,
+    pub weights: Vec<WeightEntry>,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelManifest>,
+}
+
+fn tensor_spec(j: &Json) -> Result<TensorSpec> {
+    Ok(TensorSpec {
+        name: j.req("name").as_str().unwrap_or_default().to_string(),
+        dtype: j.req("dtype").as_str().unwrap_or_default().to_string(),
+        shape: j
+            .req("shape")
+            .as_arr()
+            .ok_or_else(|| anyhow!("shape not array"))?
+            .iter()
+            .map(|v| v.as_usize().unwrap_or(0))
+            .collect(),
+    })
+}
+
+impl Manifest {
+    pub fn load(dir: &str) -> Result<Manifest> {
+        let dir = PathBuf::from(dir);
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+        let mut models = BTreeMap::new();
+        for (name, m) in j
+            .req("models")
+            .as_obj()
+            .ok_or_else(|| anyhow!("models not object"))?
+        {
+            let cfg = m.req("config");
+            let get = |k: &str| -> Result<usize> {
+                cfg.req(k)
+                    .as_usize()
+                    .ok_or_else(|| anyhow!("config.{k} not a number"))
+            };
+            let weights = m
+                .req("weights")
+                .as_arr()
+                .ok_or_else(|| anyhow!("weights not array"))?
+                .iter()
+                .map(|e| {
+                    Ok(WeightEntry {
+                        name: e.req("name").as_str().unwrap_or_default().into(),
+                        shape: e
+                            .req("shape")
+                            .as_arr()
+                            .ok_or_else(|| anyhow!("weight shape"))?
+                            .iter()
+                            .map(|v| v.as_usize().unwrap_or(0))
+                            .collect(),
+                        offset: e.req("offset").as_usize().unwrap_or(0),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let artifacts = m
+                .req("artifacts")
+                .as_arr()
+                .ok_or_else(|| anyhow!("artifacts not array"))?
+                .iter()
+                .map(|a| {
+                    let params = a
+                        .req("params")
+                        .as_obj()
+                        .map(|o| {
+                            o.iter()
+                                .filter_map(|(k, v)| {
+                                    v.as_usize().map(|n| (k.clone(), n))
+                                })
+                                .collect()
+                        })
+                        .unwrap_or_default();
+                    Ok(ArtifactSpec {
+                        name: a.req("name").as_str().unwrap_or_default().into(),
+                        file: a.req("file").as_str().unwrap_or_default().into(),
+                        stage: a.req("stage").as_str().unwrap_or_default().into(),
+                        params,
+                        inputs: a
+                            .req("inputs")
+                            .as_arr()
+                            .unwrap_or(&[])
+                            .iter()
+                            .map(tensor_spec)
+                            .collect::<Result<Vec<_>>>()?,
+                        outputs: a
+                            .req("outputs")
+                            .as_arr()
+                            .unwrap_or(&[])
+                            .iter()
+                            .map(tensor_spec)
+                            .collect::<Result<Vec<_>>>()?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            models.insert(
+                name.clone(),
+                ModelManifest {
+                    name: name.clone(),
+                    n_layers: get("n_layers")?,
+                    d_model: get("d_model")?,
+                    n_heads: get("n_heads")?,
+                    n_kv_heads: get("n_kv_heads")?,
+                    head_dim: get("head_dim")?,
+                    d_ff: get("d_ff")?,
+                    vocab_size: get("vocab_size")?,
+                    weights_blob: m
+                        .req("weights_blob")
+                        .as_str()
+                        .unwrap_or_default()
+                        .into(),
+                    weights,
+                    artifacts,
+                },
+            );
+        }
+        Ok(Manifest { dir, models })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelManifest> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("model `{name}` not in manifest"))
+    }
+}
+
+impl ModelManifest {
+    /// Find an artifact by stage + exact bucket params.
+    pub fn find(
+        &self,
+        stage: &str,
+        params: &[(&str, usize)],
+    ) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| {
+            a.stage == stage
+                && params
+                    .iter()
+                    .all(|(k, v)| a.params.get(*k) == Some(v))
+        })
+    }
+
+    /// All bucket values available for `stage` under key `key` (sorted).
+    pub fn buckets(&self, stage: &str, key: &str) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.stage == stage)
+            .filter_map(|a| a.params.get(key).copied())
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Smallest bucket ≥ `need` for `stage`/`key`.
+    pub fn bucket_for(&self, stage: &str, key: &str, need: usize) -> Option<usize> {
+        self.buckets(stage, key).into_iter().find(|&b| b >= need)
+    }
+
+    pub fn weight(&self, name: &str) -> Option<&WeightEntry> {
+        self.weights.iter().find(|w| w.name == name)
+    }
+
+    pub fn artifact_path(&self, dir: &Path, a: &ArtifactSpec) -> PathBuf {
+        dir.join(&a.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_manifest_json() -> String {
+        r#"{
+          "version": 1,
+          "models": {
+            "m": {
+              "config": {"name":"m","n_layers":2,"d_model":8,"n_heads":2,
+                         "n_kv_heads":2,"head_dim":4,"d_ff":16,
+                         "vocab_size":32,"rope_base":10000.0,
+                         "rms_eps":1e-5,"seed":1,"params_estimate":100},
+              "weights_blob": "w.bin",
+              "weights": [
+                 {"name":"embed.weight","shape":[32,8],"offset":0}
+              ],
+              "artifacts": [
+                 {"name":"m_layer_step_b1_n64","file":"x.hlo.txt",
+                  "stage":"layer_step","params":{"batch":1,"n_sel":64},
+                  "inputs":[{"name":"hidden","dtype":"float32","shape":[1,8]}],
+                  "outputs":[{"name":"hidden","dtype":"float32","shape":[1,8]}]},
+                 {"name":"m_layer_step_b1_n128","file":"y.hlo.txt",
+                  "stage":"layer_step","params":{"batch":1,"n_sel":128},
+                  "inputs":[],"outputs":[]}
+              ]
+            }
+          }
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_and_finds_buckets() {
+        let tmp = std::env::temp_dir().join(format!(
+            "prhs_manifest_test_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&tmp).unwrap();
+        std::fs::write(tmp.join("manifest.json"), toy_manifest_json())
+            .unwrap();
+        let m = Manifest::load(tmp.to_str().unwrap()).unwrap();
+        let mm = m.model("m").unwrap();
+        assert_eq!(mm.n_layers, 2);
+        assert_eq!(mm.buckets("layer_step", "n_sel"), vec![64, 128]);
+        assert_eq!(mm.bucket_for("layer_step", "n_sel", 65), Some(128));
+        assert_eq!(mm.bucket_for("layer_step", "n_sel", 129), None);
+        assert!(mm
+            .find("layer_step", &[("batch", 1), ("n_sel", 64)])
+            .is_some());
+        assert!(m.model("nope").is_err());
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+}

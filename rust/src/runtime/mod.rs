@@ -1,0 +1,11 @@
+//! Runtime layer: PJRT client wrapper, artifact manifest, device-resident
+//! weight store.  Everything the L3 coordinator needs to run AOT-compiled
+//! HLO-text artifacts with zero python on the request path.
+
+pub mod client;
+pub mod manifest;
+pub mod weights;
+
+pub use client::{HostTensor, Input, Runtime};
+pub use manifest::{ArtifactSpec, Manifest, ModelManifest};
+pub use weights::WeightStore;

@@ -1,0 +1,124 @@
+//! Weight store: loads the AOT-exported flat f32 blob, keeps a host copy
+//! (for the coordinator's cheap projections: similarity gating, DS channel
+//! calibration) and uploads each tensor once as a device-resident
+//! `PjRtBuffer` reused across every `execute_b` call.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Context, Result};
+use xla::PjRtBuffer;
+
+use super::client::Runtime;
+use super::manifest::ModelManifest;
+
+pub struct WeightStore {
+    /// Host copies, name → (shape, data slice range into `blob`).
+    host: BTreeMap<String, (Vec<usize>, std::ops::Range<usize>)>,
+    blob: Vec<f32>,
+    /// Device-resident buffers, name → buffer.
+    device: BTreeMap<String, PjRtBuffer>,
+    /// Per-layer input order for layer_step stages.
+    layer_names: Vec<Vec<String>>,
+    all_names: Vec<String>,
+}
+
+const LAYER_SUFFIXES: [&str; 9] = [
+    "attn_norm.weight",
+    "wq",
+    "wk",
+    "wv",
+    "wo",
+    "mlp_norm.weight",
+    "w_gate",
+    "w_up",
+    "w_down",
+];
+
+impl WeightStore {
+    pub fn load(rt: &Runtime, model: &ModelManifest) -> Result<Self> {
+        let path = rt.manifest.dir.join(&model.weights_blob);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading weight blob {path:?}"))?;
+        if bytes.len() % 4 != 0 {
+            return Err(anyhow!("weight blob not a multiple of 4 bytes"));
+        }
+        let mut blob = vec![0f32; bytes.len() / 4];
+        for (i, ch) in bytes.chunks_exact(4).enumerate() {
+            blob[i] = f32::from_le_bytes([ch[0], ch[1], ch[2], ch[3]]);
+        }
+
+        let mut host = BTreeMap::new();
+        let mut device = BTreeMap::new();
+        for w in &model.weights {
+            let n: usize = w.shape.iter().product();
+            let range = w.offset..w.offset + n;
+            if range.end > blob.len() {
+                return Err(anyhow!(
+                    "weight {} range {:?} exceeds blob {}",
+                    w.name,
+                    range,
+                    blob.len()
+                ));
+            }
+            let buf = rt
+                .upload_f32(&blob[range.clone()], &w.shape)
+                .with_context(|| format!("uploading weight {}", w.name))?;
+            host.insert(w.name.clone(), (w.shape.clone(), range));
+            device.insert(w.name.clone(), buf);
+        }
+
+        let mut layer_names: Vec<Vec<String>> =
+            Vec::with_capacity(model.n_layers);
+        for i in 0..model.n_layers {
+            layer_names.push(
+                LAYER_SUFFIXES
+                    .iter()
+                    .map(|s| format!("layers.{i}.{s}"))
+                    .collect(),
+            );
+        }
+        let mut all_names = vec!["embed.weight".to_string()];
+        for l in &layer_names {
+            all_names.extend(l.iter().cloned());
+        }
+        all_names.push("final_norm.weight".to_string());
+        all_names.push("lm_head".to_string());
+        for n in &all_names {
+            if !device.contains_key(n) {
+                return Err(anyhow!("manifest missing weight `{n}`"));
+            }
+        }
+        Ok(WeightStore { host, blob, device, layer_names, all_names })
+    }
+
+    pub fn device(&self, name: &str) -> &PjRtBuffer {
+        self.device
+            .get(name)
+            .unwrap_or_else(|| panic!("no device weight `{name}`"))
+    }
+
+    pub fn host(&self, name: &str) -> (&[usize], &[f32]) {
+        let (shape, range) = self
+            .host
+            .get(name)
+            .unwrap_or_else(|| panic!("no host weight `{name}`"));
+        (shape, &self.blob[range.clone()])
+    }
+
+    /// Device buffers for one layer, in `layer_step` input order.
+    pub fn layer_buffers(&self, layer: usize) -> Vec<&PjRtBuffer> {
+        self.layer_names[layer]
+            .iter()
+            .map(|n| self.device(n))
+            .collect()
+    }
+
+    /// Device buffers for the prefill artifact (all weights, fixed order).
+    pub fn all_buffers(&self) -> Vec<&PjRtBuffer> {
+        self.all_names.iter().map(|n| self.device(n)).collect()
+    }
+
+    pub fn layer_name(&self, layer: usize, suffix: &str) -> String {
+        format!("layers.{layer}.{suffix}")
+    }
+}

@@ -1,0 +1,662 @@
+//! Baseline selectors the paper compares against (Sec. V-A):
+//! dense, top-k oracle, H2O [25], StreamingLLM [26], Quest [29],
+//! Double Sparsity [44], HShare [33].
+
+use crate::config::{SelectorConfig, SelectorKind};
+use crate::util::fx;
+
+use super::{select_criteria, KvSelector, PlanKind, SelectedSet, SelectorCtx};
+
+// ---------------------------------------------------------------------------
+// Dense (FlashAttention-2 / GPT-Fast baseline)
+
+pub struct DenseSelector {
+    empty: Vec<Vec<usize>>,
+}
+
+impl DenseSelector {
+    pub fn new(_n_layers: usize, n_heads: usize) -> Self {
+        DenseSelector { empty: vec![Vec::new(); n_heads] }
+    }
+}
+
+impl KvSelector for DenseSelector {
+    fn kind(&self) -> SelectorKind {
+        SelectorKind::Dense
+    }
+    fn plan(&mut self, _layer: usize, _ctx: &SelectorCtx<'_>) -> PlanKind {
+        PlanKind::DenseOnly
+    }
+    fn sets(&self, _layer: usize) -> &[Vec<usize>] {
+        &self.empty
+    }
+    fn observe_probs(&mut self, _l: usize, _h: usize, _t: usize, _p: &[f32]) {}
+    fn retrievals(&self) -> u64 {
+        0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Top-k oracle (Eq. 5): full scoring every step, keep the budget-many
+// heaviest entries. Maximal accuracy, maximal retrieval cost.
+
+pub struct OracleSelector {
+    cfg: SelectorConfig,
+    n_heads: usize,
+    sets: Vec<Vec<Vec<usize>>>,
+    retrievals: u64,
+}
+
+impl OracleSelector {
+    pub fn new(cfg: SelectorConfig, n_layers: usize, n_heads: usize) -> Self {
+        OracleSelector {
+            cfg,
+            n_heads,
+            sets: vec![vec![Vec::new(); n_heads]; n_layers],
+            retrievals: 0,
+        }
+    }
+}
+
+impl KvSelector for OracleSelector {
+    fn kind(&self) -> SelectorKind {
+        SelectorKind::TopKOracle
+    }
+
+    fn plan(&mut self, _layer: usize, _ctx: &SelectorCtx<'_>) -> PlanKind {
+        self.retrievals += self.n_heads as u64;
+        PlanKind::Retrieve { heads: vec![true; self.n_heads] }
+    }
+
+    fn sets(&self, layer: usize) -> &[Vec<usize>] {
+        &self.sets[layer]
+    }
+
+    fn observe_probs(&mut self, layer: usize, head: usize, t: usize, probs: &[f32]) {
+        // Pure top-N over cached positions — the argmax of retained mass.
+        let budget = self.cfg.budget().min(t);
+        let mut idx = fx::top_k_indices(&probs[..t], budget);
+        idx.sort_unstable();
+        self.sets[layer][head] = idx;
+    }
+
+    fn retrievals(&self) -> u64 {
+        self.retrievals
+    }
+}
+
+// ---------------------------------------------------------------------------
+// H2O heavy-hitter oracle (TDO): accumulate observed attention over the
+// retained set; evict the lowest-scoring non-local entry when over budget.
+// Selection itself costs O(1) per step (no scoring pass).
+
+pub struct H2OSelector {
+    cfg: SelectorConfig,
+    /// Per (layer, head): retained (pos, cumulative score).
+    state: Vec<Vec<Vec<(usize, f32)>>>,
+    sets: Vec<Vec<Vec<usize>>>,
+}
+
+impl H2OSelector {
+    pub fn new(cfg: SelectorConfig, n_layers: usize, n_heads: usize) -> Self {
+        H2OSelector {
+            cfg,
+            state: vec![vec![Vec::new(); n_heads]; n_layers],
+            sets: vec![vec![Vec::new(); n_heads]; n_layers],
+        }
+    }
+
+    fn rebuild(&mut self, layer: usize, t: usize) {
+        let c_local = self.cfg.c_local;
+        for (head, st) in self.state[layer].iter().enumerate() {
+            let mut v: Vec<usize> = st.iter().map(|&(p, _)| p).collect();
+            // local window always visible
+            v.extend(t.saturating_sub(c_local)..t);
+            v.sort_unstable();
+            v.dedup();
+            self.sets[layer][head] = v;
+        }
+    }
+}
+
+impl KvSelector for H2OSelector {
+    fn kind(&self) -> SelectorKind {
+        SelectorKind::H2O
+    }
+
+    fn plan(&mut self, layer: usize, ctx: &SelectorCtx<'_>) -> PlanKind {
+        self.rebuild(layer, ctx.t);
+        PlanKind::Sparse
+    }
+
+    fn sets(&self, layer: usize) -> &[Vec<usize>] {
+        &self.sets[layer]
+    }
+
+    /// Seeding from prefill's last attention row.
+    fn observe_probs(&mut self, layer: usize, head: usize, t: usize, probs: &[f32]) {
+        let budget = (self.cfg.c_sink + self.cfg.k_middle).min(t);
+        let idx = fx::top_k_indices(&probs[..t], budget);
+        self.state[layer][head] =
+            idx.into_iter().map(|p| (p, probs[p])).collect();
+    }
+
+    fn observe_sparse(
+        &mut self,
+        layer: usize,
+        head: usize,
+        t: usize,
+        set: &[usize],
+        probs: &[f32],
+    ) {
+        let heavy_budget = self.cfg.c_sink + self.cfg.k_middle;
+        let st = &mut self.state[layer][head];
+        // accumulate observed mass
+        for (i, &pos) in set.iter().enumerate() {
+            if let Some(e) = st.iter_mut().find(|e| e.0 == pos) {
+                e.1 += probs[i];
+            }
+        }
+        // the new token (self slot, last prob) becomes a candidate
+        let self_score = probs.last().copied().unwrap_or(0.0);
+        if st.iter().all(|e| e.0 != t) {
+            st.push((t, self_score));
+        }
+        // evict lowest-cumulative outside the local window
+        let local_start = (t + 1).saturating_sub(self.cfg.c_local);
+        while st.len() > heavy_budget {
+            let mut min_i = None;
+            let mut min_v = f32::INFINITY;
+            for (i, &(p, s)) in st.iter().enumerate() {
+                if p < local_start && s < min_v {
+                    min_v = s;
+                    min_i = Some(i);
+                }
+            }
+            match min_i {
+                Some(i) => {
+                    st.swap_remove(i);
+                }
+                None => break, // everything is local; nothing evictable
+            }
+        }
+    }
+
+    fn retrievals(&self) -> u64 {
+        0 // H2O never performs a scoring pass
+    }
+
+    fn needs_sparse_probs(&self) -> bool {
+        true // cumulative-attention accounting
+    }
+
+    fn scoring_cost_factor(&self) -> f64 {
+        0.0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// StreamingLLM: sinks + recency window, zero retrieval.
+
+pub struct StreamingSelector {
+    cfg: SelectorConfig,
+    sets: Vec<Vec<Vec<usize>>>,
+}
+
+impl StreamingSelector {
+    pub fn new(cfg: SelectorConfig, n_layers: usize, n_heads: usize) -> Self {
+        StreamingSelector { cfg, sets: vec![vec![Vec::new(); n_heads]; n_layers] }
+    }
+}
+
+impl KvSelector for StreamingSelector {
+    fn kind(&self) -> SelectorKind {
+        SelectorKind::StreamingLlm
+    }
+
+    fn plan(&mut self, layer: usize, ctx: &SelectorCtx<'_>) -> PlanKind {
+        let t = ctx.t;
+        // window sized to the full budget: sinks + (k + local) recent
+        let sink_end = self.cfg.c_sink.min(t);
+        let win = self.cfg.k_middle + self.cfg.c_local;
+        let start = t.saturating_sub(win).max(sink_end);
+        for h in 0..self.sets[layer].len() {
+            let mut v: Vec<usize> = (0..sink_end).collect();
+            v.extend(start..t);
+            self.sets[layer][h] = v;
+        }
+        PlanKind::Sparse
+    }
+
+    fn sets(&self, layer: usize) -> &[Vec<usize>] {
+        &self.sets[layer]
+    }
+
+    fn observe_probs(&mut self, _l: usize, _h: usize, _t: usize, _p: &[f32]) {}
+
+    fn retrievals(&self) -> u64 {
+        0
+    }
+
+    fn scoring_cost_factor(&self) -> f64 {
+        0.0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Quest (QAA): page-level min/max key summaries; score an upper bound per
+// page with the live query; take the best pages up to the budget.
+
+pub struct QuestSelector {
+    cfg: SelectorConfig,
+    head_dim: usize,
+    /// Per (layer, head): per-page elementwise min/max of keys.
+    mins: Vec<Vec<Vec<Vec<f32>>>>,
+    maxs: Vec<Vec<Vec<Vec<f32>>>>,
+    sets: Vec<Vec<Vec<usize>>>,
+}
+
+impl QuestSelector {
+    pub fn new(
+        cfg: SelectorConfig,
+        n_layers: usize,
+        n_heads: usize,
+        head_dim: usize,
+    ) -> Self {
+        QuestSelector {
+            cfg,
+            head_dim,
+            mins: vec![vec![Vec::new(); n_heads]; n_layers],
+            maxs: vec![vec![Vec::new(); n_heads]; n_layers],
+            sets: vec![vec![Vec::new(); n_heads]; n_layers],
+        }
+    }
+
+    fn page_bound(q: &[f32], mn: &[f32], mx: &[f32]) -> f32 {
+        let mut s = 0.0;
+        for i in 0..q.len() {
+            s += (q[i] * mn[i]).max(q[i] * mx[i]);
+        }
+        s
+    }
+}
+
+impl KvSelector for QuestSelector {
+    fn kind(&self) -> SelectorKind {
+        SelectorKind::Quest
+    }
+
+    fn plan(&mut self, layer: usize, ctx: &SelectorCtx<'_>) -> PlanKind {
+        let t = ctx.t;
+        let page = self.cfg.quest_page;
+        let sink_end = self.cfg.c_sink.min(t);
+        let local_start = t.saturating_sub(self.cfg.c_local).max(sink_end);
+        for (head, q) in ctx.q_heads.iter().enumerate() {
+            let mins = &self.mins[layer][head];
+            let maxs = &self.maxs[layer][head];
+            let n_pages = mins.len();
+            let mut scored: Vec<(usize, f32)> = (0..n_pages)
+                .filter(|&p| p * page < local_start) // middle pages only
+                .map(|p| (p, Self::page_bound(q, &mins[p], &maxs[p])))
+                .collect();
+            scored.sort_by(|a, b| {
+                b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal)
+            });
+            let pages_needed = self.cfg.k_middle.div_ceil(page);
+            let mut v: Vec<usize> = (0..sink_end).collect();
+            for &(p, _) in scored.iter().take(pages_needed) {
+                let lo = (p * page).max(sink_end);
+                let hi = ((p + 1) * page).min(local_start);
+                v.extend(lo..hi);
+            }
+            v.extend(local_start..t);
+            v.sort_unstable();
+            v.dedup();
+            self.sets[layer][head] = v;
+        }
+        PlanKind::Sparse
+    }
+
+    fn sets(&self, layer: usize) -> &[Vec<usize>] {
+        &self.sets[layer]
+    }
+
+    fn observe_probs(&mut self, _l: usize, _h: usize, _t: usize, _p: &[f32]) {}
+
+    fn observe_new_key(&mut self, layer: usize, head: usize, pos: usize, k: &[f32]) {
+        let page = self.cfg.quest_page;
+        let pi = pos / page;
+        let mins = &mut self.mins[layer][head];
+        let maxs = &mut self.maxs[layer][head];
+        while mins.len() <= pi {
+            mins.push(vec![f32::INFINITY; self.head_dim]);
+            maxs.push(vec![f32::NEG_INFINITY; self.head_dim]);
+        }
+        for i in 0..self.head_dim {
+            mins[pi][i] = mins[pi][i].min(k[i]);
+            maxs[pi][i] = maxs[pi][i].max(k[i]);
+        }
+    }
+
+    fn retrievals(&self) -> u64 {
+        0
+    }
+
+    /// Scoring touches L/page summaries of width 2d → ≈ 2/page of dense.
+    fn scoring_cost_factor(&self) -> f64 {
+        2.0 / self.cfg.quest_page as f64
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Double Sparsity (QAA): approximate scores with r "label" channels.
+// Variant note (DESIGN.md §4): channels are chosen per query as the top-r
+// |q| coordinates (the open implementation calibrates offline; the q-aware
+// variant needs no calibration corpus and has identical cost r/d · T).
+
+pub struct DsSelector {
+    cfg: SelectorConfig,
+    head_dim: usize,
+    /// Own copy of keys per (layer, head): flat [pos * d].
+    keys: Vec<Vec<Vec<f32>>>,
+    sets: Vec<Vec<Vec<usize>>>,
+}
+
+impl DsSelector {
+    pub fn new(
+        cfg: SelectorConfig,
+        n_layers: usize,
+        n_heads: usize,
+        head_dim: usize,
+    ) -> Self {
+        DsSelector {
+            cfg,
+            head_dim,
+            keys: vec![vec![Vec::new(); n_heads]; n_layers],
+            sets: vec![vec![Vec::new(); n_heads]; n_layers],
+        }
+    }
+}
+
+impl KvSelector for DsSelector {
+    fn kind(&self) -> SelectorKind {
+        SelectorKind::DoubleSparsity
+    }
+
+    fn plan(&mut self, layer: usize, ctx: &SelectorCtx<'_>) -> PlanKind {
+        let t = ctx.t;
+        let d = self.head_dim;
+        let r = self.cfg.ds_channels.min(d);
+        let sink_end = self.cfg.c_sink.min(t);
+        let local_start = t.saturating_sub(self.cfg.c_local).max(sink_end);
+        for (head, q) in ctx.q_heads.iter().enumerate() {
+            let absq: Vec<f32> = q.iter().map(|x| x.abs()).collect();
+            let chans = fx::top_k_indices(&absq, r);
+            let keys = &self.keys[layer][head];
+            let n = (keys.len() / d).min(t);
+            let mut scores = vec![f32::NEG_INFINITY; local_start.min(n)];
+            for (pos, s) in scores.iter_mut().enumerate().take(local_start.min(n)).skip(sink_end)
+            {
+                let krow = &keys[pos * d..(pos + 1) * d];
+                let mut acc = 0.0;
+                for &c in &chans {
+                    acc += q[c] * krow[c];
+                }
+                *s = acc;
+            }
+            let k_budget = self.cfg.k_middle.min(scores.len());
+            let mut v: Vec<usize> = (0..sink_end).collect();
+            if k_budget > 0 {
+                v.extend(fx::top_k_indices(&scores, k_budget));
+            }
+            v.extend(local_start..t);
+            v.sort_unstable();
+            v.dedup();
+            v.retain(|&p| p >= sink_end || p < sink_end); // keep clippy calm
+            self.sets[layer][head] = v;
+        }
+        PlanKind::Sparse
+    }
+
+    fn sets(&self, layer: usize) -> &[Vec<usize>] {
+        &self.sets[layer]
+    }
+
+    fn observe_probs(&mut self, _l: usize, _h: usize, _t: usize, _p: &[f32]) {}
+
+    fn observe_new_key(&mut self, layer: usize, head: usize, pos: usize, k: &[f32]) {
+        let store = &mut self.keys[layer][head];
+        let need = (pos + 1) * self.head_dim;
+        if store.len() < need {
+            store.resize(need, 0.0);
+        }
+        store[pos * self.head_dim..need].copy_from_slice(k);
+    }
+
+    fn retrievals(&self) -> u64 {
+        0
+    }
+
+    /// r of d channels scored over the full context: r/d of dense.
+    fn scoring_cost_factor(&self) -> f64 {
+        self.cfg.ds_channels as f64 / self.head_dim as f64
+    }
+}
+
+// ---------------------------------------------------------------------------
+// HShare: stride-based direct index sharing (the PoHS SOTA the paper
+// critiques — no similarity gate, no dilation).  At every block start all
+// heads retrieve; within the block the retrieved sets are reused verbatim.
+
+pub struct HShareSelector {
+    cfg: SelectorConfig,
+    n_heads: usize,
+    shared: Vec<Vec<SelectedSet>>,
+    sets: Vec<Vec<Vec<usize>>>,
+    retrievals: u64,
+    steps_since_retrieve: Vec<usize>,
+    seeded: Vec<bool>,
+}
+
+impl HShareSelector {
+    pub fn new(cfg: SelectorConfig, n_layers: usize, n_heads: usize) -> Self {
+        HShareSelector {
+            cfg,
+            n_heads,
+            shared: vec![vec![SelectedSet::empty(); n_heads]; n_layers],
+            sets: vec![vec![Vec::new(); n_heads]; n_layers],
+            retrievals: 0,
+            steps_since_retrieve: vec![usize::MAX; n_layers],
+            seeded: vec![false; n_layers],
+        }
+    }
+}
+
+impl KvSelector for HShareSelector {
+    fn kind(&self) -> SelectorKind {
+        SelectorKind::HShare
+    }
+
+    fn plan(&mut self, layer: usize, ctx: &SelectorCtx<'_>) -> PlanKind {
+        let stride = self.cfg.hshare_stride.max(1);
+        let due = !self.seeded[layer]
+            || self.steps_since_retrieve[layer] >= stride - 1;
+        if due {
+            self.steps_since_retrieve[layer] = 0;
+            self.seeded[layer] = true;
+            self.retrievals += self.n_heads as u64;
+            return PlanKind::Retrieve { heads: vec![true; self.n_heads] };
+        }
+        self.steps_since_retrieve[layer] += 1;
+        for h in 0..self.n_heads {
+            self.sets[layer][h] = self.shared[layer][h].materialize(
+                ctx.t,
+                self.cfg.c_sink,
+                self.cfg.c_local,
+            );
+        }
+        PlanKind::Sparse
+    }
+
+    fn sets(&self, layer: usize) -> &[Vec<usize>] {
+        &self.sets[layer]
+    }
+
+    fn observe_probs(&mut self, layer: usize, head: usize, t: usize, probs: &[f32]) {
+        let s = select_criteria(
+            probs,
+            t,
+            self.cfg.c_sink,
+            self.cfg.c_local,
+            self.cfg.k_middle,
+        );
+        self.sets[layer][head] =
+            s.materialize(t, self.cfg.c_sink, self.cfg.c_local);
+        self.shared[layer][head] = s;
+    }
+
+    fn retrievals(&self) -> u64 {
+        self.retrievals
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> SelectorConfig {
+        SelectorConfig {
+            c_sink: 2,
+            c_local: 4,
+            k_middle: 4,
+            quest_page: 4,
+            ds_channels: 2,
+            hshare_stride: 3,
+            ..Default::default()
+        }
+    }
+
+    fn ctx<'a>(t: usize, qs: &'a [Vec<f32>], hidden: &'a [f32]) -> SelectorCtx<'a> {
+        SelectorCtx { t, q_heads: qs, q_heads_raw: qs, hidden, last_keys: None }
+    }
+
+    #[test]
+    fn dense_always_dense() {
+        let mut s = DenseSelector::new(2, 2);
+        let qs = vec![vec![0.0; 4]; 2];
+        assert_eq!(s.plan(0, &ctx(10, &qs, &[])), PlanKind::DenseOnly);
+        assert_eq!(s.retrievals(), 0);
+    }
+
+    #[test]
+    fn oracle_retrieves_every_step_and_takes_top() {
+        let mut s = OracleSelector::new(cfg(), 1, 1);
+        let qs = vec![vec![0.0; 4]];
+        assert!(matches!(
+            s.plan(0, &ctx(50, &qs, &[])),
+            PlanKind::Retrieve { .. }
+        ));
+        let mut probs = vec![0.001f32; 51];
+        probs[7] = 0.9;
+        probs[30] = 0.5;
+        s.observe_probs(0, 0, 50, &probs);
+        let set = &s.sets(0)[0];
+        assert!(set.contains(&7) && set.contains(&30));
+        assert_eq!(set.len(), cfg().budget().min(50));
+        assert_eq!(s.retrievals(), 1);
+    }
+
+    #[test]
+    fn h2o_accumulates_and_evicts_lowest() {
+        let mut s = H2OSelector::new(cfg(), 1, 1);
+        // seed with heavy positions 0..6 (budget c_sink+k=6)
+        let mut probs = vec![0.0f32; 21];
+        for p in 0..6 {
+            probs[p] = 0.5 - p as f32 * 0.05;
+        }
+        s.observe_probs(0, 0, 20, &probs);
+        let qs = vec![vec![0.0; 4]];
+        assert_eq!(s.plan(0, &ctx(20, &qs, &[])), PlanKind::Sparse);
+        let set0 = s.sets(0)[0].clone();
+        assert!(set0.contains(&0) && set0.contains(&16));
+        // feed a sparse step where position 5 gets nothing and the new
+        // token is heavy → 5 (lowest cumulative, non-local) gets evicted
+        let probs_step: Vec<f32> = set0.iter().map(|_| 0.01).chain([0.8]).collect();
+        s.observe_sparse(0, 0, 20, &set0, &probs_step);
+        let retained: Vec<usize> =
+            s.state[0][0].iter().map(|e| e.0).collect();
+        assert!(retained.contains(&20), "new token retained");
+        assert!(!retained.contains(&5), "lowest-score evicted, got {retained:?}");
+    }
+
+    #[test]
+    fn streaming_window_shape() {
+        let mut s = StreamingSelector::new(cfg(), 1, 1);
+        let qs = vec![vec![0.0; 4]];
+        s.plan(0, &ctx(100, &qs, &[]));
+        let set = &s.sets(0)[0];
+        assert!(set.contains(&0) && set.contains(&1)); // sinks
+        assert!(set.contains(&99) && set.contains(&92)); // window of k+local=8
+        assert!(!set.contains(&50));
+        assert_eq!(s.scoring_cost_factor(), 0.0);
+    }
+
+    #[test]
+    fn quest_selects_hot_pages() {
+        let mut s = QuestSelector::new(cfg(), 1, 1, 4);
+        // 6 pages of 4; page 3 (pos 12..16) has huge keys aligned with q
+        for pos in 0..24 {
+            let v = if (12..16).contains(&pos) { 5.0 } else { 0.1 };
+            s.observe_new_key(0, 0, pos, &[v, v, v, v]);
+        }
+        let qs = vec![vec![1.0, 1.0, 1.0, 1.0]];
+        s.plan(0, &ctx(24, &qs, &[]));
+        let set = &s.sets(0)[0];
+        for p in 12..16 {
+            assert!(set.contains(&p), "hot page member {p} missing: {set:?}");
+        }
+        assert!(set.contains(&0) && set.contains(&23));
+    }
+
+    #[test]
+    fn ds_scores_with_label_channels() {
+        let mut s = DsSelector::new(cfg(), 1, 1, 4);
+        for pos in 0..30 {
+            // position 10: large on channel 0 (the q-heavy channel)
+            let k = if pos == 10 {
+                [9.0, 0.0, 0.0, 0.0]
+            } else {
+                [0.0, 0.0, 0.0, 0.1]
+            };
+            s.observe_new_key(0, 0, pos, &k);
+        }
+        let qs = vec![vec![5.0, 0.1, 0.1, 0.1]];
+        s.plan(0, &ctx(30, &qs, &[]));
+        assert!(s.sets(0)[0].contains(&10));
+    }
+
+    #[test]
+    fn hshare_stride_and_reuse() {
+        let mut s = HShareSelector::new(cfg(), 1, 2);
+        let qs = vec![vec![0.0; 4]; 2];
+        // step 1: block start → retrieve
+        assert!(matches!(
+            s.plan(0, &ctx(30, &qs, &[])),
+            PlanKind::Retrieve { .. }
+        ));
+        let mut probs = vec![0.001f32; 31];
+        probs[9] = 0.9;
+        s.observe_probs(0, 0, 30, &probs);
+        s.observe_probs(0, 1, 30, &probs);
+        // next 2 steps reuse
+        assert_eq!(s.plan(0, &ctx(31, &qs, &[])), PlanKind::Sparse);
+        assert!(s.sets(0)[0].contains(&9));
+        assert_eq!(s.plan(0, &ctx(32, &qs, &[])), PlanKind::Sparse);
+        // 4th step: stride 3 reached → retrieve again
+        assert!(matches!(
+            s.plan(0, &ctx(33, &qs, &[])),
+            PlanKind::Retrieve { .. }
+        ));
+        assert_eq!(s.retrievals(), 4);
+    }
+}

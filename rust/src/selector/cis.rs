@@ -1,0 +1,338 @@
+//! CIS — Clustered Index Sharing (paper Sec. IV-A) and the CPE composition
+//! (CIS + PSAW decode-time filtering; ETF is prefill-only and handled by
+//! the engine's prefill parameters).
+//!
+//! Mechanics per (layer, head):
+//!   * blocks of `s` steps enforce temporal adjacency; the first step of a
+//!     block retrieves for every head and stores the reference query;
+//!   * within a block, a head shares its reference set iff
+//!     cos(q_t, q_ref) ≥ τ (Eq. 12; Table VII ablates the space);
+//!   * shared sets are dilated: the top-m middle indices add ±r neighbors
+//!     (Eq. 13) to cover the Lipschitz centroid drift (Theorems 1–2);
+//!   * CPE additionally intersects deep layers' sets with the PSAW window
+//!     (Eq. 15).
+
+use crate::config::{SelectorConfig, SelectorKind, SimSpace};
+use crate::util::fx;
+
+use super::{
+    psaw_filter, psaw_start, select_criteria, KvSelector, PlanKind,
+    SelectedSet, SelectorCtx,
+};
+
+struct HeadState {
+    shared: SelectedSet,
+    ref_vec: Vec<f32>,
+}
+
+pub struct CisSelector {
+    cfg: SelectorConfig,
+    n_layers: usize,
+    n_heads: usize,
+    #[allow(dead_code)]
+    head_dim: usize,
+    state: Vec<Vec<HeadState>>,
+    sets: Vec<Vec<Vec<usize>>>,
+    /// step index within the current share block, per layer.
+    block_step: Vec<usize>,
+    seeded: Vec<bool>,
+    retrievals: u64,
+    /// Retrieval decisions of the current step (set by `plan`).
+    pending_retrieve: Vec<Vec<bool>>,
+    /// Diagnostics for the harnesses.
+    pub shared_head_steps: u64,
+    pub total_head_steps: u64,
+}
+
+impl CisSelector {
+    pub fn new(
+        cfg: SelectorConfig,
+        n_layers: usize,
+        n_heads: usize,
+        head_dim: usize,
+    ) -> Self {
+        CisSelector {
+            cfg,
+            n_layers,
+            n_heads,
+            head_dim,
+            state: (0..n_layers)
+                .map(|_| {
+                    (0..n_heads)
+                        .map(|_| HeadState {
+                            shared: SelectedSet::empty(),
+                            ref_vec: Vec::new(),
+                        })
+                        .collect()
+                })
+                .collect(),
+            sets: vec![vec![Vec::new(); n_heads]; n_layers],
+            block_step: vec![0; n_layers],
+            seeded: vec![false; n_layers],
+            retrievals: 0,
+            pending_retrieve: vec![vec![false; n_heads]; n_layers],
+            shared_head_steps: 0,
+            total_head_steps: 0,
+        }
+    }
+
+    fn sim_vec<'a>(&self, ctx: &'a SelectorCtx<'_>, head: usize) -> &'a [f32] {
+        match self.cfg.sim_space {
+            SimSpace::Query => &ctx.q_heads_raw[head],
+            SimSpace::Hidden => ctx.hidden,
+            SimSpace::Key => ctx
+                .last_keys
+                .map(|ks| ks[head].as_slice())
+                .unwrap_or(&ctx.q_heads[head]),
+        }
+    }
+
+    fn psaw_apply(&self, layer: usize, t: usize, set: &mut Vec<usize>) {
+        if self.cfg.kind != SelectorKind::Cpe || !psaw_active(&self.cfg) {
+            return;
+        }
+        let ell_s =
+            (self.n_layers as f32 * self.cfg.sched_ell_s_frac) as usize;
+        let start = psaw_start(
+            t,
+            layer,
+            self.n_layers,
+            ell_s,
+            self.cfg.psaw_phi,
+            self.cfg.psaw_alpha,
+        );
+        psaw_filter(set, start, self.cfg.c_sink);
+    }
+}
+
+fn psaw_active(cfg: &SelectorConfig) -> bool {
+    cfg.psaw_enabled || cfg.kind == SelectorKind::Cpe
+}
+
+impl KvSelector for CisSelector {
+    fn kind(&self) -> SelectorKind {
+        self.cfg.kind.clone()
+    }
+
+    fn plan(&mut self, layer: usize, ctx: &SelectorCtx<'_>) -> PlanKind {
+        let s = self.cfg.block_size.max(1);
+        self.total_head_steps += self.n_heads as u64;
+
+        // Block start (or first step after prefill): retrieve all heads.
+        let block_start = !self.seeded[layer] || self.block_step[layer] % s == 0;
+        if layer == self.n_layers - 1 {
+            // advance the block clock once per step (after the last layer
+            // plans; every layer shares the same cadence).
+        }
+        if block_start {
+            self.seeded[layer] = true;
+            self.retrievals += self.n_heads as u64;
+            self.pending_retrieve[layer] = vec![true; self.n_heads];
+            for head in 0..self.n_heads {
+                let v = self.sim_vec(ctx, head).to_vec();
+                self.state[layer][head].ref_vec = v;
+            }
+            self.bump_block(layer);
+            return PlanKind::Retrieve { heads: vec![true; self.n_heads] };
+        }
+
+        // Within the block: per-head cosine gate.
+        let mut retrieve = vec![false; self.n_heads];
+        let mut any = false;
+        for head in 0..self.n_heads {
+            let sim = fx::cosine(
+                self.sim_vec(ctx, head),
+                &self.state[layer][head].ref_vec,
+            );
+            if sim < self.cfg.sim_threshold {
+                retrieve[head] = true;
+                any = true;
+                self.retrievals += 1;
+                // refresh the reference so subsequent steps gate against
+                // the most recent retrieval (paper: "choose the most
+                // recent such j").
+                self.state[layer][head].ref_vec =
+                    self.sim_vec(ctx, head).to_vec();
+            } else {
+                self.shared_head_steps += 1;
+                let mut set = self.state[layer][head].shared.materialize(
+                    ctx.t,
+                    self.cfg.c_sink,
+                    self.cfg.c_local,
+                );
+                self.psaw_apply(layer, ctx.t, &mut set);
+                self.sets[layer][head] = set;
+            }
+        }
+        self.bump_block(layer);
+        if any {
+            self.pending_retrieve[layer] = retrieve.clone();
+            PlanKind::Retrieve { heads: retrieve }
+        } else {
+            PlanKind::Sparse
+        }
+    }
+
+    fn sets(&self, layer: usize) -> &[Vec<usize>] {
+        &self.sets[layer]
+    }
+
+    fn observe_probs(&mut self, layer: usize, head: usize, t: usize, probs: &[f32]) {
+        let mut sel = select_criteria(
+            probs,
+            t,
+            self.cfg.c_sink,
+            self.cfg.c_local,
+            self.cfg.k_middle,
+        );
+        sel.dilate(self.cfg.dilate_m(), self.cfg.dilate_radius);
+        let mut set =
+            sel.materialize(t, self.cfg.c_sink, self.cfg.c_local);
+        self.psaw_apply(layer, t, &mut set);
+        self.sets[layer][head] = set;
+        self.state[layer][head].shared = sel;
+    }
+
+    fn retrievals(&self) -> u64 {
+        self.retrievals
+    }
+}
+
+impl CisSelector {
+    fn bump_block(&mut self, layer: usize) {
+        self.block_step[layer] += 1;
+    }
+
+    /// Fraction of head-steps served by sharing (diagnostics).
+    pub fn share_ratio(&self) -> f64 {
+        if self.total_head_steps == 0 {
+            return 0.0;
+        }
+        self.shared_head_steps as f64 / self.total_head_steps as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(kind: SelectorKind) -> SelectorConfig {
+        SelectorConfig {
+            kind,
+            c_sink: 2,
+            c_local: 4,
+            k_middle: 4,
+            block_size: 4,
+            sim_threshold: 0.8,
+            dilate_m_frac: 0.5,
+            dilate_radius: 1,
+            ..Default::default()
+        }
+    }
+
+    fn qh(dir: &[f32]) -> Vec<Vec<f32>> {
+        vec![dir.to_vec()]
+    }
+
+    #[test]
+    fn block_start_retrieves_all_heads() {
+        let mut s = CisSelector::new(cfg(SelectorKind::Cis), 1, 2, 4);
+        let qs = vec![vec![1.0, 0.0, 0.0, 0.0]; 2];
+        let ctx = SelectorCtx { t: 40, q_heads: &qs, q_heads_raw: &qs, hidden: &[], last_keys: None };
+        match s.plan(0, &ctx) {
+            PlanKind::Retrieve { heads } => assert_eq!(heads, vec![true, true]),
+            p => panic!("expected retrieve, got {p:?}"),
+        }
+        assert_eq!(s.retrievals(), 2);
+    }
+
+    #[test]
+    fn similar_queries_share_divergent_retrieve() {
+        let mut s = CisSelector::new(cfg(SelectorKind::Cis), 1, 1, 4);
+        let q0 = qh(&[1.0, 0.0, 0.0, 0.0]);
+        let ctx0 = SelectorCtx { t: 40, q_heads: &q0, q_heads_raw: &q0, hidden: &[], last_keys: None };
+        s.plan(0, &ctx0); // block start, stores ref
+        let mut probs = vec![0.001f32; 41];
+        probs[10] = 0.9;
+        s.observe_probs(0, 0, 40, &probs);
+
+        // similar query → share
+        let q1 = qh(&[0.99, 0.05, 0.0, 0.0]);
+        let ctx1 = SelectorCtx { t: 41, q_heads: &q1, q_heads_raw: &q1, hidden: &[], last_keys: None };
+        assert_eq!(s.plan(0, &ctx1), PlanKind::Sparse);
+        assert!(s.sets(0)[0].contains(&10));
+        assert_eq!(s.retrievals(), 1);
+
+        // orthogonal query → per-head retrieval
+        let q2 = qh(&[0.0, 1.0, 0.0, 0.0]);
+        let ctx2 = SelectorCtx { t: 42, q_heads: &q2, q_heads_raw: &q2, hidden: &[], last_keys: None };
+        assert!(matches!(s.plan(0, &ctx2), PlanKind::Retrieve { .. }));
+        assert_eq!(s.retrievals(), 2);
+    }
+
+    #[test]
+    fn dilation_expands_shared_set() {
+        let mut s = CisSelector::new(cfg(SelectorKind::Cis), 1, 1, 4);
+        let q = qh(&[1.0, 0.0, 0.0, 0.0]);
+        let ctx = SelectorCtx { t: 60, q_heads: &q, q_heads_raw: &q, hidden: &[], last_keys: None };
+        s.plan(0, &ctx);
+        let mut probs = vec![0.001f32; 61];
+        probs[20] = 0.9;
+        probs[30] = 0.7;
+        s.observe_probs(0, 0, 60, &probs);
+        let set = &s.sets(0)[0];
+        // m = k*0.5 = 2 winners dilated with r=1
+        for p in [19, 20, 21, 29, 30, 31] {
+            assert!(set.contains(&p), "missing dilated {p}: {set:?}");
+        }
+    }
+
+    #[test]
+    fn new_block_forces_retrieval() {
+        let mut s = CisSelector::new(cfg(SelectorKind::Cis), 1, 1, 4);
+        let q = qh(&[1.0, 0.0, 0.0, 0.0]);
+        let mk = |t| SelectorCtx { t, q_heads: &q, q_heads_raw: &q, hidden: &[], last_keys: None };
+        assert!(matches!(s.plan(0, &mk(40)), PlanKind::Retrieve { .. }));
+        let probs = vec![0.02f32; 41];
+        s.observe_probs(0, 0, 40, &probs);
+        assert_eq!(s.plan(0, &mk(41)), PlanKind::Sparse);
+        assert_eq!(s.plan(0, &mk(42)), PlanKind::Sparse);
+        assert_eq!(s.plan(0, &mk(43)), PlanKind::Sparse);
+        // block size 4 exhausted → retrieve
+        assert!(matches!(s.plan(0, &mk(44)), PlanKind::Retrieve { .. }));
+    }
+
+    #[test]
+    fn cpe_filters_deep_layers_with_psaw() {
+        let mut c = cfg(SelectorKind::Cpe);
+        c.sched_ell_s_frac = 0.0; // ℓs = 0 → deepest layer prunes hardest
+        c.psaw_phi = 0.3;
+        c.psaw_alpha = 2.0;
+        let n_layers = 4;
+        let mut s = CisSelector::new(c, n_layers, 1, 4);
+        let q = qh(&[1.0, 0.0, 0.0, 0.0]);
+        let ctx = SelectorCtx { t: 200, q_heads: &q, q_heads_raw: &q, hidden: &[], last_keys: None };
+        s.plan(3, &ctx);
+        let mut probs = vec![0.001f32; 201];
+        probs[50] = 0.9; // mid-range critical
+        s.observe_probs(3, 0, 200, &probs);
+        let set = &s.sets(3)[0];
+        let p_start = psaw_start(200, 3, n_layers, 0, 0.3, 2.0);
+        assert!(p_start > 50, "schedule must prune pos 50 (start={p_start})");
+        assert!(!set.contains(&50), "PSAW must drop mid-range at deep layer");
+        assert!(set.contains(&0)); // sinks survive
+        assert!(set.contains(&199)); // local survives
+    }
+
+    #[test]
+    fn share_ratio_diagnostic() {
+        let mut s = CisSelector::new(cfg(SelectorKind::Cis), 1, 1, 4);
+        let q = qh(&[1.0, 0.0, 0.0, 0.0]);
+        let mk = |t| SelectorCtx { t, q_heads: &q, q_heads_raw: &q, hidden: &[], last_keys: None };
+        s.plan(0, &mk(40));
+        s.observe_probs(0, 0, 40, &vec![0.02f32; 41]);
+        s.plan(0, &mk(41));
+        s.plan(0, &mk(42));
+        assert!((s.share_ratio() - 2.0 / 3.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,344 @@
+//! KV selectors: the paper's contribution (CIS / PSAW / CPE) and every
+//! baseline it compares against (dense, top-k oracle, H2O, StreamingLLM,
+//! Quest, Double Sparsity, HShare) behind a single trait.
+//!
+//! A selector instance is per-sequence state.  The engine drives it per
+//! (step, layer):
+//!
+//!   1. `plan(layer, ctx)` — the selector refreshes its per-head index
+//!      sets for this step and tells the engine which execution path to
+//!      take (dense-only / retrieve-then-sparse / sparse).
+//!   2. On retrieval the engine runs the dense (full-scoring) artifact and
+//!      feeds each retrieving head's post-softmax row to `observe_probs`,
+//!      after which the refreshed `sets()` drive the sparse TSA step.
+//!   3. After every step the engine reports the new token's keys via
+//!      `observe_new_key` (Quest page summaries, DS caches) and the sparse
+//!      probs via `observe_sparse` (H2O accumulation).
+//!
+//! Cost accounting: `retrievals()` counts *head-level* full-scoring events
+//! (the paper's R_t), from which ρ̂ = R / (H · n_layers · T) is derived.
+
+pub mod baselines;
+pub mod cis;
+
+use crate::config::{SelectorConfig, SelectorKind};
+
+/// Per-step context handed to `plan`.
+pub struct SelectorCtx<'a> {
+    /// Number of cached tokens; the current query's position index.
+    pub t: usize,
+    /// Per-head RoPE'd query for this layer (computed by the coordinator's
+    /// host-side projection; see `model::proj`).  Used for score-based
+    /// retrieval (Quest, DS).
+    pub q_heads: &'a [Vec<f32>],
+    /// Pre-RoPE queries — the similarity space of Eq. 12 (CIS gating).
+    pub q_heads_raw: &'a [Vec<f32>],
+    /// The layer's input hidden state (similarity-space ablation).
+    pub hidden: &'a [f32],
+    /// Per-head key of the previous position (similarity-space ablation).
+    pub last_keys: Option<&'a [Vec<f32>]>,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum PlanKind {
+    /// Run only the dense step and use its outputs (dense baseline).
+    DenseOnly,
+    /// Run the dense step for full scoring (charged to `heads`), feed
+    /// probs back, then run the sparse step with refreshed sets.
+    Retrieve { heads: Vec<bool> },
+    /// Run the sparse step with the current sets.
+    Sparse,
+}
+
+pub trait KvSelector: Send {
+    fn kind(&self) -> SelectorKind;
+
+    /// Decide the execution path for (layer, step) and refresh sets.
+    fn plan(&mut self, layer: usize, ctx: &SelectorCtx<'_>) -> PlanKind;
+
+    /// Current per-head index sets for the sparse step (valid after
+    /// `plan`).  Sets exclude the current position t (the TSA artifact
+    /// appends the self slot in-graph).
+    fn sets(&self, layer: usize) -> &[Vec<usize>];
+
+    /// Full post-softmax attention row for a retrieving head.  `probs` has
+    /// one entry per cached position 0..t plus the self slot at index t.
+    fn observe_probs(&mut self, layer: usize, head: usize, t: usize, probs: &[f32]);
+
+    /// Post-softmax probs over a sparse step's selected set (+ self slot
+    /// last).  Default: ignored.
+    fn observe_sparse(
+        &mut self,
+        _layer: usize,
+        _head: usize,
+        _t: usize,
+        _set: &[usize],
+        _probs: &[f32],
+    ) {
+    }
+
+    /// New token's key row for (layer, head) at position `pos`.
+    fn observe_new_key(&mut self, _layer: usize, _head: usize, _pos: usize, _k: &[f32]) {}
+
+    /// Whether this selector consumes sparse-step probability rows
+    /// (`observe_sparse`).  When false the engine skips the probs
+    /// device→host conversion entirely (perf lever).
+    fn needs_sparse_probs(&self) -> bool {
+        false
+    }
+
+    /// Cumulative head-level retrieval count (paper's Σ R_t).
+    fn retrievals(&self) -> u64;
+
+    /// Approximate per-retrieval scoring cost relative to dense scoring
+    /// (the paper's Comp* column): 1.0 = full q·K over the context.
+    fn scoring_cost_factor(&self) -> f64 {
+        1.0
+    }
+}
+
+/// Construct a selector for one sequence.
+pub fn build(
+    cfg: &SelectorConfig,
+    n_layers: usize,
+    n_heads: usize,
+    head_dim: usize,
+) -> Box<dyn KvSelector> {
+    match cfg.kind {
+        SelectorKind::Dense => Box::new(baselines::DenseSelector::new(n_layers, n_heads)),
+        SelectorKind::TopKOracle => {
+            Box::new(baselines::OracleSelector::new(cfg.clone(), n_layers, n_heads))
+        }
+        SelectorKind::H2O => {
+            Box::new(baselines::H2OSelector::new(cfg.clone(), n_layers, n_heads))
+        }
+        SelectorKind::StreamingLlm => {
+            Box::new(baselines::StreamingSelector::new(cfg.clone(), n_layers, n_heads))
+        }
+        SelectorKind::Quest => Box::new(baselines::QuestSelector::new(
+            cfg.clone(),
+            n_layers,
+            n_heads,
+            head_dim,
+        )),
+        SelectorKind::DoubleSparsity => Box::new(baselines::DsSelector::new(
+            cfg.clone(),
+            n_layers,
+            n_heads,
+            head_dim,
+        )),
+        SelectorKind::HShare => {
+            Box::new(baselines::HShareSelector::new(cfg.clone(), n_layers, n_heads))
+        }
+        SelectorKind::Cis | SelectorKind::Cpe => Box::new(cis::CisSelector::new(
+            cfg.clone(),
+            n_layers,
+            n_heads,
+            head_dim,
+        )),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// shared set-construction helpers (paper Sec. IV-A "Selection Criteria")
+
+/// Build C_t = sinks ∪ middle ∪ local from a full probs row.
+///
+/// `probs[0..t]` are cached positions (`probs[t]` is the self slot and is
+/// ignored — self attention is in-graph).  Middle top-k is taken over
+/// `[c_sink, t - c_local)` by descending weight; the returned `middle`
+/// preserves that order (needed by dilation's top-m rule).
+pub fn select_criteria(
+    probs: &[f32],
+    t: usize,
+    c_sink: usize,
+    c_local: usize,
+    k: usize,
+) -> SelectedSet {
+    let t = t.min(probs.len().saturating_sub(1).max(probs.len().min(1)));
+    let sink_end = c_sink.min(t);
+    let local_start = t.saturating_sub(c_local).max(sink_end).min(probs.len());
+    let mut middle: Vec<usize> = Vec::new();
+    if local_start > sink_end {
+        let region = &probs[sink_end..local_start];
+        let top = crate::util::fx::top_k_indices(region, k);
+        middle = top.into_iter().map(|i| i + sink_end).collect();
+    }
+    SelectedSet { t, sink_end, local_start, middle }
+}
+
+/// Decomposed selected set (kept structured so dilation + local-window
+/// refresh stay cheap as t advances).
+#[derive(Clone, Debug)]
+pub struct SelectedSet {
+    /// Step at which the middle set was retrieved.
+    pub t: usize,
+    pub sink_end: usize,
+    pub local_start: usize,
+    /// Middle indices in descending-score order.
+    pub middle: Vec<usize>,
+}
+
+impl SelectedSet {
+    pub fn empty() -> Self {
+        SelectedSet { t: 0, sink_end: 0, local_start: 0, middle: Vec::new() }
+    }
+
+    /// Dilate the top-m middle indices by ±r (Eq. 13), clipped to the
+    /// middle region that existed at retrieval time.
+    pub fn dilate(&mut self, m: usize, r: usize) {
+        if r == 0 || self.middle.is_empty() {
+            return;
+        }
+        let lo = self.sink_end;
+        let hi = self.local_start;
+        let winners: Vec<usize> =
+            self.middle.iter().take(m).copied().collect();
+        for p in winners {
+            for dj in 1..=r {
+                if p >= dj && p - dj >= lo {
+                    self.middle.push(p - dj);
+                }
+                if p + dj < hi {
+                    self.middle.push(p + dj);
+                }
+            }
+        }
+        // Dedup while keeping ranking order for the original prefix.
+        let mut seen = std::collections::HashSet::new();
+        self.middle.retain(|&x| seen.insert(x));
+    }
+
+    /// Materialize the full sorted index set at current step `t_now`
+    /// (local window slides with t; sinks and middle are frozen).
+    pub fn materialize(&self, t_now: usize, c_sink: usize, c_local: usize) -> Vec<usize> {
+        let sink_end = c_sink.min(t_now);
+        let local_start = t_now.saturating_sub(c_local).max(sink_end);
+        let mut out: Vec<usize> = (0..sink_end).collect();
+        out.extend(self.middle.iter().copied().filter(|&p| p < local_start));
+        out.extend(local_start..t_now);
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+}
+
+/// PSAW decode-time window start P_ℓ(t) (Eq. 15).
+pub fn psaw_start(
+    t: usize,
+    layer: usize,
+    n_layers: usize,
+    ell_s: usize,
+    phi: f32,
+    alpha: f32,
+) -> usize {
+    if layer < ell_s {
+        return 0;
+    }
+    let frac = (layer - ell_s) as f32 / ((n_layers - ell_s) as f32).max(1.0);
+    let keep = phi.powf(alpha * frac);
+    ((1.0 - keep) * t as f32).floor() as usize
+}
+
+/// Apply the PSAW mask to a materialized set: drop indices in
+/// (c_sink, P_ℓ(t)).
+pub fn psaw_filter(set: &mut Vec<usize>, p_start: usize, c_sink: usize) {
+    if p_start == 0 {
+        return;
+    }
+    set.retain(|&p| p < c_sink || p >= p_start);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn probs_with_peaks(t: usize, peaks: &[(usize, f32)]) -> Vec<f32> {
+        let mut p = vec![0.001f32; t + 1];
+        for &(i, w) in peaks {
+            p[i] = w;
+        }
+        p
+    }
+
+    #[test]
+    fn select_criteria_budget_groups() {
+        let t = 100;
+        let probs = probs_with_peaks(t, &[(50, 0.5), (60, 0.3), (2, 0.4)]);
+        let s = select_criteria(&probs, t, 4, 16, 2);
+        assert_eq!(s.sink_end, 4);
+        assert_eq!(s.local_start, 84);
+        assert_eq!(s.middle, vec![50, 60]); // descending by score, sinks excluded
+        let m = s.materialize(t, 4, 16);
+        assert!(m.contains(&0) && m.contains(&3)); // sinks
+        assert!(m.contains(&50) && m.contains(&60));
+        assert!(m.contains(&84) && m.contains(&99)); // local
+        assert!(!m.contains(&100)); // never includes self
+        assert_eq!(m.len(), 4 + 2 + 16);
+    }
+
+    #[test]
+    fn select_criteria_short_context_takes_everything() {
+        let t = 6;
+        let probs = vec![0.1; t + 1];
+        let s = select_criteria(&probs, t, 4, 16, 8);
+        let m = s.materialize(t, 4, 16);
+        assert_eq!(m, (0..t).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn dilation_adds_neighbors_within_middle_region() {
+        let t = 100;
+        let probs = probs_with_peaks(t, &[(50, 0.5), (60, 0.3)]);
+        let mut s = select_criteria(&probs, t, 4, 16, 2);
+        s.dilate(1, 2); // only top-1 (=50) dilated, radius 2
+        let m = s.materialize(t, 4, 16);
+        for p in [48, 49, 50, 51, 52] {
+            assert!(m.contains(&p), "missing {p}");
+        }
+        assert!(!m.contains(&59) && !m.contains(&61), "60 must not dilate");
+    }
+
+    #[test]
+    fn dilation_clips_at_region_bounds() {
+        let t = 40;
+        let probs = probs_with_peaks(t, &[(4, 0.9)]); // at sink boundary
+        let mut s = select_criteria(&probs, t, 4, 8, 1);
+        s.dilate(1, 3);
+        // nothing below sink_end=4 enters middle
+        assert!(s.middle.iter().all(|&p| (4..32).contains(&p)));
+    }
+
+    #[test]
+    fn materialize_slides_local_window() {
+        let t0 = 60;
+        let probs = probs_with_peaks(t0, &[(30, 0.9)]);
+        let s = select_criteria(&probs, t0, 2, 8, 1);
+        let m1 = s.materialize(60, 2, 8);
+        let m2 = s.materialize(70, 2, 8);
+        assert!(m1.contains(&52) && !m1.contains(&62));
+        assert!(m2.contains(&62) && m2.contains(&69));
+        assert!(m2.contains(&30)); // frozen middle persists
+    }
+
+    #[test]
+    fn psaw_start_schedule() {
+        // below ell_s: no pruning
+        assert_eq!(psaw_start(1000, 2, 8, 6, 0.7, 1.0), 0);
+        // at ell_s the exponent is 0 -> keep all
+        assert_eq!(psaw_start(1000, 6, 8, 6, 0.7, 1.0), 0);
+        // top layer keeps phi^alpha fraction
+        let p = psaw_start(1000, 8, 8, 6, 0.7, 1.0);
+        assert_eq!(p, ((1.0 - 0.7f32) * 1000.0) as usize);
+        // monotone in depth
+        let a = psaw_start(1000, 7, 8, 6, 0.7, 1.0);
+        assert!(a <= p);
+    }
+
+    #[test]
+    fn psaw_filter_keeps_sinks() {
+        let mut set = vec![0, 1, 5, 100, 200, 300];
+        psaw_filter(&mut set, 150, 4);
+        assert_eq!(set, vec![0, 1, 200, 300]);
+    }
+}

@@ -1,0 +1,152 @@
+//! Async request loop (tokio is unavailable offline; see DESIGN.md §6b).
+//!
+//! The server runs the scheduler on a dedicated engine thread; clients
+//! submit via an mpsc ingress channel and receive completions on a
+//! per-request reply channel.  Backpressure: the ingress channel is
+//! bounded, so producers block when the queue is deep — the same contract
+//! a tokio mpsc would give.
+
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use crate::config::EngineConfig;
+use crate::coordinator::{RequestIn, RequestOut, Scheduler};
+use crate::model::Engine;
+
+enum Msg {
+    Request(RequestIn, SyncSender<RequestOut>),
+    Shutdown,
+}
+
+/// Handle used by clients to talk to a running server.
+#[derive(Clone)]
+pub struct ClientHandle {
+    tx: SyncSender<Msg>,
+}
+
+#[derive(Debug)]
+pub enum SubmitError {
+    /// Ingress queue full (backpressure signal).
+    Busy,
+    /// Server shut down.
+    Closed,
+}
+
+impl ClientHandle {
+    /// Blocking request/response.
+    pub fn generate(&self, req: RequestIn) -> Result<RequestOut, SubmitError> {
+        let (rtx, rrx) = sync_channel(1);
+        self.tx
+            .send(Msg::Request(req, rtx))
+            .map_err(|_| SubmitError::Closed)?;
+        rrx.recv().map_err(|_| SubmitError::Closed)
+    }
+
+    /// Non-blocking submit; returns the reply receiver.
+    pub fn submit(
+        &self,
+        req: RequestIn,
+    ) -> Result<Receiver<RequestOut>, SubmitError> {
+        let (rtx, rrx) = sync_channel(1);
+        match self.tx.try_send(Msg::Request(req, rtx)) {
+            Ok(()) => Ok(rrx),
+            Err(TrySendError::Full(_)) => Err(SubmitError::Busy),
+            Err(TrySendError::Disconnected(_)) => Err(SubmitError::Closed),
+        }
+    }
+}
+
+/// A running server (engine thread + ingress channel).
+pub struct Server {
+    handle: Option<JoinHandle<Result<()>>>,
+    tx: SyncSender<Msg>,
+}
+
+impl Server {
+    /// Spawn the engine thread.  PJRT handles are not `Send`, so the
+    /// engine + scheduler are constructed *inside* the thread from the
+    /// config; only plain-data messages cross the channel.
+    pub fn spawn_with_config(
+        cfg: EngineConfig,
+        queue_depth: usize,
+    ) -> Server {
+        let (tx, rx) = sync_channel::<Msg>(queue_depth);
+        let handle = std::thread::spawn(move || -> Result<()> {
+            let engine = Engine::new(cfg)?;
+            let mut sched = Scheduler::new(engine);
+            let mut replies: Vec<(u64, SyncSender<RequestOut>)> = Vec::new();
+            let mut open = true;
+            while open || sched.pending() > 0 {
+                // Drain ingress without blocking while work is in flight;
+                // block when idle.
+                loop {
+                    let msg = if sched.pending() == 0 && open {
+                        match rx.recv() {
+                            Ok(m) => Some(m),
+                            Err(_) => {
+                                open = false;
+                                None
+                            }
+                        }
+                    } else {
+                        match rx.try_recv() {
+                            Ok(m) => Some(m),
+                            Err(std::sync::mpsc::TryRecvError::Empty) => None,
+                            Err(_) => {
+                                open = false;
+                                None
+                            }
+                        }
+                    };
+                    match msg {
+                        Some(Msg::Request(req, reply)) => {
+                            replies.push((req.id, reply));
+                            sched.submit(req);
+                        }
+                        Some(Msg::Shutdown) => {
+                            open = false;
+                            break;
+                        }
+                        None => break,
+                    }
+                }
+                if sched.pending() > 0 {
+                    for done in sched.step()? {
+                        if let Some(i) =
+                            replies.iter().position(|(id, _)| *id == done.id)
+                        {
+                            let (_, reply) = replies.swap_remove(i);
+                            let _ = reply.send(done);
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+        Server { handle: Some(handle), tx }
+    }
+
+    pub fn client(&self) -> ClientHandle {
+        ClientHandle { tx: self.tx.clone() }
+    }
+
+    /// Graceful shutdown: waits for in-flight requests.
+    pub fn shutdown(mut self) -> Result<()> {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            h.join().map_err(|_| anyhow::anyhow!("engine thread panicked"))??;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}

@@ -1,0 +1,296 @@
+//! PrHS information-theoretic machinery (paper Secs. II-C, VII, VIII).
+//!
+//! Implements the dropped-mass accounting and the MI-loss upper bound
+//! `g(δ) = 2·[h_b(δ) + δ·log L]` (Eq. 4), the posterior-bias bound for
+//! PoHS selectors (Eq. 8), the pre-hoc certificate (Eq. 9), and the CIS /
+//! PSAW / ETF design-time bounds (Theorems 2, 7, 8).  Used by the Fig-1
+//! harness and the property-test suites.
+
+/// Binary entropy h_b(p) in nats. h_b(0) = h_b(1) = 0.
+pub fn binary_entropy(p: f64) -> f64 {
+    if p <= 0.0 || p >= 1.0 {
+        return 0.0;
+    }
+    -(p * p.ln()) - ((1.0 - p) * (1.0 - p).ln())
+}
+
+/// MI-loss bound g(δ) = 2·[h_b(δ) + δ·ln L] (Eq. 4).
+///
+/// Per the paper's footnote 1 the domain is restricted to
+/// (0, L/(1+L)] for monotonicity; we clamp δ into [0, L/(1+L)].
+pub fn mi_bound(delta: f64, l: usize) -> f64 {
+    let cap = l as f64 / (1.0 + l as f64);
+    let d = delta.clamp(0.0, cap);
+    2.0 * (binary_entropy(d) + d * (l as f64).ln())
+}
+
+/// Retained attention mass τ_S = Σ_{i∈S} A_i (Eq. 3).
+/// `probs` is a full attention row; `selected` holds retained indices.
+pub fn retained_mass(probs: &[f32], selected: &[usize]) -> f64 {
+    selected
+        .iter()
+        .filter(|&&i| i < probs.len())
+        .map(|&i| probs[i] as f64)
+        .sum()
+}
+
+/// Dropped mass δ_S = 1 − τ_S (Eq. 3), clamped to [0, 1] against float
+/// accumulation error.
+pub fn dropped_mass(probs: &[f32], selected: &[usize]) -> f64 {
+    (1.0 - retained_mass(probs, selected)).clamp(0.0, 1.0)
+}
+
+/// Oracle top-k dropped mass δ*(q): the minimum achievable at budget k
+/// (Eq. 5 / Theorem 3).
+pub fn oracle_dropped_mass(probs: &[f32], k: usize) -> f64 {
+    let idx = crate::util::fx::top_k_indices(probs, k);
+    dropped_mass(probs, &idx)
+}
+
+/// β_th(q) = τ*(q) − τ_S(q): the retained-mass gap of a selector vs the
+/// top-k oracle at the same budget (Definition 1). Non-negative by
+/// optimality of top-k; tiny negatives from float error are clamped.
+pub fn beta_th(probs: &[f32], selected: &[usize]) -> f64 {
+    let tau_star = 1.0 - oracle_dropped_mass(probs, selected.len());
+    (tau_star - retained_mass(probs, selected)).max(0.0)
+}
+
+/// Total-variation distance between two probability rows (Eq. 7).
+pub fn total_variation(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    0.5 * a
+        .iter()
+        .zip(b)
+        .map(|(x, y)| (*x as f64 - *y as f64).abs())
+        .sum::<f64>()
+}
+
+/// Pre-hoc MI bound (Eq. 9 / Theorem 5): g(δ* + β_th).
+pub fn prehoc_bound(delta_star: f64, beta_th: f64, l: usize) -> f64 {
+    mi_bound(delta_star + beta_th, l)
+}
+
+/// Post-hoc MI bound (Eq. 8 / Theorem 4): g(δ* + 2ε_D).
+pub fn posthoc_bound(delta_star: f64, epsilon_d: f64, l: usize) -> f64 {
+    mi_bound(delta_star + 2.0 * epsilon_d, l)
+}
+
+/// KL-variant lower bound on retained information (Eq. U2):
+/// I_S ≥ I_full − ln(1/τ_S). Returns the loss term ln(1/τ_S).
+pub fn kl_loss_bound(tau: f64) -> f64 {
+    if tau <= 0.0 {
+        f64::INFINITY
+    } else {
+        (1.0 / tau).ln()
+    }
+}
+
+/// CIS attention-variation bound (Theorem 2 / Lemma 7):
+/// Δ_att(τ) ≤ (2·K_max/√d)·√(2−2τ) for unit-norm queries with cosine
+/// similarity ≥ τ; β_th^CIS ≤ 2·Δ_att(τ).
+pub fn cis_beta_bound(k_max: f64, head_dim: usize, cos_sim: f64) -> f64 {
+    let tau = cos_sim.clamp(-1.0, 1.0);
+    let delta_att = 2.0 * k_max / (head_dim as f64).sqrt()
+        * (2.0 - 2.0 * tau).max(0.0).sqrt();
+    2.0 * delta_att
+}
+
+/// PSAW worst-case dropped-mass bound (Theorem 7):
+/// δ_ℓ ≤ κ·e^{−λ·D_ℓ} where D_ℓ is the window-start distance.
+pub fn psaw_delta_bound(kappa: f64, lambda: f64, window_dist: f64) -> f64 {
+    (kappa * (-lambda * window_dist).exp()).min(1.0)
+}
+
+/// ETF per-layer mass-gap bound (Theorem 8):
+/// β_ℓ ≤ (Q_max/√d)·B·e^{−μ(ℓ−ℓ_s)}.
+pub fn etf_beta_bound(
+    q_max: f64,
+    head_dim: usize,
+    b_drift: f64,
+    mu: f64,
+    depth_past_ls: f64,
+) -> f64 {
+    q_max / (head_dim as f64).sqrt() * b_drift * (-mu * depth_past_ls).exp()
+}
+
+/// Fit a geometric-tail recency model A_i ≤ κ(1−ρ)ρ^{t−i} (Eq. 44) to an
+/// observed attention row (positions beyond the sink region), returning
+/// (κ, λ = −ln ρ).  Least-squares in log space over nonzero entries.
+pub fn fit_recency_decay(probs: &[f32], c_sink: usize) -> (f64, f64) {
+    let t = probs.len();
+    let mut xs = Vec::new(); // distance
+    let mut ys = Vec::new(); // ln prob
+    for i in c_sink..t {
+        let p = probs[i] as f64;
+        if p > 1e-9 {
+            xs.push((t - 1 - i) as f64);
+            ys.push(p.ln());
+        }
+    }
+    if xs.len() < 2 {
+        return (1.0, 0.0);
+    }
+    let n = xs.len() as f64;
+    let sx: f64 = xs.iter().sum();
+    let sy: f64 = ys.iter().sum();
+    let sxx: f64 = xs.iter().map(|x| x * x).sum();
+    let sxy: f64 = xs.iter().zip(&ys).map(|(x, y)| x * y).sum();
+    let denom = n * sxx - sx * sx;
+    if denom.abs() < 1e-12 {
+        return (1.0, 0.0);
+    }
+    let slope = (n * sxy - sx * sy) / denom; // = ln ρ ≤ 0 ideally
+    let intercept = (sy - slope * sx) / n;
+    let lambda = (-slope).max(0.0);
+    let kappa = intercept.exp().min(1.0);
+    (kappa, lambda)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{gen, Prop};
+
+    #[test]
+    fn binary_entropy_basics() {
+        assert_eq!(binary_entropy(0.0), 0.0);
+        assert_eq!(binary_entropy(1.0), 0.0);
+        assert!((binary_entropy(0.5) - std::f64::consts::LN_2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mi_bound_zero_at_zero_drop() {
+        assert_eq!(mi_bound(0.0, 1024), 0.0);
+    }
+
+    #[test]
+    fn mi_bound_monotone_on_restricted_domain() {
+        let l = 512;
+        let cap = l as f64 / (1.0 + l as f64);
+        let mut prev = -1.0;
+        let steps = 200;
+        for i in 0..=steps {
+            let d = cap * i as f64 / steps as f64;
+            let g = mi_bound(d, l);
+            assert!(g >= prev - 1e-12, "g not monotone at δ={d}");
+            prev = g;
+        }
+    }
+
+    #[test]
+    fn oracle_minimizes_dropped_mass_property() {
+        // Theorem 3: top-k drops no more mass than any same-size selector.
+        Prop::new(200, 0xA11CE).forall(
+            |rng| {
+                let n = gen::usize_in(rng, 4, 64);
+                let k = gen::usize_in(rng, 1, n);
+                let probs = gen::prob_row(rng, n);
+                let sel = gen::sorted_unique(rng, k, n);
+                (probs, sel, k)
+            },
+            |(probs, sel, k)| {
+                let d_star = oracle_dropped_mass(probs, *k);
+                let d_s = dropped_mass(probs, sel);
+                if d_star <= d_s + 1e-6 {
+                    Ok(())
+                } else {
+                    Err(format!("oracle {d_star} > selector {d_s}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn beta_th_nonnegative_and_zero_for_oracle() {
+        Prop::new(100, 0xBEE).forall(
+            |rng| {
+                let n = gen::usize_in(rng, 4, 64);
+                let k = gen::usize_in(rng, 1, n);
+                (gen::prob_row(rng, n), k)
+            },
+            |(probs, k)| {
+                let oracle = crate::util::fx::top_k_indices(probs, *k);
+                let b = beta_th(probs, &oracle);
+                if b.abs() < 1e-6 {
+                    Ok(())
+                } else {
+                    Err(format!("oracle β_th = {b}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prehoc_bound_dominates_oracle_bound() {
+        // Eq. 10: g(δ*) ≤ g(δ* + β) ≤ g(δ* + 2ε) when β ≤ 2ε.
+        let (d, l) = (0.05, 1024);
+        let g0 = mi_bound(d, l);
+        let g1 = prehoc_bound(d, 0.02, l);
+        let g2 = posthoc_bound(d, 0.02, l);
+        assert!(g0 <= g1 && g1 <= g2);
+    }
+
+    #[test]
+    fn tv_distance_of_disjoint_rows_is_one() {
+        let a = [1.0, 0.0];
+        let b = [0.0, 1.0];
+        assert!((total_variation(&a, &b) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mass_loss_lemma3_property() {
+        // Lemma 3: δ_top-k(Â) ≤ δ* + 2·TV(A, Â).
+        Prop::new(200, 0xD0E).forall(
+            |rng| {
+                let n = gen::usize_in(rng, 4, 48);
+                let k = gen::usize_in(rng, 1, n);
+                let a = gen::prob_row(rng, n);
+                let ahat = gen::prob_row(rng, n);
+                (a, ahat, k)
+            },
+            |(a, ahat, k)| {
+                let eps = total_variation(a, ahat);
+                let sel = crate::util::fx::top_k_indices(ahat, *k);
+                let d_sel = dropped_mass(a, &sel);
+                let d_star = oracle_dropped_mass(a, *k);
+                if d_sel <= d_star + 2.0 * eps + 1e-6 {
+                    Ok(())
+                } else {
+                    Err(format!("{d_sel} > {d_star} + 2·{eps}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn cis_bound_zero_at_identical_queries() {
+        assert!(cis_beta_bound(1.0, 64, 1.0) < 1e-9);
+        assert!(cis_beta_bound(1.0, 64, 0.8) > 0.0);
+    }
+
+    #[test]
+    fn psaw_bound_decreases_with_distance() {
+        let a = psaw_delta_bound(1.0, 0.1, 10.0);
+        let b = psaw_delta_bound(1.0, 0.1, 100.0);
+        assert!(b < a);
+    }
+
+    #[test]
+    fn recency_fit_recovers_geometric_tail() {
+        let lambda = 0.3f64;
+        let t = 64;
+        let mut probs: Vec<f32> = (0..t)
+            .map(|i| ((-(lambda) * (t - 1 - i) as f64).exp()) as f32)
+            .collect();
+        let s: f32 = probs.iter().sum();
+        probs.iter_mut().for_each(|p| *p /= s);
+        let (_k, lam) = fit_recency_decay(&probs, 0);
+        assert!((lam - lambda).abs() < 0.02, "fitted λ = {lam}");
+    }
+
+    #[test]
+    fn kl_loss_bound_monotone() {
+        assert!(kl_loss_bound(0.9) < kl_loss_bound(0.5));
+        assert_eq!(kl_loss_bound(1.0), 0.0);
+    }
+}

@@ -1,0 +1,201 @@
+//! Criterion-style measurement harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets use `harness = false` and drive this directly:
+//! warmup, adaptive iteration count, mean/median/p99, and markdown / CSV
+//! emission so every paper table can be regenerated from a bench binary.
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+}
+
+impl Measurement {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+    pub fn median_ms(&self) -> f64 {
+        self.median_ns / 1e6
+    }
+}
+
+pub struct Bencher {
+    /// Target cumulative measurement time per benchmark.
+    pub budget: Duration,
+    pub warmup: Duration,
+    pub min_iters: usize,
+    pub max_iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            budget: Duration::from_secs(2),
+            warmup: Duration::from_millis(300),
+            min_iters: 5,
+            max_iters: 10_000,
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher {
+            budget: Duration::from_millis(500),
+            warmup: Duration::from_millis(100),
+            min_iters: 3,
+            max_iters: 1_000,
+        }
+    }
+
+    /// Measure `f` and report statistics. `f` should perform ONE logical
+    /// operation per call (the harness owns the iteration loop).
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> Measurement {
+        // Warmup.
+        let t0 = Instant::now();
+        let mut warm_iters = 0usize;
+        while t0.elapsed() < self.warmup && warm_iters < self.max_iters {
+            f();
+            warm_iters += 1;
+        }
+        // Estimate per-iter cost from warmup to bound sample count.
+        let per_iter = if warm_iters > 0 {
+            t0.elapsed().as_secs_f64() / warm_iters as f64
+        } else {
+            1e-3
+        };
+        let target = ((self.budget.as_secs_f64() / per_iter.max(1e-9)) as usize)
+            .clamp(self.min_iters, self.max_iters);
+
+        let mut samples = Vec::with_capacity(target);
+        for _ in 0..target {
+            let s = Instant::now();
+            f();
+            samples.push(s.elapsed().as_nanos() as f64);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let median = samples[n / 2];
+        let p99 = samples[(n as f64 * 0.99) as usize % n.max(1)];
+        Measurement {
+            name: name.to_string(),
+            iters: n,
+            mean_ns: mean,
+            median_ns: median,
+            p99_ns: p99,
+            min_ns: samples[0],
+        }
+    }
+}
+
+/// Accumulates measurements and renders a markdown table + CSV.
+#[derive(Default)]
+pub struct Report {
+    pub title: String,
+    pub rows: Vec<Measurement>,
+}
+
+impl Report {
+    pub fn new(title: &str) -> Self {
+        Report { title: title.to_string(), rows: Vec::new() }
+    }
+
+    pub fn push(&mut self, m: Measurement) {
+        println!(
+            "  {:<40} mean {:>10.3} ms  median {:>10.3} ms  ({} iters)",
+            m.name,
+            m.mean_ms(),
+            m.median_ms(),
+            m.iters
+        );
+        self.rows.push(m);
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut s = format!(
+            "## {}\n\n| name | iters | mean (ms) | median (ms) | p99 (ms) |\n|---|---|---|---|---|\n",
+            self.title
+        );
+        for r in &self.rows {
+            s.push_str(&format!(
+                "| {} | {} | {:.4} | {:.4} | {:.4} |\n",
+                r.name,
+                r.iters,
+                r.mean_ms(),
+                r.median_ms(),
+                r.p99_ns / 1e6
+            ));
+        }
+        s
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("name,iters,mean_ms,median_ms,p99_ms,min_ms\n");
+        for r in &self.rows {
+            s.push_str(&format!(
+                "{},{},{:.6},{:.6},{:.6},{:.6}\n",
+                r.name,
+                r.iters,
+                r.mean_ms(),
+                r.median_ms(),
+                r.p99_ns / 1e6,
+                r.min_ns / 1e6
+            ));
+        }
+        s
+    }
+
+    pub fn save(&self, dir: &str, stem: &str) -> std::io::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(format!("{dir}/{stem}.md"), self.to_markdown())?;
+        std::fs::write(format!("{dir}/{stem}.csv"), self.to_csv())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bencher {
+            budget: Duration::from_millis(50),
+            warmup: Duration::from_millis(10),
+            min_iters: 3,
+            max_iters: 100,
+        };
+        let mut x = 0u64;
+        let m = b.run("spin", || {
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+            std::hint::black_box(x);
+        });
+        assert!(m.iters >= 3);
+        assert!(m.mean_ns > 0.0);
+        assert!(m.median_ns <= m.p99_ns + 1.0);
+    }
+
+    #[test]
+    fn report_renders() {
+        let mut r = Report::new("t");
+        r.rows.push(Measurement {
+            name: "a".into(),
+            iters: 10,
+            mean_ns: 1e6,
+            median_ns: 0.9e6,
+            p99_ns: 2e6,
+            min_ns: 0.5e6,
+        });
+        assert!(r.to_markdown().contains("| a | 10 | 1.0000"));
+        assert!(r.to_csv().lines().count() == 2);
+    }
+}

@@ -1,0 +1,215 @@
+//! Declarative flag parser (clap is unavailable offline).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
+//! args, subcommands (handled by the caller via `Args::positional`), and
+//! auto-generated `--help`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_bool: bool,
+}
+
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    bools: BTreeMap<String, bool>,
+    positional: Vec<String>,
+}
+
+pub struct Cli {
+    pub name: &'static str,
+    pub about: &'static str,
+    flags: Vec<FlagSpec>,
+}
+
+impl Cli {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Cli { name, about, flags: Vec::new() }
+    }
+
+    pub fn flag(
+        mut self,
+        name: &'static str,
+        default: &'static str,
+        help: &'static str,
+    ) -> Self {
+        self.flags.push(FlagSpec { name, help, default: Some(default), is_bool: false });
+        self
+    }
+
+    pub fn flag_req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec { name, help, default: None, is_bool: false });
+        self
+    }
+
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec { name, help, default: None, is_bool: true });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nFlags:\n", self.name, self.about);
+        for f in &self.flags {
+            let d = match (&f.default, f.is_bool) {
+                (_, true) => " (switch)".to_string(),
+                (Some(d), _) => format!(" (default: {d})"),
+                (None, _) => " (required)".to_string(),
+            };
+            s.push_str(&format!("  --{:<18} {}{}\n", f.name, f.help, d));
+        }
+        s
+    }
+
+    /// Parse `argv` (without the program name). Exits on `--help`; returns
+    /// Err on unknown or missing flags.
+    pub fn parse(&self, argv: &[String]) -> Result<Args, String> {
+        let mut args = Args::default();
+        for f in &self.flags {
+            if let Some(d) = f.default {
+                args.values.insert(f.name.to_string(), d.to_string());
+            }
+            if f.is_bool {
+                args.bools.insert(f.name.to_string(), false);
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                println!("{}", self.usage());
+                std::process::exit(0);
+            }
+            if let Some(rest) = a.strip_prefix("--") {
+                let (key, inline_val) = match rest.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                let spec = self
+                    .flags
+                    .iter()
+                    .find(|f| f.name == key)
+                    .ok_or_else(|| format!("unknown flag --{key}"))?;
+                if spec.is_bool {
+                    args.bools.insert(key, true);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{key} needs a value"))?
+                        }
+                    };
+                    args.values.insert(key, val);
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        for f in &self.flags {
+            if !f.is_bool && !args.values.contains_key(f.name) {
+                return Err(format!("missing required flag --{}", f.name));
+            }
+        }
+        Ok(args)
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("flag {name} not declared"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} must be an integer"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> f64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} must be a number"))
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        *self.bools.get(name).unwrap_or(&false)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Comma-separated list of usize, e.g. `--buckets 8,16`.
+    pub fn get_usize_list(&self, name: &str) -> Vec<usize> {
+        self.get(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.trim().parse().unwrap_or_else(|_| {
+                panic!("--{name} must be comma-separated integers")
+            }))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn cli() -> Cli {
+        Cli::new("t", "test")
+            .flag("alpha", "1.0", "alpha")
+            .flag_req("model", "model name")
+            .switch("verbose", "verbosity")
+    }
+
+    #[test]
+    fn parses_flags_and_defaults() {
+        let a = cli()
+            .parse(&argv(&["--model", "small", "--verbose", "pos1"]))
+            .unwrap();
+        assert_eq!(a.get("alpha"), "1.0");
+        assert_eq!(a.get("model"), "small");
+        assert!(a.get_bool("verbose"));
+        assert_eq!(a.positional(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = cli().parse(&argv(&["--model=x", "--alpha=2.5"])).unwrap();
+        assert_eq!(a.get_f64("alpha"), 2.5);
+        assert_eq!(a.get("model"), "x");
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(cli().parse(&argv(&[])).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_errors() {
+        assert!(cli().parse(&argv(&["--model", "m", "--nope"])).is_err());
+    }
+
+    #[test]
+    fn usize_list() {
+        let a = Cli::new("t", "t")
+            .flag("xs", "1,2,3", "list")
+            .parse(&argv(&[]))
+            .unwrap();
+        assert_eq!(a.get_usize_list("xs"), vec![1, 2, 3]);
+    }
+}

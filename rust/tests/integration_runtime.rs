@@ -1,0 +1,374 @@
+//! Integration tests over the real AOT artifacts + PJRT runtime.
+//! Require `make artifacts` to have run (skipped otherwise).
+
+use prhs::config::{EngineConfig, SelectorConfig, SelectorKind};
+use prhs::model::Engine;
+use prhs::runtime::{Input, Runtime};
+use prhs::util::rng::Rng;
+use prhs::workload;
+
+fn artifacts_dir() -> Option<String> {
+    let dir = std::env::var("PRHS_ARTIFACTS").unwrap_or_else(|_| {
+        format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+    });
+    if std::path::Path::new(&dir).join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts not built at {dir}");
+        None
+    }
+}
+
+fn engine(kind: SelectorKind) -> Option<Engine> {
+    let dir = artifacts_dir()?;
+    let mut cfg = EngineConfig::default();
+    cfg.artifacts_dir = dir;
+    cfg.selector = SelectorConfig { kind, ..Default::default() };
+    Some(Engine::new(cfg).expect("engine"))
+}
+
+fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal()).collect()
+}
+
+/// L1 parity through the whole AOT + PJRT path: the Pallas-kernel
+/// artifact and the pure-XLA artifact must agree on identical inputs.
+#[test]
+fn pallas_artifact_matches_xla_artifact() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let mm = rt.model("bench").unwrap().clone();
+    let (b, h, n, d) = (8, mm.n_heads, 128, mm.head_dim);
+    let mut rng = Rng::new(42);
+    let q = rand_vec(&mut rng, b * h * d);
+    let k = rand_vec(&mut rng, b * h * n * d);
+    let v = rand_vec(&mut rng, b * h * n * d);
+    let mask: Vec<f32> = (0..b * h * n)
+        .map(|_| if rng.f32() > 0.3 { 1.0 } else { 0.0 })
+        .collect();
+
+    let run = |stage: &str| {
+        let art = mm
+            .find(stage, &[("batch", b), ("n_sel", n)])
+            .unwrap_or_else(|| panic!("no {stage}"));
+        rt.execute(
+            art,
+            &[
+                Input::F32(&q, vec![b, h, d]),
+                Input::F32(&k, vec![b, h, n, d]),
+                Input::F32(&v, vec![b, h, n, d]),
+                Input::F32(&mask, vec![b, h, n]),
+            ],
+        )
+        .unwrap()
+    };
+    let xla = run("attn_tsa_xla");
+    let pal = run("attn_tsa_pallas");
+    assert_eq!(xla[0].data.len(), pal[0].data.len());
+    for (a, b) in xla[0].data.iter().zip(&pal[0].data) {
+        assert!((a - b).abs() < 1e-4, "pallas/xla mismatch: {a} vs {b}");
+    }
+}
+
+/// Dense artifact == TSA artifact with a full mask (δ = 0 equivalence),
+/// through the runtime.
+#[test]
+fn dense_equals_tsa_full_mask() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let mm = rt.model("bench").unwrap().clone();
+    let (b, h, d) = (8, mm.n_heads, mm.head_dim);
+    let l = 1024usize;
+    let n = 128usize; // use first n positions as both full window + set
+    let mut rng = Rng::new(7);
+    let q = rand_vec(&mut rng, b * h * d);
+    let kfull = rand_vec(&mut rng, b * h * l * d);
+    let vfull = rand_vec(&mut rng, b * h * l * d);
+    // lengths = n → dense attends to exactly the first n entries
+    let lengths: Vec<i32> = vec![n as i32; b];
+    let dense_art = mm.find("attn_dense", &[("batch", b), ("l_max", l)]).unwrap();
+    let dense = rt
+        .execute(
+            dense_art,
+            &[
+                Input::F32(&q, vec![b, h, d]),
+                Input::F32(&kfull, vec![b, h, l, d]),
+                Input::F32(&vfull, vec![b, h, l, d]),
+                Input::I32(&lengths, vec![b]),
+            ],
+        )
+        .unwrap();
+    // gather first n rows per (b, h)
+    let mut ks = vec![0f32; b * h * n * d];
+    let mut vs = vec![0f32; b * h * n * d];
+    for bi in 0..b {
+        for hi in 0..h {
+            let src = ((bi * h + hi) * l) * d;
+            let dst = ((bi * h + hi) * n) * d;
+            ks[dst..dst + n * d].copy_from_slice(&kfull[src..src + n * d]);
+            vs[dst..dst + n * d].copy_from_slice(&vfull[src..src + n * d]);
+        }
+    }
+    let mask = vec![1.0f32; b * h * n];
+    let tsa_art = mm.find("attn_tsa_xla", &[("batch", b), ("n_sel", n)]).unwrap();
+    let tsa = rt
+        .execute(
+            tsa_art,
+            &[
+                Input::F32(&q, vec![b, h, d]),
+                Input::F32(&ks, vec![b, h, n, d]),
+                Input::F32(&vs, vec![b, h, n, d]),
+                Input::F32(&mask, vec![b, h, n]),
+            ],
+        )
+        .unwrap();
+    for (a, c) in dense[0].data.iter().zip(&tsa[0].data) {
+        assert!((a - c).abs() < 1e-4, "dense vs tsa: {a} vs {c}");
+    }
+}
+
+/// Prefill-then-decode must equal prefill of the extended prompt: proves
+/// the rust-side KV layout, gather, RoPE positions and append logic match
+/// the L2 graph end-to-end.
+#[test]
+fn decode_step_consistent_with_prefill() {
+    let Some(mut engine) = engine(SelectorKind::Dense) else { return };
+    let mut rng = Rng::new(9);
+    let prompt: Vec<i32> =
+        (0..100).map(|_| rng.below(engine.mm.vocab_size) as i32).collect();
+
+    // Path A: prefill(prompt), one decode step with token X.
+    let mut seq = engine.new_sequence(0, prompt.clone());
+    seq.max_new = 2;
+    engine.prefill(&mut seq).unwrap();
+    let x = seq.next_token;
+    {
+        let mut group = [&mut seq];
+        engine.decode_step(&mut group).unwrap();
+    }
+    let logits_a = seq.last_logits.clone();
+    engine.release(&mut seq);
+
+    // Path B: prefill(prompt ++ [x]) directly.
+    let mut ext = prompt.clone();
+    ext.push(x);
+    let mut seq2 = engine.new_sequence(1, ext);
+    seq2.max_new = 1;
+    engine.prefill(&mut seq2).unwrap();
+    // prefill's sampled token comes from the same logits: compare argmax
+    // via the sampled greedy token.
+    let y_b = seq2.next_token;
+    let y_a = prhs::util::fx::argmax(&logits_a) as i32;
+    assert_eq!(y_a, y_b, "decode-step vs prefill logits diverge");
+    engine.release(&mut seq2);
+}
+
+/// Every selector kind completes a short generation with sane counters.
+#[test]
+fn all_selectors_generate() {
+    let Some(dir) = artifacts_dir() else { return };
+    let kinds = [
+        SelectorKind::Dense,
+        SelectorKind::TopKOracle,
+        SelectorKind::H2O,
+        SelectorKind::StreamingLlm,
+        SelectorKind::Quest,
+        SelectorKind::DoubleSparsity,
+        SelectorKind::HShare,
+        SelectorKind::Cis,
+        SelectorKind::Cpe,
+    ];
+    let mut cfg = EngineConfig::default();
+    cfg.artifacts_dir = dir;
+    let rt = std::sync::Arc::new(Runtime::new(&cfg.artifacts_dir).unwrap());
+    let mm = rt.model("small").unwrap().clone();
+    let ws = std::sync::Arc::new(
+        prhs::runtime::WeightStore::load(&rt, &mm).unwrap(),
+    );
+    for kind in kinds {
+        let mut c = cfg.clone();
+        c.selector.kind = kind.clone();
+        if kind == SelectorKind::Cpe {
+            c.selector.psaw_enabled = true;
+            c.selector.etf_enabled = true;
+        }
+        let mut engine = Engine::with_shared(rt.clone(), ws.clone(), c);
+        let mut rng = Rng::new(11);
+        let spec = workload::scaled(&workload::GSM8K, 160);
+        let req = workload::generate(&spec, engine.mm.vocab_size, &mut rng);
+        let mut seq = engine.new_sequence(0, req.prompt);
+        seq.max_new = 6;
+        let out = engine.generate(&mut seq).unwrap();
+        assert_eq!(out.len(), 6, "{kind:?}");
+        assert!(out.iter().all(|&t| t >= 0), "{kind:?}");
+        let rho = engine.retrieval_ratio(&seq, 6);
+        match kind {
+            SelectorKind::Dense
+            | SelectorKind::H2O
+            | SelectorKind::StreamingLlm
+            | SelectorKind::Quest
+            | SelectorKind::DoubleSparsity => {
+                assert_eq!(rho, 0.0, "{kind:?} must not retrieve")
+            }
+            SelectorKind::TopKOracle => {
+                assert!((rho - 1.0).abs() < 1e-9, "oracle retrieves always")
+            }
+            _ => assert!(
+                rho > 0.0 && rho < 1.0,
+                "{kind:?} ρ̂ = {rho} out of (0,1)"
+            ),
+        }
+        engine.release(&mut seq);
+    }
+}
+
+/// δ ordering sanity: the top-k oracle drops no more mass than
+/// StreamingLLM at the same budget (Theorem 3 made empirical).
+#[test]
+fn oracle_delta_below_streaming() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut cfg = EngineConfig::default();
+    cfg.artifacts_dir = dir;
+    let rt = std::sync::Arc::new(Runtime::new(&cfg.artifacts_dir).unwrap());
+    let mm = rt.model("small").unwrap().clone();
+    let ws = std::sync::Arc::new(
+        prhs::runtime::WeightStore::load(&rt, &mm).unwrap(),
+    );
+    let mut rng = Rng::new(13);
+    let spec = workload::scaled(&workload::GSM8K, 300);
+    let req = workload::generate(&spec, mm.vocab_size, &mut rng);
+
+    let run = |kind: SelectorKind| {
+        let mut c = cfg.clone();
+        c.selector.kind = kind;
+        let mut engine = Engine::with_shared(rt.clone(), ws.clone(), c);
+        engine.probe = Some(prhs::model::Probe::new(2));
+        let mut seq = engine.new_sequence(0, req.prompt.clone());
+        seq.max_new = 8;
+        engine.generate(&mut seq).unwrap();
+        let p = engine.probe.take().unwrap();
+        engine.release(&mut seq);
+        p.mean_delta()
+    };
+    let d_oracle = run(SelectorKind::TopKOracle);
+    let d_stream = run(SelectorKind::StreamingLlm);
+    assert!(
+        d_oracle <= d_stream + 1e-6,
+        "oracle δ {d_oracle} > streaming δ {d_stream}"
+    );
+}
+
+/// Batched decode (B > 1) must agree with single-sequence decode for the
+/// dense path (padding rows must not contaminate real rows).
+#[test]
+fn batched_matches_single() {
+    let Some(mut engine) = engine(SelectorKind::Dense) else { return };
+    let mut rng = Rng::new(17);
+    let prompts: Vec<Vec<i32>> = (0..3)
+        .map(|_| {
+            (0..80)
+                .map(|_| rng.below(engine.mm.vocab_size) as i32)
+                .collect()
+        })
+        .collect();
+
+    // single
+    let mut singles = Vec::new();
+    for (i, p) in prompts.iter().enumerate() {
+        let mut seq = engine.new_sequence(i as u64, p.clone());
+        seq.max_new = 3;
+        let out = engine.generate(&mut seq).unwrap();
+        singles.push(out);
+        engine.release(&mut seq);
+    }
+    // batched
+    let mut seqs: Vec<_> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            let mut s = engine.new_sequence(10 + i as u64, p.clone());
+            s.max_new = 3;
+            s
+        })
+        .collect();
+    for s in seqs.iter_mut() {
+        engine.prefill(s).unwrap();
+    }
+    for _ in 0..3 {
+        let mut group: Vec<&mut prhs::model::Sequence> =
+            seqs.iter_mut().collect();
+        engine.decode_step(&mut group).unwrap();
+    }
+    for (s, single) in seqs.iter().zip(&singles) {
+        assert_eq!(&s.generated, single, "batched vs single diverged");
+    }
+}
+
+/// Server round-trip: spawn, serve, shutdown.
+#[test]
+fn server_round_trip() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut cfg = EngineConfig::default();
+    cfg.artifacts_dir = dir;
+    cfg.selector.kind = SelectorKind::Cis;
+    cfg.max_batch = 4;
+    let server = prhs::server::Server::spawn_with_config(cfg, 16);
+    let client = server.client();
+    let mut rng = Rng::new(5);
+    let spec = workload::scaled(&workload::GSM8K, 120);
+    let rxs: Vec<_> = (0..3u64)
+        .map(|id| {
+            let req = workload::generate(&spec, 8192, &mut rng);
+            client
+                .submit(prhs::coordinator::RequestIn {
+                    id,
+                    prompt: req.prompt,
+                    max_new_tokens: 4,
+                })
+                .unwrap()
+        })
+        .collect();
+    for rx in rxs {
+        let out = rx.recv().unwrap();
+        assert_eq!(out.tokens.len(), 4);
+    }
+    server.shutdown().unwrap();
+}
+
+/// PSAW-enabled CPE reduces the average selected-set size at deep layers
+/// (FLOP saving is real, not just accounted).
+#[test]
+fn cpe_psaw_shrinks_sets() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut cfg = EngineConfig::default();
+    cfg.artifacts_dir = dir;
+    let rt = std::sync::Arc::new(Runtime::new(&cfg.artifacts_dir).unwrap());
+    let mm = rt.model("small").unwrap().clone();
+    let ws = std::sync::Arc::new(
+        prhs::runtime::WeightStore::load(&rt, &mm).unwrap(),
+    );
+    let mut rng = Rng::new(23);
+    let spec = workload::scaled(&workload::GSM8K, 400);
+    let req = workload::generate(&spec, mm.vocab_size, &mut rng);
+    let run = |kind: SelectorKind, frac: f32| {
+        let mut c = cfg.clone();
+        c.selector.kind = kind;
+        c.selector.psaw_enabled = true;
+        c.selector.sched_ell_s_frac = frac;
+        c.selector.psaw_phi = 0.3;
+        c.selector.psaw_alpha = 2.0;
+        let mut engine = Engine::with_shared(rt.clone(), ws.clone(), c);
+        let mut seq = engine.new_sequence(0, req.prompt.clone());
+        seq.max_new = 6;
+        engine.generate(&mut seq).unwrap();
+        let avg = engine.stats.avg_selected();
+        engine.release(&mut seq);
+        avg
+    };
+    let cis_avg = run(SelectorKind::Cis, 0.0);
+    let cpe_avg = run(SelectorKind::Cpe, 0.0);
+    assert!(
+        cpe_avg < cis_avg,
+        "PSAW must shrink sets: cpe {cpe_avg} vs cis {cis_avg}"
+    );
+}

@@ -1,0 +1,294 @@
+//! Property-test suites over coordinator/selector invariants (engine-free;
+//! uses the in-repo mini-prop harness since proptest is unavailable
+//! offline — DESIGN.md §6b).
+
+use prhs::config::{SelectorConfig, SelectorKind, SimSpace};
+use prhs::selector::{self, KvSelector, PlanKind, SelectorCtx};
+use prhs::theory;
+use prhs::util::prop::{gen, Prop};
+use prhs::util::rng::Rng;
+
+fn rand_cfg(rng: &mut Rng, kind: SelectorKind) -> SelectorConfig {
+    SelectorConfig {
+        kind,
+        c_sink: gen::usize_in(rng, 1, 6),
+        c_local: gen::usize_in(rng, 2, 10),
+        k_middle: gen::usize_in(rng, 2, 12),
+        block_size: gen::usize_in(rng, 1, 6),
+        sim_threshold: 0.5 + rng.f32() * 0.5,
+        dilate_m_frac: rng.f32(),
+        dilate_radius: gen::usize_in(rng, 0, 3),
+        quest_page: gen::usize_in(rng, 2, 8),
+        ds_channels: gen::usize_in(rng, 1, 4),
+        hshare_stride: gen::usize_in(rng, 1, 6),
+        ..Default::default()
+    }
+}
+
+fn drive_selector(
+    sel: &mut Box<dyn KvSelector>,
+    rng: &mut Rng,
+    n_layers: usize,
+    n_heads: usize,
+    d: usize,
+    steps: usize,
+    t0: usize,
+) -> Result<(), String> {
+    // seed with a plausible probs row
+    for layer in 0..n_layers {
+        for head in 0..n_heads {
+            let row = gen::prob_row(rng, t0 + 1);
+            sel.observe_probs(layer, head, t0, &row);
+        }
+    }
+    for step in 0..steps {
+        let t = t0 + step;
+        let qs: Vec<Vec<f32>> =
+            (0..n_heads).map(|_| gen::vec_f32(rng, d, 1.0)).collect();
+        let hidden = gen::vec_f32(rng, 16, 1.0);
+        for layer in 0..n_layers {
+            let ctx = SelectorCtx {
+                t,
+                q_heads: &qs,
+                q_heads_raw: &qs,
+                hidden: &hidden,
+                last_keys: None,
+            };
+            let plan = sel.plan(layer, &ctx);
+            if let PlanKind::Retrieve { heads } = &plan {
+                for (h, &r) in heads.iter().enumerate() {
+                    if r {
+                        let row = gen::prob_row(rng, t + 1);
+                        sel.observe_probs(layer, h, t, &row);
+                    }
+                }
+            }
+            // invariants on the refreshed sets
+            for (h, set) in sel.sets(layer).iter().enumerate() {
+                // sorted, unique, in-range, self-free
+                for w in set.windows(2) {
+                    if w[0] >= w[1] {
+                        return Err(format!(
+                            "set not sorted-unique at layer {layer} head {h}: {set:?}"
+                        ));
+                    }
+                }
+                if set.iter().any(|&p| p >= t) {
+                    return Err(format!(
+                        "set contains ≥ t={t}: {set:?} (layer {layer}, head {h})"
+                    ));
+                }
+            }
+            // H2O-style accumulation input
+            for h in 0..n_heads {
+                let set = sel.sets(layer)[h].clone();
+                let mut probs = gen::prob_row(rng, set.len() + 1);
+                probs.iter_mut().for_each(|p| *p *= 0.9);
+                sel.observe_sparse(layer, h, t, &set, &probs);
+            }
+            for h in 0..n_heads {
+                let k = gen::vec_f32(rng, d, 1.0);
+                sel.observe_new_key(layer, h, t, &k);
+            }
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_all_selectors_produce_valid_sets() {
+    let kinds = [
+        SelectorKind::TopKOracle,
+        SelectorKind::H2O,
+        SelectorKind::StreamingLlm,
+        SelectorKind::Quest,
+        SelectorKind::DoubleSparsity,
+        SelectorKind::HShare,
+        SelectorKind::Cis,
+        SelectorKind::Cpe,
+    ];
+    for kind in kinds {
+        Prop::new(25, 0xFACE ^ kind.name().len() as u64).forall(
+            |rng| {
+                let cfg = rand_cfg(rng, kind.clone());
+                let t0 = gen::usize_in(rng, 20, 60);
+                let steps = gen::usize_in(rng, 3, 10);
+                (cfg, t0, steps, rng.next_u64())
+            },
+            |(cfg, t0, steps, seed)| {
+                let (nl, nh, d) = (3, 2, 8);
+                let mut sel = selector::build(cfg, nl, nh, d);
+                let mut rng = Rng::new(*seed);
+                drive_selector(&mut sel, &mut rng, nl, nh, d, *steps, *t0)
+            },
+        );
+    }
+}
+
+#[test]
+fn prop_selected_sets_respect_budget_envelope() {
+    // |set| ≤ c_sink + k + c_local + dilation extras (m·2r), for CIS.
+    Prop::new(50, 0xB0D6).forall(
+        |rng| {
+            let cfg = rand_cfg(rng, SelectorKind::Cis);
+            let t0 = gen::usize_in(rng, 30, 80);
+            (cfg, t0, rng.next_u64())
+        },
+        |(cfg, t0, seed)| {
+            let (nl, nh, d) = (2, 2, 8);
+            let mut sel = selector::build(cfg, nl, nh, d);
+            let mut rng = Rng::new(*seed);
+            drive_selector(&mut sel, &mut rng, nl, nh, d, 5, *t0)?;
+            let envelope = cfg.c_sink
+                + cfg.k_middle
+                + cfg.c_local
+                + cfg.dilate_m() * 2 * cfg.dilate_radius;
+            for layer in 0..nl {
+                for set in sel.sets(layer) {
+                    if set.len() > envelope {
+                        return Err(format!(
+                            "set {} exceeds envelope {envelope}",
+                            set.len()
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_cis_rho_decreases_with_block_size() {
+    // With identical queries (sim = 1 ≥ τ), CIS retrieval count is exactly
+    // ⌈steps / s⌉ per (layer, head) — bigger blocks, fewer retrievals.
+    Prop::new(30, 0x51AB).forall(
+        |rng| {
+            let steps = gen::usize_in(rng, 8, 24);
+            (steps, rng.next_u64())
+        },
+        |(steps, seed)| {
+            let mut rhos = Vec::new();
+            for s in [2usize, 4, 8] {
+                let cfg = SelectorConfig {
+                    kind: SelectorKind::Cis,
+                    block_size: s,
+                    sim_threshold: 0.8,
+                    ..Default::default()
+                };
+                let mut sel = selector::build(&cfg, 1, 1, 8);
+                let mut rng = Rng::new(*seed);
+                let q = vec![gen::vec_f32(&mut rng, 8, 1.0)];
+                for step in 0..*steps {
+                    let t = 50 + step;
+                    let ctx = SelectorCtx {
+                        t,
+                        q_heads: &q,
+                        q_heads_raw: &q,
+                        hidden: &[],
+                        last_keys: None,
+                    };
+                    if let PlanKind::Retrieve { heads } = sel.plan(0, &ctx) {
+                        for (h, &r) in heads.iter().enumerate() {
+                            if r {
+                                let mut rng2 = Rng::new(t as u64);
+                                let row = gen::prob_row(&mut rng2, t + 1);
+                                sel.observe_probs(0, h, t, &row);
+                            }
+                        }
+                    }
+                }
+                rhos.push(sel.retrievals());
+            }
+            if rhos[0] >= rhos[1] && rhos[1] >= rhos[2] && rhos[2] >= 1 {
+                Ok(())
+            } else {
+                Err(format!("ρ not decreasing in s: {rhos:?}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_mi_bound_dominates_measured_loss_proxy() {
+    // g(δ) must upper-bound the renormalized-TV information proxy: by
+    // Lemma 1, TV = δ; and the MI loss bound is 2[h_b(δ)+δ ln L] ≥ 0 ≥ …
+    // here we check g is monotone in δ and β_th ≥ 0 stays consistent with
+    // the oracle bound chain (Eq. 10) on random rows.
+    Prop::new(200, 0x7EAC).forall(
+        |rng| {
+            let n = gen::usize_in(rng, 8, 64);
+            let k = gen::usize_in(rng, 1, n);
+            let row = gen::prob_row(rng, n);
+            let sel = gen::sorted_unique(rng, k, n);
+            (row, sel)
+        },
+        |(row, sel)| {
+            let delta = theory::dropped_mass(row, sel);
+            let beta = theory::beta_th(row, sel);
+            let d_star = theory::oracle_dropped_mass(row, sel.len());
+            let l = row.len();
+            let g_sel = theory::mi_bound(delta, l);
+            let g_chain = theory::prehoc_bound(d_star, beta, l);
+            // δ ≤ δ* + β ⇒ g(δ) ≤ g(δ* + β) on the monotone domain
+            if g_sel <= g_chain + 1e-9 {
+                Ok(())
+            } else {
+                Err(format!("g(δ)={g_sel} > g(δ*+β)={g_chain}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_sim_space_selection_is_respected() {
+    // With orthogonal queries but identical hidden states, Query-space
+    // gating must retrieve while Hidden-space gating shares.
+    Prop::new(20, 0x51CE).forall(
+        |rng| (rng.next_u64(),),
+        |&(seed,)| {
+            let mk = |space: SimSpace| SelectorConfig {
+                kind: SelectorKind::Cis,
+                block_size: 8,
+                sim_threshold: 0.8,
+                sim_space: space,
+                ..Default::default()
+            };
+            let mut rng = Rng::new(seed);
+            let hidden = gen::vec_f32(&mut rng, 16, 1.0);
+            let q1 = vec![vec![1.0, 0.0, 0.0, 0.0]];
+            let q2 = vec![vec![0.0, 1.0, 0.0, 0.0]];
+            for (space, expect_share) in
+                [(SimSpace::Query, false), (SimSpace::Hidden, true)]
+            {
+                let cfg = mk(space);
+                let mut sel = selector::build(&cfg, 1, 1, 4);
+                let ctx1 = SelectorCtx {
+                    t: 50,
+                    q_heads: &q1,
+                    q_heads_raw: &q1,
+                    hidden: &hidden,
+                    last_keys: None,
+                };
+                sel.plan(0, &ctx1);
+                let mut r = Rng::new(1);
+                sel.observe_probs(0, 0, 50, &gen::prob_row(&mut r, 51));
+                let ctx2 = SelectorCtx {
+                    t: 51,
+                    q_heads: &q2,
+                    q_heads_raw: &q2,
+                    hidden: &hidden,
+                    last_keys: None,
+                };
+                let plan = sel.plan(0, &ctx2);
+                let shared = plan == PlanKind::Sparse;
+                if shared != expect_share {
+                    return Err(format!(
+                        "space {space:?}: shared={shared}, expected {expect_share}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
