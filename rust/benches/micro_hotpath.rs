@@ -1,14 +1,16 @@
 //! Micro-benchmarks of the L3 hot path pieces (perf-pass instrumentation,
 //! EXPERIMENTS.md §Perf): gather staging, selector planning, host query
-//! projection, top-k selection, JSON parse, dense-export staging.
+//! projection, top-k selection, JSON parse, dense-export staging, and the
+//! batched-decode planning stage (serial vs planner pool).
 
 use prhs::config::{SelectorConfig, SelectorKind};
 use prhs::kvcache::{PagePool, SeqKvCache};
-use prhs::model::proj;
+use prhs::model::{proj, Sequence};
 use prhs::selector::{self, PlanKind, SelectorCtx};
 use prhs::util::bench::{Bencher, Report};
 use prhs::util::fx;
 use prhs::util::json::Json;
+use prhs::util::pool::for_each_unit;
 use prhs::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
@@ -88,6 +90,98 @@ fn main() -> anyhow::Result<()> {
         }
         std::hint::black_box(sel.sets(0));
     }));
+
+    // --- batched decode planning: serial vs planner pool -----------------
+    // Mirrors the engine's per-layer host stage for a continuous batch of
+    // 8 sequences at 2k context: query projection + selector planning +
+    // selected-set gather staging into per-sequence slices.  This is the
+    // work `EngineConfig::planner_threads` fans out while PJRT execution
+    // stays on the engine thread.
+    {
+        let n_seq = 8usize;
+        let n_sel = 256usize;
+        let ctx_len = 2048usize;
+        let mut bpool = PagePool::new(h, d, 128);
+        let krow: Vec<f32> = (0..h * d).map(|_| rng.normal()).collect();
+        let mut seqs: Vec<Sequence> = (0..n_seq)
+            .map(|i| {
+                let sel = selector::build(&cfg, 1, h, d);
+                let mut s = Sequence::new(i as u64, Vec::new(), sel, 1, 8);
+                for _ in 0..ctx_len {
+                    s.cache.append(&mut bpool, 0, &krow, &krow).unwrap();
+                    s.cache.commit_token();
+                }
+                for head in 0..h {
+                    s.selector.observe_probs(0, head, ctx_len, &probs);
+                }
+                s
+            })
+            .collect();
+        let hiddens: Vec<f32> =
+            (0..n_seq * dm).map(|_| rng.normal()).collect();
+        let mut ks = vec![0f32; n_seq * h * n_sel * d];
+        let mut vs = vec![0f32; n_seq * h * n_sel * d];
+
+        let run_stage = |threads: usize,
+                         seqs: &mut [Sequence],
+                         ks: &mut [f32],
+                         vs: &mut [f32]| {
+            let per = h * n_sel * d;
+            let mut units: Vec<(&mut Sequence, &[f32], &mut [f32], &mut [f32])> =
+                seqs.iter_mut()
+                    .zip(hiddens.chunks(dm))
+                    .zip(ks.chunks_mut(per))
+                    .zip(vs.chunks_mut(per))
+                    .map(|(((s, hid), k2), v2)| (s, hid, k2, v2))
+                    .collect();
+            let bpool = &bpool;
+            let norm = &norm;
+            let wq = &wq;
+            for_each_unit(threads, &mut units, |(seq, hid, k2, v2)| {
+                let hid: &[f32] = *hid;
+                let t = seq.cache.len();
+                // the shipped planning path: per-sequence PlanScratch,
+                // allocation-free after warmup
+                let Sequence { cache, selector, scratch, .. } = &mut **seq;
+                scratch.project(hid, norm, wq, h, d, t);
+                let pctx = SelectorCtx {
+                    t,
+                    q_heads: scratch.q_heads(),
+                    q_heads_raw: scratch.q_raw(),
+                    hidden: hid,
+                    last_keys: None,
+                };
+                let _ = selector.plan(0, &pctx);
+                for head in 0..h {
+                    let set = &selector.sets(0)[head];
+                    let off = head * n_sel * d;
+                    let sl = set.len().min(n_sel);
+                    cache.gather(
+                        bpool,
+                        0,
+                        head,
+                        &set[..sl],
+                        &mut k2[off..off + sl * d],
+                        &mut v2[off..off + sl * d],
+                    );
+                }
+                std::hint::black_box(&k2[..d]);
+            });
+        };
+
+        let m_serial = b.run("batched plan+stage 8 seqs serial", || {
+            run_stage(1, &mut seqs, &mut ks, &mut vs);
+        });
+        let m_pool = b.run("batched plan+stage 8 seqs pool x4", || {
+            run_stage(4, &mut seqs, &mut ks, &mut vs);
+        });
+        println!(
+            "  planner-pool speedup over serial: {:.2}x",
+            m_serial.mean_ns / m_pool.mean_ns.max(1.0)
+        );
+        report.push(m_serial);
+        report.push(m_pool);
+    }
 
     // --- top-k over a 4k row ---------------------------------------------
     let row4k: Vec<f32> = (0..4096).map(|_| rng.f32()).collect();

@@ -203,6 +203,20 @@ pub struct EngineConfig {
     pub batch_tiles: Vec<usize>,
     /// Max sequences admitted per scheduler iteration.
     pub max_batch: usize,
+    /// Chunked-prefill granularity in prompt tokens (DESIGN.md §6a).
+    /// 0 = whole-prompt prefill in one scheduler iteration (the
+    /// pre-chunking behavior); with a positive chunk, each prefilling
+    /// sequence advances one chunk per iteration, so a request admitted
+    /// behind a long prompt starts decoding after its *own* chunks
+    /// instead of the long prompt's full prefill.  Note: each chunk
+    /// currently re-runs the prefill artifact over the whole prefix, so
+    /// per-iteration cost is one prefix-prefill call (growing with the
+    /// prefix), not one chunk — see `Engine::prefill_chunk`.
+    pub prefill_chunk: usize,
+    /// Width of the host-side planner pool used by `decode_step` for
+    /// per-sequence planning and KV staging (DESIGN.md §6a).  ≤ 1 runs
+    /// serially; PJRT execution stays on the engine thread either way.
+    pub planner_threads: usize,
     /// Use the Pallas-kernel attention variant where available.
     pub use_pallas: bool,
     pub seed: u64,
@@ -217,6 +231,8 @@ impl Default for EngineConfig {
             max_new_tokens: 64,
             batch_tiles: vec![1, 8, 16],
             max_batch: 16,
+            prefill_chunk: 0,
+            planner_threads: 0,
             use_pallas: false,
             seed: 0xC0FFEE,
         }
@@ -235,6 +251,15 @@ impl EngineConfig {
         }
         if let Some(n) = j.get("max_new_tokens").and_then(Json::as_usize) {
             cfg.max_new_tokens = n;
+        }
+        if let Some(n) = j.get("max_batch").and_then(Json::as_usize) {
+            cfg.max_batch = n;
+        }
+        if let Some(n) = j.get("prefill_chunk").and_then(Json::as_usize) {
+            cfg.prefill_chunk = n;
+        }
+        if let Some(n) = j.get("planner_threads").and_then(Json::as_usize) {
+            cfg.planner_threads = n;
         }
         if let Some(sel) = j.get("selector") {
             let sc = &mut cfg.selector;
@@ -323,5 +348,20 @@ mod tests {
         assert_eq!(c.selector.kind, SelectorKind::Cpe);
         assert_eq!(c.selector.block_size, 16);
         assert!(c.selector.psaw_enabled);
+    }
+
+    #[test]
+    fn serving_knobs_default_off_and_parse() {
+        let c = EngineConfig::default();
+        assert_eq!(c.prefill_chunk, 0, "chunking is opt-in");
+        assert_eq!(c.planner_threads, 0, "planner pool is opt-in");
+        let j = Json::parse(
+            r#"{"prefill_chunk":256,"planner_threads":4,"max_batch":32}"#,
+        )
+        .unwrap();
+        let c = EngineConfig::from_json(&j).unwrap();
+        assert_eq!(c.prefill_chunk, 256);
+        assert_eq!(c.planner_threads, 4);
+        assert_eq!(c.max_batch, 32);
     }
 }

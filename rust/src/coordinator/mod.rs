@@ -1,15 +1,25 @@
 //! L3 coordination: request queue, continuous (iteration-level) batcher,
-//! prefill/decode scheduler, sequence lifecycle.
+//! chunked-prefill/decode scheduler, sequence lifecycle.
 //!
-//! Scheduling model (Orca/vLLM-style, adapted to one CPU device):
+//! Scheduling model (Orca/vLLM-style, adapted to one CPU device;
+//! DESIGN.md §6a):
 //!   * requests land in a FIFO admission queue;
 //!   * each scheduler iteration admits waiting requests up to
-//!     `max_batch` (prefill runs per-sequence on admission — chunked
-//!     prefill is future work, DESIGN.md §6);
+//!     `max_batch` into a *prefilling* stage;
+//!   * every prefilling sequence advances one prefill chunk per
+//!     iteration (`EngineConfig::prefill_chunk`; 0 = whole prompt in one
+//!     iteration), so a short request admitted behind a long prompt
+//!     starts decoding after its own chunks, not the long one's;
 //!   * all running sequences advance one token per iteration via a single
 //!     batched decode step;
 //!   * finished sequences retire immediately and release their KV pages,
 //!     so a long request never blocks short ones beyond one iteration.
+//!
+//! ρ̂ accounting (DESIGN.md §4): `RequestOut::rho_hat` is defined over the
+//! decode phase only — the retrieval counter is snapshotted when prefill
+//! completes and the delta is divided by decode head-steps.  Charging
+//! prefill-side scoring against decode head-steps (the pre-fix behavior)
+//! inflates ρ̂ versus the paper's R_t definition.
 
 use std::collections::VecDeque;
 use std::time::Instant;
@@ -26,11 +36,18 @@ pub struct BatchPolicy {
 }
 
 impl BatchPolicy {
-    /// How many waiting sequences to admit given the running count.
-    pub fn admit(&self, running: usize, waiting: usize) -> usize {
-        self.max_batch.saturating_sub(running).min(waiting)
+    /// How many waiting sequences to admit given the occupied count
+    /// (prefilling + running — both hold KV pages and batch slots).
+    pub fn admit(&self, occupied: usize, waiting: usize) -> usize {
+        self.max_batch.saturating_sub(occupied).min(waiting)
     }
 }
+
+// Re-exported for scheduling-contract consumers: the progress ledger is
+// model-layer state (each `Sequence` owns one) and the ρ̂ helper is
+// metrics-layer accounting, but both are part of this module's contract.
+pub use crate::metrics::decode_rho_hat;
+pub use crate::model::ChunkLedger;
 
 /// A request as submitted by a client.
 #[derive(Clone, Debug)]
@@ -47,25 +64,40 @@ pub struct RequestOut {
     pub tokens: Vec<i32>,
     pub prefill_us: f64,
     pub decode_us: f64,
+    /// Submission → first sampled token (prefill completion).
+    pub ttft_us: f64,
     pub steps: u64,
+    /// Decode-phase retrieval ratio (see `decode_rho_hat`).
     pub rho_hat: f64,
 }
 
-/// The scheduler: owns the engine and drives admission + decode.
+/// The scheduler: owns the engine and drives admission + prefill chunks
+/// + decode.
 pub struct Scheduler {
     pub engine: Engine,
     pub policy: BatchPolicy,
-    waiting: VecDeque<RequestIn>,
+    waiting: VecDeque<(RequestIn, Instant)>,
+    prefilling: Vec<PrefillingSeq>,
     running: Vec<RunningSeq>,
     pub metrics: RunMetrics,
     started: Instant,
 }
 
+struct PrefillingSeq {
+    seq: Sequence,
+    submitted: Instant,
+    prefill_us: f64,
+}
+
 struct RunningSeq {
     seq: Sequence,
     prefill_us: f64,
+    ttft_us: f64,
     decode_us: f64,
     steps: u64,
+    /// Selector retrieval counter at prefill completion — decode ρ̂
+    /// subtracts this so prefill-phase retrievals are never charged
+    /// against decode head-steps.
     t0_retrievals: u64,
 }
 
@@ -76,6 +108,7 @@ impl Scheduler {
             engine,
             policy: BatchPolicy { max_batch },
             waiting: VecDeque::new(),
+            prefilling: Vec::new(),
             running: Vec::new(),
             metrics: RunMetrics::default(),
             started: Instant::now(),
@@ -83,35 +116,59 @@ impl Scheduler {
     }
 
     pub fn submit(&mut self, req: RequestIn) {
-        self.waiting.push_back(req);
+        self.waiting.push_back((req, Instant::now()));
     }
 
     pub fn pending(&self) -> usize {
-        self.waiting.len() + self.running.len()
+        self.waiting.len() + self.prefilling.len() + self.running.len()
     }
 
-    /// One scheduler iteration: admit → decode step → retire.
-    /// Returns the requests completed this iteration.
+    /// One scheduler iteration: admit → prefill chunks → decode step →
+    /// retire.  Returns the requests completed this iteration.
     pub fn step(&mut self) -> Result<Vec<RequestOut>> {
-        // admit
-        let n_admit = self.policy.admit(self.running.len(), self.waiting.len());
+        // admit into the prefilling stage (cheap; the prefill work itself
+        // is spread over subsequent iterations)
+        let occupied = self.running.len() + self.prefilling.len();
+        let n_admit = self.policy.admit(occupied, self.waiting.len());
         for _ in 0..n_admit {
-            let req = self.waiting.pop_front().unwrap();
+            let (req, submitted) = self.waiting.pop_front().unwrap();
             let mut seq = self.engine.new_sequence(req.id, req.prompt);
             seq.max_new = req.max_new_tokens;
-            let t0 = Instant::now();
-            self.engine.prefill(&mut seq)?;
-            let prefill_us = t0.elapsed().as_secs_f64() * 1e6;
-            self.metrics
-                .prefill_lat
-                .record_us(prefill_us);
-            self.running.push(RunningSeq {
+            self.prefilling.push(PrefillingSeq {
                 seq,
-                prefill_us,
-                decode_us: 0.0,
-                steps: 0,
-                t0_retrievals: 0,
+                submitted,
+                prefill_us: 0.0,
             });
+        }
+
+        // one prefill chunk per prefilling sequence per iteration
+        let chunk = self.engine.cfg.prefill_chunk;
+        let mut i = 0;
+        while i < self.prefilling.len() {
+            let t0 = Instant::now();
+            let done = self
+                .engine
+                .prefill_chunk(&mut self.prefilling[i].seq, chunk)?;
+            self.prefilling[i].prefill_us +=
+                t0.elapsed().as_secs_f64() * 1e6;
+            if done {
+                let p = self.prefilling.swap_remove(i);
+                self.metrics.prefill_lat.record_us(p.prefill_us);
+                // the first token is sampled at prefill completion
+                let ttft_us = p.submitted.elapsed().as_secs_f64() * 1e6;
+                self.metrics.ttft_lat.record_us(ttft_us);
+                let t0_retrievals = p.seq.selector.retrievals();
+                self.running.push(RunningSeq {
+                    seq: p.seq,
+                    prefill_us: p.prefill_us,
+                    ttft_us,
+                    decode_us: 0.0,
+                    steps: 0,
+                    t0_retrievals,
+                });
+            } else {
+                i += 1;
+            }
         }
 
         // decode one token for everyone
@@ -141,7 +198,11 @@ impl Scheduler {
                 let head_steps = self.engine.mm.n_heads as u64
                     * self.engine.mm.n_layers as u64
                     * r.steps;
-                let retr = r.seq.selector.retrievals() - r.t0_retrievals;
+                let retr = r
+                    .seq
+                    .selector
+                    .retrievals()
+                    .saturating_sub(r.t0_retrievals);
                 self.metrics.retrievals += retr;
                 self.metrics.head_steps += head_steps;
                 self.engine.release(&mut r.seq);
@@ -150,12 +211,13 @@ impl Scheduler {
                     tokens: r.seq.generated.clone(),
                     prefill_us: r.prefill_us,
                     decode_us: r.decode_us,
+                    ttft_us: r.ttft_us,
                     steps: r.steps,
-                    rho_hat: if head_steps > 0 {
-                        retr as f64 / head_steps as f64
-                    } else {
-                        0.0
-                    },
+                    rho_hat: decode_rho_hat(
+                        r.seq.selector.retrievals(),
+                        r.t0_retrievals,
+                        head_steps,
+                    ),
                 });
             } else {
                 i += 1;
@@ -180,6 +242,8 @@ impl Scheduler {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::SelectorKind;
+    use crate::selector::{KvSelector, PlanKind, SelectorCtx};
     use crate::util::prop::Prop;
     use crate::util::rng::Rng;
 
@@ -212,5 +276,212 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn chunk_ledger_walks_the_prompt() {
+        let mut l = ChunkLedger::new(300);
+        assert_eq!(l.next(128), (0, 128));
+        l.advance(128);
+        assert_eq!(l.next(128), (128, 256));
+        l.advance(256);
+        assert_eq!(l.next(128), (256, 300));
+        l.advance(300);
+        assert!(l.is_done());
+        // chunk 0 = whole remainder (monolithic prefill)
+        let l2 = ChunkLedger::new(300);
+        assert_eq!(l2.next(0), (0, 300));
+        assert_eq!(ChunkLedger::iterations(300, 128), 3);
+        assert_eq!(ChunkLedger::iterations(300, 0), 1);
+        assert_eq!(ChunkLedger::iterations(0, 128), 1);
+        // empty prompt is immediately done-able in one call
+        let mut e = ChunkLedger::new(0);
+        assert_eq!(e.next(64), (0, 0));
+        e.advance(0);
+        assert!(e.is_done());
+    }
+
+    #[test]
+    fn prop_chunk_ledger_covers_prompt_exactly_once() {
+        Prop::new(100, 0xC41F).forall(
+            |rng: &mut Rng| (1 + rng.below(4096), 1 + rng.below(512)),
+            |&(total, chunk)| {
+                let mut l = ChunkLedger::new(total);
+                let mut covered = 0usize;
+                let mut iters = 0usize;
+                while !l.is_done() {
+                    let (s, e) = l.next(chunk);
+                    if s != covered || e <= s || e > total {
+                        return Err(format!(
+                            "bad chunk [{s},{e}) after {covered}"
+                        ));
+                    }
+                    covered = e;
+                    l.advance(e);
+                    iters += 1;
+                }
+                if covered != total {
+                    return Err(format!("covered {covered} != {total}"));
+                }
+                if iters != ChunkLedger::iterations(total, chunk) {
+                    return Err(format!(
+                        "{iters} iters != predicted {}",
+                        ChunkLedger::iterations(total, chunk)
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// The tentpole's scheduling contract, engine-free: mirror the
+    /// scheduler's per-iteration prefill-chunk policy and show a 1-chunk
+    /// request co-admitted with a 32-chunk prompt starts decoding at
+    /// iteration 1 and finishes its decode while the long prompt is still
+    /// prefilling — TTFT is bounded by one chunk, not the full prompt.
+    #[test]
+    fn short_request_not_blocked_by_long_prefill() {
+        let chunk = 128usize;
+        let policy = BatchPolicy { max_batch: 8 };
+        let mut long = ChunkLedger::new(32 * chunk);
+        let mut short = ChunkLedger::new(100);
+        assert_eq!(policy.admit(0, 2), 2, "both admitted at iteration 0");
+
+        let short_decode_tokens = 4usize;
+        let mut short_decoded = 0usize;
+        let mut short_first_token_iter = None;
+        let mut short_finished_iter = None;
+        let mut long_prefill_done_iter = None;
+        for iter in 1..=64usize {
+            // prefill stage: one chunk per prefilling sequence
+            for ledger in [&mut long, &mut short] {
+                if !ledger.is_done() {
+                    let (_, end) = ledger.next(chunk);
+                    ledger.advance(end);
+                }
+            }
+            if short.is_done() && short_first_token_iter.is_none() {
+                // first token samples at prefill completion
+                short_first_token_iter = Some(iter);
+            }
+            if long.is_done() && long_prefill_done_iter.is_none() {
+                long_prefill_done_iter = Some(iter);
+            }
+            // decode stage: running sequences advance one token
+            if short.is_done() && short_decoded < short_decode_tokens {
+                short_decoded += 1;
+                if short_decoded == short_decode_tokens {
+                    short_finished_iter = Some(iter);
+                }
+            }
+            if short_finished_iter.is_some() && long.is_done() {
+                break;
+            }
+        }
+        assert_eq!(
+            short_first_token_iter,
+            Some(1),
+            "TTFT bounded by one chunk"
+        );
+        assert_eq!(short_finished_iter, Some(short_decode_tokens));
+        assert_eq!(
+            long_prefill_done_iter,
+            Some(32),
+            "long prompt occupies ⌈L/C⌉ iterations"
+        );
+        assert!(
+            short_finished_iter.unwrap() < long_prefill_done_iter.unwrap(),
+            "short request must complete before the long prefill"
+        );
+    }
+
+    /// Regression (issue satellite 1): a selector that charges retrievals
+    /// during prefill seeding must not have them counted in the
+    /// decode-only ρ̂.  The scheduler snapshots `retrievals()` at prefill
+    /// completion and reports `decode_rho_hat` over the delta.
+    struct CountingSelector {
+        sets: Vec<Vec<Vec<usize>>>,
+        retrievals: u64,
+        n_heads: usize,
+    }
+
+    impl KvSelector for CountingSelector {
+        fn kind(&self) -> SelectorKind {
+            SelectorKind::TopKOracle
+        }
+        fn plan(&mut self, _layer: usize, _ctx: &SelectorCtx<'_>) -> PlanKind {
+            self.retrievals += self.n_heads as u64;
+            PlanKind::Retrieve { heads: vec![true; self.n_heads] }
+        }
+        fn sets(&self, layer: usize) -> &[Vec<usize>] {
+            &self.sets[layer]
+        }
+        fn observe_probs(
+            &mut self,
+            _layer: usize,
+            _head: usize,
+            _t: usize,
+            _probs: &[f32],
+        ) {
+            // full-scoring row consumed during *prefill seeding* is a
+            // retrieval too — the class of selector the seed's accounting
+            // silently mischarged
+            self.retrievals += 1;
+        }
+        fn retrievals(&self) -> u64 {
+            self.retrievals
+        }
+    }
+
+    #[test]
+    fn rho_hat_counts_decode_retrievals_only() {
+        let (n_layers, n_heads) = (2usize, 2usize);
+        let mut sel = CountingSelector {
+            sets: vec![vec![Vec::new(); n_heads]; n_layers],
+            retrievals: 0,
+            n_heads,
+        };
+        // prefill seeding: the engine feeds one probs row per
+        // (layer, head) — 4 prefill-phase retrievals
+        let row = vec![0.1f32; 11];
+        for layer in 0..n_layers {
+            for head in 0..n_heads {
+                sel.observe_probs(layer, head, 10, &row);
+            }
+        }
+        let t0 = sel.retrievals(); // scheduler snapshot at prefill end
+        assert_eq!(t0, 4);
+
+        // decode: 3 steps × n_layers plans, each retrieving all heads
+        let qs: Vec<Vec<f32>> = vec![vec![0.0; 4]; n_heads];
+        for _step in 0..3 {
+            for layer in 0..n_layers {
+                let ctx = SelectorCtx {
+                    t: 10,
+                    q_heads: &qs,
+                    q_heads_raw: &qs,
+                    hidden: &[],
+                    last_keys: None,
+                };
+                sel.plan(layer, &ctx);
+            }
+        }
+        let head_steps = (n_heads * n_layers * 3) as u64;
+        // fixed accounting: decode-only ρ̂ is exactly 1.0
+        let rho = decode_rho_hat(sel.retrievals(), t0, head_steps);
+        assert!((rho - 1.0).abs() < 1e-12, "decode-only ρ̂ = {rho}");
+        // the seed bug (snapshot at admission = 0) inflates ρ̂ past the
+        // achievable maximum — that is the regression being pinned
+        let buggy = decode_rho_hat(sel.retrievals(), 0, head_steps);
+        assert!(buggy > 1.0, "admission-time snapshot inflates ρ̂ ({buggy})");
+    }
+
+    #[test]
+    fn decode_rho_hat_edge_cases() {
+        assert_eq!(decode_rho_hat(10, 4, 0), 0.0, "no decode steps");
+        assert_eq!(decode_rho_hat(4, 4, 12), 0.0, "no decode retrievals");
+        // counter snapshots never make ρ̂ negative even if a selector
+        // resets its counter (defensive saturation)
+        assert_eq!(decode_rho_hat(3, 4, 12), 0.0);
     }
 }

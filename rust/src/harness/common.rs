@@ -104,6 +104,8 @@ pub fn replay(
     let mut seq = engine.new_sequence(1, req.prompt.clone());
     seq.max_new = traj.tokens.len();
     engine.prefill(&mut seq)?;
+    // ρ̂ is decode-only (DESIGN.md §4): snapshot after prefill
+    let t0_retrievals = seq.selector.retrievals();
 
     let mut agree = 0usize;
     let mut top5 = 0usize;
@@ -143,7 +145,11 @@ pub fn replay(
         top5_agree: top5 as f64 / steps as f64,
         logit_l2: l2 / steps as f64,
         logit_cos: cos / steps as f64,
-        rho_hat: seq.selector.retrievals() as f64 / head_steps as f64,
+        rho_hat: crate::metrics::decode_rho_hat(
+            seq.selector.retrievals(),
+            t0_retrievals,
+            head_steps,
+        ),
         avg_selected: engine.stats.avg_selected(),
         mean_delta: probe.mean_delta(),
         mean_beta: probe.mean_beta(),

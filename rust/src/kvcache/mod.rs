@@ -148,14 +148,44 @@ impl SeqKvCache {
         l_max: usize,
         length: usize,
     ) -> Result<()> {
+        self.load_prefill_range(pool, k, v, l_max, 0, length)
+    }
+
+    /// Slice-based prefill load for chunked prefill (DESIGN.md §6a): copy
+    /// only positions `[start, end)` out of a `[n_layers, H, l_max, d]`
+    /// prefill result computed over the prompt *prefix* of length ≥ `end`.
+    /// Appends are strictly sequential, so `start` must equal the cached
+    /// length — earlier chunks must already be loaded.
+    pub fn load_prefill_range(
+        &mut self,
+        pool: &mut PagePool,
+        k: &[f32],
+        v: &[f32],
+        l_max: usize,
+        start: usize,
+        end: usize,
+    ) -> Result<()> {
         let (h, d) = (pool.n_heads, pool.head_dim);
-        if k.len() != self.n_layers * h * l_max * d {
-            return Err(anyhow!("load_prefill: bad k size"));
+        if k.len() != self.n_layers * h * l_max * d
+            || v.len() != self.n_layers * h * l_max * d
+        {
+            return Err(anyhow!("load_prefill_range: bad k/v size"));
         }
-        for pos in 0..length {
+        if start != self.len {
+            return Err(anyhow!(
+                "load_prefill_range: start {start} != cached length {}",
+                self.len
+            ));
+        }
+        if end > l_max {
+            return Err(anyhow!(
+                "load_prefill_range: end {end} exceeds l_max {l_max}"
+            ));
+        }
+        let mut krow = vec![0f32; h * d];
+        let mut vrow = vec![0f32; h * d];
+        for pos in start..end {
             for layer in 0..self.n_layers {
-                let mut krow = vec![0f32; h * d];
-                let mut vrow = vec![0f32; h * d];
                 for head in 0..h {
                     let src = ((layer * h + head) * l_max + pos) * d;
                     krow[head * d..(head + 1) * d]
@@ -431,6 +461,56 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn load_prefill_range_in_chunks_matches_whole() {
+        // Loading [0,3) then [3,5) must equal a single [0,5) load.
+        let (h, d, l_max, len) = (2usize, 4usize, 8usize, 5usize);
+        let mut rng = Rng::new(6);
+        let k: Vec<f32> =
+            (0..2 * h * l_max * d).map(|_| rng.normal()).collect();
+        let v: Vec<f32> =
+            (0..2 * h * l_max * d).map(|_| rng.normal()).collect();
+
+        let (mut pool_a, mut a) = mk(2);
+        a.load_prefill(&mut pool_a, &k, &v, l_max, len).unwrap();
+
+        let (mut pool_b, mut b) = mk(2);
+        b.load_prefill_range(&mut pool_b, &k, &v, l_max, 0, 3).unwrap();
+        assert_eq!(b.len(), 3);
+        b.load_prefill_range(&mut pool_b, &k, &v, l_max, 3, len).unwrap();
+        assert_eq!(b.len(), len);
+
+        for layer in 0..2 {
+            for head in 0..h {
+                for pos in 0..len {
+                    assert_eq!(
+                        a.key(&pool_a, layer, head, pos),
+                        b.key(&pool_b, layer, head, pos)
+                    );
+                    assert_eq!(
+                        a.value(&pool_a, layer, head, pos),
+                        b.value(&pool_b, layer, head, pos)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn load_prefill_range_rejects_gaps() {
+        let (mut pool, mut c) = mk(1);
+        let (h, d, l_max) = (2usize, 4usize, 8usize);
+        let k = vec![0f32; h * l_max * d];
+        let v = vec![0f32; h * l_max * d];
+        // start beyond the cached length: would leave a hole
+        assert!(c.load_prefill_range(&mut pool, &k, &v, l_max, 2, 4).is_err());
+        // end past the artifact width
+        assert!(c
+            .load_prefill_range(&mut pool, &k, &v, l_max, 0, l_max + 1)
+            .is_err());
+        assert_eq!(c.len(), 0);
     }
 
     #[test]

@@ -114,7 +114,9 @@ fn serve(rest: &[String]) -> Result<()> {
     let cli = base_cli("prhs serve", "serve a synthetic batched workload")
         .flag("requests", "8", "number of requests")
         .flag("batch", "8", "max concurrent batch")
-        .flag("prompt-len", "448", "synthetic prompt length");
+        .flag("prompt-len", "448", "synthetic prompt length")
+        .flag("prefill-chunk", "0", "chunked-prefill tokens per iteration (0 = whole prompt)")
+        .flag("planner-threads", "0", "host-side planner pool width (0/1 = serial)");
     let args = cli.parse(rest).map_err(anyhow::Error::msg)?;
     let mut cfg = EngineConfig::default();
     cfg.artifacts_dir = args.get("artifacts").to_string();
@@ -124,6 +126,8 @@ fn serve(rest: &[String]) -> Result<()> {
     cfg.selector.block_size = args.get_usize("block-size");
     cfg.max_new_tokens = args.get_usize("gen");
     cfg.max_batch = args.get_usize("batch");
+    cfg.prefill_chunk = args.get_usize("prefill-chunk");
+    cfg.planner_threads = args.get_usize("planner-threads");
     // vocab comes from the manifest (read it without building an engine)
     let vocab = prhs::runtime::Manifest::load(args.get("artifacts"))?
         .model(&cfg.model)?
@@ -152,8 +156,12 @@ fn serve(rest: &[String]) -> Result<()> {
         let out = rx.recv()?;
         total_tokens += out.tokens.len();
         println!(
-            "req {}: {} tokens, prefill {:.1} ms, ρ̂ {:.4}",
-            out.id, out.tokens.len(), out.prefill_us / 1e3, out.rho_hat
+            "req {}: {} tokens, prefill {:.1} ms, ttft {:.1} ms, ρ̂ {:.4}",
+            out.id,
+            out.tokens.len(),
+            out.prefill_us / 1e3,
+            out.ttft_us / 1e3,
+            out.rho_hat
         );
     }
     let dt = t0.elapsed().as_secs_f64();

@@ -49,6 +49,24 @@ pub fn attn_flops(n_attended: usize, n_heads: usize, head_dim: usize) -> u64 {
     4 * n_heads as u64 * n_attended as u64 * head_dim as u64
 }
 
+/// Decode-phase retrieval ratio ρ̂ = (R_total − R_prefill) / head-steps.
+///
+/// `prefill_retrievals` is the selector's counter snapshotted at prefill
+/// completion; `head_steps` = H · n_layers · decode_steps.  This is the
+/// paper's R_t accounting (Sec. III, DESIGN.md §4): prefill-side scoring
+/// must not be charged against decode head-steps.
+pub fn decode_rho_hat(
+    total_retrievals: u64,
+    prefill_retrievals: u64,
+    head_steps: u64,
+) -> f64 {
+    if head_steps == 0 {
+        return 0.0;
+    }
+    total_retrievals.saturating_sub(prefill_retrievals) as f64
+        / head_steps as f64
+}
+
 /// Retrieval (full-scoring) FLOPs: 2·H·L·d per scoring pass, scaled by the
 /// selector's surrogate cost factor (e.g. DS scores r of d channels).
 pub fn retrieval_flops(
@@ -66,8 +84,13 @@ pub fn retrieval_flops(
 pub struct RunMetrics {
     pub prefill_lat: Histogram,
     pub step_lat: Histogram,
+    /// Time-to-first-token per request: submission → first sampled token
+    /// (i.e. prefill completion under chunked prefill, DESIGN.md §6a).
+    pub ttft_lat: Histogram,
     pub tokens_out: u64,
     pub wall_s: f64,
+    /// Decode-phase head-level retrievals only (prefill-side scoring is
+    /// excluded from ρ̂ by definition — paper Sec. III, DESIGN.md §4).
     pub retrievals: u64,
     pub head_steps: u64,
 }

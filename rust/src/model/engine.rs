@@ -20,9 +20,146 @@ use crate::config::EngineConfig;
 use crate::kvcache::{PagePool, SeqKvCache};
 use crate::runtime::{ArtifactSpec, Input, ModelManifest, Runtime, WeightStore};
 use crate::selector::{KvSelector, PlanKind, SelectorCtx};
+use crate::util::pool::for_each_unit;
 use crate::util::rng::Rng;
 
 use super::proj;
+
+/// Pure chunked-prefill progress ledger, owned by each `Sequence`.  The
+/// engine maps each `[start, end)` chunk onto the prefill artifact
+/// (`Engine::prefill_chunk`); the scheduler drives one chunk per
+/// iteration (DESIGN.md §6a).  Engine-free by construction so the
+/// scheduling contract is unit-testable without PJRT.
+#[derive(Clone, Debug)]
+pub struct ChunkLedger {
+    /// Total prompt tokens to prefill.
+    pub total: usize,
+    /// Tokens already prefilled (== the sequence's cached length during
+    /// the prefill phase).
+    pub done: usize,
+}
+
+impl ChunkLedger {
+    pub fn new(total: usize) -> Self {
+        ChunkLedger { total, done: 0 }
+    }
+
+    /// The next chunk `[start, end)`; `chunk == 0` means the whole
+    /// remaining prompt.
+    pub fn next(&self, chunk: usize) -> (usize, usize) {
+        let end = if chunk == 0 {
+            self.total
+        } else {
+            self.total.min(self.done + chunk)
+        };
+        (self.done, end)
+    }
+
+    pub fn advance(&mut self, end: usize) {
+        debug_assert!(end >= self.done && end <= self.total);
+        self.done = end;
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.done >= self.total
+    }
+
+    /// Scheduler iterations a prompt of `total` tokens occupies the
+    /// prefill stage for at `chunk` granularity.
+    pub fn iterations(total: usize, chunk: usize) -> usize {
+        if chunk == 0 || total == 0 {
+            1
+        } else {
+            total.div_ceil(chunk)
+        }
+    }
+}
+
+/// Reusable per-sequence host-side scratch.  Owned by the sequence so the
+/// planner pool can fill it concurrently with other sequences' scratch
+/// (disjoint `&mut`), and so the per-(step, layer) hot loop stops
+/// allocating `Vec<Vec<f32>>` for queries / last keys / probs rows on
+/// every iteration — buffers grow once and are reused for the lifetime of
+/// the sequence.
+#[derive(Default)]
+pub struct PlanScratch {
+    norm_x: Vec<f32>,
+    q_flat: Vec<f32>,
+    q_heads: Vec<Vec<f32>>,
+    q_raw: Vec<Vec<f32>>,
+    last_keys: Vec<Vec<f32>>,
+    has_last_keys: bool,
+    /// Staging row for probs feedback (`observe_probs`/`observe_sparse`).
+    row: Vec<f32>,
+    /// Staging copy of a selected set (aliasing: `sets()` borrows the
+    /// selector that `observe_sparse` needs mutably).
+    set_buf: Vec<usize>,
+    /// GQA-expanded new-token K/V rows for the cache append.
+    krow: Vec<f32>,
+    vrow: Vec<f32>,
+}
+
+impl PlanScratch {
+    /// Fill `q_heads` / `q_raw` for this layer's planning.  Public so
+    /// benches and harnesses can exercise the exact shipped planning
+    /// path (`benches/micro_hotpath.rs`).
+    pub fn project(
+        &mut self,
+        hidden: &[f32],
+        norm_w: &[f32],
+        wq: &[f32],
+        n_heads: usize,
+        head_dim: usize,
+        pos: usize,
+    ) {
+        proj::project_queries_into(
+            hidden,
+            norm_w,
+            wq,
+            n_heads,
+            head_dim,
+            pos,
+            10000.0,
+            1e-5,
+            &mut self.norm_x,
+            &mut self.q_flat,
+            &mut self.q_heads,
+            &mut self.q_raw,
+        );
+    }
+
+    /// Projected per-head queries (RoPE'd) from the last `project`.
+    pub fn q_heads(&self) -> &[Vec<f32>] {
+        &self.q_heads
+    }
+
+    /// Raw pre-RoPE queries from the last `project` (Eq. 12 gating).
+    pub fn q_raw(&self) -> &[Vec<f32>] {
+        &self.q_raw
+    }
+
+    /// Stage the previous position's per-head keys (similarity-space
+    /// ablation input); no-op at t = 0.
+    fn stage_last_keys(
+        &mut self,
+        cache: &SeqKvCache,
+        pool: &PagePool,
+        layer: usize,
+        n_heads: usize,
+        t: usize,
+    ) {
+        self.has_last_keys = t > 0;
+        if t == 0 {
+            return;
+        }
+        self.last_keys.resize(n_heads, Vec::new());
+        for head in 0..n_heads {
+            let src = cache.key(pool, layer, head, t - 1);
+            self.last_keys[head].clear();
+            self.last_keys[head].extend_from_slice(src);
+        }
+    }
+}
 
 /// One in-flight sequence.
 pub struct Sequence {
@@ -36,6 +173,13 @@ pub struct Sequence {
     pub done: bool,
     /// Logits of the most recent step (harness fidelity comparisons).
     pub last_logits: Vec<f32>,
+    /// Chunked-prefill progress over `prompt` (DESIGN.md §6a).
+    pub prefill: ChunkLedger,
+    /// Selector retrieval counter at prefill completion — decode-only ρ̂
+    /// consumers subtract this (DESIGN.md §4).
+    pub prefill_retrievals: u64,
+    /// Per-sequence planning scratch (planner-pool work area).
+    pub scratch: PlanScratch,
 }
 
 impl Sequence {
@@ -46,6 +190,7 @@ impl Sequence {
         n_layers: usize,
         max_new: usize,
     ) -> Self {
+        let prefill = ChunkLedger::new(prompt.len());
         Sequence {
             id,
             prompt,
@@ -56,6 +201,9 @@ impl Sequence {
             max_new,
             done: false,
             last_logits: Vec::new(),
+            prefill,
+            prefill_retrievals: 0,
+            scratch: PlanScratch::default(),
         }
     }
 
@@ -171,6 +319,10 @@ pub struct Engine {
     sc_ks: Vec<f32>,
     sc_vs: Vec<f32>,
     sc_mask: Vec<f32>,
+    sc_hidden: Vec<f32>,
+    sc_hidden_next: Vec<f32>,
+    sc_tokens: Vec<i32>,
+    sc_pos: Vec<i32>,
 }
 
 impl Engine {
@@ -207,6 +359,10 @@ impl Engine {
             sc_ks: Vec::new(),
             sc_vs: Vec::new(),
             sc_mask: Vec::new(),
+            sc_hidden: Vec::new(),
+            sc_hidden_next: Vec::new(),
+            sc_tokens: Vec::new(),
+            sc_pos: Vec::new(),
         }
     }
 
@@ -236,17 +392,51 @@ impl Engine {
     // -----------------------------------------------------------------
     // prefill
 
-    /// Run the whole-prompt prefill artifact for one sequence, load the KV
-    /// cache, seed the selector, and sample the first generated token.
+    /// Prefill the whole prompt in one call (chunking disabled).
     pub fn prefill(&mut self, seq: &mut Sequence) -> Result<()> {
+        while !self.prefill_chunk(seq, 0)? {}
+        Ok(())
+    }
+
+    /// Advance one prefill chunk of up to `chunk` prompt tokens (0 = the
+    /// whole remaining prompt) and return whether the prompt is fully
+    /// prefilled.  On the final chunk the selector is seeded with the
+    /// last-token attention rows, `last_logits` is set, and the first
+    /// token is sampled — exactly the monolithic prefill's final state.
+    ///
+    /// Each chunk re-runs the prefill artifact over the prompt *prefix*
+    /// `[0, end)` and loads only the new positions' K/V: causal attention
+    /// makes prefix K/V independent of later tokens, so chunked and
+    /// monolithic prefill agree.  Cost caveat: because of the prefix
+    /// recompute, one call costs one prefix-prefill (which grows with
+    /// `end`), not one chunk — chunking removes the *wait for the whole
+    /// prompt* from co-scheduled requests but does not yet bound late
+    /// iterations of a very long prompt; a KV-in chunked prefill
+    /// artifact is the L2-side follow-up (DESIGN.md §6a).
+    pub fn prefill_chunk(
+        &mut self,
+        seq: &mut Sequence,
+        chunk: usize,
+    ) -> Result<bool> {
+        // Idempotent once the final chunk has run.  An empty prompt is
+        // ledger-done from the start but must still execute the artifact
+        // once (length 0) so the first token is sampled from real logits;
+        // `last_logits` records whether that happened.
+        if seq.prefill.is_done() && !seq.last_logits.is_empty() {
+            return Ok(true);
+        }
         let len = seq.prompt.len();
+        let (start, end) = seq.prefill.next(chunk);
+        debug_assert_eq!(start, seq.cache.len(), "chunk must resume at cache end");
         let l_max = self
             .mm
-            .bucket_for("prefill", "l_max", len)
-            .ok_or_else(|| anyhow!("prompt of {len} exceeds prefill buckets"))?;
+            .bucket_for("prefill", "l_max", end)
+            .ok_or_else(|| {
+                anyhow!("prompt prefix of {end} exceeds prefill buckets")
+            })?;
         let art = self.art("prefill", &[("l_max", l_max)])?;
 
-        let mut tokens = seq.prompt.clone();
+        let mut tokens = seq.prompt[..end].to_vec();
         tokens.resize(l_max, 0);
         let sc = &self.cfg.selector;
         let nl = self.mm.n_layers;
@@ -257,7 +447,7 @@ impl Engine {
         let wbufs = self.weights.all_buffers();
         let mut inputs: Vec<Input<'_>> = vec![
             Input::I32(&tokens, vec![l_max]),
-            Input::ScalarI32(len as i32),
+            Input::ScalarI32(end as i32),
             Input::ScalarF32(sc.c_sink as f32),
             Input::ScalarF32(ell_s),
             Input::ScalarF32(sc.psaw_phi),
@@ -272,37 +462,50 @@ impl Engine {
         let (k, v, _last_hidden, logits, last_probs) =
             (&outs[0], &outs[1], &outs[2], &outs[3], &outs[4]);
 
-        seq.cache
-            .load_prefill(&mut self.pool, &k.data, &v.data, l_max, len)?;
+        seq.cache.load_prefill_range(
+            &mut self.pool,
+            &k.data,
+            &v.data,
+            l_max,
+            start,
+            end,
+        )?;
 
-        // Seed the selector: per (layer, head) last-token attention row +
-        // every cached key (Quest summaries / DS caches).
-        let (h, d) = (self.mm.n_heads, self.mm.head_dim);
+        // Report the chunk's new keys (Quest summaries / DS caches).
+        let h = self.mm.n_heads;
+        for layer in 0..nl {
+            for head in 0..h {
+                for pos in start..end {
+                    let krow = seq.cache.key(&self.pool, layer, head, pos);
+                    seq.selector.observe_new_key(layer, head, pos, krow);
+                }
+            }
+        }
+        seq.prefill.advance(end);
+        if end < len {
+            return Ok(false);
+        }
+
+        // Final chunk ran over the full prompt: seed the selector with
+        // the last-token attention row per (layer, head) and sample the
+        // first generated token.
         for layer in 0..nl {
             for head in 0..h {
                 let base = (layer * h + head) * l_max;
-                let mut row = last_probs.data[base..base + len].to_vec();
-                row.push(0.0); // imaginary self slot at position `len`
-                seq.selector.observe_probs(layer, head, len, &row);
-            }
-        }
-        for layer in 0..nl {
-            for head in 0..h {
-                for pos in 0..len {
-                    let krow = seq.cache.key(&self.pool, layer, head, pos);
-                    // SAFETY of borrow: copy out to satisfy the borrow
-                    // checker (selector may not hold references).
-                    let kcopy: Vec<f32> = krow.to_vec();
-                    seq.selector.observe_new_key(layer, head, pos, &kcopy);
-                    let _ = d;
-                }
+                seq.scratch.row.clear();
+                seq.scratch
+                    .row
+                    .extend_from_slice(&last_probs.data[base..base + len]);
+                seq.scratch.row.push(0.0); // imaginary self slot at `len`
+                seq.selector.observe_probs(layer, head, len, &seq.scratch.row);
             }
         }
 
         seq.last_logits = logits.data.clone();
         seq.next_token =
             proj::sample(&logits.data, self.temperature, &mut self.rng) as i32;
-        Ok(())
+        seq.prefill_retrievals = seq.selector.retrievals();
+        Ok(true)
     }
 
     // -----------------------------------------------------------------
@@ -312,6 +515,12 @@ impl Engine {
     /// Feeds each sequence's `next_token`, appends KV, samples the next
     /// token.  All sequences must use the same selector kind (the batcher
     /// guarantees this).
+    ///
+    /// Host-side per-sequence work (query projection, last-key staging,
+    /// selector planning, dense-export and gather staging) fans out over
+    /// `cfg.planner_threads` scoped threads — sequences are disjoint
+    /// `&mut` and selectors are `Send` — while every PJRT `execute` stays
+    /// on the engine thread (DESIGN.md §6a).
     pub fn decode_step(&mut self, seqs: &mut [&mut Sequence]) -> Result<()> {
         let n = seqs.len();
         if n == 0 {
@@ -326,62 +535,60 @@ impl Engine {
         );
         let nl = self.mm.n_layers;
         let vocab = self.mm.vocab_size;
+        let nt = self.cfg.planner_threads;
 
-        let mut tokens: Vec<i32> = seqs.iter().map(|s| s.next_token).collect();
-        tokens.resize(b, 0);
-        let mut pos: Vec<i32> =
-            seqs.iter().map(|s| s.t() as i32).collect();
-        pos.resize(b, 0);
-        let lengths: Vec<i32> = pos.clone();
+        self.sc_tokens.clear();
+        self.sc_tokens.extend(seqs.iter().map(|s| s.next_token));
+        self.sc_tokens.resize(b, 0);
+        self.sc_pos.clear();
+        self.sc_pos.extend(seqs.iter().map(|s| s.t() as i32));
+        self.sc_pos.resize(b, 0);
 
         // embed
         let art_embed = self.art("embed", &[("batch", b)])?;
         let embed_w = self.weights.device("embed.weight");
         let outs = self.rt.execute(
             &art_embed,
-            &[Input::I32(&tokens, vec![b]), Input::Buffer(embed_w)],
+            &[Input::I32(&self.sc_tokens, vec![b]), Input::Buffer(embed_w)],
         )?;
-        let mut hidden = outs[0].data.clone(); // [b, dm]
+        self.sc_hidden.clear();
+        self.sc_hidden.extend_from_slice(&outs[0].data); // [b, dm]
 
         for layer in 0..nl {
-            // --- host-side query projection for planning ---------------
+            // --- host-side planning stage (parallel over sequences) ----
             let (_, norm_w) =
                 self.weights.host(&self.weights.layer_name(layer, "attn_norm.weight"));
             let (_, wq) = self.weights.host(&self.weights.layer_name(layer, "wq"));
-            let mut plans: Vec<PlanKind> = Vec::with_capacity(n);
-            for (i, seq) in seqs.iter_mut().enumerate() {
-                let t = seq.t();
-                let (qs, qs_raw) = proj::project_queries(
-                    &hidden[i * dm..(i + 1) * dm],
-                    norm_w,
-                    wq,
-                    h,
-                    d,
-                    t,
-                    10000.0,
-                    1e-5,
-                );
-                let last_keys: Option<Vec<Vec<f32>>> = if t > 0 {
-                    Some(
-                        (0..h)
-                            .map(|hh| {
-                                seq.cache
-                                    .key(&self.pool, layer, hh, t - 1)
-                                    .to_vec()
-                            })
-                            .collect(),
-                    )
-                } else {
-                    None
-                };
-                let ctx = SelectorCtx {
-                    t,
-                    q_heads: &qs,
-                    q_heads_raw: &qs_raw,
-                    hidden: &hidden[i * dm..(i + 1) * dm],
-                    last_keys: last_keys.as_deref(),
-                };
-                plans.push(seq.selector.plan(layer, &ctx));
+            let mut plans: Vec<PlanKind> = vec![PlanKind::Sparse; n];
+            {
+                let pool = &self.pool;
+                let mut units: Vec<(&mut Sequence, &[f32], &mut PlanKind)> =
+                    seqs.iter_mut()
+                        .map(|s| &mut **s)
+                        .zip(self.sc_hidden.chunks(dm))
+                        .zip(plans.iter_mut())
+                        .map(|((s, hid), p)| (s, hid, p))
+                        .collect();
+                for_each_unit(nt, &mut units, |(seq, hid, plan)| {
+                    let hid: &[f32] = *hid;
+                    let t = seq.cache.len();
+                    let Sequence { cache, selector, scratch, .. } =
+                        &mut **seq;
+                    scratch.project(hid, norm_w, wq, h, d, t);
+                    scratch.stage_last_keys(cache, pool, layer, h, t);
+                    let ctx = SelectorCtx {
+                        t,
+                        q_heads: &scratch.q_heads,
+                        q_heads_raw: &scratch.q_raw,
+                        hidden: hid,
+                        last_keys: if scratch.has_last_keys {
+                            Some(&scratch.last_keys)
+                        } else {
+                            None
+                        },
+                    };
+                    **plan = selector.plan(layer, &ctx);
+                });
             }
 
             let probing = self
@@ -412,27 +619,42 @@ impl Engine {
                 dense_lmax = l_max;
                 let art =
                     self.art("layer_step_dense", &[("batch", b), ("l_max", l_max)])?;
-                let kc_len = b * hkv * l_max * d;
+                let per = hkv * l_max * d;
+                let kc_len = b * per;
                 if self.sc_kc.len() < kc_len {
                     self.sc_kc.resize(kc_len, 0.0);
                     self.sc_vc.resize(kc_len, 0.0);
                 }
                 self.sc_kc[..kc_len].fill(0.0);
                 self.sc_vc[..kc_len].fill(0.0);
-                for (i, seq) in seqs.iter().enumerate() {
-                    let kslice =
-                        &mut self.sc_kc[i * hkv * l_max * d..(i + 1) * hkv * l_max * d];
-                    let vslice =
-                        &mut self.sc_vc[i * hkv * l_max * d..(i + 1) * hkv * l_max * d];
-                    seq.cache
-                        .export_dense(&self.pool, layer, l_max, kslice, vslice);
+                // dense-export staging into per-sequence slices, fanned
+                // over the planner pool (bandwidth ∝ L is the dominant
+                // host cost of the retrieval path)
+                {
+                    let pool = &self.pool;
+                    let mut units: Vec<(&mut Sequence, &mut [f32], &mut [f32])> =
+                        seqs.iter_mut()
+                            .map(|s| &mut **s)
+                            .zip(self.sc_kc[..kc_len].chunks_mut(per))
+                            .zip(self.sc_vc[..kc_len].chunks_mut(per))
+                            .map(|((s, kc), vc)| (s, kc, vc))
+                            .collect();
+                    for_each_unit(nt, &mut units, |(seq, kc, vc)| {
+                        seq.cache.export_dense(
+                            pool,
+                            layer,
+                            l_max,
+                            &mut **kc,
+                            &mut **vc,
+                        );
+                    });
                 }
                 let mut inputs: Vec<Input<'_>> = vec![
-                    Input::F32(&hidden, vec![b, dm]),
-                    Input::I32(&pos, vec![b]),
+                    Input::F32(&self.sc_hidden, vec![b, dm]),
+                    Input::I32(&self.sc_pos, vec![b]),
                     Input::F32(&self.sc_kc[..kc_len], vec![b, hkv, l_max, d]),
                     Input::F32(&self.sc_vc[..kc_len], vec![b, hkv, l_max, d]),
-                    Input::I32(&lengths, vec![b]),
+                    Input::I32(&self.sc_pos, vec![b]),
                 ];
                 inputs.extend(wl.iter().map(|w| Input::Buffer(*w)));
                 let want_probs = probing
@@ -451,15 +673,23 @@ impl Engine {
                         let t = seq.t();
                         let probs = &outs[3].data;
                         let row_w = l_max + 1;
+                        let Sequence { selector, scratch, .. } = &mut **seq;
                         for (head, &r) in heads.iter().enumerate() {
                             if !r {
                                 continue;
                             }
                             let base = (i * h + head) * row_w;
-                            let mut row =
-                                probs[base..base + t.min(l_max)].to_vec();
-                            row.push(probs[base + l_max]); // self slot
-                            seq.selector.observe_probs(layer, head, t, &row);
+                            scratch.row.clear();
+                            scratch.row.extend_from_slice(
+                                &probs[base..base + t.min(l_max)],
+                            );
+                            scratch.row.push(probs[base + l_max]); // self slot
+                            selector.observe_probs(
+                                layer,
+                                head,
+                                t,
+                                &scratch.row,
+                            );
                         }
                     }
                 }
@@ -488,42 +718,78 @@ impl Engine {
                 sparse_n = n_sel;
                 let art =
                     self.art("layer_step", &[("batch", b), ("n_sel", n_sel)])?;
-                let ks_len = b * h * n_sel * d;
+                let per = h * n_sel * d;
+                let ks_len = b * per;
                 if self.sc_ks.len() < ks_len {
                     self.sc_ks.resize(ks_len, 0.0);
                     self.sc_vs.resize(ks_len, 0.0);
                 }
-                if self.sc_mask.len() < b * h * n_sel {
-                    self.sc_mask.resize(b * h * n_sel, 0.0);
+                let mask_len = b * h * n_sel;
+                if self.sc_mask.len() < mask_len {
+                    self.sc_mask.resize(mask_len, 0.0);
                 }
-                self.sc_mask[..b * h * n_sel].fill(0.0);
-                for (i, seq) in seqs.iter().enumerate() {
-                    if matches!(plans[i], PlanKind::DenseOnly) {
-                        continue;
-                    }
-                    for head in 0..h {
-                        let set = &seq.selector.sets(layer)[head];
-                        let off = (i * h + head) * n_sel * d;
-                        seq.cache.gather(
-                            &self.pool,
-                            layer,
-                            head,
-                            set,
-                            &mut self.sc_ks[off..off + set.len() * d],
-                            &mut self.sc_vs[off..off + set.len() * d],
-                        );
-                        let moff = (i * h + head) * n_sel;
-                        self.sc_mask[moff..moff + set.len()].fill(1.0);
-                        self.stats.selected_tokens += set.len() as u64;
-                        self.stats.selected_sets += 1;
-                    }
+                self.sc_mask[..mask_len].fill(0.0);
+                // selected-set gather staging into per-sequence slices,
+                // fanned over the planner pool (stats accumulate into
+                // per-sequence counters, summed after the join)
+                let mut counts = vec![(0u64, 0u64); n];
+                {
+                    let pool = &self.pool;
+                    let plans = &plans;
+                    let mut units: Vec<(
+                        &mut Sequence,
+                        &PlanKind,
+                        &mut [f32],
+                        &mut [f32],
+                        &mut [f32],
+                        &mut (u64, u64),
+                    )> = seqs
+                        .iter_mut()
+                        .map(|s| &mut **s)
+                        .zip(plans.iter())
+                        .zip(self.sc_ks[..ks_len].chunks_mut(per))
+                        .zip(self.sc_vs[..ks_len].chunks_mut(per))
+                        .zip(self.sc_mask[..mask_len].chunks_mut(h * n_sel))
+                        .zip(counts.iter_mut())
+                        .map(|(((((s, p), ks), vs), m), c)| (s, p, ks, vs, m, c))
+                        .collect();
+                    for_each_unit(
+                        nt,
+                        &mut units,
+                        |(seq, plan, ks, vs, mask, cnt)| {
+                            if matches!(**plan, PlanKind::DenseOnly) {
+                                return;
+                            }
+                            for head in 0..h {
+                                let set = &seq.selector.sets(layer)[head];
+                                let off = head * n_sel * d;
+                                let sl = set.len();
+                                seq.cache.gather(
+                                    pool,
+                                    layer,
+                                    head,
+                                    set,
+                                    &mut ks[off..off + sl * d],
+                                    &mut vs[off..off + sl * d],
+                                );
+                                mask[head * n_sel..head * n_sel + sl]
+                                    .fill(1.0);
+                                cnt.0 += sl as u64;
+                                cnt.1 += 1;
+                            }
+                        },
+                    );
+                }
+                for &(toks, sets) in &counts {
+                    self.stats.selected_tokens += toks;
+                    self.stats.selected_sets += sets;
                 }
                 let mut inputs: Vec<Input<'_>> = vec![
-                    Input::F32(&hidden, vec![b, dm]),
-                    Input::I32(&pos, vec![b]),
+                    Input::F32(&self.sc_hidden, vec![b, dm]),
+                    Input::I32(&self.sc_pos, vec![b]),
                     Input::F32(&self.sc_ks[..ks_len], vec![b, h, n_sel, d]),
                     Input::F32(&self.sc_vs[..ks_len], vec![b, h, n_sel, d]),
-                    Input::F32(&self.sc_mask[..b * h * n_sel], vec![b, h, n_sel]),
+                    Input::F32(&self.sc_mask[..mask_len], vec![b, h, n_sel]),
                 ];
                 inputs.extend(wl.iter().map(|w| Input::Buffer(*w)));
                 let want_probs = seqs
@@ -542,14 +808,25 @@ impl Engine {
                         let t = seq.t();
                         let probs = &outs[3].data;
                         let row_w = n_sel + 1;
+                        let Sequence { selector, scratch, .. } = &mut **seq;
                         for head in 0..h {
-                            let set = seq.selector.sets(layer)[head].clone();
+                            scratch.set_buf.clear();
+                            scratch
+                                .set_buf
+                                .extend_from_slice(&selector.sets(layer)[head]);
                             let base = (i * h + head) * row_w;
-                            let mut row =
-                                probs[base..base + set.len()].to_vec();
-                            row.push(probs[base + n_sel]);
-                            seq.selector
-                                .observe_sparse(layer, head, t, &set, &row);
+                            scratch.row.clear();
+                            scratch.row.extend_from_slice(
+                                &probs[base..base + scratch.set_buf.len()],
+                            );
+                            scratch.row.push(probs[base + n_sel]);
+                            selector.observe_sparse(
+                                layer,
+                                head,
+                                t,
+                                &scratch.set_buf,
+                                &scratch.row,
+                            );
                         }
                     }
                 }
@@ -676,7 +953,8 @@ impl Engine {
             }
 
             // --- merge outputs, append KV --------------------------------
-            let mut new_hidden = vec![0f32; b * dm];
+            self.sc_hidden_next.clear();
+            self.sc_hidden_next.resize(b * dm, 0.0);
             for (i, seq) in seqs.iter_mut().enumerate() {
                 let (src, k_new, v_new) = match &plans[i] {
                     PlanKind::DenseOnly => {
@@ -688,39 +966,45 @@ impl Engine {
                         (&o[0], &o[1], &o[2])
                     }
                 };
-                new_hidden[i * dm..(i + 1) * dm]
+                self.sc_hidden_next[i * dm..(i + 1) * dm]
                     .copy_from_slice(&src.data[i * dm..(i + 1) * dm]);
                 // expand kv heads if GQA
-                let mut krow = vec![0f32; h * d];
-                let mut vrow = vec![0f32; h * d];
+                let t = seq.t();
+                let Sequence { cache, selector, scratch, .. } = &mut **seq;
+                scratch.krow.resize(h * d, 0.0);
+                scratch.vrow.resize(h * d, 0.0);
                 let rep = h / hkv;
                 for hh in 0..h {
                     let src_h = hh / rep;
                     let base = (i * hkv + src_h) * d;
-                    krow[hh * d..(hh + 1) * d]
+                    scratch.krow[hh * d..(hh + 1) * d]
                         .copy_from_slice(&k_new.data[base..base + d]);
-                    vrow[hh * d..(hh + 1) * d]
+                    scratch.vrow[hh * d..(hh + 1) * d]
                         .copy_from_slice(&v_new.data[base..base + d]);
                 }
-                let t = seq.t();
-                seq.cache.append(&mut self.pool, layer, &krow, &vrow)?;
+                cache.append(
+                    &mut self.pool,
+                    layer,
+                    &scratch.krow,
+                    &scratch.vrow,
+                )?;
                 for hh in 0..h {
-                    seq.selector.observe_new_key(
+                    selector.observe_new_key(
                         layer,
                         hh,
                         t,
-                        &krow[hh * d..(hh + 1) * d],
+                        &scratch.krow[hh * d..(hh + 1) * d],
                     );
                 }
             }
             // fill padded rows (keep executing with finite values)
             if n < b {
                 if let Some(o) = sparse_out.as_ref().or(dense_out.as_ref()) {
-                    new_hidden[n * dm..]
+                    self.sc_hidden_next[n * dm..]
                         .copy_from_slice(&o[0].data[n * dm..b * dm]);
                 }
             }
-            hidden = new_hidden;
+            std::mem::swap(&mut self.sc_hidden, &mut self.sc_hidden_next);
             let _ = (dense_lmax, sparse_n);
         }
 
@@ -729,7 +1013,7 @@ impl Engine {
         let outs = self.rt.execute(
             &art_head,
             &[
-                Input::F32(&hidden, vec![b, dm]),
+                Input::F32(&self.sc_hidden, vec![b, dm]),
                 Input::Buffer(self.weights.device("final_norm.weight")),
                 Input::Buffer(self.weights.device("lm_head")),
             ],
@@ -766,12 +1050,14 @@ impl Engine {
         seq.cache.release(&mut self.pool);
     }
 
-    /// ρ̂ for a finished sequence: retrievals / (H · n_layers · steps).
+    /// Decode-only ρ̂ for a finished sequence: retrievals accrued after
+    /// prefill completion / (H · n_layers · steps) — the paper's R_t
+    /// accounting (DESIGN.md §4).
     pub fn retrieval_ratio(&self, seq: &Sequence, steps: u64) -> f64 {
-        if steps == 0 {
-            return 0.0;
-        }
-        seq.selector.retrievals() as f64
-            / (self.mm.n_heads as f64 * self.mm.n_layers as f64 * steps as f64)
+        crate::metrics::decode_rho_hat(
+            seq.selector.retrievals(),
+            seq.prefill_retrievals,
+            self.mm.n_heads as u64 * self.mm.n_layers as u64 * steps,
+        )
     }
 }

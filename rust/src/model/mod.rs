@@ -5,4 +5,6 @@
 pub mod engine;
 pub mod proj;
 
-pub use engine::{Engine, Probe, ProbeRow, Sequence, StepStats};
+pub use engine::{
+    ChunkLedger, Engine, PlanScratch, Probe, ProbeRow, Sequence, StepStats,
+};

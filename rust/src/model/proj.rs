@@ -68,23 +68,50 @@ pub fn project_queries(
     rope_base: f32,
     eps: f32,
 ) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
-    let dm = hidden.len();
-    let mut x = vec![0f32; dm];
-    rmsnorm(hidden, attn_norm_w, eps, &mut x);
-    let mut q = vec![0f32; n_heads * head_dim];
-    matvec(&x, wq, dm, n_heads * head_dim, &mut q);
-    let raw: Vec<Vec<f32>> = (0..n_heads)
-        .map(|h| q[h * head_dim..(h + 1) * head_dim].to_vec())
-        .collect();
-    let roped = raw
-        .iter()
-        .map(|r| {
-            let mut qa = r.clone();
-            apply_rope(&mut qa, pos, rope_base);
-            qa
-        })
-        .collect();
+    let mut norm_x = Vec::new();
+    let mut q_flat = Vec::new();
+    let mut roped = Vec::new();
+    let mut raw = Vec::new();
+    project_queries_into(
+        hidden, attn_norm_w, wq, n_heads, head_dim, pos, rope_base, eps,
+        &mut norm_x, &mut q_flat, &mut roped, &mut raw,
+    );
     (roped, raw)
+}
+
+/// Allocation-free form of [`project_queries`] writing into caller-owned
+/// scratch (the decode hot path runs this per (step, layer, sequence);
+/// after warmup no buffer grows, so the planner pool stays heap-silent).
+#[allow(clippy::too_many_arguments)]
+pub fn project_queries_into(
+    hidden: &[f32],
+    attn_norm_w: &[f32],
+    wq: &[f32],
+    n_heads: usize,
+    head_dim: usize,
+    pos: usize,
+    rope_base: f32,
+    eps: f32,
+    norm_x: &mut Vec<f32>,
+    q_flat: &mut Vec<f32>,
+    roped: &mut Vec<Vec<f32>>,
+    raw: &mut Vec<Vec<f32>>,
+) {
+    let dm = hidden.len();
+    norm_x.resize(dm, 0.0);
+    rmsnorm(hidden, attn_norm_w, eps, norm_x);
+    q_flat.resize(n_heads * head_dim, 0.0);
+    matvec(norm_x, wq, dm, n_heads * head_dim, q_flat);
+    raw.resize(n_heads, Vec::new());
+    roped.resize(n_heads, Vec::new());
+    for h in 0..n_heads {
+        let src = &q_flat[h * head_dim..(h + 1) * head_dim];
+        raw[h].clear();
+        raw[h].extend_from_slice(src);
+        roped[h].clear();
+        roped[h].extend_from_slice(src);
+        apply_rope(&mut roped[h], pos, rope_base);
+    }
 }
 
 /// Greedy or temperature sampling over logits.
@@ -153,6 +180,30 @@ mod tests {
         for (x, y) in a.iter().zip(&orig) {
             assert!((x - y).abs() < 1e-6);
         }
+    }
+
+    #[test]
+    fn project_into_reuses_scratch_and_matches_fresh() {
+        let mut rng = Rng::new(3);
+        let dm = 32;
+        let (h, d) = (2usize, 8usize);
+        let hidden: Vec<f32> = (0..dm).map(|_| rng.normal()).collect();
+        let norm = vec![1.0f32; dm];
+        let wq: Vec<f32> = (0..dm * h * d).map(|_| rng.normal()).collect();
+        let (roped, raw) = project_queries(&hidden, &norm, &wq, h, d, 5, 1e4, 1e-5);
+
+        let (mut nx, mut qf) = (Vec::new(), Vec::new());
+        let (mut ro, mut ra) = (Vec::new(), Vec::new());
+        // run twice with the same scratch: second pass must not be
+        // polluted by the first (buffers are cleared, not appended)
+        for _ in 0..2 {
+            project_queries_into(
+                &hidden, &norm, &wq, h, d, 5, 1e4, 1e-5,
+                &mut nx, &mut qf, &mut ro, &mut ra,
+            );
+        }
+        assert_eq!(ro, roped);
+        assert_eq!(ra, raw);
     }
 
     #[test]

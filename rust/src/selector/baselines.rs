@@ -412,7 +412,6 @@ impl KvSelector for DsSelector {
             v.extend(local_start..t);
             v.sort_unstable();
             v.dedup();
-            v.retain(|&p| p >= sink_end || p < sink_end); // keep clippy calm
             self.sets[layer][head] = v;
         }
         PlanKind::Sparse

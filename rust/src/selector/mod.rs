@@ -148,6 +148,10 @@ pub fn build(
 /// ignored — self attention is in-graph).  Middle top-k is taken over
 /// `[c_sink, t - c_local)` by descending weight; the returned `middle`
 /// preserves that order (needed by dilation's top-m rule).
+///
+/// Rows may be shorter than `t + 1` (the engine truncates retrieval rows
+/// to the dense bucket width); `t` is clamped so only indexable cached
+/// positions are ever selected.  An empty row selects nothing.
 pub fn select_criteria(
     probs: &[f32],
     t: usize,
@@ -155,9 +159,12 @@ pub fn select_criteria(
     c_local: usize,
     k: usize,
 ) -> SelectedSet {
-    let t = t.min(probs.len().saturating_sub(1).max(probs.len().min(1)));
+    if probs.is_empty() {
+        return SelectedSet::empty();
+    }
+    let t = t.min(probs.len().saturating_sub(1));
     let sink_end = c_sink.min(t);
-    let local_start = t.saturating_sub(c_local).max(sink_end).min(probs.len());
+    let local_start = t.saturating_sub(c_local).max(sink_end);
     let mut middle: Vec<usize> = Vec::new();
     if local_start > sink_end {
         let region = &probs[sink_end..local_start];
@@ -284,6 +291,43 @@ mod tests {
         let s = select_criteria(&probs, t, 4, 16, 8);
         let m = s.materialize(t, 4, 16);
         assert_eq!(m, (0..t).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn select_criteria_empty_row_selects_nothing() {
+        let s = select_criteria(&[], 0, 4, 16, 8);
+        assert_eq!(s.t, 0);
+        assert!(s.middle.is_empty());
+        assert_eq!(s.materialize(0, 4, 16), Vec::<usize>::new());
+        // t > 0 with an empty row must not panic either
+        let s = select_criteria(&[], 37, 4, 16, 8);
+        assert_eq!(s.materialize(37, 4, 16).len(), 37.min(4 + 16));
+        assert!(s.middle.is_empty());
+    }
+
+    #[test]
+    fn select_criteria_t_zero() {
+        // Self-only row: no cached positions, nothing selectable.
+        let s = select_criteria(&[1.0], 0, 4, 16, 8);
+        assert_eq!(s.t, 0);
+        assert_eq!(s.sink_end, 0);
+        assert_eq!(s.local_start, 0);
+        assert!(s.middle.is_empty());
+        assert_eq!(s.materialize(0, 4, 16), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn select_criteria_truncated_row_clamps_t() {
+        // Row shorter than t + 1 (engine truncates to the dense bucket):
+        // t clamps to the last indexable position, middle stays in range.
+        let mut probs = vec![0.001f32; 33]; // positions 0..32, self at 32
+        probs[10] = 0.9;
+        let s = select_criteria(&probs, 100, 2, 8, 4);
+        assert!(s.t <= 32);
+        assert!(s.middle.iter().all(|&p| p < probs.len()));
+        assert!(s.middle.contains(&10));
+        let m = s.materialize(s.t, 2, 8);
+        assert!(m.iter().all(|&p| p < s.t.max(1)));
     }
 
     #[test]

@@ -28,8 +28,9 @@ pub struct ClientHandle {
 
 #[derive(Debug)]
 pub enum SubmitError {
-    /// Ingress queue full (backpressure signal).
-    Busy,
+    /// Ingress queue full (backpressure signal).  Carries the rejected
+    /// request back to the caller so a retry needs no reconstruction.
+    Busy(RequestIn),
     /// Server shut down.
     Closed,
 }
@@ -44,7 +45,8 @@ impl ClientHandle {
         rrx.recv().map_err(|_| SubmitError::Closed)
     }
 
-    /// Non-blocking submit; returns the reply receiver.
+    /// Non-blocking submit; returns the reply receiver.  On backpressure
+    /// the request is handed back inside `SubmitError::Busy` for retry.
     pub fn submit(
         &self,
         req: RequestIn,
@@ -52,7 +54,10 @@ impl ClientHandle {
         let (rtx, rrx) = sync_channel(1);
         match self.tx.try_send(Msg::Request(req, rtx)) {
             Ok(()) => Ok(rrx),
-            Err(TrySendError::Full(_)) => Err(SubmitError::Busy),
+            Err(TrySendError::Full(Msg::Request(req, _))) => {
+                Err(SubmitError::Busy(req))
+            }
+            Err(TrySendError::Full(_)) => unreachable!("submit sends requests"),
             Err(TrySendError::Disconnected(_)) => Err(SubmitError::Closed),
         }
     }
@@ -148,5 +153,52 @@ impl Drop for Server {
         if let Some(h) = self.handle.take() {
             let _ = h.join();
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Backpressure contract: a rejected submit returns the request so the
+    /// caller can retry it verbatim once the queue drains (engine-free —
+    /// exercises the ingress channel only).
+    #[test]
+    fn busy_submit_returns_request_for_retry() {
+        let (tx, rx) = sync_channel::<Msg>(1);
+        let client = ClientHandle { tx };
+        let first = RequestIn { id: 1, prompt: vec![1, 2, 3], max_new_tokens: 4 };
+        let _reply1 = client.submit(first).expect("queue has capacity 1");
+
+        // Queue full: the second request must come back intact.
+        let second = RequestIn { id: 2, prompt: vec![9, 8], max_new_tokens: 6 };
+        let returned = match client.submit(second) {
+            Err(SubmitError::Busy(r)) => r,
+            other => panic!("expected Busy(req), got {:?}", other.map(|_| ())),
+        };
+        assert_eq!(returned.id, 2);
+        assert_eq!(returned.prompt, vec![9, 8]);
+        assert_eq!(returned.max_new_tokens, 6);
+
+        // Drain one slot; the returned request retries successfully.
+        match rx.try_recv() {
+            Ok(Msg::Request(req, _)) => assert_eq!(req.id, 1),
+            other => panic!("expected queued request, got {:?}", other.is_ok()),
+        }
+        let _reply2 = client.submit(returned).expect("retry after drain");
+        match rx.try_recv() {
+            Ok(Msg::Request(req, _)) => assert_eq!(req.id, 2),
+            other => panic!("expected retried request, got {:?}", other.is_ok()),
+        }
+    }
+
+    /// A dropped server side surfaces as `Closed`, not `Busy`.
+    #[test]
+    fn submit_after_close_is_closed() {
+        let (tx, rx) = sync_channel::<Msg>(1);
+        drop(rx);
+        let client = ClientHandle { tx };
+        let req = RequestIn { id: 7, prompt: vec![1], max_new_tokens: 1 };
+        assert!(matches!(client.submit(req), Err(SubmitError::Closed)));
     }
 }

@@ -1,0 +1,91 @@
+//! Scoped planner pool: fan a closure out over disjoint work units on up
+//! to `threads` OS threads (`std::thread::scope`; rayon is unavailable
+//! offline — DESIGN.md §6b).  The engine's decode hot path uses this to
+//! run per-sequence host-side planning and KV staging in parallel while
+//! every PJRT `execute` stays on the engine thread (DESIGN.md §6a).
+//!
+//! `threads <= 1` runs inline with zero overhead, so callers keep a
+//! serial path for determinism comparisons and micro-benchmarks.
+
+/// Apply `f` to every unit, splitting `units` into at most `threads`
+/// contiguous chunks, each processed by one scoped thread.
+///
+/// Units must be disjoint (`T: Send`) — in the engine they are per-
+/// sequence `(&mut Sequence, …staging slices…)` tuples, which the borrow
+/// checker proves non-aliasing.  `f` is shared across threads (`Fn +
+/// Sync`) and must not panic-early in a way that leaves units half
+/// staged; a panic in any worker propagates out of the scope.
+///
+/// Cost note: threads are spawned and joined per call (~tens of µs
+/// each), so this only pays off when per-unit work dominates — which is
+/// why `planner_threads` defaults to 0 (serial) and the engine gates
+/// every fan-out on it.  A persistent worker pool that amortizes the
+/// spawn is the natural follow-up if profiles show the barrier cost.
+pub fn for_each_unit<T, F>(threads: usize, units: &mut [T], f: F)
+where
+    T: Send,
+    F: Fn(&mut T) + Sync,
+{
+    let n = units.len();
+    if n == 0 {
+        return;
+    }
+    let threads = threads.min(n);
+    if threads <= 1 {
+        for u in units.iter_mut() {
+            f(u);
+        }
+        return;
+    }
+    let per = n.div_ceil(threads);
+    std::thread::scope(|sc| {
+        for chunk in units.chunks_mut(per) {
+            let f = &f;
+            sc.spawn(move || {
+                for u in chunk.iter_mut() {
+                    f(u);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn pooled_matches_serial() {
+        let mut a: Vec<(usize, usize)> = (0..37).map(|i| (i, 0)).collect();
+        let mut b = a.clone();
+        for_each_unit(1, &mut a, |(i, out)| *out = *i * *i + 1);
+        for_each_unit(4, &mut b, |(i, out)| *out = *i * *i + 1);
+        assert_eq!(a, b);
+        assert_eq!(a[6].1, 37);
+    }
+
+    #[test]
+    fn every_unit_visited_exactly_once() {
+        let hits = AtomicUsize::new(0);
+        let mut units: Vec<usize> = (0..100).collect();
+        for_each_unit(7, &mut units, |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn degenerate_shapes() {
+        let mut empty: Vec<usize> = Vec::new();
+        for_each_unit(8, &mut empty, |_| panic!("no units, no calls"));
+        // more threads than units
+        let mut one = vec![5usize];
+        for_each_unit(16, &mut one, |u| *u += 1);
+        assert_eq!(one[0], 6);
+        // zero threads behaves as serial
+        let mut two = vec![1usize, 2];
+        for_each_unit(0, &mut two, |u| *u *= 10);
+        assert_eq!(two, vec![10, 20]);
+    }
+}

@@ -304,6 +304,198 @@ fn batched_matches_single() {
     }
 }
 
+/// Chunked prefill must reach exactly the monolithic prefill's state:
+/// same cache length, same first sampled token, same logits, and the
+/// same greedy decode trajectory afterwards (causal attention makes
+/// prefix K/V independent of later tokens).
+#[test]
+fn chunked_prefill_matches_monolithic() {
+    let Some(mut engine) = engine(SelectorKind::Cis) else { return };
+    let mut rng = Rng::new(31);
+    let prompt: Vec<i32> =
+        (0..300).map(|_| rng.below(engine.mm.vocab_size) as i32).collect();
+
+    let mut mono = engine.new_sequence(0, prompt.clone());
+    mono.max_new = 4;
+    engine.prefill(&mut mono).unwrap();
+
+    let mut chunked = engine.new_sequence(1, prompt.clone());
+    chunked.max_new = 4;
+    let mut chunks = 0;
+    while !engine.prefill_chunk(&mut chunked, 96).unwrap() {
+        chunks += 1;
+    }
+    chunks += 1; // final chunk
+    assert_eq!(chunks, 4, "⌈300/96⌉ chunks");
+    assert_eq!(chunked.t(), mono.t());
+    assert_eq!(chunked.next_token, mono.next_token);
+    assert_eq!(chunked.last_logits.len(), mono.last_logits.len());
+    for (a, b) in mono.last_logits.iter().zip(&chunked.last_logits) {
+        assert!((a - b).abs() < 1e-4, "prefill logits diverge: {a} vs {b}");
+    }
+
+    while !mono.done {
+        let mut g = [&mut mono];
+        engine.decode_step(&mut g).unwrap();
+    }
+    while !chunked.done {
+        let mut g = [&mut chunked];
+        engine.decode_step(&mut g).unwrap();
+    }
+    assert_eq!(mono.generated, chunked.generated, "decode trajectories");
+    engine.release(&mut mono);
+    engine.release(&mut chunked);
+
+    // Degenerate case: an empty prompt is ledger-done from the start but
+    // must still run the artifact once so the first token comes from real
+    // logits (seed parity).
+    let mut empty = engine.new_sequence(2, Vec::new());
+    empty.max_new = 1;
+    engine.prefill(&mut empty).unwrap();
+    assert!(!empty.last_logits.is_empty(), "empty prompt skipped prefill");
+    engine.release(&mut empty);
+}
+
+/// The planner pool must not change decode results — only who computes
+/// the per-sequence host work.
+#[test]
+fn planner_pool_decode_matches_serial() {
+    let Some(dir) = artifacts_dir() else { return };
+    let prompts: Vec<Vec<i32>> = {
+        let mut rng = Rng::new(37);
+        (0..3).map(|_| (0..90).map(|_| rng.below(4096) as i32).collect()).collect()
+    };
+    let run = |threads: usize| {
+        let mut cfg = EngineConfig::default();
+        cfg.artifacts_dir = dir.clone();
+        cfg.selector.kind = SelectorKind::Cis;
+        cfg.planner_threads = threads;
+        let mut engine = Engine::new(cfg).unwrap();
+        let mut seqs: Vec<_> = prompts
+            .iter()
+            .enumerate()
+            .map(|(i, p)| {
+                let mut s = engine.new_sequence(i as u64, p.clone());
+                s.max_new = 3;
+                s
+            })
+            .collect();
+        for s in seqs.iter_mut() {
+            engine.prefill(s).unwrap();
+        }
+        for _ in 0..3 {
+            let mut group: Vec<&mut prhs::model::Sequence> =
+                seqs.iter_mut().collect();
+            engine.decode_step(&mut group).unwrap();
+        }
+        seqs.iter().map(|s| s.generated.clone()).collect::<Vec<_>>()
+    };
+    assert_eq!(run(0), run(4), "planner pool changed decode results");
+}
+
+/// Tentpole scheduling contract on the real engine: with chunked prefill
+/// a short request co-scheduled behind a long prompt finishes while the
+/// long prompt is still prefilling, and its TTFT is bounded by chunk-
+/// sized work rather than the long request's full prefill.
+#[test]
+fn chunked_prefill_bounds_ttft_behind_long_prompt() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut cfg = EngineConfig::default();
+    cfg.artifacts_dir = dir;
+    cfg.selector.kind = SelectorKind::Cis;
+    cfg.max_batch = 4;
+    cfg.prefill_chunk = 128;
+    let engine = Engine::new(cfg).unwrap();
+    let vocab = engine.mm.vocab_size;
+    let mut sched = prhs::coordinator::Scheduler::new(engine);
+    let mut rng = Rng::new(41);
+    let long_prompt: Vec<i32> =
+        (0..1200).map(|_| rng.below(vocab) as i32).collect();
+    let short_prompt: Vec<i32> =
+        (0..100).map(|_| rng.below(vocab) as i32).collect();
+    sched.submit(prhs::coordinator::RequestIn {
+        id: 0,
+        prompt: long_prompt,
+        max_new_tokens: 1,
+    });
+    sched.submit(prhs::coordinator::RequestIn {
+        id: 1,
+        prompt: short_prompt,
+        max_new_tokens: 3,
+    });
+
+    let long_prefill_iters = 1200usize.div_ceil(128); // 10
+    let mut iters = 0usize;
+    let mut short_out = None;
+    let mut long_out = None;
+    let mut long_iter = 0usize;
+    let mut short_iter = 0usize;
+    while sched.pending() > 0 {
+        iters += 1;
+        assert!(iters < 100, "scheduler failed to converge");
+        for out in sched.step().unwrap() {
+            if out.id == 1 {
+                short_iter = iters;
+                short_out = Some(out);
+            } else {
+                long_iter = iters;
+                long_out = Some(out);
+            }
+        }
+    }
+    let short_out = short_out.unwrap();
+    let long_out = long_out.unwrap();
+    // short: prefills in iteration 1 (one chunk), decodes 3 tokens in
+    // iterations 1..=3 — all strictly before the long prefill completes
+    assert_eq!(short_iter, 3, "short request completes at iteration 3");
+    assert!(
+        short_iter < long_prefill_iters,
+        "short ({short_iter}) must beat the long prefill ({long_prefill_iters})"
+    );
+    assert!(long_iter >= long_prefill_iters);
+    // TTFT for the short request is bounded by chunk-scale work: it must
+    // come in well under the long request's accumulated prefill time
+    assert!(
+        short_out.ttft_us < long_out.prefill_us,
+        "ttft {} ≥ long prefill {}",
+        short_out.ttft_us,
+        long_out.prefill_us
+    );
+    assert!(short_out.ttft_us > 0.0);
+    assert_eq!(short_out.tokens.len(), 3);
+    assert_eq!(long_out.tokens.len(), 1);
+}
+
+/// ρ̂ reported by the scheduler is decode-only: the top-k oracle retrieves
+/// on every (layer, head, decode step) and nothing else, so ρ̂ must be
+/// exactly 1.0 even when prefill runs chunked.
+#[test]
+fn scheduler_rho_hat_is_decode_only() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut cfg = EngineConfig::default();
+    cfg.artifacts_dir = dir;
+    cfg.selector.kind = SelectorKind::TopKOracle;
+    cfg.prefill_chunk = 64;
+    let engine = Engine::new(cfg).unwrap();
+    let vocab = engine.mm.vocab_size;
+    let mut sched = prhs::coordinator::Scheduler::new(engine);
+    let mut rng = Rng::new(43);
+    sched.submit(prhs::coordinator::RequestIn {
+        id: 0,
+        prompt: (0..200).map(|_| rng.below(vocab) as i32).collect(),
+        max_new_tokens: 5,
+    });
+    let outs = sched.run_to_completion().unwrap();
+    assert_eq!(outs.len(), 1);
+    assert_eq!(outs[0].steps, 5);
+    assert!(
+        (outs[0].rho_hat - 1.0).abs() < 1e-9,
+        "oracle decode-only ρ̂ = {}",
+        outs[0].rho_hat
+    );
+    assert!(outs[0].ttft_us > 0.0);
+}
+
 /// Server round-trip: spawn, serve, shutdown.
 #[test]
 fn server_round_trip() {
