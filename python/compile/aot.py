@@ -173,6 +173,41 @@ def build_model_artifacts(b: Builder, cfg, art: ArtifactConfig,
             {"model": cfg.name, "l_max": l_max},
         )
 
+    # KV-in chunked prefill: bucketed over (chunk width, context-tile
+    # width).  The context tile only needs to hold [0, start), so the
+    # l_max grid reuses the prefill buckets (DESIGN.md §6a).
+    exts = art.extend_chunk_buckets if not quick else art.extend_chunk_buckets[:1]
+    for chunk in exts:
+        for l_max in pres:
+            def pfe(tokens, start, length, c_sink, ell_s, phi, alpha, psi,
+                    gamma, psaw_on, etf_on, k_ctx, v_ctx, *ws,
+                    _c=chunk, _l=l_max):
+                return M.prefill_extend(
+                    tokens, start, length, c_sink, ell_s, phi, alpha, psi,
+                    gamma, psaw_on, etf_on, k_ctx, v_ctx, *ws, cfg=cfg,
+                    chunk=_c, l_max=_l)
+            b.lower(
+                f"{cfg.name}_prefill_extend_c{chunk}_l{l_max}",
+                "prefill_extend",
+                pfe,
+                [("tokens", spec([chunk], I32)),
+                 ("start", spec([], I32)),
+                 ("length", spec([], I32)),
+                 ("c_sink", spec([], F32)),
+                 ("ell_s", spec([], F32)),
+                 ("phi", spec([], F32)),
+                 ("alpha", spec([], F32)),
+                 ("psi", spec([], F32)),
+                 ("gamma", spec([], F32)),
+                 ("psaw_on", spec([], F32)),
+                 ("etf_on", spec([], F32)),
+                 ("k_ctx", spec([cfg.n_layers, H, l_max, d])),
+                 ("v_ctx", spec([cfg.n_layers, H, l_max, d]))] + all_w_specs,
+                ["k_chunk", "v_chunk", "last_hidden", "logits",
+                 "last_probs"],
+                {"model": cfg.name, "chunk": chunk, "l_max": l_max},
+            )
+
 
 def build_op_artifacts(b: Builder, cfg, batches, sels, ctxs,
                        pallas_sels=None):

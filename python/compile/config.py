@@ -56,12 +56,16 @@ class ArtifactConfig:
       Table III budget (512, dilated avg 547.5 -> 576).
     - ``ctx_buckets``: context-length buckets for full-scoring (retrieval)
       and dense-baseline attention.
+    - ``extend_chunk_buckets``: chunk widths for the KV-in chunked-prefill
+      stage (``prefill_extend``), crossed with ``prefill_buckets`` for the
+      context-tile width (DESIGN.md §6a).
     """
 
     batch_tiles: List[int] = field(default_factory=lambda: [1, 8, 16])
     sel_buckets: List[int] = field(default_factory=lambda: [64, 128, 160, 512, 576])
     ctx_buckets: List[int] = field(default_factory=lambda: [512, 1024, 2048, 4096])
     prefill_buckets: List[int] = field(default_factory=lambda: [512, 1024, 2048])
+    extend_chunk_buckets: List[int] = field(default_factory=lambda: [128, 256, 512])
 
 
 # The end-to-end serving model (~8.6M params): small enough that a decode

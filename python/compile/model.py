@@ -306,6 +306,141 @@ def prefill(
 
 
 # ---------------------------------------------------------------------------
+# KV-in chunked prefill (prefill_extend)
+
+
+def _extend_attn_mask(l_max, chunk, start, length, layer, n_layers, c_sink,
+                      ell_s, phi, alpha, psaw_on):
+    """[chunk, l_max + chunk] boolean mask for KV-in chunk prefill.
+
+    Query rows are the chunk's absolute positions ``start + i``.  Key slots
+    ``[0, l_max)`` are the cached context tile (valid prefix ``start``);
+    slots ``[l_max, l_max + chunk)`` are the chunk itself (valid prefix
+    ``length - start``).  Visibility matches `_prefill_attn_mask` at the
+    same absolute positions: causal AND valid AND (sink OR past the PSAW
+    window start) when PSAW is on."""
+    startf = start.astype(jnp.float32)
+    off = jnp.arange(chunk, dtype=jnp.float32)
+    qi = (startf + off)[:, None]
+    ctx_pos = jnp.arange(l_max, dtype=jnp.float32)
+    kj = jnp.concatenate([ctx_pos, startf + off])[None, :]
+    valid = jnp.concatenate(
+        [ctx_pos < startf, off < (length - start).astype(jnp.float32)]
+    )[None, :]
+    causal = kj <= qi
+    p_start = psaw_start(qi, layer, n_layers, ell_s, phi, alpha)  # [chunk,1]
+    visible = jnp.logical_or(kj < c_sink, kj >= p_start)
+    visible = jnp.where(psaw_on > 0, visible, jnp.ones_like(visible))
+    return jnp.logical_and(jnp.logical_and(causal, valid), visible)
+
+
+def prefill_extend(
+    tokens, start, length, c_sink, ell_s, phi, alpha, psi, gamma,
+    psaw_on, etf_on, k_ctx, v_ctx, *weights,
+    cfg: ModelConfig, chunk: int, l_max: int,
+):
+    """KV-in chunked prefill: extend an already-cached context ``[0, start)``
+    by one chunk of prompt tokens.  Executes O(chunk) projections and
+    O(chunk · (start + chunk)) attention instead of re-running the whole
+    prefix, so a chunked prefill of a length-L prompt costs Θ(L) total
+    artifact work rather than Θ(L²/chunk) (DESIGN.md §6a).
+
+    tokens: [chunk] i32 (padded); start/length: scalar i32 — the chunk
+    covers absolute positions ``[start, length)`` with
+    ``new = length - start`` valid rows; k_ctx/v_ctx: [nl, H, l_max, d]
+    post-RoPE cached K/V (the rust cache's `export_dense` layout) with
+    valid prefix ``start``, zero beyond.
+
+    Returns (k_chunk [nl, H, chunk, d], v_chunk, last_hidden [dm],
+             logits [V], last_probs [nl, H, l_max + chunk]) where
+    k/v_chunk are the chunk rows' post-RoPE K/V (GQA-expanded, ETF
+    freezing applied) and last_probs is the last valid token's attention
+    row — slots [0, start) cover the context tile, slots
+    [l_max, l_max + new) the chunk; the host stitches them into one
+    [0, length) row.
+
+    Parity: with ETF off this reproduces monolithic `prefill` exactly —
+    causal masks make prefix K/V independent of later tokens, and PSAW
+    windows depend only on absolute query position.  With ETF on,
+    freezing of chunk rows uses E_ell of the running ``length``, so
+    chunked extension is a per-chunk approximation of monolithic
+    freezing (as the prefix-recompute path already was); the monolithic
+    artifact remains the exact ETF reference.
+    """
+    n_layers = float(cfg.n_layers)
+    embed_w = weights[0]
+    per_layer = 9
+    h = embed(tokens, embed_w)  # [chunk, dm]
+    pos = start + jnp.arange(chunk, dtype=jnp.int32)
+    cos, sin = rope_angles(pos, cfg.head_dim, cfg.rope_base)
+    apos = pos.astype(jnp.float32)
+
+    k_layers, v_layers, prob_layers = [], [], []
+    scale = 1.0 / jnp.sqrt(jnp.asarray(cfg.head_dim, dtype=jnp.float32))
+    for i in range(cfg.n_layers):
+        lw = weights[1 + i * per_layer: 1 + (i + 1) * per_layer]
+        (attn_norm_w, wq, wk, wv, wo, mlp_norm_w, w_gate, w_up, w_down) = lw
+        layer_f = jnp.asarray(float(i), dtype=jnp.float32)
+
+        x = rmsnorm(h, attn_norm_w, cfg.rms_eps)
+        q = (x @ wq).reshape(chunk, cfg.n_heads, cfg.head_dim)
+        k = (x @ wk).reshape(chunk, cfg.n_kv_heads, cfg.head_dim)
+        v = (x @ wv).reshape(chunk, cfg.n_kv_heads, cfg.head_dim)
+        q = apply_rope(q, cos[:, None, :], sin[:, None, :])
+        k = apply_rope(k, cos[:, None, :], sin[:, None, :])
+        kh = _repeat_kv(k.transpose(1, 0, 2)[None], cfg)[0]  # [H, chunk, d]
+        vh = _repeat_kv(v.transpose(1, 0, 2)[None], cfg)[0]
+
+        # ETF: frozen chunk rows reuse the previous layer's chunk K/V.
+        e_bound = etf_boundary(length, layer_f, n_layers, ell_s, psi, gamma)
+        frozen = jnp.logical_and(apos >= c_sink, apos < e_bound)
+        frozen = jnp.logical_and(frozen, etf_on > 0)
+        if i > 0:
+            fz_kv = frozen[None, :, None]
+            kh = jnp.where(fz_kv, k_layers[i - 1], kh)
+            vh = jnp.where(fz_kv, v_layers[i - 1], vh)
+
+        k_all = jnp.concatenate([k_ctx[i], kh], axis=1)  # [H, l_max+chunk, d]
+        v_all = jnp.concatenate([v_ctx[i], vh], axis=1)
+        mask = _extend_attn_mask(
+            l_max, chunk, start, length, layer_f, n_layers, c_sink, ell_s,
+            phi, alpha, psaw_on,
+        )  # [chunk, l_max + chunk]
+        scores = jnp.einsum("lhd,hmd->hlm", q, k_all) * scale
+        scores = jnp.where(mask[None], scores, ref.NEG_INF)
+        m = jnp.maximum(jnp.max(scores, axis=-1, keepdims=True), -1e29)
+        p = jnp.exp(scores - m) * mask[None]
+        denom = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+        probs = p / denom  # [H, chunk, l_max + chunk]
+        attn = jnp.einsum("hlm,hmd->lhd", probs, v_all)  # [chunk, H, d]
+
+        h_new = h + attn.reshape(chunk, -1) @ wo
+        x2 = rmsnorm(h_new, mlp_norm_w, cfg.rms_eps)
+        h_new = h_new + swiglu(x2, w_gate, w_up, w_down)
+
+        # ETF: frozen chunk rows keep the previous layer's hidden state.
+        h = jnp.where(frozen[:, None], h, h_new)
+
+        k_layers.append(kh)
+        v_layers.append(vh)
+        # Attention row of the last valid chunk token (retrieval seed).
+        last = jnp.clip(length - start - 1, 0, chunk - 1)
+        prob_layers.append(probs[:, last, :])  # [H, l_max + chunk]
+
+    final_norm_w, head_w = weights[-2], weights[-1]
+    last = jnp.clip(length - start - 1, 0, chunk - 1)
+    last_hidden = h[last]
+    logits = rmsnorm(last_hidden, final_norm_w, cfg.rms_eps) @ head_w
+    return (
+        jnp.stack(k_layers),          # [nl, H, chunk, d]
+        jnp.stack(v_layers),
+        last_hidden,                  # [dm]
+        logits,                       # [V]
+        jnp.stack(prob_layers),       # [nl, H, l_max + chunk]
+    )
+
+
+# ---------------------------------------------------------------------------
 # standalone attention operators (Table IV / kernel parity artifacts)
 
 

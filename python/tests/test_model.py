@@ -287,6 +287,121 @@ def test_prefill_etf_shares_kv_across_layers(tiny_weights):
     assert not np.allclose(np.asarray(base[3]), np.asarray(etf[3]))
 
 
+# --- KV-in chunked prefill (prefill_extend) ---------------------------------
+
+def _run_chunked_extend(cfg, w, toks, L, CH, LM, scalars):
+    """Drive prefill_extend the way the rust engine does: first chunk via
+    the monolithic artifact, then KV-in extension chunks against the
+    accumulated cache tile.  Returns (K [nl,H,L,d], V, logits, last_row
+    [nl,H,L] stitched from the final chunk's probs)."""
+    c_sink, ell_s, phi, alpha, psi, gamma, psaw_on, etf_on = scalars
+    allw = [w[n] for n in W.all_weight_names(cfg)]
+    nl, H, d = cfg.n_layers, cfg.n_heads, cfg.head_dim
+    K = np.zeros((nl, H, LM, d), np.float32)
+    V = np.zeros_like(K)
+    done = min(CH, L)
+    k0, v0, _, lg, lp = M.prefill(
+        toks[:done], np.int32(done), c_sink, ell_s, phi, alpha, psi, gamma,
+        psaw_on, etf_on, *allw, cfg=cfg, l_max=done)
+    K[:, :, :done] = np.asarray(k0)
+    V[:, :, :done] = np.asarray(v0)
+    row = np.asarray(lp)
+    while done < L:
+        start, end = done, min(done + CH, L)
+        tok_chunk = np.zeros(CH, np.int32)
+        tok_chunk[:end - start] = toks[start:end]
+        ke, ve, _, lg, lp = M.prefill_extend(
+            tok_chunk, np.int32(start), np.int32(end), c_sink, ell_s, phi,
+            alpha, psi, gamma, psaw_on, etf_on, K, V, *allw, cfg=cfg,
+            chunk=CH, l_max=LM)
+        ke, ve = np.asarray(ke), np.asarray(ve)
+        K[:, :, start:end] = ke[:, :, :end - start]
+        V[:, :, start:end] = ve[:, :, :end - start]
+        lp = np.asarray(lp)
+        row = np.concatenate(
+            [lp[:, :, :start], lp[:, :, LM:LM + end - start]], axis=2)
+        done = end
+    return K[:, :, :L], V[:, :, :L], np.asarray(lg), row
+
+
+def test_prefill_extend_matches_monolithic(tiny_weights):
+    """Tentpole parity oracle: KV-in chunked extension (ragged last chunk)
+    must reproduce monolithic prefill — K/V, logits and the last-token
+    attention row (stitched from the context/chunk segments)."""
+    cfg, w = TINY, tiny_weights
+    allw = [w[n] for n in W.all_weight_names(cfg)]
+    L, CH, LM = 10, 4, 16
+    toks = (np.arange(L) * 5 % cfg.vocab_size).astype(np.int32)
+    scalars = (0.0, 99.0, 0.7, 1.0, 0.5, 1.0, 0.0, 0.0)
+    Km, Vm, _, lgm, lpm = M.prefill(
+        toks, np.int32(L), *scalars, *allw, cfg=cfg, l_max=L)
+    K, V, lg, row = _run_chunked_extend(cfg, w, toks, L, CH, LM, scalars)
+    np.testing.assert_allclose(K, np.asarray(Km), atol=1e-5)
+    np.testing.assert_allclose(V, np.asarray(Vm), atol=1e-5)
+    np.testing.assert_allclose(lg, np.asarray(lgm), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(row, np.asarray(lpm), atol=1e-5)
+
+
+def test_prefill_extend_psaw_parity(tiny_weights):
+    """PSAW windows depend only on absolute query position, so chunked
+    extension stays exact with pruning enabled (Eq. 15)."""
+    cfg, w = TINY, tiny_weights
+    allw = [w[n] for n in W.all_weight_names(cfg)]
+    L, CH, LM = 12, 4, 16
+    toks = (np.arange(L) * 3 % cfg.vocab_size).astype(np.int32)
+    scalars = (2.0, 0.0, 0.3, 2.0, 0.5, 1.0, 1.0, 0.0)
+    Km, Vm, _, lgm, lpm = M.prefill(
+        toks, np.int32(L), *scalars, *allw, cfg=cfg, l_max=L)
+    K, V, lg, row = _run_chunked_extend(cfg, w, toks, L, CH, LM, scalars)
+    np.testing.assert_allclose(K, np.asarray(Km), atol=1e-5)
+    np.testing.assert_allclose(V, np.asarray(Vm), atol=1e-5)
+    np.testing.assert_allclose(lg, np.asarray(lgm), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(row, np.asarray(lpm), atol=1e-5)
+
+
+def test_prefill_extend_gqa_parity():
+    """GQA head expansion in the extend path matches monolithic prefill."""
+    cfg = GQA
+    w = W.init_weights(cfg)
+    allw = [w[n] for n in W.all_weight_names(cfg)]
+    L, CH, LM = 8, 4, 8
+    toks = (np.arange(L) * 7 % cfg.vocab_size).astype(np.int32)
+    scalars = (0.0, 99.0, 0.7, 1.0, 0.5, 1.0, 0.0, 0.0)
+    Km, Vm, _, lgm, _ = M.prefill(
+        toks, np.int32(L), *scalars, *allw, cfg=cfg, l_max=L)
+    K, V, lg, _ = _run_chunked_extend(cfg, w, toks, L, CH, LM, scalars)
+    np.testing.assert_allclose(K, np.asarray(Km), atol=1e-5)
+    np.testing.assert_allclose(V, np.asarray(Vm), atol=1e-5)
+    np.testing.assert_allclose(lg, np.asarray(lgm), atol=1e-4, rtol=1e-4)
+
+
+def test_prefill_extend_etf_freezes_chunk_rows(tiny_weights):
+    """ETF in the extend path: frozen chunk rows at layer 1 must carry
+    layer-0 chunk K/V verbatim (cross-layer sharing restricted to the
+    chunk; per-chunk approximation of monolithic freezing)."""
+    cfg, w = TINY, tiny_weights
+    allw = [w[n] for n in W.all_weight_names(cfg)]
+    CH, LM = 8, 8
+    start, length = 8, 16
+    toks = (np.arange(16) * 7 % cfg.vocab_size).astype(np.int32)
+    c_sink, psi, gamma = 2.0, 0.1, 1.0
+    k0, v0, _, _, _ = M.prefill(
+        toks[:start], np.int32(start), c_sink, 0.0, 0.7, 1.0, psi, gamma,
+        0.0, 1.0, *allw, cfg=cfg, l_max=start)
+    ke, ve, _, _, _ = M.prefill_extend(
+        toks[start:], np.int32(start), np.int32(length), c_sink, 0.0, 0.7,
+        1.0, psi, gamma, 0.0, 1.0, np.asarray(k0), np.asarray(v0), *allw,
+        cfg=cfg, chunk=CH, l_max=LM)
+    ke, ve = np.asarray(ke), np.asarray(ve)
+    # E_1(16) with ell_s=0, nl=2: keep = psi^0.5 → e_bound = ⌊(1-√ψ)·16⌋
+    e_bound = int(np.floor((1 - psi ** (gamma * 0.5)) * length))
+    assert e_bound > start + 1, "test needs frozen rows inside the chunk"
+    lo, hi = 0, e_bound - start  # chunk-relative frozen range
+    np.testing.assert_array_equal(ke[1][:, lo:hi], ke[0][:, lo:hi])
+    np.testing.assert_array_equal(ve[1][:, lo:hi], ve[0][:, lo:hi])
+    assert not np.allclose(ke[1][:, hi:], ke[0][:, hi:])
+
+
 def test_configs_registered():
     assert "small" in CONFIGS and "bench" in CONFIGS
     assert CONFIGS["small"].head_dim * CONFIGS["small"].n_heads \

@@ -1,0 +1,89 @@
+//! Chunked-prefill scaling bench (issue tentpole regression): total
+//! prefill work must scale with L, not with the sum of prefixes.
+//!
+//! For each prompt length L the bench runs a full chunked prefill on the
+//! KV-in `prefill_extend` path and on the prefix-recompute parity-oracle
+//! path (`EngineConfig::prefill_recompute`), reporting wall time and the
+//! engine's executed-prompt-token counter.  The counter column is the
+//! regression signal: Θ(L) for KV-in, Θ(L²/chunk) for recompute
+//! (`ChunkLedger::executed_tokens`, DESIGN.md §6a).  CI compiles this via
+//! `cargo bench --no-run`; running it requires `make artifacts`.
+
+use prhs::config::{EngineConfig, SelectorKind};
+use prhs::model::{ChunkLedger, Engine};
+use prhs::runtime::{Runtime, WeightStore};
+use prhs::util::rng::Rng;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::var("PRHS_ARTIFACTS")
+        .unwrap_or_else(|_| "artifacts".to_string());
+    if !std::path::Path::new(&dir).join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built at {dir}");
+        return Ok(());
+    }
+    let quick = std::env::args().any(|a| a == "--quick");
+    let chunk = 128usize;
+    let lens: &[usize] = if quick { &[256, 512] } else { &[512, 1024, 2048] };
+
+    let mut base = EngineConfig::default();
+    base.artifacts_dir = dir;
+    base.selector.kind = SelectorKind::Cis;
+    let rt = Arc::new(Runtime::new(&base.artifacts_dir)?);
+    let mm = rt.model("small")?.clone();
+    let ws = Arc::new(WeightStore::load(&rt, &mm)?);
+
+    println!("== chunked-prefill scaling (chunk {chunk}) ==");
+    let mut md = String::from(
+        "## Chunked-prefill scaling — KV-in extend vs prefix recompute\n\n\
+         | L | extend ms | extend tokens | recompute ms | recompute tokens | token ratio |\n\
+         |---|---|---|---|---|---|\n",
+    );
+    for &l in lens {
+        let run = |recompute: bool| -> anyhow::Result<(f64, u64)> {
+            let mut cfg = base.clone();
+            cfg.prefill_recompute = recompute;
+            let mut engine = Engine::with_shared(rt.clone(), ws.clone(), cfg);
+            let mut rng = Rng::new(0x5CA1E);
+            let prompt: Vec<i32> =
+                (0..l).map(|_| rng.below(mm.vocab_size) as i32).collect();
+            let mut seq = engine.new_sequence(0, prompt);
+            seq.max_new = 1;
+            let t0 = Instant::now();
+            while !engine.prefill_chunk(&mut seq, chunk)? {}
+            let ms = t0.elapsed().as_secs_f64() * 1e3;
+            let executed = engine.stats.prefill_tokens_executed;
+            engine.release(&mut seq);
+            Ok((ms, executed))
+        };
+        let (fast_ms, fast_tok) = run(false)?;
+        let (slow_ms, slow_tok) = run(true)?;
+        assert_eq!(
+            fast_tok,
+            ChunkLedger::executed_tokens(l, chunk, true),
+            "KV-in counter must be Θ(L)"
+        );
+        assert_eq!(
+            slow_tok,
+            ChunkLedger::executed_tokens(l, chunk, false),
+            "recompute counter must be Θ(L²/chunk)"
+        );
+        let ratio = slow_tok as f64 / fast_tok as f64;
+        println!(
+            "  L {l:5}: extend {fast_ms:8.1} ms / {fast_tok:6} tok   \
+             recompute {slow_ms:8.1} ms / {slow_tok:6} tok   ({ratio:.2}x tokens)"
+        );
+        md.push_str(&format!(
+            "| {l} | {fast_ms:.1} | {fast_tok} | {slow_ms:.1} | {slow_tok} | {ratio:.2} |\n"
+        ));
+    }
+    md.push_str(
+        "\nExtend tokens grow linearly in L; recompute tokens grow with the \
+         sum of prefixes (the quadratic cost the KV-in artifact removes).\n",
+    );
+    std::fs::create_dir_all("results")?;
+    std::fs::write("results/prefill_scaling.md", md)?;
+    println!("→ results/prefill_scaling.md");
+    Ok(())
+}

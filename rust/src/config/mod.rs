@@ -208,11 +208,32 @@ pub struct EngineConfig {
     /// pre-chunking behavior); with a positive chunk, each prefilling
     /// sequence advances one chunk per iteration, so a request admitted
     /// behind a long prompt starts decoding after its *own* chunks
-    /// instead of the long prompt's full prefill.  Note: each chunk
-    /// currently re-runs the prefill artifact over the whole prefix, so
-    /// per-iteration cost is one prefix-prefill call (growing with the
-    /// prefix), not one chunk — see `Engine::prefill_chunk`.
+    /// instead of the long prompt's full prefill.  Chunks past the first
+    /// run the KV-in `prefill_extend` artifact, so one chunk costs one
+    /// chunk of prefill work; a chunk larger than the biggest compiled
+    /// extend bucket is clamped down to it (more chunks, still Θ(L))
+    /// rather than silently falling back to prefix recompute — see
+    /// `Engine::prefill_chunk`.
     pub prefill_chunk: usize,
+    /// Force the prefix-recompute chunked-prefill path (each chunk
+    /// re-runs the prefill artifact over the whole prefix, Θ(L²/chunk)
+    /// total work).  Kept as the parity oracle for the KV-in extend path
+    /// and as a fallback for artifact sets without `prefill_extend`
+    /// (DESIGN.md §6a).
+    pub prefill_recompute: bool,
+    /// Max prompt tokens the scheduler's prefill stage executes per
+    /// iteration across all prefilling sequences (0 = unlimited).  Bounds
+    /// the prefill work inserted between decode steps, so decode latency
+    /// does not scale with the number of concurrently-prefilling
+    /// sequences; round-robin across iterations keeps it fair
+    /// (`coordinator::budget_prefill_plan`).
+    pub prefill_token_budget: usize,
+    /// Hard cap on KV cache pages the engine's `PagePool` may allocate
+    /// (0 = unbounded).  With a cap, admission holds waiting requests
+    /// until their estimated pages fit (`BatchPolicy::admit`) and
+    /// requests that can never fit are rejected instead of OOMing the
+    /// host.
+    pub max_kv_pages: usize,
     /// Width of the host-side planner pool used by `decode_step` for
     /// per-sequence planning and KV staging (DESIGN.md §6a).  ≤ 1 runs
     /// serially; PJRT execution stays on the engine thread either way.
@@ -232,6 +253,9 @@ impl Default for EngineConfig {
             batch_tiles: vec![1, 8, 16],
             max_batch: 16,
             prefill_chunk: 0,
+            prefill_recompute: false,
+            prefill_token_budget: 0,
+            max_kv_pages: 0,
             planner_threads: 0,
             use_pallas: false,
             seed: 0xC0FFEE,
@@ -257,6 +281,16 @@ impl EngineConfig {
         }
         if let Some(n) = j.get("prefill_chunk").and_then(Json::as_usize) {
             cfg.prefill_chunk = n;
+        }
+        if let Some(b) = j.get("prefill_recompute").and_then(Json::as_bool) {
+            cfg.prefill_recompute = b;
+        }
+        if let Some(n) = j.get("prefill_token_budget").and_then(Json::as_usize)
+        {
+            cfg.prefill_token_budget = n;
+        }
+        if let Some(n) = j.get("max_kv_pages").and_then(Json::as_usize) {
+            cfg.max_kv_pages = n;
         }
         if let Some(n) = j.get("planner_threads").and_then(Json::as_usize) {
             cfg.planner_threads = n;
@@ -355,13 +389,21 @@ mod tests {
         let c = EngineConfig::default();
         assert_eq!(c.prefill_chunk, 0, "chunking is opt-in");
         assert_eq!(c.planner_threads, 0, "planner pool is opt-in");
+        assert!(!c.prefill_recompute, "KV-in extend path is the default");
+        assert_eq!(c.prefill_token_budget, 0, "budget is opt-in");
+        assert_eq!(c.max_kv_pages, 0, "KV cap is opt-in");
         let j = Json::parse(
-            r#"{"prefill_chunk":256,"planner_threads":4,"max_batch":32}"#,
+            r#"{"prefill_chunk":256,"planner_threads":4,"max_batch":32,
+                "prefill_recompute":true,"prefill_token_budget":512,
+                "max_kv_pages":1024}"#,
         )
         .unwrap();
         let c = EngineConfig::from_json(&j).unwrap();
         assert_eq!(c.prefill_chunk, 256);
         assert_eq!(c.planner_threads, 4);
         assert_eq!(c.max_batch, 32);
+        assert!(c.prefill_recompute);
+        assert_eq!(c.prefill_token_budget, 512);
+        assert_eq!(c.max_kv_pages, 1024);
     }
 }

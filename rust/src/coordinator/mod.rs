@@ -5,11 +5,16 @@
 //! DESIGN.md §6a):
 //!   * requests land in a FIFO admission queue;
 //!   * each scheduler iteration admits waiting requests up to
-//!     `max_batch` into a *prefilling* stage;
-//!   * every prefilling sequence advances one prefill chunk per
-//!     iteration (`EngineConfig::prefill_chunk`; 0 = whole prompt in one
-//!     iteration), so a short request admitted behind a long prompt
-//!     starts decoding after its own chunks, not the long one's;
+//!     `max_batch` into a *prefilling* stage, gated on estimated KV
+//!     pages when `max_kv_pages` caps the pool (requests wait for pages;
+//!     never-fit requests are returned `rejected`);
+//!   * prefilling sequences advance prefill chunks per iteration
+//!     (`EngineConfig::prefill_chunk`; 0 = whole prompt in one
+//!     iteration) under the per-iteration `prefill_token_budget`
+//!     (`budget_prefill_plan`, round-robin), so a short request admitted
+//!     behind a long prompt starts decoding after its own chunks, and
+//!     decode latency does not scale with the number of prefilling
+//!     sequences;
 //!   * all running sequences advance one token per iteration via a single
 //!     batched decode step;
 //!   * finished sequences retire immediately and release their KV pages,
@@ -33,14 +38,81 @@ use crate::model::{Engine, Sequence};
 #[derive(Debug)]
 pub struct BatchPolicy {
     pub max_batch: usize,
+    /// KV page cap mirrored from `EngineConfig::max_kv_pages`
+    /// (0 = unbounded, admission is slot-only).
+    pub max_kv_pages: usize,
 }
 
 impl BatchPolicy {
-    /// How many waiting sequences to admit given the occupied count
-    /// (prefilling + running — both hold KV pages and batch slots).
-    pub fn admit(&self, occupied: usize, waiting: usize) -> usize {
-        self.max_batch.saturating_sub(occupied).min(waiting)
+    /// Worst-case KV pages a request occupies once fully decoded:
+    /// ⌈(prompt + max_new) / page_len⌉ per layer.  Admission charges the
+    /// worst case up front so a request admitted now can never OOM the
+    /// pool later (pages are only appended, never stolen).
+    pub fn pages_needed(
+        prompt_len: usize,
+        max_new: usize,
+        page_len: usize,
+        n_layers: usize,
+    ) -> usize {
+        (prompt_len + max_new).div_ceil(page_len.max(1)) * n_layers
     }
+
+    /// How many waiting sequences to admit given the occupied count
+    /// (prefilling + running — both hold KV pages and batch slots), the
+    /// page headroom (cap minus the worst-case reservations already
+    /// charged to in-flight sequences — NOT the pool's current occupancy,
+    /// which lags behind what admitted sequences will still grow into),
+    /// and each waiting request's estimated page need (FIFO order).
+    /// Admission stops at the first request that does not fit — requests
+    /// *wait* for pages instead of the pool growing without bound.
+    pub fn admit(
+        &self,
+        occupied: usize,
+        available_pages: usize,
+        waiting_pages: &[usize],
+    ) -> usize {
+        let slots = self.max_batch.saturating_sub(occupied);
+        if self.max_kv_pages == 0 {
+            return slots.min(waiting_pages.len());
+        }
+        let mut avail = available_pages;
+        let mut n = 0usize;
+        for &p in waiting_pages.iter().take(slots) {
+            if p > avail {
+                break;
+            }
+            avail -= p;
+            n += 1;
+        }
+        n
+    }
+}
+
+/// Pure per-iteration prefill planning under a token budget (engine-free
+/// scheduling contract, DESIGN.md §6a): `costs[i]` is prefilling sequence
+/// i's next chunk size; returns the indices to advance this iteration, in
+/// execution order.  Walks round-robin from `rr` so a budget smaller than
+/// the aggregate chunk demand rotates fairly across iterations; the first
+/// visited sequence always advances (progress guarantee even when one
+/// chunk alone exceeds the budget).  `budget == 0` = unlimited (every
+/// prefilling sequence advances, the pre-budget behavior).
+pub fn budget_prefill_plan(
+    costs: &[usize],
+    budget: usize,
+    rr: usize,
+) -> Vec<usize> {
+    let m = costs.len();
+    let mut plan = Vec::with_capacity(m);
+    let mut spent = 0usize;
+    for k in 0..m {
+        let i = (rr + k) % m;
+        if budget > 0 && !plan.is_empty() && spent + costs[i] > budget {
+            continue;
+        }
+        spent += costs[i];
+        plan.push(i);
+    }
+    plan
 }
 
 // Re-exported for scheduling-contract consumers: the progress ledger is
@@ -69,6 +141,10 @@ pub struct RequestOut {
     pub steps: u64,
     /// Decode-phase retrieval ratio (see `decode_rho_hat`).
     pub rho_hat: f64,
+    /// The request could never be served (its worst-case KV page need
+    /// exceeds `max_kv_pages`) and was returned with no tokens instead of
+    /// waiting forever or OOMing the pool.
+    pub rejected: bool,
 }
 
 /// The scheduler: owns the engine and drives admission + prefill chunks
@@ -76,9 +152,19 @@ pub struct RequestOut {
 pub struct Scheduler {
     pub engine: Engine,
     pub policy: BatchPolicy,
-    waiting: VecDeque<(RequestIn, Instant)>,
+    /// FIFO queue with each request's worst-case page need precomputed at
+    /// submit (it is immutable, so the per-iteration admission check is
+    /// O(max_batch), not O(queue)).
+    waiting: VecDeque<(RequestIn, Instant, usize)>,
+    /// Requests rejected at submit (worst-case pages exceed the whole
+    /// cap), drained into `RequestOut`s on the next `step`.
+    rejected: Vec<RequestIn>,
     prefilling: Vec<PrefillingSeq>,
     running: Vec<RunningSeq>,
+    /// Round-robin cursor for the budgeted prefill stage
+    /// (`budget_prefill_plan`) so a token budget rotates fairly across
+    /// prefilling sequences.
+    prefill_rr: usize,
     pub metrics: RunMetrics,
     started: Instant,
 }
@@ -87,6 +173,10 @@ struct PrefillingSeq {
     seq: Sequence,
     submitted: Instant,
     prefill_us: f64,
+    /// Worst-case KV pages charged at admission
+    /// (`BatchPolicy::pages_needed`) — held until retirement so
+    /// admission can never over-commit the capped pool.
+    reserved_pages: usize,
 }
 
 struct RunningSeq {
@@ -99,76 +189,166 @@ struct RunningSeq {
     /// subtracts this so prefill-phase retrievals are never charged
     /// against decode head-steps.
     t0_retrievals: u64,
+    /// Admission-time worst-case page reservation (see `PrefillingSeq`).
+    reserved_pages: usize,
 }
 
 impl Scheduler {
     pub fn new(engine: Engine) -> Self {
         let max_batch = engine.cfg.max_batch;
+        let max_kv_pages = engine.cfg.max_kv_pages;
         Scheduler {
             engine,
-            policy: BatchPolicy { max_batch },
+            policy: BatchPolicy { max_batch, max_kv_pages },
             waiting: VecDeque::new(),
+            rejected: Vec::new(),
             prefilling: Vec::new(),
             running: Vec::new(),
+            prefill_rr: 0,
             metrics: RunMetrics::default(),
             started: Instant::now(),
         }
     }
 
     pub fn submit(&mut self, req: RequestIn) {
-        self.waiting.push_back((req, Instant::now()));
+        let pages = BatchPolicy::pages_needed(
+            req.prompt.len(),
+            req.max_new_tokens,
+            self.engine.pool.page_len,
+            self.engine.mm.n_layers,
+        );
+        // A request whose worst-case page need exceeds the whole pool can
+        // never be admitted — reject it here instead of wedging the FIFO
+        // queue; `step` returns it as a `rejected` RequestOut.
+        if self.policy.max_kv_pages > 0 && pages > self.policy.max_kv_pages {
+            self.rejected.push(req);
+            return;
+        }
+        self.waiting.push_back((req, Instant::now(), pages));
     }
 
     pub fn pending(&self) -> usize {
-        self.waiting.len() + self.prefilling.len() + self.running.len()
+        self.waiting.len()
+            + self.rejected.len()
+            + self.prefilling.len()
+            + self.running.len()
     }
 
-    /// One scheduler iteration: admit → prefill chunks → decode step →
-    /// retire.  Returns the requests completed this iteration.
+    /// One scheduler iteration: admit → prefill chunks (under the token
+    /// budget) → decode step → retire.  Returns the requests completed
+    /// this iteration (including rejected ones, flagged).
     pub fn step(&mut self) -> Result<Vec<RequestOut>> {
+        let mut done_out = Vec::new();
+
+        // surface submit-time rejections (worst-case pages > whole cap)
+        for req in self.rejected.drain(..) {
+            done_out.push(RequestOut {
+                id: req.id,
+                tokens: Vec::new(),
+                prefill_us: 0.0,
+                decode_us: 0.0,
+                ttft_us: 0.0,
+                steps: 0,
+                rho_hat: 0.0,
+                rejected: true,
+            });
+        }
+
         // admit into the prefilling stage (cheap; the prefill work itself
-        // is spread over subsequent iterations)
+        // is spread over subsequent iterations), gated on batch slots AND
+        // estimated KV pages so a burst of long prompts waits instead of
+        // growing the pool past its cap.  The page headroom is the cap
+        // minus the *worst-case reservations* of every in-flight
+        // sequence — not the pool's current occupancy — so a sequence
+        // that has not yet grown into its reservation (decode appends
+        // pages after admission) can never be over-committed against.
+        // Page needs were precomputed at submit; only the first
+        // `max_batch` queue entries can be admitted, so this is
+        // O(max_batch + in-flight), independent of queue depth.
         let occupied = self.running.len() + self.prefilling.len();
-        let n_admit = self.policy.admit(occupied, self.waiting.len());
+        let waiting_pages: Vec<usize> = self
+            .waiting
+            .iter()
+            .take(self.policy.max_batch)
+            .map(|(_, _, pages)| *pages)
+            .collect();
+        let reserved: usize = self
+            .prefilling
+            .iter()
+            .map(|p| p.reserved_pages)
+            .chain(self.running.iter().map(|r| r.reserved_pages))
+            .sum();
+        let headroom = if self.policy.max_kv_pages == 0 {
+            usize::MAX
+        } else {
+            self.policy.max_kv_pages.saturating_sub(reserved)
+        };
+        let n_admit = self.policy.admit(occupied, headroom, &waiting_pages);
         for _ in 0..n_admit {
-            let (req, submitted) = self.waiting.pop_front().unwrap();
+            let (req, submitted, pages) = self.waiting.pop_front().unwrap();
             let mut seq = self.engine.new_sequence(req.id, req.prompt);
             seq.max_new = req.max_new_tokens;
             self.prefilling.push(PrefillingSeq {
                 seq,
                 submitted,
                 prefill_us: 0.0,
+                reserved_pages: pages,
             });
         }
 
-        // one prefill chunk per prefilling sequence per iteration
+        // prefill chunks under the per-iteration token budget, walking
+        // round-robin so the budget rotates fairly (DESIGN.md §6a).
+        // Costs come from the engine's path choice: one chunk of work on
+        // the KV-in extend path, a whole prefix re-run on the
+        // recompute/fallback path — the budget bounds *executed* tokens,
+        // not nominal chunk sizes.
         let chunk = self.engine.cfg.prefill_chunk;
-        let mut i = 0;
-        while i < self.prefilling.len() {
+        let budget = self.engine.cfg.prefill_token_budget;
+        let costs: Vec<usize> = self
+            .prefilling
+            .iter()
+            .map(|p| self.engine.prefill_chunk_cost(&p.seq, chunk))
+            .collect();
+        let plan = budget_prefill_plan(&costs, budget, self.prefill_rr);
+        if !self.prefilling.is_empty() {
+            self.prefill_rr = (self.prefill_rr + 1) % self.prefilling.len();
+        }
+        let mut finished: Vec<usize> = Vec::new();
+        for &i in &plan {
             let t0 = Instant::now();
             let done = self
                 .engine
                 .prefill_chunk(&mut self.prefilling[i].seq, chunk)?;
             self.prefilling[i].prefill_us +=
                 t0.elapsed().as_secs_f64() * 1e6;
+            self.metrics.prefill_tokens += costs[i] as u64;
             if done {
-                let p = self.prefilling.swap_remove(i);
-                self.metrics.prefill_lat.record_us(p.prefill_us);
-                // the first token is sampled at prefill completion
-                let ttft_us = p.submitted.elapsed().as_secs_f64() * 1e6;
-                self.metrics.ttft_lat.record_us(ttft_us);
-                let t0_retrievals = p.seq.selector.retrievals();
-                self.running.push(RunningSeq {
-                    seq: p.seq,
-                    prefill_us: p.prefill_us,
-                    ttft_us,
-                    decode_us: 0.0,
-                    steps: 0,
-                    t0_retrievals,
-                });
-            } else {
-                i += 1;
+                finished.push(i);
             }
+        }
+        // remove completed prefills (descending indices keep swap_remove
+        // from disturbing pending removals)
+        finished.sort_unstable_by_key(|&i| std::cmp::Reverse(i));
+        for i in finished {
+            let p = self.prefilling.swap_remove(i);
+            self.metrics.prefill_lat.record_us(p.prefill_us);
+            // the first token is sampled at prefill completion
+            let ttft_us = p.submitted.elapsed().as_secs_f64() * 1e6;
+            self.metrics.ttft_lat.record_us(ttft_us);
+            // the engine snapshotted the selector's retrieval counter at
+            // prefill completion (`Sequence::prefill_retrievals`) — reuse
+            // it rather than re-reading the counter here, so there is one
+            // authoritative prefill/decode boundary
+            let t0_retrievals = p.seq.prefill_retrievals;
+            self.running.push(RunningSeq {
+                seq: p.seq,
+                prefill_us: p.prefill_us,
+                ttft_us,
+                decode_us: 0.0,
+                steps: 0,
+                t0_retrievals,
+                reserved_pages: p.reserved_pages,
+            });
         }
 
         // decode one token for everyone
@@ -190,7 +370,6 @@ impl Scheduler {
         }
 
         // retire
-        let mut done_out = Vec::new();
         let mut i = 0;
         while i < self.running.len() {
             if self.running[i].seq.done {
@@ -218,6 +397,7 @@ impl Scheduler {
                         r.t0_retrievals,
                         head_steps,
                     ),
+                    rejected: false,
                 });
             } else {
                 i += 1;
@@ -249,33 +429,203 @@ mod tests {
 
     #[test]
     fn admit_respects_capacity() {
-        let p = BatchPolicy { max_batch: 8 };
-        assert_eq!(p.admit(0, 20), 8);
-        assert_eq!(p.admit(5, 20), 3);
-        assert_eq!(p.admit(8, 20), 0);
-        assert_eq!(p.admit(3, 2), 2);
+        let p = BatchPolicy { max_batch: 8, max_kv_pages: 0 };
+        // uncapped pool: slot-only admission (the pre-cap behavior)
+        assert_eq!(p.admit(0, usize::MAX, &[1; 20]), 8);
+        assert_eq!(p.admit(5, usize::MAX, &[1; 20]), 3);
+        assert_eq!(p.admit(8, usize::MAX, &[1; 20]), 0);
+        assert_eq!(p.admit(3, usize::MAX, &[1; 2]), 2);
     }
 
     #[test]
-    fn prop_admission_never_exceeds_batch() {
+    fn pages_needed_charges_worst_case() {
+        // (prompt + max_new) tokens, ⌈/page_len⌉ pages per layer
+        assert_eq!(BatchPolicy::pages_needed(100, 28, 128, 4), 4);
+        assert_eq!(BatchPolicy::pages_needed(129, 0, 128, 4), 8);
+        assert_eq!(BatchPolicy::pages_needed(0, 0, 128, 4), 0);
+        assert_eq!(BatchPolicy::pages_needed(1, 0, 128, 2), 2);
+    }
+
+    #[test]
+    fn admit_gates_on_kv_pages_fifo() {
+        let p = BatchPolicy { max_batch: 8, max_kv_pages: 100 };
+        // all fit
+        assert_eq!(p.admit(0, 100, &[40, 40, 20]), 3);
+        // third doesn't fit: admission stops (FIFO — no skipping ahead),
+        // the burst waits for pages instead of growing the pool
+        assert_eq!(p.admit(0, 100, &[40, 40, 30]), 2);
+        assert_eq!(p.admit(0, 60, &[40, 40, 30]), 1);
+        assert_eq!(p.admit(0, 10, &[40, 40, 30]), 0);
+        // a small request behind a too-big one still waits its turn
+        assert_eq!(p.admit(0, 30, &[40, 1, 1]), 0);
+        // slots still bind first
+        assert_eq!(p.admit(7, 100, &[10, 10]), 1);
+    }
+
+    #[test]
+    fn prop_admission_never_exceeds_batch_or_pages() {
         Prop::new(200, 0xBA7C).forall(
             |rng: &mut Rng| {
-                (rng.below(32), rng.below(64), 1 + rng.below(16))
+                let running = rng.below(32);
+                let max_batch = 1 + rng.below(16);
+                let max_kv_pages = rng.below(3) * 64; // 0 = uncapped
+                let avail = rng.below(128);
+                let waiting: Vec<usize> =
+                    (0..rng.below(24)).map(|_| rng.below(50)).collect();
+                (running, max_batch, max_kv_pages, avail, waiting)
             },
-            |&(running, waiting, max_batch)| {
-                let p = BatchPolicy { max_batch };
-                let a = p.admit(running, waiting);
-                if running + a > max_batch && a > 0 {
+            |(running, max_batch, max_kv_pages, avail, waiting)| {
+                let p = BatchPolicy {
+                    max_batch: *max_batch,
+                    max_kv_pages: *max_kv_pages,
+                };
+                let a = p.admit(*running, *avail, waiting);
+                if running + a > *max_batch && a > 0 {
                     return Err(format!(
                         "admit {a} pushes {running} past {max_batch}"
                     ));
                 }
-                if a > waiting {
+                if a > waiting.len() {
                     return Err("admitted more than waiting".into());
+                }
+                if *max_kv_pages > 0 {
+                    let pages: usize = waiting[..a].iter().sum();
+                    if pages > *avail {
+                        return Err(format!(
+                            "admitted {pages} pages with {avail} available"
+                        ));
+                    }
                 }
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn budget_plan_bounds_iteration_tokens_and_rotates() {
+        // unlimited: everyone advances, in round-robin order
+        assert_eq!(budget_prefill_plan(&[64, 64, 64], 0, 0), vec![0, 1, 2]);
+        assert_eq!(budget_prefill_plan(&[64, 64, 64], 0, 2), vec![2, 0, 1]);
+        // budget 128 at chunk 64: two of three advance per iteration,
+        // rotation spreads the stall across sequences
+        assert_eq!(budget_prefill_plan(&[64, 64, 64], 128, 0), vec![0, 1]);
+        assert_eq!(budget_prefill_plan(&[64, 64, 64], 128, 1), vec![1, 2]);
+        // progress guarantee: one chunk above the budget still runs
+        assert_eq!(budget_prefill_plan(&[256], 128, 0), vec![0]);
+        // a smaller later chunk can fill leftover budget (work-conserving)
+        assert_eq!(budget_prefill_plan(&[100, 100, 20], 128, 0), vec![0, 2]);
+        assert!(budget_prefill_plan(&[], 64, 3).is_empty());
+    }
+
+    #[test]
+    fn prop_budget_plan_invariants() {
+        // ∀ costs/budget/rr: the plan is duplicate-free, never exceeds the
+        // budget beyond the first pick, and always makes progress.
+        Prop::new(200, 0xB4D6).forall(
+            |rng: &mut Rng| {
+                let costs: Vec<usize> =
+                    (0..1 + rng.below(12)).map(|_| rng.below(300)).collect();
+                (costs, rng.below(512), rng.below(32))
+            },
+            |(costs, budget, rr)| {
+                let plan = budget_prefill_plan(costs, *budget, *rr);
+                if plan.is_empty() {
+                    return Err("no progress".into());
+                }
+                let mut seen = std::collections::HashSet::new();
+                for &i in &plan {
+                    if i >= costs.len() || !seen.insert(i) {
+                        return Err(format!("bad index {i}"));
+                    }
+                }
+                if *budget > 0 && plan.len() > 1 {
+                    let spent: usize = plan.iter().map(|&i| costs[i]).sum();
+                    let first = costs[plan[0]];
+                    if spent > (*budget).max(first) {
+                        return Err(format!(
+                            "spent {spent} > budget {budget}"
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Engine-free mirror of the budgeted prefill stage (issue satellite:
+    /// token budget): one 32-chunk prompt co-scheduled with three short
+    /// prompts under budget = 2 chunks/iteration.  Per-iteration prefill
+    /// work never exceeds the budget (so decode latency cannot scale with
+    /// the number of prefilling sequences), every short prefill completes
+    /// within two iterations, and the long prompt still finishes.
+    #[test]
+    fn budgeted_prefill_keeps_short_ttft_bounded() {
+        let chunk = 128usize;
+        let budget = 2 * chunk;
+        let mut ledgers = vec![
+            ChunkLedger::new(32 * chunk),
+            ChunkLedger::new(100),
+            ChunkLedger::new(90),
+            ChunkLedger::new(80),
+        ];
+        let mut rr = 0usize;
+        let mut done_iter = vec![None; 4];
+        for iter in 1..=200usize {
+            let active: Vec<usize> = (0..ledgers.len())
+                .filter(|&i| !ledgers[i].is_done())
+                .collect();
+            if active.is_empty() {
+                break;
+            }
+            let costs: Vec<usize> = active
+                .iter()
+                .map(|&i| {
+                    let (s, e) = ledgers[i].next(chunk);
+                    e - s
+                })
+                .collect();
+            let plan = budget_prefill_plan(&costs, budget, rr);
+            rr = (rr + 1) % active.len();
+            let mut spent = 0usize;
+            for &k in &plan {
+                let i = active[k];
+                let (s, e) = ledgers[i].next(chunk);
+                spent += e - s;
+                ledgers[i].advance(e);
+                if ledgers[i].is_done() {
+                    done_iter[i] = Some(iter);
+                }
+            }
+            assert!(
+                spent <= budget.max(chunk),
+                "iteration {iter} executed {spent} > budget {budget}"
+            );
+        }
+        // deterministic schedule: short prefills complete in ≤ 2
+        // iterations; the long prompt's remaining 31 chunks drain one per
+        // iteration afterwards
+        assert_eq!(done_iter, vec![Some(33), Some(1), Some(2), Some(2)]);
+    }
+
+    #[test]
+    fn executed_tokens_linear_vs_quadratic() {
+        // The Θ(L) vs Θ(L²/chunk) regression, engine-free: a 32-chunk
+        // prompt costs exactly L on the KV-in path and ~L²/(2·chunk) on
+        // the prefix-recompute path (issue acceptance criterion).
+        let (chunk, l) = (128usize, 32 * 128usize);
+        assert_eq!(ChunkLedger::executed_tokens(l, chunk, true), l as u64);
+        let quad = ChunkLedger::executed_tokens(l, chunk, false);
+        assert_eq!(quad, (1..=32).map(|i| (i * 128) as u64).sum::<u64>());
+        assert!(
+            quad > 8 * l as u64,
+            "recompute must be super-linear: {quad} vs {l}"
+        );
+        // ragged last chunk still sums to exactly L on the KV-in path
+        assert_eq!(ChunkLedger::executed_tokens(300, 96, true), 300);
+        // monolithic (chunk = 0) executes the prompt once on both paths
+        assert_eq!(ChunkLedger::executed_tokens(300, 0, true), 300);
+        assert_eq!(ChunkLedger::executed_tokens(300, 0, false), 300);
+        assert_eq!(ChunkLedger::executed_tokens(0, 64, true), 0);
     }
 
     #[test]
@@ -342,10 +692,14 @@ mod tests {
     #[test]
     fn short_request_not_blocked_by_long_prefill() {
         let chunk = 128usize;
-        let policy = BatchPolicy { max_batch: 8 };
+        let policy = BatchPolicy { max_batch: 8, max_kv_pages: 0 };
         let mut long = ChunkLedger::new(32 * chunk);
         let mut short = ChunkLedger::new(100);
-        assert_eq!(policy.admit(0, 2), 2, "both admitted at iteration 0");
+        assert_eq!(
+            policy.admit(0, usize::MAX, &[1, 1]),
+            2,
+            "both admitted at iteration 0"
+        );
 
         let short_decode_tokens = 4usize;
         let mut short_decoded = 0usize;

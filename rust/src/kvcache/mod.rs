@@ -15,10 +15,17 @@ use anyhow::{anyhow, Result};
 /// Shared page pool.  One page stores `n_heads * page_len * head_dim` f32
 /// for keys and the same for values (a K page and V page are allocated as
 /// one unit to halve page-table overhead).
+///
+/// The pool is optionally capped (`EngineConfig::max_kv_pages`): `alloc`
+/// fails instead of growing past the cap, so a burst of long prompts
+/// surfaces as a scheduling decision (`BatchPolicy::admit` holds requests
+/// in the waiting queue until pages free up) rather than a host OOM.
 pub struct PagePool {
     pub n_heads: usize,
     pub head_dim: usize,
     pub page_len: usize,
+    /// Hard cap on allocated pages; 0 = unbounded (the pre-cap behavior).
+    max_pages: usize,
     k_pages: Vec<Box<[f32]>>,
     v_pages: Vec<Box<[f32]>>,
     free: Vec<usize>,
@@ -26,10 +33,20 @@ pub struct PagePool {
 
 impl PagePool {
     pub fn new(n_heads: usize, head_dim: usize, page_len: usize) -> Self {
+        Self::with_limit(n_heads, head_dim, page_len, 0)
+    }
+
+    pub fn with_limit(
+        n_heads: usize,
+        head_dim: usize,
+        page_len: usize,
+        max_pages: usize,
+    ) -> Self {
         PagePool {
             n_heads,
             head_dim,
             page_len,
+            max_pages,
             k_pages: Vec::new(),
             v_pages: Vec::new(),
             free: Vec::new(),
@@ -52,14 +69,41 @@ impl PagePool {
         self.k_pages.len() - self.free.len()
     }
 
-    fn alloc(&mut self) -> usize {
+    pub fn max_pages(&self) -> usize {
+        self.max_pages
+    }
+
+    /// Pages that can still be handed out *right now*: free pages plus
+    /// growth headroom under the cap (`usize::MAX` when unbounded).
+    /// NOTE: this is an occupancy snapshot, not an admission input —
+    /// admission gates on the cap minus the worst-case *reservations* of
+    /// in-flight sequences (`coordinator::Scheduler::step`), because a
+    /// sequence keeps growing into its reservation during decode after
+    /// this snapshot is taken.
+    pub fn available_pages(&self) -> usize {
+        if self.max_pages == 0 {
+            usize::MAX
+        } else {
+            self.max_pages.saturating_sub(self.in_use_pages())
+        }
+    }
+
+    fn alloc(&mut self) -> Result<usize> {
         if let Some(id) = self.free.pop() {
-            return id;
+            return Ok(id);
+        }
+        if self.max_pages > 0 && self.k_pages.len() >= self.max_pages {
+            return Err(anyhow!(
+                "KV page pool exhausted: {} pages allocated (max_kv_pages = {}); \
+                 admission control should have held this request",
+                self.k_pages.len(),
+                self.max_pages
+            ));
         }
         let n = self.page_elems();
         self.k_pages.push(vec![0f32; n].into_boxed_slice());
         self.v_pages.push(vec![0f32; n].into_boxed_slice());
-        self.k_pages.len() - 1
+        Ok(self.k_pages.len() - 1)
     }
 
     fn release(&mut self, id: usize) {
@@ -118,7 +162,7 @@ impl SeqKvCache {
         let pos = self.len;
         let (pi, slot) = (pos / pool.page_len, pos % pool.page_len);
         while self.tables[layer].len() <= pi {
-            let id = pool.alloc();
+            let id = pool.alloc()?;
             self.tables[layer].push(id);
         }
         let page_id = self.tables[layer][pi];
@@ -182,21 +226,85 @@ impl SeqKvCache {
                 "load_prefill_range: end {end} exceeds l_max {l_max}"
             ));
         }
-        let mut krow = vec![0f32; h * d];
-        let mut vrow = vec![0f32; h * d];
-        for pos in start..end {
-            for layer in 0..self.n_layers {
-                for head in 0..h {
-                    let src = ((layer * h + head) * l_max + pos) * d;
-                    krow[head * d..(head + 1) * d]
-                        .copy_from_slice(&k[src..src + d]);
-                    vrow[head * d..(head + 1) * d]
-                        .copy_from_slice(&v[src..src + d]);
-                }
-                self.append(pool, layer, &krow, &vrow)?;
-            }
-            self.commit_token();
+        self.load_rows(pool, k, v, l_max, start, end.saturating_sub(start))
+    }
+
+    /// Append `count` positions of a KV-in chunk-prefill result
+    /// (`prefill_extend`, DESIGN.md §6a): `k`/`v` are
+    /// `[n_layers, H, chunk_w, d]` *chunk-relative* tiles — tile row 0 is
+    /// the cache's current end, so no absolute-position bookkeeping leaks
+    /// into the artifact output.
+    pub fn load_chunk(
+        &mut self,
+        pool: &mut PagePool,
+        k: &[f32],
+        v: &[f32],
+        chunk_w: usize,
+        count: usize,
+    ) -> Result<()> {
+        let (h, d) = (pool.n_heads, pool.head_dim);
+        if k.len() != self.n_layers * h * chunk_w * d
+            || v.len() != self.n_layers * h * chunk_w * d
+        {
+            return Err(anyhow!("load_chunk: bad k/v size"));
         }
+        if count > chunk_w {
+            return Err(anyhow!(
+                "load_chunk: count {count} exceeds chunk width {chunk_w}"
+            ));
+        }
+        self.load_rows(pool, k, v, chunk_w, 0, count)
+    }
+
+    /// Shared bulk-load core: append `count` rows whose tile positions are
+    /// `[tile_off, tile_off + count)` in a `[n_layers, H, tile_w, d]`
+    /// source tile.  For a fixed (layer, head) the source rows are
+    /// contiguous and a head's page rows are contiguous, so the inner
+    /// loop is one memcpy per (layer, head, page) run of up to
+    /// `page_len·d` floats — the same shape as `export_dense`, replacing
+    /// the old one-(pos, layer)-row-at-a-time `append` path.
+    ///
+    /// On a pool-cap allocation failure the cache length is unchanged;
+    /// already-allocated pages stay in the page table (released with the
+    /// sequence).
+    fn load_rows(
+        &mut self,
+        pool: &mut PagePool,
+        k: &[f32],
+        v: &[f32],
+        tile_w: usize,
+        tile_off: usize,
+        count: usize,
+    ) -> Result<()> {
+        let (h, d) = (pool.n_heads, pool.head_dim);
+        let dst_start = self.len;
+        let dst_end = dst_start + count;
+        for layer in 0..self.n_layers {
+            while self.tables[layer].len() * pool.page_len < dst_end {
+                let id = pool.alloc()?;
+                self.tables[layer].push(id);
+            }
+        }
+        for layer in 0..self.n_layers {
+            for head in 0..h {
+                let mut done = 0usize;
+                while done < count {
+                    let pos = dst_start + done;
+                    let (pi, slot) = (pos / pool.page_len, pos % pool.page_len);
+                    let run = (pool.page_len - slot).min(count - done);
+                    let page_id = self.tables[layer][pi];
+                    let off = pool.row(head, slot);
+                    let src =
+                        ((layer * h + head) * tile_w + tile_off + done) * d;
+                    pool.k_pages[page_id][off..off + run * d]
+                        .copy_from_slice(&k[src..src + run * d]);
+                    pool.v_pages[page_id][off..off + run * d]
+                        .copy_from_slice(&v[src..src + run * d]);
+                    done += run;
+                }
+            }
+        }
+        self.len = dst_end;
         Ok(())
     }
 
@@ -511,6 +619,183 @@ mod tests {
             .load_prefill_range(&mut pool, &k, &v, l_max, 0, l_max + 1)
             .is_err());
         assert_eq!(c.len(), 0);
+    }
+
+    #[test]
+    fn load_chunk_matches_append_path() {
+        // Chunk-relative bulk load == the per-(pos, layer) append path,
+        // across page boundaries (page_len 8, chunks of 5).
+        let (h, d, cw) = (2usize, 4usize, 5usize);
+        let mut rng = Rng::new(7);
+        let (mut pool_a, mut a) = mk(2);
+        let (mut pool_b, mut b) = mk(2);
+        let mut pos_total = 0usize;
+        for _chunk in 0..4 {
+            let k: Vec<f32> =
+                (0..2 * h * cw * d).map(|_| rng.normal()).collect();
+            let v: Vec<f32> =
+                (0..2 * h * cw * d).map(|_| rng.normal()).collect();
+            b.load_chunk(&mut pool_b, &k, &v, cw, cw).unwrap();
+            // reference: row-at-a-time appends
+            let mut krow = vec![0f32; h * d];
+            let mut vrow = vec![0f32; h * d];
+            for p in 0..cw {
+                for layer in 0..2 {
+                    for head in 0..h {
+                        let src = ((layer * h + head) * cw + p) * d;
+                        krow[head * d..(head + 1) * d]
+                            .copy_from_slice(&k[src..src + d]);
+                        vrow[head * d..(head + 1) * d]
+                            .copy_from_slice(&v[src..src + d]);
+                    }
+                    a.append(&mut pool_a, layer, &krow, &vrow).unwrap();
+                }
+                a.commit_token();
+            }
+            pos_total += cw;
+        }
+        assert_eq!(a.len(), pos_total);
+        assert_eq!(b.len(), pos_total);
+        for layer in 0..2 {
+            for head in 0..h {
+                for p in 0..pos_total {
+                    assert_eq!(
+                        a.key(&pool_a, layer, head, p),
+                        b.key(&pool_b, layer, head, p)
+                    );
+                    assert_eq!(
+                        a.value(&pool_a, layer, head, p),
+                        b.value(&pool_b, layer, head, p)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn load_chunk_partial_count_and_size_checks() {
+        let (mut pool, mut c) = mk(1);
+        let (h, d, cw) = (2usize, 4usize, 8usize);
+        let mut rng = Rng::new(8);
+        let k: Vec<f32> = (0..h * cw * d).map(|_| rng.normal()).collect();
+        let v: Vec<f32> = (0..h * cw * d).map(|_| rng.normal()).collect();
+        // partial (ragged last chunk): only 3 of 8 tile rows are valid
+        c.load_chunk(&mut pool, &k, &v, cw, 3).unwrap();
+        assert_eq!(c.len(), 3);
+        for p in 0..3 {
+            let src = p * d; // tile row p of (layer 0, head 0)
+            assert_eq!(c.key(&pool, 0, 0, p), &k[src..src + d]);
+        }
+        // count beyond the tile width and bad tile sizes are rejected
+        assert!(c.load_chunk(&mut pool, &k, &v, cw, cw + 1).is_err());
+        assert!(c.load_chunk(&mut pool, &k[1..], &v, cw, 1).is_err());
+        assert_eq!(c.len(), 3);
+    }
+
+    #[test]
+    fn pool_cap_makes_alloc_fallible() {
+        // cap = 2 pages, page_len 4, 1 layer → 8 tokens fit, the 9th fails
+        let mut pool = PagePool::with_limit(2, 4, 4, 2);
+        let mut c = SeqKvCache::new(1);
+        let mut rng = Rng::new(9);
+        for _ in 0..8 {
+            c.append(&mut pool, 0, &row(&mut rng, 8), &row(&mut rng, 8))
+                .unwrap();
+            c.commit_token();
+        }
+        assert_eq!(pool.available_pages(), 0);
+        let err = c
+            .append(&mut pool, 0, &row(&mut rng, 8), &row(&mut rng, 8))
+            .unwrap_err();
+        assert!(err.to_string().contains("exhausted"), "{err}");
+        assert_eq!(c.len(), 8, "failed append must not advance state");
+        // releasing returns headroom and allocation succeeds again
+        c.release(&mut pool);
+        assert_eq!(pool.available_pages(), 2);
+        let mut c2 = SeqKvCache::new(1);
+        c2.append(&mut pool, 0, &row(&mut rng, 8), &row(&mut rng, 8))
+            .unwrap();
+        // uncapped pools report unbounded availability
+        assert_eq!(PagePool::new(2, 4, 4).available_pages(), usize::MAX);
+    }
+
+    #[test]
+    fn load_rows_cap_failure_leaves_length_unchanged() {
+        // 2 layers need 2 pages for any token; cap 1 → the bulk load must
+        // fail before any row copy and leave len() at 0 (the allocated
+        // page stays held by the sequence and is released with it).
+        let mut pool = PagePool::with_limit(2, 4, 4, 1);
+        let mut c = SeqKvCache::new(2);
+        let (h, d, l_max) = (2usize, 4usize, 4usize);
+        let k = vec![1f32; 2 * h * l_max * d];
+        let v = vec![2f32; 2 * h * l_max * d];
+        assert!(c.load_prefill(&mut pool, &k, &v, l_max, 2).is_err());
+        assert_eq!(c.len(), 0);
+        assert_eq!(c.pages_held(), pool.in_use_pages());
+        c.release(&mut pool);
+        assert_eq!(pool.in_use_pages(), 0);
+    }
+
+    #[test]
+    fn prop_capped_pool_never_exceeds_limit() {
+        // Random append/release schedules against a capped pool: the pool
+        // never allocates past the cap, failures only happen at the cap,
+        // and accounting (pages_held == in_use) survives failures.
+        Prop::new(30, 0xCAB5).forall(
+            |rng| {
+                let cap = 1 + gen::usize_in(rng, 1, 8);
+                let ops: Vec<(usize, bool)> = (0..60)
+                    .map(|_| (rng.below(3), rng.f32() < 0.2))
+                    .collect();
+                (cap, ops)
+            },
+            |(cap, ops)| {
+                let mut pool = PagePool::with_limit(2, 4, 4, *cap);
+                let mut seqs: Vec<SeqKvCache> =
+                    (0..3).map(|_| SeqKvCache::new(2)).collect();
+                let mut rng = Rng::new(11);
+                for &(s, is_release) in ops {
+                    if is_release {
+                        seqs[s].release(&mut pool);
+                    } else {
+                        for l in 0..2 {
+                            let k = row(&mut rng, 8);
+                            let v = row(&mut rng, 8);
+                            if seqs[s].append(&mut pool, l, &k, &v).is_err() {
+                                if pool.available_pages() > 0 {
+                                    return Err(format!(
+                                        "alloc failed with {} available",
+                                        pool.available_pages()
+                                    ));
+                                }
+                                break;
+                            }
+                        }
+                        // only commit fully-appended tokens
+                        if seqs[s].tables.iter().all(|t| {
+                            t.len() * pool.page_len > seqs[s].len
+                        }) {
+                            seqs[s].commit_token();
+                        }
+                    }
+                    if pool.allocated_pages() > *cap {
+                        return Err(format!(
+                            "allocated {} > cap {cap}",
+                            pool.allocated_pages()
+                        ));
+                    }
+                    let held: usize =
+                        seqs.iter().map(SeqKvCache::pages_held).sum();
+                    if held != pool.in_use_pages() {
+                        return Err(format!(
+                            "held {held} != in_use {}",
+                            pool.in_use_pages()
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

@@ -73,7 +73,7 @@ fn info(rest: &[String]) -> Result<()> {
             mm.n_layers, mm.d_model, mm.n_heads, mm.head_dim, mm.vocab_size
         );
         println!("  {} artifacts, {} weights", mm.artifacts.len(), mm.weights.len());
-        for stage in ["layer_step", "layer_step_dense", "prefill", "attn_tsa_xla", "attn_tsa_pallas", "attn_dense"] {
+        for stage in ["layer_step", "layer_step_dense", "prefill", "prefill_extend", "attn_tsa_xla", "attn_tsa_pallas", "attn_dense"] {
             let n = mm.artifacts.iter().filter(|a| a.stage == stage).count();
             if n > 0 {
                 println!("    {stage}: {n}");
@@ -116,6 +116,9 @@ fn serve(rest: &[String]) -> Result<()> {
         .flag("batch", "8", "max concurrent batch")
         .flag("prompt-len", "448", "synthetic prompt length")
         .flag("prefill-chunk", "0", "chunked-prefill tokens per iteration (0 = whole prompt)")
+        .flag("prefill-budget", "0", "max prefill tokens executed per scheduler iteration (0 = unlimited)")
+        .flag("max-kv-pages", "0", "KV page-pool cap; requests wait for pages instead of OOMing (0 = unbounded)")
+        .switch("prefill-recompute", "use the prefix-recompute chunked-prefill path (parity oracle)")
         .flag("planner-threads", "0", "host-side planner pool width (0/1 = serial)");
     let args = cli.parse(rest).map_err(anyhow::Error::msg)?;
     let mut cfg = EngineConfig::default();
@@ -127,6 +130,9 @@ fn serve(rest: &[String]) -> Result<()> {
     cfg.max_new_tokens = args.get_usize("gen");
     cfg.max_batch = args.get_usize("batch");
     cfg.prefill_chunk = args.get_usize("prefill-chunk");
+    cfg.prefill_token_budget = args.get_usize("prefill-budget");
+    cfg.max_kv_pages = args.get_usize("max-kv-pages");
+    cfg.prefill_recompute = args.get_bool("prefill-recompute");
     cfg.planner_threads = args.get_usize("planner-threads");
     // vocab comes from the manifest (read it without building an engine)
     let vocab = prhs::runtime::Manifest::load(args.get("artifacts"))?
@@ -152,8 +158,17 @@ fn serve(rest: &[String]) -> Result<()> {
         })
         .collect();
     let mut total_tokens = 0usize;
+    let mut rejected = 0usize;
     for rx in rxs {
         let out = rx.recv()?;
+        if out.rejected {
+            rejected += 1;
+            println!(
+                "req {}: REJECTED (worst-case KV pages exceed --max-kv-pages)",
+                out.id
+            );
+            continue;
+        }
         total_tokens += out.tokens.len();
         println!(
             "req {}: {} tokens, prefill {:.1} ms, ttft {:.1} ms, ρ̂ {:.4}",
@@ -166,8 +181,14 @@ fn serve(rest: &[String]) -> Result<()> {
     }
     let dt = t0.elapsed().as_secs_f64();
     println!(
-        "served {n} requests / {total_tokens} tokens in {dt:.2}s → {:.1} tok/s",
-        total_tokens as f64 / dt
+        "served {} requests / {total_tokens} tokens in {dt:.2}s → {:.1} tok/s{}",
+        n - rejected,
+        total_tokens as f64 / dt,
+        if rejected > 0 {
+            format!(" ({rejected} rejected)")
+        } else {
+            String::new()
+        }
     );
     server.shutdown()?;
     Ok(())

@@ -6,18 +6,27 @@ use std::time::Duration;
 
 /// Streaming latency histogram with exact percentile queries over a
 /// bounded reservoir (fine for harness-scale runs).
+///
+/// Percentile queries sort into a cached buffer that is invalidated on
+/// `record`, so a multi-percentile report (p50/p95/p99 inside `prhs
+/// serve` reporting) sorts once instead of clone-and-sorting the full
+/// reservoir per query.
 #[derive(Clone, Debug, Default)]
 pub struct Histogram {
     samples_us: Vec<f64>,
+    /// Sorted copy of `samples_us`; valid iff `!dirty`.
+    sorted: Vec<f64>,
+    dirty: bool,
 }
 
 impl Histogram {
     pub fn record(&mut self, d: Duration) {
-        self.samples_us.push(d.as_secs_f64() * 1e6);
+        self.record_us(d.as_secs_f64() * 1e6);
     }
 
     pub fn record_us(&mut self, us: f64) {
         self.samples_us.push(us);
+        self.dirty = true;
     }
 
     pub fn count(&self) -> usize {
@@ -31,14 +40,18 @@ impl Histogram {
         self.samples_us.iter().sum::<f64>() / self.samples_us.len() as f64
     }
 
-    pub fn percentile_us(&self, p: f64) -> f64 {
+    pub fn percentile_us(&mut self, p: f64) -> f64 {
         if self.samples_us.is_empty() {
             return 0.0;
         }
-        let mut s = self.samples_us.clone();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let idx = ((s.len() as f64 - 1.0) * p / 100.0).round() as usize;
-        s[idx]
+        if self.dirty || self.sorted.len() != self.samples_us.len() {
+            self.sorted.clone_from(&self.samples_us);
+            self.sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.dirty = false;
+        }
+        let idx =
+            ((self.sorted.len() as f64 - 1.0) * p / 100.0).round() as usize;
+        self.sorted[idx]
     }
 }
 
@@ -88,6 +101,10 @@ pub struct RunMetrics {
     /// (i.e. prefill completion under chunked prefill, DESIGN.md §6a).
     pub ttft_lat: Histogram,
     pub tokens_out: u64,
+    /// Prompt tokens executed in the scheduler's prefill stage (chunk
+    /// sizes summed; bounded per iteration by
+    /// `EngineConfig::prefill_token_budget`).
+    pub prefill_tokens: u64,
     pub wall_s: f64,
     /// Decode-phase head-level retrievals only (prefill-side scoring is
     /// excluded from ρ̂ by definition — paper Sec. III, DESIGN.md §4).
@@ -125,6 +142,32 @@ mod tests {
         assert!((h.mean_us() - 50.5).abs() < 1e-9);
         assert!((h.percentile_us(50.0) - 50.0).abs() <= 1.0);
         assert!((h.percentile_us(99.0) - 99.0).abs() <= 1.0);
+    }
+
+    /// Regression (issue satellite 3): repeated queries must agree with
+    /// each other and with a fresh sort, and records between queries must
+    /// invalidate the sorted cache.
+    #[test]
+    fn histogram_cached_percentiles_stay_exact() {
+        let mut h = Histogram::default();
+        // reverse order exercises the sort; interleave queries + records
+        for i in (1..=50).rev() {
+            h.record_us(i as f64);
+        }
+        let p50_a = h.percentile_us(50.0);
+        let p50_b = h.percentile_us(50.0);
+        assert_eq!(p50_a, p50_b, "repeated queries agree");
+        assert_eq!(h.percentile_us(0.0), 1.0);
+        assert_eq!(h.percentile_us(100.0), 50.0);
+        // a new max must show up in the next query (cache invalidated)
+        h.record_us(1000.0);
+        assert_eq!(h.percentile_us(100.0), 1000.0);
+        assert_eq!(h.percentile_us(0.0), 1.0);
+        // clone carries the cache state coherently
+        let mut c = h.clone();
+        c.record_us(0.5);
+        assert_eq!(c.percentile_us(0.0), 0.5);
+        assert_eq!(h.percentile_us(0.0), 1.0, "original unaffected");
     }
 
     #[test]

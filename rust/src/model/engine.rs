@@ -73,6 +73,33 @@ impl ChunkLedger {
             total.div_ceil(chunk)
         }
     }
+
+    /// Prompt tokens the prefill artifacts *execute* to prefill `total`
+    /// tokens at `chunk` granularity — the cost model the engine's
+    /// `StepStats::prefill_tokens_executed` counter must match.
+    ///
+    /// With the KV-in extend path (`kv_in = true`) every chunk executes
+    /// only its own tokens: Θ(L) total.  With prefix recompute each chunk
+    /// past the first re-executes the whole prefix `[0, end)`:
+    /// Θ(L²/chunk) total — the quadratic cost this PR's tentpole removes
+    /// (DESIGN.md §6a).
+    pub fn executed_tokens(total: usize, chunk: usize, kv_in: bool) -> u64 {
+        if chunk == 0 || total == 0 {
+            return total as u64;
+        }
+        let mut done = 0usize;
+        let mut sum = 0u64;
+        while done < total {
+            let end = total.min(done + chunk);
+            sum += if kv_in || done == 0 {
+                (end - done) as u64
+            } else {
+                end as u64
+            };
+            done = end;
+        }
+        sum
+    }
 }
 
 /// Reusable per-sequence host-side scratch.  Owned by the sequence so the
@@ -224,6 +251,12 @@ pub struct StepStats {
     pub selected_sets: u64,
     /// Σ context length over dense layer calls (FLOP model input).
     pub dense_context_tokens: u64,
+    /// Prompt tokens executed by prefill artifacts (Θ(L) per prompt on
+    /// the KV-in extend path, Θ(L²/chunk) under prefix recompute — see
+    /// `ChunkLedger::executed_tokens`, DESIGN.md §6a).
+    pub prefill_tokens_executed: u64,
+    /// Prefill artifact invocations (chunks + monolithic calls).
+    pub prefill_chunks: u64,
 }
 
 impl StepStats {
@@ -323,6 +356,10 @@ pub struct Engine {
     sc_hidden_next: Vec<f32>,
     sc_tokens: Vec<i32>,
     sc_pos: Vec<i32>,
+    /// Engine-owned prefill context tile `[nl, H, l_max, d]` staged via
+    /// `export_dense` for the KV-in `prefill_extend` path (DESIGN.md §6a).
+    sc_pf_k: Vec<f32>,
+    sc_pf_v: Vec<f32>,
 }
 
 impl Engine {
@@ -342,7 +379,12 @@ impl Engine {
         cfg: EngineConfig,
     ) -> Self {
         let mm = rt.model(&cfg.model).expect("model in manifest").clone();
-        let pool = PagePool::new(mm.n_heads, mm.head_dim, 128);
+        let pool = PagePool::with_limit(
+            mm.n_heads,
+            mm.head_dim,
+            128,
+            cfg.max_kv_pages,
+        );
         let seed = cfg.seed;
         Engine {
             rt,
@@ -363,6 +405,8 @@ impl Engine {
             sc_hidden_next: Vec::new(),
             sc_tokens: Vec::new(),
             sc_pos: Vec::new(),
+            sc_pf_k: Vec::new(),
+            sc_pf_v: Vec::new(),
         }
     }
 
@@ -404,15 +448,20 @@ impl Engine {
     /// last-token attention rows, `last_logits` is set, and the first
     /// token is sampled — exactly the monolithic prefill's final state.
     ///
-    /// Each chunk re-runs the prefill artifact over the prompt *prefix*
-    /// `[0, end)` and loads only the new positions' K/V: causal attention
-    /// makes prefix K/V independent of later tokens, so chunked and
-    /// monolithic prefill agree.  Cost caveat: because of the prefix
-    /// recompute, one call costs one prefix-prefill (which grows with
-    /// `end`), not one chunk — chunking removes the *wait for the whole
-    /// prompt* from co-scheduled requests but does not yet bound late
-    /// iterations of a very long prompt; a KV-in chunked prefill
-    /// artifact is the L2-side follow-up (DESIGN.md §6a).
+    /// Two execution paths (DESIGN.md §6a):
+    ///   * **KV-in extend** (default): chunks past the first stage the
+    ///     cached context `[0, start)` into an engine-owned tile
+    ///     (`export_dense`) and execute the `prefill_extend` artifact,
+    ///     which computes only the chunk's projections — total prefill
+    ///     work is Θ(L), one chunk costs O(chunk · end) attention.
+    ///   * **Prefix recompute** (`cfg.prefill_recompute`, or when the
+    ///     artifact set predates `prefill_extend`): every chunk re-runs
+    ///     the whole prefix `[0, end)` — Θ(L²/chunk) total.  Kept as the
+    ///     parity oracle for the extend path.
+    ///
+    /// Both paths agree with monolithic prefill under causal + PSAW
+    /// masks; with ETF enabled, freezing is applied per chunk on either
+    /// path (monolithic prefill is the exact ETF reference).
     pub fn prefill_chunk(
         &mut self,
         seq: &mut Sequence,
@@ -425,9 +474,101 @@ impl Engine {
         if seq.prefill.is_done() && !seq.last_logits.is_empty() {
             return Ok(true);
         }
-        let len = seq.prompt.len();
+        let chunk = self.effective_chunk(chunk);
         let (start, end) = seq.prefill.next(chunk);
         debug_assert_eq!(start, seq.cache.len(), "chunk must resume at cache end");
+        if let Some((cb, lb)) = self.extend_buckets(start, end) {
+            return self.prefill_chunk_extend(seq, start, end, cb, lb);
+        }
+        self.prefill_chunk_prefix(seq, start, end)
+    }
+
+    /// Clamp the requested chunk to the largest `prefill_extend` chunk
+    /// bucket: an oversized `prefill_chunk` config degrades to *more*
+    /// chunks on the Θ(L) extend path, never to a silent Θ(L²/chunk)
+    /// recompute fallback.  `chunk == 0` (monolithic — one Θ(L) prefill
+    /// call by design) and the explicit recompute-oracle mode pass
+    /// through untouched.
+    fn effective_chunk(&self, chunk: usize) -> usize {
+        if chunk == 0 || self.cfg.prefill_recompute {
+            return chunk;
+        }
+        match self.mm.buckets("prefill_extend", "chunk").last() {
+            Some(&max) if chunk > max => max,
+            _ => chunk,
+        }
+    }
+
+    /// (chunk, l_max) buckets for the KV-in extend path, or `None` when
+    /// the chunk must fall back to prefix recompute: first chunk,
+    /// `cfg.prefill_recompute` forcing the oracle path, an artifact set
+    /// without `prefill_extend`, or a context beyond the extend l_max
+    /// buckets.
+    fn extend_buckets(&self, start: usize, end: usize) -> Option<(usize, usize)> {
+        if start == 0 || self.cfg.prefill_recompute {
+            return None;
+        }
+        let cb = self.mm.bucket_for("prefill_extend", "chunk", end - start)?;
+        let lb = self.mm.bucket_for("prefill_extend", "l_max", start)?;
+        Some((cb, lb))
+    }
+
+    /// Prompt tokens the *next* prefill chunk will execute for `seq` —
+    /// mirrors `prefill_chunk`'s clamping and path choice, so the
+    /// scheduler's token budget charges the chunk's real work:
+    /// `end - start` on the KV-in extend path, the whole prefix `end` on
+    /// the recompute/fallback path (DESIGN.md §6a).
+    pub fn prefill_chunk_cost(&self, seq: &Sequence, chunk: usize) -> usize {
+        let chunk = self.effective_chunk(chunk);
+        let (start, end) = seq.prefill.next(chunk);
+        if self.extend_buckets(start, end).is_some() {
+            end - start
+        } else {
+            end
+        }
+    }
+
+    /// Selector scalar inputs shared by both prefill artifacts (order is
+    /// part of the L2 interchange contract — see `aot.py`).  The scalar
+    /// variants carry no borrows, so the lifetime is the caller's choice.
+    fn prefill_scalars<'a>(&self) -> [Input<'a>; 8] {
+        let sc = &self.cfg.selector;
+        let nl = self.mm.n_layers;
+        let ell_s = (nl as f32 * sc.sched_ell_s_frac).floor();
+        let psaw_on = if sc.psaw_enabled { 1.0 } else { 0.0 };
+        let etf_on = if sc.etf_enabled { 1.0 } else { 0.0 };
+        [
+            Input::ScalarF32(sc.c_sink as f32),
+            Input::ScalarF32(ell_s),
+            Input::ScalarF32(sc.psaw_phi),
+            Input::ScalarF32(sc.psaw_alpha),
+            Input::ScalarF32(sc.etf_psi),
+            Input::ScalarF32(sc.etf_gamma),
+            Input::ScalarF32(psaw_on),
+            Input::ScalarF32(etf_on),
+        ]
+    }
+
+    /// Final-chunk bookkeeping shared by both paths: seed the selector
+    /// with the stitched `[0, len)` last-token row per (layer, head),
+    /// record logits, sample the first token.
+    fn finish_prefill(&mut self, seq: &mut Sequence, logits: &[f32]) {
+        seq.last_logits = logits.to_vec();
+        seq.next_token =
+            proj::sample(logits, self.temperature, &mut self.rng) as i32;
+        seq.prefill_retrievals = seq.selector.retrievals();
+    }
+
+    /// Prefix-recompute chunk: run the `prefill` artifact over `[0, end)`
+    /// and load only positions `[start, end)` — executes `end` prompt
+    /// tokens (the Θ(L²/chunk) parity-oracle path).
+    fn prefill_chunk_prefix(
+        &mut self,
+        seq: &mut Sequence,
+        start: usize,
+        end: usize,
+    ) -> Result<bool> {
+        let len = seq.prompt.len();
         let l_max = self
             .mm
             .bucket_for("prefill", "l_max", end)
@@ -438,27 +579,20 @@ impl Engine {
 
         let mut tokens = seq.prompt[..end].to_vec();
         tokens.resize(l_max, 0);
-        let sc = &self.cfg.selector;
         let nl = self.mm.n_layers;
-        let ell_s = (nl as f32 * sc.sched_ell_s_frac).floor();
-        let psaw_on = if sc.psaw_enabled { 1.0 } else { 0.0 };
-        let etf_on = if sc.etf_enabled { 1.0 } else { 0.0 };
 
         let wbufs = self.weights.all_buffers();
         let mut inputs: Vec<Input<'_>> = vec![
             Input::I32(&tokens, vec![l_max]),
             Input::ScalarI32(end as i32),
-            Input::ScalarF32(sc.c_sink as f32),
-            Input::ScalarF32(ell_s),
-            Input::ScalarF32(sc.psaw_phi),
-            Input::ScalarF32(sc.psaw_alpha),
-            Input::ScalarF32(sc.etf_psi),
-            Input::ScalarF32(sc.etf_gamma),
-            Input::ScalarF32(psaw_on),
-            Input::ScalarF32(etf_on),
         ];
+        inputs.extend(self.prefill_scalars());
         inputs.extend(wbufs.into_iter().map(Input::Buffer));
-        let outs = self.rt.execute(&art, &inputs)?;
+        // Only the final chunk consumes logits/probs; skip their
+        // device→host conversion on earlier chunks (§Perf lever).
+        let is_final = end >= len;
+        let wanted = [true, true, false, is_final, is_final];
+        let outs = self.rt.execute_select(&art, &inputs, Some(&wanted))?;
         let (k, v, _last_hidden, logits, last_probs) =
             (&outs[0], &outs[1], &outs[2], &outs[3], &outs[4]);
 
@@ -482,6 +616,8 @@ impl Engine {
             }
         }
         seq.prefill.advance(end);
+        self.stats.prefill_tokens_executed += end as u64;
+        self.stats.prefill_chunks += 1;
         if end < len {
             return Ok(false);
         }
@@ -500,11 +636,108 @@ impl Engine {
                 seq.selector.observe_probs(layer, head, len, &seq.scratch.row);
             }
         }
+        self.finish_prefill(seq, &logits.data);
+        Ok(true)
+    }
 
-        seq.last_logits = logits.data.clone();
-        seq.next_token =
-            proj::sample(&logits.data, self.temperature, &mut self.rng) as i32;
-        seq.prefill_retrievals = seq.selector.retrievals();
+    /// KV-in extend chunk: stage cached K/V `[0, start)` into the engine's
+    /// prefill tile and execute `prefill_extend`, which returns only the
+    /// chunk's K/V — executes `end - start` prompt tokens, so the total
+    /// over a prompt is Θ(L) (the tentpole fix; DESIGN.md §6a).
+    fn prefill_chunk_extend(
+        &mut self,
+        seq: &mut Sequence,
+        start: usize,
+        end: usize,
+        cb: usize,
+        lb: usize,
+    ) -> Result<bool> {
+        let len = seq.prompt.len();
+        let new_len = end - start;
+        let (h, d, nl) = (self.mm.n_heads, self.mm.head_dim, self.mm.n_layers);
+        let art = self.art("prefill_extend", &[("chunk", cb), ("l_max", lb)])?;
+
+        // Stage the cached context into the engine-owned tile.  Host
+        // bandwidth is ∝ start per chunk (like the retrieval path's
+        // dense export); the quadratic *compute* is gone.  No zero-fill
+        // of the tail: tile slots ≥ start are excluded by the in-graph
+        // validity mask (`_extend_attn_mask`), and stale contents are
+        // finite (prior exports or the zero-init on growth), so they
+        // can't poison the softmax.
+        let per = h * lb * d;
+        let total = nl * per;
+        if self.sc_pf_k.len() < total {
+            self.sc_pf_k.resize(total, 0.0);
+            self.sc_pf_v.resize(total, 0.0);
+        }
+        for layer in 0..nl {
+            seq.cache.export_dense(
+                &self.pool,
+                layer,
+                lb,
+                &mut self.sc_pf_k[layer * per..(layer + 1) * per],
+                &mut self.sc_pf_v[layer * per..(layer + 1) * per],
+            );
+        }
+
+        let mut tokens = seq.prompt[start..end].to_vec();
+        tokens.resize(cb, 0);
+        let wbufs = self.weights.all_buffers();
+        let mut inputs: Vec<Input<'_>> = vec![
+            Input::I32(&tokens, vec![cb]),
+            Input::ScalarI32(start as i32),
+            Input::ScalarI32(end as i32),
+        ];
+        inputs.extend(self.prefill_scalars());
+        inputs.push(Input::F32(&self.sc_pf_k[..total], vec![nl, h, lb, d]));
+        inputs.push(Input::F32(&self.sc_pf_v[..total], vec![nl, h, lb, d]));
+        inputs.extend(wbufs.into_iter().map(Input::Buffer));
+        // Only the final chunk consumes logits/probs; skip their
+        // device→host conversion on earlier chunks (§Perf lever).
+        let is_final = end >= len;
+        let wanted = [true, true, false, is_final, is_final];
+        let outs = self.rt.execute_select(&art, &inputs, Some(&wanted))?;
+        let (k, v, _last_hidden, logits, last_probs) =
+            (&outs[0], &outs[1], &outs[2], &outs[3], &outs[4]);
+
+        seq.cache.load_chunk(&mut self.pool, &k.data, &v.data, cb, new_len)?;
+
+        // Report the chunk's new keys (Quest summaries / DS caches).
+        for layer in 0..nl {
+            for head in 0..h {
+                for pos in start..end {
+                    let krow = seq.cache.key(&self.pool, layer, head, pos);
+                    seq.selector.observe_new_key(layer, head, pos, krow);
+                }
+            }
+        }
+        seq.prefill.advance(end);
+        self.stats.prefill_tokens_executed += new_len as u64;
+        self.stats.prefill_chunks += 1;
+        if end < len {
+            return Ok(false);
+        }
+
+        // Final chunk: the last-token row comes back split across the
+        // context tile ([0, start)) and the chunk segment
+        // ([lb, lb + new_len)); stitch them into one [0, len) row per
+        // (layer, head) to seed the selector.
+        let row_w = lb + cb;
+        for layer in 0..nl {
+            for head in 0..h {
+                let base = (layer * h + head) * row_w;
+                seq.scratch.row.clear();
+                seq.scratch
+                    .row
+                    .extend_from_slice(&last_probs.data[base..base + start]);
+                seq.scratch.row.extend_from_slice(
+                    &last_probs.data[base + lb..base + lb + new_len],
+                );
+                seq.scratch.row.push(0.0); // imaginary self slot at `len`
+                seq.selector.observe_probs(layer, head, len, &seq.scratch.row);
+            }
+        }
+        self.finish_prefill(seq, &logits.data);
         Ok(true)
     }
 

@@ -63,6 +63,50 @@ impl ClientHandle {
     }
 }
 
+/// Reply routing table keyed by an internal monotonic *ticket*.
+///
+/// Client-supplied `RequestIn::id`s may collide — two in-flight requests
+/// with the same id used to cross-wire responses to whichever client
+/// registered first.  The server rewrites `req.id` to a fresh ticket
+/// before submitting to the scheduler and restores the client's id on
+/// completion, so routing never depends on client-chosen ids.
+struct ReplyTable {
+    next_ticket: u64,
+    /// (ticket, client id, reply channel).
+    entries: Vec<(u64, u64, SyncSender<RequestOut>)>,
+}
+
+impl ReplyTable {
+    fn new() -> Self {
+        ReplyTable { next_ticket: 0, entries: Vec::new() }
+    }
+
+    /// Register a reply channel; returns the ticket to submit under.
+    fn register(&mut self, client_id: u64, tx: SyncSender<RequestOut>) -> u64 {
+        let ticket = self.next_ticket;
+        self.next_ticket += 1;
+        self.entries.push((ticket, client_id, tx));
+        ticket
+    }
+
+    /// Route a completion (whose `id` is the ticket) back to its reply
+    /// channel with the client's original id restored.
+    fn complete(
+        &mut self,
+        mut out: RequestOut,
+    ) -> Option<(RequestOut, SyncSender<RequestOut>)> {
+        let i = self.entries.iter().position(|(t, _, _)| *t == out.id)?;
+        let (_, client_id, tx) = self.entries.swap_remove(i);
+        out.id = client_id;
+        Some((out, tx))
+    }
+
+    #[cfg(test)]
+    fn len(&self) -> usize {
+        self.entries.len()
+    }
+}
+
 /// A running server (engine thread + ingress channel).
 pub struct Server {
     handle: Option<JoinHandle<Result<()>>>,
@@ -81,7 +125,7 @@ impl Server {
         let handle = std::thread::spawn(move || -> Result<()> {
             let engine = Engine::new(cfg)?;
             let mut sched = Scheduler::new(engine);
-            let mut replies: Vec<(u64, SyncSender<RequestOut>)> = Vec::new();
+            let mut replies = ReplyTable::new();
             let mut open = true;
             while open || sched.pending() > 0 {
                 // Drain ingress without blocking while work is in flight;
@@ -106,8 +150,10 @@ impl Server {
                         }
                     };
                     match msg {
-                        Some(Msg::Request(req, reply)) => {
-                            replies.push((req.id, reply));
+                        Some(Msg::Request(mut req, reply)) => {
+                            // route by ticket, not the client-supplied id
+                            // (duplicate ids must not cross-wire replies)
+                            req.id = replies.register(req.id, reply);
                             sched.submit(req);
                         }
                         Some(Msg::Shutdown) => {
@@ -119,11 +165,8 @@ impl Server {
                 }
                 if sched.pending() > 0 {
                     for done in sched.step()? {
-                        if let Some(i) =
-                            replies.iter().position(|(id, _)| *id == done.id)
-                        {
-                            let (_, reply) = replies.swap_remove(i);
-                            let _ = reply.send(done);
+                        if let Some((out, reply)) = replies.complete(done) {
+                            let _ = reply.send(out);
                         }
                     }
                 }
@@ -190,6 +233,49 @@ mod tests {
             Ok(Msg::Request(req, _)) => assert_eq!(req.id, 2),
             other => panic!("expected retried request, got {:?}", other.is_ok()),
         }
+    }
+
+    /// Regression (issue satellite 2): two in-flight requests with the
+    /// same client-supplied id must not cross-wire — the reply table
+    /// routes by internal ticket and restores the client id on the way
+    /// out.  Engine-free: exercises the routing logic the server loop
+    /// uses verbatim.
+    #[test]
+    fn duplicate_client_ids_do_not_cross_wire() {
+        let mut table = ReplyTable::new();
+        let (tx_a, rx_a) = sync_channel::<RequestOut>(1);
+        let (tx_b, rx_b) = sync_channel::<RequestOut>(1);
+        // both clients chose id 7
+        let ticket_a = table.register(7, tx_a);
+        let ticket_b = table.register(7, tx_b);
+        assert_ne!(ticket_a, ticket_b, "tickets are unique");
+
+        let out = |ticket: u64, n_tokens: usize| RequestOut {
+            id: ticket,
+            tokens: vec![1; n_tokens],
+            prefill_us: 0.0,
+            decode_us: 0.0,
+            ttft_us: 0.0,
+            steps: n_tokens as u64,
+            rho_hat: 0.0,
+            rejected: false,
+        };
+        // B completes first — with id-keyed routing this used to land on
+        // whichever channel registered first (A)
+        let (o, tx) = table.complete(out(ticket_b, 5)).unwrap();
+        assert_eq!(o.id, 7, "client id restored");
+        tx.send(o).unwrap();
+        let got_b = rx_b.try_recv().expect("B's reply on B's channel");
+        assert_eq!(got_b.tokens.len(), 5);
+        assert!(rx_a.try_recv().is_err(), "A must not receive B's reply");
+
+        let (o, tx) = table.complete(out(ticket_a, 2)).unwrap();
+        assert_eq!(o.id, 7);
+        tx.send(o).unwrap();
+        assert_eq!(rx_a.try_recv().unwrap().tokens.len(), 2);
+        assert_eq!(table.len(), 0, "table drains");
+        // unknown ticket: no panic, no routing
+        assert!(table.complete(out(99, 1)).is_none());
     }
 
     /// A dropped server side surfaces as `Closed`, not `Busy`.

@@ -31,6 +31,18 @@ fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
     (0..n).map(|_| rng.normal()).collect()
 }
 
+/// Long-prompt tests need the full bucket grid; `aot --quick` emits only
+/// the smallest buckets, so those tests self-skip rather than panic
+/// (same contract as missing artifacts).
+fn has_prefill_buckets(mm: &prhs::runtime::ModelManifest, l: usize) -> bool {
+    let ok = mm.bucket_for("prefill", "l_max", l).is_some()
+        && mm.bucket_for("prefill_extend", "l_max", l).is_some();
+    if !ok {
+        eprintln!("skipping: quick artifact set lacks l_max {l} buckets");
+    }
+    ok
+}
+
 /// L1 parity through the whole AOT + PJRT path: the Pallas-kernel
 /// artifact and the pure-XLA artifact must agree on identical inputs.
 #[test]
@@ -307,7 +319,8 @@ fn batched_matches_single() {
 /// Chunked prefill must reach exactly the monolithic prefill's state:
 /// same cache length, same first sampled token, same logits, and the
 /// same greedy decode trajectory afterwards (causal attention makes
-/// prefix K/V independent of later tokens).
+/// prefix K/V independent of later tokens).  Runs on the default KV-in
+/// `prefill_extend` path — the tentpole's parity criterion.
 #[test]
 fn chunked_prefill_matches_monolithic() {
     let Some(mut engine) = engine(SelectorKind::Cis) else { return };
@@ -321,12 +334,18 @@ fn chunked_prefill_matches_monolithic() {
 
     let mut chunked = engine.new_sequence(1, prompt.clone());
     chunked.max_new = 4;
+    let t0_tokens = engine.stats.prefill_tokens_executed;
     let mut chunks = 0;
     while !engine.prefill_chunk(&mut chunked, 96).unwrap() {
         chunks += 1;
     }
     chunks += 1; // final chunk
     assert_eq!(chunks, 4, "⌈300/96⌉ chunks");
+    assert_eq!(
+        engine.stats.prefill_tokens_executed - t0_tokens,
+        300,
+        "KV-in chunked prefill executes exactly L prompt tokens"
+    );
     assert_eq!(chunked.t(), mono.t());
     assert_eq!(chunked.next_token, mono.next_token);
     assert_eq!(chunked.last_logits.len(), mono.last_logits.len());
@@ -354,6 +373,66 @@ fn chunked_prefill_matches_monolithic() {
     engine.prefill(&mut empty).unwrap();
     assert!(!empty.last_logits.is_empty(), "empty prompt skipped prefill");
     engine.release(&mut empty);
+}
+
+/// Tentpole regression: the KV-in extend path and the prefix-recompute
+/// parity oracle reach the same state, while their executed prefill work
+/// is Θ(L) vs Θ(L²/chunk) — pinned through the engine's own counters on
+/// a 32-chunk prompt (issue acceptance criterion).
+#[test]
+fn prefill_extend_work_is_linear_and_matches_oracle() {
+    let Some(dir) = artifacts_dir() else { return };
+    let chunk = 64usize;
+    let l = 16 * chunk; // 1024: 16 chunks keeps the Θ(L²) oracle runnable
+    let prompt: Vec<i32> = {
+        let mut rng = Rng::new(47);
+        (0..l).map(|_| rng.below(8192) as i32).collect()
+    };
+    {
+        let rt = Runtime::new(&dir).unwrap();
+        if !has_prefill_buckets(rt.model("small").unwrap(), l) {
+            return;
+        }
+    }
+    let run = |recompute: bool| {
+        let mut cfg = EngineConfig::default();
+        cfg.artifacts_dir = dir.clone();
+        cfg.selector.kind = SelectorKind::Cis;
+        cfg.prefill_recompute = recompute;
+        let mut engine = Engine::new(cfg).unwrap();
+        let mut seq = engine.new_sequence(0, prompt.clone());
+        seq.max_new = 3;
+        while !engine.prefill_chunk(&mut seq, chunk).unwrap() {}
+        let executed = engine.stats.prefill_tokens_executed;
+        let next = seq.next_token;
+        let logits = seq.last_logits.clone();
+        while !seq.done {
+            let mut g = [&mut seq];
+            engine.decode_step(&mut g).unwrap();
+        }
+        let gen = seq.generated.clone();
+        engine.release(&mut seq);
+        (executed, next, logits, gen)
+    };
+    let (fast_tok, fast_next, fast_logits, fast_gen) = run(false);
+    let (slow_tok, slow_next, slow_logits, slow_gen) = run(true);
+
+    // parity: the oracle path and the extend path agree end-to-end
+    assert_eq!(fast_next, slow_next, "first sampled token");
+    assert_eq!(fast_gen, slow_gen, "decode trajectories");
+    for (a, b) in fast_logits.iter().zip(&slow_logits) {
+        assert!((a - b).abs() < 1e-3, "prefill logits diverge: {a} vs {b}");
+    }
+
+    // work: Θ(L) vs Θ(L²/chunk), matching the engine-free cost model
+    use prhs::model::ChunkLedger;
+    assert_eq!(fast_tok, ChunkLedger::executed_tokens(l, chunk, true));
+    assert_eq!(fast_tok, l as u64);
+    assert_eq!(slow_tok, ChunkLedger::executed_tokens(l, chunk, false));
+    assert!(
+        slow_tok > 4 * fast_tok,
+        "recompute ({slow_tok}) must be super-linear vs extend ({fast_tok})"
+    );
 }
 
 /// The planner pool must not change decode results — only who computes
@@ -494,6 +573,226 @@ fn scheduler_rho_hat_is_decode_only() {
         outs[0].rho_hat
     );
     assert!(outs[0].ttft_us > 0.0);
+}
+
+/// Issue satellite (test coverage): one 32-chunk prompt + a stream of
+/// short prompts under the prefill token budget.  Asserts (a) short
+/// request TTFT stays bounded (they finish while the long prompt is
+/// still prefilling), (b) prefill work inserted between decode steps
+/// never exceeds the budget in any iteration — the deterministic proxy
+/// for "decode step latency does not scale with the number of
+/// prefilling sequences" — and (c) total executed prefill tokens across
+/// chunks equals Σ L (no prefix recompute).
+#[test]
+fn scheduler_prefill_token_budget_bounds_iteration_work() {
+    let Some(dir) = artifacts_dir() else { return };
+    let chunk = 64usize;
+    let budget = 2 * chunk;
+    let mut cfg = EngineConfig::default();
+    cfg.artifacts_dir = dir;
+    cfg.selector.kind = SelectorKind::Cis;
+    cfg.max_batch = 8;
+    cfg.prefill_chunk = chunk;
+    cfg.prefill_token_budget = budget;
+    let engine = Engine::new(cfg).unwrap();
+    let long_len = 32 * chunk; // 2048 = 32 chunks
+    if !has_prefill_buckets(&engine.mm, long_len) {
+        return;
+    }
+    let vocab = engine.mm.vocab_size;
+    let mut sched = prhs::coordinator::Scheduler::new(engine);
+    let mut rng = Rng::new(53);
+    let short_lens = [50usize, 60, 40];
+    sched.submit(prhs::coordinator::RequestIn {
+        id: 0,
+        prompt: (0..long_len).map(|_| rng.below(vocab) as i32).collect(),
+        max_new_tokens: 1,
+    });
+    for (i, &sl) in short_lens.iter().enumerate() {
+        sched.submit(prhs::coordinator::RequestIn {
+            id: 1 + i as u64,
+            prompt: (0..sl).map(|_| rng.below(vocab) as i32).collect(),
+            max_new_tokens: 2,
+        });
+    }
+
+    let mut iters = 0usize;
+    let mut finish_iter = vec![0usize; 4];
+    let mut prev_tokens = 0u64;
+    let mut max_iter_tokens = 0u64;
+    while sched.pending() > 0 {
+        iters += 1;
+        assert!(iters < 200, "scheduler failed to converge");
+        let outs = sched.step().unwrap();
+        let executed = sched.engine.stats.prefill_tokens_executed;
+        max_iter_tokens = max_iter_tokens.max(executed - prev_tokens);
+        prev_tokens = executed;
+        for out in outs {
+            finish_iter[out.id as usize] = iters;
+            assert!(!out.rejected);
+        }
+    }
+    // (b) per-iteration prefill work is bounded by the budget even with
+    // 4 sequences prefilling concurrently
+    assert!(
+        max_iter_tokens <= budget as u64,
+        "iteration executed {max_iter_tokens} > budget {budget}"
+    );
+    // (c) no recompute: total prefill work is exactly Σ prompt lengths
+    assert_eq!(
+        sched.engine.stats.prefill_tokens_executed,
+        (long_len + short_lens.iter().sum::<usize>()) as u64
+    );
+    // (a) every short request completes while the long prompt (≥ 32
+    // budget-shared iterations) is still prefilling
+    let long_finish = finish_iter[0];
+    for (i, &f) in finish_iter.iter().enumerate().skip(1) {
+        assert!(
+            f < long_finish,
+            "short {i} finished at {f}, long at {long_finish}"
+        );
+        assert!(f <= 8, "short {i} TTFT not bounded: iteration {f}");
+    }
+}
+
+/// Issue satellite (KV cap): a burst of requests whose aggregate KV need
+/// exceeds `max_kv_pages` is serialized by admission — everything
+/// completes, the pool never grows past the cap, and a request that can
+/// never fit is rejected instead of wedging the queue.
+#[test]
+fn kv_page_cap_serializes_burst_without_oom() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut cfg = EngineConfig::default();
+    cfg.artifacts_dir = dir;
+    cfg.selector.kind = SelectorKind::Cis;
+    cfg.max_batch = 8;
+    // page_len 128, 4 layers: a 200-token prompt + 4 new ⇒ 2 pages × 4
+    // layers = 8 pages per request; cap 16 ⇒ at most 2 in flight
+    cfg.max_kv_pages = 16;
+    let engine = Engine::new(cfg).unwrap();
+    let vocab = engine.mm.vocab_size;
+    let mut sched = prhs::coordinator::Scheduler::new(engine);
+    let mut rng = Rng::new(59);
+    for id in 0..5u64 {
+        sched.submit(prhs::coordinator::RequestIn {
+            id,
+            prompt: (0..200).map(|_| rng.below(vocab) as i32).collect(),
+            max_new_tokens: 4,
+        });
+    }
+    // this one needs ⌈(3000+4)/128⌉·4 = 96 pages > 16: can never fit
+    sched.submit(prhs::coordinator::RequestIn {
+        id: 99,
+        prompt: (0..3000).map(|_| rng.below(vocab) as i32).collect(),
+        max_new_tokens: 4,
+    });
+    let mut iters = 0;
+    let mut outs = Vec::new();
+    while sched.pending() > 0 {
+        iters += 1;
+        assert!(iters < 300, "scheduler failed to converge");
+        outs.extend(sched.step().unwrap());
+        assert!(
+            sched.engine.pool.allocated_pages() <= 16,
+            "pool grew past the cap: {}",
+            sched.engine.pool.allocated_pages()
+        );
+    }
+    outs.sort_by_key(|o| o.id);
+    assert_eq!(outs.len(), 6);
+    for o in &outs[..5] {
+        assert!(!o.rejected);
+        assert_eq!(o.tokens.len(), 4, "capped run still serves request {}", o.id);
+    }
+    assert!(outs[5].rejected, "over-capacity request is rejected");
+    assert!(outs[5].tokens.is_empty());
+    assert_eq!(sched.engine.pool.in_use_pages(), 0, "all pages released");
+}
+
+/// Admission must charge *worst-case* reservations, not current pool
+/// occupancy: a sequence that will grow across a page boundary during
+/// decode still owns that headroom, so a second request cannot be
+/// admitted into pages the first will need later (over-commit used to
+/// surface as a fatal `alloc` error mid-decode).
+#[test]
+fn kv_admission_reserves_worst_case_pages() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut cfg = EngineConfig::default();
+    cfg.artifacts_dir = dir;
+    cfg.selector.kind = SelectorKind::Cis;
+    cfg.max_batch = 8;
+    // page_len 128, 4 layers.  A: prompt 250 + 10 new = ⌈260/128⌉·4 = 12
+    // pages worst case (but only 8 allocated right after prefill — the
+    // 3rd page per layer is appended mid-decode at token 256).  Cap 12:
+    // B (4 pages) must wait for A, not squat on A's reserved headroom.
+    cfg.max_kv_pages = 12;
+    let engine = Engine::new(cfg).unwrap();
+    let vocab = engine.mm.vocab_size;
+    let mut sched = prhs::coordinator::Scheduler::new(engine);
+    let mut rng = Rng::new(67);
+    sched.submit(prhs::coordinator::RequestIn {
+        id: 0,
+        prompt: (0..250).map(|_| rng.below(vocab) as i32).collect(),
+        max_new_tokens: 10,
+    });
+    sched.submit(prhs::coordinator::RequestIn {
+        id: 1,
+        prompt: (0..120).map(|_| rng.below(vocab) as i32).collect(),
+        max_new_tokens: 8,
+    });
+    let mut iters = 0;
+    let mut outs = Vec::new();
+    while sched.pending() > 0 {
+        iters += 1;
+        assert!(iters < 100, "scheduler failed to converge");
+        outs.extend(sched.step().unwrap());
+        assert!(sched.engine.pool.allocated_pages() <= 12);
+    }
+    outs.sort_by_key(|o| o.id);
+    assert_eq!(outs.len(), 2);
+    assert_eq!(outs[0].tokens.len(), 10, "A decodes past the page boundary");
+    assert_eq!(outs[1].tokens.len(), 8, "B completes after waiting");
+    assert!(outs.iter().all(|o| !o.rejected));
+}
+
+/// Regression (issue satellite 2), end-to-end: two in-flight requests
+/// with the same client id must each get their own reply (routing is by
+/// internal ticket, not the client-supplied id).
+#[test]
+fn server_routes_duplicate_request_ids() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut cfg = EngineConfig::default();
+    cfg.artifacts_dir = dir;
+    cfg.selector.kind = SelectorKind::Cis;
+    cfg.max_batch = 4;
+    let server = prhs::server::Server::spawn_with_config(cfg, 16);
+    let client = server.client();
+    let mut rng = Rng::new(61);
+    let mut prompt = |n: usize| -> Vec<i32> {
+        (0..n).map(|_| rng.below(8192) as i32).collect()
+    };
+    // same id, distinguishable by generation length
+    let rx_a = client
+        .submit(prhs::coordinator::RequestIn {
+            id: 7,
+            prompt: prompt(60),
+            max_new_tokens: 2,
+        })
+        .unwrap();
+    let rx_b = client
+        .submit(prhs::coordinator::RequestIn {
+            id: 7,
+            prompt: prompt(80),
+            max_new_tokens: 5,
+        })
+        .unwrap();
+    let out_a = rx_a.recv().unwrap();
+    let out_b = rx_b.recv().unwrap();
+    assert_eq!(out_a.id, 7);
+    assert_eq!(out_b.id, 7);
+    assert_eq!(out_a.tokens.len(), 2, "first submit got the 2-token reply");
+    assert_eq!(out_b.tokens.len(), 5, "second submit got the 5-token reply");
+    server.shutdown().unwrap();
 }
 
 /// Server round-trip: spawn, serve, shutdown.
