@@ -26,10 +26,15 @@ F32 = jnp.float32
 I32 = jnp.int32
 
 
-def to_hlo_text(lowered) -> str:
+def to_hlo_text(lowered, return_tuple: bool = True) -> str:
+    """``return_tuple=False`` is only valid for single-output stages: the
+    HLO root is then the bare array, so PJRT returns one plain (non-tuple)
+    buffer the rust runtime can keep device-resident and feed straight
+    back as a parameter (`prefill_extend_dev`; recorded as ``untupled``
+    in the manifest)."""
     mlir_mod = lowered.compiler_ir("stablehlo")
     comp = xc._xla.mlir.mlir_module_to_xla_computation(
-        str(mlir_mod), use_tuple_args=False, return_tuple=True
+        str(mlir_mod), use_tuple_args=False, return_tuple=return_tuple
     )
     return comp.as_hlo_text()
 
@@ -47,15 +52,18 @@ class Builder:
         self.out_dir = out_dir
         self.artifacts = []
 
-    def lower(self, name, stage, fn, arg_specs, out_names, params):
+    def lower(self, name, stage, fn, arg_specs, out_names, params,
+              untupled=False):
+        if untupled and len(out_names) != 1:
+            raise ValueError(f"{name}: untupled lowering needs 1 output")
         t0 = time.time()
         lowered = jax.jit(fn).lower(*[s for _, s in arg_specs])
-        text = to_hlo_text(lowered)
+        text = to_hlo_text(lowered, return_tuple=not untupled)
         fname = f"{name}.hlo.txt"
         with open(os.path.join(self.out_dir, fname), "w") as f:
             f.write(text)
         outs = jax.eval_shape(fn, *[s for _, s in arg_specs])
-        self.artifacts.append({
+        entry = {
             "name": name,
             "file": fname,
             "stage": stage,
@@ -64,7 +72,10 @@ class Builder:
             "outputs": [
                 _io_entry(out_names[i], o) for i, o in enumerate(outs)
             ],
-        })
+        }
+        if untupled:
+            entry["untupled"] = True
+        self.artifacts.append(entry)
         print(f"  {name}: {len(text)//1024} KiB, {time.time()-t0:.1f}s",
               flush=True)
 
@@ -207,6 +218,44 @@ def build_model_artifacts(b: Builder, cfg, art: ArtifactConfig,
                  "last_probs"],
                 {"model": cfg.name, "chunk": chunk, "l_max": l_max},
             )
+
+    # Device-resident chunked prefill: same (chunk, l_max) grid, but the
+    # whole cached context rides in one flat loop-carried state array so
+    # chunk i's output buffer is chunk i+1's input with zero host traffic
+    # (DESIGN.md §6a).  Lowered untupled (single output) so the rust
+    # runtime keeps the result as one plain PjRtBuffer.
+    if art.device_stage:
+        for chunk in exts:
+            for l_max in pres:
+                s_len = M.dev_state_len(cfg, l_max)
+
+                def pfd(tokens, start, length, c_sink, ell_s, phi, alpha,
+                        psi, gamma, psaw_on, etf_on, state, *ws,
+                        _c=chunk, _l=l_max):
+                    return M.prefill_extend_dev(
+                        tokens, start, length, c_sink, ell_s, phi, alpha,
+                        psi, gamma, psaw_on, etf_on, state, *ws, cfg=cfg,
+                        chunk=_c, l_max=_l)
+                b.lower(
+                    f"{cfg.name}_prefill_extend_dev_c{chunk}_l{l_max}",
+                    "prefill_extend_dev",
+                    pfd,
+                    [("tokens", spec([chunk], I32)),
+                     ("start", spec([], I32)),
+                     ("length", spec([], I32)),
+                     ("c_sink", spec([], F32)),
+                     ("ell_s", spec([], F32)),
+                     ("phi", spec([], F32)),
+                     ("alpha", spec([], F32)),
+                     ("psi", spec([], F32)),
+                     ("gamma", spec([], F32)),
+                     ("psaw_on", spec([], F32)),
+                     ("etf_on", spec([], F32)),
+                     ("state", spec([s_len]))] + all_w_specs,
+                    ["state"],
+                    {"model": cfg.name, "chunk": chunk, "l_max": l_max},
+                    untupled=True,
+                )
 
 
 def build_op_artifacts(b: Builder, cfg, batches, sels, ctxs,

@@ -59,6 +59,12 @@ class ArtifactConfig:
     - ``extend_chunk_buckets``: chunk widths for the KV-in chunked-prefill
       stage (``prefill_extend``), crossed with ``prefill_buckets`` for the
       context-tile width (DESIGN.md §6a).
+    - ``device_stage``: also lower the device-resident chunked-prefill
+      stage (``prefill_extend_dev``) over the same (chunk, l_max) grid —
+      its loop-carried packed state keeps the prefill context on device
+      across chunks; recorded ``untupled`` in the manifest.  Disable to
+      reproduce a pre-device artifact set (the rust engine then falls
+      back to the host-staged ``prefill_extend`` path).
     """
 
     batch_tiles: List[int] = field(default_factory=lambda: [1, 8, 16])
@@ -66,6 +72,7 @@ class ArtifactConfig:
     ctx_buckets: List[int] = field(default_factory=lambda: [512, 1024, 2048, 4096])
     prefill_buckets: List[int] = field(default_factory=lambda: [512, 1024, 2048])
     extend_chunk_buckets: List[int] = field(default_factory=lambda: [128, 256, 512])
+    device_stage: bool = True
 
 
 # The end-to-end serving model (~8.6M params): small enough that a decode

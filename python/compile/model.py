@@ -334,39 +334,16 @@ def _extend_attn_mask(l_max, chunk, start, length, layer, n_layers, c_sink,
     return jnp.logical_and(jnp.logical_and(causal, valid), visible)
 
 
-def prefill_extend(
+def _extend_layers(
     tokens, start, length, c_sink, ell_s, phi, alpha, psi, gamma,
-    psaw_on, etf_on, k_ctx, v_ctx, *weights,
+    psaw_on, etf_on, k_ctx, v_ctx, weights,
     cfg: ModelConfig, chunk: int, l_max: int,
 ):
-    """KV-in chunked prefill: extend an already-cached context ``[0, start)``
-    by one chunk of prompt tokens.  Executes O(chunk) projections and
-    O(chunk · (start + chunk)) attention instead of re-running the whole
-    prefix, so a chunked prefill of a length-L prompt costs Θ(L) total
-    artifact work rather than Θ(L²/chunk) (DESIGN.md §6a).
-
-    tokens: [chunk] i32 (padded); start/length: scalar i32 — the chunk
-    covers absolute positions ``[start, length)`` with
-    ``new = length - start`` valid rows; k_ctx/v_ctx: [nl, H, l_max, d]
-    post-RoPE cached K/V (the rust cache's `export_dense` layout) with
-    valid prefix ``start``, zero beyond.
-
-    Returns (k_chunk [nl, H, chunk, d], v_chunk, last_hidden [dm],
-             logits [V], last_probs [nl, H, l_max + chunk]) where
-    k/v_chunk are the chunk rows' post-RoPE K/V (GQA-expanded, ETF
-    freezing applied) and last_probs is the last valid token's attention
-    row — slots [0, start) cover the context tile, slots
-    [l_max, l_max + new) the chunk; the host stitches them into one
-    [0, length) row.
-
-    Parity: with ETF off this reproduces monolithic `prefill` exactly —
-    causal masks make prefix K/V independent of later tokens, and PSAW
-    windows depend only on absolute query position.  With ETF on,
-    freezing of chunk rows uses E_ell of the running ``length``, so
-    chunked extension is a per-chunk approximation of monolithic
-    freezing (as the prefix-recompute path already was); the monolithic
-    artifact remains the exact ETF reference.
-    """
+    """Shared chunk-extension core for `prefill_extend` (host-staged
+    context tiles) and `prefill_extend_dev` (device-resident packed
+    state): one chunk of projections + attention against the cached
+    context ``[0, start)``.  Returns the same 5-tuple `prefill_extend`
+    documents."""
     n_layers = float(cfg.n_layers)
     embed_w = weights[0]
     per_layer = 9
@@ -438,6 +415,126 @@ def prefill_extend(
         logits,                       # [V]
         jnp.stack(prob_layers),       # [nl, H, l_max + chunk]
     )
+
+
+def prefill_extend(
+    tokens, start, length, c_sink, ell_s, phi, alpha, psi, gamma,
+    psaw_on, etf_on, k_ctx, v_ctx, *weights,
+    cfg: ModelConfig, chunk: int, l_max: int,
+):
+    """KV-in chunked prefill: extend an already-cached context ``[0, start)``
+    by one chunk of prompt tokens.  Executes O(chunk) projections and
+    O(chunk · (start + chunk)) attention instead of re-running the whole
+    prefix, so a chunked prefill of a length-L prompt costs Θ(L) total
+    artifact work rather than Θ(L²/chunk) (DESIGN.md §6a).
+
+    tokens: [chunk] i32 (padded); start/length: scalar i32 — the chunk
+    covers absolute positions ``[start, length)`` with
+    ``new = length - start`` valid rows; k_ctx/v_ctx: [nl, H, l_max, d]
+    post-RoPE cached K/V (the rust cache's `export_dense` layout) with
+    valid prefix ``start``, zero beyond.
+
+    Returns (k_chunk [nl, H, chunk, d], v_chunk, last_hidden [dm],
+             logits [V], last_probs [nl, H, l_max + chunk]) where
+    k/v_chunk are the chunk rows' post-RoPE K/V (GQA-expanded, ETF
+    freezing applied) and last_probs is the last valid token's attention
+    row — slots [0, start) cover the context tile, slots
+    [l_max, l_max + new) the chunk; the host stitches them into one
+    [0, length) row.
+
+    Parity: with ETF off this reproduces monolithic `prefill` exactly —
+    causal masks make prefix K/V independent of later tokens, and PSAW
+    windows depend only on absolute query position.  With ETF on,
+    freezing of chunk rows uses E_ell of the running ``length``, so
+    chunked extension is a per-chunk approximation of monolithic
+    freezing (as the prefix-recompute path already was); the monolithic
+    artifact remains the exact ETF reference.
+    """
+    return _extend_layers(
+        tokens, start, length, c_sink, ell_s, phi, alpha, psi, gamma,
+        psaw_on, etf_on, k_ctx, v_ctx, weights, cfg=cfg, chunk=chunk,
+        l_max=l_max)
+
+
+def dev_state_len(cfg: ModelConfig, l_max: int) -> int:
+    """Flat f32 length of the `prefill_extend_dev` loop-carried state:
+    K tile + V tile ([nl, H, l_max, d] each) + last_hidden [dm] +
+    logits [V] + last-token probs row [nl, H, l_max] at absolute
+    positions.  The rust engine computes the same layout from the
+    manifest (`Engine::dev_state_len`)."""
+    kv = cfg.n_layers * cfg.n_heads * l_max * cfg.head_dim
+    return 2 * kv + cfg.d_model + cfg.vocab_size \
+        + cfg.n_layers * cfg.n_heads * l_max
+
+
+def prefill_extend_dev(
+    tokens, start, length, c_sink, ell_s, phi, alpha, psi, gamma,
+    psaw_on, etf_on, state, *weights,
+    cfg: ModelConfig, chunk: int, l_max: int,
+):
+    """Device-resident chunked prefill: the whole prefill context lives in
+    one flat loop-carried ``state`` array that never leaves the device
+    between chunks (DESIGN.md §6a).  ``state`` packs, in order,
+    k_ctx [nl, H, l_max, d], v_ctx [nl, H, l_max, d], last_hidden [dm],
+    logits [V], and the last-token probs row [nl, H, l_max] at absolute
+    key positions (see `dev_state_len`).  The chunk's K/V are written
+    into the context tiles in-graph via `dynamic_update_slice`, so the
+    output buffer of chunk *i* feeds directly as the input of chunk
+    *i + 1* with zero host traffic; the host uploads only the chunk's
+    tokens + scalars per call and downloads the state once at prefill
+    completion.
+
+    The single flat output (lowered with ``return_tuple=False`` — see
+    `aot.to_hlo_text` and the manifest's ``untupled`` flag) is what lets
+    the rust runtime keep the result as one plain `PjRtBuffer` and pass
+    it straight back as a parameter: PJRT tuple results cannot be
+    re-fed as separate inputs through the `xla` crate's API.
+
+    Chunk math is `_extend_layers`, identical to `prefill_extend` —
+    including the first chunk (``start == 0`` against an all-zero
+    state), so a whole prefill is N executions of this one artifact.
+    Parity caveats (ETF per-chunk freezing) match `prefill_extend`.
+    """
+    nl, H, d = cfg.n_layers, cfg.n_heads, cfg.head_dim
+    kv = nl * H * l_max * d
+    k_ctx = state[:kv].reshape(nl, H, l_max, d)
+    v_ctx = state[kv:2 * kv].reshape(nl, H, l_max, d)
+    k_chunk, v_chunk, last_hidden, logits, lp = _extend_layers(
+        tokens, start, length, c_sink, ell_s, phi, alpha, psi, gamma,
+        psaw_on, etf_on, k_ctx, v_ctx, weights, cfg=cfg, chunk=chunk,
+        l_max=l_max)
+
+    # Write the chunk into the context tiles at [start, start + chunk).
+    # Pad the position axis by `chunk` first so the dynamic_update_slice
+    # never clamps (a ragged final chunk has start + chunk > l_max; its
+    # invalid tail rows land in the pad and are sliced away — valid rows
+    # always satisfy start + i < length <= l_max).
+    def write(ctx, rows):
+        pad = jnp.zeros(ctx.shape[:2] + (chunk,) + ctx.shape[3:], ctx.dtype)
+        ext = jnp.concatenate([ctx, pad], axis=2)
+        ext = jax.lax.dynamic_update_slice(ext, rows, (0, 0, start, 0))
+        return ext[:, :, :l_max]
+
+    k_new = write(k_ctx, k_chunk)
+    v_new = write(v_ctx, v_chunk)
+
+    # Last-token probs at absolute positions: the context segment of the
+    # row already sits at [0, start) (masked slots are exact zeros); the
+    # chunk segment is scattered to [start, length) the same way.
+    row_ctx = lp[:, :, :l_max]
+    row_chunk = lp[:, :, l_max:]
+    rpad = jnp.zeros((nl, H, chunk), lp.dtype)
+    row_abs = jax.lax.dynamic_update_slice(
+        jnp.concatenate([row_ctx, rpad], axis=2), row_chunk, (0, 0, start),
+    )[:, :, :l_max]
+
+    return (jnp.concatenate([
+        k_new.reshape(-1),
+        v_new.reshape(-1),
+        last_hidden,
+        logits,
+        row_abs.reshape(-1),
+    ]),)
 
 
 # ---------------------------------------------------------------------------

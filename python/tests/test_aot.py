@@ -102,8 +102,42 @@ def test_quick_build_in_tmp(tmp_path):
     )
     assert r.returncode == 0, r.stderr[-2000:]
     m = json.load(open(tmp_path / "manifest.json"))
-    assert m["models"]["small"]["artifacts"]
+    arts = m["models"]["small"]["artifacts"]
+    assert arts
     # HLO text (not proto) interchange
-    any_file = m["models"]["small"]["artifacts"][0]["file"]
-    head = open(tmp_path / any_file).read(200)
+    head = open(tmp_path / arts[0]["file"]).read(200)
     assert "HloModule" in head
+    # the device-resident prefill stage is lowered, flagged untupled
+    # (single flat state output the rust runtime keeps on device), and
+    # its state length matches the L2 layout contract
+    devs = [a for a in arts if a["stage"] == "prefill_extend_dev"]
+    assert devs, "quick set must include prefill_extend_dev"
+    from compile import model as M
+    from compile.config import CONFIGS
+    for a in devs:
+        assert a.get("untupled") is True
+        assert len(a["outputs"]) == 1
+        state_in = next(i for i in a["inputs"] if i["name"] == "state")
+        expect = [M.dev_state_len(CONFIGS["small"], a["params"]["l_max"])]
+        assert state_in["shape"] == expect
+        assert a["outputs"][0]["shape"] == expect
+    # every other stage stays tupled (flag absent)
+    assert all("untupled" not in a
+               for a in arts if a["stage"] != "prefill_extend_dev")
+    # interchange guard: every artifact's HLO text must round-trip
+    # through XLA's HLO text parser (the same parser family behind the
+    # rust loader's HloModuleProto::from_text_file), and the dev stage's
+    # ENTRY root must be a bare array — not a tuple — so PJRT returns
+    # one plain buffer the engine can feed back as the next chunk's
+    # input (the `untupled` contract)
+    from jax._src.lib import xla_client as xc
+    for model in m["models"].values():
+        for a in model["artifacts"]:
+            text = open(tmp_path / a["file"]).read()
+            xc._xla.hlo_module_from_text(text)  # raises on parse failure
+            entry = text.split("ENTRY", 1)[1]
+            root = next(ln for ln in entry.splitlines() if "ROOT" in ln)
+            if a.get("untupled"):
+                assert "tuple(" not in root, a["name"]
+            elif a["stage"] == "prefill_extend_dev":
+                raise AssertionError("dev stage must be untupled")

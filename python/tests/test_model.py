@@ -402,6 +402,95 @@ def test_prefill_extend_etf_freezes_chunk_rows(tiny_weights):
     assert not np.allclose(ke[1][:, hi:], ke[0][:, hi:])
 
 
+# --- device-resident chunked prefill (prefill_extend_dev) --------------------
+
+def _run_chunked_dev(cfg, w, toks, L, CH, LM, scalars):
+    """Drive prefill_extend_dev the way the rust engine does: every chunk
+    (including the first, against an all-zero state) threads the flat
+    packed state through the artifact; the state is only opened at the
+    end.  Returns (K [nl,H,L,d], V, logits, last_row [nl,H,L])."""
+    allw = [w[n] for n in W.all_weight_names(cfg)]
+    nl, H, d = cfg.n_layers, cfg.n_heads, cfg.head_dim
+    state = np.zeros(M.dev_state_len(cfg, LM), np.float32)
+    done = 0
+    while done < L:
+        start, end = done, min(done + CH, L)
+        tok = np.zeros(CH, np.int32)
+        tok[:end - start] = toks[start:end]
+        (state,) = M.prefill_extend_dev(
+            tok, np.int32(start), np.int32(end), *scalars, state, *allw,
+            cfg=cfg, chunk=CH, l_max=LM)
+        state = np.asarray(state)
+        done = end
+    kv = nl * H * LM * d
+    K = state[:kv].reshape(nl, H, LM, d)[:, :, :L]
+    V = state[kv:2 * kv].reshape(nl, H, LM, d)[:, :, :L]
+    lg = state[2 * kv + cfg.d_model: 2 * kv + cfg.d_model + cfg.vocab_size]
+    row = state[2 * kv + cfg.d_model + cfg.vocab_size:]
+    row = row.reshape(nl, H, LM)[:, :, :L]
+    return K, V, lg, row
+
+
+def test_prefill_extend_dev_matches_monolithic(tiny_weights):
+    """Tentpole parity: the device-resident packed-state path (ragged
+    chunks, first chunk included) reproduces monolithic prefill — K/V,
+    logits, and the absolute-position last-token attention row."""
+    cfg, w = TINY, tiny_weights
+    allw = [w[n] for n in W.all_weight_names(cfg)]
+    L, CH, LM = 10, 4, 16
+    toks = (np.arange(L) * 5 % cfg.vocab_size).astype(np.int32)
+    scalars = (0.0, 99.0, 0.7, 1.0, 0.5, 1.0, 0.0, 0.0)
+    Km, Vm, _, lgm, lpm = M.prefill(
+        toks, np.int32(L), *scalars, *allw, cfg=cfg, l_max=L)
+    K, V, lg, row = _run_chunked_dev(cfg, w, toks, L, CH, LM, scalars)
+    np.testing.assert_allclose(K, np.asarray(Km), atol=1e-5)
+    np.testing.assert_allclose(V, np.asarray(Vm), atol=1e-5)
+    np.testing.assert_allclose(lg, np.asarray(lgm), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(row, np.asarray(lpm), atol=1e-5)
+
+
+def test_prefill_extend_dev_matches_host_staged_path(tiny_weights):
+    """The device-resident path and the host-staged extend path share one
+    chunk core (`_extend_layers`), so per-chunk outputs must agree to
+    float tolerance even with PSAW pruning on — the rust integration
+    test's oracle relationship, proven at the L2 layer."""
+    cfg, w = TINY, tiny_weights
+    L, CH, LM = 12, 4, 16
+    toks = (np.arange(L) * 3 % cfg.vocab_size).astype(np.int32)
+    scalars = (2.0, 0.0, 0.3, 2.0, 0.5, 1.0, 1.0, 0.0)
+    Kh, Vh, lgh, rowh = _run_chunked_extend(cfg, w, toks, L, CH, LM, scalars)
+    Kd, Vd, lgd, rowd = _run_chunked_dev(cfg, w, toks, L, CH, LM, scalars)
+    np.testing.assert_allclose(Kd, Kh, atol=1e-5)
+    np.testing.assert_allclose(Vd, Vh, atol=1e-5)
+    np.testing.assert_allclose(lgd, lgh, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(rowd, rowh, atol=1e-5)
+
+
+def test_prefill_extend_dev_gqa_parity():
+    """GQA head expansion through the packed-state path matches monolithic
+    prefill (the state tile holds GQA-expanded [nl, H, l_max, d] rows,
+    exactly like the rust cache)."""
+    cfg = GQA
+    w = W.init_weights(cfg)
+    allw = [w[n] for n in W.all_weight_names(cfg)]
+    L, CH, LM = 8, 4, 8
+    toks = (np.arange(L) * 7 % cfg.vocab_size).astype(np.int32)
+    scalars = (0.0, 99.0, 0.7, 1.0, 0.5, 1.0, 0.0, 0.0)
+    Km, Vm, _, lgm, _ = M.prefill(
+        toks, np.int32(L), *scalars, *allw, cfg=cfg, l_max=L)
+    K, V, lg, _ = _run_chunked_dev(cfg, w, toks, L, CH, LM, scalars)
+    np.testing.assert_allclose(K, np.asarray(Km), atol=1e-5)
+    np.testing.assert_allclose(V, np.asarray(Vm), atol=1e-5)
+    np.testing.assert_allclose(lg, np.asarray(lgm), atol=1e-4, rtol=1e-4)
+
+
+def test_dev_state_len_layout():
+    assert M.dev_state_len(TINY, 16) == (
+        2 * TINY.n_layers * TINY.n_heads * 16 * TINY.head_dim
+        + TINY.d_model + TINY.vocab_size
+        + TINY.n_layers * TINY.n_heads * 16)
+
+
 def test_configs_registered():
     assert "small" in CONFIGS and "bench" in CONFIGS
     assert CONFIGS["small"].head_dim * CONFIGS["small"].n_heads \

@@ -7,7 +7,7 @@ use prhs::config::{SelectorConfig, SelectorKind};
 use prhs::kvcache::{PagePool, SeqKvCache};
 use prhs::model::{proj, Sequence};
 use prhs::selector::{self, PlanKind, SelectorCtx};
-use prhs::util::bench::{Bencher, Report};
+use prhs::util::bench::{arg_value, Bencher, Report};
 use prhs::util::fx;
 use prhs::util::json::Json;
 use prhs::util::pool::for_each_unit;
@@ -197,5 +197,12 @@ fn main() -> anyhow::Result<()> {
     }
 
     report.save("results", "micro_hotpath")?;
+    if let Some(path) = arg_value("--json") {
+        // machine-readable counters for the CI perf artifact
+        // (BENCH_ci.json): the "batched plan+stage" rows are the plan-µs
+        // signal the bench trajectory tracks
+        std::fs::write(&path, report.to_json())?;
+        println!("→ {path}");
+    }
     Ok(())
 }

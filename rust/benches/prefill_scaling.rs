@@ -1,20 +1,34 @@
-//! Chunked-prefill scaling bench (issue tentpole regression): total
-//! prefill work must scale with L, not with the sum of prefixes.
+//! Chunked-prefill scaling bench (tentpole regressions): total prefill
+//! *compute* must scale with L, not with the sum of prefixes, and with
+//! the device-resident KV path the *host bytes staged* per chunk must be
+//! O(chunk), not ∝ start.
 //!
-//! For each prompt length L the bench runs a full chunked prefill on the
-//! KV-in `prefill_extend` path and on the prefix-recompute parity-oracle
-//! path (`EngineConfig::prefill_recompute`), reporting wall time and the
-//! engine's executed-prompt-token counter.  The counter column is the
-//! regression signal: Θ(L) for KV-in, Θ(L²/chunk) for recompute
-//! (`ChunkLedger::executed_tokens`, DESIGN.md §6a).  CI compiles this via
-//! `cargo bench --no-run`; running it requires `make artifacts`.
+//! For each prompt length L the bench runs a full chunked prefill on
+//! three paths — device-resident (`prefill_extend_dev`, the default),
+//! host-staged KV-in (`device_prefill_kv = false`), and the
+//! prefix-recompute parity oracle (`EngineConfig::prefill_recompute`) —
+//! reporting wall time, the engine's executed-prompt-token counter, and
+//! the `StepStats::prefill_host_bytes_staged` counter.  Executed tokens
+//! are the Θ(L)-vs-Θ(L²/chunk) compute signal; host bytes are the
+//! bandwidth-collapse signal (DESIGN.md §6a).  CI compiles this via
+//! `cargo bench --no-run` and runs it in the bench-smoke job with
+//! `--quick --json results/prefill_scaling.json` (the `BENCH_ci.json`
+//! artifact); running it requires `make artifacts`.
 
 use prhs::config::{EngineConfig, SelectorKind};
 use prhs::model::{ChunkLedger, Engine};
 use prhs::runtime::{Runtime, WeightStore};
+use prhs::util::bench::arg_value;
 use prhs::util::rng::Rng;
 use std::sync::Arc;
 use std::time::Instant;
+
+#[derive(Clone, Copy)]
+struct PathRun {
+    ms: f64,
+    tokens: u64,
+    host_bytes: u64,
+}
 
 fn main() -> anyhow::Result<()> {
     let dir = std::env::var("PRHS_ARTIFACTS")
@@ -24,6 +38,7 @@ fn main() -> anyhow::Result<()> {
         return Ok(());
     }
     let quick = std::env::args().any(|a| a == "--quick");
+    let json_path = arg_value("--json");
     let chunk = 128usize;
     let lens: &[usize] = if quick { &[256, 512] } else { &[512, 1024, 2048] };
 
@@ -33,16 +48,19 @@ fn main() -> anyhow::Result<()> {
     let rt = Arc::new(Runtime::new(&base.artifacts_dir)?);
     let mm = rt.model("small")?.clone();
     let ws = Arc::new(WeightStore::load(&rt, &mm)?);
+    let has_dev = !mm.buckets("prefill_extend_dev", "chunk").is_empty();
 
     println!("== chunked-prefill scaling (chunk {chunk}) ==");
     let mut md = String::from(
-        "## Chunked-prefill scaling — KV-in extend vs prefix recompute\n\n\
-         | L | extend ms | extend tokens | recompute ms | recompute tokens | token ratio |\n\
-         |---|---|---|---|---|---|\n",
+        "## Chunked-prefill scaling — device-resident vs host-staged vs recompute\n\n\
+         | L | dev ms | dev KB staged | host ms | host KB staged | recompute ms | recompute tokens |\n\
+         |---|---|---|---|---|---|---|\n",
     );
+    let mut json_rows: Vec<String> = Vec::new();
     for &l in lens {
-        let run = |recompute: bool| -> anyhow::Result<(f64, u64)> {
+        let run = |device: bool, recompute: bool| -> anyhow::Result<PathRun> {
             let mut cfg = base.clone();
+            cfg.device_prefill_kv = device;
             cfg.prefill_recompute = recompute;
             let mut engine = Engine::with_shared(rt.clone(), ws.clone(), cfg);
             let mut rng = Rng::new(0x5CA1E);
@@ -53,37 +71,83 @@ fn main() -> anyhow::Result<()> {
             let t0 = Instant::now();
             while !engine.prefill_chunk(&mut seq, chunk)? {}
             let ms = t0.elapsed().as_secs_f64() * 1e3;
-            let executed = engine.stats.prefill_tokens_executed;
+            let out = PathRun {
+                ms,
+                tokens: engine.stats.prefill_tokens_executed,
+                host_bytes: engine.stats.prefill_host_bytes_staged,
+            };
             engine.release(&mut seq);
-            Ok((ms, executed))
+            Ok(out)
         };
-        let (fast_ms, fast_tok) = run(false)?;
-        let (slow_ms, slow_tok) = run(true)?;
+        let dev = if has_dev { Some(run(true, false)?) } else { None };
+        let host = run(false, false)?;
+        let slow = run(false, true)?;
         assert_eq!(
-            fast_tok,
+            host.tokens,
             ChunkLedger::executed_tokens(l, chunk, true),
             "KV-in counter must be Θ(L)"
         );
         assert_eq!(
-            slow_tok,
+            slow.tokens,
             ChunkLedger::executed_tokens(l, chunk, false),
             "recompute counter must be Θ(L²/chunk)"
         );
-        let ratio = slow_tok as f64 / fast_tok as f64;
+        if let Some(d) = dev {
+            assert_eq!(d.tokens, host.tokens, "device path is Θ(L) too");
+            assert!(
+                d.host_bytes < host.host_bytes,
+                "device path must stage fewer host bytes"
+            );
+        }
+        let (dev_ms, dev_kb) = dev
+            .map(|d| (d.ms, d.host_bytes / 1024))
+            .unwrap_or((f64::NAN, 0));
         println!(
-            "  L {l:5}: extend {fast_ms:8.1} ms / {fast_tok:6} tok   \
-             recompute {slow_ms:8.1} ms / {slow_tok:6} tok   ({ratio:.2}x tokens)"
+            "  L {l:5}: dev {dev_ms:8.1} ms / {dev_kb:7} KB   \
+             host {:8.1} ms / {:7} KB   recompute {:8.1} ms / {:6} tok",
+            host.ms,
+            host.host_bytes / 1024,
+            slow.ms,
+            slow.tokens,
         );
         md.push_str(&format!(
-            "| {l} | {fast_ms:.1} | {fast_tok} | {slow_ms:.1} | {slow_tok} | {ratio:.2} |\n"
+            "| {l} | {dev_ms:.1} | {dev_kb} | {:.1} | {} | {:.1} | {} |\n",
+            host.ms,
+            host.host_bytes / 1024,
+            slow.ms,
+            slow.tokens
+        ));
+        json_rows.push(format!(
+            "{{\"l\":{l},\"chunk\":{chunk},\
+             \"dev_ms\":{:.3},\"dev_tokens\":{},\"dev_host_bytes\":{},\
+             \"host_ms\":{:.3},\"host_tokens\":{},\"host_host_bytes\":{},\
+             \"recompute_ms\":{:.3},\"recompute_tokens\":{}}}",
+            dev.map(|d| d.ms).unwrap_or(-1.0),
+            dev.map(|d| d.tokens).unwrap_or(0),
+            dev.map(|d| d.host_bytes).unwrap_or(0),
+            host.ms,
+            host.tokens,
+            host.host_bytes,
+            slow.ms,
+            slow.tokens
         ));
     }
     md.push_str(
-        "\nExtend tokens grow linearly in L; recompute tokens grow with the \
-         sum of prefixes (the quadratic cost the KV-in artifact removes).\n",
+        "\nDev/host tokens grow linearly in L (recompute grows with the sum \
+         of prefixes); dev host-bytes grow O(chunk) per chunk + one state \
+         download, while the host-staged path re-ships the context tile \
+         every chunk (DESIGN.md §6a).\n",
     );
     std::fs::create_dir_all("results")?;
-    std::fs::write("results/prefill_scaling.md", md)?;
+    std::fs::write("results/prefill_scaling.md", &md)?;
     println!("→ results/prefill_scaling.md");
+    if let Some(path) = json_path {
+        let json = format!(
+            "{{\"bench\":\"prefill_scaling\",\"chunk\":{chunk},\"rows\":[{}]}}\n",
+            json_rows.join(",")
+        );
+        std::fs::write(&path, json)?;
+        println!("→ {path}");
+    }
     Ok(())
 }

@@ -221,6 +221,16 @@ pub struct EngineConfig {
     /// and as a fallback for artifact sets without `prefill_extend`
     /// (DESIGN.md §6a).
     pub prefill_recompute: bool,
+    /// Keep the chunked-prefill context device-resident: chunks run the
+    /// `prefill_extend_dev` artifact whose packed K/V state is a
+    /// loop-carried device buffer, so per-chunk host traffic is O(chunk)
+    /// (tokens + scalars) instead of ∝ start (the host-staged context
+    /// tile), and the KV is downloaded once at prefill completion.  On
+    /// by default — the engine falls back to the host-staged
+    /// `prefill_extend` path when the artifact set predates the device
+    /// stage, when no l_max bucket covers the prompt, or when
+    /// `prefill_recompute` forces the oracle path (DESIGN.md §6a).
+    pub device_prefill_kv: bool,
     /// Max prompt tokens the scheduler's prefill stage executes per
     /// iteration across all prefilling sequences (0 = unlimited).  Bounds
     /// the prefill work inserted between decode steps, so decode latency
@@ -254,6 +264,7 @@ impl Default for EngineConfig {
             max_batch: 16,
             prefill_chunk: 0,
             prefill_recompute: false,
+            device_prefill_kv: true,
             prefill_token_budget: 0,
             max_kv_pages: 0,
             planner_threads: 0,
@@ -284,6 +295,9 @@ impl EngineConfig {
         }
         if let Some(b) = j.get("prefill_recompute").and_then(Json::as_bool) {
             cfg.prefill_recompute = b;
+        }
+        if let Some(b) = j.get("device_prefill_kv").and_then(Json::as_bool) {
+            cfg.device_prefill_kv = b;
         }
         if let Some(n) = j.get("prefill_token_budget").and_then(Json::as_usize)
         {
@@ -390,12 +404,17 @@ mod tests {
         assert_eq!(c.prefill_chunk, 0, "chunking is opt-in");
         assert_eq!(c.planner_threads, 0, "planner pool is opt-in");
         assert!(!c.prefill_recompute, "KV-in extend path is the default");
+        assert!(
+            c.device_prefill_kv,
+            "device-resident prefill KV is the default (the engine falls \
+             back to host staging when the artifact set predates it)"
+        );
         assert_eq!(c.prefill_token_budget, 0, "budget is opt-in");
         assert_eq!(c.max_kv_pages, 0, "KV cap is opt-in");
         let j = Json::parse(
             r#"{"prefill_chunk":256,"planner_threads":4,"max_batch":32,
                 "prefill_recompute":true,"prefill_token_budget":512,
-                "max_kv_pages":1024}"#,
+                "max_kv_pages":1024,"device_prefill_kv":false}"#,
         )
         .unwrap();
         let c = EngineConfig::from_json(&j).unwrap();
@@ -403,6 +422,7 @@ mod tests {
         assert_eq!(c.planner_threads, 4);
         assert_eq!(c.max_batch, 32);
         assert!(c.prefill_recompute);
+        assert!(!c.device_prefill_kv);
         assert_eq!(c.prefill_token_budget, 512);
         assert_eq!(c.max_kv_pages, 1024);
     }

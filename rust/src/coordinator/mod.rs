@@ -326,6 +326,11 @@ impl Scheduler {
                 finished.push(i);
             }
         }
+        // Mirror the engine's prefill staging-bandwidth counter so the
+        // bandwidth collapse of the device-resident path is observable
+        // at the serving-metrics level (DESIGN.md §6a).
+        self.metrics.prefill_host_bytes =
+            self.engine.stats.prefill_host_bytes_staged;
         // remove completed prefills (descending indices keep swap_remove
         // from disturbing pending removals)
         finished.sort_unstable_by_key(|&i| std::cmp::Reverse(i));

@@ -229,6 +229,34 @@ impl SeqKvCache {
         self.load_rows(pool, k, v, l_max, start, end.saturating_sub(start))
     }
 
+    /// Bulk-load a whole prefill from the device-resident path's packed
+    /// state (DESIGN.md §6a): `kv` is the state's leading
+    /// `[2, n_layers, H, l_max, d]` segment — the K tile followed by the
+    /// V tile in `export_dense` layout — downloaded ONCE at prefill
+    /// completion (`Engine::prefill_chunk_dev`), with `length` valid
+    /// positions.  The cache must be empty (this path never loads
+    /// per-chunk).
+    pub fn load_prefill_all(
+        &mut self,
+        pool: &mut PagePool,
+        kv: &[f32],
+        l_max: usize,
+        length: usize,
+    ) -> Result<()> {
+        let half = self.n_layers * pool.n_heads * l_max * pool.head_dim;
+        if kv.len() != 2 * half {
+            return Err(anyhow!("load_prefill_all: bad packed kv size"));
+        }
+        if !self.is_empty() {
+            return Err(anyhow!(
+                "load_prefill_all: cache already holds {} positions",
+                self.len
+            ));
+        }
+        let (k, v) = kv.split_at(half);
+        self.load_prefill_range(pool, k, v, l_max, 0, length)
+    }
+
     /// Append `count` positions of a KV-in chunk-prefill result
     /// (`prefill_extend`, DESIGN.md §6a): `k`/`v` are
     /// `[n_layers, H, chunk_w, d]` *chunk-relative* tiles — tile row 0 is
@@ -796,6 +824,43 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn load_prefill_all_matches_split_load() {
+        // The packed [2, nl, H, l_max, d] bulk load (device-resident
+        // prefill completion) must equal loading the K/V halves through
+        // load_prefill, and must reject bad sizes / non-empty caches.
+        let (h, d, l_max, len) = (2usize, 4usize, 8usize, 5usize);
+        let mut rng = Rng::new(10);
+        let half = 2 * h * l_max * d;
+        let kv: Vec<f32> = (0..2 * half).map(|_| rng.normal()).collect();
+
+        let (mut pool_a, mut a) = mk(2);
+        a.load_prefill(&mut pool_a, &kv[..half], &kv[half..], l_max, len)
+            .unwrap();
+        let (mut pool_b, mut b) = mk(2);
+        b.load_prefill_all(&mut pool_b, &kv, l_max, len).unwrap();
+        assert_eq!(b.len(), len);
+        for layer in 0..2 {
+            for head in 0..h {
+                for pos in 0..len {
+                    assert_eq!(
+                        a.key(&pool_a, layer, head, pos),
+                        b.key(&pool_b, layer, head, pos)
+                    );
+                    assert_eq!(
+                        a.value(&pool_a, layer, head, pos),
+                        b.value(&pool_b, layer, head, pos)
+                    );
+                }
+            }
+        }
+        // bad packed size and a non-empty cache are rejected
+        assert!(b.load_prefill_all(&mut pool_b, &kv, l_max, len).is_err());
+        let (mut pool_c, mut c) = mk(2);
+        assert!(c.load_prefill_all(&mut pool_c, &kv[1..], l_max, len).is_err());
+        assert_eq!(c.len(), 0);
     }
 
     #[test]

@@ -73,7 +73,7 @@ fn info(rest: &[String]) -> Result<()> {
             mm.n_layers, mm.d_model, mm.n_heads, mm.head_dim, mm.vocab_size
         );
         println!("  {} artifacts, {} weights", mm.artifacts.len(), mm.weights.len());
-        for stage in ["layer_step", "layer_step_dense", "prefill", "prefill_extend", "attn_tsa_xla", "attn_tsa_pallas", "attn_dense"] {
+        for stage in ["layer_step", "layer_step_dense", "prefill", "prefill_extend", "prefill_extend_dev", "attn_tsa_xla", "attn_tsa_pallas", "attn_dense"] {
             let n = mm.artifacts.iter().filter(|a| a.stage == stage).count();
             if n > 0 {
                 println!("    {stage}: {n}");
@@ -119,6 +119,7 @@ fn serve(rest: &[String]) -> Result<()> {
         .flag("prefill-budget", "0", "max prefill tokens executed per scheduler iteration (0 = unlimited)")
         .flag("max-kv-pages", "0", "KV page-pool cap; requests wait for pages instead of OOMing (0 = unbounded)")
         .switch("prefill-recompute", "use the prefix-recompute chunked-prefill path (parity oracle)")
+        .switch("host-prefill-kv", "stage the prefill context through the host each chunk (disable the device-resident prefill KV path)")
         .flag("planner-threads", "0", "host-side planner pool width (0/1 = serial)");
     let args = cli.parse(rest).map_err(anyhow::Error::msg)?;
     let mut cfg = EngineConfig::default();
@@ -133,6 +134,7 @@ fn serve(rest: &[String]) -> Result<()> {
     cfg.prefill_token_budget = args.get_usize("prefill-budget");
     cfg.max_kv_pages = args.get_usize("max-kv-pages");
     cfg.prefill_recompute = args.get_bool("prefill-recompute");
+    cfg.device_prefill_kv = !args.get_bool("host-prefill-kv");
     cfg.planner_threads = args.get_usize("planner-threads");
     // vocab comes from the manifest (read it without building an engine)
     let vocab = prhs::runtime::Manifest::load(args.get("artifacts"))?

@@ -105,6 +105,11 @@ pub struct RunMetrics {
     /// sizes summed; bounded per iteration by
     /// `EngineConfig::prefill_token_budget`).
     pub prefill_tokens: u64,
+    /// Host↔device bytes staged for prefill artifacts, mirrored from
+    /// `StepStats::prefill_host_bytes_staged` — O(chunk) per chunk with
+    /// `EngineConfig::device_prefill_kv`, ∝ context tile per chunk on
+    /// the host-staged paths (DESIGN.md §6a).
+    pub prefill_host_bytes: u64,
     pub wall_s: f64,
     /// Decode-phase head-level retrievals only (prefill-side scoring is
     /// excluded from ρ̂ by definition — paper Sec. III, DESIGN.md §4).

@@ -6,5 +6,6 @@ pub mod engine;
 pub mod proj;
 
 pub use engine::{
-    ChunkLedger, Engine, PlanScratch, Probe, ProbeRow, Sequence, StepStats,
+    prefill_staging, ChunkLedger, Engine, PlanScratch, Probe, ProbeRow,
+    Sequence, StepStats,
 };

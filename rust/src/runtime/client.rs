@@ -41,6 +41,34 @@ pub enum Input<'a> {
     ScalarI32(i32),
 }
 
+/// One output of `execute_keep`: either converted to host memory or kept
+/// as a device-resident buffer that can be fed straight back as an
+/// `Input::Buffer` (the device-resident prefill KV path, DESIGN.md §6a).
+pub enum Output {
+    Host(HostTensor),
+    Device(PjRtBuffer),
+}
+
+impl Output {
+    pub fn into_device(self) -> Option<PjRtBuffer> {
+        match self {
+            Output::Device(b) => Some(b),
+            Output::Host(_) => None,
+        }
+    }
+}
+
+/// Per-output disposition for `Runtime::execute_outputs`.
+#[derive(Clone, Copy, PartialEq)]
+enum OutMode {
+    /// Convert to a host tensor.
+    Host,
+    /// Skip the device→host conversion (empty `HostTensor`).
+    Skip,
+    /// Keep the device buffer.
+    Device,
+}
+
 /// Compiled-executable registry with lazy compile + cache.
 pub struct Runtime {
     pub client: PjRtClient,
@@ -105,8 +133,10 @@ impl Runtime {
     /// Execute an artifact with mixed inputs, returning each output as an
     /// f32 host tensor (i32/bool outputs are not produced by our stages).
     ///
-    /// All executables are lowered with `return_tuple=True`, so the single
-    /// result buffer is a tuple literal that we decompose.
+    /// Most executables are lowered with `return_tuple=True`, so the
+    /// single result buffer is a tuple literal that we decompose;
+    /// `untupled` artifacts (single-output, `prefill_extend_dev`) come
+    /// back as one bare array buffer.
     pub fn execute(
         &self,
         art: &ArtifactSpec,
@@ -115,17 +145,23 @@ impl Runtime {
         self.execute_select(art, inputs, None)
     }
 
-    /// Like `execute`, but when `wanted` is given, outputs whose flag is
-    /// false are returned as empty HostTensors without the device→host
-    /// literal conversion — the perf lever for outputs the coordinator
-    /// doesn't consume on this step (e.g. the probs row when no selector
-    /// observes it; EXPERIMENTS.md §Perf).
-    pub fn execute_select(
+    /// Download a device buffer to a host f32 vector (one literal
+    /// conversion; used once per prefill by the device-resident KV path).
+    pub fn download_f32(&self, buf: &PjRtBuffer) -> Result<Vec<f32>> {
+        let lit = buf.to_literal_sync().map_err(|e| anyhow!("{e:?}"))?;
+        lit.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))
+    }
+
+    /// Stage inputs, execute, and return the raw per-output device
+    /// buffers of device 0.  For tupled artifacts (the default lowering)
+    /// this is ONE buffer holding the whole result tuple; for `untupled`
+    /// artifacts (single-output stages lowered with `return_tuple=False`)
+    /// it is the bare array buffer.
+    fn execute_buffers(
         &self,
         art: &ArtifactSpec,
         inputs: &[Input<'_>],
-        wanted: Option<&[bool]>,
-    ) -> Result<Vec<HostTensor>> {
+    ) -> Result<Vec<PjRtBuffer>> {
         if inputs.len() != art.inputs.len() {
             return Err(anyhow!(
                 "{}: got {} inputs, artifact declares {}",
@@ -165,26 +201,146 @@ impl Runtime {
                 _ => o.as_ref().unwrap(),
             })
             .collect();
-        let result = exe
+        let mut result = exe
             .execute_b(&refs)
             .map_err(|e| anyhow!("{e:?}"))
             .with_context(|| format!("executing {}", art.name))?;
-        let tuple = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("{e:?}"))?;
-        let parts: Vec<Literal> =
-            tuple.to_tuple().map_err(|e| anyhow!("{e:?}"))?;
-        let mut outs = Vec::with_capacity(parts.len());
-        for (i, lit) in parts.into_iter().enumerate() {
-            let spec = &art.outputs[i];
-            if wanted.map(|w| !w[i]).unwrap_or(false) {
-                outs.push(HostTensor { shape: spec.shape.clone(), data: Vec::new() });
-                continue;
+        if result.is_empty() {
+            return Err(anyhow!("{}: no result buffers", art.name));
+        }
+        Ok(result.swap_remove(0))
+    }
+
+    fn literal_to_host(lit: Literal, spec_shape: &[usize]) -> Result<HostTensor> {
+        let data = lit.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        Ok(HostTensor { shape: spec_shape.to_vec(), data })
+    }
+
+    /// Shared output decomposition for `execute_select` / `execute_keep`:
+    /// execute, then realize each declared output according to `mode(i)`.
+    ///
+    /// Per-output result buffers exist for `untupled` artifacts always
+    /// and, defensively, on any runtime that destructures multi-output
+    /// tuple results one buffer per output; otherwise the single tuple
+    /// buffer is converted to a literal and decomposed — in which case
+    /// `OutMode::Device` is an error, because PJRT tuple buffers cannot
+    /// be split back into input-feedable buffers through the `xla`
+    /// crate's API (the reason `prefill_extend_dev` is lowered
+    /// untupled).
+    fn execute_outputs(
+        &self,
+        art: &ArtifactSpec,
+        inputs: &[Input<'_>],
+        mode: impl Fn(usize) -> OutMode,
+    ) -> Result<Vec<Output>> {
+        let bufs = self.execute_buffers(art, inputs)?;
+        let n_out = art.outputs.len();
+        let per_output =
+            art.untupled || (n_out > 1 && bufs.len() == n_out);
+        let any_device = (0..n_out).any(|i| mode(i) == OutMode::Device);
+        if per_output && bufs.len() != n_out {
+            return Err(anyhow!(
+                "{}: {} result buffers for {} declared outputs",
+                art.name,
+                bufs.len(),
+                n_out
+            ));
+        }
+        if !per_output && any_device {
+            return Err(anyhow!(
+                "{}: device-resident outputs require an untupled \
+                 artifact (re-run the AOT pipeline)",
+                art.name
+            ));
+        }
+        let mut outs = Vec::with_capacity(n_out);
+        if per_output {
+            for (i, buf) in bufs.into_iter().enumerate() {
+                outs.push(match mode(i) {
+                    OutMode::Device => Output::Device(buf),
+                    OutMode::Skip => Output::Host(HostTensor {
+                        shape: art.outputs[i].shape.clone(),
+                        data: Vec::new(),
+                    }),
+                    OutMode::Host => {
+                        let lit = buf
+                            .to_literal_sync()
+                            .map_err(|e| anyhow!("{e:?}"))?;
+                        Output::Host(Self::literal_to_host(
+                            lit,
+                            &art.outputs[i].shape,
+                        )?)
+                    }
+                });
             }
-            let data = lit.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
-            outs.push(HostTensor { shape: spec.shape.clone(), data });
+        } else {
+            let tuple = bufs[0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("{e:?}"))?;
+            let parts: Vec<Literal> =
+                tuple.to_tuple().map_err(|e| anyhow!("{e:?}"))?;
+            for (i, lit) in parts.into_iter().enumerate() {
+                outs.push(match mode(i) {
+                    OutMode::Skip => Output::Host(HostTensor {
+                        shape: art.outputs[i].shape.clone(),
+                        data: Vec::new(),
+                    }),
+                    _ => Output::Host(Self::literal_to_host(
+                        lit,
+                        &art.outputs[i].shape,
+                    )?),
+                });
+            }
         }
         Ok(outs)
+    }
+
+    /// Like `execute`, but when `wanted` is given, outputs whose flag is
+    /// false are returned as empty HostTensors without the device→host
+    /// literal conversion — the perf lever for outputs the coordinator
+    /// doesn't consume on this step (e.g. the probs row when no selector
+    /// observes it; EXPERIMENTS.md §Perf).
+    pub fn execute_select(
+        &self,
+        art: &ArtifactSpec,
+        inputs: &[Input<'_>],
+        wanted: Option<&[bool]>,
+    ) -> Result<Vec<HostTensor>> {
+        let outs = self.execute_outputs(art, inputs, |i| {
+            if wanted.map(|w| !w[i]).unwrap_or(false) {
+                OutMode::Skip
+            } else {
+                OutMode::Host
+            }
+        })?;
+        Ok(outs
+            .into_iter()
+            .map(|o| match o {
+                Output::Host(t) => t,
+                Output::Device(_) => unreachable!("no Device mode requested"),
+            })
+            .collect())
+    }
+
+    /// Like `execute_select`, but outputs whose `keep_device` flag is set
+    /// stay on device as `PjRtBuffer`s instead of being converted to host
+    /// literals — the zero-host-traffic lever that lets chunk *i*'s
+    /// output feed chunk *i + 1* directly (device-resident prefill KV,
+    /// DESIGN.md §6a).  Requires an `untupled` artifact for any
+    /// device-kept output (see `execute_outputs`).
+    pub fn execute_keep(
+        &self,
+        art: &ArtifactSpec,
+        inputs: &[Input<'_>],
+        keep_device: &[bool],
+    ) -> Result<Vec<Output>> {
+        self.execute_outputs(art, inputs, |i| {
+            if keep_device.get(i).copied().unwrap_or(false) {
+                OutMode::Device
+            } else {
+                OutMode::Host
+            }
+        })
     }
 }
 

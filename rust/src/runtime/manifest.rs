@@ -29,6 +29,11 @@ pub struct ArtifactSpec {
     pub params: BTreeMap<String, usize>,
     pub inputs: Vec<TensorSpec>,
     pub outputs: Vec<TensorSpec>,
+    /// Lowered with `return_tuple=False` (single-output stages only): the
+    /// HLO root is the bare array, so PJRT returns one plain buffer the
+    /// runtime can keep device-resident and feed back as a parameter
+    /// (`prefill_extend_dev`; `Runtime::execute_keep`).
+    pub untupled: bool,
 }
 
 #[derive(Clone, Debug)]
@@ -134,6 +139,10 @@ impl Manifest {
                         file: a.req("file").as_str().unwrap_or_default().into(),
                         stage: a.req("stage").as_str().unwrap_or_default().into(),
                         params,
+                        untupled: a
+                            .get("untupled")
+                            .and_then(Json::as_bool)
+                            .unwrap_or(false),
                         inputs: a
                             .req("inputs")
                             .as_arr()
@@ -248,7 +257,13 @@ mod tests {
                   "outputs":[{"name":"hidden","dtype":"float32","shape":[1,8]}]},
                  {"name":"m_layer_step_b1_n128","file":"y.hlo.txt",
                   "stage":"layer_step","params":{"batch":1,"n_sel":128},
-                  "inputs":[],"outputs":[]}
+                  "inputs":[],"outputs":[]},
+                 {"name":"m_prefill_extend_dev_c4_l8","file":"z.hlo.txt",
+                  "stage":"prefill_extend_dev",
+                  "params":{"chunk":4,"l_max":8},
+                  "inputs":[],
+                  "outputs":[{"name":"state","dtype":"float32","shape":[100]}],
+                  "untupled":true}
               ]
             }
           }
@@ -274,6 +289,16 @@ mod tests {
         assert!(mm
             .find("layer_step", &[("batch", 1), ("n_sel", 64)])
             .is_some());
+        // the untupled flag defaults to false and round-trips when set
+        assert!(!mm
+            .find("layer_step", &[("batch", 1), ("n_sel", 64)])
+            .unwrap()
+            .untupled);
+        let dev = mm
+            .find("prefill_extend_dev", &[("chunk", 4), ("l_max", 8)])
+            .unwrap();
+        assert!(dev.untupled);
+        assert_eq!(dev.outputs[0].elements(), 100);
         assert!(m.model("nope").is_err());
         std::fs::remove_dir_all(&tmp).ok();
     }

@@ -6,6 +6,6 @@ pub mod client;
 pub mod manifest;
 pub mod weights;
 
-pub use client::{HostTensor, Input, Runtime};
+pub use client::{HostTensor, Input, Output, Runtime};
 pub use manifest::{ArtifactSpec, Manifest, ModelManifest};
 pub use weights::WeightStore;

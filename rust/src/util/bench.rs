@@ -152,12 +152,48 @@ impl Report {
         s
     }
 
+    /// Machine-readable report for CI perf artifacts (`BENCH_ci.json`):
+    /// one row object per measurement.  Names contain no characters that
+    /// need JSON escaping (bench labels are ASCII identifiers + spaces).
+    pub fn to_json(&self) -> String {
+        let rows: Vec<String> = self
+            .rows
+            .iter()
+            .map(|r| {
+                format!(
+                    "{{\"name\":\"{}\",\"iters\":{},\"mean_ms\":{:.6},\
+                     \"median_ms\":{:.6},\"p99_ms\":{:.6}}}",
+                    r.name,
+                    r.iters,
+                    r.mean_ms(),
+                    r.median_ms(),
+                    r.p99_ns / 1e6
+                )
+            })
+            .collect();
+        format!(
+            "{{\"title\":\"{}\",\"rows\":[{}]}}\n",
+            self.title,
+            rows.join(",")
+        )
+    }
+
     pub fn save(&self, dir: &str, stem: &str) -> std::io::Result<()> {
         std::fs::create_dir_all(dir)?;
         std::fs::write(format!("{dir}/{stem}.md"), self.to_markdown())?;
         std::fs::write(format!("{dir}/{stem}.csv"), self.to_csv())?;
         Ok(())
     }
+}
+
+/// Value of a `--flag path` style argument in a bench binary's argv
+/// (`cargo bench --bench x -- --json results/x.json`); benches have
+/// `harness = false`, so they own their tiny CLI.
+pub fn arg_value(flag: &str) -> Option<String> {
+    let argv: Vec<String> = std::env::args().collect();
+    argv.iter()
+        .position(|a| a == flag)
+        .and_then(|i| argv.get(i + 1).cloned())
 }
 
 #[cfg(test)]
@@ -197,5 +233,16 @@ mod tests {
         });
         assert!(r.to_markdown().contains("| a | 10 | 1.0000"));
         assert!(r.to_csv().lines().count() == 2);
+        let j = r.to_json();
+        assert!(j.contains("\"name\":\"a\""));
+        assert!(j.contains("\"mean_ms\":1.000000"));
+        assert!(j.starts_with("{\"title\":\"t\""));
+        // must round-trip through the in-repo JSON parser (CI merges it)
+        let parsed = crate::util::json::Json::parse(&j).unwrap();
+        assert_eq!(
+            parsed.req("rows").as_arr().unwrap().len(),
+            1,
+            "one row object"
+        );
     }
 }
