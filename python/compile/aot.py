@@ -219,6 +219,68 @@ def build_model_artifacts(b: Builder, cfg, art: ArtifactConfig,
                 {"model": cfg.name, "chunk": chunk, "l_max": l_max},
             )
 
+    # Device-resident decode KV (the residency API's decode half,
+    # DESIGN.md §2), gated with the prefill device stage so one flag
+    # reproduces a pre-device artifact set:
+    #   * layer_step_dense_dev — per-sequence dense/full-scoring step
+    #     reading KV from the device mirror (layer picked by a runtime
+    #     scalar, so one artifact per l_max bucket serves all layers);
+    #     regular tupled lowering — every output is host-bound.
+    #   * kv_append_dev — in-graph dynamic_update_slice append of one
+    #     token's [nl, H, d] K/V rows; untupled so the output buffer
+    #     replaces the mirror.
+    #   * state_to_kv — slice the prefill_extend_dev state down to the
+    #     mirror layout (in-device prefill→decode handoff); untupled.
+    if art.device_stage:
+        for l_max in ctxs:
+            s_kv = M.kv_state_len(cfg, l_max)
+
+            def dd(hidden, pos, layer, length, kv_state, *ws, _l=l_max):
+                return M.layer_step_dense_dev(
+                    hidden, pos, layer, length, kv_state, *ws, cfg=cfg,
+                    l_max=_l)
+            b.lower(
+                f"{cfg.name}_layer_step_dense_dev_l{l_max}",
+                "layer_step_dense_dev",
+                dd,
+                [("hidden", spec([dm])),
+                 ("pos", spec([], I32)),
+                 ("layer", spec([], I32)),
+                 ("length", spec([], I32)),
+                 ("kv_state", spec([s_kv]))] + lw,
+                ["hidden", "k_new", "v_new", "probs"],
+                {"model": cfg.name, "l_max": l_max},
+            )
+
+            def ka(kv_state, k_new, v_new, pos, _l=l_max):
+                return M.kv_append_dev(
+                    kv_state, k_new, v_new, pos, cfg=cfg, l_max=_l)
+            b.lower(
+                f"{cfg.name}_kv_append_dev_l{l_max}", "kv_append_dev",
+                ka,
+                [("kv_state", spec([s_kv])),
+                 ("k_new", spec([cfg.n_layers, H, d])),
+                 ("v_new", spec([cfg.n_layers, H, d])),
+                 ("pos", spec([], I32))],
+                ["kv_state"],
+                {"model": cfg.name, "l_max": l_max},
+                untupled=True,
+            )
+        for l_max in pres:
+            if l_max not in ctxs:
+                continue  # handoff needs a decode-mirror bucket at l_max
+
+            def s2k(state, _l=l_max):
+                return M.state_to_kv(state, cfg=cfg, l_max=_l)
+            b.lower(
+                f"{cfg.name}_state_to_kv_l{l_max}", "state_to_kv",
+                s2k,
+                [("state", spec([M.dev_state_len(cfg, l_max)]))],
+                ["kv_state"],
+                {"model": cfg.name, "l_max": l_max},
+                untupled=True,
+            )
+
     # Device-resident chunked prefill: same (chunk, l_max) grid, but the
     # whole cached context rides in one flat loop-carried state array so
     # chunk i's output buffer is chunk i+1's input with zero host traffic

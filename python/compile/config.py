@@ -59,12 +59,15 @@ class ArtifactConfig:
     - ``extend_chunk_buckets``: chunk widths for the KV-in chunked-prefill
       stage (``prefill_extend``), crossed with ``prefill_buckets`` for the
       context-tile width (DESIGN.md §6a).
-    - ``device_stage``: also lower the device-resident chunked-prefill
-      stage (``prefill_extend_dev``) over the same (chunk, l_max) grid —
-      its loop-carried packed state keeps the prefill context on device
-      across chunks; recorded ``untupled`` in the manifest.  Disable to
-      reproduce a pre-device artifact set (the rust engine then falls
-      back to the host-staged ``prefill_extend`` path).
+    - ``device_stage``: also lower the device-resident stage family —
+      prefill (``prefill_extend_dev`` over the same (chunk, l_max) grid,
+      loop-carried packed state) and decode (``layer_step_dense_dev`` /
+      ``kv_append_dev`` over ``ctx_buckets`` plus the ``state_to_kv``
+      prefill→decode handoff) — the two halves of the KV residency API
+      (DESIGN.md §2).  Single-output stages are recorded ``untupled`` in
+      the manifest.  Disable to reproduce a pre-device artifact set (the
+      rust engine then falls back to the host-staged
+      ``prefill_extend`` / ``export_dense`` paths).
     """
 
     batch_tiles: List[int] = field(default_factory=lambda: [1, 8, 16])

@@ -131,21 +131,16 @@ def layer_step(
     return hidden, k_new, v_new, probs
 
 
-def layer_step_dense(
+def _dense_core(
     hidden, pos, k_cache, v_cache, length,
     attn_norm_w, wq, wk, wv, wo, mlp_norm_w, w_gate, w_up, w_down,
     *, cfg: ModelConfig, l_max: int,
 ):
-    """Dense decode step over the full KV bucket — the retrieval/full-scoring
-    path (and the dense serving baseline).
+    """Shared dense decode-step core for `layer_step_dense` (host-staged
+    KV tiles) and `layer_step_dense_dev` (device-resident KV mirror).
 
-    k_cache/v_cache: [B, H, L_max, d] with valid prefix ``length`` [B].
-    The current token occupies slot ``pos`` logically but is handled
-    in-graph like layer_step (appended), so caches hold only past tokens.
-
-    Returns (hidden', k_new, v_new, probs [B, H, L_max+1]) where probs is
-    the post-softmax attention row (slot L_max = current token) used by the
-    coordinator for top-k retrieval, H2O statistics, and δ/τ accounting.
+    k_cache/v_cache: [B, n_heads, L_max, d] — already GQA-expanded, the
+    layout both the host page pool and the device mirror store.
     """
     x = rmsnorm(hidden, attn_norm_w, cfg.rms_eps)
     q, k_new, v_new = _project_qkv(x, wq, wk, wv, cfg)
@@ -155,8 +150,8 @@ def layer_step_dense(
 
     k_self = _repeat_kv(k_new, cfg)[:, :, None, :]
     v_self = _repeat_kv(v_new, cfg)[:, :, None, :]
-    k_all = jnp.concatenate([_repeat_kv(k_cache, cfg), k_self], axis=2)
-    v_all = jnp.concatenate([_repeat_kv(v_cache, cfg), v_self], axis=2)
+    k_all = jnp.concatenate([k_cache, k_self], axis=2)
+    v_all = jnp.concatenate([v_cache, v_self], axis=2)
     idx = jnp.arange(l_max)[None, None, :]
     mask = (idx < length[:, None, None]).astype(jnp.float32)
     mask = jnp.broadcast_to(mask, (hidden.shape[0], cfg.n_heads, l_max))
@@ -171,6 +166,106 @@ def layer_step_dense(
     x = rmsnorm(hidden, mlp_norm_w, cfg.rms_eps)
     hidden = hidden + swiglu(x, w_gate, w_up, w_down)
     return hidden, k_new, v_new, probs
+
+
+def layer_step_dense(
+    hidden, pos, k_cache, v_cache, length,
+    attn_norm_w, wq, wk, wv, wo, mlp_norm_w, w_gate, w_up, w_down,
+    *, cfg: ModelConfig, l_max: int,
+):
+    """Dense decode step over the full KV bucket — the retrieval/full-scoring
+    path (and the dense serving baseline).
+
+    k_cache/v_cache: [B, Hkv, L_max, d] with valid prefix ``length`` [B].
+    The current token occupies slot ``pos`` logically but is handled
+    in-graph like layer_step (appended), so caches hold only past tokens.
+
+    Returns (hidden', k_new, v_new, probs [B, H, L_max+1]) where probs is
+    the post-softmax attention row (slot L_max = current token) used by the
+    coordinator for top-k retrieval, H2O statistics, and δ/τ accounting.
+    """
+    return _dense_core(
+        hidden, pos, _repeat_kv(k_cache, cfg), _repeat_kv(v_cache, cfg),
+        length, attn_norm_w, wq, wk, wv, wo, mlp_norm_w, w_gate, w_up,
+        w_down, cfg=cfg, l_max=l_max)
+
+
+# ---------------------------------------------------------------------------
+# device-resident decode KV (the residency API's L2 half, DESIGN.md §2)
+
+
+def kv_state_len(cfg: ModelConfig, l_max: int) -> int:
+    """Flat f32 length of the decode KV mirror state: K tile + V tile,
+    each [n_layers, n_heads, l_max, head_dim] (GQA-expanded — the same
+    layout as the leading segment of the `prefill_extend_dev` state and
+    of the rust page pool).  The rust engine computes the same value from
+    the manifest when sizing mirror uploads."""
+    return 2 * cfg.n_layers * cfg.n_heads * l_max * cfg.head_dim
+
+
+def state_to_kv(state, *, cfg: ModelConfig, l_max: int):
+    """In-device handoff from prefill to decode residency: slice the
+    `prefill_extend_dev` packed state down to the decode KV mirror
+    (its leading K/V segment IS the mirror layout, see `kv_state_len`).
+    Lowered untupled so the rust runtime keeps the result as one plain
+    `PjRtBuffer` — prefill completion seeds the decode mirror without a
+    download→page-pool→re-upload round trip."""
+    return (state[: kv_state_len(cfg, l_max)],)
+
+
+def layer_step_dense_dev(
+    hidden, pos, layer, length, kv_state,
+    attn_norm_w, wq, wk, wv, wo, mlp_norm_w, w_gate, w_up, w_down,
+    *, cfg: ModelConfig, l_max: int,
+):
+    """Dense decode step reading one layer's KV tiles out of the
+    device-resident mirror (`kv_state`, see `kv_state_len`) instead of a
+    host-staged context tile — the decode-side bandwidth collapse
+    (DESIGN.md §2): the host uploads only hidden + three scalars and
+    downloads hidden' + k/v rows + the probs row, never the KV.
+
+    One sequence per call (the mirror is a per-sequence buffer); one
+    artifact per l_max bucket serves every layer — ``layer`` is a runtime
+    scalar used to slice the packed [nl, H, l_max, d] tiles, and the
+    layer's weights arrive as inputs exactly like `layer_step_dense`.
+
+    Returns (hidden' [dm], k_new [Hkv, d], v_new [Hkv, d],
+             probs [l_max + 1] per head → [H, l_max + 1]).
+    """
+    nl, H, d = cfg.n_layers, cfg.n_heads, cfg.head_dim
+    kv = nl * H * l_max * d
+    k_t = kv_state[:kv].reshape(nl, H, l_max, d)
+    v_t = kv_state[kv:2 * kv].reshape(nl, H, l_max, d)
+    k_ctx = jax.lax.dynamic_index_in_dim(k_t, layer, axis=0, keepdims=False)
+    v_ctx = jax.lax.dynamic_index_in_dim(v_t, layer, axis=0, keepdims=False)
+    h1, k_new, v_new, probs = _dense_core(
+        hidden[None], pos[None], k_ctx[None], v_ctx[None], length[None],
+        attn_norm_w, wq, wk, wv, wo, mlp_norm_w, w_gate, w_up, w_down,
+        cfg=cfg, l_max=l_max)
+    return h1[0], k_new[0], v_new[0], probs[0]
+
+
+def kv_append_dev(kv_state, k_new, v_new, pos, *, cfg: ModelConfig,
+                  l_max: int):
+    """Append one decoded token's K/V rows (all layers at once) into the
+    device-resident mirror via in-graph `dynamic_update_slice` — the
+    O(n_layers · H · d) upload that keeps the mirror fresh every decode
+    step regardless of plan kind, so a later retrieval never re-ships the
+    context (DESIGN.md §2).  k_new/v_new: [nl, H, d] post-RoPE
+    GQA-expanded rows (exactly what the engine appends to the host page
+    pool, so mirror and pool stay bitwise identical).  ``pos`` must be
+    < l_max — the engine re-buckets the mirror before it fills up.
+    Lowered untupled: the single flat output replaces the mirror buffer.
+    """
+    nl, H, d = cfg.n_layers, cfg.n_heads, cfg.head_dim
+    kv = nl * H * l_max * d
+    k_t = kv_state[:kv].reshape(nl, H, l_max, d)
+    v_t = kv_state[kv:2 * kv].reshape(nl, H, l_max, d)
+    k_t = jax.lax.dynamic_update_slice(
+        k_t, k_new[:, :, None, :], (0, 0, pos, 0))
+    v_t = jax.lax.dynamic_update_slice(
+        v_t, v_new[:, :, None, :], (0, 0, pos, 0))
+    return (jnp.concatenate([k_t.reshape(-1), v_t.reshape(-1)]),)
 
 
 def lm_head(hidden, final_norm_w, head_w, *, cfg: ModelConfig):

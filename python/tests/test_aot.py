@@ -121,9 +121,34 @@ def test_quick_build_in_tmp(tmp_path):
         expect = [M.dev_state_len(CONFIGS["small"], a["params"]["l_max"])]
         assert state_in["shape"] == expect
         assert a["outputs"][0]["shape"] == expect
+    # the decode half of the residency API (DESIGN.md §2): the mirror
+    # stages are lowered, the single-output ones untupled, and every
+    # kv_state shape matches the L2 layout contract
+    small_cfg = CONFIGS["small"]
+    dense_dev = [a for a in arts if a["stage"] == "layer_step_dense_dev"]
+    appends = [a for a in arts if a["stage"] == "kv_append_dev"]
+    handoffs = [a for a in arts if a["stage"] == "state_to_kv"]
+    assert dense_dev and appends and handoffs, \
+        "quick set must include the decode residency stages"
+    for a in dense_dev:
+        assert "untupled" not in a  # 4 host-bound outputs: stays tupled
+        kv_in = next(i for i in a["inputs"] if i["name"] == "kv_state")
+        assert kv_in["shape"] == \
+            [M.kv_state_len(small_cfg, a["params"]["l_max"])]
+        assert [o["name"] for o in a["outputs"]] == \
+            ["hidden", "k_new", "v_new", "probs"]
+    for a in appends + handoffs:
+        assert a.get("untupled") is True
+        assert a["outputs"][0]["shape"] == \
+            [M.kv_state_len(small_cfg, a["params"]["l_max"])]
+    # append buckets mirror the dense-dev grid (the engine assumes an
+    # append artifact exists wherever a mirror bucket does)
+    assert {a["params"]["l_max"] for a in appends} == \
+        {a["params"]["l_max"] for a in dense_dev}
     # every other stage stays tupled (flag absent)
+    untupled_stages = {"prefill_extend_dev", "kv_append_dev", "state_to_kv"}
     assert all("untupled" not in a
-               for a in arts if a["stage"] != "prefill_extend_dev")
+               for a in arts if a["stage"] not in untupled_stages)
     # interchange guard: every artifact's HLO text must round-trip
     # through XLA's HLO text parser (the same parser family behind the
     # rust loader's HloModuleProto::from_text_file), and the dev stage's

@@ -1,15 +1,23 @@
 """L1 kernel correctness: Pallas TSA attention vs the pure-jnp oracle.
 
 This is the core correctness signal for the compute hot-spot.  Hypothesis
-sweeps shapes and dtypes; dedicated cases cover masking edge cases the
-serving coordinator actually produces (padded tails, fully-masked heads,
-single-entry sets).
+(when installed) sweeps shapes and dtypes; a deterministic fallback grid
+covers the same shape envelope so the suite never silently shrinks to
+zero property coverage on machines without the dependency (the offline
+build image has no hypothesis).  Dedicated cases cover masking edge cases
+the serving coordinator actually produces (padded tails, fully-masked
+heads, single-entry sets).
 """
 
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # offline image: deterministic fallback grid only
+    HAVE_HYPOTHESIS = False
 
 from compile.kernels import ref
 from compile.kernels.tsa import (
@@ -35,26 +43,7 @@ def assert_matches_ref(q, k, v, mask, rtol=RTOL, atol=ATOL):
     np.testing.assert_allclose(got, want, rtol=rtol, atol=atol)
 
 
-@settings(max_examples=25, deadline=None)
-@given(
-    b=st.integers(1, 4),
-    h=st.integers(1, 8),
-    n=st.sampled_from([1, 2, 7, 16, 64, 129]),
-    d=st.sampled_from([4, 8, 32, 64]),
-    seed=st.integers(0, 2**31 - 1),
-)
-def test_matches_ref_f32_shapes(b, h, n, d, seed):
-    rng = np.random.default_rng(seed)
-    assert_matches_ref(*rand_case(rng, b, h, n, d))
-
-
-@settings(max_examples=10, deadline=None)
-@given(
-    n=st.sampled_from([8, 64]),
-    d=st.sampled_from([32, 64]),
-    seed=st.integers(0, 2**31 - 1),
-)
-def test_matches_ref_bf16(n, d, seed):
+def _bf16_case(n, d, seed):
     rng = np.random.default_rng(seed)
     q, k, v, mask = rand_case(rng, 2, 2, n, d)
     qb = jnp.asarray(q, jnp.bfloat16)
@@ -66,6 +55,45 @@ def test_matches_ref_bf16(n, d, seed):
     )
     # bf16 storage, f32 accumulation in both paths.
     np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        b=st.integers(1, 4),
+        h=st.integers(1, 8),
+        n=st.sampled_from([1, 2, 7, 16, 64, 129]),
+        d=st.sampled_from([4, 8, 32, 64]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_f32_shapes(b, h, n, d, seed):
+        rng = np.random.default_rng(seed)
+        assert_matches_ref(*rand_case(rng, b, h, n, d))
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        n=st.sampled_from([8, 64]),
+        d=st.sampled_from([32, 64]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_bf16(n, d, seed):
+        _bf16_case(n, d, seed)
+
+
+# Deterministic fallback grid: the same shape envelope the hypothesis
+# sweep draws from (ragged/odd set sizes, single-head, lane-unaligned d),
+# pinned to fixed seeds so it runs — and reproduces — everywhere.
+@pytest.mark.parametrize("b,h", [(1, 1), (2, 3), (4, 8)])
+@pytest.mark.parametrize("n", [1, 2, 7, 16, 64, 129])
+@pytest.mark.parametrize("d", [4, 8, 32, 64])
+def test_matches_ref_f32_grid(b, h, n, d):
+    rng = np.random.default_rng(1000 * b + 100 * h + 10 * n + d)
+    assert_matches_ref(*rand_case(rng, b, h, n, d))
+
+
+@pytest.mark.parametrize("n,d", [(8, 32), (8, 64), (64, 32), (64, 64)])
+def test_matches_ref_bf16_grid(n, d):
+    _bf16_case(n, d, seed=n * 101 + d)
 
 
 def test_fully_masked_head_is_zero_not_nan():

@@ -484,6 +484,156 @@ def test_prefill_extend_dev_gqa_parity():
     np.testing.assert_allclose(lg, np.asarray(lgm), atol=1e-4, rtol=1e-4)
 
 
+# --- device-resident decode KV (layer_step_dense_dev / kv_append_dev) -------
+
+def _expand_kv(x, cfg):
+    """GQA-expand [B, Hkv, L, d] → [B, H, L, d] (the mirror layout)."""
+    if cfg.n_kv_heads == cfg.n_heads:
+        return x
+    return np.repeat(x, cfg.n_heads // cfg.n_kv_heads, axis=1)
+
+
+def _pack_state(K, V):
+    """[nl, H, LM, d] tiles → flat mirror state."""
+    return np.concatenate([K.reshape(-1), V.reshape(-1)]).astype(np.float32)
+
+
+@pytest.mark.parametrize("cfg_name", ["tiny", "gqa"])
+def test_layer_step_dense_dev_matches_dense(cfg_name, tiny_weights):
+    """The device-mirror dense step must equal `layer_step_dense` (B=1)
+    for every layer: same core, the mirror just pre-expands GQA heads and
+    packs all layers in one flat state sliced by a runtime scalar."""
+    cfg = TINY if cfg_name == "tiny" else GQA
+    w = tiny_weights if cfg_name == "tiny" else W.init_weights(cfg)
+    rng = np.random.default_rng(11)
+    nl, H, Hkv, d, LM = (cfg.n_layers, cfg.n_heads, cfg.n_kv_heads,
+                         cfg.head_dim, 16)
+    t = 9
+    kc = np.zeros((1, Hkv, LM, d), np.float32)
+    vc = np.zeros_like(kc)
+    kc[:, :, :t] = rng.standard_normal((1, Hkv, t, d)).astype(np.float32)
+    vc[:, :, :t] = rng.standard_normal((1, Hkv, t, d)).astype(np.float32)
+    # mirror state: GQA-expanded tiles for all layers (only the probed
+    # layer's tile is real; the others are noise the slice must ignore)
+    Kt = rng.standard_normal((nl, H, LM, d)).astype(np.float32)
+    Vt = rng.standard_normal((nl, H, LM, d)).astype(np.float32)
+    hid = rng.standard_normal((cfg.d_model,)).astype(np.float32)
+    for layer in range(nl):
+        lw = [w[n] for n in W.layer_weight_names(layer)]
+        Kt[layer] = _expand_kv(kc, cfg)[0]
+        Vt[layer] = _expand_kv(vc, cfg)[0]
+        want = M.layer_step_dense(
+            hid[None], np.array([t], np.int32), kc, vc,
+            np.array([t], np.int32), *lw, cfg=cfg, l_max=LM)
+        got = M.layer_step_dense_dev(
+            hid, np.int32(t), np.int32(layer), np.int32(t),
+            _pack_state(Kt, Vt), *lw, cfg=cfg, l_max=LM)
+        assert np.asarray(got[0]).shape == (cfg.d_model,)
+        assert np.asarray(got[1]).shape == (Hkv, d)
+        assert np.asarray(got[3]).shape == (H, LM + 1)
+        for g, x in zip(got, want):
+            np.testing.assert_allclose(
+                np.asarray(g), np.asarray(x)[0], rtol=1e-5, atol=1e-5)
+
+
+def test_kv_append_dev_writes_one_row_per_layer(tiny_weights):
+    """kv_append_dev must write exactly row `pos` of every (layer, head)
+    tile and leave everything else bitwise untouched."""
+    cfg = TINY
+    rng = np.random.default_rng(12)
+    nl, H, d, LM = cfg.n_layers, cfg.n_heads, cfg.head_dim, 8
+    K = rng.standard_normal((nl, H, LM, d)).astype(np.float32)
+    V = rng.standard_normal((nl, H, LM, d)).astype(np.float32)
+    kn = rng.standard_normal((nl, H, d)).astype(np.float32)
+    vn = rng.standard_normal((nl, H, d)).astype(np.float32)
+    pos = 5
+    (state,) = M.kv_append_dev(
+        _pack_state(K, V), kn, vn, np.int32(pos), cfg=cfg, l_max=LM)
+    state = np.asarray(state)
+    Ke, Ve = K.copy(), V.copy()
+    Ke[:, :, pos] = kn
+    Ve[:, :, pos] = vn
+    np.testing.assert_array_equal(state, _pack_state(Ke, Ve))
+
+
+def test_state_to_kv_is_the_leading_state_segment(tiny_weights):
+    """The prefill→decode handoff is a pure slice: the prefill state's
+    leading K/V segment IS the decode mirror layout."""
+    cfg, LM = TINY, 16
+    rng = np.random.default_rng(13)
+    state = rng.standard_normal(M.dev_state_len(cfg, LM)).astype(np.float32)
+    (kv,) = M.state_to_kv(state, cfg=cfg, l_max=LM)
+    assert np.asarray(kv).shape == (M.kv_state_len(cfg, LM),)
+    np.testing.assert_array_equal(
+        np.asarray(kv), state[: M.kv_state_len(cfg, LM)])
+
+
+def test_dense_dev_decode_loop_matches_host_staged(tiny_weights):
+    """Engine-flow parity: prefill → seed the mirror from the prefill KV →
+    decode steps through layer_step_dense_dev + kv_append_dev must equal
+    the host-staged layer_step_dense loop exactly (the mirror stores the
+    same floats the page pool does, so only the attention graph differs).
+    """
+    cfg, w = TINY, tiny_weights
+    allw = [w[n] for n in W.all_weight_names(cfg)]
+    rng = np.random.default_rng(14)
+    nl, H, d, dm = cfg.n_layers, cfg.n_heads, cfg.head_dim, cfg.d_model
+    L, LM, steps = 6, 12, 3
+    toks = (np.arange(L) * 5 % cfg.vocab_size).astype(np.int32)
+    scalars = (0.0, 99.0, 0.7, 1.0, 0.5, 1.0, 0.0, 0.0)
+    Km, Vm, _, lgm, _ = M.prefill(
+        toks, np.int32(L), *scalars, *allw, cfg=cfg, l_max=L)
+    # host-side tiles (page-pool stand-in) and the device mirror hold the
+    # same floats after prefill
+    Kc = np.zeros((nl, H, LM, d), np.float32)
+    Vc = np.zeros_like(Kc)
+    Kc[:, :, :L] = np.asarray(Km)
+    Vc[:, :, :L] = np.asarray(Vm)
+    state = _pack_state(Kc, Vc)
+    tok = int(np.argmax(np.asarray(lgm)))
+    t = L
+    host_logits, dev_logits = [], []
+    for _ in range(steps):
+        hid_h = np.asarray(M.embed(np.array([tok], np.int32),
+                                   w["embed.weight"]))
+        hid_d = hid_h[0]
+        kn_rows = np.zeros((nl, H, d), np.float32)
+        vn_rows = np.zeros((nl, H, d), np.float32)
+        for layer in range(nl):
+            lw = [w[n] for n in W.layer_weight_names(layer)]
+            h2, kn, vn, _ = M.layer_step_dense(
+                hid_h, np.array([t], np.int32), Kc[layer][None],
+                Vc[layer][None], np.array([t], np.int32), *lw, cfg=cfg,
+                l_max=LM)
+            hd2, knd, vnd, _ = M.layer_step_dense_dev(
+                hid_d, np.int32(t), np.int32(layer), np.int32(t), state,
+                *lw, cfg=cfg, l_max=LM)
+            np.testing.assert_allclose(
+                np.asarray(hd2), np.asarray(h2)[0], rtol=1e-5, atol=1e-5)
+            Kc[layer, :, t] = np.asarray(kn)[0]
+            Vc[layer, :, t] = np.asarray(vn)[0]
+            kn_rows[layer] = np.asarray(knd)
+            vn_rows[layer] = np.asarray(vnd)
+            hid_h = np.asarray(h2)
+            hid_d = np.asarray(hd2)
+        (state,) = M.kv_append_dev(
+            state, kn_rows, vn_rows, np.int32(t), cfg=cfg, l_max=LM)
+        state = np.asarray(state)
+        lg_h = np.asarray(M.lm_head(hid_h, w["final_norm.weight"],
+                                    w["lm_head"], cfg=cfg))[0]
+        lg_d = np.asarray(M.lm_head(hid_d[None], w["final_norm.weight"],
+                                    w["lm_head"], cfg=cfg))[0]
+        host_logits.append(lg_h)
+        dev_logits.append(lg_d)
+        tok = int(np.argmax(lg_h))
+        t += 1
+    for a, b in zip(host_logits, dev_logits):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+    # the mirror equals the host tiles after the appended steps
+    np.testing.assert_allclose(
+        np.asarray(state), _pack_state(Kc, Vc), rtol=1e-5, atol=1e-5)
+
+
 def test_dev_state_len_layout():
     assert M.dev_state_len(TINY, 16) == (
         2 * TINY.n_layers * TINY.n_heads * 16 * TINY.head_dim

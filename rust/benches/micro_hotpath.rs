@@ -200,8 +200,30 @@ fn main() -> anyhow::Result<()> {
     if let Some(path) = arg_value("--json") {
         // machine-readable counters for the CI perf artifact
         // (BENCH_ci.json): the "batched plan+stage" rows are the plan-µs
-        // signal the bench trajectory tracks
-        std::fs::write(&path, report.to_json())?;
+        // signal the bench trajectory tracks, and `decode_staging` is
+        // the engine-free byte model of one decode retrieval at the
+        // small-model geometry (the same `model::decode_staging`
+        // functions the engine's `decode_host_bytes_staged` counter is
+        // computed through) — host-vs-device columns CI can track
+        // without artifacts.
+        use prhs::model::decode_staging as ds;
+        let (nl, dmod, l2k) = (4usize, 256usize, 2048usize);
+        let staging = format!(
+            "{{\"l_max\":{l2k},\"n_sel\":160,\
+             \"dense_host_call_bytes\":{},\"dense_dev_call_bytes\":{},\
+             \"append_dev_bytes\":{},\"mirror_seed_bytes\":{},\
+             \"sparse_call_bytes\":{}}}",
+            ds::dense_host_call_bytes(1, h, h, d, dmod, l2k, true),
+            ds::dense_dev_call_bytes(dmod, h, h, d, l2k, true),
+            ds::append_dev_bytes(nl, h, d),
+            ds::mirror_seed_bytes(nl, h, l2k, d),
+            ds::sparse_call_bytes(1, h, h, d, dmod, 160, false),
+        );
+        let json = format!(
+            "{{\"report\":{},\"decode_staging\":{staging}}}\n",
+            report.to_json().trim_end()
+        );
+        std::fs::write(&path, json)?;
         println!("→ {path}");
     }
     Ok(())

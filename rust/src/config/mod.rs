@@ -231,6 +231,18 @@ pub struct EngineConfig {
     /// stage, when no l_max bucket covers the prompt, or when
     /// `prefill_recompute` forces the oracle path (DESIGN.md §6a).
     pub device_prefill_kv: bool,
+    /// Keep the decode-side dense/full-scoring KV device-resident: each
+    /// sequence's context rides in a per-sequence device mirror
+    /// (`kvcache::DevKvMirror`, seeded in-device from the prefill state
+    /// via `state_to_kv` and appended every step via `kv_append_dev`),
+    /// so a `Retrieve`/`DenseOnly`/probe layer runs
+    /// `layer_step_dense_dev` against it instead of re-uploading the
+    /// whole context tile (`export_dense`, bandwidth ∝ L per retrieval —
+    /// the overhead class PrHS exists to avoid).  On by default; the
+    /// engine falls back to the host-staged oracle path when the
+    /// artifact set predates the decode residency stages or the context
+    /// outgrows their l_max buckets (DESIGN.md §2/§3).
+    pub device_decode_kv: bool,
     /// Max prompt tokens the scheduler's prefill stage executes per
     /// iteration across all prefilling sequences (0 = unlimited).  Bounds
     /// the prefill work inserted between decode steps, so decode latency
@@ -265,6 +277,7 @@ impl Default for EngineConfig {
             prefill_chunk: 0,
             prefill_recompute: false,
             device_prefill_kv: true,
+            device_decode_kv: true,
             prefill_token_budget: 0,
             max_kv_pages: 0,
             planner_threads: 0,
@@ -298,6 +311,9 @@ impl EngineConfig {
         }
         if let Some(b) = j.get("device_prefill_kv").and_then(Json::as_bool) {
             cfg.device_prefill_kv = b;
+        }
+        if let Some(b) = j.get("device_decode_kv").and_then(Json::as_bool) {
+            cfg.device_decode_kv = b;
         }
         if let Some(n) = j.get("prefill_token_budget").and_then(Json::as_usize)
         {
@@ -343,6 +359,66 @@ impl EngineConfig {
             }
         }
         Ok(cfg)
+    }
+
+    /// Serialize the serving knobs (everything `from_json` reads back
+    /// except the selector sub-object, emitted with its kind + the
+    /// commonly-swept fields).  Built as a `Json` value tree so string
+    /// fields (`artifacts_dir` paths with quotes/backslashes) are
+    /// escaped correctly.  `from_json(parse(to_json()))` must reproduce
+    /// the config — the round-trip harnesses and the config tests rely
+    /// on it (`engine_config_json_round_trips`).
+    pub fn to_json(&self) -> String {
+        use std::collections::BTreeMap;
+        let sc = &self.selector;
+        let num = |n: usize| Json::Num(n as f64);
+        let f = |x: f32| Json::Num(x as f64);
+        let mut sel = BTreeMap::new();
+        sel.insert("kind".into(), Json::Str(sc.kind.name().into()));
+        sel.insert("c_sink".into(), num(sc.c_sink));
+        sel.insert("c_local".into(), num(sc.c_local));
+        sel.insert("k_middle".into(), num(sc.k_middle));
+        sel.insert("block_size".into(), num(sc.block_size));
+        sel.insert("sim_threshold".into(), f(sc.sim_threshold));
+        sel.insert("dilate_radius".into(), num(sc.dilate_radius));
+        sel.insert("psaw_enabled".into(), Json::Bool(sc.psaw_enabled));
+        sel.insert("psaw_phi".into(), f(sc.psaw_phi));
+        sel.insert("psaw_alpha".into(), f(sc.psaw_alpha));
+        sel.insert("etf_enabled".into(), Json::Bool(sc.etf_enabled));
+        sel.insert("etf_psi".into(), f(sc.etf_psi));
+        sel.insert("etf_gamma".into(), f(sc.etf_gamma));
+        sel.insert("hshare_stride".into(), num(sc.hshare_stride));
+        sel.insert("quest_page".into(), num(sc.quest_page));
+        sel.insert("ds_channels".into(), num(sc.ds_channels));
+        let mut o = BTreeMap::new();
+        o.insert(
+            "artifacts_dir".into(),
+            Json::Str(self.artifacts_dir.clone()),
+        );
+        o.insert("model".into(), Json::Str(self.model.clone()));
+        o.insert("max_new_tokens".into(), num(self.max_new_tokens));
+        o.insert("max_batch".into(), num(self.max_batch));
+        o.insert("prefill_chunk".into(), num(self.prefill_chunk));
+        o.insert(
+            "prefill_recompute".into(),
+            Json::Bool(self.prefill_recompute),
+        );
+        o.insert(
+            "device_prefill_kv".into(),
+            Json::Bool(self.device_prefill_kv),
+        );
+        o.insert(
+            "device_decode_kv".into(),
+            Json::Bool(self.device_decode_kv),
+        );
+        o.insert(
+            "prefill_token_budget".into(),
+            num(self.prefill_token_budget),
+        );
+        o.insert("max_kv_pages".into(), num(self.max_kv_pages));
+        o.insert("planner_threads".into(), num(self.planner_threads));
+        o.insert("selector".into(), Json::Obj(sel));
+        Json::Obj(o).to_string_compact()
     }
 }
 
@@ -409,12 +485,18 @@ mod tests {
             "device-resident prefill KV is the default (the engine falls \
              back to host staging when the artifact set predates it)"
         );
+        assert!(
+            c.device_decode_kv,
+            "device-resident decode KV is the default (same fallback \
+             contract as the prefill flag)"
+        );
         assert_eq!(c.prefill_token_budget, 0, "budget is opt-in");
         assert_eq!(c.max_kv_pages, 0, "KV cap is opt-in");
         let j = Json::parse(
             r#"{"prefill_chunk":256,"planner_threads":4,"max_batch":32,
                 "prefill_recompute":true,"prefill_token_budget":512,
-                "max_kv_pages":1024,"device_prefill_kv":false}"#,
+                "max_kv_pages":1024,"device_prefill_kv":false,
+                "device_decode_kv":false}"#,
         )
         .unwrap();
         let c = EngineConfig::from_json(&j).unwrap();
@@ -423,7 +505,83 @@ mod tests {
         assert_eq!(c.max_batch, 32);
         assert!(c.prefill_recompute);
         assert!(!c.device_prefill_kv);
+        assert!(!c.device_decode_kv);
         assert_eq!(c.prefill_token_budget, 512);
         assert_eq!(c.max_kv_pages, 1024);
+    }
+
+    /// Issue satellite (CLI/config symmetry): `to_json` → `from_json`
+    /// reproduces every serving knob, specifically covering the new
+    /// residency fields in both polarities (the non-default one is the
+    /// interesting direction: a false must survive the trip, not be
+    /// resurrected by the default).
+    #[test]
+    fn engine_config_json_round_trips() {
+        let mut c = EngineConfig::default();
+        // a path needing JSON escaping must survive the trip intact
+        c.artifacts_dir = "arts\\\"quoted\"\\dir".into();
+        c.model = "bench".into();
+        c.max_new_tokens = 17;
+        c.max_batch = 3;
+        c.prefill_chunk = 96;
+        c.prefill_recompute = true;
+        c.device_prefill_kv = false;
+        c.device_decode_kv = false;
+        c.prefill_token_budget = 192;
+        c.max_kv_pages = 77;
+        c.planner_threads = 5;
+        c.selector.kind = SelectorKind::Cpe;
+        c.selector.c_sink = 4;
+        c.selector.c_local = 16;
+        c.selector.k_middle = 44;
+        c.selector.block_size = 16;
+        c.selector.sim_threshold = 0.65;
+        c.selector.dilate_radius = 2;
+        c.selector.psaw_enabled = true;
+        c.selector.psaw_phi = 0.3;
+        c.selector.psaw_alpha = 2.0;
+        c.selector.etf_enabled = true;
+        c.selector.etf_psi = 0.9;
+        c.selector.etf_gamma = 1.5;
+        c.selector.hshare_stride = 4;
+        c.selector.quest_page = 32;
+        c.selector.ds_channels = 12;
+
+        let j = Json::parse(&c.to_json()).unwrap();
+        let r = EngineConfig::from_json(&j).unwrap();
+        assert_eq!(r.artifacts_dir, c.artifacts_dir);
+        assert_eq!(r.model, c.model);
+        assert_eq!(r.max_new_tokens, c.max_new_tokens);
+        assert_eq!(r.max_batch, c.max_batch);
+        assert_eq!(r.prefill_chunk, c.prefill_chunk);
+        assert_eq!(r.prefill_recompute, c.prefill_recompute);
+        assert_eq!(r.device_prefill_kv, c.device_prefill_kv);
+        assert_eq!(r.device_decode_kv, c.device_decode_kv);
+        assert_eq!(r.prefill_token_budget, c.prefill_token_budget);
+        assert_eq!(r.max_kv_pages, c.max_kv_pages);
+        assert_eq!(r.planner_threads, c.planner_threads);
+        assert_eq!(r.selector.kind, c.selector.kind);
+        assert_eq!(r.selector.c_sink, c.selector.c_sink);
+        assert_eq!(r.selector.c_local, c.selector.c_local);
+        assert_eq!(r.selector.k_middle, c.selector.k_middle);
+        assert_eq!(r.selector.block_size, c.selector.block_size);
+        assert_eq!(r.selector.sim_threshold, c.selector.sim_threshold);
+        assert_eq!(r.selector.dilate_radius, c.selector.dilate_radius);
+        assert_eq!(r.selector.psaw_enabled, c.selector.psaw_enabled);
+        assert_eq!(r.selector.psaw_phi, c.selector.psaw_phi);
+        assert_eq!(r.selector.psaw_alpha, c.selector.psaw_alpha);
+        assert_eq!(r.selector.etf_enabled, c.selector.etf_enabled);
+        assert_eq!(r.selector.etf_psi, c.selector.etf_psi);
+        assert_eq!(r.selector.etf_gamma, c.selector.etf_gamma);
+        assert_eq!(r.selector.hshare_stride, c.selector.hshare_stride);
+        assert_eq!(r.selector.quest_page, c.selector.quest_page);
+        assert_eq!(r.selector.ds_channels, c.selector.ds_channels);
+
+        // defaults round-trip too (both flags true)
+        let d = EngineConfig::default();
+        let j = Json::parse(&d.to_json()).unwrap();
+        let r = EngineConfig::from_json(&j).unwrap();
+        assert!(r.device_prefill_kv && r.device_decode_kv);
+        assert_eq!(r.prefill_chunk, d.prefill_chunk);
     }
 }

@@ -372,6 +372,12 @@ impl Scheduler {
                 r.steps += 1;
             }
             self.metrics.tokens_out += self.running.len() as u64;
+            // Mirror the engine's decode staging-bandwidth counters so
+            // the decode residency collapse is observable at the
+            // serving-metrics level (DESIGN.md §2).
+            self.metrics.decode_host_bytes =
+                self.engine.stats.decode_host_bytes_staged;
+            self.metrics.dense_calls = self.engine.stats.dense_layer_calls;
         }
 
         // retire

@@ -99,11 +99,26 @@ pub fn replay(
     traj: &RefTraj,
     probe_every: usize,
 ) -> Result<Fidelity> {
+    replay_chunked(engine, req, traj, probe_every, 0)
+}
+
+/// Like `replay` but prefills in chunks of `chunk` prompt tokens
+/// (0 = monolithic).  The knob the ETF chunk-invariance harness sweeps:
+/// with ETF enabled, freezing applies per chunk on the chunked paths, so
+/// this quantifies the per-chunk approximation against monolithic
+/// freezing (DESIGN.md §6a; `harness etf_chunk`).
+pub fn replay_chunked(
+    engine: &mut Engine,
+    req: &Request,
+    traj: &RefTraj,
+    probe_every: usize,
+    chunk: usize,
+) -> Result<Fidelity> {
     engine.probe = Some(Probe::new(probe_every));
     engine.stats = Default::default();
     let mut seq = engine.new_sequence(1, req.prompt.clone());
     seq.max_new = traj.tokens.len();
-    engine.prefill(&mut seq)?;
+    while !engine.prefill_chunk(&mut seq, chunk)? {}
     // ρ̂ is decode-only (DESIGN.md §4): snapshot after prefill
     let t0_retrievals = seq.selector.retrievals();
 
@@ -211,10 +226,23 @@ pub fn eval_selector(
     trajs: &[RefTraj],
     probe_every: usize,
 ) -> Result<Fidelity> {
+    eval_selector_chunked(lab, sel, reqs, trajs, probe_every, 0)
+}
+
+/// `eval_selector` with a prefill chunk size (0 = monolithic) — see
+/// `replay_chunked`.
+pub fn eval_selector_chunked(
+    lab: &Lab,
+    sel: SelectorConfig,
+    reqs: &[Request],
+    trajs: &[RefTraj],
+    probe_every: usize,
+    chunk: usize,
+) -> Result<Fidelity> {
     let mut engine = lab.engine(sel);
     let mut acc = Fidelity::default();
     for (req, traj) in reqs.iter().zip(trajs) {
-        let f = replay(&mut engine, req, traj, probe_every)?;
+        let f = replay_chunked(&mut engine, req, traj, probe_every, chunk)?;
         acc.steps += f.steps;
         acc.argmax_agree += f.argmax_agree;
         acc.top5_agree += f.top5_agree;

@@ -1,0 +1,131 @@
+//! ETF chunk-invariance harness (ROADMAP open item, the "quantify"
+//! half): with ETF enabled, every chunked prefill path applies the
+//! freeze boundary E_ell per chunk, while monolithic prefill freezes
+//! over the whole prompt at once — the exact reference (DESIGN.md §6a).
+//! This harness measures how far per-chunk freezing drifts from
+//! monolithic freezing, two ways:
+//!
+//!   * directly at prefill completion — argmax agreement of the prefill
+//!     logits against the monolithic-ETF run and their L2 distance;
+//!   * downstream over decode — the fidelity-vs-dense replay metrics
+//!     (δ, argmax agreement, oracle overlap) per chunk size, side by
+//!     side with the monolithic row.
+//!
+//! If the per-chunk approximation were exact the chunked rows would
+//! match the chunk-0 row; the gap vs chunk size is the quantity the
+//! ROADMAP asks for (and the input to a future chunk-invariant E_ell).
+
+use anyhow::Result;
+
+use crate::config::{SelectorConfig, SelectorKind};
+use crate::util::cli::Args;
+use crate::util::fx;
+use crate::workload;
+
+use super::common::{self, Lab, Table};
+
+pub fn run(args: &Args) -> Result<()> {
+    let lab = Lab::from_args(args)?;
+    let n_req = args.get_usize("requests");
+    let gen = args.get_usize("gen");
+    let seed = args.get_usize("seed") as u64;
+    let probe = args.get_usize("probe-every");
+
+    let mut spec = workload::GSM8K;
+    spec.gen_tokens = gen;
+    let vocab = lab.rt.model("small")?.vocab_size;
+    let reqs = common::requests(&spec, n_req, vocab, seed);
+    println!("[etf_chunk] dense references…");
+    let mut dense = lab.dense_engine();
+    let trajs: Vec<_> = reqs
+        .iter()
+        .map(|r| common::reference(&mut dense, r))
+        .collect::<Result<_>>()?;
+
+    // CIS with aggressive-enough freezing to be measurable on the
+    // 4-layer model: ell_s = 0 so every layer past the first freezes
+    // (Eq. 16 gives zero freezing at ell = ell_s).
+    let mut sel = SelectorConfig::default();
+    sel.kind = SelectorKind::Cis;
+    sel.etf_enabled = true;
+    sel.etf_psi = 0.5;
+    sel.etf_gamma = 1.0;
+    sel.sched_ell_s_frac = 0.0;
+
+    let chunks: Vec<usize> = if args.get_bool("quick") {
+        vec![0, 128]
+    } else {
+        vec![0, 64, 128, 256]
+    };
+    assert_eq!(chunks[0], 0, "monolithic reference row must come first");
+
+    let mut table = Table::new(
+        "ETF chunk-invariance — per-chunk vs monolithic freezing",
+        &[
+            "chunk",
+            "prefill_argmax_match",
+            "prefill_logit_l2",
+            "mean_δ",
+            "argmax_agree",
+            "oracle_overlap",
+        ],
+    );
+    let mut mono_logits: Vec<Vec<f32>> = Vec::new();
+    for &chunk in &chunks {
+        // (1) prefill-state deviation vs the monolithic-ETF reference
+        let mut engine = lab.engine(sel.clone());
+        let mut agree = 0usize;
+        let mut l2 = 0.0f64;
+        for (i, req) in reqs.iter().enumerate() {
+            let mut seq = engine.new_sequence(i as u64, req.prompt.clone());
+            seq.max_new = 1;
+            while !engine.prefill_chunk(&mut seq, chunk)? {}
+            let lg = seq.last_logits.clone();
+            engine.release(&mut seq);
+            if chunk == 0 {
+                mono_logits.push(lg);
+                agree += 1;
+            } else {
+                let mono = &mono_logits[i];
+                if fx::argmax(&lg) == fx::argmax(mono) {
+                    agree += 1;
+                }
+                let mut d2 = 0.0f64;
+                for (a, b) in lg.iter().zip(mono) {
+                    d2 += ((a - b) as f64).powi(2);
+                }
+                l2 += d2.sqrt();
+            }
+        }
+        let nr = reqs.len().max(1) as f64;
+
+        // (2) downstream fidelity vs the dense trajectory
+        let f = common::eval_selector_chunked(
+            &lab,
+            sel.clone(),
+            &reqs,
+            &trajs,
+            probe,
+            chunk,
+        )?;
+        table.row(vec![
+            if chunk == 0 {
+                "mono".to_string()
+            } else {
+                chunk.to_string()
+            },
+            format!("{:.3}", agree as f64 / nr),
+            format!("{:.4}", l2 / nr),
+            format!("{:.4}", f.mean_delta),
+            format!("{:.3}", f.argmax_agree),
+            format!("{:.3}", f.oracle_overlap),
+        ]);
+    }
+    table.save("etf_chunk")?;
+    println!(
+        "[etf_chunk] chunk=mono is the exact ETF reference; the gap of the \
+         chunked rows (growing as chunks shrink) is the per-chunk freezing \
+         deviation the ROADMAP asks to quantify"
+    );
+    Ok(())
+}

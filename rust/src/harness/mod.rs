@@ -3,6 +3,7 @@
 //! reproduces.
 
 pub mod common;
+pub mod etf_chunk;
 pub mod fig1;
 pub mod fig2;
 pub mod fig4;
@@ -31,8 +32,9 @@ pub fn run(name: &str, args: &crate::util::cli::Args) -> Result<()> {
         "table6" => table6::run(args),
         "table7" => table7::run(args),
         "theory" => theory_check::run(args),
+        "etf_chunk" => etf_chunk::run(args),
         other => anyhow::bail!(
-            "unknown experiment `{other}` (try fig1|fig2|fig4|fig7|fig8|table2|table3|table5|table6|table7|theory; table4 is `cargo bench --bench table4_latency`)"
+            "unknown experiment `{other}` (try fig1|fig2|fig4|fig7|fig8|table2|table3|table5|table6|table7|theory|etf_chunk; table4 is `cargo bench --bench table4_latency`)"
         ),
     }
 }

@@ -9,8 +9,46 @@
 //!
 //! Keys are stored *post-RoPE* (positions are baked in at append time by
 //! the L2 graph), so gathers need no re-rotation.
+//!
+//! **Residency (DESIGN.md §2).**  The host pool is the always-fresh
+//! source of truth (sparse gathers, selector key reads, probe value
+//! reads all stay host-side), while the dense/full-scoring KV can also
+//! live in a per-sequence *device mirror* — the same `[nl, H, l_max, d]`
+//! tiles packed into one `PjRtBuffer`, tracked by [`DevKvMirror`] and
+//! owned by the engine's `runtime::DeviceArena`.  `export_dense`/`gather`
+//! are the host-staged implementations behind that interface and remain
+//! the parity oracle (`EngineConfig::device_decode_kv = false`) and the
+//! fallback for pre-device artifact sets.
 
 use anyhow::{anyhow, Result};
+
+use crate::runtime::ArenaHandle;
+
+/// Where a sequence's dense-path KV is staged from on this step
+/// (`Engine::decode_kv_residency`): `Device` reads the per-sequence
+/// mirror buffer in place; `HostStaged` re-uploads the context tile via
+/// `export_dense` every dense/retrieval call (bandwidth ∝ L — the class
+/// of overhead the device mode removes).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ResidencyMode {
+    Device,
+    HostStaged,
+}
+
+/// Per-sequence device KV mirror: `[2, n_layers, H, lb, d]` K|V tiles in
+/// one flat device buffer (the leading segment of the prefill dev state —
+/// `model.kv_state_len`).  `handle` indexes the engine's `DeviceArena`
+/// (PJRT buffers are not `Send`; the sequence carries only this handle),
+/// `lb` is the compiled l_max bucket, `len` the valid row count.
+/// Invariant: while live, `len == cache.len()` and `len < lb` — the
+/// engine appends every decode step (`kv_append_dev`) and drops or
+/// re-buckets the mirror instead of letting it go stale.
+#[derive(Clone, Copy, Debug)]
+pub struct DevKvMirror {
+    pub handle: ArenaHandle,
+    pub lb: usize,
+    pub len: usize,
+}
 
 /// Shared page pool.  One page stores `n_heads * page_len * head_dim` f32
 /// for keys and the same for values (a K page and V page are allocated as

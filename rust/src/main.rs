@@ -73,7 +73,7 @@ fn info(rest: &[String]) -> Result<()> {
             mm.n_layers, mm.d_model, mm.n_heads, mm.head_dim, mm.vocab_size
         );
         println!("  {} artifacts, {} weights", mm.artifacts.len(), mm.weights.len());
-        for stage in ["layer_step", "layer_step_dense", "prefill", "prefill_extend", "prefill_extend_dev", "attn_tsa_xla", "attn_tsa_pallas", "attn_dense"] {
+        for stage in ["layer_step", "layer_step_dense", "layer_step_dense_dev", "kv_append_dev", "state_to_kv", "prefill", "prefill_extend", "prefill_extend_dev", "attn_tsa_xla", "attn_tsa_pallas", "attn_dense"] {
             let n = mm.artifacts.iter().filter(|a| a.stage == stage).count();
             if n > 0 {
                 println!("    {stage}: {n}");
@@ -120,6 +120,7 @@ fn serve(rest: &[String]) -> Result<()> {
         .flag("max-kv-pages", "0", "KV page-pool cap; requests wait for pages instead of OOMing (0 = unbounded)")
         .switch("prefill-recompute", "use the prefix-recompute chunked-prefill path (parity oracle)")
         .switch("host-prefill-kv", "stage the prefill context through the host each chunk (disable the device-resident prefill KV path)")
+        .switch("host-decode-kv", "stage the decode dense/retrieval context through the host each call (disable the device-resident decode KV mirror)")
         .flag("planner-threads", "0", "host-side planner pool width (0/1 = serial)");
     let args = cli.parse(rest).map_err(anyhow::Error::msg)?;
     let mut cfg = EngineConfig::default();
@@ -135,6 +136,7 @@ fn serve(rest: &[String]) -> Result<()> {
     cfg.max_kv_pages = args.get_usize("max-kv-pages");
     cfg.prefill_recompute = args.get_bool("prefill-recompute");
     cfg.device_prefill_kv = !args.get_bool("host-prefill-kv");
+    cfg.device_decode_kv = !args.get_bool("host-decode-kv");
     cfg.planner_threads = args.get_usize("planner-threads");
     // vocab comes from the manifest (read it without building an engine)
     let vocab = prhs::runtime::Manifest::load(args.get("artifacts"))?
@@ -200,7 +202,7 @@ fn harness(rest: &[String]) -> Result<()> {
     let (name, flags) = match rest.split_first() {
         Some((n, f)) if !n.starts_with("--") => (n.clone(), f.to_vec()),
         _ => {
-            eprintln!("usage: prhs harness <fig1|fig2|fig4|fig7|fig8|table2|table3|table5|table6|table7> [flags]");
+            eprintln!("usage: prhs harness <fig1|fig2|fig4|fig7|fig8|table2|table3|table5|table6|table7|theory|etf_chunk> [flags]");
             std::process::exit(2);
         }
     };

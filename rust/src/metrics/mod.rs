@@ -110,6 +110,17 @@ pub struct RunMetrics {
     /// `EngineConfig::device_prefill_kv`, ∝ context tile per chunk on
     /// the host-staged paths (DESIGN.md §6a).
     pub prefill_host_bytes: u64,
+    /// Host↔device bytes staged for decode artifacts, mirrored from
+    /// `StepStats::decode_host_bytes_staged` — with
+    /// `EngineConfig::device_decode_kv` the dense/retrieval KV rides the
+    /// per-sequence device mirror and retrieval staging is
+    /// O(N_sel + probs row) per step instead of carrying the ∝ L
+    /// context-tile upload of the host-staged oracle (DESIGN.md §2).
+    pub decode_host_bytes: u64,
+    /// Dense/full-scoring layer passes, mirrored from
+    /// `StepStats::dense_layer_calls` (same count on both residency
+    /// modes: one per layer with any dense-needing sequence).
+    pub dense_calls: u64,
     pub wall_s: f64,
     /// Decode-phase head-level retrievals only (prefill-side scoring is
     /// excluded from ρ̂ by definition — paper Sec. III, DESIGN.md §4).

@@ -1,0 +1,115 @@
+//! Slot arena for device-resident buffers — the runtime half of the KV
+//! residency API (DESIGN.md §2).
+//!
+//! PJRT buffer handles are not `Send`, so sequences (which cross the
+//! planner pool) cannot own them directly.  The arena owns the buffers on
+//! the engine thread and hands out `Copy`able typed handles that *are*
+//! `Send`; a `Sequence` stores only the handle (prefill state slot,
+//! decode KV mirror).  Generalizes the ad-hoc prefill dev-state slab PR 3
+//! grew inside the engine; generic over the buffer type so the slot
+//! discipline is unit-testable without a PJRT client.
+
+/// Typed handle into a [`DeviceArena`].  Plain index: `Copy` + `Send`,
+/// valid until `free`/`take` — the arena panics on use-after-free
+/// (engine-side lifecycle bugs, not recoverable states).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ArenaHandle(usize);
+
+/// Slot-allocated store with a free list: O(1) alloc/replace/free, slots
+/// reused so long-running engines don't grow the table per sequence.
+pub struct DeviceArena<T = xla::PjRtBuffer> {
+    slots: Vec<Option<T>>,
+    free: Vec<usize>,
+}
+
+impl<T> Default for DeviceArena<T> {
+    fn default() -> Self {
+        DeviceArena { slots: Vec::new(), free: Vec::new() }
+    }
+}
+
+impl<T> DeviceArena<T> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn alloc(&mut self, value: T) -> ArenaHandle {
+        match self.free.pop() {
+            Some(slot) => {
+                debug_assert!(self.slots[slot].is_none());
+                self.slots[slot] = Some(value);
+                ArenaHandle(slot)
+            }
+            None => {
+                self.slots.push(Some(value));
+                ArenaHandle(self.slots.len() - 1)
+            }
+        }
+    }
+
+    pub fn get(&self, h: ArenaHandle) -> &T {
+        self.slots[h.0].as_ref().expect("live arena slot")
+    }
+
+    /// Swap a slot's buffer for a new one (loop-carried state updates:
+    /// chunk *i*'s output replaces chunk *i − 1*'s); the old buffer is
+    /// dropped, releasing its device memory.
+    pub fn replace(&mut self, h: ArenaHandle, value: T) {
+        let slot = self.slots[h.0].as_mut().expect("live arena slot");
+        *slot = value;
+    }
+
+    pub fn free(&mut self, h: ArenaHandle) {
+        assert!(self.slots[h.0].take().is_some(), "double free of arena slot");
+        self.free.push(h.0);
+    }
+
+    /// Live (occupied) slots — leak-check observable for tests.
+    pub fn live(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_get_replace_free_roundtrip() {
+        let mut a: DeviceArena<String> = DeviceArena::new();
+        let h1 = a.alloc("one".into());
+        let h2 = a.alloc("two".into());
+        assert_eq!(a.get(h1), "one");
+        assert_eq!(a.get(h2), "two");
+        assert_eq!(a.live(), 2);
+        a.replace(h1, "one'".into());
+        assert_eq!(a.get(h1), "one'");
+        assert_eq!(a.live(), 2);
+        a.free(h1);
+        assert_eq!(a.live(), 1);
+        // freed slot is reused; the stale handle is distinguishable only
+        // by discipline (engine frees exactly once per sequence)
+        let h3 = a.alloc("three".into());
+        assert_eq!(h3, h1, "free list reuses slots");
+        assert_eq!(a.get(h3), "three");
+        assert_eq!(a.live(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_panics() {
+        let mut a: DeviceArena<u32> = DeviceArena::new();
+        let h = a.alloc(7);
+        a.free(h);
+        a.free(h);
+    }
+
+    #[test]
+    #[should_panic(expected = "live arena slot")]
+    fn use_after_free_panics() {
+        let mut a: DeviceArena<u32> = DeviceArena::new();
+        let h = a.alloc(7);
+        a.free(h);
+        let _ = a.get(h);
+    }
+}

@@ -2,10 +2,12 @@
 //! weight store.  Everything the L3 coordinator needs to run AOT-compiled
 //! HLO-text artifacts with zero python on the request path.
 
+pub mod arena;
 pub mod client;
 pub mod manifest;
 pub mod weights;
 
+pub use arena::{ArenaHandle, DeviceArena};
 pub use client::{HostTensor, Input, Output, Runtime};
 pub use manifest::{ArtifactSpec, Manifest, ModelManifest};
 pub use weights::WeightStore;
