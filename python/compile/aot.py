@@ -281,6 +281,80 @@ def build_model_artifacts(b: Builder, cfg, art: ArtifactConfig,
                 untupled=True,
             )
 
+    # Batched decode residency (DESIGN.md §2): up to S per-sequence KV
+    # mirrors live stacked in one group buffer so a decode step issues
+    # O(#groups) dispatches instead of O(#sequences) — grid over
+    # (dev_batch_tiles × ctx_buckets), manifest param "batched": S.
+    #   * layer_step_dense_dev_batch — one dense/full-scoring dispatch
+    #     per (layer, group); additionally emits the in-graph
+    #     `jax.lax.top_k` (index, value) pair over the probs rows
+    #     (manifest "n_top") so a retrieval downloads O(N_sel) floats,
+    #     not the ∝ L row; tupled — every output is host-bound.
+    #   * kv_append_dev_batch — one valid-gated append dispatch per
+    #     group per step; untupled, replaces the group buffer.
+    #   * kv_slot_write_dev — membership-change slot write (join /
+    #     re-seed / handoff); untupled.
+    if art.device_stage:
+        sbs = art.dev_batch_tiles if not quick else art.dev_batch_tiles[:1]
+        for sb in sbs:
+            for l_max in ctxs:
+                s_kv = M.kv_state_len(cfg, l_max)
+                n_top = min(l_max, art.dev_topk)
+
+                def ddb(hidden, pos, layer, length, kv_states, *ws,
+                        _l=l_max, _s=sb, _k=n_top):
+                    return M.layer_step_dense_dev_batch(
+                        hidden, pos, layer, length, kv_states, *ws,
+                        cfg=cfg, l_max=_l, s=_s, n_top=_k)
+                b.lower(
+                    f"{cfg.name}_layer_step_dense_dev_batch_s{sb}_l{l_max}",
+                    "layer_step_dense_dev_batch",
+                    ddb,
+                    [("hidden", spec([sb, dm])),
+                     ("pos", spec([sb], I32)),
+                     ("layer", spec([], I32)),
+                     ("length", spec([sb], I32)),
+                     ("kv_states", spec([sb * s_kv]))] + lw,
+                    ["hidden", "k_new", "v_new", "probs", "top_idx",
+                     "top_val"],
+                    {"model": cfg.name, "batched": sb, "l_max": l_max,
+                     "n_top": n_top},
+                )
+
+                def kab(kv_states, k_new, v_new, pos, valid,
+                        _l=l_max, _s=sb):
+                    return M.kv_append_dev_batch(
+                        kv_states, k_new, v_new, pos, valid, cfg=cfg,
+                        l_max=_l, s=_s)
+                b.lower(
+                    f"{cfg.name}_kv_append_dev_batch_s{sb}_l{l_max}",
+                    "kv_append_dev_batch",
+                    kab,
+                    [("kv_states", spec([sb * s_kv])),
+                     ("k_new", spec([sb, cfg.n_layers, H, d])),
+                     ("v_new", spec([sb, cfg.n_layers, H, d])),
+                     ("pos", spec([sb], I32)),
+                     ("valid", spec([sb]))],
+                    ["kv_states"],
+                    {"model": cfg.name, "batched": sb, "l_max": l_max},
+                    untupled=True,
+                )
+
+                def ksw(kv_states, state, slot, _l=l_max):
+                    return M.kv_slot_write_dev(
+                        kv_states, state, slot, cfg=cfg, l_max=_l)
+                b.lower(
+                    f"{cfg.name}_kv_slot_write_dev_s{sb}_l{l_max}",
+                    "kv_slot_write_dev",
+                    ksw,
+                    [("kv_states", spec([sb * s_kv])),
+                     ("state", spec([s_kv])),
+                     ("slot", spec([], I32))],
+                    ["kv_states"],
+                    {"model": cfg.name, "batched": sb, "l_max": l_max},
+                    untupled=True,
+                )
+
     # Device-resident chunked prefill: same (chunk, l_max) grid, but the
     # whole cached context rides in one flat loop-carried state array so
     # chunk i's output buffer is chunk i+1's input with zero host traffic
@@ -387,6 +461,33 @@ def main() -> None:
         "artifacts": b.artifacts,
     }
 
+    # GQA parity model (Hkv < H): exercised by the rust cross-mode
+    # differential harness so the grouped-query staging paths can't rot
+    # behind the Hkv == H serving models.  Single-bucket grids on a tiny
+    # geometry keep it to seconds even in full builds.
+    gqa = CONFIGS["gqa"]
+    art_gqa = ArtifactConfig(
+        batch_tiles=[1],
+        sel_buckets=[192],
+        ctx_buckets=[256],
+        prefill_buckets=[256],
+        extend_chunk_buckets=[64],
+        dev_batch_tiles=[4],
+    )
+    bg = Builder(args.out_dir)
+    print(f"[aot] model={gqa.name} (GQA parity, ~{gqa.params_estimate/1e6:.1f}M params)")
+    build_model_artifacts(bg, gqa, art_gqa, quick=args.quick)
+    wg = W.init_weights(gqa)
+    namesg = W.all_weight_names(gqa)
+    blobg = f"weights_{gqa.name}.bin"
+    entriesg = W.export_blob(wg, namesg, os.path.join(args.out_dir, blobg))
+    manifest["models"][gqa.name] = {
+        "config": config_dict(gqa),
+        "weights_blob": blobg,
+        "weights": entriesg,
+        "artifacts": bg.artifacts,
+    }
+
     bench = CONFIGS["bench"]
     b2 = Builder(args.out_dir)
     print(f"[aot] model={bench.name} (operator benches)")
@@ -410,7 +511,7 @@ def main() -> None:
 
     with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
         json.dump(manifest, f, indent=1)
-    n_art = len(b.artifacts) + len(b2.artifacts)
+    n_art = len(b.artifacts) + len(bg.artifacts) + len(b2.artifacts)
     print(f"[aot] wrote {n_art} artifacts + manifest in {time.time()-t0:.0f}s")
 
 

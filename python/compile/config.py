@@ -68,6 +68,19 @@ class ArtifactConfig:
       the manifest.  Disable to reproduce a pre-device artifact set (the
       rust engine then falls back to the host-staged
       ``prefill_extend`` / ``export_dense`` paths).
+    - ``dev_batch_tiles``: slot counts S for the *batched* decode
+      residency stages (``layer_step_dense_dev_batch`` /
+      ``kv_append_dev_batch`` / ``kv_slot_write_dev``), crossed with
+      ``ctx_buckets`` and recorded in the manifest under the ``batched``
+      param: the rust engine stacks up to S per-sequence KV mirrors into
+      one group buffer so a decode step issues O(#groups) dispatches
+      instead of O(#sequences) (DESIGN.md §2).
+    - ``dev_topk``: in-graph ``jax.lax.top_k`` width for the batched dense
+      stage's retrieval feedback (clamped to each l_max bucket and
+      recorded as ``n_top``): the host downloads N_sel-scale
+      (index, value) pairs instead of the ∝ L probs row.  Ties break
+      toward the lower index — the same total order
+      ``util::fx::top_k_indices`` pins on the rust side.
     """
 
     batch_tiles: List[int] = field(default_factory=lambda: [1, 8, 16])
@@ -76,6 +89,8 @@ class ArtifactConfig:
     prefill_buckets: List[int] = field(default_factory=lambda: [512, 1024, 2048])
     extend_chunk_buckets: List[int] = field(default_factory=lambda: [128, 256, 512])
     device_stage: bool = True
+    dev_batch_tiles: List[int] = field(default_factory=lambda: [4, 8])
+    dev_topk: int = 160
 
 
 # The end-to-end serving model (~8.6M params): small enough that a decode
@@ -107,7 +122,25 @@ BENCH = ModelConfig(
     vocab_size=8192,
 )
 
-CONFIGS = {c.name: c for c in (SMALL, BENCH)}
+# GQA parity model: n_kv_heads < n_heads so the grouped-query staging
+# paths (host-staged dense decode, device mirrors, batched dispatch) are
+# exercised end-to-end by the rust cross-mode differential harness —
+# both served models above have Hkv == H, which masked a host-staging
+# latent bug until this config existed (ROADMAP).  Deliberately tiny
+# (2 layers, d_model 128) and built with single-bucket grids so it adds
+# seconds, not minutes, to `make artifacts`.
+GQA = ModelConfig(
+    name="gqa",
+    n_layers=2,
+    d_model=128,
+    n_heads=8,
+    n_kv_heads=2,
+    head_dim=16,
+    d_ff=256,
+    vocab_size=2048,
+)
+
+CONFIGS = {c.name: c for c in (SMALL, BENCH, GQA)}
 
 
 def config_dict(cfg: ModelConfig) -> dict:

@@ -268,6 +268,94 @@ def kv_append_dev(kv_state, k_new, v_new, pos, *, cfg: ModelConfig,
     return (jnp.concatenate([k_t.reshape(-1), v_t.reshape(-1)]),)
 
 
+# ---------------------------------------------------------------------------
+# batched device-resident decode (one dispatch per mirror *group*,
+# DESIGN.md §2): up to `s` sequences' KV mirrors live stacked in one
+# [s · kv_state_len] group buffer, so the engine amortizes the per-step
+# PJRT dispatch overhead across the batch instead of paying it per
+# sequence.  All three stages are pure over the stacked layout; the rust
+# engine owns slot assignment (`kvcache::MirrorGroups`).
+
+
+def layer_step_dense_dev_batch(
+    hidden, pos, layer, length, kv_states,
+    attn_norm_w, wq, wk, wv, wo, mlp_norm_w, w_gate, w_up, w_down,
+    *, cfg: ModelConfig, l_max: int, s: int, n_top: int,
+):
+    """Batched `layer_step_dense_dev`: one dispatch serves every slot of a
+    stacked mirror group.  ``kv_states``: [s · kv_state_len] — slot j's
+    mirror occupies the flat range [j · kv_state_len, (j+1) ·
+    kv_state_len); ``hidden`` [s, dm], ``pos``/``length`` [s]; ``layer``
+    is shared (the engine walks layers in lockstep across the batch).
+    Unused slots (the ragged tail) carry zero hidden and zero
+    pos/length; their outputs are finite garbage the engine ignores.
+
+    Returns (hidden' [s, dm], k_new [s, Hkv, d], v_new [s, Hkv, d],
+    probs [s, H, l_max + 1], top_idx [s, H, n_top] (f32-cast indices),
+    top_val [s, H, n_top]).  The top-k pair is the O(N_sel) retrieval
+    download: `jax.lax.top_k` over the cached-position segment of the
+    probs row (the self slot is excluded — no observer reads it), ties
+    broken toward the LOWER index — the exact total order
+    `util::fx::top_k_indices` implements host-side, so a selector fed
+    the reconstructed sparse row picks identical sets.  The full probs
+    row remains an output for probe steps and wide-budget selectors; the
+    engine's `execute_select` downloads exactly one of the two forms.
+    """
+    nl, H, d = cfg.n_layers, cfg.n_heads, cfg.head_dim
+    kv = nl * H * l_max * d
+    st = kv_states.reshape(s, 2 * kv)
+    k_t = st[:, :kv].reshape(s, nl, H, l_max, d)
+    v_t = st[:, kv:].reshape(s, nl, H, l_max, d)
+    k_ctx = jax.lax.dynamic_index_in_dim(k_t, layer, axis=1, keepdims=False)
+    v_ctx = jax.lax.dynamic_index_in_dim(v_t, layer, axis=1, keepdims=False)
+    h1, k_new, v_new, probs = _dense_core(
+        hidden, pos, k_ctx, v_ctx, length,
+        attn_norm_w, wq, wk, wv, wo, mlp_norm_w, w_gate, w_up, w_down,
+        cfg=cfg, l_max=l_max)
+    top_val, top_idx = jax.lax.top_k(probs[:, :, :l_max], n_top)
+    return h1, k_new, v_new, probs, top_idx.astype(jnp.float32), top_val
+
+
+def kv_append_dev_batch(kv_states, k_new, v_new, pos, valid, *,
+                        cfg: ModelConfig, l_max: int, s: int):
+    """Batched `kv_append_dev`: append each valid slot's [nl, H, d] K/V
+    rows at its own ``pos`` in one dispatch.  ``valid`` [s] gates the
+    write per slot (> 0 = write) so ragged groups and members that
+    skipped this step leave their slots bitwise untouched — the padded
+    tail's pos of 0 never corrupts a live slot.  ``pos[j]`` must be
+    < l_max for valid slots (the engine re-buckets before a tile fills).
+    Untupled: the single flat output replaces the group buffer.
+    """
+    nl, H, d = cfg.n_layers, cfg.n_heads, cfg.head_dim
+    kv = nl * H * l_max * d
+
+    def one(st, kn, vn, p, vd):
+        k_t = st[:kv].reshape(nl, H, l_max, d)
+        v_t = st[kv:].reshape(nl, H, l_max, d)
+        k_u = jax.lax.dynamic_update_slice(
+            k_t, kn[:, :, None, :], (0, 0, p, 0))
+        v_u = jax.lax.dynamic_update_slice(
+            v_t, vn[:, :, None, :], (0, 0, p, 0))
+        k_t = jnp.where(vd > 0, k_u, k_t)
+        v_t = jnp.where(vd > 0, v_u, v_t)
+        return jnp.concatenate([k_t.reshape(-1), v_t.reshape(-1)])
+
+    out = jax.vmap(one)(kv_states.reshape(s, 2 * kv), k_new, v_new, pos,
+                        valid)
+    return (out.reshape(-1),)
+
+
+def kv_slot_write_dev(kv_states, state, slot, *, cfg: ModelConfig,
+                      l_max: int):
+    """Write one mirror ``state`` ([kv_state_len], from a host-pool seed
+    upload or the in-device `state_to_kv` handoff) into slot ``slot`` of
+    a stacked group buffer — the membership-change primitive (join,
+    re-seed, re-bucket); never on the per-step hot path.  Untupled: the
+    output replaces the group buffer."""
+    kv = kv_state_len(cfg, l_max)
+    return (jax.lax.dynamic_update_slice(kv_states, state, (slot * kv,)),)
+
+
 def lm_head(hidden, final_norm_w, head_w, *, cfg: ModelConfig):
     return rmsnorm(hidden, final_norm_w, cfg.rms_eps) @ head_w
 

@@ -28,6 +28,10 @@ def manifest():
 def test_manifest_lists_models(manifest):
     assert "small" in manifest["models"]
     assert "bench" in manifest["models"]
+    assert "gqa" in manifest["models"], \
+        "GQA parity model must ship with the artifact set"
+    gqa = manifest["models"]["gqa"]["config"]
+    assert gqa["n_kv_heads"] < gqa["n_heads"]
 
 
 def test_all_artifact_files_exist(manifest):
@@ -145,8 +149,37 @@ def test_quick_build_in_tmp(tmp_path):
     # append artifact exists wherever a mirror bucket does)
     assert {a["params"]["l_max"] for a in appends} == \
         {a["params"]["l_max"] for a in dense_dev}
+    # batched decode residency (DESIGN.md §2): the group stages are
+    # lowered over the (batched × l_max) grid with matching buckets, the
+    # dense stage carries the in-graph top-k pair ("n_top"), and the
+    # stacked kv_states shapes are batched × kv_state_len
+    ddb = [a for a in arts if a["stage"] == "layer_step_dense_dev_batch"]
+    kab = [a for a in arts if a["stage"] == "kv_append_dev_batch"]
+    ksw = [a for a in arts if a["stage"] == "kv_slot_write_dev"]
+    assert ddb and kab and ksw, \
+        "quick set must include the batched decode residency stages"
+    key = lambda a: (a["params"]["batched"], a["params"]["l_max"])  # noqa: E731
+    assert {key(a) for a in ddb} == {key(a) for a in kab} == \
+        {key(a) for a in ksw}, "batched grids must match across stages"
+    for a in ddb:
+        assert "untupled" not in a  # 6 host-bound outputs: stays tupled
+        sb, lb = key(a)
+        nt = a["params"]["n_top"]
+        assert 0 < nt <= lb
+        kv_in = next(i for i in a["inputs"] if i["name"] == "kv_states")
+        assert kv_in["shape"] == [sb * M.kv_state_len(small_cfg, lb)]
+        outs = {o["name"]: o["shape"] for o in a["outputs"]}
+        assert outs["probs"] == [sb, small_cfg.n_heads, lb + 1]
+        assert outs["top_idx"] == [sb, small_cfg.n_heads, nt]
+        assert outs["top_val"] == [sb, small_cfg.n_heads, nt]
+    for a in kab + ksw:
+        assert a.get("untupled") is True
+        sb, lb = key(a)
+        assert a["outputs"][0]["shape"] == \
+            [sb * M.kv_state_len(small_cfg, lb)]
     # every other stage stays tupled (flag absent)
-    untupled_stages = {"prefill_extend_dev", "kv_append_dev", "state_to_kv"}
+    untupled_stages = {"prefill_extend_dev", "kv_append_dev", "state_to_kv",
+                       "kv_append_dev_batch", "kv_slot_write_dev"}
     assert all("untupled" not in a
                for a in arts if a["stage"] not in untupled_stages)
     # interchange guard: every artifact's HLO text must round-trip

@@ -634,6 +634,180 @@ def test_dense_dev_decode_loop_matches_host_staged(tiny_weights):
         np.asarray(state), _pack_state(Kc, Vc), rtol=1e-5, atol=1e-5)
 
 
+# --- batched device-resident decode (layer_step_dense_dev_batch etc.) -------
+
+
+def _np_top_k(row, k):
+    """Reference top-k with the pinned tie rule: descending value,
+    ascending index among equal values — the total order BOTH
+    `jax.lax.top_k` and rust's `util::fx::top_k_indices` implement."""
+    order = np.lexsort((np.arange(len(row)), -row))
+    return order[:k]
+
+
+def test_in_graph_top_k_tie_rule_prefers_lower_index():
+    """Pin the cross-layer tie contract: lax.top_k must order equal
+    values by ascending index (including the all-zero padded tail), so a
+    selector fed the reconstructed sparse row makes the same choice the
+    host-side full-row path makes."""
+    row = np.array([0.5, 0.9, 0.5, 0.9, 0.0, 0.9, 0.5, 0.0, 0.0, 0.0],
+                   np.float32)
+    import jax
+    v, i = jax.lax.top_k(row, 7)
+    np.testing.assert_array_equal(np.asarray(i), _np_top_k(row, 7))
+    np.testing.assert_array_equal(np.asarray(v), row[_np_top_k(row, 7)])
+    # all-equal region: pure index order
+    z = np.zeros(8, np.float32)
+    _, iz = jax.lax.top_k(z, 5)
+    np.testing.assert_array_equal(np.asarray(iz), np.arange(5))
+
+
+@pytest.mark.parametrize("cfg_name", ["tiny", "gqa"])
+def test_layer_step_dense_dev_batch_matches_per_seq(cfg_name, tiny_weights):
+    """One batched dispatch over a stacked mirror group must equal S
+    per-sequence `layer_step_dense_dev` calls slot by slot — including a
+    ragged tail (zero hidden/pos/length against a garbage slot), GQA
+    expansion, and per-slot context lengths — and its top-k outputs must
+    match the reference tie rule over each full probs row."""
+    cfg = TINY if cfg_name == "tiny" else GQA
+    w = tiny_weights if cfg_name == "tiny" else W.init_weights(cfg)
+    rng = np.random.default_rng(21)
+    nl, H, d, LM, S, NT = (cfg.n_layers, cfg.n_heads, cfg.head_dim, 12, 4, 6)
+    kv = M.kv_state_len(cfg, LM)
+    # slots 0..2 live (different lengths, slot 2 at t=0), slot 3 is the
+    # ragged tail: garbage mirror, zero hidden/pos/length
+    lens = [9, 5, 0, 0]
+    states = rng.standard_normal((S, kv)).astype(np.float32)
+    hid = rng.standard_normal((S, cfg.d_model)).astype(np.float32)
+    hid[3] = 0.0
+    pos = np.array(lens, np.int32)
+    length = np.array(lens, np.int32)
+    layer = 1
+    lw = [w[n] for n in W.layer_weight_names(layer)]
+    got = M.layer_step_dense_dev_batch(
+        hid, pos, np.int32(layer), length, states.reshape(-1), *lw,
+        cfg=cfg, l_max=LM, s=S, n_top=NT)
+    h_b, kn_b, vn_b, pr_b, ti_b, tv_b = [np.asarray(x) for x in got]
+    assert h_b.shape == (S, cfg.d_model)
+    assert kn_b.shape == (S, cfg.n_kv_heads, d)
+    assert pr_b.shape == (S, H, LM + 1)
+    assert ti_b.shape == (S, H, NT) and tv_b.shape == (S, H, NT)
+    assert np.isfinite(h_b).all() and np.isfinite(pr_b).all()
+    for j in range(3):  # live slots agree with the per-seq stage
+        want = M.layer_step_dense_dev(
+            hid[j], np.int32(lens[j]), np.int32(layer), np.int32(lens[j]),
+            states[j], *lw, cfg=cfg, l_max=LM)
+        np.testing.assert_allclose(h_b[j], np.asarray(want[0]),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(kn_b[j], np.asarray(want[1]),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(vn_b[j], np.asarray(want[2]),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(pr_b[j], np.asarray(want[3]),
+                                   rtol=1e-5, atol=1e-5)
+        # top-k pair == reference tie rule over the cached segment
+        for h in range(H):
+            ref = _np_top_k(pr_b[j, h, :LM], NT)
+            np.testing.assert_array_equal(ti_b[j, h].astype(np.int64), ref)
+            np.testing.assert_array_equal(tv_b[j, h], pr_b[j, h, :LM][ref])
+
+
+def test_kv_append_dev_batch_matches_per_seq_and_valid_gate(tiny_weights):
+    """The batched append must equal per-slot `kv_append_dev` for valid
+    slots at their own positions and leave invalid slots bitwise
+    untouched (ragged tail / members that skipped the step)."""
+    cfg = TINY
+    rng = np.random.default_rng(22)
+    nl, H, d, LM, S = cfg.n_layers, cfg.n_heads, cfg.head_dim, 8, 3
+    kv = M.kv_state_len(cfg, LM)
+    states = rng.standard_normal((S, kv)).astype(np.float32)
+    kn = rng.standard_normal((S, nl, H, d)).astype(np.float32)
+    vn = rng.standard_normal((S, nl, H, d)).astype(np.float32)
+    pos = np.array([5, 2, 0], np.int32)
+    valid = np.array([1.0, 1.0, 0.0], np.float32)
+    (out,) = M.kv_append_dev_batch(
+        states.reshape(-1), kn, vn, pos, valid, cfg=cfg, l_max=LM, s=S)
+    out = np.asarray(out).reshape(S, kv)
+    for j in range(2):
+        (want,) = M.kv_append_dev(
+            states[j], kn[j], vn[j], np.int32(pos[j]), cfg=cfg, l_max=LM)
+        np.testing.assert_array_equal(out[j], np.asarray(want))
+    np.testing.assert_array_equal(out[2], states[2])
+
+
+def test_kv_slot_write_dev_writes_exactly_one_slot(tiny_weights):
+    cfg, LM, S = TINY, 8, 4
+    rng = np.random.default_rng(23)
+    kv = M.kv_state_len(cfg, LM)
+    group = rng.standard_normal((S, kv)).astype(np.float32)
+    state = rng.standard_normal(kv).astype(np.float32)
+    (out,) = M.kv_slot_write_dev(
+        group.reshape(-1), state, np.int32(2), cfg=cfg, l_max=LM)
+    out = np.asarray(out).reshape(S, kv)
+    np.testing.assert_array_equal(out[2], state)
+    for j in (0, 1, 3):
+        np.testing.assert_array_equal(out[j], group[j])
+
+
+def test_dense_dev_batch_decode_loop_matches_per_seq_loop(tiny_weights):
+    """Engine-flow parity for the batched dispatch: a 2-slot group driven
+    through layer_step_dense_dev_batch + kv_append_dev_batch for several
+    decode steps must reproduce the per-seq dev loop (and therefore the
+    host-staged loop, by the existing per-seq parity test) exactly."""
+    cfg, w = TINY, tiny_weights
+    rng = np.random.default_rng(24)
+    nl, H, d, LM, S, steps = (cfg.n_layers, cfg.n_heads, cfg.head_dim,
+                              10, 2, 3)
+    kv = M.kv_state_len(cfg, LM)
+    lens = [6, 4]
+    group = np.zeros((S, kv), np.float32)
+    solo = []
+    for j in range(S):
+        Kj = np.zeros((nl, H, LM, d), np.float32)
+        Vj = np.zeros_like(Kj)
+        Kj[:, :, :lens[j]] = rng.standard_normal(
+            (nl, H, lens[j], d)).astype(np.float32)
+        Vj[:, :, :lens[j]] = rng.standard_normal(
+            (nl, H, lens[j], d)).astype(np.float32)
+        st = np.concatenate([Kj.reshape(-1), Vj.reshape(-1)])
+        group[j] = st
+        solo.append(st.copy())
+    hid = rng.standard_normal((S, cfg.d_model)).astype(np.float32)
+    hid_solo = hid.copy()
+    t = np.array(lens, np.int32)
+    for _ in range(steps):
+        kn_rows = np.zeros((S, nl, H, d), np.float32)
+        vn_rows = np.zeros((S, nl, H, d), np.float32)
+        for layer in range(nl):
+            lw = [w[n] for n in W.layer_weight_names(layer)]
+            hb, knb, vnb, _, _, _ = M.layer_step_dense_dev_batch(
+                hid, t, np.int32(layer), t, group.reshape(-1), *lw,
+                cfg=cfg, l_max=LM, s=S, n_top=4)
+            for j in range(S):
+                hs, kns, vns, _ = M.layer_step_dense_dev(
+                    hid_solo[j], np.int32(int(t[j])), np.int32(layer),
+                    np.int32(int(t[j])), solo[j], *lw, cfg=cfg, l_max=LM)
+                np.testing.assert_allclose(
+                    np.asarray(hb)[j], np.asarray(hs), rtol=1e-5, atol=1e-5)
+                # GQA-expand both halves symmetrically (rep == 1 for TINY)
+                rep = cfg.n_heads // cfg.n_kv_heads
+                kn_rows[j, layer] = np.repeat(np.asarray(kns), rep, axis=0)
+                vn_rows[j, layer] = np.repeat(np.asarray(vns), rep, axis=0)
+            hid = np.asarray(hb)
+            hid_solo = hid.copy()
+        (g2,) = M.kv_append_dev_batch(
+            group.reshape(-1), kn_rows, vn_rows, t,
+            np.ones(S, np.float32), cfg=cfg, l_max=LM, s=S)
+        group = np.asarray(g2).reshape(S, kv)
+        for j in range(S):
+            (s2,) = M.kv_append_dev(
+                solo[j], kn_rows[j], vn_rows[j], np.int32(int(t[j])),
+                cfg=cfg, l_max=LM)
+            solo[j] = np.asarray(s2)
+            np.testing.assert_array_equal(group[j], solo[j])
+        t = t + 1
+
+
 def test_dev_state_len_layout():
     assert M.dev_state_len(TINY, 16) == (
         2 * TINY.n_layers * TINY.n_heads * 16 * TINY.head_dim

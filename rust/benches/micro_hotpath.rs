@@ -207,15 +207,24 @@ fn main() -> anyhow::Result<()> {
         // computed through) — host-vs-device columns CI can track
         // without artifacts.
         use prhs::model::decode_staging as ds;
-        let (nl, dmod, l2k) = (4usize, 256usize, 2048usize);
+        let (nl, dmod, l2k, sb, ntop) =
+            (4usize, 256usize, 2048usize, 8usize, 160usize);
         let staging = format!(
-            "{{\"l_max\":{l2k},\"n_sel\":160,\
+            "{{\"l_max\":{l2k},\"n_sel\":160,\"batched\":{sb},\
+             \"n_top\":{ntop},\
              \"dense_host_call_bytes\":{},\"dense_dev_call_bytes\":{},\
-             \"append_dev_bytes\":{},\"mirror_seed_bytes\":{},\
+             \"dense_dev_batch_call_bytes\":{},\
+             \"probs_row_bytes\":{},\"probs_topk_bytes\":{},\
+             \"append_dev_bytes\":{},\"append_dev_batch_bytes\":{},\
+             \"mirror_seed_bytes\":{},\
              \"sparse_call_bytes\":{}}}",
             ds::dense_host_call_bytes(1, h, h, d, dmod, l2k, true),
             ds::dense_dev_call_bytes(dmod, h, h, d, l2k, true),
+            ds::dense_dev_batch_call_bytes(sb, dmod, h, d),
+            ds::probs_row_bytes(sb, h, l2k),
+            ds::probs_topk_bytes(sb, h, ntop),
             ds::append_dev_bytes(nl, h, d),
+            ds::append_dev_batch_bytes(sb, nl, h, d),
             ds::mirror_seed_bytes(nl, h, l2k, d),
             ds::sparse_call_bytes(1, h, h, d, dmod, 160, false),
         );

@@ -37,6 +37,12 @@ struct PathRun {
     decode_bytes: u64,
     dense_calls: u64,
     dense_dev_calls: u64,
+    /// Decode device-residency PJRT dispatches — O(#mirror-groups) per
+    /// step on the batched default, O(#sequences) per-seq (DESIGN.md §2).
+    dev_dispatches: u64,
+    /// Retrieval/probe probs-download bytes — O(N_sel) per retrieval
+    /// under the batched path's in-graph top-k, ∝ L on full-row paths.
+    probs_bytes: u64,
 }
 
 const DECODE_STEPS: usize = 8;
@@ -72,8 +78,8 @@ fn main() -> anyhow::Result<()> {
     println!("== prefill + decode residency scaling (chunk {chunk}) ==");
     let mut md = String::from(
         "## Prefill + decode residency scaling — device-resident vs host-staged vs recompute\n\n\
-         | L | dev ms | dev KB staged | dev decode KB | dev dense calls | host ms | host KB staged | host decode KB | host dense calls | recompute ms | recompute tokens |\n\
-         |---|---|---|---|---|---|---|---|---|---|---|\n",
+         | L | dev ms | dev KB staged | dev decode KB | dev probs KB | dev dispatches | dev dense calls | host ms | host KB staged | host decode KB | host probs KB | host dense calls | recompute ms | recompute tokens |\n\
+         |---|---|---|---|---|---|---|---|---|---|---|---|---|---|\n",
     );
     let mut json_rows: Vec<String> = Vec::new();
     for &l in lens {
@@ -126,6 +132,8 @@ fn main() -> anyhow::Result<()> {
                 decode_bytes: engine.stats.decode_host_bytes_staged,
                 dense_calls: engine.stats.dense_layer_calls,
                 dense_dev_calls: engine.stats.decode_dense_dev_calls,
+                dev_dispatches: engine.stats.decode_dev_dispatches,
+                probs_bytes: engine.stats.decode_probs_bytes,
             };
             engine.release(&mut seq);
             Ok(out)
@@ -170,6 +178,9 @@ fn main() -> anyhow::Result<()> {
                 (d.ms, d.host_bytes / 1024, d.decode_bytes / 1024, d.dense_calls)
             })
             .unwrap_or((f64::NAN, 0, 0, 0));
+        let (dev_pkb, dev_disp) = dev
+            .map(|d| (d.probs_bytes / 1024, d.dev_dispatches))
+            .unwrap_or((0, 0));
         println!(
             "  L {l:5}: dev {dev_ms:8.1} ms / {dev_kb:7} KB (+{dev_dkb:6} KB decode, {dev_dc} dense)   \
              host {:8.1} ms / {:7} KB (+{:6} KB decode, {} dense)   recompute {:8.1} ms / {:6} tok",
@@ -181,10 +192,11 @@ fn main() -> anyhow::Result<()> {
             slow.tokens,
         );
         md.push_str(&format!(
-            "| {l} | {dev_ms:.1} | {dev_kb} | {dev_dkb} | {dev_dc} | {:.1} | {} | {} | {} | {:.1} | {} |\n",
+            "| {l} | {dev_ms:.1} | {dev_kb} | {dev_dkb} | {dev_pkb} | {dev_disp} | {dev_dc} | {:.1} | {} | {} | {} | {} | {:.1} | {} |\n",
             host.ms,
             host.host_bytes / 1024,
             host.decode_bytes / 1024,
+            host.probs_bytes / 1024,
             host.dense_calls,
             slow.ms,
             slow.tokens
@@ -194,9 +206,10 @@ fn main() -> anyhow::Result<()> {
              \"dev_ms\":{:.3},\"dev_tokens\":{},\"dev_host_bytes\":{},\
              \"dev_decode_ms\":{:.3},\"dev_decode_host_bytes\":{},\
              \"dev_dense_calls\":{},\"dev_dense_dev_calls\":{},\
+             \"dev_dispatches\":{},\"dev_probs_bytes\":{},\
              \"host_ms\":{:.3},\"host_tokens\":{},\"host_host_bytes\":{},\
              \"host_decode_ms\":{:.3},\"host_decode_host_bytes\":{},\
-             \"host_dense_calls\":{},\
+             \"host_dense_calls\":{},\"host_probs_bytes\":{},\
              \"recompute_ms\":{:.3},\"recompute_tokens\":{}}}",
             dev.map(|d| d.ms).unwrap_or(-1.0),
             dev.map(|d| d.tokens).unwrap_or(0),
@@ -205,12 +218,15 @@ fn main() -> anyhow::Result<()> {
             dev.map(|d| d.decode_bytes).unwrap_or(0),
             dev.map(|d| d.dense_calls).unwrap_or(0),
             dev.map(|d| d.dense_dev_calls).unwrap_or(0),
+            dev.map(|d| d.dev_dispatches).unwrap_or(0),
+            dev.map(|d| d.probs_bytes).unwrap_or(0),
             host.ms,
             host.tokens,
             host.host_bytes,
             host.decode_ms,
             host.decode_bytes,
             host.dense_calls,
+            host.probs_bytes,
             slow.ms,
             slow.tokens
         ));

@@ -243,6 +243,19 @@ pub struct EngineConfig {
     /// artifact set predates the decode residency stages or the context
     /// outgrows their l_max buckets (DESIGN.md §2/§3).
     pub device_decode_kv: bool,
+    /// Batch the device decode dispatches across sequences: per-sequence
+    /// KV mirrors live stacked in per-bucket group buffers
+    /// (`runtime::SlotGroups`) and dense reads / appends run the batched
+    /// stages (`layer_step_dense_dev_batch` / `kv_append_dev_batch`) —
+    /// one dispatch per mirror group per (layer-with-dense-need | step)
+    /// instead of one per sequence, with the retrieval probs row
+    /// downloaded as the in-graph top-k (index, value) pair (O(N_sel))
+    /// whenever the batch's selector can decide from it
+    /// (`KvSelector::probs_topk_budget`).  On by default; the engine
+    /// falls back to the per-sequence dispatch path — the parity oracle —
+    /// when the artifact set predates the batched stages, and ignores
+    /// the flag entirely when `device_decode_kv` is off (DESIGN.md §2).
+    pub batched_decode_dispatch: bool,
     /// Max prompt tokens the scheduler's prefill stage executes per
     /// iteration across all prefilling sequences (0 = unlimited).  Bounds
     /// the prefill work inserted between decode steps, so decode latency
@@ -278,6 +291,7 @@ impl Default for EngineConfig {
             prefill_recompute: false,
             device_prefill_kv: true,
             device_decode_kv: true,
+            batched_decode_dispatch: true,
             prefill_token_budget: 0,
             max_kv_pages: 0,
             planner_threads: 0,
@@ -314,6 +328,11 @@ impl EngineConfig {
         }
         if let Some(b) = j.get("device_decode_kv").and_then(Json::as_bool) {
             cfg.device_decode_kv = b;
+        }
+        if let Some(b) =
+            j.get("batched_decode_dispatch").and_then(Json::as_bool)
+        {
+            cfg.batched_decode_dispatch = b;
         }
         if let Some(n) = j.get("prefill_token_budget").and_then(Json::as_usize)
         {
@@ -412,6 +431,10 @@ impl EngineConfig {
             Json::Bool(self.device_decode_kv),
         );
         o.insert(
+            "batched_decode_dispatch".into(),
+            Json::Bool(self.batched_decode_dispatch),
+        );
+        o.insert(
             "prefill_token_budget".into(),
             num(self.prefill_token_budget),
         );
@@ -490,13 +513,18 @@ mod tests {
             "device-resident decode KV is the default (same fallback \
              contract as the prefill flag)"
         );
+        assert!(
+            c.batched_decode_dispatch,
+            "batched device-decode dispatch is the default (per-sequence \
+             dispatch is the parity oracle / pre-batch-artifact fallback)"
+        );
         assert_eq!(c.prefill_token_budget, 0, "budget is opt-in");
         assert_eq!(c.max_kv_pages, 0, "KV cap is opt-in");
         let j = Json::parse(
             r#"{"prefill_chunk":256,"planner_threads":4,"max_batch":32,
                 "prefill_recompute":true,"prefill_token_budget":512,
                 "max_kv_pages":1024,"device_prefill_kv":false,
-                "device_decode_kv":false}"#,
+                "device_decode_kv":false,"batched_decode_dispatch":false}"#,
         )
         .unwrap();
         let c = EngineConfig::from_json(&j).unwrap();
@@ -506,6 +534,7 @@ mod tests {
         assert!(c.prefill_recompute);
         assert!(!c.device_prefill_kv);
         assert!(!c.device_decode_kv);
+        assert!(!c.batched_decode_dispatch);
         assert_eq!(c.prefill_token_budget, 512);
         assert_eq!(c.max_kv_pages, 1024);
     }
@@ -527,6 +556,7 @@ mod tests {
         c.prefill_recompute = true;
         c.device_prefill_kv = false;
         c.device_decode_kv = false;
+        c.batched_decode_dispatch = false;
         c.prefill_token_budget = 192;
         c.max_kv_pages = 77;
         c.planner_threads = 5;
@@ -557,6 +587,7 @@ mod tests {
         assert_eq!(r.prefill_recompute, c.prefill_recompute);
         assert_eq!(r.device_prefill_kv, c.device_prefill_kv);
         assert_eq!(r.device_decode_kv, c.device_decode_kv);
+        assert_eq!(r.batched_decode_dispatch, c.batched_decode_dispatch);
         assert_eq!(r.prefill_token_budget, c.prefill_token_budget);
         assert_eq!(r.max_kv_pages, c.max_kv_pages);
         assert_eq!(r.planner_threads, c.planner_threads);
@@ -582,6 +613,7 @@ mod tests {
         let j = Json::parse(&d.to_json()).unwrap();
         let r = EngineConfig::from_json(&j).unwrap();
         assert!(r.device_prefill_kv && r.device_decode_kv);
+        assert!(r.batched_decode_dispatch);
         assert_eq!(r.prefill_chunk, d.prefill_chunk);
     }
 }

@@ -378,6 +378,10 @@ impl Scheduler {
             self.metrics.decode_host_bytes =
                 self.engine.stats.decode_host_bytes_staged;
             self.metrics.dense_calls = self.engine.stats.dense_layer_calls;
+            self.metrics.decode_dev_dispatches =
+                self.engine.stats.decode_dev_dispatches;
+            self.metrics.decode_probs_bytes =
+                self.engine.stats.decode_probs_bytes;
         }
 
         // retire

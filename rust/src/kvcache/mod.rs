@@ -35,19 +35,57 @@ pub enum ResidencyMode {
     HostStaged,
 }
 
-/// Per-sequence device KV mirror: `[2, n_layers, H, lb, d]` K|V tiles in
-/// one flat device buffer (the leading segment of the prefill dev state —
-/// `model.kv_state_len`).  `handle` indexes the engine's `DeviceArena`
-/// (PJRT buffers are not `Send`; the sequence carries only this handle),
+/// Per-sequence device KV mirror: `[2, n_layers, H, lb, d]` K|V tiles
+/// (the leading segment of the prefill dev state — `model.kv_state_len`)
+/// living in one of two homes (DESIGN.md §2):
+///
+/// * `Solo` — its own flat device buffer; `handle` indexes the engine's
+///   `DeviceArena` (PJRT buffers are not `Send`; the sequence carries
+///   only this handle).  The per-sequence dispatch path
+///   (`layer_step_dense_dev` / `kv_append_dev`), kept as the batched
+///   path's parity oracle and the fallback for pre-batch artifact sets.
+/// * `Slot` — slot `slot` of a stacked group buffer tracked by the
+///   engine's `runtime::SlotGroups` under group id `group`, so dense
+///   reads and appends batch across the group's members in one dispatch
+///   (`layer_step_dense_dev_batch` / `kv_append_dev_batch`) — decode
+///   dispatches per step are O(#groups), not O(#sequences).
+///
 /// `lb` is the compiled l_max bucket, `len` the valid row count.
 /// Invariant: while live, `len == cache.len()` and `len < lb` — the
-/// engine appends every decode step (`kv_append_dev`) and drops or
-/// re-buckets the mirror instead of letting it go stale.
+/// engine appends every decode step and drops or re-buckets the mirror
+/// instead of letting it go stale.
 #[derive(Clone, Copy, Debug)]
-pub struct DevKvMirror {
-    pub handle: ArenaHandle,
-    pub lb: usize,
-    pub len: usize,
+pub enum DevKvMirror {
+    Solo { handle: ArenaHandle, lb: usize, len: usize },
+    Slot { group: usize, slot: usize, lb: usize, len: usize },
+}
+
+impl DevKvMirror {
+    pub fn lb(&self) -> usize {
+        match self {
+            DevKvMirror::Solo { lb, .. } | DevKvMirror::Slot { lb, .. } => *lb,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            DevKvMirror::Solo { len, .. } | DevKvMirror::Slot { len, .. } => {
+                *len
+            }
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn set_len(&mut self, new_len: usize) {
+        match self {
+            DevKvMirror::Solo { len, .. } | DevKvMirror::Slot { len, .. } => {
+                *len = new_len
+            }
+        }
+    }
 }
 
 /// Shared page pool.  One page stores `n_heads * page_len * head_dim` f32
@@ -465,6 +503,51 @@ impl SeqKvCache {
         }
     }
 
+    /// Densely export `[n_kv, len, d]` *unexpanded* K and V for one layer
+    /// — the staging path for artifacts whose cache input is sized by
+    /// `Hkv` (`layer_step_dense`, which re-expands in-graph via
+    /// `_repeat_kv`).  The pool stores GQA-expanded `H` rows where the
+    /// `H / n_kv` heads of one KV group are bitwise-identical copies, so
+    /// kv-head `g`'s row is expanded head `g · (H / n_kv)`.  Sizing
+    /// these tiles by the pool's `H` was the latent GQA overrun the
+    /// ROADMAP flagged: with `n_kv < H` the old `export_dense` staging
+    /// wrote `H` rows into a per-sequence slice sized for `Hkv`.
+    /// Degenerates to `export_dense` when `n_kv == n_heads`.
+    pub fn export_dense_kv(
+        &self,
+        pool: &PagePool,
+        layer: usize,
+        l_max: usize,
+        n_kv: usize,
+        out_k: &mut [f32],
+        out_v: &mut [f32],
+    ) {
+        let d = pool.head_dim;
+        debug_assert_eq!(pool.n_heads % n_kv, 0, "H must be a multiple of Hkv");
+        debug_assert!(out_k.len() >= n_kv * l_max * d);
+        let rep = pool.n_heads / n_kv;
+        let n = self.len.min(l_max);
+        for g in 0..n_kv {
+            let head = g * rep; // group leader in the expanded pool
+            let mut pos = 0usize;
+            while pos < n {
+                let pi = pos / pool.page_len;
+                let slot = pos % pool.page_len;
+                let run = (pool.page_len - slot).min(n - pos);
+                let page_id = self.tables[layer][pi];
+                let off = pool.row(head, slot);
+                let dst = (g * l_max + pos) * d;
+                out_k[dst..dst + run * d].copy_from_slice(
+                    &pool.k_pages[page_id][off..off + run * d],
+                );
+                out_v[dst..dst + run * d].copy_from_slice(
+                    &pool.v_pages[page_id][off..off + run * d],
+                );
+                pos += run;
+            }
+        }
+    }
+
     /// Release all pages back to the pool (sequence finished).
     pub fn release(&mut self, pool: &mut PagePool) {
         for table in &mut self.tables {
@@ -559,6 +642,59 @@ mod tests {
             let dst = (h * l_max + 12) * 4;
             assert_eq!(&k[dst..dst + 4], &[0.0; 4]);
         }
+    }
+
+    /// Issue satellite (GQA latent bug): `export_dense_kv` must stage
+    /// exactly `Hkv` unexpanded rows from a GQA-expanded pool — the
+    /// group leader per KV group — into a tile sized by `Hkv`, and must
+    /// degenerate to `export_dense` when `Hkv == H`.
+    #[test]
+    fn export_dense_kv_stages_group_leaders() {
+        // pool with H = 4 expanded heads; appends duplicate rows in
+        // groups of rep = 2, exactly like the engine's GQA expansion
+        let mut pool = PagePool::new(4, 4, 8);
+        let mut c = SeqKvCache::new(1);
+        let mut rng = Rng::new(12);
+        let (h, hkv, d, rep) = (4usize, 2usize, 4usize, 2usize);
+        for _ in 0..10 {
+            let mut k = vec![0f32; h * d];
+            let mut v = vec![0f32; h * d];
+            for g in 0..hkv {
+                let kr = row(&mut rng, d);
+                let vr = row(&mut rng, d);
+                for r in 0..rep {
+                    let hh = g * rep + r;
+                    k[hh * d..(hh + 1) * d].copy_from_slice(&kr);
+                    v[hh * d..(hh + 1) * d].copy_from_slice(&vr);
+                }
+            }
+            c.append(&mut pool, 0, &k, &v).unwrap();
+            c.commit_token();
+        }
+        let l_max = 16;
+        let mut k = vec![0f32; hkv * l_max * d];
+        let mut v = vec![0f32; hkv * l_max * d];
+        c.export_dense_kv(&pool, 0, l_max, hkv, &mut k, &mut v);
+        for g in 0..hkv {
+            for p in 0..10 {
+                let dst = (g * l_max + p) * d;
+                // kv-head g == expanded group leader g·rep
+                assert_eq!(&k[dst..dst + d], c.key(&pool, 0, g * rep, p));
+                assert_eq!(&v[dst..dst + d], c.value(&pool, 0, g * rep, p));
+            }
+            // padding stays zero
+            let dst = (g * l_max + 12) * d;
+            assert_eq!(&k[dst..dst + d], &[0.0; 4]);
+        }
+        // Hkv == H degenerates to export_dense exactly
+        let mut ka = vec![0f32; h * l_max * d];
+        let mut va = vec![0f32; h * l_max * d];
+        let mut kb = vec![0f32; h * l_max * d];
+        let mut vb = vec![0f32; h * l_max * d];
+        c.export_dense(&pool, 0, l_max, &mut ka, &mut va);
+        c.export_dense_kv(&pool, 0, l_max, h, &mut kb, &mut vb);
+        assert_eq!(ka, kb);
+        assert_eq!(va, vb);
     }
 
     #[test]

@@ -121,6 +121,7 @@ fn serve(rest: &[String]) -> Result<()> {
         .switch("prefill-recompute", "use the prefix-recompute chunked-prefill path (parity oracle)")
         .switch("host-prefill-kv", "stage the prefill context through the host each chunk (disable the device-resident prefill KV path)")
         .switch("host-decode-kv", "stage the decode dense/retrieval context through the host each call (disable the device-resident decode KV mirror)")
+        .switch("per-seq-decode-dispatch", "dispatch the device decode path one sequence at a time (disable the batched mirror-group dispatch; parity oracle)")
         .flag("planner-threads", "0", "host-side planner pool width (0/1 = serial)");
     let args = cli.parse(rest).map_err(anyhow::Error::msg)?;
     let mut cfg = EngineConfig::default();
@@ -137,6 +138,7 @@ fn serve(rest: &[String]) -> Result<()> {
     cfg.prefill_recompute = args.get_bool("prefill-recompute");
     cfg.device_prefill_kv = !args.get_bool("host-prefill-kv");
     cfg.device_decode_kv = !args.get_bool("host-decode-kv");
+    cfg.batched_decode_dispatch = !args.get_bool("per-seq-decode-dispatch");
     cfg.planner_threads = args.get_usize("planner-threads");
     // vocab comes from the manifest (read it without building an engine)
     let vocab = prhs::runtime::Manifest::load(args.get("artifacts"))?

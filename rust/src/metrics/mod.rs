@@ -121,6 +121,15 @@ pub struct RunMetrics {
     /// `StepStats::dense_layer_calls` (same count on both residency
     /// modes: one per layer with any dense-needing sequence).
     pub dense_calls: u64,
+    /// Decode device-residency PJRT dispatches, mirrored from
+    /// `StepStats::decode_dev_dispatches` — O(#mirror-groups) per step
+    /// with `EngineConfig::batched_decode_dispatch`, O(#sequences) on
+    /// the per-seq fallback (DESIGN.md §2).
+    pub decode_dev_dispatches: u64,
+    /// Retrieval/probe probs-download bytes, mirrored from
+    /// `StepStats::decode_probs_bytes` — O(N_sel) per retrieval under
+    /// the batched path's in-graph top-k, ∝ L on full-row paths.
+    pub decode_probs_bytes: u64,
     pub wall_s: f64,
     /// Decode-phase head-level retrievals only (prefill-side scoring is
     /// excluded from ρ̂ by definition — paper Sec. III, DESIGN.md §4).

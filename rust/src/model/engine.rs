@@ -20,7 +20,7 @@ use crate::config::EngineConfig;
 use crate::kvcache::{DevKvMirror, PagePool, ResidencyMode, SeqKvCache};
 use crate::runtime::{
     ArenaHandle, ArtifactSpec, DeviceArena, Input, ModelManifest, Output,
-    Runtime, WeightStore,
+    Runtime, SlotGroups, WeightStore,
 };
 use crate::selector::{KvSelector, PlanKind, SelectorCtx};
 use crate::util::pool::for_each_unit;
@@ -134,11 +134,10 @@ pub mod decode_staging {
     /// (`layer_step_dense`): hidden + pos + length + the full context
     /// tile pair up; hidden + k/v rows (+ the probs rows when observed)
     /// down.  The `2·b·Hkv·l_max·d` upload term is the ∝ L cost the
-    /// device mirror eliminates.  NOTE: the host pass sizes its tiles
-    /// by `Hkv` while the page pool stores GQA-expanded `H` rows — the
-    /// engine currently assumes `Hkv == H` on this path (true for both
-    /// served models; the device path uses the full-`H` mirror layout
-    /// and has no such assumption — see ROADMAP).
+    /// device mirror eliminates.  The tiles really are `Hkv` rows: the
+    /// engine stages them through `export_dense_kv`, which reads the
+    /// unexpanded group-leader rows out of the GQA-expanded pool (the
+    /// ROADMAP's former `Hkv == H` assumption is gone).
     pub fn dense_host_call_bytes(
         b: usize,
         hkv: usize,
@@ -193,6 +192,51 @@ pub mod decode_staging {
         4 * (2 * nl * h * l_max * d) as u64
     }
 
+    /// Batched device-mirror dense/full-scoring dispatch
+    /// (`layer_step_dense_dev_batch`, one per (layer, mirror group)):
+    /// hidden `[s, dm]` + pos/length `[s]` + the layer scalar up — the
+    /// stacked mirrors are device-resident — and hidden + k/v rows for
+    /// every slot down.  Probs downloads are charged separately
+    /// (`probs_row_bytes` / `probs_topk_bytes`) because the engine
+    /// selects exactly one of the two forms per dispatch.
+    pub fn dense_dev_batch_call_bytes(
+        s: usize,
+        dm: usize,
+        hkv: usize,
+        d: usize,
+    ) -> u64 {
+        let up = s * dm + 2 * s + 1;
+        let down = s * dm + 2 * s * hkv * d;
+        4 * (up + down) as u64
+    }
+
+    /// Full retrieval/probe probs rows `[s, H, l_max + 1]` — the ∝ L
+    /// download the in-graph top-k replaces on retrieval steps (probe
+    /// steps always pay it: δ/β need the whole row).
+    pub fn probs_row_bytes(s: usize, h: usize, l_max: usize) -> u64 {
+        4 * (s * h * (l_max + 1)) as u64
+    }
+
+    /// In-graph top-k (index, value) pair `[s, H, n_top]` × 2 —
+    /// O(N_sel), independent of context length: the probs-download
+    /// collapse this PR's tentpole is pinned by.
+    pub fn probs_topk_bytes(s: usize, h: usize, n_top: usize) -> u64 {
+        4 * (2 * s * h * n_top) as u64
+    }
+
+    /// Batched mirror append (`kv_append_dev_batch`, ONE dispatch per
+    /// mirror group per step): every slot's `[nl, H, d]` K/V rows + pos
+    /// + valid gates up, nothing down (the output replaces the group
+    /// buffer in place).
+    pub fn append_dev_batch_bytes(
+        s: usize,
+        nl: usize,
+        h: usize,
+        d: usize,
+    ) -> u64 {
+        4 * (s * 2 * nl * h * d + 2 * s) as u64
+    }
+
     /// Batched sparse TSA call (`layer_step`): hidden + pos + the
     /// gathered `[b, H, n_sel, d]` tile pair + mask up; hidden + k/v
     /// rows (+ probs rows for H2O-style observers) down — the O(N_sel)
@@ -212,6 +256,53 @@ pub mod decode_staging {
             + if want_probs { b * h * (n_sel + 1) } else { 0 };
         4 * (up + down) as u64
     }
+}
+
+/// Pure model of the PJRT dispatches the decode device-residency
+/// machinery issues per steady-state decode step (dense reads + mirror
+/// appends; slot writes and handoffs are membership-change events, not
+/// per-step costs).  `StepStats::decode_dev_dispatches` is accumulated
+/// at the same sites these functions model, so the
+/// O(#groups)-not-O(#sequences) acceptance criterion is pinned
+/// engine-free (`batched_decode_dispatches_are_o_groups`) and on
+/// artifacts (the cross-mode differential harness).
+pub mod decode_dispatch {
+    /// Batched mode: one `layer_step_dense_dev_batch` per (dense-needing
+    /// layer × mirror group) + one `kv_append_dev_batch` per group —
+    /// O(#groups), independent of how many sequences share each group.
+    pub fn batched_step(groups: usize, dense_layers: usize) -> u64 {
+        (dense_layers * groups + groups) as u64
+    }
+
+    /// Per-sequence (solo) mode — the parity oracle / pre-batch-artifact
+    /// fallback: one `layer_step_dense_dev` per (dense-needing layer ×
+    /// dense-needing sequence) + one `kv_append_dev` per mirrored
+    /// sequence — O(#sequences).
+    pub fn solo_step(
+        seqs: usize,
+        dense_seqs: usize,
+        dense_layers: usize,
+    ) -> u64 {
+        (dense_layers * dense_seqs + seqs) as u64
+    }
+
+    /// Mirror groups needed for `n` same-bucket sequences at group
+    /// capacity `cap` (the batched grouping planner's partition size).
+    pub fn groups_needed(n: usize, cap: usize) -> usize {
+        n.div_ceil(cap.max(1))
+    }
+}
+
+/// How the decode device path dispatches at a given context size
+/// (`Engine::dev_dispatch`): `Batched` — mirrors live as slots of
+/// stacked group buffers and one PJRT dispatch serves a whole group
+/// (the default); `Solo` — one buffer and one dispatch per sequence
+/// (the parity oracle, and the fallback for artifact sets predating
+/// the batched stages).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum DevDispatch {
+    Batched { s: usize, lb: usize },
+    Solo { lb: usize },
 }
 
 /// Pack a sequence's cached K/V into `[nl, H, l_max, d]` tiles (one
@@ -437,10 +528,14 @@ pub struct Sequence {
     pub dev_state_slot: Option<ArenaHandle>,
     /// Device-resident decode KV mirror (DESIGN.md §2): seeded in-device
     /// from the prefill state (`state_to_kv`) or from the host pool on
-    /// first dense need, appended every decode step (`kv_append_dev`),
-    /// read by `layer_step_dense_dev` on retrieval/dense/probe layers.
-    /// Dropped (and later re-seeded at a bigger bucket) when the context
-    /// outgrows its tile; freed by `Engine::release`.
+    /// first dense need, appended every decode step, read on
+    /// retrieval/dense/probe layers.  Lives either as a slot of a
+    /// stacked mirror-group buffer (`DevKvMirror::Slot`, the batched
+    /// dispatch default — reads/appends amortize one PJRT dispatch per
+    /// group) or as its own buffer (`DevKvMirror::Solo`, the per-seq
+    /// oracle/fallback).  Dropped (and later re-seeded at a bigger
+    /// bucket) when the context outgrows its tile; freed by
+    /// `Engine::release`.
     pub kv_mirror: Option<DevKvMirror>,
 }
 
@@ -510,11 +605,28 @@ pub struct StepStats {
     /// observable this PR's tentpole collapse is pinned by
     /// (DESIGN.md §2).
     pub decode_host_bytes_staged: u64,
-    /// `layer_step_dense_dev` invocations (one per sequence per
-    /// dense-needing layer on the device path; the host-staged oracle
-    /// instead batches one `layer_step_dense` call, counted in
-    /// `dense_layer_calls` on both paths).
+    /// Per-sequence device dense reads served (one per dense-needing
+    /// sequence per dense-needing layer on BOTH device dispatch modes —
+    /// a batched dispatch serving 4 members counts 4; the host-staged
+    /// oracle instead batches one `layer_step_dense` call, counted in
+    /// `dense_layer_calls` on every path).
     pub decode_dense_dev_calls: u64,
+    /// PJRT dispatches issued by the decode device-residency machinery:
+    /// dense reads, mirror appends, slot writes, `state_to_kv`
+    /// handoffs.  With `EngineConfig::batched_decode_dispatch` a
+    /// steady-state step issues O(#mirror-groups) dispatches
+    /// (`decode_dispatch::batched_step`); the per-sequence fallback
+    /// issues O(#sequences) (`decode_dispatch::solo_step`) — the
+    /// dispatch-amortization observable this PR's tentpole is pinned
+    /// by (DESIGN.md §2).
+    pub decode_dev_dispatches: u64,
+    /// Bytes of retrieval/probe probability feedback downloaded — the
+    /// probs component of `decode_host_bytes_staged`, tracked across
+    /// every path: full rows are ∝ L per retrieving call, while the
+    /// batched path's in-graph top-k shrinks a retrieval's download to
+    /// O(N_sel) (index, value) pairs (`decode_staging::
+    /// probs_topk_bytes`; probe steps always download full rows).
+    pub decode_probs_bytes: u64,
 }
 
 impl StepStats {
@@ -630,6 +742,28 @@ pub struct Engine {
     /// shared as every sequence's chunk-0 input (buffers are immutable
     /// inputs under PJRT, so sharing is safe).
     dev_zero: std::collections::BTreeMap<usize, PjRtBuffer>,
+    /// Occupancy tracker for the stacked mirror-group buffers of the
+    /// batched decode dispatch (DESIGN.md §2): each group is ONE arena
+    /// buffer holding `dev_batch_tile()` mirror slots, so dense reads
+    /// and appends amortize one PJRT dispatch across the group's
+    /// members.  Sequences carry `DevKvMirror::Slot { group, slot }`.
+    groups: SlotGroups,
+    /// Cached all-zero stacked group template per l_max bucket
+    /// (`[S · kv_state_len]`), uploaded once: group creation writes the
+    /// first member into it via `kv_slot_write_dev` (execute never
+    /// mutates inputs), producing the owned group buffer.
+    dev_group_zero: std::collections::BTreeMap<usize, PjRtBuffer>,
+    /// Batched group-append staging (`kv_append_dev_batch` inputs):
+    /// `[S, nl, H, d]` K/V rows + per-slot pos + valid gates.
+    sc_ga_k: Vec<f32>,
+    sc_ga_v: Vec<f32>,
+    sc_ga_pos: Vec<i32>,
+    sc_ga_valid: Vec<f32>,
+    /// Batched dense-dispatch staging (`layer_step_dense_dev_batch`
+    /// inputs): per-slot hidden rows + pos + length.
+    sc_gb_hidden: Vec<f32>,
+    sc_gb_pos: Vec<i32>,
+    sc_gb_len: Vec<i32>,
     /// Mirror-seed staging tile `[2, nl, H, lb, d]` (K half then V half)
     /// for seeding/re-bucketing a decode mirror from the host pool.
     sc_mirror: Vec<f32>,
@@ -690,6 +824,15 @@ impl Engine {
             sc_pf_v: Vec::new(),
             arena: DeviceArena::new(),
             dev_zero: std::collections::BTreeMap::new(),
+            groups: SlotGroups::new(),
+            dev_group_zero: std::collections::BTreeMap::new(),
+            sc_ga_k: Vec::new(),
+            sc_ga_v: Vec::new(),
+            sc_ga_pos: Vec::new(),
+            sc_ga_valid: Vec::new(),
+            sc_gb_hidden: Vec::new(),
+            sc_gb_pos: Vec::new(),
+            sc_gb_len: Vec::new(),
             sc_mirror: Vec::new(),
             sc_do_hidden: Vec::new(),
             sc_do_k: Vec::new(),
@@ -921,51 +1064,199 @@ impl Engine {
 
     /// Which residency the decode dense/full-scoring path uses for a
     /// context of `need` tokens: `Device` when `device_decode_kv` is on
-    /// and the artifact set carries the decode residency stages with a
-    /// bucket ≥ `need`; `HostStaged` (the `export_dense` oracle path)
-    /// otherwise — including for pre-device artifact sets, which is the
-    /// runtime fallback mode.
+    /// and the artifact set carries a decode residency stage family
+    /// (batched or per-seq) with a bucket ≥ `need`; `HostStaged` (the
+    /// `export_dense_kv` oracle path) otherwise — including for
+    /// pre-device artifact sets, which is the runtime fallback mode.
     pub fn decode_kv_residency(&self, need: usize) -> ResidencyMode {
-        if self.cfg.device_decode_kv && self.dense_dev_bucket(need).is_some()
-        {
+        if self.dev_dispatch(need).is_some() {
             ResidencyMode::Device
         } else {
             ResidencyMode::HostStaged
         }
     }
 
-    /// Smallest decode-mirror bucket ≥ `need` with BOTH residency stages
-    /// compiled (dense read + append) — the engine never creates a
-    /// mirror it cannot keep fresh.
+    /// Slot count S of the batched decode stages, resolved from the
+    /// manifest: the smallest `batched` bucket ≥ `max_batch` (so one
+    /// group can hold a full decode batch), else the largest compiled.
+    /// `None` turns the batched dispatch off — flag disabled or a
+    /// pre-batch artifact set (per-sequence fallback).
+    fn dev_batch_tile(&self) -> Option<usize> {
+        if !self.cfg.batched_decode_dispatch {
+            return None;
+        }
+        let bs = self.mm.buckets("layer_step_dense_dev_batch", "batched");
+        bs.iter()
+            .copied()
+            .find(|&s| s >= self.cfg.max_batch)
+            .or_else(|| bs.last().copied())
+    }
+
+    /// All three batched stages compiled at exactly (S, lb) — the engine
+    /// never creates a group it cannot read, append, or write slots of.
+    fn dev_batch_stages_at(&self, s: usize, lb: usize) -> bool {
+        let p = [("batched", s), ("l_max", lb)];
+        self.mm.find("layer_step_dense_dev_batch", &p).is_some()
+            && self.mm.find("kv_append_dev_batch", &p).is_some()
+            && self.mm.find("kv_slot_write_dev", &p).is_some()
+    }
+
+    /// Smallest batched-mirror bucket ≥ `need` with all three batched
+    /// stages compiled at the engine's slot count.
+    fn dense_dev_batch_bucket(&self, s: usize, need: usize) -> Option<usize> {
+        self.mm
+            .buckets("layer_step_dense_dev_batch", "l_max")
+            .into_iter()
+            .find(|&lb| lb >= need && self.dev_batch_stages_at(s, lb))
+    }
+
+    /// Smallest per-seq decode-mirror bucket ≥ `need` with BOTH solo
+    /// residency stages compiled (dense read + append) — the engine
+    /// never creates a mirror it cannot keep fresh.
     fn dense_dev_bucket(&self, need: usize) -> Option<usize> {
         let lb = self.mm.bucket_for("layer_step_dense_dev", "l_max", need)?;
         self.mm.find("kv_append_dev", &[("l_max", lb)])?;
         Some(lb)
     }
 
-    fn drop_mirror(&mut self, seq: &mut Sequence) {
-        if let Some(m) = seq.kv_mirror.take() {
-            self.arena.free(m.handle);
+    /// Dispatch home for the decode dense path at context `need`:
+    /// batched group slot when the batched stages cover it (the
+    /// default), per-sequence buffer as the parity oracle / pre-batch
+    /// fallback, `None` = host-staged.
+    fn dev_dispatch(&self, need: usize) -> Option<DevDispatch> {
+        if !self.cfg.device_decode_kv {
+            return None;
         }
+        if let Some(s) = self.dev_batch_tile() {
+            if let Some(lb) = self.dense_dev_batch_bucket(s, need) {
+                return Some(DevDispatch::Batched { s, lb });
+            }
+        }
+        self.dense_dev_bucket(need).map(|lb| DevDispatch::Solo { lb })
+    }
+
+    fn drop_mirror(&mut self, seq: &mut Sequence) {
+        match seq.kv_mirror.take() {
+            Some(DevKvMirror::Solo { handle, .. }) => self.arena.free(handle),
+            Some(DevKvMirror::Slot { group, slot, .. }) => {
+                if let Some(handle) = self.groups.release(group, slot) {
+                    self.arena.free(handle);
+                }
+            }
+            None => {}
+        }
+    }
+
+    /// Upload the cached all-zero stacked group template for bucket `lb`
+    /// once (shared across group creations; `kv_slot_write_dev` reads
+    /// it as an immutable input).
+    fn ensure_group_zero(&mut self, s: usize, lb: usize) -> Result<()> {
+        if !self.dev_group_zero.contains_key(&lb) {
+            let kv =
+                2 * self.mm.n_layers * self.mm.n_heads * lb * self.mm.head_dim;
+            let zeros = vec![0f32; s * kv];
+            let buf = self.rt.upload_f32(&zeros, &[s * kv])?;
+            self.dev_group_zero.insert(lb, buf);
+        }
+        Ok(())
+    }
+
+    /// Execute `kv_slot_write_dev` over a stacked group buffer (or the
+    /// zero template when creating a group), returning the replacement
+    /// buffer.  Takes `&self` so `stacked` may borrow the arena.
+    fn exec_slot_write(
+        &self,
+        s: usize,
+        lb: usize,
+        stacked: &PjRtBuffer,
+        slot: usize,
+        state: Input<'_>,
+    ) -> Result<PjRtBuffer> {
+        let art =
+            self.art("kv_slot_write_dev", &[("batched", s), ("l_max", lb)])?;
+        let inputs =
+            [Input::Buffer(stacked), state, Input::ScalarI32(slot as i32)];
+        let mut outs = self.rt.execute_keep(&art, &inputs, &[true])?;
+        drop(inputs);
+        outs.pop().and_then(Output::into_device).ok_or_else(|| {
+            anyhow!(
+                "{}: expected a device-resident kv_states output",
+                art.name
+            )
+        })
+    }
+
+    /// Home one mirror `state` (a host-staged seed tile or a
+    /// device-resident `state_to_kv` result) into a (group, slot) at
+    /// bucket `lb`: reuse a group with a free slot or create one from
+    /// the zero template.  One slot-write dispatch — a membership-change
+    /// cost (join / re-seed / re-bucket), never per step.
+    fn home_group_slot(
+        &mut self,
+        s: usize,
+        lb: usize,
+        state: Input<'_>,
+    ) -> Result<(usize, usize)> {
+        let (gid, slot) = match self.groups.find_free(lb) {
+            Some(gid) => {
+                let slot = self.groups.claim(gid).expect("free slot");
+                let handle = self.groups.get(gid).handle;
+                let buf = self.exec_slot_write(
+                    s,
+                    lb,
+                    self.arena.get(handle),
+                    slot,
+                    state,
+                )?;
+                self.arena.replace(handle, buf);
+                (gid, slot)
+            }
+            None => {
+                self.ensure_group_zero(s, lb)?;
+                let buf = self.exec_slot_write(
+                    s,
+                    lb,
+                    &self.dev_group_zero[&lb],
+                    0,
+                    state,
+                )?;
+                let handle = self.arena.alloc(buf);
+                let gid = self.groups.create(handle, lb, s);
+                let slot = self.groups.claim(gid).expect("fresh group slot");
+                debug_assert_eq!(slot, 0);
+                (gid, slot)
+            }
+        };
+        self.stats.decode_dev_dispatches += 1;
+        Ok((gid, slot))
     }
 
     /// In-device prefill→decode handoff: run `state_to_kv` over the
     /// live prefill state buffer so the decode mirror is seeded with
     /// ZERO host traffic (no download→page-pool→re-upload round trip for
-    /// the dense-path KV).  No-op when decode residency is off, the
-    /// artifact set lacks the stages, or the prompt already fills the
-    /// tile (the next append would overflow; decode re-buckets from the
-    /// host pool instead).
+    /// the dense-path KV) — into a group slot on the batched path, its
+    /// own buffer on the per-seq path.  No-op when decode residency is
+    /// off, the artifact set lacks the stages at the prefill bucket, or
+    /// the prompt already fills the tile (the next append would
+    /// overflow; decode re-buckets from the host pool instead).
     fn seed_mirror_from_prefill(
         &mut self,
         seq: &mut Sequence,
         lb: usize,
         len: usize,
     ) -> Result<()> {
-        if !self.cfg.device_decode_kv
-            || len >= lb
-            || self.mm.find("layer_step_dense_dev", &[("l_max", lb)]).is_none()
-            || self.mm.find("kv_append_dev", &[("l_max", lb)]).is_none()
+        if !self.cfg.device_decode_kv || len >= lb {
+            return Ok(());
+        }
+        let batched = self
+            .dev_batch_tile()
+            .filter(|&s| self.dev_batch_stages_at(s, lb));
+        if batched.is_none()
+            && (self
+                .mm
+                .find("layer_step_dense_dev", &[("l_max", lb)])
+                .is_none()
+                || self.mm.find("kv_append_dev", &[("l_max", lb)]).is_none())
         {
             return Ok(());
         }
@@ -980,30 +1271,57 @@ impl Engine {
         let buf = outs.pop().and_then(Output::into_device).ok_or_else(|| {
             anyhow!("{}: expected a device-resident kv_state output", art.name)
         })?;
-        let handle = self.arena.alloc(buf);
-        seq.kv_mirror = Some(DevKvMirror { handle, lb, len });
+        self.stats.decode_dev_dispatches += 1;
+        match batched {
+            Some(s) => {
+                let (group, slot) =
+                    self.home_group_slot(s, lb, Input::Buffer(&buf))?;
+                seq.kv_mirror =
+                    Some(DevKvMirror::Slot { group, slot, lb, len });
+            }
+            None => {
+                let handle = self.arena.alloc(buf);
+                seq.kv_mirror = Some(DevKvMirror::Solo { handle, lb, len });
+            }
+        }
         Ok(())
     }
 
     /// Make sure `seq` has a live device mirror able to hold its context
-    /// plus this step's append (`lb > len`): reuse the existing one, or
-    /// seed/re-bucket it from the host pool — the always-fresh source of
-    /// truth — with one packed upload (charged to the byte counter;
-    /// amortized over every later retrieval, never paid per call).
+    /// plus this step's append (`lb > len`) in the CURRENT dispatch
+    /// home: reuse the existing one, or seed/re-bucket it from the host
+    /// pool — the always-fresh source of truth — with one packed upload
+    /// (charged to the byte counter; amortized over every later
+    /// retrieval, never paid per call).  A mirror in the wrong home
+    /// (artifact set changed under a running engine — test-only) is
+    /// dropped and re-seeded.
     fn ensure_mirror(&mut self, seq: &mut Sequence) -> Result<()> {
         let t = seq.cache.len();
+        let want = self.dev_dispatch(t + 1).ok_or_else(|| {
+            anyhow!("context {} exceeds decode-mirror buckets", t + 1)
+        })?;
         if let Some(m) = &seq.kv_mirror {
-            debug_assert_eq!(m.len, t, "mirror out of sync with cache");
-            if m.lb > t {
+            debug_assert_eq!(m.len(), t, "mirror out of sync with cache");
+            let fits = match (m, want) {
+                (DevKvMirror::Solo { lb, .. }, DevDispatch::Solo { .. }) => {
+                    *lb > t
+                }
+                (
+                    DevKvMirror::Slot { lb, .. },
+                    DevDispatch::Batched { .. },
+                ) => *lb > t,
+                _ => false,
+            };
+            if fits {
                 return Ok(());
             }
-            self.drop_mirror(seq); // outgrown: re-bucket below
+            self.drop_mirror(seq); // outgrown or re-homed: re-seed below
         }
         let (nl, h, d) =
             (self.mm.n_layers, self.mm.n_heads, self.mm.head_dim);
-        let lb = self.dense_dev_bucket(t + 1).ok_or_else(|| {
-            anyhow!("context {} exceeds decode-mirror buckets", t + 1)
-        })?;
+        let lb = match want {
+            DevDispatch::Batched { lb, .. } | DevDispatch::Solo { lb } => lb,
+        };
         let per = h * lb * d;
         let total = nl * per;
         if self.sc_mirror.len() < 2 * total {
@@ -1012,34 +1330,77 @@ impl Engine {
         self.sc_mirror[..2 * total].fill(0.0);
         let (kh, vh) = self.sc_mirror[..2 * total].split_at_mut(total);
         pack_dense_tiles(&self.pool, &seq.cache, nl, lb, kh, vh);
-        let buf =
-            self.rt.upload_f32(&self.sc_mirror[..2 * total], &[2 * total])?;
-        let handle = self.arena.alloc(buf);
-        seq.kv_mirror = Some(DevKvMirror { handle, lb, len: t });
         self.stats.decode_host_bytes_staged +=
             decode_staging::mirror_seed_bytes(nl, h, lb, d);
+        match want {
+            DevDispatch::Solo { .. } => {
+                let buf = self
+                    .rt
+                    .upload_f32(&self.sc_mirror[..2 * total], &[2 * total])?;
+                let handle = self.arena.alloc(buf);
+                seq.kv_mirror =
+                    Some(DevKvMirror::Solo { handle, lb, len: t });
+            }
+            DevDispatch::Batched { s, .. } => {
+                // the seed tile rides as a plain host input to the slot
+                // write; mem::take keeps the borrow off `self`
+                let tile = std::mem::take(&mut self.sc_mirror);
+                let state = Input::F32(&tile[..2 * total], vec![2 * total]);
+                let homed = self.home_group_slot(s, lb, state);
+                self.sc_mirror = tile;
+                let (group, slot) = homed?;
+                seq.kv_mirror =
+                    Some(DevKvMirror::Slot { group, slot, lb, len: t });
+            }
+        }
         Ok(())
     }
 
-    /// Append this step's K/V rows (staged into `scratch.dev_k/dev_v`
-    /// during the layer loop) into the sequence's device mirror via one
-    /// `kv_append_dev` execution — the output buffer replaces the mirror
-    /// in place.  Drops the mirror instead of appending when the tile is
-    /// full (a clamped `dynamic_update_slice` would corrupt the last
-    /// row); the next dense need re-buckets from the host pool.
-    fn mirror_append(&mut self, seq: &mut Sequence) -> Result<()> {
-        let Some(m) = seq.kv_mirror else { return Ok(()) };
-        let t = seq.cache.len();
-        if m.len != t || t >= m.lb {
-            self.drop_mirror(seq);
-            return Ok(());
+    /// Keep every live mirror fresh after the layer loop: per-sequence
+    /// `kv_append_dev` executions for solo mirrors, ONE
+    /// `kv_append_dev_batch` per mirror group for slot mirrors — the
+    /// valid gate means group members outside this decode batch keep
+    /// their slots bitwise untouched.  A mirror out of sync with its
+    /// cache or at tile capacity is dropped instead of appended (a
+    /// clamped `dynamic_update_slice` would corrupt the last row); the
+    /// next dense need re-buckets it from the host pool.
+    fn mirror_append_all(&mut self, seqs: &mut [&mut Sequence]) -> Result<()> {
+        let mut by_group: std::collections::BTreeMap<usize, Vec<usize>> =
+            std::collections::BTreeMap::new();
+        for (i, seq) in seqs.iter_mut().enumerate() {
+            let Some(m) = seq.kv_mirror else { continue };
+            let t = seq.cache.len();
+            if m.len() != t || t >= m.lb() {
+                self.drop_mirror(seq);
+                continue;
+            }
+            match m {
+                DevKvMirror::Solo { .. } => self.mirror_append_solo(seq)?,
+                DevKvMirror::Slot { group, .. } => {
+                    by_group.entry(group).or_default().push(i)
+                }
+            }
         }
+        for (gid, members) in by_group {
+            self.group_append(seqs, gid, &members)?;
+        }
+        Ok(())
+    }
+
+    /// One `kv_append_dev` for a solo mirror (the per-seq dispatch
+    /// path); the output buffer replaces the mirror in place.
+    fn mirror_append_solo(&mut self, seq: &mut Sequence) -> Result<()> {
+        let Some(DevKvMirror::Solo { handle, lb, .. }) = seq.kv_mirror
+        else {
+            return Ok(());
+        };
+        let t = seq.cache.len();
         let (nl, h, d) =
             (self.mm.n_layers, self.mm.n_heads, self.mm.head_dim);
-        let art = self.art("kv_append_dev", &[("l_max", m.lb)])?;
+        let art = self.art("kv_append_dev", &[("l_max", lb)])?;
         let n = nl * h * d;
         let inputs = [
-            Input::Buffer(self.arena.get(m.handle)),
+            Input::Buffer(self.arena.get(handle)),
             Input::F32(&seq.scratch.dev_k[..n], vec![nl, h, d]),
             Input::F32(&seq.scratch.dev_v[..n], vec![nl, h, d]),
             Input::ScalarI32(t as i32),
@@ -1049,10 +1410,75 @@ impl Engine {
         let buf = outs.pop().and_then(Output::into_device).ok_or_else(|| {
             anyhow!("{}: expected a device-resident kv_state output", art.name)
         })?;
-        self.arena.replace(m.handle, buf);
-        seq.kv_mirror.as_mut().expect("mirror still live").len = t + 1;
+        self.arena.replace(handle, buf);
+        seq.kv_mirror.as_mut().expect("mirror still live").set_len(t + 1);
         self.stats.decode_host_bytes_staged +=
             decode_staging::append_dev_bytes(nl, h, d);
+        self.stats.decode_dev_dispatches += 1;
+        Ok(())
+    }
+
+    /// One `kv_append_dev_batch` covering a mirror group's members in
+    /// this decode batch (slots outside it are valid-gated off).
+    fn group_append(
+        &mut self,
+        seqs: &mut [&mut Sequence],
+        gid: usize,
+        members: &[usize],
+    ) -> Result<()> {
+        let (nl, h, d) =
+            (self.mm.n_layers, self.mm.n_heads, self.mm.head_dim);
+        let g = self.groups.get(gid);
+        let (s, lb, handle) = (g.cap(), g.tag, g.handle);
+        let n = nl * h * d;
+        if self.sc_ga_k.len() < s * n {
+            self.sc_ga_k.resize(s * n, 0.0);
+            self.sc_ga_v.resize(s * n, 0.0);
+        }
+        self.sc_ga_k[..s * n].fill(0.0);
+        self.sc_ga_v[..s * n].fill(0.0);
+        self.sc_ga_pos.clear();
+        self.sc_ga_pos.resize(s, 0);
+        self.sc_ga_valid.clear();
+        self.sc_ga_valid.resize(s, 0.0);
+        for &i in members {
+            let seq = &*seqs[i];
+            let Some(DevKvMirror::Slot { slot, .. }) = seq.kv_mirror else {
+                unreachable!("group member without a slot mirror")
+            };
+            self.sc_ga_k[slot * n..(slot + 1) * n]
+                .copy_from_slice(&seq.scratch.dev_k[..n]);
+            self.sc_ga_v[slot * n..(slot + 1) * n]
+                .copy_from_slice(&seq.scratch.dev_v[..n]);
+            self.sc_ga_pos[slot] = seq.cache.len() as i32;
+            self.sc_ga_valid[slot] = 1.0;
+        }
+        let art = self
+            .art("kv_append_dev_batch", &[("batched", s), ("l_max", lb)])?;
+        let inputs = [
+            Input::Buffer(self.arena.get(handle)),
+            Input::F32(&self.sc_ga_k[..s * n], vec![s, nl, h, d]),
+            Input::F32(&self.sc_ga_v[..s * n], vec![s, nl, h, d]),
+            Input::I32(&self.sc_ga_pos, vec![s]),
+            Input::F32(&self.sc_ga_valid, vec![s]),
+        ];
+        let mut outs = self.rt.execute_keep(&art, &inputs, &[true])?;
+        drop(inputs);
+        let buf = outs.pop().and_then(Output::into_device).ok_or_else(|| {
+            anyhow!(
+                "{}: expected a device-resident kv_states output",
+                art.name
+            )
+        })?;
+        self.arena.replace(handle, buf);
+        for &i in members {
+            let m = seqs[i].kv_mirror.as_mut().expect("slot mirror live");
+            let new_len = m.len() + 1;
+            m.set_len(new_len);
+        }
+        self.stats.decode_host_bytes_staged +=
+            decode_staging::append_dev_batch_bytes(s, nl, h, d);
+        self.stats.decode_dev_dispatches += 1;
         Ok(())
     }
 
@@ -1430,13 +1856,17 @@ impl Engine {
         self.stats.decode_host_bytes_staged +=
             decode_staging::embed_bytes(b, dm);
         // Whether this step stages the per-layer K/V rows for device
-        // mirror appends (`mirror_append` after the layer loop).  Gated
-        // on the manifest actually carrying the append stage so
-        // pre-device artifact sets (the runtime fallback mode) don't
-        // pay the per-layer staging memcpys for mirrors that can never
-        // exist.
+        // mirror appends (`mirror_append_all` after the layer loop).
+        // Gated on the manifest actually carrying an append stage
+        // (batched or per-seq) so pre-device artifact sets (the runtime
+        // fallback mode) don't pay the per-layer staging memcpys for
+        // mirrors that can never exist.
         let stage_dev_rows = self.cfg.device_decode_kv
-            && !self.mm.buckets("kv_append_dev", "l_max").is_empty();
+            && (!self.mm.buckets("kv_append_dev", "l_max").is_empty()
+                || !self
+                    .mm
+                    .buckets("kv_append_dev_batch", "l_max")
+                    .is_empty());
 
         for layer in 0..nl {
             // --- host-side planning stage (parallel over sequences) ----
@@ -1492,10 +1922,14 @@ impl Engine {
             // Residency choice (DESIGN.md §2/§3): with `device_decode_kv`
             // and the decode residency stages compiled at a bucket
             // covering every dense-needing sequence, full scoring reads
-            // each sequence's device KV mirror (`layer_step_dense_dev`,
-            // one call per sequence) and the host stages O(1) bytes plus
-            // the probs row; otherwise the batched host-staged oracle
-            // path re-uploads the context tiles via `export_dense`.
+            // the device KV mirrors — ONE `layer_step_dense_dev_batch`
+            // dispatch per mirror group on the batched default (probs
+            // feedback downloaded as the in-graph top-k pair when the
+            // selectors allow), or one `layer_step_dense_dev` call per
+            // sequence on the per-seq oracle/fallback — and the host
+            // stages O(1) bytes plus the probs feedback; otherwise the
+            // batched host-staged oracle path re-uploads the context
+            // tiles via `export_dense_kv`.
             let want_dense_probs = probing
                 || plans
                     .iter()
@@ -1527,7 +1961,7 @@ impl Engine {
                     }
                     self.ensure_mirror(seq)?;
                     dev_lb = dev_lb
-                        .max(seq.kv_mirror.as_ref().expect("mirror").lb);
+                        .max(seq.kv_mirror.as_ref().expect("mirror").lb());
                 }
             }
 
@@ -1568,14 +2002,168 @@ impl Engine {
                 }
                 let mut o_probs =
                     HostTensor { shape: vec![b, h, row_w], data: buf };
+                // partition dense-needing members by mirror home: slot
+                // mirrors batch one dispatch per (layer, group); solo
+                // mirrors fall through to the per-seq oracle loop
+                let mut group_members: std::collections::BTreeMap<
+                    usize,
+                    Vec<usize>,
+                > = std::collections::BTreeMap::new();
                 for (i, seq) in seqs.iter().enumerate() {
                     if !need_dense[i] {
                         continue;
                     }
-                    let m = *seq.kv_mirror.as_ref().expect("live mirror");
+                    if let Some(DevKvMirror::Slot { group, .. }) =
+                        seq.kv_mirror
+                    {
+                        group_members.entry(group).or_default().push(i);
+                    }
+                }
+                for (&gid, members) in &group_members {
+                    let g = self.groups.get(gid);
+                    let (gs, glb, handle) = (g.cap(), g.tag, g.handle);
+                    let art = self.art(
+                        "layer_step_dense_dev_batch",
+                        &[("batched", gs), ("l_max", glb)],
+                    )?;
+                    let n_top =
+                        art.params.get("n_top").copied().unwrap_or(0);
+                    // per-slot staging: unused slots keep zero hidden +
+                    // zero pos/length (finite garbage outputs, ignored)
+                    if self.sc_gb_hidden.len() < gs * dm {
+                        self.sc_gb_hidden.resize(gs * dm, 0.0);
+                    }
+                    self.sc_gb_hidden[..gs * dm].fill(0.0);
+                    self.sc_gb_pos.clear();
+                    self.sc_gb_pos.resize(gs, 0);
+                    self.sc_gb_len.clear();
+                    self.sc_gb_len.resize(gs, 0);
+                    for &i in members {
+                        let Some(DevKvMirror::Slot { slot, .. }) =
+                            seqs[i].kv_mirror
+                        else {
+                            unreachable!("group member without slot mirror")
+                        };
+                        let t = seqs[i].t();
+                        self.sc_gb_hidden[slot * dm..(slot + 1) * dm]
+                            .copy_from_slice(
+                                &self.sc_hidden[i * dm..(i + 1) * dm],
+                            );
+                        self.sc_gb_pos[slot] = t as i32;
+                        self.sc_gb_len[slot] = t as i32;
+                    }
+                    // probs form: the O(N_sel) in-graph top-k pair when
+                    // every retrieving member's selector can decide from
+                    // it (never on probe steps — δ/β need whole rows)
+                    let topk_ok = want_dense_probs
+                        && !probing
+                        && n_top > 0
+                        && members.iter().all(|&i| match &plans[i] {
+                            PlanKind::Retrieve { .. } => seqs[i]
+                                .selector
+                                .probs_topk_budget()
+                                .is_some_and(|req| req <= n_top),
+                            _ => true,
+                        });
+                    let want_full = want_dense_probs && !topk_ok;
+                    let wanted =
+                        [true, true, true, want_full, topk_ok, topk_ok];
+                    let mut inputs: Vec<Input<'_>> = vec![
+                        Input::F32(
+                            &self.sc_gb_hidden[..gs * dm],
+                            vec![gs, dm],
+                        ),
+                        Input::I32(&self.sc_gb_pos, vec![gs]),
+                        Input::ScalarI32(layer as i32),
+                        Input::I32(&self.sc_gb_len, vec![gs]),
+                        Input::Buffer(self.arena.get(handle)),
+                    ];
+                    inputs.extend(wl.iter().map(|w| Input::Buffer(*w)));
+                    let outs =
+                        self.rt.execute_select(&art, &inputs, Some(&wanted))?;
+                    drop(inputs);
+                    for &i in members {
+                        let Some(DevKvMirror::Slot { slot, .. }) =
+                            seqs[i].kv_mirror
+                        else {
+                            unreachable!("group member without slot mirror")
+                        };
+                        let t = seqs[i].t();
+                        o_hidden.data[i * dm..(i + 1) * dm].copy_from_slice(
+                            &outs[0].data[slot * dm..(slot + 1) * dm],
+                        );
+                        o_k.data[i * hkv * d..(i + 1) * hkv * d]
+                            .copy_from_slice(
+                                &outs[1].data
+                                    [slot * hkv * d..(slot + 1) * hkv * d],
+                            );
+                        o_v.data[i * hkv * d..(i + 1) * hkv * d]
+                            .copy_from_slice(
+                                &outs[2].data
+                                    [slot * hkv * d..(slot + 1) * hkv * d],
+                            );
+                        if want_full {
+                            // repack [H, glb + 1] rows (self at slot glb)
+                            // into the pass-wide [H, dev_lb + 1] layout
+                            for head in 0..h {
+                                let src = (slot * h + head) * (glb + 1);
+                                let dst = (i * h + head) * row_w;
+                                let valid = t.min(glb);
+                                o_probs.data[dst..dst + valid]
+                                    .copy_from_slice(
+                                        &outs[3].data[src..src + valid],
+                                    );
+                                o_probs.data[dst + dev_lb] =
+                                    outs[3].data[src + glb];
+                            }
+                        } else if topk_ok {
+                            // reconstruct a sparse row from the (index,
+                            // value) pair: zeros off the top-k, self 0.0
+                            // (no observer reads the self slot — the
+                            // prefill seed rows already use 0.0 there)
+                            for head in 0..h {
+                                let src = (slot * h + head) * n_top;
+                                let dst = (i * h + head) * row_w;
+                                for j in 0..n_top {
+                                    let idx =
+                                        outs[4].data[src + j] as usize;
+                                    if idx < t {
+                                        o_probs.data[dst + idx] =
+                                            outs[5].data[src + j];
+                                    }
+                                }
+                            }
+                        }
+                        self.stats.decode_dense_dev_calls += 1;
+                        self.stats.dense_context_tokens += t as u64;
+                    }
+                    self.stats.decode_dev_dispatches += 1;
+                    self.stats.decode_host_bytes_staged +=
+                        decode_staging::dense_dev_batch_call_bytes(
+                            gs, dm, hkv, d,
+                        );
+                    let probs_bytes = if want_full {
+                        decode_staging::probs_row_bytes(gs, h, glb)
+                    } else if topk_ok {
+                        decode_staging::probs_topk_bytes(gs, h, n_top)
+                    } else {
+                        0
+                    };
+                    self.stats.decode_host_bytes_staged += probs_bytes;
+                    self.stats.decode_probs_bytes += probs_bytes;
+                }
+                for (i, seq) in seqs.iter().enumerate() {
+                    if !need_dense[i] {
+                        continue;
+                    }
+                    let Some(DevKvMirror::Solo { handle, lb: mlb, .. }) =
+                        seq.kv_mirror
+                    else {
+                        continue; // slot mirrors served above
+                    };
                     let t = seq.t();
                     let art = self
-                        .art("layer_step_dense_dev", &[("l_max", m.lb)])?;
+                        .art("layer_step_dense_dev", &[("l_max", mlb)])?;
                     let mut inputs: Vec<Input<'_>> = vec![
                         Input::F32(
                             &self.sc_hidden[i * dm..(i + 1) * dm],
@@ -1584,7 +2172,7 @@ impl Engine {
                         Input::ScalarI32(t as i32),
                         Input::ScalarI32(layer as i32),
                         Input::ScalarI32(t as i32),
-                        Input::Buffer(self.arena.get(m.handle)),
+                        Input::Buffer(self.arena.get(handle)),
                     ];
                     inputs.extend(wl.iter().map(|w| Input::Buffer(*w)));
                     let wanted = [true, true, true, want_dense_probs];
@@ -1601,24 +2189,27 @@ impl Engine {
                         // repack [H, lb + 1] rows (self prob at slot lb)
                         // into the pass-wide [H, dev_lb + 1] layout
                         for head in 0..h {
-                            let src = head * (m.lb + 1);
+                            let src = head * (mlb + 1);
                             let dst = (i * h + head) * row_w;
-                            let valid = t.min(m.lb);
+                            let valid = t.min(mlb);
                             o_probs.data[dst..dst + valid].copy_from_slice(
                                 &outs[3].data[src..src + valid],
                             );
                             o_probs.data[dst + dev_lb] =
-                                outs[3].data[src + m.lb];
+                                outs[3].data[src + mlb];
                         }
+                        self.stats.decode_probs_bytes +=
+                            decode_staging::probs_row_bytes(1, h, mlb);
                     }
                     self.stats.decode_dense_dev_calls += 1;
+                    self.stats.decode_dev_dispatches += 1;
                     self.stats.decode_host_bytes_staged +=
                         decode_staging::dense_dev_call_bytes(
                             dm,
                             hkv,
                             h,
                             d,
-                            m.lb,
+                            mlb,
                             want_dense_probs,
                         );
                     self.stats.dense_context_tokens += t as u64;
@@ -1645,7 +2236,12 @@ impl Engine {
                 self.sc_vc[..kc_len].fill(0.0);
                 // dense-export staging into per-sequence slices, fanned
                 // over the planner pool (bandwidth ∝ L is the dominant
-                // host cost of the retrieval path)
+                // host cost of the retrieval path).  The artifact's
+                // cache input is `Hkv` rows (re-expanded in-graph), so
+                // the export reads the UNEXPANDED group-leader rows —
+                // `export_dense` would write `H` rows and overrun the
+                // per-sequence slice under GQA (the ROADMAP's latent
+                // bug, pinned by the gqa differential harness).
                 {
                     let pool = &self.pool;
                     let mut units: Vec<(&mut Sequence, &mut [f32], &mut [f32])> =
@@ -1656,10 +2252,11 @@ impl Engine {
                             .map(|((s, kc), vc)| (s, kc, vc))
                             .collect();
                     for_each_unit(nt, &mut units, |(seq, kc, vc)| {
-                        seq.cache.export_dense(
+                        seq.cache.export_dense_kv(
                             pool,
                             layer,
                             l_max,
+                            hkv,
                             &mut **kc,
                             &mut **vc,
                         );
@@ -1689,6 +2286,10 @@ impl Engine {
                         l_max,
                         want_dense_probs,
                     );
+                if want_dense_probs {
+                    self.stats.decode_probs_bytes +=
+                        decode_staging::probs_row_bytes(b, h, l_max);
+                }
                 dense_out = Some(outs);
             }
 
@@ -2060,14 +2661,13 @@ impl Engine {
             let _ = (dense_lmax, sparse_n);
         }
 
-        // Keep device mirrors fresh: one in-graph `kv_append_dev` per
-        // sequence per step (O(nl·H·d) upload), regardless of which plan
-        // kinds ran — a later retrieval then reads the mirror in place
-        // instead of re-shipping the context (DESIGN.md §2).
+        // Keep device mirrors fresh regardless of which plan kinds ran —
+        // a later retrieval then reads the mirror in place instead of
+        // re-shipping the context (DESIGN.md §2): ONE `kv_append_dev_batch`
+        // per mirror group (the batched default) or one `kv_append_dev`
+        // per sequence (solo fallback), O(nl·H·d) upload either way.
         if stage_dev_rows {
-            for seq in seqs.iter_mut() {
-                self.mirror_append(seq)?;
-            }
+            self.mirror_append_all(seqs)?;
         }
 
         // lm_head + sampling
@@ -2290,6 +2890,71 @@ mod tests {
         assert_eq!(append_dev_bytes(NL, H, D), 4 * (2 * NL * H * D + 1) as u64);
         assert!(append_dev_bytes(NL, H, D) * 16
             < sparse_call_bytes(b, H, hkv, D, dm, n_sel, false));
+    }
+
+    /// Issue acceptance criterion, engine-free: with the batched
+    /// dispatch, decode dev dispatches per step are O(#buckets-in-use)
+    /// — one dense dispatch per (dense layer × group) + one append per
+    /// group — NOT O(#sequences); the per-seq oracle mode scales with
+    /// the batch.  Same pure model `StepStats::decode_dev_dispatches`
+    /// accumulates through.
+    #[test]
+    fn batched_decode_dispatches_are_o_groups() {
+        use super::decode_dispatch::*;
+        // 16 sequences, all dense-needing at NL layers, one 16-slot
+        // group vs per-seq dispatching
+        let (n, cap) = (16usize, 16usize);
+        let groups = groups_needed(n, cap);
+        assert_eq!(groups, 1);
+        let batched = batched_step(groups, NL);
+        let solo = solo_step(n, n, NL);
+        assert_eq!(batched, (NL + 1) as u64, "O(#groups): layers + append");
+        assert_eq!(solo, (NL * n + n) as u64, "O(#sequences)");
+        assert_eq!(solo, batched * n as u64);
+        // doubling the batch leaves batched dispatches unchanged while
+        // the solo count doubles — the amortization the tentpole lands
+        assert_eq!(batched_step(groups_needed(2 * n, 2 * n), NL), batched);
+        assert_eq!(solo_step(2 * n, 2 * n, NL), 2 * solo);
+        // more sequences than one group holds: dispatches grow with
+        // ⌈n/cap⌉ buckets-in-use, not with n
+        assert_eq!(groups_needed(2 * n + 1, cap), 3);
+        assert_eq!(
+            batched_step(groups_needed(2 * n + 1, cap), NL),
+            3 * batched
+        );
+        // degenerate guard
+        assert_eq!(groups_needed(5, 0), 5);
+    }
+
+    /// Issue acceptance criterion, engine-free: the per-retrieval probs
+    /// download is O(N_sel) under the in-graph top-k — independent of
+    /// the context bucket — while the full-row form grows ∝ L; and at
+    /// serving context the pair undercuts the row.
+    #[test]
+    fn topk_probs_download_is_o_nsel_not_o_context() {
+        use super::decode_staging::*;
+        let (s, n_top) = (8usize, 160usize);
+        // context-independence: the top-k bytes don't see l_max at all
+        let tk = probs_topk_bytes(s, H, n_top);
+        assert_eq!(tk, 4 * (2 * s * H * n_top) as u64);
+        // full rows grow linearly with the bucket
+        let full_1 = probs_row_bytes(s, H, 512);
+        let full_4 = probs_row_bytes(s, H, 2048);
+        assert_eq!(full_4 - full_1, 4 * (s * H * (2048 - 512)) as u64);
+        // collapse at serving contexts: ≥ 6× at 2048, ≥ 12× at 4096
+        assert!(tk * 6 < probs_row_bytes(s, H, 2048));
+        assert!(tk * 12 < probs_row_bytes(s, H, 4096));
+        // the batched dense dispatch itself stages O(s) bytes with no
+        // l_max term — the KV rides the group buffer
+        assert_eq!(
+            dense_dev_batch_call_bytes(s, DM, H, D),
+            4 * ((s * DM + 2 * s + 1) + (s * DM + 2 * s * H * D)) as u64
+        );
+        // batched append: rows + pos + valid per slot, nothing down
+        assert_eq!(
+            append_dev_batch_bytes(s, NL, H, D),
+            4 * (s * 2 * NL * H * D + 2 * s) as u64
+        );
     }
 
     /// The byte model's final-chunk terms match the extra logits + probs

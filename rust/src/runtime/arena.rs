@@ -70,6 +70,107 @@ impl<T> DeviceArena<T> {
     }
 }
 
+/// Occupancy tracker for *multi-slot* arena buffers (the batched decode
+/// mirror groups, DESIGN.md §2): one arena buffer holds `cap`
+/// equally-sized slots, each claimed by one sequence's KV mirror; the
+/// batched stages (`layer_step_dense_dev_batch` / `kv_append_dev_batch`)
+/// then serve the whole group in one PJRT dispatch instead of one per
+/// sequence.  `tag` is the group's l_max bucket — sequences only ever
+/// join a group whose bucket matches their mirror.  Pure bookkeeping
+/// (no buffer access), so the slot discipline is unit- and
+/// property-testable without a PJRT client; the engine owns the mapping
+/// gid/slot ↔ sequence via `kvcache::DevKvMirror`.
+#[derive(Default)]
+pub struct SlotGroups {
+    groups: Vec<Option<SlotGroup>>,
+}
+
+pub struct SlotGroup {
+    /// Arena slot of the stacked `[cap · slot_len]` buffer.
+    pub handle: ArenaHandle,
+    /// Bucket key (l_max) every member shares.
+    pub tag: usize,
+    cap: usize,
+    used: Vec<bool>,
+}
+
+impl SlotGroup {
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    pub fn occupied(&self, slot: usize) -> bool {
+        self.used[slot]
+    }
+
+    pub fn live(&self) -> usize {
+        self.used.iter().filter(|u| **u).count()
+    }
+}
+
+impl SlotGroups {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a new group over `handle` with `cap` slots; returns its
+    /// stable group id (ids are reused after a group empties, like arena
+    /// slots).
+    pub fn create(&mut self, handle: ArenaHandle, tag: usize, cap: usize) -> usize {
+        assert!(cap > 0, "a group needs at least one slot");
+        let g = SlotGroup { handle, tag, cap, used: vec![false; cap] };
+        match self.groups.iter().position(Option::is_none) {
+            Some(gid) => {
+                self.groups[gid] = Some(g);
+                gid
+            }
+            None => {
+                self.groups.push(Some(g));
+                self.groups.len() - 1
+            }
+        }
+    }
+
+    pub fn get(&self, gid: usize) -> &SlotGroup {
+        self.groups[gid].as_ref().expect("live mirror group")
+    }
+
+    /// Claim a free slot in `gid`; `None` when the group is full.
+    pub fn claim(&mut self, gid: usize) -> Option<usize> {
+        let g = self.groups[gid].as_mut().expect("live mirror group");
+        let slot = g.used.iter().position(|u| !u)?;
+        g.used[slot] = true;
+        Some(slot)
+    }
+
+    /// A live group at bucket `tag` with a free slot, if any.
+    pub fn find_free(&self, tag: usize) -> Option<usize> {
+        self.groups.iter().position(|g| {
+            g.as_ref()
+                .is_some_and(|g| g.tag == tag && g.used.iter().any(|u| !u))
+        })
+    }
+
+    /// Release `slot` of `gid`.  When the group empties it is removed and
+    /// its buffer handle returned — the caller must free the arena slot
+    /// (the tracker never touches buffers).
+    pub fn release(&mut self, gid: usize, slot: usize) -> Option<ArenaHandle> {
+        let g = self.groups[gid].as_mut().expect("live mirror group");
+        assert!(g.used[slot], "release of a free group slot");
+        g.used[slot] = false;
+        if g.used.iter().any(|u| *u) {
+            return None;
+        }
+        let g = self.groups[gid].take().expect("live mirror group");
+        Some(g.handle)
+    }
+
+    /// Live groups — with `DeviceArena::live`, the leak-check pair.
+    pub fn live(&self) -> usize {
+        self.groups.iter().filter(|g| g.is_some()).count()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -111,5 +212,130 @@ mod tests {
         let h = a.alloc(7);
         a.free(h);
         let _ = a.get(h);
+    }
+
+    #[test]
+    fn slot_groups_claim_release_roundtrip() {
+        let mut a: DeviceArena<u32> = DeviceArena::new();
+        let mut gs = SlotGroups::new();
+        let h = a.alloc(1);
+        let gid = gs.create(h, 512, 3);
+        assert_eq!(gs.get(gid).tag, 512);
+        assert_eq!(gs.get(gid).cap(), 3);
+        assert_eq!(gs.find_free(512), Some(gid));
+        assert_eq!(gs.find_free(1024), None, "tag mismatch never matches");
+        let s0 = gs.claim(gid).unwrap();
+        let s1 = gs.claim(gid).unwrap();
+        let s2 = gs.claim(gid).unwrap();
+        assert_eq!((s0, s1, s2), (0, 1, 2));
+        assert!(gs.claim(gid).is_none(), "full group refuses claims");
+        assert_eq!(gs.find_free(512), None);
+        assert!(gs.release(gid, s1).is_none(), "non-empty keeps the buffer");
+        assert!(gs.get(gid).occupied(s0) && !gs.get(gid).occupied(s1));
+        assert_eq!(gs.claim(gid), Some(s1), "freed slot is reclaimed");
+        for s in [s0, s1] {
+            assert!(gs.release(gid, s).is_none());
+        }
+        let back = gs.release(gid, s2).expect("emptied group returns handle");
+        assert_eq!(back, h);
+        assert_eq!(gs.live(), 0);
+        a.free(back);
+        assert_eq!(a.live(), 0, "arena + groups leak-check pair");
+        // group ids are reused like arena slots
+        let h2 = a.alloc(2);
+        assert_eq!(gs.create(h2, 256, 1), gid);
+    }
+
+    #[test]
+    #[should_panic(expected = "release of a free group slot")]
+    fn slot_groups_double_release_panics() {
+        let mut a: DeviceArena<u32> = DeviceArena::new();
+        let mut gs = SlotGroups::new();
+        let gid = gs.create(a.alloc(1), 64, 2);
+        let s = gs.claim(gid).unwrap();
+        assert!(gs.release(gid, s).is_none());
+        let _ = gs.release(gid, s);
+    }
+
+    /// Property (issue satellite: batched grouping planner): under any
+    /// interleaving of joins and leaves, no group ever exceeds its slot
+    /// capacity, a (gid, slot) pair is never double-claimed, members
+    /// only sit in groups of their own bucket tag, and the arena/groups
+    /// pair never leaks once every member leaves.
+    #[test]
+    fn prop_slot_groups_never_overfill_or_leak() {
+        use crate::util::prop::{gen, Prop};
+        Prop::new(40, 0x51075).forall(
+            |rng| {
+                let cap = 1 + gen::usize_in(rng, 1, 4);
+                let ops: Vec<(usize, bool, usize)> = (0..60)
+                    .map(|_| {
+                        (rng.below(6), rng.f32() < 0.4, [256, 512][rng.below(2)])
+                    })
+                    .collect();
+                (cap, ops)
+            },
+            |(cap, ops)| {
+                let mut arena: DeviceArena<u32> = DeviceArena::new();
+                let mut gs = SlotGroups::new();
+                // member id -> (gid, slot, tag)
+                let mut members: Vec<Option<(usize, usize, usize)>> =
+                    vec![None; 6];
+                for &(m, leave, tag) in ops {
+                    if leave {
+                        if let Some((gid, slot, _)) = members[m].take() {
+                            if let Some(h) = gs.release(gid, slot) {
+                                arena.free(h);
+                            }
+                        }
+                    } else if members[m].is_none() {
+                        let gid = match gs.find_free(tag) {
+                            Some(gid) => gid,
+                            None => gs.create(arena.alloc(0), tag, *cap),
+                        };
+                        let slot = gs.claim(gid).expect("free slot");
+                        members[m] = Some((gid, slot, tag));
+                    }
+                    // invariants after every op
+                    let mut seen = std::collections::HashSet::new();
+                    for (gid, slot, tag) in members.iter().flatten() {
+                        if !seen.insert((*gid, *slot)) {
+                            return Err(format!(
+                                "slot ({gid}, {slot}) double-claimed"
+                            ));
+                        }
+                        if *slot >= gs.get(*gid).cap() {
+                            return Err("slot beyond capacity".into());
+                        }
+                        if gs.get(*gid).tag != *tag {
+                            return Err("member in wrong-bucket group".into());
+                        }
+                    }
+                    for (gid, _, _) in members.iter().flatten() {
+                        if gs.get(*gid).live() > gs.get(*gid).cap() {
+                            return Err("group overfilled".into());
+                        }
+                    }
+                    if gs.live() > arena.live() {
+                        return Err("more groups than buffers".into());
+                    }
+                }
+                for m in members.iter_mut() {
+                    if let Some((gid, slot, _)) = m.take() {
+                        if let Some(h) = gs.release(gid, slot) {
+                            arena.free(h);
+                        }
+                    }
+                }
+                if gs.live() != 0 || arena.live() != 0 {
+                    return Err(format!(
+                        "leak: {} groups / {} buffers live",
+                        gs.live(),
+                        arena.live()
+                    ));
+                }
+                Ok(())
+            },
+        );
     }
 }

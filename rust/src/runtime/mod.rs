@@ -7,7 +7,7 @@ pub mod client;
 pub mod manifest;
 pub mod weights;
 
-pub use arena::{ArenaHandle, DeviceArena};
+pub use arena::{ArenaHandle, DeviceArena, SlotGroup, SlotGroups};
 pub use client::{HostTensor, Input, Output, Runtime};
 pub use manifest::{ArtifactSpec, Manifest, ModelManifest};
 pub use weights::WeightStore;

@@ -80,6 +80,11 @@ impl KvSelector for OracleSelector {
         self.sets[layer][head] = idx;
     }
 
+    /// Pure global top-budget: the top `budget()` entries decide the set.
+    fn probs_topk_budget(&self) -> Option<usize> {
+        Some(self.cfg.budget())
+    }
+
     fn retrievals(&self) -> u64 {
         self.retrievals
     }
@@ -512,6 +517,13 @@ impl KvSelector for HShareSelector {
         self.sets[layer][head] =
             s.materialize(t, self.cfg.c_sink, self.cfg.c_local);
         self.shared[layer][head] = s;
+    }
+
+    /// `select_criteria` reads the middle top-k; with at most
+    /// c_sink + c_local non-middle entries able to outrank a middle one,
+    /// the global top-`budget()` always covers it (DESIGN.md §2).
+    fn probs_topk_budget(&self) -> Option<usize> {
+        Some(self.cfg.budget())
     }
 
     fn retrievals(&self) -> u64 {

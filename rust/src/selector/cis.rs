@@ -193,6 +193,14 @@ impl KvSelector for CisSelector {
         self.state[layer][head].shared = sel;
     }
 
+    /// `select_criteria` reads the middle top-k (dilation then works on
+    /// winners whose values survive intact); with at most
+    /// c_sink + c_local non-middle entries able to outrank a middle
+    /// one, the global top-`budget()` always covers it (DESIGN.md §2).
+    fn probs_topk_budget(&self) -> Option<usize> {
+        Some(self.cfg.budget())
+    }
+
     fn retrievals(&self) -> u64 {
         self.retrievals
     }

@@ -87,6 +87,21 @@ pub trait KvSelector: Send {
         false
     }
 
+    /// Longest prefix of the (value desc, index asc)-ranked retrieval
+    /// row this selector's `observe_probs` can decide from, or `None`
+    /// when it needs the complete row.  With `Some(req)` within the
+    /// batched dense-dev artifact's in-graph top-k width, the engine
+    /// downloads the O(N_sel) (index, value) pair instead of the ∝ L
+    /// probs row and feeds a reconstructed sparse row (zeros off the
+    /// top-k): selection is invariant because the oracle's global top-k
+    /// and `select_criteria`'s middle top-k only ever depend on the top
+    /// `req` entries under the shared tie order (`fx::top_k_indices` ==
+    /// `jax.lax.top_k`; DESIGN.md §2).  Defaults to `None` — an unknown
+    /// selector keeps the exact full-row contract.
+    fn probs_topk_budget(&self) -> Option<usize> {
+        None
+    }
+
     /// Cumulative head-level retrieval count (paper's Σ R_t).
     fn retrievals(&self) -> u64;
 

@@ -36,19 +36,32 @@ pub mod fx {
         bi
     }
 
-    /// Indices of the k largest values, descending by value.
+    /// Indices of the k largest values, descending by value; ties break
+    /// toward the LOWER index.  This (value desc, index asc) total order
+    /// is a cross-layer contract: it is exactly `jax.lax.top_k`'s tie
+    /// rule, so the in-graph top-k the batched dense-dev stage computes
+    /// (`layer_step_dense_dev_batch`, DESIGN.md §2) selects the same
+    /// entries a host-side pass over the full row would — a selector fed
+    /// the reconstructed sparse row picks identical sets.  Pinned by
+    /// `top_k_tie_rule_prefers_lower_index` here and the L2
+    /// `test_in_graph_top_k_tie_rule_prefers_lower_index`.
     /// O(n log n); selection happens off the per-token hot path (block
     /// starts only), so clarity wins over a partial select here.
     pub fn top_k_indices(xs: &[f32], k: usize) -> Vec<usize> {
+        let key = |i: usize, j: usize| {
+            xs[j]
+                .partial_cmp(&xs[i])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(i.cmp(&j))
+        };
         let mut idx: Vec<usize> = (0..xs.len()).collect();
         let k = k.min(xs.len());
-        idx.select_nth_unstable_by(k.saturating_sub(1), |&a, &b| {
-            xs[b].partial_cmp(&xs[a]).unwrap_or(std::cmp::Ordering::Equal)
-        });
+        if k == 0 {
+            return Vec::new();
+        }
+        idx.select_nth_unstable_by(k - 1, |&a, &b| key(a, b));
         idx.truncate(k);
-        idx.sort_by(|&a, &b| {
-            xs[b].partial_cmp(&xs[a]).unwrap_or(std::cmp::Ordering::Equal)
-        });
+        idx.sort_by(|&a, &b| key(a, b));
         idx
     }
 
@@ -91,6 +104,23 @@ mod tests {
         let xs = [0.1, 5.0, 3.0, 4.0, 0.2];
         assert_eq!(fx::top_k_indices(&xs, 3), vec![1, 3, 2]);
         assert_eq!(fx::top_k_indices(&xs, 10).len(), 5);
+        assert_eq!(fx::top_k_indices(&xs, 0), Vec::<usize>::new());
+    }
+
+    /// Cross-layer tie contract (DESIGN.md §2): among equal values the
+    /// LOWER index ranks first — including at the selection boundary and
+    /// across all-equal (zero-padded) regions — matching `jax.lax.top_k`
+    /// so the in-graph and host-side selections are interchangeable.
+    #[test]
+    fn top_k_tie_rule_prefers_lower_index() {
+        // same fixture the L2 tie-rule test pins against lax.top_k
+        let xs = [0.5, 0.9, 0.5, 0.9, 0.0, 0.9, 0.5, 0.0, 0.0, 0.0];
+        assert_eq!(fx::top_k_indices(&xs, 7), vec![1, 3, 5, 0, 2, 6, 4]);
+        // boundary tie: only one of the three 0.5s fits — index 0 wins
+        assert_eq!(fx::top_k_indices(&xs, 4), vec![1, 3, 5, 0]);
+        // all-equal region: pure index order
+        let zs = [0.0f32; 8];
+        assert_eq!(fx::top_k_indices(&zs, 5), vec![0, 1, 2, 3, 4]);
     }
 
     #[test]

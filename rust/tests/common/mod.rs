@@ -1,0 +1,328 @@
+//! Cross-mode differential test harness (issue archetype headline).
+//!
+//! One workload, every residency/dispatch mode, full observable
+//! identity: the engine exposes three decode homes for the dense-path
+//! KV — batched mirror groups (the default), per-sequence mirrors (the
+//! parity oracle), and host staging — plus the stripped-manifest
+//! fallbacks for artifact sets predating each stage family, crossed
+//! with the prefill-residency flag.  Every mode must produce the SAME
+//! trajectories, KV pages, selector sets, logits, ρ̂ and probe
+//! fidelity; only the dispatch/byte counters may differ.  This harness
+//! replaces the ad-hoc per-PR identity tests (PR 3/4) and is the
+//! acceptance gate for the batched-dispatch tentpole: a residency
+//! regression in ANY mode shows up as a differential here, not as a
+//! silent quality drift (DESIGN.md §2/§3).
+//!
+//! Shared by `tests/differential_modes.rs` (and open to future test
+//! binaries via `mod common;`).  Engine/PJRT-backed: callers gate on
+//! `artifacts_dir()` like every integration test.
+
+#![allow(dead_code)] // each test binary uses a subset of the harness
+
+use prhs::config::{EngineConfig, SelectorKind};
+use prhs::model::{Engine, Probe, Sequence};
+use prhs::util::rng::Rng;
+
+/// Decode-side dispatch/residency mode under test.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DecodeMode {
+    /// Batched mirror-group dispatch (`batched_decode_dispatch`, the
+    /// default).
+    BatchedDev,
+    /// Per-sequence device dispatch (`batched_decode_dispatch = false`
+    /// — the parity oracle).
+    PerSeqDev,
+    /// Host-staged `export_dense_kv` oracle (`device_decode_kv = false`).
+    HostStaged,
+    /// Device flags on, batched stages stripped from the manifest — the
+    /// runtime fallback for pre-batch artifact sets (must behave exactly
+    /// like `PerSeqDev`).
+    StrippedToPerSeq,
+    /// Device flags on, ALL decode residency stages stripped — the
+    /// fallback for pre-device artifact sets (must behave exactly like
+    /// `HostStaged`).
+    StrippedToHost,
+}
+
+impl DecodeMode {
+    pub const ALL: [DecodeMode; 5] = [
+        DecodeMode::BatchedDev,
+        DecodeMode::PerSeqDev,
+        DecodeMode::HostStaged,
+        DecodeMode::StrippedToPerSeq,
+        DecodeMode::StrippedToHost,
+    ];
+}
+
+/// One workload to replay identically across modes.
+pub struct Workload {
+    pub model: &'static str,
+    pub selector: SelectorKind,
+    pub prompts: Vec<Vec<i32>>,
+    pub max_new: usize,
+    /// Chunked-prefill granularity (0 = monolithic).
+    pub prefill_chunk: usize,
+    /// Fidelity-probe cadence (0 = no probe).
+    pub probe_every: usize,
+}
+
+impl Workload {
+    /// Deterministic prompts from a seed (same floats in every mode).
+    pub fn synthetic(
+        model: &'static str,
+        selector: SelectorKind,
+        n_seqs: usize,
+        prompt_len: usize,
+        vocab: usize,
+        seed: u64,
+    ) -> Self {
+        let mut rng = Rng::new(seed);
+        let prompts = (0..n_seqs)
+            .map(|_| {
+                (0..prompt_len).map(|_| rng.below(vocab) as i32).collect()
+            })
+            .collect();
+        Workload {
+            model,
+            selector,
+            prompts,
+            max_new: 8,
+            prefill_chunk: 96,
+            probe_every: 0,
+        }
+    }
+}
+
+/// Everything one mode run observes — the identity surface plus the
+/// per-mode counters the dispatch/byte regressions pin.
+#[derive(Clone, Debug)]
+pub struct ModeOut {
+    pub label: String,
+    /// Per-sequence generated trajectories.
+    pub generated: Vec<Vec<i32>>,
+    /// Per-sequence final logits rows.
+    pub logits: Vec<Vec<f32>>,
+    /// Per (sequence, layer) selector sets at run end.
+    pub sets: Vec<Vec<Vec<Vec<usize>>>>,
+    /// Per-sequence KV pages, exported densely per (layer, head, pos).
+    pub kv: Vec<Vec<f32>>,
+    /// Per-sequence decode-only ρ̂.
+    pub rho: Vec<f64>,
+    /// Probe mean δ (0.0 when the probe is off).
+    pub probe_delta: f64,
+    pub decode_bytes: u64,
+    pub probs_bytes: u64,
+    pub dev_dispatches: u64,
+    pub dense_dev_calls: u64,
+    pub dense_calls: u64,
+    /// Per-decode-step deltas of `decode_dev_dispatches` (steady-state
+    /// dispatch cadence; membership events land in the first entries).
+    pub step_dispatches: Vec<u64>,
+    /// Per-decode-step deltas of `decode_probs_bytes`.
+    pub step_probs_bytes: Vec<u64>,
+}
+
+fn strip_stages(engine: &mut Engine, stages: &[&str]) {
+    engine.mm.artifacts.retain(|a| !stages.contains(&a.stage.as_str()));
+}
+
+/// Run `w` under one mode and collect the observable surface.  Panics on
+/// engine errors (test context) and asserts the arena leak check.
+pub fn run_mode(
+    dir: &str,
+    w: &Workload,
+    mode: DecodeMode,
+    device_prefill: bool,
+) -> ModeOut {
+    let label = format!("{mode:?}/device_prefill={device_prefill}");
+    let mut cfg = EngineConfig::default();
+    cfg.artifacts_dir = dir.to_string();
+    cfg.model = w.model.to_string();
+    cfg.selector.kind = w.selector.clone();
+    cfg.device_prefill_kv = device_prefill;
+    match mode {
+        DecodeMode::BatchedDev
+        | DecodeMode::StrippedToPerSeq
+        | DecodeMode::StrippedToHost => {}
+        DecodeMode::PerSeqDev => cfg.batched_decode_dispatch = false,
+        DecodeMode::HostStaged => cfg.device_decode_kv = false,
+    }
+    let mut engine = Engine::new(cfg).expect("engine");
+    match mode {
+        DecodeMode::StrippedToPerSeq => strip_stages(
+            &mut engine,
+            &[
+                "layer_step_dense_dev_batch",
+                "kv_append_dev_batch",
+                "kv_slot_write_dev",
+            ],
+        ),
+        DecodeMode::StrippedToHost => strip_stages(
+            &mut engine,
+            &[
+                "layer_step_dense_dev_batch",
+                "kv_append_dev_batch",
+                "kv_slot_write_dev",
+                "layer_step_dense_dev",
+                "kv_append_dev",
+                "state_to_kv",
+            ],
+        ),
+        _ => {}
+    }
+    if w.probe_every > 0 {
+        engine.probe = Some(Probe::new(w.probe_every));
+    }
+
+    let mut seqs: Vec<Sequence> = w
+        .prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            let mut s = engine.new_sequence(i as u64, p.clone());
+            s.max_new = w.max_new;
+            s
+        })
+        .collect();
+    for s in seqs.iter_mut() {
+        while !engine.prefill_chunk(s, w.prefill_chunk).expect("prefill") {}
+    }
+    let mut step_dispatches = Vec::new();
+    let mut step_probs_bytes = Vec::new();
+    loop {
+        let d0 = engine.stats.decode_dev_dispatches;
+        let p0 = engine.stats.decode_probs_bytes;
+        {
+            let mut group: Vec<&mut Sequence> =
+                seqs.iter_mut().filter(|s| !s.done).collect();
+            if group.is_empty() {
+                break;
+            }
+            engine.decode_step(&mut group).expect("decode_step");
+        }
+        step_dispatches.push(engine.stats.decode_dev_dispatches - d0);
+        step_probs_bytes.push(engine.stats.decode_probs_bytes - p0);
+    }
+
+    let (nl, h) = (engine.mm.n_layers, engine.mm.n_heads);
+    let mut generated = Vec::new();
+    let mut logits = Vec::new();
+    let mut sets = Vec::new();
+    let mut kv = Vec::new();
+    let mut rho = Vec::new();
+    for s in seqs.iter() {
+        generated.push(s.generated.clone());
+        logits.push(s.last_logits.clone());
+        sets.push(
+            (0..nl)
+                .map(|layer| s.selector.sets(layer).to_vec())
+                .collect(),
+        );
+        let mut pages = Vec::new();
+        for layer in 0..nl {
+            for head in 0..h {
+                for pos in 0..s.cache.len() {
+                    pages.extend_from_slice(
+                        s.cache.key(&engine.pool, layer, head, pos),
+                    );
+                    pages.extend_from_slice(
+                        s.cache.value(&engine.pool, layer, head, pos),
+                    );
+                }
+            }
+        }
+        kv.push(pages);
+        rho.push(engine.retrieval_ratio(s, s.generated.len() as u64));
+    }
+    let probe_delta =
+        engine.probe.take().map(|p| p.mean_delta()).unwrap_or(0.0);
+    let out = ModeOut {
+        label: label.clone(),
+        generated,
+        logits,
+        sets,
+        kv,
+        rho,
+        probe_delta,
+        decode_bytes: engine.stats.decode_host_bytes_staged,
+        probs_bytes: engine.stats.decode_probs_bytes,
+        dev_dispatches: engine.stats.decode_dev_dispatches,
+        dense_dev_calls: engine.stats.decode_dense_dev_calls,
+        dense_calls: engine.stats.dense_layer_calls,
+        step_dispatches,
+        step_probs_bytes,
+    };
+    for s in seqs.iter_mut() {
+        engine.release(s);
+    }
+    assert_eq!(
+        engine.device_slots_live(),
+        0,
+        "arena slots leaked ({label})"
+    );
+    out
+}
+
+/// Full observable identity between two mode runs: trajectories,
+/// selector sets, KV pages, final logits, decode-only ρ̂, probe δ, and
+/// the full-scoring cadence (`dense_layer_calls` — residency must never
+/// change how often retrieval runs).  Counters that legitimately differ
+/// per mode (bytes, dispatches) are NOT compared here — the dispatch
+/// and byte regressions pin those separately.
+pub fn assert_identical(a: &ModeOut, b: &ModeOut) {
+    let ctx = format!("{} vs {}", a.label, b.label);
+    assert_eq!(a.generated, b.generated, "{ctx}: trajectories");
+    assert_eq!(a.sets, b.sets, "{ctx}: selector sets");
+    assert_eq!(a.kv.len(), b.kv.len(), "{ctx}: seq count");
+    for (ka, kb) in a.kv.iter().zip(&b.kv) {
+        assert_eq!(ka.len(), kb.len(), "{ctx}: KV sizes");
+        for (x, y) in ka.iter().zip(kb) {
+            assert!((x - y).abs() < 1e-5, "{ctx}: KV pages ({x} vs {y})");
+        }
+    }
+    for (la, lb) in a.logits.iter().zip(&b.logits) {
+        assert_eq!(la.len(), lb.len(), "{ctx}: logits sizes");
+        for (x, y) in la.iter().zip(lb) {
+            assert!((x - y).abs() < 1e-4, "{ctx}: logits ({x} vs {y})");
+        }
+    }
+    for (ra, rb) in a.rho.iter().zip(&b.rho) {
+        assert!((ra - rb).abs() < 1e-12, "{ctx}: ρ̂ ({ra} vs {rb})");
+    }
+    assert!(
+        (a.probe_delta - b.probe_delta).abs() < 1e-6,
+        "{ctx}: probe δ ({} vs {})",
+        a.probe_delta,
+        b.probe_delta
+    );
+    assert_eq!(a.dense_calls, b.dense_calls, "{ctx}: full-scoring cadence");
+}
+
+/// Artifact-gated test entry: the artifacts dir, or `None` to self-skip
+/// (the same contract every integration test uses).
+pub fn artifacts_dir() -> Option<String> {
+    let dir = std::env::var("PRHS_ARTIFACTS").unwrap_or_else(|_| {
+        format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+    });
+    if std::path::Path::new(&dir).join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts not built at {dir}");
+        None
+    }
+}
+
+/// Whether `model` in the artifact set at `dir` can decode a group of
+/// `n` sequences with context up to `need` (batch tile + dense bucket
+/// availability) — multi-sequence differential tests self-skip on quick
+/// artifact sets.
+pub fn can_batch(dir: &str, model: &str, n: usize, need: usize) -> bool {
+    let rt = prhs::runtime::Runtime::new(dir).expect("runtime");
+    let mm = rt.model(model).expect("model");
+    let ok = mm.bucket_for("layer_step", "batch", n).is_some()
+        && mm.bucket_for("layer_step_dense", "l_max", need).is_some();
+    if !ok {
+        eprintln!("skipping: artifact set lacks batch {n} / l_max {need}");
+    }
+    ok
+}

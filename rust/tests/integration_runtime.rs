@@ -1,23 +1,14 @@
 //! Integration tests over the real AOT artifacts + PJRT runtime.
 //! Require `make artifacts` to have run (skipped otherwise).
 
+mod common;
+
+use common::artifacts_dir;
 use prhs::config::{EngineConfig, SelectorConfig, SelectorKind};
 use prhs::model::Engine;
 use prhs::runtime::{Input, Runtime};
 use prhs::util::rng::Rng;
 use prhs::workload;
-
-fn artifacts_dir() -> Option<String> {
-    let dir = std::env::var("PRHS_ARTIFACTS").unwrap_or_else(|_| {
-        format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
-    });
-    if std::path::Path::new(&dir).join("manifest.json").exists() {
-        Some(dir)
-    } else {
-        eprintln!("skipping: artifacts not built at {dir}");
-        None
-    }
-}
 
 fn engine(kind: SelectorKind) -> Option<Engine> {
     let dir = artifacts_dir()?;
@@ -550,136 +541,13 @@ fn device_prefill_matches_host_staged_oracle_and_cuts_host_bytes() {
     assert_eq!(st::dev_chunk_bytes(cb), 4 * (cb as u64 + 10));
 }
 
-/// Tentpole (device-resident decode KV): all three residency modes —
-/// device mirror, host-staged oracle (`device_decode_kv = false`), and
-/// the pre-device-artifact fallback (decode residency stages absent
-/// from the manifest) — must be selectable at runtime and
-/// trajectory-identical over a run that covers retrieval steps, probe
-/// steps, AND a mirror re-bucket (the prompt sits just under the 512
-/// bucket, so decode crosses it mid-run): same KV pages, selector
-/// sets, sampled tokens, ρ̂ and probe fidelity.  The device mode must
-/// collapse decode host bytes and be the only one issuing
-/// `layer_step_dense_dev` calls; no arena slots may leak.
-#[test]
-fn device_decode_matches_host_staged_oracle_across_modes() {
-    let Some(dir) = artifacts_dir() else { return };
-    {
-        let rt = Runtime::new(&dir).unwrap();
-        let mm = rt.model("small").unwrap();
-        if mm.bucket_for("layer_step_dense_dev", "l_max", 1024).is_none() {
-            eprintln!("skipping: artifact set lacks decode residency buckets");
-            return;
-        }
-    }
-    let l = 508usize; // 512-bucket prefill; decode crosses into 1024
-    let prompt: Vec<i32> = {
-        let mut rng = Rng::new(83);
-        (0..l).map(|_| rng.below(8192) as i32).collect()
-    };
-    #[allow(clippy::type_complexity)]
-    let run = |device: bool,
-               strip_artifacts: bool|
-     -> (Vec<i32>, Vec<Vec<Vec<usize>>>, Vec<f32>, f64, u64, u64, f64) {
-        let mut cfg = EngineConfig::default();
-        cfg.artifacts_dir = dir.clone();
-        cfg.selector.kind = SelectorKind::Cis;
-        cfg.device_decode_kv = device;
-        let mut engine = Engine::new(cfg).unwrap();
-        if strip_artifacts {
-            // simulate a pre-device artifact set: the runtime fallback
-            // mode the residency API keeps working for
-            engine.mm.artifacts.retain(|a| {
-                !matches!(
-                    a.stage.as_str(),
-                    "layer_step_dense_dev" | "kv_append_dev" | "state_to_kv"
-                )
-            });
-        }
-        engine.probe = Some(prhs::model::Probe::new(3));
-        let mut seq = engine.new_sequence(0, prompt.clone());
-        seq.max_new = 12;
-        // chunked prefill on the device-prefill path, so the device run
-        // exercises the in-device state_to_kv handoff
-        while !engine.prefill_chunk(&mut seq, 96).unwrap() {}
-        while !seq.done {
-            let mut g = [&mut seq];
-            engine.decode_step(&mut g).unwrap();
-        }
-        let (nl, h) = (engine.mm.n_layers, engine.mm.n_heads);
-        let mut kv = Vec::new();
-        for layer in 0..nl {
-            for head in 0..h {
-                for pos in 0..seq.cache.len() {
-                    kv.extend_from_slice(
-                        seq.cache.key(&engine.pool, layer, head, pos),
-                    );
-                    kv.extend_from_slice(
-                        seq.cache.value(&engine.pool, layer, head, pos),
-                    );
-                }
-            }
-        }
-        let sets: Vec<Vec<Vec<usize>>> = (0..nl)
-            .map(|layer| seq.selector.sets(layer).to_vec())
-            .collect();
-        let rho = engine.retrieval_ratio(&seq, seq.generated.len() as u64);
-        let probe = engine.probe.take().unwrap();
-        let out = (
-            seq.generated.clone(),
-            sets,
-            kv,
-            rho,
-            engine.stats.decode_host_bytes_staged,
-            engine.stats.decode_dense_dev_calls,
-            probe.mean_delta(),
-        );
-        engine.release(&mut seq);
-        assert_eq!(
-            engine.device_slots_live(),
-            0,
-            "arena slots leaked (device={device}, strip={strip_artifacts})"
-        );
-        out
-    };
-    let (gen_d, sets_d, kv_d, rho_d, bytes_d, devcalls_d, delta_d) =
-        run(true, false);
-    let (gen_h, sets_h, kv_h, rho_h, bytes_h, devcalls_h, delta_h) =
-        run(false, false);
-    let (gen_f, sets_f, kv_f, rho_f, bytes_f, devcalls_f, delta_f) =
-        run(true, true);
-
-    // trajectory identity across all three residency modes
-    assert_eq!(gen_d, gen_h, "device vs host-staged decode trajectories");
-    assert_eq!(gen_d, gen_f, "device vs pre-device-fallback trajectories");
-    assert_eq!(sets_d, sets_h, "selector sets");
-    assert_eq!(sets_d, sets_f, "selector sets (fallback)");
-    assert_eq!(kv_d.len(), kv_h.len());
-    for (a, b) in kv_d.iter().zip(&kv_h) {
-        assert!((a - b).abs() < 1e-5, "KV pages diverge: {a} vs {b}");
-    }
-    assert!((rho_d - rho_h).abs() < 1e-12, "ρ̂: {rho_d} vs {rho_h}");
-    assert!((rho_d - rho_f).abs() < 1e-12);
-    assert!(
-        (delta_d - delta_h).abs() < 1e-6,
-        "probe δ diverges: {delta_d} vs {delta_h}"
-    );
-    assert!((delta_d - delta_f).abs() < 1e-6);
-    for (a, b) in kv_d.iter().zip(&kv_f) {
-        assert!((a - b).abs() < 1e-5, "fallback KV pages diverge");
-    }
-
-    // mode observables: only the device run issues dense-dev calls, and
-    // it collapses decode host traffic; the fallback behaves exactly
-    // like the host-staged oracle
-    assert!(devcalls_d > 0, "device mode must run layer_step_dense_dev");
-    assert_eq!(devcalls_h, 0);
-    assert_eq!(devcalls_f, 0, "fallback must not find the dev stages");
-    assert!(
-        bytes_d * 2 < bytes_h,
-        "device decode must collapse host bytes: {bytes_d} vs {bytes_h}"
-    );
-    assert_eq!(bytes_f, bytes_h, "fallback bytes == host-staged oracle");
-}
+// NOTE (this PR): the ad-hoc cross-mode identity test that lived here
+// (`device_decode_matches_host_staged_oracle_across_modes`, PR 4) is
+// superseded by the reusable differential harness —
+// `tests/common/mod.rs` + `tests/differential_modes.rs` — which runs
+// the same workload through {batched-dev, per-seq-dev, host-staged} ×
+// {device_prefill_kv on/off} × stripped-manifest fallbacks (and a GQA
+// config) and asserts the full observable surface.
 
 /// Issue acceptance (decode bandwidth regression), on artifacts: with
 /// the top-k oracle retrieving on every (step, layer), the host-staged
