@@ -6,6 +6,14 @@ Interchange format is HLO text, not serialized HloModuleProto: jax >= 0.5
 emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
 version behind the published ``xla`` 0.1.6 crate) rejects; the text parser
 reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+The stage *plans* (name, bucket params, argument specs, output names,
+untupled flag) are produced by data-driven generators
+(`iter_model_stage_plans` / `iter_op_stage_plans`) so the declared-shape
+contract has exactly one python source: the builder lowers from the plans,
+and `tests/test_contract.py` re-derives every plan's shapes against the
+checked-in golden fixture the rust shape models also pin
+(`rust/src/analysis/shape.rs`, DESIGN.md §Contract).
 """
 
 import argparse
@@ -24,6 +32,12 @@ from .config import CONFIGS, ArtifactConfig, config_dict
 
 F32 = jnp.float32
 I32 = jnp.int32
+
+# Version of the python→rust manifest contract, stamped into manifest.json
+# and checked by `prhs check` / `Engine` strict startup.  Bump on any
+# schema or shape-algebra change, together with
+# rust/src/analysis/mod.rs::SUPPORTED_CONTRACT_VERSION.
+CONTRACT_VERSION = 1
 
 
 def to_hlo_text(lowered, return_tuple: bool = True) -> str:
@@ -47,6 +61,16 @@ def _io_entry(name, s):
     return {"name": name, "dtype": str(s.dtype), "shape": list(s.shape)}
 
 
+def plan_declared_io(plan):
+    """(inputs, outputs) manifest entries for one stage plan, with output
+    shapes derived via `jax.eval_shape` — the single shape source shared
+    by the builder and the contract tests."""
+    outs = jax.eval_shape(plan["fn"], *[s for _, s in plan["arg_specs"]])
+    inputs = [_io_entry(n, s) for n, s in plan["arg_specs"]]
+    outputs = [_io_entry(plan["out_names"][i], o) for i, o in enumerate(outs)]
+    return inputs, outputs
+
+
 class Builder:
     def __init__(self, out_dir: str):
         self.out_dir = out_dir
@@ -62,22 +86,26 @@ class Builder:
         fname = f"{name}.hlo.txt"
         with open(os.path.join(self.out_dir, fname), "w") as f:
             f.write(text)
-        outs = jax.eval_shape(fn, *[s for _, s in arg_specs])
+        plan = {"fn": fn, "arg_specs": arg_specs, "out_names": out_names}
+        inputs, outputs = plan_declared_io(plan)
         entry = {
             "name": name,
             "file": fname,
             "stage": stage,
             "params": params,
-            "inputs": [_io_entry(n, s) for n, s in arg_specs],
-            "outputs": [
-                _io_entry(out_names[i], o) for i, o in enumerate(outs)
-            ],
+            "inputs": inputs,
+            "outputs": outputs,
         }
         if untupled:
             entry["untupled"] = True
         self.artifacts.append(entry)
         print(f"  {name}: {len(text)//1024} KiB, {time.time()-t0:.1f}s",
               flush=True)
+
+    def lower_plan(self, plan):
+        self.lower(plan["name"], plan["stage"], plan["fn"],
+                   plan["arg_specs"], plan["out_names"], plan["params"],
+                   untupled=plan.get("untupled", False))
 
 
 def layer_weight_specs(cfg):
@@ -96,9 +124,29 @@ def layer_weight_specs(cfg):
     ]
 
 
-def build_model_artifacts(b: Builder, cfg, art: ArtifactConfig,
-                          quick: bool = False):
-    """E2E serving stages for one model config."""
+def all_weight_specs(cfg):
+    all_w = [("embed_w", spec([cfg.vocab_size, cfg.d_model]))]
+    for i in range(cfg.n_layers):
+        for nm, s in layer_weight_specs(cfg):
+            all_w.append((f"layers.{i}.{nm}", s))
+    all_w += [("final_norm_w", spec([cfg.d_model])),
+              ("lm_head", spec([cfg.d_model, cfg.vocab_size]))]
+    return all_w
+
+
+def _sched_scalar_specs():
+    return [(k, spec([], F32)) for k in
+            ("c_sink", "ell_s", "phi", "alpha", "psi", "gamma",
+             "psaw_on", "etf_on")]
+
+
+def iter_model_stage_plans(cfg, art: ArtifactConfig, quick: bool = False):
+    """Yield one plan per E2E serving-stage artifact for `cfg`.
+
+    Plan keys: name, stage, fn, arg_specs, out_names, params, untupled.
+    Emission order matches the historical builder order so artifact lists
+    stay byte-stable across the refactor.
+    """
     H, Hkv, d, dm, V = (cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
                         cfg.d_model, cfg.vocab_size)
     lw = layer_weight_specs(cfg)
@@ -106,88 +154,81 @@ def build_model_artifacts(b: Builder, cfg, art: ArtifactConfig,
     sels = art.sel_buckets if not quick else art.sel_buckets[:1]
     ctxs = art.ctx_buckets if not quick else art.ctx_buckets[:1]
     pres = art.prefill_buckets if not quick else art.prefill_buckets[:1]
+    exts = (art.extend_chunk_buckets if not quick
+            else art.extend_chunk_buckets[:1])
+    scalars = _sched_scalar_specs()
 
     for bsz in batches:
-        b.lower(
-            f"{cfg.name}_embed_b{bsz}", "embed",
-            lambda tokens, ew: (M.embed(tokens, ew),),
-            [("tokens", spec([bsz], I32)),
-             ("embed_w", spec([V, dm]))],
-            ["hidden"], {"model": cfg.name, "batch": bsz},
-        )
-        b.lower(
-            f"{cfg.name}_lm_head_b{bsz}", "lm_head",
-            lambda hidden, nw, hw: (M.lm_head(hidden, nw, hw, cfg=cfg),),
-            [("hidden", spec([bsz, dm])),
-             ("final_norm_w", spec([dm])),
-             ("lm_head", spec([dm, V]))],
-            ["logits"], {"model": cfg.name, "batch": bsz},
-        )
+        yield {
+            "name": f"{cfg.name}_embed_b{bsz}", "stage": "embed",
+            "fn": lambda tokens, ew: (M.embed(tokens, ew),),
+            "arg_specs": [("tokens", spec([bsz], I32)),
+                          ("embed_w", spec([V, dm]))],
+            "out_names": ["hidden"],
+            "params": {"model": cfg.name, "batch": bsz},
+        }
+        yield {
+            "name": f"{cfg.name}_lm_head_b{bsz}", "stage": "lm_head",
+            "fn": lambda hidden, nw, hw: (M.lm_head(hidden, nw, hw, cfg=cfg),),
+            "arg_specs": [("hidden", spec([bsz, dm])),
+                          ("final_norm_w", spec([dm])),
+                          ("lm_head", spec([dm, V]))],
+            "out_names": ["logits"],
+            "params": {"model": cfg.name, "batch": bsz},
+        }
         for n in sels:
             def step(hidden, pos, k_sel, v_sel, mask, *ws):
                 return M.layer_step(
                     hidden, pos, k_sel, v_sel, mask, *ws, cfg=cfg)
-            b.lower(
-                f"{cfg.name}_layer_step_b{bsz}_n{n}", "layer_step",
-                step,
-                [("hidden", spec([bsz, dm])),
-                 ("pos", spec([bsz], I32)),
-                 ("k_sel", spec([bsz, H, n, d])),
-                 ("v_sel", spec([bsz, H, n, d])),
-                 ("sel_mask", spec([bsz, H, n]))] + lw,
-                ["hidden", "k_new", "v_new", "probs"],
-                {"model": cfg.name, "batch": bsz, "n_sel": n},
-            )
+            yield {
+                "name": f"{cfg.name}_layer_step_b{bsz}_n{n}",
+                "stage": "layer_step",
+                "fn": step,
+                "arg_specs": [("hidden", spec([bsz, dm])),
+                              ("pos", spec([bsz], I32)),
+                              ("k_sel", spec([bsz, H, n, d])),
+                              ("v_sel", spec([bsz, H, n, d])),
+                              ("sel_mask", spec([bsz, H, n]))] + lw,
+                "out_names": ["hidden", "k_new", "v_new", "probs"],
+                "params": {"model": cfg.name, "batch": bsz, "n_sel": n},
+            }
         for l_max in ctxs:
             def dstep(hidden, pos, kc, vc, length, *ws, _l=l_max):
                 return M.layer_step_dense(
                     hidden, pos, kc, vc, length, *ws, cfg=cfg, l_max=_l)
-            b.lower(
-                f"{cfg.name}_layer_step_dense_b{bsz}_l{l_max}",
-                "layer_step_dense",
-                dstep,
-                [("hidden", spec([bsz, dm])),
-                 ("pos", spec([bsz], I32)),
-                 ("k_cache", spec([bsz, Hkv, l_max, d])),
-                 ("v_cache", spec([bsz, Hkv, l_max, d])),
-                 ("length", spec([bsz], I32))] + lw,
-                ["hidden", "k_new", "v_new", "probs"],
-                {"model": cfg.name, "batch": bsz, "l_max": l_max},
-            )
+            yield {
+                "name": f"{cfg.name}_layer_step_dense_b{bsz}_l{l_max}",
+                "stage": "layer_step_dense",
+                "fn": dstep,
+                "arg_specs": [("hidden", spec([bsz, dm])),
+                              ("pos", spec([bsz], I32)),
+                              ("k_cache", spec([bsz, Hkv, l_max, d])),
+                              ("v_cache", spec([bsz, Hkv, l_max, d])),
+                              ("length", spec([bsz], I32))] + lw,
+                "out_names": ["hidden", "k_new", "v_new", "probs"],
+                "params": {"model": cfg.name, "batch": bsz, "l_max": l_max},
+            }
 
-    all_w_specs = [("embed_w", spec([V, dm]))]
-    for i in range(cfg.n_layers):
-        for nm, s in layer_weight_specs(cfg):
-            all_w_specs.append((f"layers.{i}.{nm}", s))
-    all_w_specs += [("final_norm_w", spec([dm])),
-                    ("lm_head", spec([dm, V]))]
+    all_w = all_weight_specs(cfg)
     for l_max in pres:
         def pf(tokens, length, c_sink, ell_s, phi, alpha, psi, gamma,
                psaw_on, etf_on, *ws, _l=l_max):
             return M.prefill(
                 tokens, length, c_sink, ell_s, phi, alpha, psi, gamma,
                 psaw_on, etf_on, *ws, cfg=cfg, l_max=_l)
-        b.lower(
-            f"{cfg.name}_prefill_l{l_max}", "prefill",
-            pf,
-            [("tokens", spec([l_max], I32)),
-             ("length", spec([], I32)),
-             ("c_sink", spec([], F32)),
-             ("ell_s", spec([], F32)),
-             ("phi", spec([], F32)),
-             ("alpha", spec([], F32)),
-             ("psi", spec([], F32)),
-             ("gamma", spec([], F32)),
-             ("psaw_on", spec([], F32)),
-             ("etf_on", spec([], F32))] + all_w_specs,
-            ["k_cache", "v_cache", "last_hidden", "logits", "last_probs"],
-            {"model": cfg.name, "l_max": l_max},
-        )
+        yield {
+            "name": f"{cfg.name}_prefill_l{l_max}", "stage": "prefill",
+            "fn": pf,
+            "arg_specs": [("tokens", spec([l_max], I32)),
+                          ("length", spec([], I32))] + scalars + all_w,
+            "out_names": ["k_cache", "v_cache", "last_hidden", "logits",
+                          "last_probs"],
+            "params": {"model": cfg.name, "l_max": l_max},
+        }
 
     # KV-in chunked prefill: bucketed over (chunk width, context-tile
     # width).  The context tile only needs to hold [0, start), so the
     # l_max grid reuses the prefill buckets (DESIGN.md §6a).
-    exts = art.extend_chunk_buckets if not quick else art.extend_chunk_buckets[:1]
     for chunk in exts:
         for l_max in pres:
             def pfe(tokens, start, length, c_sink, ell_s, phi, alpha, psi,
@@ -197,27 +238,21 @@ def build_model_artifacts(b: Builder, cfg, art: ArtifactConfig,
                     tokens, start, length, c_sink, ell_s, phi, alpha, psi,
                     gamma, psaw_on, etf_on, k_ctx, v_ctx, *ws, cfg=cfg,
                     chunk=_c, l_max=_l)
-            b.lower(
-                f"{cfg.name}_prefill_extend_c{chunk}_l{l_max}",
-                "prefill_extend",
-                pfe,
-                [("tokens", spec([chunk], I32)),
-                 ("start", spec([], I32)),
-                 ("length", spec([], I32)),
-                 ("c_sink", spec([], F32)),
-                 ("ell_s", spec([], F32)),
-                 ("phi", spec([], F32)),
-                 ("alpha", spec([], F32)),
-                 ("psi", spec([], F32)),
-                 ("gamma", spec([], F32)),
-                 ("psaw_on", spec([], F32)),
-                 ("etf_on", spec([], F32)),
-                 ("k_ctx", spec([cfg.n_layers, H, l_max, d])),
-                 ("v_ctx", spec([cfg.n_layers, H, l_max, d]))] + all_w_specs,
-                ["k_chunk", "v_chunk", "last_hidden", "logits",
-                 "last_probs"],
-                {"model": cfg.name, "chunk": chunk, "l_max": l_max},
-            )
+            yield {
+                "name": f"{cfg.name}_prefill_extend_c{chunk}_l{l_max}",
+                "stage": "prefill_extend",
+                "fn": pfe,
+                "arg_specs": [("tokens", spec([chunk], I32)),
+                              ("start", spec([], I32)),
+                              ("length", spec([], I32))] + scalars
+                             + [("k_ctx", spec([cfg.n_layers, H, l_max, d])),
+                                ("v_ctx", spec([cfg.n_layers, H, l_max, d]))]
+                             + all_w,
+                "out_names": ["k_chunk", "v_chunk", "last_hidden", "logits",
+                              "last_probs"],
+                "params": {"model": cfg.name, "chunk": chunk,
+                           "l_max": l_max},
+            }
 
     # Device-resident decode KV (the residency API's decode half,
     # DESIGN.md §2), gated with the prefill device stage so one flag
@@ -239,47 +274,49 @@ def build_model_artifacts(b: Builder, cfg, art: ArtifactConfig,
                 return M.layer_step_dense_dev(
                     hidden, pos, layer, length, kv_state, *ws, cfg=cfg,
                     l_max=_l)
-            b.lower(
-                f"{cfg.name}_layer_step_dense_dev_l{l_max}",
-                "layer_step_dense_dev",
-                dd,
-                [("hidden", spec([dm])),
-                 ("pos", spec([], I32)),
-                 ("layer", spec([], I32)),
-                 ("length", spec([], I32)),
-                 ("kv_state", spec([s_kv]))] + lw,
-                ["hidden", "k_new", "v_new", "probs"],
-                {"model": cfg.name, "l_max": l_max},
-            )
+            yield {
+                "name": f"{cfg.name}_layer_step_dense_dev_l{l_max}",
+                "stage": "layer_step_dense_dev",
+                "fn": dd,
+                "arg_specs": [("hidden", spec([dm])),
+                              ("pos", spec([], I32)),
+                              ("layer", spec([], I32)),
+                              ("length", spec([], I32)),
+                              ("kv_state", spec([s_kv]))] + lw,
+                "out_names": ["hidden", "k_new", "v_new", "probs"],
+                "params": {"model": cfg.name, "l_max": l_max},
+            }
 
             def ka(kv_state, k_new, v_new, pos, _l=l_max):
                 return M.kv_append_dev(
                     kv_state, k_new, v_new, pos, cfg=cfg, l_max=_l)
-            b.lower(
-                f"{cfg.name}_kv_append_dev_l{l_max}", "kv_append_dev",
-                ka,
-                [("kv_state", spec([s_kv])),
-                 ("k_new", spec([cfg.n_layers, H, d])),
-                 ("v_new", spec([cfg.n_layers, H, d])),
-                 ("pos", spec([], I32))],
-                ["kv_state"],
-                {"model": cfg.name, "l_max": l_max},
-                untupled=True,
-            )
+            yield {
+                "name": f"{cfg.name}_kv_append_dev_l{l_max}",
+                "stage": "kv_append_dev",
+                "fn": ka,
+                "arg_specs": [("kv_state", spec([s_kv])),
+                              ("k_new", spec([cfg.n_layers, H, d])),
+                              ("v_new", spec([cfg.n_layers, H, d])),
+                              ("pos", spec([], I32))],
+                "out_names": ["kv_state"],
+                "params": {"model": cfg.name, "l_max": l_max},
+                "untupled": True,
+            }
         for l_max in pres:
             if l_max not in ctxs:
                 continue  # handoff needs a decode-mirror bucket at l_max
 
             def s2k(state, _l=l_max):
                 return M.state_to_kv(state, cfg=cfg, l_max=_l)
-            b.lower(
-                f"{cfg.name}_state_to_kv_l{l_max}", "state_to_kv",
-                s2k,
-                [("state", spec([M.dev_state_len(cfg, l_max)]))],
-                ["kv_state"],
-                {"model": cfg.name, "l_max": l_max},
-                untupled=True,
-            )
+            yield {
+                "name": f"{cfg.name}_state_to_kv_l{l_max}",
+                "stage": "state_to_kv",
+                "fn": s2k,
+                "arg_specs": [("state", spec([M.dev_state_len(cfg, l_max)]))],
+                "out_names": ["kv_state"],
+                "params": {"model": cfg.name, "l_max": l_max},
+                "untupled": True,
+            }
 
     # Batched decode residency (DESIGN.md §2): up to S per-sequence KV
     # mirrors live stacked in one group buffer so a decode step issues
@@ -306,54 +343,58 @@ def build_model_artifacts(b: Builder, cfg, art: ArtifactConfig,
                     return M.layer_step_dense_dev_batch(
                         hidden, pos, layer, length, kv_states, *ws,
                         cfg=cfg, l_max=_l, s=_s, n_top=_k)
-                b.lower(
-                    f"{cfg.name}_layer_step_dense_dev_batch_s{sb}_l{l_max}",
-                    "layer_step_dense_dev_batch",
-                    ddb,
-                    [("hidden", spec([sb, dm])),
-                     ("pos", spec([sb], I32)),
-                     ("layer", spec([], I32)),
-                     ("length", spec([sb], I32)),
-                     ("kv_states", spec([sb * s_kv]))] + lw,
-                    ["hidden", "k_new", "v_new", "probs", "top_idx",
-                     "top_val"],
-                    {"model": cfg.name, "batched": sb, "l_max": l_max,
-                     "n_top": n_top},
-                )
+                yield {
+                    "name": (f"{cfg.name}_layer_step_dense_dev_batch"
+                             f"_s{sb}_l{l_max}"),
+                    "stage": "layer_step_dense_dev_batch",
+                    "fn": ddb,
+                    "arg_specs": [("hidden", spec([sb, dm])),
+                                  ("pos", spec([sb], I32)),
+                                  ("layer", spec([], I32)),
+                                  ("length", spec([sb], I32)),
+                                  ("kv_states", spec([sb * s_kv]))] + lw,
+                    "out_names": ["hidden", "k_new", "v_new", "probs",
+                                  "top_idx", "top_val"],
+                    "params": {"model": cfg.name, "batched": sb,
+                               "l_max": l_max, "n_top": n_top},
+                }
 
                 def kab(kv_states, k_new, v_new, pos, valid,
                         _l=l_max, _s=sb):
                     return M.kv_append_dev_batch(
                         kv_states, k_new, v_new, pos, valid, cfg=cfg,
                         l_max=_l, s=_s)
-                b.lower(
-                    f"{cfg.name}_kv_append_dev_batch_s{sb}_l{l_max}",
-                    "kv_append_dev_batch",
-                    kab,
-                    [("kv_states", spec([sb * s_kv])),
-                     ("k_new", spec([sb, cfg.n_layers, H, d])),
-                     ("v_new", spec([sb, cfg.n_layers, H, d])),
-                     ("pos", spec([sb], I32)),
-                     ("valid", spec([sb]))],
-                    ["kv_states"],
-                    {"model": cfg.name, "batched": sb, "l_max": l_max},
-                    untupled=True,
-                )
+                yield {
+                    "name": f"{cfg.name}_kv_append_dev_batch_s{sb}_l{l_max}",
+                    "stage": "kv_append_dev_batch",
+                    "fn": kab,
+                    "arg_specs": [
+                        ("kv_states", spec([sb * s_kv])),
+                        ("k_new", spec([sb, cfg.n_layers, H, d])),
+                        ("v_new", spec([sb, cfg.n_layers, H, d])),
+                        ("pos", spec([sb], I32)),
+                        ("valid", spec([sb]))],
+                    "out_names": ["kv_states"],
+                    "params": {"model": cfg.name, "batched": sb,
+                               "l_max": l_max},
+                    "untupled": True,
+                }
 
                 def ksw(kv_states, state, slot, _l=l_max):
                     return M.kv_slot_write_dev(
                         kv_states, state, slot, cfg=cfg, l_max=_l)
-                b.lower(
-                    f"{cfg.name}_kv_slot_write_dev_s{sb}_l{l_max}",
-                    "kv_slot_write_dev",
-                    ksw,
-                    [("kv_states", spec([sb * s_kv])),
-                     ("state", spec([s_kv])),
-                     ("slot", spec([], I32))],
-                    ["kv_states"],
-                    {"model": cfg.name, "batched": sb, "l_max": l_max},
-                    untupled=True,
-                )
+                yield {
+                    "name": f"{cfg.name}_kv_slot_write_dev_s{sb}_l{l_max}",
+                    "stage": "kv_slot_write_dev",
+                    "fn": ksw,
+                    "arg_specs": [("kv_states", spec([sb * s_kv])),
+                                  ("state", spec([s_kv])),
+                                  ("slot", spec([], I32))],
+                    "out_names": ["kv_states"],
+                    "params": {"model": cfg.name, "batched": sb,
+                               "l_max": l_max},
+                    "untupled": True,
+                }
 
     # Device-resident chunked prefill: same (chunk, l_max) grid, but the
     # whole cached context rides in one flat loop-carried state array so
@@ -372,65 +413,78 @@ def build_model_artifacts(b: Builder, cfg, art: ArtifactConfig,
                         tokens, start, length, c_sink, ell_s, phi, alpha,
                         psi, gamma, psaw_on, etf_on, state, *ws, cfg=cfg,
                         chunk=_c, l_max=_l)
-                b.lower(
-                    f"{cfg.name}_prefill_extend_dev_c{chunk}_l{l_max}",
-                    "prefill_extend_dev",
-                    pfd,
-                    [("tokens", spec([chunk], I32)),
-                     ("start", spec([], I32)),
-                     ("length", spec([], I32)),
-                     ("c_sink", spec([], F32)),
-                     ("ell_s", spec([], F32)),
-                     ("phi", spec([], F32)),
-                     ("alpha", spec([], F32)),
-                     ("psi", spec([], F32)),
-                     ("gamma", spec([], F32)),
-                     ("psaw_on", spec([], F32)),
-                     ("etf_on", spec([], F32)),
-                     ("state", spec([s_len]))] + all_w_specs,
-                    ["state"],
-                    {"model": cfg.name, "chunk": chunk, "l_max": l_max},
-                    untupled=True,
-                )
+                yield {
+                    "name": f"{cfg.name}_prefill_extend_dev_c{chunk}_l{l_max}",
+                    "stage": "prefill_extend_dev",
+                    "fn": pfd,
+                    "arg_specs": [("tokens", spec([chunk], I32)),
+                                  ("start", spec([], I32)),
+                                  ("length", spec([], I32))] + scalars
+                                 + [("state", spec([s_len]))] + all_w,
+                    "out_names": ["state"],
+                    "params": {"model": cfg.name, "chunk": chunk,
+                               "l_max": l_max},
+                    "untupled": True,
+                }
+
+
+def iter_op_stage_plans(cfg, batches, sels, ctxs, pallas_sels=None):
+    """Yield one plan per standalone attention-operator artifact
+    (Table IV/V benches, kernel parity)."""
+    H, d = cfg.n_heads, cfg.head_dim
+    pallas_sels = pallas_sels if pallas_sels is not None else sels[:1]
+    for bsz in batches:
+        for n in sels:
+            yield {
+                "name": f"{cfg.name}_attn_tsa_xla_b{bsz}_n{n}",
+                "stage": "attn_tsa_xla",
+                "fn": M.attn_tsa_xla,
+                "arg_specs": [("q", spec([bsz, H, d])),
+                              ("k_sel", spec([bsz, H, n, d])),
+                              ("v_sel", spec([bsz, H, n, d])),
+                              ("mask", spec([bsz, H, n]))],
+                "out_names": ["out"],
+                "params": {"model": cfg.name, "batch": bsz, "n_sel": n},
+            }
+        for n in pallas_sels:
+            yield {
+                "name": f"{cfg.name}_attn_tsa_pallas_b{bsz}_n{n}",
+                "stage": "attn_tsa_pallas",
+                "fn": M.attn_tsa_pallas,
+                "arg_specs": [("q", spec([bsz, H, d])),
+                              ("k_sel", spec([bsz, H, n, d])),
+                              ("v_sel", spec([bsz, H, n, d])),
+                              ("mask", spec([bsz, H, n]))],
+                "out_names": ["out"],
+                "params": {"model": cfg.name, "batch": bsz, "n_sel": n},
+            }
+        for l_max in ctxs:
+            yield {
+                "name": f"{cfg.name}_attn_dense_b{bsz}_l{l_max}",
+                "stage": "attn_dense",
+                "fn": functools.partial(M.attn_dense, l_max=l_max),
+                "arg_specs": [("q", spec([bsz, H, d])),
+                              ("k", spec([bsz, H, l_max, d])),
+                              ("v", spec([bsz, H, l_max, d])),
+                              ("length", spec([bsz], I32))],
+                "out_names": ["out"],
+                "params": {"model": cfg.name, "batch": bsz, "l_max": l_max},
+            }
+
+
+def build_model_artifacts(b: Builder, cfg, art: ArtifactConfig,
+                          quick: bool = False):
+    """E2E serving stages for one model config."""
+    for plan in iter_model_stage_plans(cfg, art, quick=quick):
+        b.lower_plan(plan)
 
 
 def build_op_artifacts(b: Builder, cfg, batches, sels, ctxs,
                        pallas_sels=None):
     """Standalone attention operators (Table IV/V benches, kernel parity)."""
-    H, d = cfg.n_heads, cfg.head_dim
-    pallas_sels = pallas_sels if pallas_sels is not None else sels[:1]
-    for bsz in batches:
-        for n in sels:
-            b.lower(
-                f"{cfg.name}_attn_tsa_xla_b{bsz}_n{n}", "attn_tsa_xla",
-                M.attn_tsa_xla,
-                [("q", spec([bsz, H, d])),
-                 ("k_sel", spec([bsz, H, n, d])),
-                 ("v_sel", spec([bsz, H, n, d])),
-                 ("mask", spec([bsz, H, n]))],
-                ["out"], {"model": cfg.name, "batch": bsz, "n_sel": n},
-            )
-        for n in pallas_sels:
-            b.lower(
-                f"{cfg.name}_attn_tsa_pallas_b{bsz}_n{n}",
-                "attn_tsa_pallas",
-                M.attn_tsa_pallas,
-                [("q", spec([bsz, H, d])),
-                 ("k_sel", spec([bsz, H, n, d])),
-                 ("v_sel", spec([bsz, H, n, d])),
-                 ("mask", spec([bsz, H, n]))],
-                ["out"], {"model": cfg.name, "batch": bsz, "n_sel": n},
-            )
-        for l_max in ctxs:
-            b.lower(
-                f"{cfg.name}_attn_dense_b{bsz}_l{l_max}", "attn_dense",
-                functools.partial(M.attn_dense, l_max=l_max),
-                [("q", spec([bsz, H, d])),
-                 ("k", spec([bsz, H, l_max, d])),
-                 ("v", spec([bsz, H, l_max, d])),
-                 ("length", spec([bsz], I32))],
-                ["out"], {"model": cfg.name, "batch": bsz, "l_max": l_max},
-            )
+    for plan in iter_op_stage_plans(cfg, batches, sels, ctxs,
+                                    pallas_sels=pallas_sels):
+        b.lower_plan(plan)
 
 
 def main() -> None:
@@ -442,7 +496,8 @@ def main() -> None:
     os.makedirs(args.out_dir, exist_ok=True)
 
     t0 = time.time()
-    manifest = {"version": 1, "models": {}}
+    manifest = {"version": 1, "contract_version": CONTRACT_VERSION,
+                "models": {}}
 
     small = CONFIGS["small"]
     art = ArtifactConfig()

@@ -1,0 +1,72 @@
+"""Regenerate the shared python<->rust contract fixture.
+
+Writes ``python/tests/data/contract_golden.json``: one entry per stage
+(small GQA config so n_heads != n_kv_heads mistakes can't hide), with the
+declared IO derived via ``jax.eval_shape`` over the real stage functions —
+the same path ``Builder.lower`` uses for the manifest.
+
+The fixture is pinned on both sides of the contract:
+
+- rust: ``analysis::shape`` golden test (``cargo test -p prhs shape``)
+- python: ``tests/test_contract.py``
+
+so regenerate it ONLY for an intentional contract change, bump
+``CONTRACT_VERSION`` in ``compile/aot.py``, and update both suites.
+
+Usage: ``cd python && python -m compile.gen_contract_golden``
+"""
+
+import json
+import os
+
+from compile.aot import (CONTRACT_VERSION, iter_model_stage_plans,
+                         iter_op_stage_plans, plan_declared_io)
+from compile.config import CONFIGS, ArtifactConfig, config_dict
+
+# Single-bucket grids keep the fixture small; the bucket values are
+# deliberately distinct from every model dim so a swapped-axis bug can't
+# produce a coincidentally-correct shape.
+ART_CFG = dict(batch_tiles=[1], sel_buckets=[192], ctx_buckets=[256],
+               prefill_buckets=[256], extend_chunk_buckets=[64],
+               dev_batch_tiles=[4])
+OP_GRID = dict(batches=[1], sels=[192], ctxs=[256], pallas_sels=[192])
+
+
+def build_golden():
+    cfg = CONFIGS["gqa"]
+    art = ArtifactConfig(**ART_CFG)
+    entries = []
+    plans = list(iter_model_stage_plans(cfg, art)) + list(
+        iter_op_stage_plans(cfg, OP_GRID["batches"], OP_GRID["sels"],
+                            OP_GRID["ctxs"], OP_GRID["pallas_sels"]))
+    for p in plans:
+        inputs, outputs = plan_declared_io(p)
+        entries.append({
+            "name": p["name"], "stage": p["stage"], "params": p["params"],
+            "untupled": bool(p.get("untupled", False)),
+            "inputs": inputs, "outputs": outputs,
+        })
+    return {
+        "contract_version": CONTRACT_VERSION,
+        "config": config_dict(cfg),
+        "artifact_config": ART_CFG,
+        "op_grid": OP_GRID,
+        "entries": entries,
+    }
+
+
+def main():
+    golden = build_golden()
+    out = os.path.join(os.path.dirname(__file__), "..", "tests", "data",
+                       "contract_golden.json")
+    with open(out, "w") as f:
+        json.dump(golden, f, indent=1)
+        f.write("\n")
+    print(f"wrote {os.path.relpath(out)}: {len(golden['entries'])} entries")
+    for e in golden["entries"]:
+        print(" ", e["stage"], e["name"],
+              "untupled" if e["untupled"] else "")
+
+
+if __name__ == "__main__":
+    main()

@@ -25,6 +25,12 @@ def manifest():
         return json.load(f)
 
 
+def test_manifest_carries_contract_version(manifest):
+    """The manifest stamps the contract version `prhs check` verifies."""
+    from compile.aot import CONTRACT_VERSION
+    assert manifest.get("contract_version") == CONTRACT_VERSION
+
+
 def test_manifest_lists_models(manifest):
     assert "small" in manifest["models"]
     assert "bench" in manifest["models"]
@@ -106,6 +112,8 @@ def test_quick_build_in_tmp(tmp_path):
     )
     assert r.returncode == 0, r.stderr[-2000:]
     m = json.load(open(tmp_path / "manifest.json"))
+    from compile.aot import CONTRACT_VERSION
+    assert m["contract_version"] == CONTRACT_VERSION
     arts = m["models"]["small"]["artifacts"]
     assert arts
     # HLO text (not proto) interchange

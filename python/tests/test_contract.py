@@ -1,0 +1,104 @@
+"""Python side of the shared python<->rust contract fixture.
+
+Re-derives every stage plan's declared IO from the live ``aot.py`` code
+and diffs it against ``tests/data/contract_golden.json`` — the same
+fixture ``rust/src/analysis/shape.rs`` pins its shape models to.  If a
+stage signature changes, this test and the rust golden test fail
+together, forcing an intentional fixture regen + ``CONTRACT_VERSION``
+bump (see ``compile/gen_contract_golden.py``).
+"""
+
+import json
+import os
+
+import pytest
+
+from compile.aot import CONTRACT_VERSION
+from compile.gen_contract_golden import ART_CFG, OP_GRID, build_golden
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "data",
+                           "contract_golden.json")
+
+
+@pytest.fixture(scope="module")
+def golden():
+    with open(GOLDEN_PATH) as f:
+        return json.load(f)
+
+
+@pytest.fixture(scope="module")
+def rebuilt():
+    return build_golden()
+
+
+def test_contract_version_matches_golden(golden):
+    assert golden["contract_version"] == CONTRACT_VERSION, (
+        "CONTRACT_VERSION changed without regenerating the golden "
+        "(python -m compile.gen_contract_golden)")
+
+
+def test_golden_grids_match_generator(golden):
+    # The fixture records the grids it was built from; the generator's
+    # constants must still agree or a regen would silently change scope.
+    assert golden["artifact_config"] == ART_CFG
+    assert golden["op_grid"] == OP_GRID
+
+
+def test_every_stage_present_exactly_once(golden):
+    stages = [e["stage"] for e in golden["entries"]]
+    assert len(stages) == len(set(stages)), "duplicate stage in fixture"
+    assert len(stages) == 16, stages
+
+
+def test_rebuilt_plans_match_golden_exactly(golden, rebuilt):
+    by_name = {e["name"]: e for e in golden["entries"]}
+    assert len(by_name) == len(golden["entries"])
+    rebuilt_names = [e["name"] for e in rebuilt["entries"]]
+    assert sorted(rebuilt_names) == sorted(by_name), (
+        "stage plan set drifted from the golden fixture")
+    for e in rebuilt["entries"]:
+        g = by_name[e["name"]]
+        for field in ("stage", "params", "untupled"):
+            assert e[field] == g[field], (e["name"], field)
+        for kind in ("inputs", "outputs"):
+            assert e[kind] == g[kind], (
+                f"{e['name']}: declared {kind} drifted from golden — an "
+                f"intentional contract change needs a fixture regen and a "
+                f"CONTRACT_VERSION bump\n got: {e[kind]}\nwant: {g[kind]}")
+
+
+def test_untupled_entries_have_single_output(golden):
+    # Mirrors the rust checker's E_UNTUPLED_MULTI invariant: an untupled
+    # lowering with >1 output would mis-declare the XLA result layout.
+    for e in golden["entries"]:
+        if e["untupled"]:
+            assert len(e["outputs"]) == 1, e["name"]
+
+
+def test_feedback_stages_are_untupled_and_closed(golden):
+    # Feed-back stages consume and produce the same buffer spec so the
+    # output can be passed straight back as the next call's parameter.
+    feedback = {"prefill_extend_dev", "kv_append_dev", "state_to_kv",
+                "kv_append_dev_batch", "kv_slot_write_dev"}
+    seen = set()
+    for e in golden["entries"]:
+        if e["stage"] not in feedback:
+            continue
+        seen.add(e["stage"])
+        assert e["untupled"], e["name"]
+        out = e["outputs"][0]
+        if e["stage"] == "state_to_kv":
+            continue  # converts dev state -> kv state; specs differ
+        inp = next(t for t in e["inputs"] if t["name"] == out["name"])
+        assert inp["shape"] == out["shape"], e["name"]
+        assert inp["dtype"] == out["dtype"], e["name"]
+    assert seen == feedback
+
+
+def test_plan_declared_io_uses_abstract_eval_only(rebuilt):
+    # plan_declared_io must stay cheap (jax.eval_shape, no compilation):
+    # every declared dtype is one of the two the contract speaks.
+    for e in rebuilt["entries"]:
+        for t in e["inputs"] + e["outputs"]:
+            assert t["dtype"] in ("float32", "int32"), (e["name"], t)
+            assert all(isinstance(d, int) and d >= 0 for d in t["shape"])

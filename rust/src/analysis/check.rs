@@ -1,0 +1,722 @@
+//! Contract invariant checks over a parsed manifest.
+//!
+//! Everything in `check_model` / `check_manifest` is pure (no fs, no
+//! PJRT): it diffs each artifact's declared IO against the recomputed
+//! shape model and enforces the cross-artifact invariants — bucket-grid
+//! completeness, untupled discipline, the device-state feed-back
+//! invariant, `n_top` ≤ `l_max`, GQA divisibility, weight-blob layout.
+//! `check_files` adds the filesystem layer (artifact files present and
+//! HLO-shaped, blob size matches the declared extent).  `prhs check`
+//! runs all of it; `Engine::new` runs the pure part for the served model
+//! when `EngineConfig::strict_manifest` is on.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::runtime::manifest::{ArtifactSpec, Manifest, ModelManifest};
+
+use super::report::*;
+use super::shape::{self, Dims, ModelErr, Spec};
+use super::SUPPORTED_CONTRACT_VERSION;
+
+/// Manifest-level version stamp check.
+fn check_version(manifest: &Manifest, r: &mut Report) {
+    match manifest.contract_version {
+        None => r.warn(
+            W_NO_VERSION,
+            "",
+            "manifest",
+            "no `contract_version` stamp (artifact set predates the \
+             contract; rebuild with `make artifacts`)"
+                .into(),
+        ),
+        Some(v) if v != SUPPORTED_CONTRACT_VERSION => r.error(
+            E_VERSION,
+            "",
+            "manifest",
+            format!(
+                "contract_version {v} not supported (checker speaks \
+                 {SUPPORTED_CONTRACT_VERSION})"
+            ),
+        ),
+        Some(_) => {}
+    }
+}
+
+fn fmt_params(params: &BTreeMap<String, usize>) -> String {
+    let kv: Vec<String> = params.iter().map(|(k, v)| format!("{k}={v}")).collect();
+    format!("({})", kv.join(", "))
+}
+
+/// Diff one artifact's declared IO against the recomputed stage model.
+fn diff_io(
+    model: &str,
+    art: &ArtifactSpec,
+    kind: &str,
+    declared: &[crate::runtime::manifest::TensorSpec],
+    computed: &[Spec],
+    r: &mut Report,
+) {
+    if declared.len() != computed.len() {
+        r.error(
+            E_ARITY,
+            model,
+            &art.name,
+            format!(
+                "{kind}s: declared {} tensors, stage `{}` requires {}",
+                declared.len(),
+                art.stage,
+                computed.len()
+            ),
+        );
+        return;
+    }
+    for (i, (d, c)) in declared.iter().zip(computed).enumerate() {
+        if d.name != c.name {
+            r.error(
+                E_IO_NAME,
+                model,
+                &art.name,
+                format!("{kind}[{i}]: declared `{}`, expected `{}`", d.name, c.name),
+            );
+            continue; // name mismatch makes shape/dtype diffs noise
+        }
+        if d.dtype != c.dtype {
+            r.error(
+                E_DTYPE,
+                model,
+                &art.name,
+                format!(
+                    "{kind} `{}`: declared dtype {}, expected {}",
+                    d.name, d.dtype, c.dtype
+                ),
+            );
+        }
+        if d.shape != c.shape {
+            r.error(
+                E_SHAPE,
+                model,
+                &art.name,
+                format!(
+                    "{kind} `{}`: declared shape {:?}, expected {:?}",
+                    d.name, d.shape, c.shape
+                ),
+            );
+        }
+    }
+}
+
+/// Per-artifact checks: shape-model diff, untupled discipline, in-artifact
+/// feed-back, n_top bound, overflow-free element counts.
+fn check_artifact(model: &str, dims: &Dims, art: &ArtifactSpec, r: &mut Report) {
+    for t in art.inputs.iter().chain(&art.outputs) {
+        if t.elements().is_none() {
+            r.error(
+                E_OVERFLOW,
+                model,
+                &art.name,
+                format!("tensor `{}` shape {:?} overflows usize", t.name, t.shape),
+            );
+        }
+    }
+    if art.untupled && art.outputs.len() != 1 {
+        r.error(
+            E_UNTUPLED_MULTI,
+            model,
+            &art.name,
+            format!(
+                "untupled lowering requires exactly one output, found {}",
+                art.outputs.len()
+            ),
+        );
+    }
+    if shape::requires_untupled(&art.stage) && !art.untupled {
+        r.error(
+            E_UNTUPLED_REQUIRED,
+            model,
+            &art.name,
+            format!(
+                "stage `{}` feeds its output back as an input and must be \
+                 lowered untupled",
+                art.stage
+            ),
+        );
+    }
+    if let (Some(&n_top), Some(&l_max)) =
+        (art.params.get("n_top"), art.params.get("l_max"))
+    {
+        if n_top > l_max {
+            r.error(
+                E_NTOP,
+                model,
+                &art.name,
+                format!("n_top {n_top} exceeds l_max {l_max}"),
+            );
+        }
+    }
+    // In-artifact feed-back: an output that shares its name with an input
+    // (kv_state, kv_states, state) must have the identical spec, or the
+    // result can't be fed back as the next call's parameter.
+    for out in &art.outputs {
+        if let Some(inp) = art.inputs.iter().find(|i| i.name == out.name) {
+            if inp.shape != out.shape || inp.dtype != out.dtype {
+                r.error(
+                    E_FEEDBACK,
+                    model,
+                    &art.name,
+                    format!(
+                        "output `{}` {:?} does not match the input it feeds \
+                         back into {:?}",
+                        out.name, out.shape, inp.shape
+                    ),
+                );
+            }
+        }
+    }
+    match shape::stage_model(dims, &art.stage, &art.params) {
+        Err(ModelErr::MissingParam(k)) => r.error(
+            E_PARAM,
+            model,
+            &art.name,
+            format!("stage `{}`: missing bucket param `{k}`", art.stage),
+        ),
+        Err(ModelErr::Overflow(what)) => r.error(
+            E_OVERFLOW,
+            model,
+            &art.name,
+            format!("stage `{}`: shape overflow computing {what}", art.stage),
+        ),
+        Ok(None) => r.warn(
+            W_UNKNOWN_STAGE,
+            model,
+            &art.name,
+            format!("stage `{}` unknown to the checker (schema drift?)", art.stage),
+        ),
+        Ok(Some(m)) => {
+            diff_io(model, art, "input", &art.inputs, &m.inputs, r);
+            diff_io(model, art, "output", &art.outputs, &m.outputs, r);
+        }
+    }
+}
+
+/// Bucket values present for `stage` along grid axis `key`.
+fn axis_values(arts: &[&ArtifactSpec], key: &str) -> BTreeSet<usize> {
+    arts.iter().filter_map(|a| a.params.get(key).copied()).collect()
+}
+
+/// Bucket-grid completeness: for every known stage, the artifacts must
+/// tile the full cross product of the per-axis bucket sets — a hole means
+/// some (batch, bucket) combination dispatches to a missing program.
+fn check_grids(model: &str, arts: &[ArtifactSpec], r: &mut Report) {
+    let mut by_stage: BTreeMap<&str, Vec<&ArtifactSpec>> = BTreeMap::new();
+    for a in arts {
+        by_stage.entry(a.stage.as_str()).or_default().push(a);
+    }
+    for (stage, arts) in &by_stage {
+        let Some(keys) = shape::grid_keys(stage) else { continue };
+        let axes: Vec<Vec<usize>> = keys
+            .iter()
+            .map(|k| axis_values(arts, k).into_iter().collect())
+            .collect();
+        if axes.iter().any(|ax| ax.is_empty()) {
+            // Every artifact in the group is missing this bucket param —
+            // reported per-artifact as E_PARAM; there is no grid to walk.
+            continue;
+        }
+        // Walk the cross product (grids are tiny: ≤ 2 axes, ≤ ~8 values).
+        let mut idx = vec![0usize; axes.len()];
+        'combos: loop {
+            let combo: Vec<(&str, usize)> = keys
+                .iter()
+                .zip(&axes)
+                .zip(&idx)
+                .map(|((k, vals), &i)| (*k, vals[i]))
+                .collect();
+            let hit = arts.iter().any(|a| {
+                combo.iter().all(|(k, v)| a.params.get(*k) == Some(v))
+            });
+            if !hit {
+                let combo_s: Vec<String> =
+                    combo.iter().map(|(k, v)| format!("{k}={v}")).collect();
+                r.error(
+                    E_GRID_HOLE,
+                    model,
+                    stage,
+                    format!("bucket grid hole: no artifact for ({})", combo_s.join(", ")),
+                );
+            }
+            for ax in (0..axes.len()).rev() {
+                idx[ax] += 1;
+                if idx[ax] < axes[ax].len() {
+                    continue 'combos;
+                }
+                idx[ax] = 0;
+            }
+            break;
+        }
+    }
+
+    // Cross-stage grid coupling: stages that hand state to each other
+    // must be compiled for the same bucket sets, or the handoff has no
+    // matching program at dispatch time.
+    let l_set = |stage: &str| -> BTreeSet<usize> {
+        by_stage
+            .get(stage)
+            .map(|v| axis_values(v, "l_max"))
+            .unwrap_or_default()
+    };
+    let couple = |a: &str, b: &str, r: &mut Report| {
+        let (sa, sb) = (l_set(a), l_set(b));
+        if !sa.is_empty() && !sb.is_empty() && sa != sb {
+            r.error(
+                E_GRID_HOLE,
+                model,
+                a,
+                format!(
+                    "l_max buckets {sa:?} differ from `{b}` buckets {sb:?} \
+                     (coupled stages must share the grid)"
+                ),
+            );
+        }
+    };
+    couple("layer_step_dense_dev", "kv_append_dev", r);
+    couple("layer_step_dense_dev_batch", "kv_append_dev_batch", r);
+    couple("kv_append_dev_batch", "kv_slot_write_dev", r);
+    couple("prefill", "prefill_extend", r);
+    couple("prefill_extend", "prefill_extend_dev", r);
+    // state_to_kv bridges prefill state → decode kv_state: it must cover
+    // exactly the buckets both sides speak.
+    let bridge = l_set("state_to_kv");
+    if !bridge.is_empty() {
+        let want: BTreeSet<usize> = l_set("prefill")
+            .intersection(&l_set("layer_step_dense_dev"))
+            .copied()
+            .collect();
+        if !want.is_empty() && bridge != want {
+            r.error(
+                E_GRID_HOLE,
+                model,
+                "state_to_kv",
+                format!(
+                    "l_max buckets {bridge:?} must equal \
+                     prefill ∩ layer_step_dense_dev = {want:?}"
+                ),
+            );
+        }
+    }
+}
+
+/// Cross-artifact feed-back: the prefill device state handed to
+/// `state_to_kv` must be byte-identical in shape to what
+/// `prefill_extend_dev` produced at the same bucket.
+fn check_state_handoff(model: &str, arts: &[ArtifactSpec], r: &mut Report) {
+    for bridge in arts.iter().filter(|a| a.stage == "state_to_kv") {
+        let Some(&l) = bridge.params.get("l_max") else { continue };
+        let Some(bin) = bridge.inputs.first() else { continue };
+        for dev in arts.iter().filter(|a| {
+            a.stage == "prefill_extend_dev" && a.params.get("l_max") == Some(&l)
+        }) {
+            let Some(dout) = dev.outputs.first() else { continue };
+            if dout.shape != bin.shape {
+                r.error(
+                    E_FEEDBACK,
+                    model,
+                    &bridge.name,
+                    format!(
+                        "input `{}` {:?} does not match `{}` output {:?} at \
+                         l_max={l}",
+                        bin.name, bin.shape, dev.name, dout.shape
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// Weight table vs the expected blob layout: exact name set, exact
+/// shapes, non-overlapping extents.
+fn check_weights(model: &str, dims: &Dims, mm: &ModelManifest, r: &mut Report) {
+    let expected = match shape::expected_weights(dims) {
+        Ok(w) => w,
+        Err(e) => {
+            r.error(E_OVERFLOW, model, "weights", e.to_string());
+            return;
+        }
+    };
+    let declared: BTreeMap<&str, &crate::runtime::manifest::WeightEntry> =
+        mm.weights.iter().map(|w| (w.name.as_str(), w)).collect();
+    if declared.len() != mm.weights.len() {
+        r.error(E_DUP, model, "weights", "duplicate weight names".into());
+    }
+    for e in &expected {
+        match declared.get(e.name.as_str()) {
+            None => r.error(
+                E_WEIGHT_SET,
+                model,
+                &e.name,
+                "weight missing from manifest".into(),
+            ),
+            Some(w) if w.shape != e.shape => r.error(
+                E_WEIGHT_SHAPE,
+                model,
+                &e.name,
+                format!("declared shape {:?}, expected {:?}", w.shape, e.shape),
+            ),
+            Some(_) => {}
+        }
+    }
+    let expected_names: BTreeSet<&str> =
+        expected.iter().map(|e| e.name.as_str()).collect();
+    for w in &mm.weights {
+        if !expected_names.contains(w.name.as_str()) {
+            r.error(
+                E_WEIGHT_SET,
+                model,
+                &w.name,
+                "weight not in the expected blob layout".into(),
+            );
+        }
+    }
+    // Extent overlap: sort by offset, each entry must end before the next
+    // begins.  (The builder tiles the blob exactly; a gap is legal-if-odd,
+    // an overlap means two weights alias the same bytes.)
+    let mut spans: Vec<(usize, usize, &str)> = Vec::new();
+    for w in &mm.weights {
+        match w.elements().and_then(|n| w.offset.checked_add(n)) {
+            Some(end) => spans.push((w.offset, end, &w.name)),
+            None => r.error(
+                E_OVERFLOW,
+                model,
+                &w.name,
+                format!("weight extent overflows (offset {} shape {:?})", w.offset, w.shape),
+            ),
+        }
+    }
+    spans.sort_unstable();
+    for pair in spans.windows(2) {
+        let (a_off, a_end, a_name) = pair[0];
+        let (b_off, _, b_name) = pair[1];
+        if b_off < a_end {
+            r.error(
+                E_WEIGHT_OVERLAP,
+                model,
+                b_name,
+                format!(
+                    "extent [{b_off}, ..) overlaps `{a_name}` [{a_off}, {a_end})"
+                ),
+            );
+        }
+    }
+}
+
+/// Pure per-model checks (no manifest-level version / unknown-key layer).
+fn check_model_inner(mm: &ModelManifest, r: &mut Report) {
+    let model = mm.name.as_str();
+    // Config sanity first: zero dims would make every downstream shape
+    // diff fire; report the root cause instead.
+    let dims_ok = [
+        ("n_layers", mm.n_layers),
+        ("d_model", mm.d_model),
+        ("n_heads", mm.n_heads),
+        ("n_kv_heads", mm.n_kv_heads),
+        ("head_dim", mm.head_dim),
+        ("d_ff", mm.d_ff),
+        ("vocab_size", mm.vocab_size),
+    ]
+    .iter()
+    .all(|&(k, v)| {
+        if v == 0 {
+            r.error(E_CONFIG, model, "config", format!("{k} must be nonzero"));
+        }
+        v != 0
+    });
+    if !dims_ok {
+        return;
+    }
+    if mm.n_heads % mm.n_kv_heads != 0 {
+        r.error(
+            E_GQA,
+            model,
+            "config",
+            format!(
+                "n_heads {} not divisible by n_kv_heads {} (GQA group size \
+                 must be integral)",
+                mm.n_heads, mm.n_kv_heads
+            ),
+        );
+    }
+    let dims = Dims::of(mm);
+
+    // Duplicate artifacts: same stage + same bucket params.
+    let mut seen: BTreeSet<(String, Vec<(String, usize)>)> = BTreeSet::new();
+    for a in &mm.artifacts {
+        let key = (
+            a.stage.clone(),
+            a.params.iter().map(|(k, v)| (k.clone(), *v)).collect(),
+        );
+        if !seen.insert(key) {
+            r.error(
+                E_DUP,
+                model,
+                &a.name,
+                format!("duplicate artifact for stage `{}` {}", a.stage, fmt_params(&a.params)),
+            );
+        }
+    }
+
+    for a in &mm.artifacts {
+        check_artifact(model, &dims, a, r);
+    }
+    check_grids(model, &mm.artifacts, r);
+    check_state_handoff(model, &mm.artifacts, r);
+    check_weights(model, &dims, mm, r);
+}
+
+/// Pure contract check for one model (what strict engine startup runs).
+pub fn check_model(manifest: &Manifest, mm: &ModelManifest) -> Report {
+    let mut r = Report::new();
+    check_version(manifest, &mut r);
+    check_model_inner(mm, &mut r);
+    r
+}
+
+/// Pure contract check for the whole manifest.  With `strict`, unknown
+/// keys anywhere in the document are errors (schema drift); otherwise
+/// they are warnings.
+pub fn check_manifest(manifest: &Manifest, strict: bool) -> Report {
+    let mut r = Report::new();
+    check_version(manifest, &mut r);
+    for key in &manifest.unknown_keys {
+        if strict {
+            r.error(E_UNKNOWN_KEY, "", key, "unknown key (schema drift)".into());
+        } else {
+            r.warn(
+                W_UNKNOWN_KEY,
+                "",
+                key,
+                "unknown key ignored (run with --strict-schema to fail)".into(),
+            );
+        }
+    }
+    for mm in manifest.models.values() {
+        check_model_inner(mm, &mut r);
+    }
+    r
+}
+
+/// Filesystem layer: artifact files exist and look like HLO text, the
+/// weight blob exists and its byte size matches the declared extents.
+pub fn check_files(manifest: &Manifest, r: &mut Report) {
+    for mm in manifest.models.values() {
+        let model = mm.name.as_str();
+        for a in &mm.artifacts {
+            let path = mm.artifact_path(&manifest.dir, a);
+            let mut head = [0u8; 9];
+            match std::fs::File::open(&path).and_then(|mut f| {
+                use std::io::Read;
+                f.read_exact(&mut head)
+            }) {
+                Ok(()) if &head == b"HloModule" => {}
+                Ok(()) => r.error(
+                    E_FILE,
+                    model,
+                    &a.name,
+                    format!("{path:?} does not start with `HloModule`"),
+                ),
+                Err(e) => r.error(
+                    E_FILE,
+                    model,
+                    &a.name,
+                    format!("cannot read {path:?}: {e}"),
+                ),
+            }
+        }
+        let total: Option<usize> = mm
+            .weights
+            .iter()
+            .map(|w| w.elements().and_then(|n| w.offset.checked_add(n)))
+            .try_fold(0usize, |acc, end| end.map(|e| acc.max(e)));
+        let blob = manifest.dir.join(&mm.weights_blob);
+        match (std::fs::metadata(&blob), total) {
+            (Err(e), _) => r.error(
+                E_FILE,
+                model,
+                &mm.weights_blob,
+                format!("cannot stat {blob:?}: {e}"),
+            ),
+            (Ok(md), Some(total)) => {
+                let want = total as u64 * 4;
+                if md.len() != want {
+                    r.error(
+                        E_BLOB_SIZE,
+                        model,
+                        &mm.weights_blob,
+                        format!(
+                            "blob is {} bytes, declared extents need {want} \
+                             ({} f32 elements)",
+                            md.len(),
+                            total
+                        ),
+                    );
+                }
+            }
+            (Ok(_), None) => {} // extent overflow already reported
+        }
+    }
+}
+
+/// Everything `prhs check` runs: parse (never panics — parse failure is a
+/// diagnostic), pure contract checks, filesystem checks.
+pub fn check_artifacts_dir(dir: &str, strict: bool) -> Report {
+    let manifest = match Manifest::load(dir) {
+        Ok(m) => m,
+        Err(e) => {
+            let mut r = Report::new();
+            r.error(E_PARSE, "", "manifest.json", format!("{e:#}"));
+            return r;
+        }
+    };
+    let mut r = check_manifest(&manifest, strict);
+    check_files(&manifest, &mut r);
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    /// A minimal internally-consistent manifest exercising the pure
+    /// checks without any artifact files.  (The full quick-build fixture
+    /// is exercised end-to-end by `tests/contract_mutations.rs` and CI's
+    /// `prhs check` run.)
+    fn tiny_manifest() -> Manifest {
+        // dims: nl=1, dm=4, h=2, hkv=1, d=2, dff=8, v=16
+        let doc = r#"{
+          "version": 1, "contract_version": 1,
+          "models": { "t": {
+            "config": {"name":"t","n_layers":1,"d_model":4,"n_heads":2,
+                       "n_kv_heads":1,"head_dim":2,"d_ff":8,"vocab_size":16,
+                       "rope_base":10000.0,"rms_eps":1e-5,"seed":1},
+            "weights_blob": "t.bin",
+            "weights": [
+              {"name":"embed.weight","shape":[16,4],"offset":0},
+              {"name":"layers.0.attn_norm.weight","shape":[4],"offset":64},
+              {"name":"layers.0.wq","shape":[4,4],"offset":68},
+              {"name":"layers.0.wk","shape":[4,2],"offset":84},
+              {"name":"layers.0.wv","shape":[4,2],"offset":92},
+              {"name":"layers.0.wo","shape":[4,4],"offset":100},
+              {"name":"layers.0.mlp_norm.weight","shape":[4],"offset":116},
+              {"name":"layers.0.w_gate","shape":[4,8],"offset":120},
+              {"name":"layers.0.w_up","shape":[4,8],"offset":152},
+              {"name":"layers.0.w_down","shape":[8,4],"offset":184},
+              {"name":"final_norm.weight","shape":[4],"offset":216},
+              {"name":"lm_head","shape":[4,16],"offset":220}
+            ],
+            "artifacts": [
+              {"name":"t_embed_b1","file":"e.hlo.txt","stage":"embed",
+               "params":{"batch":1},
+               "inputs":[{"name":"tokens","dtype":"int32","shape":[1]},
+                         {"name":"embed_w","dtype":"float32","shape":[16,4]}],
+               "outputs":[{"name":"hidden","dtype":"float32","shape":[1,4]}]}
+            ]
+          }}
+        }"#;
+        Manifest::parse_str(doc, PathBuf::from(".")).unwrap()
+    }
+
+    #[test]
+    fn consistent_manifest_is_clean() {
+        let m = tiny_manifest();
+        let r = check_manifest(&m, true);
+        assert!(!r.has_errors(), "{}", r.render());
+        assert_eq!(r.warning_count(), 0, "{}", r.render());
+    }
+
+    #[test]
+    fn engine_entrypoint_checks_one_model() {
+        let m = tiny_manifest();
+        let r = check_model(&m, m.model("t").unwrap());
+        assert!(!r.has_errors(), "{}", r.render());
+    }
+
+    #[test]
+    fn flipped_shape_is_a_shape_error() {
+        let mut m = tiny_manifest();
+        let mm = m.models.get_mut("t").unwrap();
+        mm.artifacts[0].outputs[0].shape = vec![4, 1];
+        let r = check_manifest(&m, false);
+        assert!(r.has_code(E_SHAPE), "{}", r.render());
+    }
+
+    #[test]
+    fn grid_hole_is_detected() {
+        let mut m = tiny_manifest();
+        let mm = m.models.get_mut("t").unwrap();
+        // A second embed artifact at batch=4 alone is fine (1-D grid),
+        // but cloning layer_step-style 2-D params shows the hole logic;
+        // here: duplicate the embed at batch=4 → complete 1-D grid.
+        let mut b4 = mm.artifacts[0].clone();
+        b4.name = "t_embed_b4".into();
+        b4.params.insert("batch".into(), 4);
+        b4.inputs[0].shape = vec![4];
+        b4.outputs[0].shape = vec![4, 4];
+        mm.artifacts.push(b4);
+        assert!(!check_manifest(&m, false).has_errors());
+        // Now a 2-D stage with only the diagonal covered → two holes.
+        let mk = |b: usize, n: usize| -> ArtifactSpec {
+            let dims = Dims { nl: 1, dm: 4, h: 2, hkv: 1, d: 2, dff: 8, v: 16 };
+            let mut params = BTreeMap::new();
+            params.insert("batch".to_string(), b);
+            params.insert("n_sel".to_string(), n);
+            let sm = shape::stage_model(&dims, "attn_tsa_xla", &params)
+                .unwrap()
+                .unwrap();
+            let cvt = |s: &Spec| crate::runtime::manifest::TensorSpec {
+                name: s.name.clone(),
+                dtype: s.dtype.to_string(),
+                shape: s.shape.clone(),
+            };
+            ArtifactSpec {
+                name: format!("t_attn_b{b}_n{n}"),
+                file: "a.hlo.txt".into(),
+                stage: "attn_tsa_xla".into(),
+                params,
+                inputs: sm.inputs.iter().map(&cvt).collect(),
+                outputs: sm.outputs.iter().map(&cvt).collect(),
+                untupled: false,
+            }
+        };
+        let mm = m.models.get_mut("t").unwrap();
+        mm.artifacts.push(mk(1, 64));
+        mm.artifacts.push(mk(2, 128));
+        let r = check_manifest(&m, false);
+        let holes = r.with_code(E_GRID_HOLE);
+        assert_eq!(holes.len(), 2, "{}", r.render());
+        assert!(holes.iter().any(|d| d.detail.contains("batch=1")
+            && d.detail.contains("n_sel=128")));
+    }
+
+    #[test]
+    fn unknown_key_severity_follows_strict_mode() {
+        let doc = r#"{"version":1,"contract_version":1,"frobnicate":3,"models":{}}"#;
+        let m = Manifest::parse_str(doc, PathBuf::from(".")).unwrap();
+        assert!(!check_manifest(&m, false).has_errors());
+        assert!(check_manifest(&m, false).has_code(W_UNKNOWN_KEY));
+        let strict = check_manifest(&m, true);
+        assert!(strict.has_errors());
+        assert!(strict.has_code(E_UNKNOWN_KEY));
+    }
+
+    #[test]
+    fn parse_failure_is_a_diagnostic_not_a_panic() {
+        let tmp = std::env::temp_dir().join(format!(
+            "prhs_check_parse_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&tmp).unwrap();
+        std::fs::write(tmp.join("manifest.json"), "{ not json").unwrap();
+        let r = check_artifacts_dir(tmp.to_str().unwrap(), false);
+        assert!(r.has_code(E_PARSE), "{}", r.render());
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+}

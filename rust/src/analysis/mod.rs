@@ -1,0 +1,35 @@
+//! Static analysis: verify before executing.
+//!
+//! PrHS selects KV *pre-hoc* — guarantees are established before the
+//! attention kernel runs, not observed after it.  This module applies
+//! the same posture to the serving stack itself:
+//!
+//! - [`shape`]: pure per-stage shape models that recompute every
+//!   input/output `TensorSpec` from model dims + bucket params — the
+//!   rust half of the python↔rust artifact contract (DESIGN.md
+//!   §Contract), pinned to the shared golden fixture.
+//! - [`check`]: contract invariants over a parsed manifest — shape
+//!   diffs, bucket-grid completeness, untupled discipline, the
+//!   device-state feed-back invariant, weight-blob layout — plus the
+//!   filesystem layer.  Drives the `prhs check` CLI verb and, for the
+//!   served model, strict engine startup
+//!   (`EngineConfig::strict_manifest`).
+//! - [`report`]: machine-readable diagnostics with stable codes
+//!   (`prhs check --json`).
+//! - [`sched`]: exhaustive interleaving exploration for the engine's
+//!   concurrency structures (the `loom_*` test lane).
+//!
+//! Nothing in here executes a compiled program or touches PJRT.
+
+pub mod check;
+pub mod report;
+pub mod sched;
+pub mod shape;
+
+pub use check::{check_artifacts_dir, check_files, check_manifest, check_model};
+pub use report::{Diag, Report, Severity};
+
+/// The manifest contract revision this checker understands.  Must match
+/// `CONTRACT_VERSION` in `python/compile/aot.py` (the golden-fixture
+/// tests on both sides pin the pair together).
+pub const SUPPORTED_CONTRACT_VERSION: usize = 1;

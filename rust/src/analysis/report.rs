@@ -1,0 +1,206 @@
+//! Diagnostic report for the static contract checker.
+//!
+//! Every finding carries a stable machine-readable code (pinned by the
+//! mutation suite in `tests/contract_mutations.rs` — renaming a code is a
+//! breaking change to `prhs check --json` consumers), the model and
+//! subject (artifact / weight / field path) it was found at, and a
+//! human-readable detail line.
+
+use crate::util::json::{obj, Json};
+
+// Error codes (stable; see DESIGN.md §Contract for the full table).
+pub const E_PARSE: &str = "E_PARSE";
+pub const E_SHAPE: &str = "E_SHAPE";
+pub const E_DTYPE: &str = "E_DTYPE";
+pub const E_ARITY: &str = "E_ARITY";
+pub const E_IO_NAME: &str = "E_IO_NAME";
+pub const E_GRID_HOLE: &str = "E_GRID_HOLE";
+pub const E_UNTUPLED_MULTI: &str = "E_UNTUPLED_MULTI";
+pub const E_UNTUPLED_REQUIRED: &str = "E_UNTUPLED_REQUIRED";
+pub const E_FEEDBACK: &str = "E_FEEDBACK";
+pub const E_NTOP: &str = "E_NTOP";
+pub const E_GQA: &str = "E_GQA";
+pub const E_CONFIG: &str = "E_CONFIG";
+pub const E_WEIGHT_OVERLAP: &str = "E_WEIGHT_OVERLAP";
+pub const E_WEIGHT_SET: &str = "E_WEIGHT_SET";
+pub const E_WEIGHT_SHAPE: &str = "E_WEIGHT_SHAPE";
+pub const E_BLOB_SIZE: &str = "E_BLOB_SIZE";
+pub const E_FILE: &str = "E_FILE";
+pub const E_DUP: &str = "E_DUP";
+pub const E_PARAM: &str = "E_PARAM";
+pub const E_OVERFLOW: &str = "E_OVERFLOW";
+pub const E_UNKNOWN_KEY: &str = "E_UNKNOWN_KEY";
+pub const E_VERSION: &str = "E_VERSION";
+// Warning codes.
+pub const W_UNKNOWN_STAGE: &str = "W_UNKNOWN_STAGE";
+pub const W_UNKNOWN_KEY: &str = "W_UNKNOWN_KEY";
+pub const W_NO_VERSION: &str = "W_NO_VERSION";
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+#[derive(Clone, Debug)]
+pub struct Diag {
+    pub code: &'static str,
+    pub severity: Severity,
+    /// Model the finding belongs to ("" for manifest-level findings).
+    pub model: String,
+    /// Artifact name, weight name, or field path.
+    pub subject: String,
+    pub detail: String,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Report {
+    pub diags: Vec<Diag>,
+}
+
+impl Report {
+    pub fn new() -> Report {
+        Report::default()
+    }
+
+    pub fn error(&mut self, code: &'static str, model: &str, subject: &str, detail: String) {
+        self.diags.push(Diag {
+            code,
+            severity: Severity::Error,
+            model: model.to_string(),
+            subject: subject.to_string(),
+            detail,
+        });
+    }
+
+    pub fn warn(&mut self, code: &'static str, model: &str, subject: &str, detail: String) {
+        self.diags.push(Diag {
+            code,
+            severity: Severity::Warning,
+            model: model.to_string(),
+            subject: subject.to_string(),
+            detail,
+        });
+    }
+
+    pub fn merge(&mut self, other: Report) {
+        self.diags.extend(other.diags);
+    }
+
+    pub fn error_count(&self) -> usize {
+        self.diags
+            .iter()
+            .filter(|d| d.severity == Severity::Error)
+            .count()
+    }
+
+    pub fn warning_count(&self) -> usize {
+        self.diags.len() - self.error_count()
+    }
+
+    pub fn has_errors(&self) -> bool {
+        self.error_count() > 0
+    }
+
+    pub fn has_code(&self, code: &str) -> bool {
+        self.diags.iter().any(|d| d.code == code)
+    }
+
+    /// Diags matching a code (mutation tests inspect subjects/details).
+    pub fn with_code(&self, code: &str) -> Vec<&Diag> {
+        self.diags.iter().filter(|d| d.code == code).collect()
+    }
+
+    /// Human-readable rendering, one finding per line.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for d in &self.diags {
+            let sev = match d.severity {
+                Severity::Error => "error",
+                Severity::Warning => "warning",
+            };
+            let loc = if d.model.is_empty() {
+                d.subject.clone()
+            } else {
+                format!("{}/{}", d.model, d.subject)
+            };
+            out.push_str(&format!("{sev}[{}] {loc}: {}\n", d.code, d.detail));
+        }
+        out.push_str(&format!(
+            "{} error(s), {} warning(s)\n",
+            self.error_count(),
+            self.warning_count()
+        ));
+        out
+    }
+
+    /// Machine-readable rendering for `prhs check --json`.
+    pub fn to_json(&self) -> String {
+        let diags: Vec<Json> = self
+            .diags
+            .iter()
+            .map(|d| {
+                obj([
+                    ("code", Json::Str(d.code.to_string())),
+                    (
+                        "severity",
+                        Json::Str(
+                            match d.severity {
+                                Severity::Error => "error",
+                                Severity::Warning => "warning",
+                            }
+                            .to_string(),
+                        ),
+                    ),
+                    ("model", Json::Str(d.model.clone())),
+                    ("subject", Json::Str(d.subject.clone())),
+                    ("detail", Json::Str(d.detail.clone())),
+                ])
+            })
+            .collect();
+        obj([
+            ("ok", Json::Bool(!self.has_errors())),
+            ("errors", Json::Num(self.error_count() as f64)),
+            ("warnings", Json::Num(self.warning_count() as f64)),
+            ("diagnostics", Json::Arr(diags)),
+        ])
+        .to_string_pretty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_counts_and_renders() {
+        let mut r = Report::new();
+        assert!(!r.has_errors());
+        r.warn(W_NO_VERSION, "", "manifest", "no contract_version".into());
+        assert!(!r.has_errors());
+        r.error(E_SHAPE, "m", "m_embed_b1", "input `tokens`: [2] != [1]".into());
+        assert!(r.has_errors());
+        assert_eq!(r.error_count(), 1);
+        assert_eq!(r.warning_count(), 1);
+        assert!(r.has_code(E_SHAPE));
+        assert!(!r.has_code(E_DTYPE));
+        let text = r.render();
+        assert!(text.contains("error[E_SHAPE] m/m_embed_b1"), "{text}");
+        assert!(text.contains("1 error(s), 1 warning(s)"), "{text}");
+    }
+
+    #[test]
+    fn json_output_is_parseable_and_complete() {
+        let mut r = Report::new();
+        r.error(E_GRID_HOLE, "m", "layer_step", "missing (batch=2, n_sel=64)".into());
+        let j = crate::util::json::Json::parse(&r.to_json()).unwrap();
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(false));
+        assert_eq!(j.get("errors").and_then(Json::as_usize), Some(1));
+        let diags = j.get("diagnostics").and_then(Json::as_arr).unwrap();
+        assert_eq!(diags.len(), 1);
+        assert_eq!(
+            diags[0].get("code").and_then(Json::as_str),
+            Some(E_GRID_HOLE)
+        );
+    }
+}

@@ -1,0 +1,640 @@
+//! Pure per-stage shape models.
+//!
+//! Recomputes every input/output `TensorSpec` a stage must declare, from
+//! nothing but the model dims and the artifact's bucket params — the same
+//! algebra `python/compile/aot.py` lowers from.  The checker diffs these
+//! against the manifest's declarations (`analysis::check`); the python
+//! side re-derives the same shapes in `python/tests/test_contract.py`.
+//! Both suites pin the shared fixture `python/tests/data/contract_golden.json`,
+//! so a unilateral change on either side fails that side's tests.
+//!
+//! See DESIGN.md §Contract for the algebra in prose.
+
+use std::collections::BTreeMap;
+
+use crate::runtime::manifest::ModelManifest;
+
+pub const F32: &str = "float32";
+pub const I32: &str = "int32";
+
+/// Model dimensions, extracted once per model.
+#[derive(Clone, Copy, Debug)]
+pub struct Dims {
+    pub nl: usize,
+    pub dm: usize,
+    pub h: usize,
+    pub hkv: usize,
+    pub d: usize,
+    pub dff: usize,
+    pub v: usize,
+}
+
+/// Checked product of dims; `None` on overflow.
+fn prod(dims: &[usize]) -> Option<usize> {
+    dims.iter().try_fold(1usize, |a, &b| a.checked_mul(b))
+}
+
+impl Dims {
+    pub fn of(mm: &ModelManifest) -> Dims {
+        Dims {
+            nl: mm.n_layers,
+            dm: mm.d_model,
+            h: mm.n_heads,
+            hkv: mm.n_kv_heads,
+            d: mm.head_dim,
+            dff: mm.d_ff,
+            v: mm.vocab_size,
+        }
+    }
+
+    /// Flat f32 length of one sequence's device KV state at context
+    /// bucket `l`: K and V planes, all layers, full `h` heads.
+    pub fn kv_state_len(&self, l: usize) -> Option<usize> {
+        prod(&[2, self.nl, self.h, l, self.d])
+    }
+
+    /// Flat f32 length of the prefill-extend device state at bucket `l`:
+    /// the KV planes plus the carried last_hidden (`dm`), logits (`v`),
+    /// and attention-probability summary (`nl·h·l`).  Must match
+    /// `_dev_state` in `python/compile/aot.py` and
+    /// `Engine::dev_state_len` exactly — this layout is what makes the
+    /// `prefill_extend_dev` output feed back as the next chunk's input.
+    pub fn dev_state_len(&self, l: usize) -> Option<usize> {
+        let kv = self.kv_state_len(l)?;
+        let probs = prod(&[self.nl, self.h, l])?;
+        kv.checked_add(self.dm)?
+            .checked_add(self.v)?
+            .checked_add(probs)
+    }
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Spec {
+    pub name: String,
+    pub dtype: &'static str,
+    pub shape: Vec<usize>,
+}
+
+fn t(name: &str, dtype: &'static str, shape: &[usize]) -> Spec {
+    Spec { name: name.to_string(), dtype, shape: shape.to_vec() }
+}
+
+/// What a stage must declare: exact inputs, outputs, and whether it must
+/// be lowered untupled (single bare-array root for device feed-back).
+#[derive(Clone, Debug)]
+pub struct StageModel {
+    pub inputs: Vec<Spec>,
+    pub outputs: Vec<Spec>,
+    pub untupled: bool,
+}
+
+/// Why a stage model could not be built.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ModelErr {
+    /// A bucket param the stage needs is absent from the artifact.
+    MissingParam(&'static str),
+    /// A shape product overflowed `usize` (corrupt dims/params).
+    Overflow(String),
+}
+
+impl std::fmt::Display for ModelErr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ModelErr::MissingParam(k) => write!(f, "missing bucket param `{k}`"),
+            ModelErr::Overflow(what) => write!(f, "shape overflow computing {what}"),
+        }
+    }
+}
+
+/// The grid axes each stage's artifacts must tile completely (derived
+/// params like `n_top` are excluded — they follow from `l_max`).
+pub fn grid_keys(stage: &str) -> Option<&'static [&'static str]> {
+    Some(match stage {
+        "embed" | "lm_head" => &["batch"],
+        "layer_step" | "attn_tsa_xla" | "attn_tsa_pallas" => &["batch", "n_sel"],
+        "layer_step_dense" | "attn_dense" => &["batch", "l_max"],
+        "prefill" => &["l_max"],
+        "prefill_extend" | "prefill_extend_dev" => &["chunk", "l_max"],
+        "layer_step_dense_dev" | "kv_append_dev" | "state_to_kv" => &["l_max"],
+        "layer_step_dense_dev_batch" | "kv_append_dev_batch" | "kv_slot_write_dev" => {
+            &["batched", "l_max"]
+        }
+        _ => return None,
+    })
+}
+
+/// Stages whose single output is fed back as an input of the next call —
+/// these must be lowered untupled so the runtime can keep the buffer
+/// device-resident without a tuple unpack.
+pub fn requires_untupled(stage: &str) -> bool {
+    matches!(
+        stage,
+        "prefill_extend_dev"
+            | "kv_append_dev"
+            | "state_to_kv"
+            | "kv_append_dev_batch"
+            | "kv_slot_write_dev"
+    )
+}
+
+/// Per-layer weight parameter specs, in lowering order, with `prefix`
+/// prepended to each name ("" for single-layer stages, "layers.{i}." for
+/// whole-model stages).
+fn layer_weights(dims: &Dims, prefix: &str) -> Result<Vec<Spec>, ModelErr> {
+    let Dims { dm, h, hkv, d, dff, .. } = *dims;
+    let hd = prod(&[h, d])
+        .ok_or_else(|| ModelErr::Overflow("n_heads*head_dim".into()))?;
+    let hkvd = prod(&[hkv, d])
+        .ok_or_else(|| ModelErr::Overflow("n_kv_heads*head_dim".into()))?;
+    let p = |n: &str| format!("{prefix}{n}");
+    Ok(vec![
+        t(&p("attn_norm_w"), F32, &[dm]),
+        t(&p("wq"), F32, &[dm, hd]),
+        t(&p("wk"), F32, &[dm, hkvd]),
+        t(&p("wv"), F32, &[dm, hkvd]),
+        t(&p("wo"), F32, &[hd, dm]),
+        t(&p("mlp_norm_w"), F32, &[dm]),
+        t(&p("w_gate"), F32, &[dm, dff]),
+        t(&p("w_up"), F32, &[dm, dff]),
+        t(&p("w_down"), F32, &[dff, dm]),
+    ])
+}
+
+/// Full weight parameter list for whole-model stages (prefill family).
+fn all_weights(dims: &Dims) -> Result<Vec<Spec>, ModelErr> {
+    let mut w = vec![t("embed_w", F32, &[dims.v, dims.dm])];
+    for i in 0..dims.nl {
+        w.extend(layer_weights(dims, &format!("layers.{i}."))?);
+    }
+    w.push(t("final_norm_w", F32, &[dims.dm]));
+    w.push(t("lm_head", F32, &[dims.dm, dims.v]));
+    Ok(w)
+}
+
+/// Scheduler scalar inputs shared by the prefill family (paper §schedule:
+/// sink budget, local window, PSAW/ETF knobs), in lowering order.
+fn sched_scalars() -> Vec<Spec> {
+    ["c_sink", "ell_s", "phi", "alpha", "psi", "gamma", "psaw_on", "etf_on"]
+        .iter()
+        .map(|n| t(n, F32, &[]))
+        .collect()
+}
+
+/// Build the shape model for `stage` with bucket `params`.
+///
+/// Returns `Ok(None)` for stages the checker does not know (forward
+/// compatibility — reported as a warning, not an error), `Err` when a
+/// required bucket param is missing or a shape product overflows.
+pub fn stage_model(
+    dims: &Dims,
+    stage: &str,
+    params: &BTreeMap<String, usize>,
+) -> Result<Option<StageModel>, ModelErr> {
+    let need = |k: &'static str| -> Result<usize, ModelErr> {
+        params.get(k).copied().ok_or(ModelErr::MissingParam(k))
+    };
+    let Dims { nl, dm, h, hkv, d, v, .. } = *dims;
+    let kv_len = |l: usize| -> Result<usize, ModelErr> {
+        dims.kv_state_len(l)
+            .ok_or_else(|| ModelErr::Overflow(format!("kv_state_len({l})")))
+    };
+    let dev_len = |l: usize| -> Result<usize, ModelErr> {
+        dims.dev_state_len(l)
+            .ok_or_else(|| ModelErr::Overflow(format!("dev_state_len({l})")))
+    };
+    // s * kv_state_len(l) for the batched decode stages.
+    let batch_kv = |s: usize, l: usize| -> Result<usize, ModelErr> {
+        kv_len(l)?
+            .checked_mul(s)
+            .ok_or_else(|| ModelErr::Overflow(format!("{s}*kv_state_len({l})")))
+    };
+    let model = |inputs: Vec<Spec>, outputs: Vec<Spec>, untupled: bool| {
+        Ok(Some(StageModel { inputs, outputs, untupled }))
+    };
+
+    match stage {
+        "embed" => {
+            let b = need("batch")?;
+            model(
+                vec![t("tokens", I32, &[b]), t("embed_w", F32, &[v, dm])],
+                vec![t("hidden", F32, &[b, dm])],
+                false,
+            )
+        }
+        "lm_head" => {
+            let b = need("batch")?;
+            model(
+                vec![
+                    t("hidden", F32, &[b, dm]),
+                    t("final_norm_w", F32, &[dm]),
+                    t("lm_head", F32, &[dm, v]),
+                ],
+                vec![t("logits", F32, &[b, v])],
+                false,
+            )
+        }
+        "layer_step" => {
+            let b = need("batch")?;
+            let n = need("n_sel")?;
+            let mut inputs = vec![
+                t("hidden", F32, &[b, dm]),
+                t("pos", I32, &[b]),
+                t("k_sel", F32, &[b, h, n, d]),
+                t("v_sel", F32, &[b, h, n, d]),
+                t("sel_mask", F32, &[b, h, n]),
+            ];
+            inputs.extend(layer_weights(dims, "")?);
+            model(
+                inputs,
+                vec![
+                    t("hidden", F32, &[b, dm]),
+                    t("k_new", F32, &[b, hkv, d]),
+                    t("v_new", F32, &[b, hkv, d]),
+                    t("probs", F32, &[b, h, n + 1]),
+                ],
+                false,
+            )
+        }
+        "layer_step_dense" => {
+            let b = need("batch")?;
+            let l = need("l_max")?;
+            let mut inputs = vec![
+                t("hidden", F32, &[b, dm]),
+                t("pos", I32, &[b]),
+                t("k_cache", F32, &[b, hkv, l, d]),
+                t("v_cache", F32, &[b, hkv, l, d]),
+                t("length", I32, &[b]),
+            ];
+            inputs.extend(layer_weights(dims, "")?);
+            model(
+                inputs,
+                vec![
+                    t("hidden", F32, &[b, dm]),
+                    t("k_new", F32, &[b, hkv, d]),
+                    t("v_new", F32, &[b, hkv, d]),
+                    t("probs", F32, &[b, h, l + 1]),
+                ],
+                false,
+            )
+        }
+        "prefill" => {
+            let l = need("l_max")?;
+            let mut inputs = vec![t("tokens", I32, &[l]), t("length", I32, &[])];
+            inputs.extend(sched_scalars());
+            inputs.extend(all_weights(dims)?);
+            model(
+                inputs,
+                vec![
+                    t("k_cache", F32, &[nl, h, l, d]),
+                    t("v_cache", F32, &[nl, h, l, d]),
+                    t("last_hidden", F32, &[dm]),
+                    t("logits", F32, &[v]),
+                    t("last_probs", F32, &[nl, h, l]),
+                ],
+                false,
+            )
+        }
+        "prefill_extend" => {
+            let c = need("chunk")?;
+            let l = need("l_max")?;
+            let mut inputs = vec![
+                t("tokens", I32, &[c]),
+                t("start", I32, &[]),
+                t("length", I32, &[]),
+            ];
+            inputs.extend(sched_scalars());
+            inputs.push(t("k_ctx", F32, &[nl, h, l, d]));
+            inputs.push(t("v_ctx", F32, &[nl, h, l, d]));
+            inputs.extend(all_weights(dims)?);
+            model(
+                inputs,
+                vec![
+                    t("k_chunk", F32, &[nl, h, c, d]),
+                    t("v_chunk", F32, &[nl, h, c, d]),
+                    t("last_hidden", F32, &[dm]),
+                    t("logits", F32, &[v]),
+                    t("last_probs", F32, &[nl, h, l + c]),
+                ],
+                false,
+            )
+        }
+        "prefill_extend_dev" => {
+            let c = need("chunk")?;
+            let l = need("l_max")?;
+            let state = dev_len(l)?;
+            let mut inputs = vec![
+                t("tokens", I32, &[c]),
+                t("start", I32, &[]),
+                t("length", I32, &[]),
+            ];
+            inputs.extend(sched_scalars());
+            inputs.push(t("state", F32, &[state]));
+            inputs.extend(all_weights(dims)?);
+            model(inputs, vec![t("state", F32, &[state])], true)
+        }
+        "layer_step_dense_dev" => {
+            let l = need("l_max")?;
+            let mut inputs = vec![
+                t("hidden", F32, &[dm]),
+                t("pos", I32, &[]),
+                t("layer", I32, &[]),
+                t("length", I32, &[]),
+                t("kv_state", F32, &[kv_len(l)?]),
+            ];
+            inputs.extend(layer_weights(dims, "")?);
+            model(
+                inputs,
+                vec![
+                    t("hidden", F32, &[dm]),
+                    t("k_new", F32, &[hkv, d]),
+                    t("v_new", F32, &[hkv, d]),
+                    t("probs", F32, &[h, l + 1]),
+                ],
+                false,
+            )
+        }
+        "kv_append_dev" => {
+            let l = need("l_max")?;
+            let kv = kv_len(l)?;
+            model(
+                vec![
+                    t("kv_state", F32, &[kv]),
+                    t("k_new", F32, &[nl, h, d]),
+                    t("v_new", F32, &[nl, h, d]),
+                    t("pos", I32, &[]),
+                ],
+                vec![t("kv_state", F32, &[kv])],
+                true,
+            )
+        }
+        "state_to_kv" => {
+            let l = need("l_max")?;
+            model(
+                vec![t("state", F32, &[dev_len(l)?])],
+                vec![t("kv_state", F32, &[kv_len(l)?])],
+                true,
+            )
+        }
+        "layer_step_dense_dev_batch" => {
+            let s = need("batched")?;
+            let l = need("l_max")?;
+            let k = need("n_top")?;
+            let mut inputs = vec![
+                t("hidden", F32, &[s, dm]),
+                t("pos", I32, &[s]),
+                t("layer", I32, &[]),
+                t("length", I32, &[s]),
+                t("kv_states", F32, &[batch_kv(s, l)?]),
+            ];
+            inputs.extend(layer_weights(dims, "")?);
+            model(
+                inputs,
+                vec![
+                    t("hidden", F32, &[s, dm]),
+                    t("k_new", F32, &[s, hkv, d]),
+                    t("v_new", F32, &[s, hkv, d]),
+                    t("probs", F32, &[s, h, l + 1]),
+                    // Indices travel as f32: the top-k is computed
+                    // in-graph and consumed by gathers on device.
+                    t("top_idx", F32, &[s, h, k]),
+                    t("top_val", F32, &[s, h, k]),
+                ],
+                false,
+            )
+        }
+        "kv_append_dev_batch" => {
+            let s = need("batched")?;
+            let l = need("l_max")?;
+            let states = batch_kv(s, l)?;
+            model(
+                vec![
+                    t("kv_states", F32, &[states]),
+                    t("k_new", F32, &[s, nl, h, d]),
+                    t("v_new", F32, &[s, nl, h, d]),
+                    t("pos", I32, &[s]),
+                    t("valid", F32, &[s]),
+                ],
+                vec![t("kv_states", F32, &[states])],
+                true,
+            )
+        }
+        "kv_slot_write_dev" => {
+            let s = need("batched")?;
+            let l = need("l_max")?;
+            let states = batch_kv(s, l)?;
+            model(
+                vec![
+                    t("kv_states", F32, &[states]),
+                    t("state", F32, &[kv_len(l)?]),
+                    t("slot", I32, &[]),
+                ],
+                vec![t("kv_states", F32, &[states])],
+                true,
+            )
+        }
+        "attn_tsa_xla" | "attn_tsa_pallas" => {
+            let b = need("batch")?;
+            let n = need("n_sel")?;
+            model(
+                vec![
+                    t("q", F32, &[b, h, d]),
+                    t("k_sel", F32, &[b, h, n, d]),
+                    t("v_sel", F32, &[b, h, n, d]),
+                    t("mask", F32, &[b, h, n]),
+                ],
+                vec![t("out", F32, &[b, h, d])],
+                false,
+            )
+        }
+        "attn_dense" => {
+            let b = need("batch")?;
+            let l = need("l_max")?;
+            model(
+                vec![
+                    t("q", F32, &[b, h, d]),
+                    t("k", F32, &[b, h, l, d]),
+                    t("v", F32, &[b, h, l, d]),
+                    t("length", I32, &[b]),
+                ],
+                vec![t("out", F32, &[b, h, d])],
+                false,
+            )
+        }
+        _ => Ok(None),
+    }
+}
+
+/// Expected weight-blob entry list (runtime names + shapes, in blob
+/// order) — what `WeightStore::load` will look up.
+pub fn expected_weights(dims: &Dims) -> Result<Vec<Spec>, ModelErr> {
+    let hd = prod(&[dims.h, dims.d])
+        .ok_or_else(|| ModelErr::Overflow("n_heads*head_dim".into()))?;
+    let hkvd = prod(&[dims.hkv, dims.d])
+        .ok_or_else(|| ModelErr::Overflow("n_kv_heads*head_dim".into()))?;
+    let Dims { dm, dff, v, .. } = *dims;
+    let mut w = vec![t("embed.weight", F32, &[v, dm])];
+    for i in 0..dims.nl {
+        let p = |n: &str| format!("layers.{i}.{n}");
+        w.push(t(&p("attn_norm.weight"), F32, &[dm]));
+        w.push(t(&p("wq"), F32, &[dm, hd]));
+        w.push(t(&p("wk"), F32, &[dm, hkvd]));
+        w.push(t(&p("wv"), F32, &[dm, hkvd]));
+        w.push(t(&p("wo"), F32, &[hd, dm]));
+        w.push(t(&p("mlp_norm.weight"), F32, &[dm]));
+        w.push(t(&p("w_gate"), F32, &[dm, dff]));
+        w.push(t(&p("w_up"), F32, &[dm, dff]));
+        w.push(t(&p("w_down"), F32, &[dff, dm]));
+    }
+    w.push(t("final_norm.weight", F32, &[dm]));
+    w.push(t("lm_head", F32, &[dm, v]));
+    Ok(w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    /// The shared python↔rust fixture: every stage's declared IO for a
+    /// small GQA config, generated by `python/compile/gen_contract_golden.py`
+    /// from `jax.eval_shape` over the real stage functions.  This test
+    /// pins the rust shape algebra to it; `python/tests/test_contract.py`
+    /// pins the python side.  A unilateral change on either side fails
+    /// that side's suite.
+    const GOLDEN: &str = include_str!(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/../python/tests/data/contract_golden.json"
+    ));
+
+    fn golden_dims(cfg: &Json) -> Dims {
+        let dim = |k: &str| cfg.get(k).and_then(Json::as_usize).unwrap();
+        Dims {
+            nl: dim("n_layers"),
+            dm: dim("d_model"),
+            h: dim("n_heads"),
+            hkv: dim("n_kv_heads"),
+            d: dim("head_dim"),
+            dff: dim("d_ff"),
+            v: dim("vocab_size"),
+        }
+    }
+
+    fn spec_of(j: &Json) -> (String, String, Vec<usize>) {
+        (
+            j.get("name").and_then(Json::as_str).unwrap().to_string(),
+            j.get("dtype").and_then(Json::as_str).unwrap().to_string(),
+            j.get("shape")
+                .and_then(Json::as_arr)
+                .unwrap()
+                .iter()
+                .map(|d| d.as_usize().unwrap())
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn golden_fixture_matches_shape_models_exactly() {
+        let g = Json::parse(GOLDEN).expect("golden fixture parses");
+        assert_eq!(
+            g.get("contract_version").and_then(Json::as_usize),
+            Some(crate::analysis::SUPPORTED_CONTRACT_VERSION),
+            "golden fixture and rust checker disagree on contract version"
+        );
+        let dims = golden_dims(g.get("config").unwrap());
+        let entries = g.get("entries").and_then(Json::as_arr).unwrap();
+        assert_eq!(entries.len(), 16, "one golden entry per stage");
+        for e in entries {
+            let name = e.get("name").and_then(Json::as_str).unwrap();
+            let stage = e.get("stage").and_then(Json::as_str).unwrap();
+            let mut params = BTreeMap::new();
+            for (k, v) in e.get("params").and_then(Json::as_obj).unwrap() {
+                if let Some(n) = v.as_usize() {
+                    params.insert(k.clone(), n);
+                }
+            }
+            let model = stage_model(&dims, stage, &params)
+                .unwrap_or_else(|err| panic!("{name}: {err}"))
+                .unwrap_or_else(|| panic!("{name}: stage `{stage}` unknown"));
+            assert_eq!(
+                model.untupled,
+                e.get("untupled").and_then(Json::as_bool).unwrap_or(false),
+                "{name}: untupled flag"
+            );
+            for (kind, declared, computed) in [
+                ("input", e.get("inputs").unwrap(), &model.inputs),
+                ("output", e.get("outputs").unwrap(), &model.outputs),
+            ] {
+                let declared = declared.as_arr().unwrap();
+                assert_eq!(
+                    declared.len(),
+                    computed.len(),
+                    "{name}: {kind} arity"
+                );
+                for (d, c) in declared.iter().zip(computed) {
+                    let (dn, dt, ds) = spec_of(d);
+                    assert_eq!(dn, c.name, "{name}: {kind} name");
+                    assert_eq!(dt, c.dtype, "{name}: {kind} `{dn}` dtype");
+                    assert_eq!(ds, c.shape, "{name}: {kind} `{dn}` shape");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn state_lengths_match_golden_anchors() {
+        // Numeric anchors for the gqa config (nl=2, h=8, d=16, l=256):
+        // independently computed, so a refactor of kv/dev_state_len that
+        // still passes the golden diff cannot silently change layout.
+        let dims = Dims { nl: 2, dm: 128, h: 8, hkv: 2, d: 16, dff: 256, v: 2048 };
+        assert_eq!(dims.kv_state_len(256), Some(131_072));
+        assert_eq!(dims.dev_state_len(256), Some(137_344));
+        assert_eq!(dims.kv_state_len(0), Some(0));
+    }
+
+    #[test]
+    fn overflow_is_an_error_not_a_panic() {
+        let dims = Dims {
+            nl: usize::MAX,
+            dm: 8,
+            h: usize::MAX,
+            hkv: 1,
+            d: 2,
+            dff: 8,
+            v: 8,
+        };
+        assert_eq!(dims.kv_state_len(4), None);
+        assert_eq!(dims.dev_state_len(4), None);
+        let mut p = BTreeMap::new();
+        p.insert("l_max".to_string(), 4usize);
+        match stage_model(&dims, "kv_append_dev", &p) {
+            Err(ModelErr::Overflow(_)) => {}
+            other => panic!("expected overflow, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn missing_param_is_reported_by_name() {
+        let dims = Dims { nl: 2, dm: 8, h: 2, hkv: 2, d: 4, dff: 16, v: 32 };
+        match stage_model(&dims, "layer_step", &BTreeMap::new()) {
+            Err(ModelErr::MissingParam("batch")) => {}
+            other => panic!("expected MissingParam(batch), got {other:?}"),
+        }
+        assert!(stage_model(&dims, "not_a_stage", &BTreeMap::new())
+            .unwrap()
+            .is_none());
+    }
+
+    #[test]
+    fn grid_keys_cover_every_known_stage() {
+        for stage in [
+            "embed", "lm_head", "layer_step", "layer_step_dense", "prefill",
+            "prefill_extend", "prefill_extend_dev", "layer_step_dense_dev",
+            "kv_append_dev", "state_to_kv", "layer_step_dense_dev_batch",
+            "kv_append_dev_batch", "kv_slot_write_dev", "attn_tsa_xla",
+            "attn_tsa_pallas", "attn_dense",
+        ] {
+            assert!(grid_keys(stage).is_some(), "{stage} has no grid keys");
+        }
+        assert!(grid_keys("bogus").is_none());
+    }
+}

@@ -275,6 +275,14 @@ pub struct EngineConfig {
     pub planner_threads: usize,
     /// Use the Pallas-kernel attention variant where available.
     pub use_pallas: bool,
+    /// Run the static contract checker (`analysis::check_model`) over the
+    /// served model's manifest at engine startup and refuse to start on
+    /// any error — shape drift between `python/compile/aot.py` and the
+    /// rust consumers then fails fast with a field-level diagnostic
+    /// instead of surfacing as a PJRT shape error (or silent garbage)
+    /// mid-request.  On by default; `prhs ... --no-strict-manifest`
+    /// disables it for deliberately-odd artifact sets.
+    pub strict_manifest: bool,
     pub seed: u64,
 }
 
@@ -296,6 +304,7 @@ impl Default for EngineConfig {
             max_kv_pages: 0,
             planner_threads: 0,
             use_pallas: false,
+            strict_manifest: true,
             seed: 0xC0FFEE,
         }
     }
@@ -343,6 +352,9 @@ impl EngineConfig {
         }
         if let Some(n) = j.get("planner_threads").and_then(Json::as_usize) {
             cfg.planner_threads = n;
+        }
+        if let Some(b) = j.get("strict_manifest").and_then(Json::as_bool) {
+            cfg.strict_manifest = b;
         }
         if let Some(sel) = j.get("selector") {
             let sc = &mut cfg.selector;
@@ -440,6 +452,7 @@ impl EngineConfig {
         );
         o.insert("max_kv_pages".into(), num(self.max_kv_pages));
         o.insert("planner_threads".into(), num(self.planner_threads));
+        o.insert("strict_manifest".into(), Json::Bool(self.strict_manifest));
         o.insert("selector".into(), Json::Obj(sel));
         Json::Obj(o).to_string_compact()
     }
@@ -560,6 +573,7 @@ mod tests {
         c.prefill_token_budget = 192;
         c.max_kv_pages = 77;
         c.planner_threads = 5;
+        c.strict_manifest = false;
         c.selector.kind = SelectorKind::Cpe;
         c.selector.c_sink = 4;
         c.selector.c_local = 16;
@@ -591,6 +605,7 @@ mod tests {
         assert_eq!(r.prefill_token_budget, c.prefill_token_budget);
         assert_eq!(r.max_kv_pages, c.max_kv_pages);
         assert_eq!(r.planner_threads, c.planner_threads);
+        assert_eq!(r.strict_manifest, c.strict_manifest);
         assert_eq!(r.selector.kind, c.selector.kind);
         assert_eq!(r.selector.c_sink, c.selector.c_sink);
         assert_eq!(r.selector.c_local, c.selector.c_local);
@@ -614,6 +629,7 @@ mod tests {
         let r = EngineConfig::from_json(&j).unwrap();
         assert!(r.device_prefill_kv && r.device_decode_kv);
         assert!(r.batched_decode_dispatch);
+        assert!(r.strict_manifest, "strict manifest checking defaults on");
         assert_eq!(r.prefill_chunk, d.prefill_chunk);
     }
 }

@@ -96,6 +96,9 @@ impl DevKvMirror {
 /// fails instead of growing past the cap, so a burst of long prompts
 /// surfaces as a scheduling decision (`BatchPolicy::admit` holds requests
 /// in the waiting queue until pages free up) rather than a host OOM.
+// Clone lets the schedule explorer (`analysis::sched`) fork pool states
+// in the loom_* accounting model; the engine never clones a live pool.
+#[derive(Clone)]
 pub struct PagePool {
     pub n_heads: usize,
     pub head_dim: usize,
@@ -575,6 +578,79 @@ mod tests {
 
     fn row(rng: &mut Rng, n: usize) -> Vec<f32> {
         (0..n).map(|_| rng.normal()).collect()
+    }
+
+    /// Concurrency model (loom lane): page accounting under every
+    /// interleaving of two sequences' alloc/alloc/release-all scripts
+    /// against a capped pool.  A page id must never be live in two
+    /// holders, `in_use + free == allocated` at every step, the cap is
+    /// never exceeded, and the pool drains when both sequences finish —
+    /// the invariants `BatchPolicy::admit` relies on when it gates on
+    /// `available_pages`.
+    #[test]
+    fn loom_page_pool_accounting_all_interleavings() {
+        use crate::analysis::sched::{explore, Op};
+        use crate::sched_ops;
+
+        #[derive(Clone)]
+        struct St {
+            pool: PagePool,
+            held: [Vec<usize>; 2],
+        }
+        let grab = |s: &mut St, i: usize| {
+            let id = s.pool.alloc().expect("cap 4 fits 2×2 pages");
+            s.held[i].push(id);
+        };
+        let script = |i: usize| -> Vec<Op<St>> {
+            sched_ops![
+                move |s: &mut St| grab(s, i),
+                move |s: &mut St| grab(s, i),
+                move |s: &mut St| {
+                    for id in s.held[i].drain(..) {
+                        s.pool.release(id);
+                    }
+                },
+            ]
+        };
+        let n = explore(
+            &St {
+                pool: PagePool::with_limit(2, 4, 8, 4),
+                held: [Vec::new(), Vec::new()],
+            },
+            &[script(0), script(1)],
+            &|s| {
+                let mut live = std::collections::HashSet::new();
+                for id in s.held.iter().flatten() {
+                    if !live.insert(*id) {
+                        return Err(format!("page {id} held twice"));
+                    }
+                }
+                if s.pool.in_use_pages() != live.len() {
+                    return Err(format!(
+                        "in_use {} != held {}",
+                        s.pool.in_use_pages(),
+                        live.len()
+                    ));
+                }
+                if s.pool.free_pages() + live.len() != s.pool.allocated_pages()
+                {
+                    return Err("free + in_use != allocated".into());
+                }
+                if s.pool.allocated_pages() > s.pool.max_pages() {
+                    return Err("cap exceeded".into());
+                }
+                Ok(())
+            },
+            &|s| {
+                if s.pool.in_use_pages() == 0 {
+                    Ok(())
+                } else {
+                    Err(format!("{} pages leaked", s.pool.in_use_pages()))
+                }
+            },
+        )
+        .unwrap_or_else(|v| panic!("{v}"));
+        assert_eq!(n, 20, "C(6,3) interleavings of two 3-op scripts");
     }
 
     #[test]

@@ -17,6 +17,7 @@
 //! Python never runs on the request path; the rust binary is
 //! self-contained once `artifacts/` is built.
 
+pub mod analysis;
 pub mod config;
 pub mod coordinator;
 pub mod harness;

@@ -5,6 +5,7 @@
 //!   run      one-shot generation for a synthetic prompt
 //!   harness  regenerate a paper table/figure (fig1|fig2|...|table7)
 //!   info     print manifest/artifact summary
+//!   check    statically verify an artifact set without executing it
 
 use anyhow::Result;
 use prhs::config::{EngineConfig, SelectorKind};
@@ -19,12 +20,13 @@ fn main() -> Result<()> {
     let (sub, rest) = match argv.split_first() {
         Some((s, r)) => (s.clone(), r.to_vec()),
         None => {
-            eprintln!("usage: prhs <serve|run|harness|info> [flags]  (--help per subcommand)");
+            eprintln!("usage: prhs <serve|run|harness|info|check> [flags]  (--help per subcommand)");
             std::process::exit(2);
         }
     };
     match sub.as_str() {
         "info" => info(&rest),
+        "check" => check(&rest),
         "run" => run_once(&rest),
         "serve" => serve(&rest),
         "harness" => harness(&rest),
@@ -44,6 +46,7 @@ fn base_cli(name: &'static str, about: &'static str) -> Cli {
         .flag("sim-threshold", "0.8", "CIS cosine gate τ")
         .flag("gen", "32", "decode steps per request")
         .flag("seed", "7", "workload seed")
+        .switch("no-strict-manifest", "skip the startup contract check (`prhs check`) on the served model")
 }
 
 fn engine_from(args: &prhs::util::cli::Args) -> Result<Engine> {
@@ -55,6 +58,7 @@ fn engine_from(args: &prhs::util::cli::Args) -> Result<Engine> {
     cfg.selector.block_size = args.get_usize("block-size");
     cfg.selector.sim_threshold = args.get_f64("sim-threshold") as f32;
     cfg.max_new_tokens = args.get_usize("gen");
+    cfg.strict_manifest = !args.get_bool("no-strict-manifest");
     if cfg.selector.kind == SelectorKind::Cpe {
         cfg.selector.psaw_enabled = true;
         cfg.selector.etf_enabled = true;
@@ -67,18 +71,58 @@ fn info(rest: &[String]) -> Result<()> {
         .flag("artifacts", "artifacts", "artifacts directory");
     let args = cli.parse(rest).map_err(anyhow::Error::msg)?;
     let m = prhs::runtime::Manifest::load(args.get("artifacts"))?;
+    match m.contract_version {
+        Some(v) => println!("contract version {v}"),
+        None => println!("contract version: unstamped (pre-contract artifact set)"),
+    }
     for (name, mm) in &m.models {
         println!(
             "model {name}: {} layers, d_model {}, {} heads x d{}, vocab {}",
             mm.n_layers, mm.d_model, mm.n_heads, mm.head_dim, mm.vocab_size
         );
         println!("  {} artifacts, {} weights", mm.artifacts.len(), mm.weights.len());
-        for stage in ["layer_step", "layer_step_dense", "layer_step_dense_dev", "kv_append_dev", "state_to_kv", "prefill", "prefill_extend", "prefill_extend_dev", "attn_tsa_xla", "attn_tsa_pallas", "attn_dense"] {
+        for stage in ["embed", "lm_head", "layer_step", "layer_step_dense", "layer_step_dense_dev", "layer_step_dense_dev_batch", "kv_append_dev", "kv_append_dev_batch", "kv_slot_write_dev", "state_to_kv", "prefill", "prefill_extend", "prefill_extend_dev", "attn_tsa_xla", "attn_tsa_pallas", "attn_dense"] {
             let n = mm.artifacts.iter().filter(|a| a.stage == stage).count();
             if n > 0 {
                 println!("    {stage}: {n}");
             }
         }
+    }
+    Ok(())
+}
+
+/// `prhs check [dir]` — statically verify an artifact set: recompute
+/// every stage's declared shapes from the manifest's model dims + bucket
+/// params, enforce the cross-artifact contract invariants, and confirm
+/// the files on disk match — all without executing a single program.
+/// Exits 1 if any error-severity diagnostic fires.
+fn check(rest: &[String]) -> Result<()> {
+    let cli = Cli::new(
+        "prhs check",
+        "statically verify an artifact set (shape models + contract invariants + files) without executing it",
+    )
+    .flag("artifacts", "artifacts", "artifacts directory (or pass it positionally)")
+    .switch("json", "emit the machine-readable report on stdout")
+    .switch("strict-schema", "treat unknown manifest keys as errors (catch python-side schema drift)");
+    let args = cli.parse(rest).map_err(anyhow::Error::msg)?;
+    let dir = args
+        .positional()
+        .first()
+        .map(String::as_str)
+        .unwrap_or_else(|| args.get("artifacts"))
+        .to_string();
+    let report =
+        prhs::analysis::check_artifacts_dir(&dir, args.get_bool("strict-schema"));
+    if args.get_bool("json") {
+        println!("{}", report.to_json());
+    } else {
+        print!("{}", report.render());
+        if !report.has_errors() {
+            println!("ok: {dir} passes the static contract check");
+        }
+    }
+    if report.has_errors() {
+        std::process::exit(1);
     }
     Ok(())
 }
@@ -140,6 +184,7 @@ fn serve(rest: &[String]) -> Result<()> {
     cfg.device_decode_kv = !args.get_bool("host-decode-kv");
     cfg.batched_decode_dispatch = !args.get_bool("per-seq-decode-dispatch");
     cfg.planner_threads = args.get_usize("planner-threads");
+    cfg.strict_manifest = !args.get_bool("no-strict-manifest");
     // vocab comes from the manifest (read it without building an engine)
     let vocab = prhs::runtime::Manifest::load(args.get("artifacts"))?
         .model(&cfg.model)?

@@ -781,6 +781,25 @@ impl Engine {
     pub fn new(cfg: EngineConfig) -> Result<Self> {
         let rt = Arc::new(Runtime::new(&cfg.artifacts_dir)?);
         let mm = rt.model(&cfg.model)?.clone();
+        // Verify the served model's contract before loading anything onto
+        // the device: shape drift then fails here with a field-level
+        // diagnostic instead of a PJRT error mid-request.  `with_shared`
+        // stays unchecked — harnesses deliberately run stripped manifests
+        // to exercise fallback paths.
+        if cfg.strict_manifest {
+            let report = crate::analysis::check_model(&rt.manifest, &mm);
+            if report.has_errors() {
+                return Err(anyhow!(
+                    "manifest contract check failed for model `{}` in {} \
+                     (rerun `prhs check {}` for the full report, or pass \
+                     --no-strict-manifest to serve anyway):\n{}",
+                    cfg.model,
+                    cfg.artifacts_dir,
+                    cfg.artifacts_dir,
+                    report.render()
+                ));
+            }
+        }
         let weights = Arc::new(WeightStore::load(&rt, &mm)?);
         Ok(Self::with_shared(rt, weights, cfg))
     }
@@ -1046,9 +1065,9 @@ impl Engine {
     /// K tile + V tile `[nl, H, lb, d]` each, then last_hidden `[dm]`,
     /// logits `[V]`, last-token probs `[nl, H, lb]`.
     fn dev_state_len(&self, lb: usize) -> usize {
-        let kv = self.mm.n_layers * self.mm.n_heads * lb * self.mm.head_dim;
-        2 * kv + self.mm.d_model + self.mm.vocab_size
-            + self.mm.n_layers * self.mm.n_heads * lb
+        crate::analysis::shape::Dims::of(&self.mm)
+            .dev_state_len(lb)
+            .expect("dev state length overflows usize")
     }
 
     /// Drop a sequence's in-flight device prefill state (prefill

@@ -22,6 +22,14 @@ pub struct DeviceArena<T = xla::PjRtBuffer> {
     free: Vec<usize>,
 }
 
+// Cloneable for plain payloads only (PJRT buffers are not Clone) — the
+// schedule explorer (`analysis::sched`) forks model states mid-run.
+impl<T: Clone> Clone for DeviceArena<T> {
+    fn clone(&self) -> Self {
+        DeviceArena { slots: self.slots.clone(), free: self.free.clone() }
+    }
+}
+
 impl<T> Default for DeviceArena<T> {
     fn default() -> Self {
         DeviceArena { slots: Vec::new(), free: Vec::new() }
@@ -80,11 +88,12 @@ impl<T> DeviceArena<T> {
 /// (no buffer access), so the slot discipline is unit- and
 /// property-testable without a PJRT client; the engine owns the mapping
 /// gid/slot ↔ sequence via `kvcache::DevKvMirror`.
-#[derive(Default)]
+#[derive(Clone, Default)]
 pub struct SlotGroups {
     groups: Vec<Option<SlotGroup>>,
 }
 
+#[derive(Clone)]
 pub struct SlotGroup {
     /// Arena slot of the stacked `[cap · slot_len]` buffer.
     pub handle: ArenaHandle,
@@ -133,6 +142,18 @@ impl SlotGroups {
 
     pub fn get(&self, gid: usize) -> &SlotGroup {
         self.groups[gid].as_ref().expect("live mirror group")
+    }
+
+    /// Group by id if live (non-panicking `get`, for observers that walk
+    /// the table — model checks, metrics).
+    pub fn try_get(&self, gid: usize) -> Option<&SlotGroup> {
+        self.groups.get(gid).and_then(Option::as_ref)
+    }
+
+    /// Table length (live and freed entries) — the valid gid range for
+    /// `try_get` walks.
+    pub fn groups_len(&self) -> usize {
+        self.groups.len()
     }
 
     /// Claim a free slot in `gid`; `None` when the group is full.
@@ -255,6 +276,147 @@ mod tests {
         let s = gs.claim(gid).unwrap();
         assert!(gs.release(gid, s).is_none());
         let _ = gs.release(gid, s);
+    }
+
+    /// Concurrency model (loom lane): the arena is accessed from the
+    /// engine thread on behalf of many sequences whose lifecycles
+    /// interleave arbitrarily.  Explore EVERY interleaving of two
+    /// sequences' alloc→replace→free scripts and check the slot
+    /// discipline at each step: live count equals outstanding handles,
+    /// concurrent handles never alias, and everything drains to zero.
+    #[test]
+    fn loom_device_arena_lifecycle_all_interleavings() {
+        use crate::analysis::sched::{explore, Op};
+        use crate::sched_ops;
+
+        #[derive(Clone, Default)]
+        struct St {
+            arena: DeviceArena<u64>,
+            handle: [Option<ArenaHandle>; 2],
+        }
+        let script = |i: usize| -> Vec<Op<St>> {
+            sched_ops![
+                move |s: &mut St| {
+                    s.handle[i] = Some(s.arena.alloc(i as u64));
+                },
+                move |s: &mut St| {
+                    let h = s.handle[i].unwrap();
+                    s.arena.replace(h, 100 + i as u64);
+                },
+                move |s: &mut St| {
+                    s.arena.free(s.handle[i].take().unwrap());
+                },
+            ]
+        };
+        let n = explore(
+            &St::default(),
+            &[script(0), script(1)],
+            &|s| {
+                let held = s.handle.iter().flatten().count();
+                if s.arena.live() != held {
+                    return Err(format!(
+                        "live {} != outstanding handles {held}",
+                        s.arena.live()
+                    ));
+                }
+                if let [Some(a), Some(b)] = s.handle {
+                    if a == b {
+                        return Err("two live sequences share a slot".into());
+                    }
+                    if *s.arena.get(a) == *s.arena.get(b) {
+                        return Err("slot payloads aliased".into());
+                    }
+                }
+                Ok(())
+            },
+            &|s| {
+                if s.arena.live() == 0 {
+                    Ok(())
+                } else {
+                    Err(format!("leak: {} slots live", s.arena.live()))
+                }
+            },
+        )
+        .unwrap_or_else(|v| panic!("{v}"));
+        assert_eq!(n, 20, "C(6,3) interleavings of two 3-op scripts");
+    }
+
+    /// Concurrency model (loom lane): two sequences join/leave mirror
+    /// groups in every interleaving; a (gid, slot) pair is never handed
+    /// to both, group occupancy tracks membership exactly, and the
+    /// arena/groups pair drains with the last leaver taking the buffer.
+    #[test]
+    fn loom_slot_groups_join_leave_all_interleavings() {
+        use crate::analysis::sched::{explore, Op};
+        use crate::sched_ops;
+
+        #[derive(Clone, Default)]
+        struct St {
+            arena: DeviceArena<u64>,
+            groups: SlotGroups,
+            seat: [Option<(usize, usize)>; 2],
+        }
+        const TAG: usize = 512;
+        let join = move |s: &mut St, i: usize| {
+            let gid = match s.groups.find_free(TAG) {
+                Some(gid) => gid,
+                None => s.groups.create(s.arena.alloc(0), TAG, 2),
+            };
+            let slot = s.groups.claim(gid).expect("claim after find_free");
+            s.seat[i] = Some((gid, slot));
+        };
+        let leave = move |s: &mut St, i: usize| {
+            let (gid, slot) = s.seat[i].take().unwrap();
+            if let Some(h) = s.groups.release(gid, slot) {
+                s.arena.free(h);
+            }
+        };
+        let script = |i: usize| -> Vec<Op<St>> {
+            sched_ops![
+                move |s: &mut St| join(s, i),
+                move |s: &mut St| leave(s, i),
+                move |s: &mut St| join(s, i),
+                move |s: &mut St| leave(s, i),
+            ]
+        };
+        let n = explore(
+            &St::default(),
+            &[script(0), script(1)],
+            &|s| {
+                if let [Some(a), Some(b)] = s.seat {
+                    if a == b {
+                        return Err(format!("seat {a:?} double-claimed"));
+                    }
+                }
+                let seated = s.seat.iter().flatten().count();
+                let occupied: usize = (0..s.groups.groups_len())
+                    .filter_map(|gid| s.groups.try_get(gid))
+                    .map(SlotGroup::live)
+                    .sum();
+                if occupied != seated {
+                    return Err(format!(
+                        "groups show {occupied} occupants, {seated} seated"
+                    ));
+                }
+                if s.groups.live() > s.arena.live() {
+                    return Err("group outlived its buffer".into());
+                }
+                Ok(())
+            },
+            &|s| {
+                if s.groups.live() == 0 && s.arena.live() == 0 {
+                    Ok(())
+                } else {
+                    Err(format!(
+                        "leak: {} groups / {} buffers",
+                        s.groups.live(),
+                        s.arena.live()
+                    ))
+                }
+            },
+        )
+        .unwrap_or_else(|v| panic!("{v}"));
+        assert_eq!(n, 70, "C(8,4) interleavings of two 4-op scripts");
     }
 
     /// Property (issue satellite: batched grouping planner): under any

@@ -1,4 +1,14 @@
 //! `artifacts/manifest.json` parsing — the python→rust interchange contract.
+//!
+//! Parsing is *total*: any malformed document — wrong types, missing keys,
+//! non-integral numbers, truncated JSON — surfaces as an `Err` whose
+//! message names the model, artifact, and field path it was found at
+//! (`models.small.artifacts[3].outputs[1].shape`), never as a panic.  The
+//! property suite feeds the parser arbitrary garbage to hold it to that
+//! (`tests/prop_manifest.rs`).  Unknown keys are recorded rather than
+//! rejected so `prhs check --strict-schema` can flag python-side schema
+//! additions the rust side would otherwise silently ignore
+//! (`analysis::check`, DESIGN.md §Contract).
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -15,8 +25,14 @@ pub struct TensorSpec {
 }
 
 impl TensorSpec {
-    pub fn elements(&self) -> usize {
-        self.shape.iter().product()
+    /// Checked element count — `None` when the product overflows `usize`,
+    /// so a corrupt shape like `[usize::MAX, 2]` becomes a checker
+    /// diagnostic (`E_OVERFLOW`) instead of a debug-panic / release
+    /// wraparound in whatever consumer multiplies the dims.
+    pub fn elements(&self) -> Option<usize> {
+        self.shape
+            .iter()
+            .try_fold(1usize, |acc, &d| acc.checked_mul(d))
     }
 }
 
@@ -44,6 +60,15 @@ pub struct WeightEntry {
     pub offset: usize,
 }
 
+impl WeightEntry {
+    /// Checked element count (same contract as [`TensorSpec::elements`]).
+    pub fn elements(&self) -> Option<usize> {
+        self.shape
+            .iter()
+            .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct ModelManifest {
     pub name: String,
@@ -63,19 +88,146 @@ pub struct ModelManifest {
 pub struct Manifest {
     pub dir: PathBuf,
     pub models: BTreeMap<String, ModelManifest>,
+    /// `"contract_version"` stamped by `python/compile/aot.py`; `None` on
+    /// artifact sets predating the stamp.  Checked against
+    /// `analysis::SUPPORTED_CONTRACT_VERSION` by `prhs check` and strict
+    /// engine startup.
+    pub contract_version: Option<usize>,
+    /// Field paths of keys the parser did not recognize (schema drift).
+    /// Ignored at runtime; promoted to errors by
+    /// `prhs check --strict-schema`.
+    pub unknown_keys: Vec<String>,
 }
 
-fn tensor_spec(j: &Json) -> Result<TensorSpec> {
+// Known key sets per object level, for unknown-key (schema-drift)
+// recording.  Must track the python emitter (`aot.py` / `config_dict`).
+const TOP_KEYS: &[&str] = &["version", "contract_version", "models"];
+const MODEL_KEYS: &[&str] = &["config", "weights_blob", "weights", "artifacts"];
+const CONFIG_KEYS: &[&str] = &[
+    "name", "n_layers", "d_model", "n_heads", "n_kv_heads", "head_dim",
+    "d_ff", "vocab_size", "rope_base", "rms_eps", "seed", "aniso", "qk_std",
+    "params_estimate",
+];
+const WEIGHT_KEYS: &[&str] = &["name", "shape", "offset"];
+const ARTIFACT_KEYS: &[&str] =
+    &["name", "file", "stage", "params", "inputs", "outputs", "untupled"];
+const TENSOR_KEYS: &[&str] = &["name", "dtype", "shape"];
+
+/// Required key lookup with a field-path error.
+fn want<'a>(j: &'a Json, key: &str, at: &str) -> Result<&'a Json> {
+    match j {
+        Json::Obj(_) => j
+            .get(key)
+            .ok_or_else(|| anyhow!("{at}: missing required key `{key}`")),
+        _ => Err(anyhow!("{at}: expected an object")),
+    }
+}
+
+fn want_str(j: &Json, key: &str, at: &str) -> Result<String> {
+    want(j, key, at)?
+        .as_str()
+        .map(str::to_string)
+        .ok_or_else(|| anyhow!("{at}.{key}: expected a string"))
+}
+
+/// A JSON number that is a representable non-negative integer.  f64
+/// round-trips integers only up to 2^53; anything outside that (or
+/// negative, fractional, NaN) is a corrupt manifest, not a usize cast.
+fn usize_of(j: &Json, at: &str) -> Result<usize> {
+    let n = j
+        .as_f64()
+        .ok_or_else(|| anyhow!("{at}: expected a number"))?;
+    if !n.is_finite() || n.fract() != 0.0 || !(0.0..=9.007_199_254_740_992e15).contains(&n) {
+        return Err(anyhow!("{at}: expected a non-negative integer, got {n}"));
+    }
+    Ok(n as usize)
+}
+
+fn want_usize(j: &Json, key: &str, at: &str) -> Result<usize> {
+    usize_of(want(j, key, at)?, &format!("{at}.{key}"))
+}
+
+fn shape_of(j: &Json, at: &str) -> Result<Vec<usize>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("{at}: expected an array"))?
+        .iter()
+        .enumerate()
+        .map(|(i, v)| usize_of(v, &format!("{at}[{i}]")))
+        .collect()
+}
+
+fn note_unknown(j: &Json, known: &[&str], at: &str, out: &mut Vec<String>) {
+    if let Some(obj) = j.as_obj() {
+        for k in obj.keys() {
+            if !known.contains(&k.as_str()) {
+                out.push(format!("{at}.{k}"));
+            }
+        }
+    }
+}
+
+fn tensor_spec(j: &Json, at: &str, unknown: &mut Vec<String>) -> Result<TensorSpec> {
+    note_unknown(j, TENSOR_KEYS, at, unknown);
     Ok(TensorSpec {
-        name: j.req("name").as_str().unwrap_or_default().to_string(),
-        dtype: j.req("dtype").as_str().unwrap_or_default().to_string(),
-        shape: j
-            .req("shape")
+        name: want_str(j, "name", at)?,
+        dtype: want_str(j, "dtype", at)?,
+        shape: shape_of(want(j, "shape", at)?, &format!("{at}.shape"))?,
+    })
+}
+
+fn weight_entry(j: &Json, at: &str, unknown: &mut Vec<String>) -> Result<WeightEntry> {
+    note_unknown(j, WEIGHT_KEYS, at, unknown);
+    Ok(WeightEntry {
+        name: want_str(j, "name", at)?,
+        shape: shape_of(want(j, "shape", at)?, &format!("{at}.shape"))?,
+        offset: want_usize(j, "offset", at)?,
+    })
+}
+
+fn artifact_spec(j: &Json, at: &str, unknown: &mut Vec<String>) -> Result<ArtifactSpec> {
+    note_unknown(j, ARTIFACT_KEYS, at, unknown);
+    // Prefer the artifact's own name in nested error paths once we have it.
+    let name = want_str(j, "name", at)?;
+    let at = &format!("{at}(`{name}`)");
+    // Bucket params are the numeric entries; the stamped "model" string is
+    // runtime-irrelevant and skipped, but a numeric param that is not a
+    // valid usize is an error, not a silent zero.
+    let mut params = BTreeMap::new();
+    if let Some(obj) = want(j, "params", at)?.as_obj() {
+        for (k, v) in obj {
+            if matches!(v, Json::Num(_)) {
+                params.insert(
+                    k.clone(),
+                    usize_of(v, &format!("{at}.params.{k}"))?,
+                );
+            }
+        }
+    } else {
+        return Err(anyhow!("{at}.params: expected an object"));
+    }
+    let untupled = match j.get("untupled") {
+        None => false,
+        Some(v) => v
+            .as_bool()
+            .ok_or_else(|| anyhow!("{at}.untupled: expected a bool"))?,
+    };
+    let io = |key: &str| -> Result<Vec<TensorSpec>> {
+        want(j, key, at)?
             .as_arr()
-            .ok_or_else(|| anyhow!("shape not array"))?
+            .ok_or_else(|| anyhow!("{at}.{key}: expected an array"))?
             .iter()
-            .map(|v| v.as_usize().unwrap_or(0))
-            .collect(),
+            .enumerate()
+            .map(|(i, t)| tensor_spec(t, &format!("{at}.{key}[{i}]"), unknown))
+            .collect()
+    };
+    Ok(ArtifactSpec {
+        file: want_str(j, "file", at)?,
+        stage: want_str(j, "stage", at)?,
+        params,
+        untupled,
+        inputs: io("inputs")?,
+        outputs: io("outputs")?,
+        name,
     })
 }
 
@@ -85,103 +237,67 @@ impl Manifest {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)
             .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
-        let j = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+        Self::parse_str(&text, dir)
+    }
+
+    /// Parse a manifest document.  Total: returns `Err` (never panics) on
+    /// any malformed input, with the offending model/artifact/field path
+    /// in the message.
+    pub fn parse_str(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest.json: {e}"))?;
+        let mut unknown = Vec::new();
+        note_unknown(&j, TOP_KEYS, "manifest", &mut unknown);
+        let contract_version = match j.get("contract_version") {
+            None => None,
+            Some(v) => Some(usize_of(v, "manifest.contract_version")?),
+        };
         let mut models = BTreeMap::new();
-        for (name, m) in j
-            .req("models")
+        for (name, m) in want(&j, "models", "manifest")?
             .as_obj()
-            .ok_or_else(|| anyhow!("models not object"))?
+            .ok_or_else(|| anyhow!("manifest.models: expected an object"))?
         {
-            let cfg = m.req("config");
-            let get = |k: &str| -> Result<usize> {
-                cfg.req(k)
-                    .as_usize()
-                    .ok_or_else(|| anyhow!("config.{k} not a number"))
-            };
-            let weights = m
-                .req("weights")
+            let at = format!("models.{name}");
+            note_unknown(m, MODEL_KEYS, &at, &mut unknown);
+            let cfg = want(m, "config", &at)?;
+            let cfg_at = format!("{at}.config");
+            note_unknown(cfg, CONFIG_KEYS, &cfg_at, &mut unknown);
+            let dim = |k: &str| want_usize(cfg, k, &cfg_at);
+            let weights = want(m, "weights", &at)?
                 .as_arr()
-                .ok_or_else(|| anyhow!("weights not array"))?
+                .ok_or_else(|| anyhow!("{at}.weights: expected an array"))?
                 .iter()
-                .map(|e| {
-                    Ok(WeightEntry {
-                        name: e.req("name").as_str().unwrap_or_default().into(),
-                        shape: e
-                            .req("shape")
-                            .as_arr()
-                            .ok_or_else(|| anyhow!("weight shape"))?
-                            .iter()
-                            .map(|v| v.as_usize().unwrap_or(0))
-                            .collect(),
-                        offset: e.req("offset").as_usize().unwrap_or(0),
-                    })
+                .enumerate()
+                .map(|(i, e)| {
+                    weight_entry(e, &format!("{at}.weights[{i}]"), &mut unknown)
                 })
                 .collect::<Result<Vec<_>>>()?;
-            let artifacts = m
-                .req("artifacts")
+            let artifacts = want(m, "artifacts", &at)?
                 .as_arr()
-                .ok_or_else(|| anyhow!("artifacts not array"))?
+                .ok_or_else(|| anyhow!("{at}.artifacts: expected an array"))?
                 .iter()
-                .map(|a| {
-                    let params = a
-                        .req("params")
-                        .as_obj()
-                        .map(|o| {
-                            o.iter()
-                                .filter_map(|(k, v)| {
-                                    v.as_usize().map(|n| (k.clone(), n))
-                                })
-                                .collect()
-                        })
-                        .unwrap_or_default();
-                    Ok(ArtifactSpec {
-                        name: a.req("name").as_str().unwrap_or_default().into(),
-                        file: a.req("file").as_str().unwrap_or_default().into(),
-                        stage: a.req("stage").as_str().unwrap_or_default().into(),
-                        params,
-                        untupled: a
-                            .get("untupled")
-                            .and_then(Json::as_bool)
-                            .unwrap_or(false),
-                        inputs: a
-                            .req("inputs")
-                            .as_arr()
-                            .unwrap_or(&[])
-                            .iter()
-                            .map(tensor_spec)
-                            .collect::<Result<Vec<_>>>()?,
-                        outputs: a
-                            .req("outputs")
-                            .as_arr()
-                            .unwrap_or(&[])
-                            .iter()
-                            .map(tensor_spec)
-                            .collect::<Result<Vec<_>>>()?,
-                    })
+                .enumerate()
+                .map(|(i, a)| {
+                    artifact_spec(a, &format!("{at}.artifacts[{i}]"), &mut unknown)
                 })
                 .collect::<Result<Vec<_>>>()?;
             models.insert(
                 name.clone(),
                 ModelManifest {
                     name: name.clone(),
-                    n_layers: get("n_layers")?,
-                    d_model: get("d_model")?,
-                    n_heads: get("n_heads")?,
-                    n_kv_heads: get("n_kv_heads")?,
-                    head_dim: get("head_dim")?,
-                    d_ff: get("d_ff")?,
-                    vocab_size: get("vocab_size")?,
-                    weights_blob: m
-                        .req("weights_blob")
-                        .as_str()
-                        .unwrap_or_default()
-                        .into(),
+                    n_layers: dim("n_layers")?,
+                    d_model: dim("d_model")?,
+                    n_heads: dim("n_heads")?,
+                    n_kv_heads: dim("n_kv_heads")?,
+                    head_dim: dim("head_dim")?,
+                    d_ff: dim("d_ff")?,
+                    vocab_size: dim("vocab_size")?,
+                    weights_blob: want_str(m, "weights_blob", &at)?,
                     weights,
                     artifacts,
                 },
             );
         }
-        Ok(Manifest { dir, models })
+        Ok(Manifest { dir, models, contract_version, unknown_keys: unknown })
     }
 
     pub fn model(&self, name: &str) -> Result<&ModelManifest> {
@@ -240,6 +356,7 @@ mod tests {
     fn toy_manifest_json() -> String {
         r#"{
           "version": 1,
+          "contract_version": 1,
           "models": {
             "m": {
               "config": {"name":"m","n_layers":2,"d_model":8,"n_heads":2,
@@ -281,6 +398,8 @@ mod tests {
         std::fs::write(tmp.join("manifest.json"), toy_manifest_json())
             .unwrap();
         let m = Manifest::load(tmp.to_str().unwrap()).unwrap();
+        assert_eq!(m.contract_version, Some(1));
+        assert!(m.unknown_keys.is_empty(), "{:?}", m.unknown_keys);
         let mm = m.model("m").unwrap();
         assert_eq!(mm.n_layers, 2);
         assert_eq!(mm.buckets("layer_step", "n_sel"), vec![64, 128]);
@@ -298,8 +417,81 @@ mod tests {
             .find("prefill_extend_dev", &[("chunk", 4), ("l_max", 8)])
             .unwrap();
         assert!(dev.untupled);
-        assert_eq!(dev.outputs[0].elements(), 100);
+        assert_eq!(dev.outputs[0].elements(), Some(100));
         assert!(m.model("nope").is_err());
         std::fs::remove_dir_all(&tmp).ok();
+    }
+
+    #[test]
+    fn elements_is_overflow_checked() {
+        let t = TensorSpec {
+            name: "x".into(),
+            dtype: "float32".into(),
+            shape: vec![usize::MAX, 2],
+        };
+        assert_eq!(t.elements(), None);
+        let t = TensorSpec { shape: vec![], ..t };
+        assert_eq!(t.elements(), Some(1), "rank-0 scalar is one element");
+    }
+
+    /// Parse errors carry the model/artifact/field path (issue satellite:
+    /// a missing key deep in `artifacts[]` must say which artifact).
+    #[test]
+    fn errors_carry_field_context() {
+        let doc = toy_manifest_json().replace("\"stage\":\"layer_step\",", "");
+        let err = Manifest::parse_str(&doc, PathBuf::from("."))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("models.m.artifacts[0]"), "{err}");
+        assert!(err.contains("m_layer_step_b1_n64"), "{err}");
+        assert!(err.contains("stage"), "{err}");
+
+        let doc = toy_manifest_json().replace("\"offset\":0", "\"offset\":-3");
+        let err = Manifest::parse_str(&doc, PathBuf::from("."))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("models.m.weights[0].offset"), "{err}");
+
+        let doc = toy_manifest_json().replace("[1,8]", "[1.5,8]");
+        let err = Manifest::parse_str(&doc, PathBuf::from("."))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("shape[0]"), "{err}");
+    }
+
+    /// Unknown keys anywhere in the document are recorded with their
+    /// path (promoted to errors by `prhs check --strict-schema`).
+    #[test]
+    fn unknown_keys_are_recorded_not_rejected() {
+        let doc = toy_manifest_json()
+            .replace(
+                "\"weights_blob\": \"w.bin\",",
+                "\"weights_blob\": \"w.bin\", \"blob_crc\": 7,",
+            )
+            .replace(
+                "\"untupled\":true",
+                "\"untupled\":true,\"donate\":true",
+            );
+        let m = Manifest::parse_str(&doc, PathBuf::from(".")).unwrap();
+        assert!(
+            m.unknown_keys.iter().any(|k| k == "models.m.blob_crc"),
+            "{:?}",
+            m.unknown_keys
+        );
+        assert!(
+            m.unknown_keys
+                .iter()
+                .any(|k| k.contains("artifacts[2]") && k.ends_with(".donate")),
+            "{:?}",
+            m.unknown_keys
+        );
+    }
+
+    /// Artifact sets predating the contract stamp still parse.
+    #[test]
+    fn missing_contract_version_is_none() {
+        let doc = toy_manifest_json().replace("\"contract_version\": 1,", "");
+        let m = Manifest::parse_str(&doc, PathBuf::from(".")).unwrap();
+        assert_eq!(m.contract_version, None);
     }
 }

@@ -70,6 +70,9 @@ impl ClientHandle {
 /// registered first.  The server rewrites `req.id` to a fresh ticket
 /// before submitting to the scheduler and restores the client's id on
 /// completion, so routing never depends on client-chosen ids.
+// Clone (cheap: SyncSender clones share the channel) lets the schedule
+// explorer (`analysis::sched`) fork table states in the loom_* models.
+#[derive(Clone)]
 struct ReplyTable {
     next_ticket: u64,
     /// (ticket, client id, reply channel).
@@ -276,6 +279,100 @@ mod tests {
         assert_eq!(table.len(), 0, "table drains");
         // unknown ticket: no panic, no routing
         assert!(table.complete(out(99, 1)).is_none());
+    }
+
+    /// Concurrency model (loom lane): two clients register/complete in
+    /// every interleaving the server loop could produce (register and
+    /// complete both happen on the engine thread, but their ORDER depends
+    /// on client/scheduler timing).  Tickets must stay unique, each
+    /// completion must route exactly once with the client id restored,
+    /// and the table must drain.
+    #[test]
+    fn loom_reply_table_routing_all_interleavings() {
+        use crate::analysis::sched::{explore, Op};
+        use crate::sched_ops;
+
+        #[derive(Clone)]
+        struct St {
+            table: ReplyTable,
+            ticket: [Option<u64>; 2],
+            routed: [Option<u64>; 2], // client id each routed reply carried
+        }
+        let mk_out = |ticket: u64| RequestOut {
+            id: ticket,
+            tokens: vec![1],
+            prefill_us: 0.0,
+            decode_us: 0.0,
+            ttft_us: 0.0,
+            steps: 1,
+            rho_hat: 0.0,
+            rejected: false,
+        };
+        // Both clients chose the same id (7) — the historical cross-wire
+        // trigger.  Client i's reply channel is identified by capacity i+1.
+        let script = |i: usize| -> Vec<Op<St>> {
+            sched_ops![
+                move |s: &mut St| {
+                    let (tx, _rx) = sync_channel::<RequestOut>(i + 1);
+                    s.ticket[i] = Some(s.table.register(7, tx));
+                },
+                move |s: &mut St| {
+                    let t = s.ticket[i].unwrap();
+                    let (out, _tx) =
+                        s.table.complete(mk_out(t)).expect("ticket routes");
+                    s.routed[i] = Some(out.id);
+                },
+            ]
+        };
+        let n = explore(
+            &St {
+                table: ReplyTable::new(),
+                ticket: [None, None],
+                routed: [None, None],
+            },
+            &[script(0), script(1)],
+            &|s| {
+                if let [Some(a), Some(b)] = s.ticket {
+                    if a == b {
+                        return Err("duplicate tickets issued".into());
+                    }
+                }
+                let outstanding = s
+                    .ticket
+                    .iter()
+                    .zip(&s.routed)
+                    .filter(|(t, r)| t.is_some() && r.is_none())
+                    .count();
+                if s.table.len() != outstanding {
+                    return Err(format!(
+                        "table holds {} entries, {outstanding} outstanding",
+                        s.table.len()
+                    ));
+                }
+                Ok(())
+            },
+            &|s| {
+                if s.routed != [Some(7), Some(7)] {
+                    return Err(format!(
+                        "client ids not restored: {:?}",
+                        s.routed
+                    ));
+                }
+                if s.table.len() != 0 {
+                    return Err("table did not drain".into());
+                }
+                // a stale ticket must not route after the drain
+                let mut t = s.table.clone();
+                if t.complete(mk_out(0)).is_some() {
+                    return Err("completed ticket routed twice".into());
+                }
+                Ok(())
+            },
+        )
+        .unwrap_or_else(|v| panic!("{v}"));
+        // per-thread program order (register before complete) leaves
+        // C(4,2) = 6 interleavings
+        assert_eq!(n, 6);
     }
 
     /// A dropped server side surfaces as `Closed`, not `Busy`.

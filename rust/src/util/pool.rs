@@ -75,6 +75,39 @@ mod tests {
         assert_eq!(hits.load(Ordering::Relaxed), 100);
     }
 
+    /// Concurrency model (loom lane): exhaustively sweep every
+    /// (width, unit-count) partition the chunking can produce in the
+    /// engine's operating range and check the fan-out contract — each
+    /// unit visited exactly once, by exactly one worker, with the result
+    /// independent of width.  The partition arithmetic (`min`, `div_ceil`,
+    /// `chunks_mut`) is where an off-by-one would double-visit or drop a
+    /// unit; real threads execute every partition, so the sweep covers
+    /// the full schedule-relevant state space (units are disjoint by
+    /// construction — there is no cross-thread data to interleave).
+    #[test]
+    fn loom_pool_partition_sweep_visits_each_unit_once() {
+        for n in 0..=12usize {
+            // serial reference
+            let mut want: Vec<(usize, usize)> = (0..n).map(|i| (i, 0)).collect();
+            for_each_unit(1, &mut want, |(i, v)| *v = 3 * *i + 1);
+            for width in 0..=n + 2 {
+                let mut units: Vec<(usize, usize)> =
+                    (0..n).map(|i| (i, 0)).collect();
+                let visits = AtomicUsize::new(0);
+                for_each_unit(width, &mut units, |(i, v)| {
+                    visits.fetch_add(1, Ordering::Relaxed);
+                    *v = 3 * *i + 1;
+                });
+                assert_eq!(
+                    visits.load(Ordering::Relaxed),
+                    n,
+                    "width {width}, n {n}: visit count"
+                );
+                assert_eq!(units, want, "width {width}, n {n}: results differ");
+            }
+        }
+    }
+
     #[test]
     fn degenerate_shapes() {
         let mut empty: Vec<usize> = Vec::new();

@@ -68,6 +68,57 @@ pub mod gen {
         w
     }
 
+    /// JSON-flavored ASCII garbage for parser-totality properties: the
+    /// alphabet is weighted toward structural characters so the parser's
+    /// recursive paths actually get exercised instead of failing on the
+    /// first byte.
+    pub fn json_garbage(rng: &mut Rng, max_len: usize) -> String {
+        const STRUCT: &[u8] = b"{}[]\",:.-+eE\\/ \t\n";
+        const WORDS: &[&str] =
+            &["null", "true", "false", "0", "1e9", "\"x\"", "1.5", "-0"];
+        let len = rng.below(max_len + 1);
+        let mut s = String::new();
+        while s.len() < len {
+            match rng.below(4) {
+                0 => s.push(STRUCT[rng.below(STRUCT.len())] as char),
+                1 => s.push_str(WORDS[rng.below(WORDS.len())]),
+                2 => s.push((0x20 + rng.below(0x5f) as u8) as char),
+                _ => s.push(char::from_u32(rng.below(0xD7FF) as u32).unwrap_or('?')),
+            }
+        }
+        s
+    }
+
+    /// Corrupt a valid document: delete, duplicate, or overwrite a random
+    /// span — the "one editor keystroke away from valid" inputs where a
+    /// trusting parser panics instead of erroring.
+    pub fn mutate_text(rng: &mut Rng, doc: &str) -> String {
+        let bytes = doc.as_bytes();
+        if bytes.is_empty() {
+            return String::new();
+        }
+        let start = rng.below(bytes.len());
+        let len = 1 + rng.below(8.min(bytes.len() - start));
+        let mut out = Vec::with_capacity(bytes.len() + len);
+        out.extend_from_slice(&bytes[..start]);
+        match rng.below(3) {
+            0 => {} // delete the span
+            1 => {
+                // duplicate it
+                out.extend_from_slice(&bytes[start..start + len]);
+                out.extend_from_slice(&bytes[start..start + len]);
+            }
+            _ => {
+                // overwrite with garbage of the same length
+                for _ in 0..len {
+                    out.push(0x20 + rng.below(0x5f) as u8);
+                }
+            }
+        }
+        out.extend_from_slice(&bytes[start + len..]);
+        String::from_utf8_lossy(&out).into_owned()
+    }
+
     /// Strictly increasing positions in [0, bound).
     pub fn sorted_unique(rng: &mut Rng, n: usize, bound: usize) -> Vec<usize> {
         assert!(n <= bound);

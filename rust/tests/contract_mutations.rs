@@ -1,0 +1,403 @@
+//! Mutation tests for the static contract checker (`prhs check`).
+//!
+//! Build a full 16-stage manifest fixture from the shared python↔rust
+//! golden (`python/tests/data/contract_golden.json`), verify it is clean,
+//! then seed single-field corruptions and assert each one is flagged
+//! with its pinned diagnostic code — the checker's own test coverage
+//! demanded by the issue (a checker that misses its target mutations is
+//! worse than none: it certifies garbage).
+
+use std::collections::BTreeMap;
+
+use prhs::analysis::check_manifest;
+use prhs::analysis::report::*;
+use prhs::analysis::shape::{self, Dims};
+use prhs::runtime::manifest::{
+    ArtifactSpec, Manifest, ModelManifest, TensorSpec, WeightEntry,
+};
+use prhs::util::json::Json;
+
+const GOLDEN: &str = include_str!(concat!(
+    env!("CARGO_MANIFEST_DIR"),
+    "/../python/tests/data/contract_golden.json"
+));
+
+/// Build a parsed `Manifest` from the golden fixture: artifacts verbatim
+/// from the golden entries, weights synthesized as the exact contiguous
+/// tiling `aot.py` emits.
+fn fixture() -> Manifest {
+    let g = Json::parse(GOLDEN).unwrap();
+    let cfg = g.get("config").unwrap();
+    let dim = |k: &str| cfg.get(k).and_then(Json::as_usize).unwrap();
+    let dims = Dims {
+        nl: dim("n_layers"),
+        dm: dim("d_model"),
+        h: dim("n_heads"),
+        hkv: dim("n_kv_heads"),
+        d: dim("head_dim"),
+        dff: dim("d_ff"),
+        v: dim("vocab_size"),
+    };
+    let mut offset = 0usize;
+    let weights: Vec<WeightEntry> = shape::expected_weights(&dims)
+        .unwrap()
+        .into_iter()
+        .map(|s| {
+            let e = WeightEntry {
+                name: s.name,
+                shape: s.shape.clone(),
+                offset,
+            };
+            offset += s.shape.iter().product::<usize>();
+            e
+        })
+        .collect();
+    let tensor = |j: &Json| TensorSpec {
+        name: j.get("name").and_then(Json::as_str).unwrap().to_string(),
+        dtype: j.get("dtype").and_then(Json::as_str).unwrap().to_string(),
+        shape: j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .unwrap()
+            .iter()
+            .map(|d| d.as_usize().unwrap())
+            .collect(),
+    };
+    let artifacts: Vec<ArtifactSpec> = g
+        .get("entries")
+        .and_then(Json::as_arr)
+        .unwrap()
+        .iter()
+        .map(|e| {
+            let name = e.get("name").and_then(Json::as_str).unwrap();
+            let mut params = BTreeMap::new();
+            for (k, v) in e.get("params").and_then(Json::as_obj).unwrap() {
+                if let Some(n) = v.as_usize() {
+                    params.insert(k.clone(), n);
+                }
+            }
+            ArtifactSpec {
+                name: name.to_string(),
+                file: format!("{name}.hlo.txt"),
+                stage: e.get("stage").and_then(Json::as_str).unwrap().to_string(),
+                params,
+                inputs: e
+                    .get("inputs")
+                    .and_then(Json::as_arr)
+                    .unwrap()
+                    .iter()
+                    .map(tensor)
+                    .collect(),
+                outputs: e
+                    .get("outputs")
+                    .and_then(Json::as_arr)
+                    .unwrap()
+                    .iter()
+                    .map(tensor)
+                    .collect(),
+                untupled: e.get("untupled").and_then(Json::as_bool).unwrap_or(false),
+            }
+        })
+        .collect();
+    let mm = ModelManifest {
+        name: "gqa".to_string(),
+        n_layers: dims.nl,
+        d_model: dims.dm,
+        n_heads: dims.h,
+        n_kv_heads: dims.hkv,
+        head_dim: dims.d,
+        d_ff: dims.dff,
+        vocab_size: dims.v,
+        weights_blob: "gqa.weights.bin".to_string(),
+        weights,
+        artifacts,
+    };
+    let mut models = BTreeMap::new();
+    models.insert("gqa".to_string(), mm);
+    Manifest {
+        dir: std::path::PathBuf::from("."),
+        models,
+        contract_version: Some(1),
+        unknown_keys: Vec::new(),
+    }
+}
+
+fn art_mut<'a>(m: &'a mut Manifest, stage: &str) -> &'a mut ArtifactSpec {
+    m.models
+        .get_mut("gqa")
+        .unwrap()
+        .artifacts
+        .iter_mut()
+        .find(|a| a.stage == stage)
+        .unwrap()
+}
+
+/// Apply `corrupt` to a pristine fixture and return the strict report.
+fn mutated(corrupt: impl FnOnce(&mut Manifest)) -> Report {
+    let mut m = fixture();
+    corrupt(&mut m);
+    check_manifest(&m, true)
+}
+
+#[test]
+fn pristine_fixture_is_clean_under_strict() {
+    let r = check_manifest(&fixture(), true);
+    assert!(!r.has_errors(), "{}", r.render());
+    assert_eq!(r.warning_count(), 0, "{}", r.render());
+}
+
+#[test]
+fn mutation_flipped_shape_dim_is_e_shape() {
+    let r = mutated(|m| {
+        let a = art_mut(m, "layer_step");
+        a.outputs[0].shape = vec![128, 1]; // was [1, 128]
+    });
+    assert!(r.has_code(E_SHAPE), "{}", r.render());
+    let d = &r.with_code(E_SHAPE)[0];
+    assert_eq!(d.subject, "gqa_layer_step_b1_n192", "names the artifact");
+    assert!(d.detail.contains("hidden"), "names the tensor: {}", d.detail);
+}
+
+#[test]
+fn mutation_wrong_dtype_is_e_dtype() {
+    let r = mutated(|m| {
+        let a = art_mut(m, "embed");
+        a.inputs[0].dtype = "float32".to_string(); // tokens must be int32
+    });
+    assert!(r.has_code(E_DTYPE), "{}", r.render());
+}
+
+#[test]
+fn mutation_renamed_tensor_is_e_io_name() {
+    let r = mutated(|m| {
+        let a = art_mut(m, "attn_dense");
+        a.inputs[1].name = "keys".to_string(); // expected `k`
+    });
+    assert!(r.has_code(E_IO_NAME), "{}", r.render());
+}
+
+#[test]
+fn mutation_dropped_output_is_e_arity() {
+    let r = mutated(|m| {
+        let a = art_mut(m, "prefill");
+        a.outputs.pop();
+    });
+    assert!(r.has_code(E_ARITY), "{}", r.render());
+}
+
+#[test]
+fn mutation_tupled_feedback_stage_is_e_untupled_required() {
+    let r = mutated(|m| {
+        art_mut(m, "kv_append_dev").untupled = false;
+    });
+    assert!(r.has_code(E_UNTUPLED_REQUIRED), "{}", r.render());
+}
+
+#[test]
+fn mutation_untupled_multi_output_stage_is_e_untupled_multi() {
+    let r = mutated(|m| {
+        art_mut(m, "layer_step").untupled = true;
+    });
+    assert!(r.has_code(E_UNTUPLED_MULTI), "{}", r.render());
+}
+
+#[test]
+fn mutation_missing_bucket_param_is_e_param() {
+    let r = mutated(|m| {
+        art_mut(m, "attn_dense").params.remove("l_max");
+    });
+    assert!(r.has_code(E_PARAM), "{}", r.render());
+    assert!(
+        r.with_code(E_PARAM)[0].detail.contains("l_max"),
+        "names the param: {}",
+        r.render()
+    );
+}
+
+#[test]
+fn mutation_incomplete_bucket_grid_is_e_grid_hole() {
+    // Adding a (batch=2, n_sel=384) attention artifact widens both axes
+    // of the attn_tsa_xla grid: {1,2} × {192,384} now has 4 cells but
+    // only 2 artifacts — the (1,384) and (2,192) cells are holes.  The
+    // new artifact's own shapes are synthesized from the stage model so
+    // ONLY the grid check fires.
+    let r = mutated(|m| {
+        let mm = m.models.get_mut("gqa").unwrap();
+        let dims = Dims::of(mm);
+        let mut params = BTreeMap::new();
+        params.insert("batch".to_string(), 2usize);
+        params.insert("n_sel".to_string(), 384usize);
+        let sm = shape::stage_model(&dims, "attn_tsa_xla", &params)
+            .unwrap()
+            .unwrap();
+        let cvt = |s: &shape::Spec| TensorSpec {
+            name: s.name.clone(),
+            dtype: s.dtype.to_string(),
+            shape: s.shape.clone(),
+        };
+        mm.artifacts.push(ArtifactSpec {
+            name: "gqa_attn_tsa_xla_b2_n384".to_string(),
+            file: "gqa_attn_tsa_xla_b2_n384.hlo.txt".to_string(),
+            stage: "attn_tsa_xla".to_string(),
+            params,
+            inputs: sm.inputs.iter().map(&cvt).collect(),
+            outputs: sm.outputs.iter().map(&cvt).collect(),
+            untupled: false,
+        });
+    });
+    let holes = r.with_code(E_GRID_HOLE);
+    assert_eq!(holes.len(), 2, "{}", r.render());
+    assert!(
+        holes.iter().all(|d| d.subject == "attn_tsa_xla"),
+        "{}",
+        r.render()
+    );
+    // only the grid check fires — the synthesized artifact is shape-clean
+    assert!(!r.has_code(E_SHAPE), "{}", r.render());
+}
+
+#[test]
+fn mutation_duplicate_artifact_is_e_dup() {
+    let r = mutated(|m| {
+        let mm = m.models.get_mut("gqa").unwrap();
+        let dup = mm.artifacts[0].clone();
+        mm.artifacts.push(dup);
+    });
+    assert!(r.has_code(E_DUP), "{}", r.render());
+}
+
+#[test]
+fn mutation_overlapping_weight_offsets_is_e_weight_overlap() {
+    let r = mutated(|m| {
+        let mm = m.models.get_mut("gqa").unwrap();
+        // second weight starts inside the first's extent
+        mm.weights[1].offset = mm.weights[0].offset + 1;
+    });
+    assert!(r.has_code(E_WEIGHT_OVERLAP), "{}", r.render());
+}
+
+#[test]
+fn mutation_wrong_weight_shape_is_e_weight_shape() {
+    let r = mutated(|m| {
+        let mm = m.models.get_mut("gqa").unwrap();
+        mm.weights[0].shape = vec![2048, 129]; // embed.weight is [2048, 128]
+    });
+    assert!(r.has_code(E_WEIGHT_SHAPE), "{}", r.render());
+}
+
+#[test]
+fn mutation_missing_weight_is_e_weight_set() {
+    let r = mutated(|m| {
+        let mm = m.models.get_mut("gqa").unwrap();
+        mm.weights.retain(|w| w.name != "lm_head");
+    });
+    assert!(r.has_code(E_WEIGHT_SET), "{}", r.render());
+    assert!(
+        r.with_code(E_WEIGHT_SET)
+            .iter()
+            .any(|d| d.subject == "lm_head"),
+        "{}",
+        r.render()
+    );
+}
+
+#[test]
+fn mutation_overflowing_shape_is_e_overflow_not_a_panic() {
+    let r = mutated(|m| {
+        let a = art_mut(m, "lm_head");
+        a.outputs[0].shape = vec![usize::MAX, 2];
+    });
+    assert!(r.has_code(E_OVERFLOW), "{}", r.render());
+}
+
+#[test]
+fn mutation_nondivisible_gqa_heads_is_e_gqa() {
+    let r = mutated(|m| {
+        m.models.get_mut("gqa").unwrap().n_kv_heads = 3; // 8 % 3 != 0
+    });
+    assert!(r.has_code(E_GQA), "{}", r.render());
+}
+
+#[test]
+fn mutation_zero_dim_is_e_config() {
+    let r = mutated(|m| {
+        m.models.get_mut("gqa").unwrap().d_model = 0;
+    });
+    assert!(r.has_code(E_CONFIG), "{}", r.render());
+}
+
+#[test]
+fn mutation_broken_feedback_state_is_e_feedback() {
+    let r = mutated(|m| {
+        let a = art_mut(m, "kv_append_dev");
+        a.outputs[0].shape = vec![131_073]; // input kv_state stays 131072
+    });
+    assert!(r.has_code(E_FEEDBACK), "{}", r.render());
+}
+
+#[test]
+fn mutation_cross_stage_state_handoff_is_e_feedback() {
+    // state_to_kv consumes the state prefill_extend_dev produced; shrink
+    // the producer's output (and its own feed-back input, so only the
+    // cross-stage check distinguishes this corruption class).
+    let r = mutated(|m| {
+        let a = art_mut(m, "prefill_extend_dev");
+        let state_in = a
+            .inputs
+            .iter_mut()
+            .find(|t| t.name == "state")
+            .unwrap();
+        state_in.shape = vec![137_000];
+        a.outputs[0].shape = vec![137_000];
+    });
+    assert!(r.has_code(E_FEEDBACK), "{}", r.render());
+}
+
+#[test]
+fn mutation_ntop_above_lmax_is_e_ntop() {
+    let r = mutated(|m| {
+        let a = art_mut(m, "layer_step_dense_dev_batch");
+        a.params.insert("n_top".to_string(), 257); // l_max is 256
+    });
+    assert!(r.has_code(E_NTOP), "{}", r.render());
+}
+
+#[test]
+fn mutation_future_contract_version_is_e_version() {
+    let r = mutated(|m| {
+        m.contract_version = Some(2);
+    });
+    assert!(r.has_code(E_VERSION), "{}", r.render());
+}
+
+#[test]
+fn missing_contract_version_warns_but_passes() {
+    let r = mutated(|m| {
+        m.contract_version = None;
+    });
+    assert!(!r.has_errors(), "{}", r.render());
+    assert!(r.has_code(W_NO_VERSION), "{}", r.render());
+}
+
+#[test]
+fn unknown_keys_error_only_under_strict_schema() {
+    let mut m = fixture();
+    m.unknown_keys.push("models.gqa.artifacts[0].donate".to_string());
+    let lax = check_manifest(&m, false);
+    assert!(!lax.has_errors(), "{}", lax.render());
+    assert!(lax.has_code(W_UNKNOWN_KEY), "{}", lax.render());
+    let strict = check_manifest(&m, true);
+    assert!(strict.has_code(E_UNKNOWN_KEY), "{}", strict.render());
+    assert!(strict.has_errors());
+}
+
+#[test]
+fn unknown_stage_is_a_warning_not_an_error() {
+    let r = mutated(|m| {
+        art_mut(m, "attn_tsa_pallas").stage = "attn_tsa_triton".to_string();
+    });
+    // forward-compatible: an unknown stage warns; but removing the pallas
+    // artifact from its grid group must not error either (1-value axes)
+    assert!(r.has_code(W_UNKNOWN_STAGE), "{}", r.render());
+    assert!(!r.has_errors(), "{}", r.render());
+}

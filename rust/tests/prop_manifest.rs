@@ -1,0 +1,98 @@
+//! Parser-totality property: `Manifest::parse_str` never panics.
+//!
+//! Malformed input must surface as `Err` with a field path — never as a
+//! panic — because the parser runs at server startup on a file python
+//! wrote (`runtime::manifest` module docs).  Two input distributions:
+//! JSON-flavored garbage (exercises the recursive descent paths) and
+//! single-span corruptions of a *valid* manifest (the "one keystroke
+//! from valid" inputs where a trusting parser indexes past the end).
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
+
+use prhs::runtime::manifest::Manifest;
+use prhs::util::prop::{gen, Prop};
+
+/// A small but fully-populated valid manifest document.
+fn valid_doc() -> String {
+    r#"{
+      "version": 1,
+      "contract_version": 1,
+      "models": {
+        "m": {
+          "config": {"name":"m","n_layers":2,"d_model":8,"n_heads":2,
+                     "n_kv_heads":2,"head_dim":4,"d_ff":16,
+                     "vocab_size":32,"rope_base":10000.0,
+                     "rms_eps":1e-5,"seed":1,"params_estimate":100},
+          "weights_blob": "w.bin",
+          "weights": [
+             {"name":"embed.weight","shape":[32,8],"offset":0},
+             {"name":"lm_head","shape":[8,32],"offset":256}
+          ],
+          "artifacts": [
+             {"name":"m_embed_b1","file":"e.hlo.txt",
+              "stage":"embed","params":{"batch":1},
+              "inputs":[{"name":"tokens","dtype":"int32","shape":[1]},
+                        {"name":"embed_w","dtype":"float32","shape":[32,8]}],
+              "outputs":[{"name":"hidden","dtype":"float32","shape":[1,8]}]},
+             {"name":"m_state_to_kv_l8","file":"s.hlo.txt",
+              "stage":"state_to_kv","params":{"l_max":8},
+              "inputs":[{"name":"state","dtype":"float32","shape":[200]}],
+              "outputs":[{"name":"kv_state","dtype":"float32","shape":[128]}],
+              "untupled":true}
+          ]
+        }
+      }
+    }"#
+    .to_string()
+}
+
+/// Run the parser on `doc`, converting any panic into a property failure
+/// that `Prop::forall` reports with the offending input.
+fn parses_without_panic(doc: &str) -> Result<(), String> {
+    let doc = doc.to_string();
+    match catch_unwind(AssertUnwindSafe(move || {
+        let _ = Manifest::parse_str(&doc, PathBuf::from("."));
+    })) {
+        Ok(()) => Ok(()),
+        Err(_) => Err("parser panicked".to_string()),
+    }
+}
+
+#[test]
+fn valid_document_parses() {
+    let m = Manifest::parse_str(&valid_doc(), PathBuf::from(".")).unwrap();
+    assert_eq!(m.contract_version, Some(1));
+    assert!(m.model("m").is_ok());
+}
+
+#[test]
+fn prop_parser_is_total_on_garbage() {
+    Prop::new(400, 0x9a12_fa11).forall(
+        |rng| gen::json_garbage(rng, 256),
+        |doc| parses_without_panic(doc),
+    );
+}
+
+#[test]
+fn prop_parser_is_total_on_corrupted_valid_doc() {
+    let doc = valid_doc();
+    Prop::new(400, 0xc0_44u64).forall(
+        |rng| gen::mutate_text(rng, &doc),
+        |doc| parses_without_panic(doc),
+    );
+}
+
+#[test]
+fn prop_parser_is_total_on_corrupted_golden_fixture() {
+    // The python↔rust golden is not itself a manifest — which is the
+    // point: structurally rich JSON that must error, not panic.
+    let golden = include_str!(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/../python/tests/data/contract_golden.json"
+    ));
+    Prop::new(200, 0x601d_e4u64).forall(
+        |rng| gen::mutate_text(rng, golden),
+        |doc| parses_without_panic(doc),
+    );
+}
