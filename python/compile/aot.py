@@ -37,7 +37,10 @@ I32 = jnp.int32
 # and checked by `prhs check` / `Engine` strict startup.  Bump on any
 # schema or shape-algebra change, together with
 # rust/src/analysis/mod.rs::SUPPORTED_CONTRACT_VERSION.
-CONTRACT_VERSION = 1
+# v2: paged device KV stage family (layer_step_dense_dev_paged /
+# kv_append_dev_paged / state_to_kv_paged) with "paged"/"block"/
+# "max_blocks" manifest params.
+CONTRACT_VERSION = 2
 
 
 def to_hlo_text(lowered, return_tuple: bool = True) -> str:
@@ -396,6 +399,99 @@ def iter_model_stage_plans(cfg, art: ArtifactConfig, quick: bool = False):
                     "untupled": True,
                 }
 
+    # Paged device decode KV (DESIGN.md §2): one shared
+    # [2, nl, max_blocks, H, block, d] pool + per-sequence block tables
+    # fed as a runtime operand, replacing the tile-per-sequence mirrors —
+    # sequences grow block-at-a-time with no re-home copy.  All three
+    # stages carry manifest params "paged": true, "block": B,
+    # "max_blocks": M so `prhs check` can enforce the pool geometry
+    # (block | l_max, M·B ≥ l_max) and the engine can size the pool.
+    #   * layer_step_dense_dev_paged — batched dense/full-scoring step
+    #     gathering each slot's K/V through its block table in-graph;
+    #     same compute core + in-graph top-k as the tile batch stage, so
+    #     paged mode is bitwise identical by construction; tupled.
+    #   * kv_append_dev_paged — valid-gated append of each slot's
+    #     [nl, H, d] rows at a flat pool slot (block·B + offset); one
+    #     artifact per batch tile serves EVERY context length (no l_max
+    #     axis — the point of paging); untupled.
+    #   * state_to_kv_paged — scatter a dense KV tile (prefill handoff
+    #     or host seed) into the blocks named by a table, n_blocks-gated
+    #     so unallocated tail entries never write; untupled.
+    if art.device_stage and art.dev_block and art.dev_max_blocks:
+        blk, mxb = art.dev_block, art.dev_max_blocks
+        p_len = M.kv_pool_len(cfg, blk, mxb)
+        sbs = art.dev_batch_tiles if not quick else art.dev_batch_tiles[:1]
+        for sb in sbs:
+            for l_max in ctxs:
+                mb = l_max // blk
+                n_top = min(l_max, art.dev_topk)
+
+                def ddp(hidden, pos, layer, length, kv_pool, tables, *ws,
+                        _l=l_max, _s=sb, _k=n_top):
+                    return M.layer_step_dense_dev_paged(
+                        hidden, pos, layer, length, kv_pool, tables, *ws,
+                        cfg=cfg, l_max=_l, s=_s, n_top=_k, block=blk,
+                        max_blocks=mxb)
+                yield {
+                    "name": (f"{cfg.name}_layer_step_dense_dev_paged"
+                             f"_s{sb}_l{l_max}"),
+                    "stage": "layer_step_dense_dev_paged",
+                    "fn": ddp,
+                    "arg_specs": [("hidden", spec([sb, dm])),
+                                  ("pos", spec([sb], I32)),
+                                  ("layer", spec([], I32)),
+                                  ("length", spec([sb], I32)),
+                                  ("kv_pool", spec([p_len])),
+                                  ("block_tables", spec([sb, mb], I32))]
+                                 + lw,
+                    "out_names": ["hidden", "k_new", "v_new", "probs",
+                                  "top_idx", "top_val"],
+                    "params": {"model": cfg.name, "batched": sb,
+                               "l_max": l_max, "n_top": n_top,
+                               "block": blk, "max_blocks": mxb,
+                               "paged": True},
+                }
+
+            def kap(kv_pool, k_new, v_new, slot_map, valid, _s=sb):
+                return M.kv_append_dev_paged(
+                    kv_pool, k_new, v_new, slot_map, valid, cfg=cfg,
+                    s=_s, block=blk, max_blocks=mxb)
+            yield {
+                "name": f"{cfg.name}_kv_append_dev_paged_s{sb}",
+                "stage": "kv_append_dev_paged",
+                "fn": kap,
+                "arg_specs": [("kv_pool", spec([p_len])),
+                              ("k_new", spec([sb, cfg.n_layers, H, d])),
+                              ("v_new", spec([sb, cfg.n_layers, H, d])),
+                              ("slot_map", spec([sb], I32)),
+                              ("valid", spec([sb]))],
+                "out_names": ["kv_pool"],
+                "params": {"model": cfg.name, "batched": sb,
+                           "block": blk, "max_blocks": mxb,
+                           "paged": True},
+                "untupled": True,
+            }
+
+        for l_max in ctxs:
+            def s2kp(kv_state, kv_pool, table, n_blocks, _l=l_max):
+                return M.state_to_kv_paged(
+                    kv_state, kv_pool, table, n_blocks, cfg=cfg,
+                    l_max=_l, block=blk, max_blocks=mxb)
+            yield {
+                "name": f"{cfg.name}_state_to_kv_paged_l{l_max}",
+                "stage": "state_to_kv_paged",
+                "fn": s2kp,
+                "arg_specs": [("kv_state", spec([M.kv_state_len(cfg, l_max)])),
+                              ("kv_pool", spec([p_len])),
+                              ("block_table", spec([l_max // blk], I32)),
+                              ("n_blocks", spec([], I32))],
+                "out_names": ["kv_pool"],
+                "params": {"model": cfg.name, "l_max": l_max,
+                           "block": blk, "max_blocks": mxb,
+                           "paged": True},
+                "untupled": True,
+            }
+
     # Device-resident chunked prefill: same (chunk, l_max) grid, but the
     # whole cached context rides in one flat loop-carried state array so
     # chunk i's output buffer is chunk i+1's input with zero host traffic
@@ -528,6 +624,9 @@ def main() -> None:
         prefill_buckets=[256],
         extend_chunk_buckets=[64],
         dev_batch_tiles=[4],
+        # Tiny paged pool (8 × 64 = 512 slots ≥ the 256 ctx bucket) so
+        # the paged differential column runs on the GQA geometry too.
+        dev_max_blocks=8,
     )
     bg = Builder(args.out_dir)
     print(f"[aot] model={gqa.name} (GQA parity, ~{gqa.params_estimate/1e6:.1f}M params)")

@@ -81,6 +81,16 @@ class ArtifactConfig:
       (index, value) pairs instead of the ∝ L probs row.  Ties break
       toward the lower index — the same total order
       ``util::fx::top_k_indices`` pins on the rust side.
+    - ``dev_block`` / ``dev_max_blocks``: geometry of the *paged* device
+      KV pool (DESIGN.md §2): one shared ``[2, nl, max_blocks, H, block,
+      d]`` pool per model with per-sequence block tables fed as a runtime
+      operand.  ``block`` must divide every ctx bucket and ``max_blocks ·
+      block`` must cover the largest one (``prhs check`` enforces both).
+      The paged stage family (``layer_step_dense_dev_paged`` /
+      ``kv_append_dev_paged`` / ``state_to_kv_paged``) is lowered when
+      both are non-zero and recorded with manifest params ``"paged":
+      true``, ``"block"``, ``"max_blocks"``; set ``dev_block = 0`` to
+      reproduce a tile-only artifact set.
     """
 
     batch_tiles: List[int] = field(default_factory=lambda: [1, 8, 16])
@@ -91,6 +101,8 @@ class ArtifactConfig:
     device_stage: bool = True
     dev_batch_tiles: List[int] = field(default_factory=lambda: [4, 8])
     dev_topk: int = 160
+    dev_block: int = 64
+    dev_max_blocks: int = 64
 
 
 # The end-to-end serving model (~8.6M params): small enough that a decode

@@ -28,7 +28,12 @@ from compile.config import CONFIGS, ArtifactConfig, config_dict
 # produce a coincidentally-correct shape.
 ART_CFG = dict(batch_tiles=[1], sel_buckets=[192], ctx_buckets=[256],
                prefill_buckets=[256], extend_chunk_buckets=[64],
-               dev_batch_tiles=[4])
+               dev_batch_tiles=[4],
+               # Paged pool geometry: block 32 (divides the 256 bucket,
+               # distinct from every head/layer dim) and a deliberately
+               # odd max_blocks so a max_blocks <-> table-width swap
+               # can't produce a coincidentally-correct shape.
+               dev_block=32, dev_max_blocks=9)
 OP_GRID = dict(batches=[1], sels=[192], ctxs=[256], pallas_sels=[192])
 
 

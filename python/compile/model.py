@@ -356,6 +356,121 @@ def kv_slot_write_dev(kv_states, state, slot, *, cfg: ModelConfig,
     return (jax.lax.dynamic_update_slice(kv_states, state, (slot * kv,)),)
 
 
+# ---------------------------------------------------------------------------
+# paged device-resident decode KV (DESIGN.md §2): instead of one dense
+# [2, nl, H, l_max, d] tile per sequence homed in an l_max bucket, all
+# sequences share one [2, nl, max_blocks, H, block, d] pool; each
+# sequence owns a *block table* of physical block ids fed to the graph
+# as a runtime operand.  One physical block id covers every layer and
+# both K/V planes (the vLLM layout), so sequences grow block-at-a-time
+# with no re-home copy and groups never pad whole tiles.  The rust side
+# owns block accounting (`kvcache::BlockAllocator`).
+
+
+def kv_pool_len(cfg: ModelConfig, block: int, max_blocks: int) -> int:
+    """Flat f32 length of the shared paged KV pool:
+    [2 (K/V), n_layers, max_blocks, n_heads, block, head_dim] —
+    GQA-expanded like the tile mirror, so pool rows and host page-pool
+    rows stay bitwise identical.  The rust engine computes the same
+    value from the manifest's ``block`` / ``max_blocks`` params when
+    sizing the pool allocation."""
+    return (2 * cfg.n_layers * max_blocks * cfg.n_heads * block
+            * cfg.head_dim)
+
+
+def layer_step_dense_dev_paged(
+    hidden, pos, layer, length, kv_pool, block_tables,
+    attn_norm_w, wq, wk, wv, wo, mlp_norm_w, w_gate, w_up, w_down,
+    *, cfg: ModelConfig, l_max: int, s: int, n_top: int, block: int,
+    max_blocks: int,
+):
+    """Paged `layer_step_dense_dev_batch`: one dispatch serves up to
+    ``s`` sequences whose KV lives scattered across the shared pool.
+    ``block_tables`` [s, l_max / block] i32 maps each slot's logical
+    block j to a physical pool block; the gather reassembles the dense
+    [H, l_max, d] context in-graph, so the compute core (and therefore
+    the numerics) is exactly `_dense_core` — paged mode is bitwise
+    identical to the tile path by construction.
+
+    Unused table entries (beyond ⌈length/block⌉) may hold any id: the
+    in-length mask zeroes their scores, and `jnp.take`'s clamping keeps
+    out-of-range ids finite.  Ragged slots follow the batch-stage
+    convention (zero hidden/pos/length, outputs ignored).  Returns the
+    `layer_step_dense_dev_batch` 6-tuple including the in-graph top-k
+    pair (same lower-index tie order).
+    """
+    nl, H, d = cfg.n_layers, cfg.n_heads, cfg.head_dim
+    mb = l_max // block
+    pool = kv_pool.reshape(2, nl, max_blocks, H, block, d)
+    plane = jax.lax.dynamic_index_in_dim(
+        pool, layer, axis=1, keepdims=False)  # [2, M, H, block, d]
+
+    def gather_one(table):
+        seg = jnp.take(plane, table, axis=1)       # [2, mb, H, block, d]
+        seg = seg.transpose(0, 2, 1, 3, 4)          # [2, H, mb, block, d]
+        return seg.reshape(2, H, mb * block, d)
+
+    ctx = jax.vmap(gather_one)(block_tables)        # [s, 2, H, l_max, d]
+    h1, k_new, v_new, probs = _dense_core(
+        hidden, pos, ctx[:, 0], ctx[:, 1], length,
+        attn_norm_w, wq, wk, wv, wo, mlp_norm_w, w_gate, w_up, w_down,
+        cfg=cfg, l_max=l_max)
+    top_val, top_idx = jax.lax.top_k(probs[:, :, :l_max], n_top)
+    return h1, k_new, v_new, probs, top_idx.astype(jnp.float32), top_val
+
+
+def kv_append_dev_paged(kv_pool, k_new, v_new, slot_map, valid, *,
+                        cfg: ModelConfig, s: int, block: int,
+                        max_blocks: int):
+    """Paged `kv_append_dev_batch`: write each valid slot's [nl, H, d]
+    K/V rows at its flat pool slot ``slot_map[j] = block_id · block +
+    offset`` (block id and in-block offset split in-graph) in one
+    dispatch.  ``valid`` [s] gates per slot exactly like the tile batch
+    append, so ragged tails leave the pool bitwise untouched.  Unlike
+    the tile stages this artifact has no l_max axis at all — one append
+    artifact per batch tile serves every context length, which is the
+    point of paging.  Untupled: the output replaces the pool buffer.
+    """
+    nl, H, d = cfg.n_layers, cfg.n_heads, cfg.head_dim
+    pool = kv_pool.reshape(2, nl, max_blocks, H, block, d)
+    for j in range(s):
+        b_id = slot_map[j] // block
+        off = slot_map[j] % block
+        rows = jnp.stack([k_new[j], v_new[j]])      # [2, nl, H, d]
+        rows = rows[:, :, None, :, None, :]          # [2, nl, 1, H, 1, d]
+        upd = jax.lax.dynamic_update_slice(
+            pool, rows, (0, 0, b_id, 0, off, 0))
+        pool = jnp.where(valid[j] > 0, upd, pool)
+    return (pool.reshape(-1),)
+
+
+def state_to_kv_paged(kv_state, kv_pool, block_table, n_blocks, *,
+                      cfg: ModelConfig, l_max: int, block: int,
+                      max_blocks: int):
+    """Scatter one dense KV tile (``kv_state`` [kv_state_len(l_max)],
+    i.e. the `state_to_kv` output layout — from the in-device prefill
+    handoff or a host-pool seed upload) into the paged pool at the
+    blocks named by ``block_table`` [l_max / block] i32.  ``n_blocks``
+    gates the static scatter loop so table entries past ⌈len/block⌉
+    (which may be unallocated ids) never touch the pool.  This is the
+    paged membership-change primitive (seed / handoff); never on the
+    per-step hot path.  Untupled: the output replaces the pool buffer.
+    """
+    nl, H, d = cfg.n_layers, cfg.n_heads, cfg.head_dim
+    mb = l_max // block
+    kv = nl * H * l_max * d
+    k_t = kv_state[:kv].reshape(nl, H, mb, block, d)
+    v_t = kv_state[kv:2 * kv].reshape(nl, H, mb, block, d)
+    pool = kv_pool.reshape(2, nl, max_blocks, H, block, d)
+    for j in range(mb):
+        seg = jnp.stack([k_t[:, :, j], v_t[:, :, j]])  # [2, nl, H, block, d]
+        seg = seg[:, :, None]                          # [2, nl, 1, H, blk, d]
+        upd = jax.lax.dynamic_update_slice(
+            pool, seg, (0, 0, block_table[j], 0, 0, 0))
+        pool = jnp.where(j < n_blocks, upd, pool)
+    return (pool.reshape(-1),)
+
+
 def lm_head(hidden, final_norm_w, head_w, *, cfg: ModelConfig):
     return rmsnorm(hidden, final_norm_w, cfg.rms_eps) @ head_w
 

@@ -185,9 +185,48 @@ def test_quick_build_in_tmp(tmp_path):
         sb, lb = key(a)
         assert a["outputs"][0]["shape"] == \
             [sb * M.kv_state_len(small_cfg, lb)]
+    # paged decode residency (DESIGN.md §2): the paged stages are
+    # lowered with the pool geometry in their params, the dense stage
+    # gathers through a [batched, l_max/block] block table, and the
+    # append stage has NO l_max axis (one artifact serves every context
+    # length — the point of paging)
+    ddp = [a for a in arts if a["stage"] == "layer_step_dense_dev_paged"]
+    kap = [a for a in arts if a["stage"] == "kv_append_dev_paged"]
+    s2kp = [a for a in arts if a["stage"] == "state_to_kv_paged"]
+    assert ddp and kap and s2kp, \
+        "quick set must include the paged decode residency stages"
+    for a in ddp + kap + s2kp:
+        blk, mxb = a["params"]["block"], a["params"]["max_blocks"]
+        assert a["params"]["paged"] is True
+        pool_in = next(i for i in a["inputs"] if i["name"] == "kv_pool")
+        assert pool_in["shape"] == [M.kv_pool_len(small_cfg, blk, mxb)]
+    for a in ddp:
+        assert "untupled" not in a  # 6 host-bound outputs: stays tupled
+        sb, lb = key(a)
+        blk = a["params"]["block"]
+        assert lb % blk == 0 and a["params"]["max_blocks"] * blk >= lb
+        bt = next(i for i in a["inputs"] if i["name"] == "block_tables")
+        assert bt["shape"] == [sb, lb // blk] and bt["dtype"] == "int32"
+    assert {a["params"]["l_max"] for a in ddp} <= \
+        {a["params"]["l_max"] for a in s2kp}, \
+        "every paged dense bucket needs a seed/handoff bridge"
+    for a in kap:
+        assert a.get("untupled") is True
+        assert "l_max" not in a["params"]
+        sm = next(i for i in a["inputs"] if i["name"] == "slot_map")
+        assert sm["shape"] == [a["params"]["batched"]]
+        assert sm["dtype"] == "int32"
+    for a in s2kp:
+        assert a.get("untupled") is True
+        lb, blk = a["params"]["l_max"], a["params"]["block"]
+        bt = next(i for i in a["inputs"] if i["name"] == "block_table")
+        assert bt["shape"] == [lb // blk] and bt["dtype"] == "int32"
+        kv_in = next(i for i in a["inputs"] if i["name"] == "kv_state")
+        assert kv_in["shape"] == [M.kv_state_len(small_cfg, lb)]
     # every other stage stays tupled (flag absent)
     untupled_stages = {"prefill_extend_dev", "kv_append_dev", "state_to_kv",
-                       "kv_append_dev_batch", "kv_slot_write_dev"}
+                       "kv_append_dev_batch", "kv_slot_write_dev",
+                       "kv_append_dev_paged", "state_to_kv_paged"}
     assert all("untupled" not in a
                for a in arts if a["stage"] not in untupled_stages)
     # interchange guard: every artifact's HLO text must round-trip

@@ -47,7 +47,7 @@ def test_golden_grids_match_generator(golden):
 def test_every_stage_present_exactly_once(golden):
     stages = [e["stage"] for e in golden["entries"]]
     assert len(stages) == len(set(stages)), "duplicate stage in fixture"
-    assert len(stages) == 16, stages
+    assert len(stages) == 19, stages
 
 
 def test_rebuilt_plans_match_golden_exactly(golden, rebuilt):
@@ -79,7 +79,8 @@ def test_feedback_stages_are_untupled_and_closed(golden):
     # Feed-back stages consume and produce the same buffer spec so the
     # output can be passed straight back as the next call's parameter.
     feedback = {"prefill_extend_dev", "kv_append_dev", "state_to_kv",
-                "kv_append_dev_batch", "kv_slot_write_dev"}
+                "kv_append_dev_batch", "kv_slot_write_dev",
+                "kv_append_dev_paged", "state_to_kv_paged"}
     seen = set()
     for e in golden["entries"]:
         if e["stage"] not in feedback:

@@ -808,6 +808,182 @@ def test_dense_dev_batch_decode_loop_matches_per_seq_loop(tiny_weights):
         t = t + 1
 
 
+# --- paged device-resident decode (layer_step_dense_dev_paged etc.) ---------
+
+
+def _pool_from_tiles(cfg, tiles, tables, block, max_blocks):
+    """Reference pool builder: scatter per-slot dense [2, nl, H, LM, d]
+    tiles into a [2, nl, M, H, block, d] pool at the blocks named by
+    each slot's table (the layout `kv_pool_len` documents)."""
+    pool = np.zeros((2, cfg.n_layers, max_blocks, cfg.n_heads, block,
+                     cfg.head_dim), np.float32)
+    for j, table in enumerate(tables):
+        for bi, phys in enumerate(table):
+            pool[:, :, phys] = tiles[j][:, :, :, bi * block:(bi + 1) * block]
+    return pool
+
+
+@pytest.mark.parametrize("cfg_name", ["tiny", "gqa"])
+def test_layer_step_dense_dev_paged_matches_batch(cfg_name, tiny_weights):
+    """The paged dense step gathering K/V through shuffled block tables
+    must equal the tile batch stage on the same logical KV — all six
+    outputs, bitwise (same compute core on the same reassembled
+    arrays), including the ragged tail's shape."""
+    cfg = TINY if cfg_name == "tiny" else GQA
+    w = tiny_weights if cfg_name == "tiny" else W.init_weights(cfg)
+    rng = np.random.default_rng(31)
+    nl, H, d, LM, S, NT = (cfg.n_layers, cfg.n_heads, cfg.head_dim, 12, 4, 6)
+    BLK, MXB = 4, 7  # mb = 3, deliberately != every model dim
+    kv = M.kv_state_len(cfg, LM)
+    lens = [9, 5, 0, 0]
+    states = rng.standard_normal((S, kv)).astype(np.float32)
+    tiles = states.reshape(S, 2, nl, H, LM, d)
+    tables = np.array([[6, 2, 5], [1, 4, 0], [3, 3, 3], [0, 0, 0]],
+                      np.int32)
+    pool = _pool_from_tiles(cfg, tiles, tables, BLK, MXB)
+    hid = rng.standard_normal((S, cfg.d_model)).astype(np.float32)
+    hid[2:] = 0.0
+    pos = np.array(lens, np.int32)
+    layer = 1
+    lw = [w[n] for n in W.layer_weight_names(layer)]
+    got = M.layer_step_dense_dev_paged(
+        hid, pos, np.int32(layer), pos, pool.reshape(-1), tables, *lw,
+        cfg=cfg, l_max=LM, s=S, n_top=NT, block=BLK, max_blocks=MXB)
+    want = M.layer_step_dense_dev_batch(
+        hid, pos, np.int32(layer), pos, states.reshape(-1), *lw,
+        cfg=cfg, l_max=LM, s=S, n_top=NT)
+    assert len(got) == len(want) == 6
+    for g, t in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(t))
+
+
+def test_kv_append_dev_paged_matches_reference_and_valid_gate(tiny_weights):
+    """The paged append must write exactly the (block, offset) cell the
+    flat slot names for valid slots and leave the rest of the pool —
+    and invalid slots — bitwise untouched."""
+    cfg = TINY
+    rng = np.random.default_rng(32)
+    nl, H, d, S = cfg.n_layers, cfg.n_heads, cfg.head_dim, 3
+    BLK, MXB = 4, 6
+    pool = rng.standard_normal(
+        (2, nl, MXB, H, BLK, d)).astype(np.float32)
+    kn = rng.standard_normal((S, nl, H, d)).astype(np.float32)
+    vn = rng.standard_normal((S, nl, H, d)).astype(np.float32)
+    # slot 0 -> block 5 offset 1, slot 1 -> block 2 offset 3, slot 2 gated
+    slot_map = np.array([5 * BLK + 1, 2 * BLK + 3, 0], np.int32)
+    valid = np.array([1.0, 1.0, 0.0], np.float32)
+    (out,) = M.kv_append_dev_paged(
+        pool.reshape(-1), kn, vn, slot_map, valid, cfg=cfg, s=S,
+        block=BLK, max_blocks=MXB)
+    want = pool.copy()
+    for j in range(2):
+        b, off = divmod(int(slot_map[j]), BLK)
+        want[0, :, b, :, off] = kn[j]
+        want[1, :, b, :, off] = vn[j]
+    np.testing.assert_array_equal(
+        np.asarray(out).reshape(want.shape), want)
+
+
+def test_state_to_kv_paged_scatters_tile_and_gates_tail(tiny_weights):
+    """The seed/handoff bridge must scatter exactly ``n_blocks`` tile
+    segments to the table's blocks; tail table entries (unallocated ids
+    the engine never cleared) must not touch the pool."""
+    cfg = TINY
+    rng = np.random.default_rng(33)
+    nl, H, d, LM = cfg.n_layers, cfg.n_heads, cfg.head_dim, 12
+    BLK, MXB = 4, 6
+    state = rng.standard_normal(M.kv_state_len(cfg, LM)).astype(np.float32)
+    tile = state.reshape(2, nl, H, LM, d)
+    pool = rng.standard_normal(
+        (2, nl, MXB, H, BLK, d)).astype(np.float32)
+    # 2 live blocks; the tail entry aliases a LIVE block (worst case:
+    # an unallocated id the engine left stale) and must be ignored
+    table = np.array([4, 1, 4], np.int32)
+    (out,) = M.state_to_kv_paged(
+        state, pool.reshape(-1), table, np.int32(2), cfg=cfg, l_max=LM,
+        block=BLK, max_blocks=MXB)
+    want = pool.copy()
+    for j, phys in enumerate([4, 1]):
+        want[:, :, phys] = tile[:, :, :, j * BLK:(j + 1) * BLK]
+    np.testing.assert_array_equal(
+        np.asarray(out).reshape(want.shape), want)
+
+
+def test_paged_decode_loop_matches_batch_loop(tiny_weights):
+    """Engine-flow parity for paging: a 2-slot group driven through
+    layer_step_dense_dev_paged + kv_append_dev_paged for several steps —
+    crossing a block boundary mid-loop — must reproduce the tile batch
+    loop bitwise, and the final pool contents must equal the tile
+    mirrors under the block tables."""
+    cfg, w = TINY, tiny_weights
+    rng = np.random.default_rng(34)
+    nl, H, d, LM, S, steps = (cfg.n_layers, cfg.n_heads, cfg.head_dim,
+                              12, 2, 3)
+    BLK, MXB = 4, 8
+    kv = M.kv_state_len(cfg, LM)
+    lens = [6, 4]
+    group = np.zeros((S, kv), np.float32)
+    for j in range(S):
+        Kj = np.zeros((nl, H, LM, d), np.float32)
+        Vj = np.zeros_like(Kj)
+        Kj[:, :, :lens[j]] = rng.standard_normal(
+            (nl, H, lens[j], d)).astype(np.float32)
+        Vj[:, :, :lens[j]] = rng.standard_normal(
+            (nl, H, lens[j], d)).astype(np.float32)
+        group[j] = np.concatenate([Kj.reshape(-1), Vj.reshape(-1)])
+    tables = np.array([[5, 1, 4], [2, 7, 6]], np.int32)
+    pool = _pool_from_tiles(cfg, group.reshape(S, 2, nl, H, LM, d),
+                            tables, BLK, MXB)
+    hid = rng.standard_normal((S, cfg.d_model)).astype(np.float32)
+    hid_b = hid.copy()
+    t = np.array(lens, np.int32)
+    for _ in range(steps):
+        kn_rows = np.zeros((S, nl, H, d), np.float32)
+        vn_rows = np.zeros((S, nl, H, d), np.float32)
+        for layer in range(nl):
+            lw = [w[n] for n in W.layer_weight_names(layer)]
+            hp, knp, vnp, prp, tip, tvp = M.layer_step_dense_dev_paged(
+                hid, t, np.int32(layer), t, pool.reshape(-1), tables,
+                *lw, cfg=cfg, l_max=LM, s=S, n_top=4, block=BLK,
+                max_blocks=MXB)
+            hb, knb, vnb, prb, tib, tvb = M.layer_step_dense_dev_batch(
+                hid_b, t, np.int32(layer), t, group.reshape(-1), *lw,
+                cfg=cfg, l_max=LM, s=S, n_top=4)
+            for g, b in zip((hp, knp, vnp, prp, tip, tvp),
+                            (hb, knb, vnb, prb, tib, tvb)):
+                np.testing.assert_array_equal(np.asarray(g), np.asarray(b))
+            kn_rows[:, layer] = np.asarray(knp)
+            vn_rows[:, layer] = np.asarray(vnp)
+            hid = np.asarray(hp)
+            hid_b = hid.copy()
+        # flat slot = physical block of t's logical block + in-block off
+        slot_map = np.array(
+            [tables[j][t[j] // BLK] * BLK + t[j] % BLK for j in range(S)],
+            np.int32)
+        (p2,) = M.kv_append_dev_paged(
+            pool.reshape(-1), kn_rows, vn_rows, slot_map,
+            np.ones(S, np.float32), cfg=cfg, s=S, block=BLK,
+            max_blocks=MXB)
+        pool = np.asarray(p2).reshape(pool.shape)
+        (g2,) = M.kv_append_dev_batch(
+            group.reshape(-1), kn_rows, vn_rows, t,
+            np.ones(S, np.float32), cfg=cfg, l_max=LM, s=S)
+        group = np.asarray(g2).reshape(S, kv)
+        t = t + 1
+    # final pool gathers back to the tile mirrors, block for block
+    for j in range(S):
+        tile = group[j].reshape(2, nl, H, LM, d)
+        for bi, phys in enumerate(tables[j]):
+            np.testing.assert_array_equal(
+                pool[:, :, phys],
+                tile[:, :, :, bi * BLK:(bi + 1) * BLK])
+
+
+def test_kv_pool_len_layout():
+    assert M.kv_pool_len(TINY, 4, 6) == (
+        2 * TINY.n_layers * 6 * TINY.n_heads * 4 * TINY.head_dim)
+
+
 def test_dev_state_len_layout():
     assert M.dev_state_len(TINY, 16) == (
         2 * TINY.n_layers * TINY.n_heads * 16 * TINY.head_dim

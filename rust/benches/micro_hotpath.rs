@@ -209,23 +209,34 @@ fn main() -> anyhow::Result<()> {
         use prhs::model::decode_staging as ds;
         let (nl, dmod, l2k, sb, ntop) =
             (4usize, 256usize, 2048usize, 8usize, 160usize);
+        // paged-pool geometry at the same small-model scale: the table
+        // term a paged dense call adds over the tile batch call, and
+        // the allocation-only growth costs the paged columns track
+        let (blk, mb) = (32usize, 2048usize / 32);
         let staging = format!(
             "{{\"l_max\":{l2k},\"n_sel\":160,\"batched\":{sb},\
-             \"n_top\":{ntop},\
+             \"n_top\":{ntop},\"block\":{blk},\
              \"dense_host_call_bytes\":{},\"dense_dev_call_bytes\":{},\
              \"dense_dev_batch_call_bytes\":{},\
+             \"dense_dev_paged_call_bytes\":{},\
              \"probs_row_bytes\":{},\"probs_topk_bytes\":{},\
              \"append_dev_bytes\":{},\"append_dev_batch_bytes\":{},\
-             \"mirror_seed_bytes\":{},\
+             \"append_dev_paged_bytes\":{},\
+             \"mirror_seed_bytes\":{},\"paged_seed_bytes\":{},\
+             \"paged_handoff_bytes\":{},\
              \"sparse_call_bytes\":{}}}",
             ds::dense_host_call_bytes(1, h, h, d, dmod, l2k, true),
             ds::dense_dev_call_bytes(dmod, h, h, d, l2k, true),
             ds::dense_dev_batch_call_bytes(sb, dmod, h, d),
+            ds::dense_dev_paged_call_bytes(sb, dmod, h, d, mb),
             ds::probs_row_bytes(sb, h, l2k),
             ds::probs_topk_bytes(sb, h, ntop),
             ds::append_dev_bytes(nl, h, d),
             ds::append_dev_batch_bytes(sb, nl, h, d),
+            ds::append_dev_paged_bytes(sb, nl, h, d),
             ds::mirror_seed_bytes(nl, h, l2k, d),
+            ds::paged_seed_bytes(nl, h, l2k, d, mb),
+            ds::paged_handoff_bytes(mb),
             ds::sparse_call_bytes(1, h, h, d, dmod, 160, false),
         );
         let json = format!(

@@ -43,6 +43,18 @@ struct PathRun {
     /// Retrieval/probe probs-download bytes — O(N_sel) per retrieval
     /// under the batched path's in-graph top-k, ∝ L on full-row paths.
     probs_bytes: u64,
+    /// Mirror re-home traffic (tile reseeds after a dropped device
+    /// mirror).  The paged pool grows by allocation, never by copy, so
+    /// this column is pinned to 0 whenever paged artifacts exist.
+    rehome_bytes: u64,
+    /// Live paged-pool blocks at run end (before release) — the
+    /// Θ(live tokens / block) footprint signal.  0 on tile/host paths.
+    blocks_live: u64,
+    /// Allocated-but-unclaimed slots across live mirror groups at run
+    /// end — the whole-tile padding waste the paged layout eliminates
+    /// (its analogue is < `block` rows per sequence, inside
+    /// `blocks_live`).
+    pad_slots: u64,
 }
 
 const DECODE_STEPS: usize = 8;
@@ -74,12 +86,13 @@ fn main() -> anyhow::Result<()> {
     let has_dev = !mm.buckets("prefill_extend_dev", "chunk").is_empty();
     let has_dev_decode =
         !mm.buckets("layer_step_dense_dev", "l_max").is_empty();
+    let has_paged = !mm.buckets("kv_append_dev_paged", "batched").is_empty();
 
     println!("== prefill + decode residency scaling (chunk {chunk}) ==");
     let mut md = String::from(
         "## Prefill + decode residency scaling — device-resident vs host-staged vs recompute\n\n\
-         | L | dev ms | dev KB staged | dev decode KB | dev probs KB | dev dispatches | dev dense calls | host ms | host KB staged | host decode KB | host probs KB | host dense calls | recompute ms | recompute tokens |\n\
-         |---|---|---|---|---|---|---|---|---|---|---|---|---|---|\n",
+         | L | dev ms | dev KB staged | dev decode KB | dev probs KB | dev dispatches | dev dense calls | dev rehome KB | dev blocks live | dev pad slots | host ms | host KB staged | host decode KB | host probs KB | host dense calls | recompute ms | recompute tokens |\n\
+         |---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|\n",
     );
     let mut json_rows: Vec<String> = Vec::new();
     for &l in lens {
@@ -134,6 +147,9 @@ fn main() -> anyhow::Result<()> {
                 dense_dev_calls: engine.stats.decode_dense_dev_calls,
                 dev_dispatches: engine.stats.decode_dev_dispatches,
                 probs_bytes: engine.stats.decode_probs_bytes,
+                rehome_bytes: engine.stats.kv_rehome_bytes,
+                blocks_live: engine.stats.device_blocks_live,
+                pad_slots: engine.mirror_slot_usage().1 as u64,
             };
             engine.release(&mut seq);
             Ok(out)
@@ -172,7 +188,25 @@ fn main() -> anyhow::Result<()> {
                     "residency must not change how often full scoring runs"
                 );
             }
+            if has_paged {
+                // paged pool grows by allocation, never by copy
+                assert_eq!(
+                    d.rehome_bytes, 0,
+                    "paged device KV must do zero re-home copies"
+                );
+                assert_eq!(
+                    d.pad_slots, 0,
+                    "paged mirrors must not hold whole-tile group padding"
+                );
+                if can_decode {
+                    assert!(
+                        d.blocks_live > 0,
+                        "paged decode must leave a live block footprint"
+                    );
+                }
+            }
         }
+        assert_eq!(host.blocks_live, 0, "host path must not touch the pool");
         let (dev_ms, dev_kb, dev_dkb, dev_dc) = dev
             .map(|d| {
                 (d.ms, d.host_bytes / 1024, d.decode_bytes / 1024, d.dense_calls)
@@ -181,6 +215,9 @@ fn main() -> anyhow::Result<()> {
         let (dev_pkb, dev_disp) = dev
             .map(|d| (d.probs_bytes / 1024, d.dev_dispatches))
             .unwrap_or((0, 0));
+        let (dev_rkb, dev_blocks, dev_pads) = dev
+            .map(|d| (d.rehome_bytes / 1024, d.blocks_live, d.pad_slots))
+            .unwrap_or((0, 0, 0));
         println!(
             "  L {l:5}: dev {dev_ms:8.1} ms / {dev_kb:7} KB (+{dev_dkb:6} KB decode, {dev_dc} dense)   \
              host {:8.1} ms / {:7} KB (+{:6} KB decode, {} dense)   recompute {:8.1} ms / {:6} tok",
@@ -192,7 +229,7 @@ fn main() -> anyhow::Result<()> {
             slow.tokens,
         );
         md.push_str(&format!(
-            "| {l} | {dev_ms:.1} | {dev_kb} | {dev_dkb} | {dev_pkb} | {dev_disp} | {dev_dc} | {:.1} | {} | {} | {} | {} | {:.1} | {} |\n",
+            "| {l} | {dev_ms:.1} | {dev_kb} | {dev_dkb} | {dev_pkb} | {dev_disp} | {dev_dc} | {dev_rkb} | {dev_blocks} | {dev_pads} | {:.1} | {} | {} | {} | {} | {:.1} | {} |\n",
             host.ms,
             host.host_bytes / 1024,
             host.decode_bytes / 1024,
@@ -207,6 +244,8 @@ fn main() -> anyhow::Result<()> {
              \"dev_decode_ms\":{:.3},\"dev_decode_host_bytes\":{},\
              \"dev_dense_calls\":{},\"dev_dense_dev_calls\":{},\
              \"dev_dispatches\":{},\"dev_probs_bytes\":{},\
+             \"dev_rehome_bytes\":{},\"dev_blocks_live\":{},\
+             \"dev_pad_slots\":{},\
              \"host_ms\":{:.3},\"host_tokens\":{},\"host_host_bytes\":{},\
              \"host_decode_ms\":{:.3},\"host_decode_host_bytes\":{},\
              \"host_dense_calls\":{},\"host_probs_bytes\":{},\
@@ -220,6 +259,9 @@ fn main() -> anyhow::Result<()> {
             dev.map(|d| d.dense_dev_calls).unwrap_or(0),
             dev.map(|d| d.dev_dispatches).unwrap_or(0),
             dev.map(|d| d.probs_bytes).unwrap_or(0),
+            dev.map(|d| d.rehome_bytes).unwrap_or(0),
+            dev.map(|d| d.blocks_live).unwrap_or(0),
+            dev.map(|d| d.pad_slots).unwrap_or(0),
             host.ms,
             host.tokens,
             host.host_bytes,
@@ -237,7 +279,11 @@ fn main() -> anyhow::Result<()> {
          state download, and dev *decode* host-bytes stay O(N_sel + probs \
          row) per step — the host-staged path re-ships the context tile \
          every prefill chunk AND every dense/retrieval decode call \
-         (DESIGN.md §2/§6a).\n",
+         (DESIGN.md §2/§6a).  With paged artifacts the dev columns also \
+         pin the pool invariants: rehome KB = 0 (growth is allocation, \
+         never copy), blocks live = Θ(live tokens / block), and pad \
+         slots = 0 (no whole-tile group padding — the paged layout's \
+         waste is bounded by block − 1 rows per sequence).\n",
     );
     std::fs::create_dir_all("results")?;
     std::fs::write("results/prefill_scaling.md", &md)?;

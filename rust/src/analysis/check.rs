@@ -153,6 +153,62 @@ fn check_artifact(model: &str, dims: &Dims, art: &ArtifactSpec, r: &mut Report) 
             );
         }
     }
+    // Paged pool geometry invariants.  Paged artifacts carry
+    // `"paged": true` (manifest bools parse as 0/1) plus the pool
+    // geometry; the geometry must be sane per artifact (uniformity
+    // across the family is checked in `check_grids`).
+    let is_paged_stage = art.stage.ends_with("_paged");
+    if is_paged_stage && art.params.get("paged").copied() != Some(1) {
+        r.error(
+            E_BLOCK,
+            model,
+            &art.name,
+            format!("stage `{}` must carry `paged: true`", art.stage),
+        );
+    }
+    if is_paged_stage || art.params.contains_key("paged") {
+        match (
+            art.params.get("block").copied(),
+            art.params.get("max_blocks").copied(),
+        ) {
+            (Some(blk), Some(mxb)) => {
+                if blk == 0 || mxb == 0 {
+                    r.error(
+                        E_BLOCK,
+                        model,
+                        &art.name,
+                        format!("pool geometry block={blk} max_blocks={mxb} must be nonzero"),
+                    );
+                } else if let Some(&l) = art.params.get("l_max") {
+                    if l % blk != 0 {
+                        r.error(
+                            E_BLOCK_DIVIDES,
+                            model,
+                            &art.name,
+                            format!("block {blk} does not divide l_max {l}"),
+                        );
+                    }
+                    if mxb.checked_mul(blk).map_or(true, |cap| cap < l) {
+                        r.error(
+                            E_BLOCK_CAPACITY,
+                            model,
+                            &art.name,
+                            format!(
+                                "pool capacity max_blocks·block = {mxb}·{blk} \
+                                 cannot cover l_max {l}"
+                            ),
+                        );
+                    }
+                }
+            }
+            _ => r.error(
+                E_BLOCK,
+                model,
+                &art.name,
+                "paged artifact missing `block`/`max_blocks` params".into(),
+            ),
+        }
+    }
     // In-artifact feed-back: an output that shares its name with an input
     // (kv_state, kv_states, state) must have the identical spec, or the
     // result can't be fed back as the next call's parameter.
@@ -299,6 +355,82 @@ fn check_grids(model: &str, arts: &[ArtifactSpec], r: &mut Report) {
                 format!(
                     "l_max buckets {bridge:?} must equal \
                      prefill ∩ layer_step_dense_dev = {want:?}"
+                ),
+            );
+        }
+    }
+
+    // Paged family couplings.  One physical pool serves every paged
+    // artifact, so (block, max_blocks) must be uniform; and every bucket
+    // the paged dense stage (or the tile bridge) speaks needs a
+    // state_to_kv_paged scatter program, or prefill→paged handoff has no
+    // matching artifact at dispatch time.  Subset (not equality): the
+    // paged bridge may legally cover extra buckets.
+    let paged: Vec<&ArtifactSpec> = arts
+        .iter()
+        .filter(|a| a.stage.ends_with("_paged"))
+        .collect();
+    if !paged.is_empty() {
+        let geoms: BTreeSet<(usize, usize)> = paged
+            .iter()
+            .filter_map(|a| {
+                Some((
+                    *a.params.get("block")?,
+                    *a.params.get("max_blocks")?,
+                ))
+            })
+            .collect();
+        if geoms.len() > 1 {
+            r.error(
+                E_BLOCK,
+                model,
+                "paged",
+                format!(
+                    "paged artifacts disagree on pool geometry \
+                     (block, max_blocks): {geoms:?}"
+                ),
+            );
+        }
+        let paged_bridge = l_set("state_to_kv_paged");
+        let mut need_bridge = |from: &str, r: &mut Report| {
+            let sa = l_set(from);
+            if !sa.is_empty() && !sa.is_subset(&paged_bridge) {
+                let missing: BTreeSet<usize> =
+                    sa.difference(&paged_bridge).copied().collect();
+                r.error(
+                    E_GRID_HOLE,
+                    model,
+                    "state_to_kv_paged",
+                    format!(
+                        "no paged scatter program for `{from}` l_max \
+                         buckets {missing:?}"
+                    ),
+                );
+            }
+        };
+        need_bridge("layer_step_dense_dev_paged", r);
+        need_bridge("state_to_kv", r);
+        // The paged append has no l_max axis (the point of paging), so
+        // its coupling to the dense stage is along the batch-tile axis.
+        let s_axis = |stage: &str| -> BTreeSet<usize> {
+            by_stage
+                .get(stage)
+                .map(|v| axis_values(v, "batched"))
+                .unwrap_or_default()
+        };
+        let (sd, sa) = (
+            s_axis("layer_step_dense_dev_paged"),
+            s_axis("kv_append_dev_paged"),
+        );
+        if !sd.is_empty() && !sa.is_empty() && sd != sa {
+            r.error(
+                E_GRID_HOLE,
+                model,
+                "kv_append_dev_paged",
+                format!(
+                    "batch tiles {sa:?} differ from \
+                     `layer_step_dense_dev_paged` tiles {sd:?} \
+                     (coupled stages must share the grid)"
                 ),
             );
         }
@@ -592,7 +724,7 @@ mod tests {
     fn tiny_manifest() -> Manifest {
         // dims: nl=1, dm=4, h=2, hkv=1, d=2, dff=8, v=16
         let doc = r#"{
-          "version": 1, "contract_version": 1,
+          "version": 1, "contract_version": 2,
           "models": { "t": {
             "config": {"name":"t","n_layers":1,"d_model":4,"n_heads":2,
                        "n_kv_heads":1,"head_dim":2,"d_ff":8,"vocab_size":16,
@@ -696,9 +828,126 @@ mod tests {
             && d.detail.contains("n_sel=128")));
     }
 
+    /// Build a paged artifact from the recomputed stage model (so its IO
+    /// is consistent by construction; tests then mutate params).
+    fn mk_paged(stage: &str, params: &[(&str, usize)]) -> ArtifactSpec {
+        let dims = Dims { nl: 1, dm: 4, h: 2, hkv: 1, d: 2, dff: 8, v: 16 };
+        let params: BTreeMap<String, usize> =
+            params.iter().map(|&(k, v)| (k.to_string(), v)).collect();
+        let sm = shape::stage_model(&dims, stage, &params).unwrap().unwrap();
+        let cvt = |s: &Spec| crate::runtime::manifest::TensorSpec {
+            name: s.name.clone(),
+            dtype: s.dtype.to_string(),
+            shape: s.shape.clone(),
+        };
+        ArtifactSpec {
+            name: format!("t_{stage}_{}", params.len()),
+            file: "p.hlo.txt".into(),
+            stage: stage.into(),
+            params,
+            inputs: sm.inputs.iter().map(&cvt).collect(),
+            outputs: sm.outputs.iter().map(&cvt).collect(),
+            untupled: sm.untupled,
+        }
+    }
+
+    fn paged_manifest() -> Manifest {
+        let mut m = tiny_manifest();
+        let mm = m.models.get_mut("t").unwrap();
+        let geo: &[(&str, usize)] = &[("paged", 1), ("block", 4), ("max_blocks", 3)];
+        let with = |extra: &[(&str, usize)]| -> Vec<(&str, usize)> {
+            geo.iter().chain(extra).copied().collect()
+        };
+        mm.artifacts.push(mk_paged(
+            "layer_step_dense_dev_paged",
+            &with(&[("batched", 2), ("l_max", 8), ("n_top", 4)]),
+        ));
+        mm.artifacts
+            .push(mk_paged("kv_append_dev_paged", &with(&[("batched", 2)])));
+        mm.artifacts
+            .push(mk_paged("state_to_kv_paged", &with(&[("l_max", 8)])));
+        m
+    }
+
+    #[test]
+    fn consistent_paged_family_is_clean() {
+        let m = paged_manifest();
+        let r = check_manifest(&m, true);
+        assert!(!r.has_errors(), "{}", r.render());
+        assert_eq!(r.warning_count(), 0, "{}", r.render());
+    }
+
+    #[test]
+    fn block_not_dividing_l_max_is_an_error() {
+        let mut m = paged_manifest();
+        let mm = m.models.get_mut("t").unwrap();
+        for a in &mut mm.artifacts {
+            a.params.entry("block".into()).and_modify(|b| *b = 3);
+        }
+        let r = check_manifest(&m, false);
+        assert!(r.has_code(E_BLOCK_DIVIDES), "{}", r.render());
+    }
+
+    #[test]
+    fn pool_too_small_for_bucket_is_an_error() {
+        let mut m = paged_manifest();
+        let mm = m.models.get_mut("t").unwrap();
+        for a in &mut mm.artifacts {
+            a.params.entry("max_blocks".into()).and_modify(|b| *b = 1);
+        }
+        let r = check_manifest(&m, false);
+        assert!(r.has_code(E_BLOCK_CAPACITY), "{}", r.render());
+    }
+
+    #[test]
+    fn paged_stage_without_paged_flag_or_geometry_is_an_error() {
+        let mut m = paged_manifest();
+        let mm = m.models.get_mut("t").unwrap();
+        for a in &mut mm.artifacts {
+            if a.stage == "kv_append_dev_paged" {
+                a.params.remove("paged");
+            }
+        }
+        let r = check_manifest(&m, false);
+        assert!(r.has_code(E_BLOCK), "{}", r.render());
+    }
+
+    #[test]
+    fn pool_geometry_must_be_uniform_across_paged_artifacts() {
+        let mut m = paged_manifest();
+        let mm = m.models.get_mut("t").unwrap();
+        for a in &mut mm.artifacts {
+            if a.stage == "kv_append_dev_paged" {
+                // Keep the artifact self-consistent (IO recomputed for the
+                // new geometry) so only the uniformity check can fire.
+                *a = mk_paged(
+                    "kv_append_dev_paged",
+                    &[("paged", 1), ("block", 4), ("max_blocks", 6), ("batched", 2)],
+                );
+            }
+        }
+        let r = check_manifest(&m, false);
+        assert!(r.has_code(E_BLOCK), "{}", r.render());
+    }
+
+    #[test]
+    fn missing_paged_bridge_bucket_is_a_grid_hole() {
+        let mut m = paged_manifest();
+        let mm = m.models.get_mut("t").unwrap();
+        mm.artifacts.retain(|a| a.stage != "state_to_kv_paged");
+        let r = check_manifest(&m, false);
+        let holes = r.with_code(E_GRID_HOLE);
+        assert!(
+            holes.iter().any(|d| d.subject == "state_to_kv_paged"
+                && d.detail.contains("layer_step_dense_dev_paged")),
+            "{}",
+            r.render()
+        );
+    }
+
     #[test]
     fn unknown_key_severity_follows_strict_mode() {
-        let doc = r#"{"version":1,"contract_version":1,"frobnicate":3,"models":{}}"#;
+        let doc = r#"{"version":1,"contract_version":2,"frobnicate":3,"models":{}}"#;
         let m = Manifest::parse_str(doc, PathBuf::from(".")).unwrap();
         assert!(!check_manifest(&m, false).has_errors());
         assert!(check_manifest(&m, false).has_code(W_UNKNOWN_KEY));

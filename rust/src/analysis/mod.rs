@@ -31,5 +31,6 @@ pub use report::{Diag, Report, Severity};
 
 /// The manifest contract revision this checker understands.  Must match
 /// `CONTRACT_VERSION` in `python/compile/aot.py` (the golden-fixture
-/// tests on both sides pin the pair together).
-pub const SUPPORTED_CONTRACT_VERSION: usize = 1;
+/// tests on both sides pin the pair together).  v2: paged device KV
+/// stage family with `paged`/`block`/`max_blocks` manifest params.
+pub const SUPPORTED_CONTRACT_VERSION: usize = 2;

@@ -28,6 +28,9 @@ pub const E_BLOB_SIZE: &str = "E_BLOB_SIZE";
 pub const E_FILE: &str = "E_FILE";
 pub const E_DUP: &str = "E_DUP";
 pub const E_PARAM: &str = "E_PARAM";
+pub const E_BLOCK: &str = "E_BLOCK";
+pub const E_BLOCK_DIVIDES: &str = "E_BLOCK_DIVIDES";
+pub const E_BLOCK_CAPACITY: &str = "E_BLOCK_CAPACITY";
 pub const E_OVERFLOW: &str = "E_OVERFLOW";
 pub const E_UNKNOWN_KEY: &str = "E_UNKNOWN_KEY";
 pub const E_VERSION: &str = "E_VERSION";

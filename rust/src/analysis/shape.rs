@@ -66,6 +66,14 @@ impl Dims {
             .checked_add(self.v)?
             .checked_add(probs)
     }
+
+    /// Flat f32 length of the shared paged device KV pool:
+    /// `[2, nl, max_blocks, h, block, d]` (K and V planes, all layers,
+    /// every physical block, full `h` heads).  Must match
+    /// `kv_pool_len` in `python/compile/model.py`.
+    pub fn kv_pool_len(&self, block: usize, max_blocks: usize) -> Option<usize> {
+        prod(&[2, self.nl, max_blocks, self.h, block, self.d])
+    }
 }
 
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -119,6 +127,14 @@ pub fn grid_keys(stage: &str) -> Option<&'static [&'static str]> {
         "layer_step_dense_dev_batch" | "kv_append_dev_batch" | "kv_slot_write_dev" => {
             &["batched", "l_max"]
         }
+        // Paged decode family: the dense step tiles (batched × l_max);
+        // the append has NO l_max axis (one artifact per batch tile
+        // serves every context length — the point of paging); the
+        // seed/handoff bridge tiles l_max.  block/max_blocks are pool
+        // geometry, not grid axes (uniform across the family).
+        "layer_step_dense_dev_paged" => &["batched", "l_max"],
+        "kv_append_dev_paged" => &["batched"],
+        "state_to_kv_paged" => &["l_max"],
         _ => return None,
     })
 }
@@ -134,6 +150,8 @@ pub fn requires_untupled(stage: &str) -> bool {
             | "state_to_kv"
             | "kv_append_dev_batch"
             | "kv_slot_write_dev"
+            | "kv_append_dev_paged"
+            | "state_to_kv_paged"
     )
 }
 
@@ -207,6 +225,11 @@ pub fn stage_model(
         kv_len(l)?
             .checked_mul(s)
             .ok_or_else(|| ModelErr::Overflow(format!("{s}*kv_state_len({l})")))
+    };
+    let pool_len = |blk: usize, mxb: usize| -> Result<usize, ModelErr> {
+        dims.kv_pool_len(blk, mxb).ok_or_else(|| {
+            ModelErr::Overflow(format!("kv_pool_len({blk},{mxb})"))
+        })
     };
     let model = |inputs: Vec<Spec>, outputs: Vec<Spec>, untupled: bool| {
         Ok(Some(StageModel { inputs, outputs, untupled }))
@@ -432,6 +455,74 @@ pub fn stage_model(
                 true,
             )
         }
+        "layer_step_dense_dev_paged" => {
+            let s = need("batched")?;
+            let l = need("l_max")?;
+            let k = need("n_top")?;
+            let blk = need("block")?;
+            let mxb = need("max_blocks")?;
+            let pool = pool_len(blk, mxb)?;
+            // Table width: logical blocks covering the l_max bucket.
+            // block | l_max is a checker invariant (E_BLOCK_DIVIDES);
+            // the shape model just uses the floor so a violating
+            // artifact still diffs against a concrete expectation.
+            let mb = if blk == 0 { 0 } else { l / blk };
+            let mut inputs = vec![
+                t("hidden", F32, &[s, dm]),
+                t("pos", I32, &[s]),
+                t("layer", I32, &[]),
+                t("length", I32, &[s]),
+                t("kv_pool", F32, &[pool]),
+                t("block_tables", I32, &[s, mb]),
+            ];
+            inputs.extend(layer_weights(dims, "")?);
+            model(
+                inputs,
+                vec![
+                    t("hidden", F32, &[s, dm]),
+                    t("k_new", F32, &[s, hkv, d]),
+                    t("v_new", F32, &[s, hkv, d]),
+                    t("probs", F32, &[s, h, l + 1]),
+                    t("top_idx", F32, &[s, h, k]),
+                    t("top_val", F32, &[s, h, k]),
+                ],
+                false,
+            )
+        }
+        "kv_append_dev_paged" => {
+            let s = need("batched")?;
+            let blk = need("block")?;
+            let mxb = need("max_blocks")?;
+            let pool = pool_len(blk, mxb)?;
+            model(
+                vec![
+                    t("kv_pool", F32, &[pool]),
+                    t("k_new", F32, &[s, nl, h, d]),
+                    t("v_new", F32, &[s, nl, h, d]),
+                    t("slot_map", I32, &[s]),
+                    t("valid", F32, &[s]),
+                ],
+                vec![t("kv_pool", F32, &[pool])],
+                true,
+            )
+        }
+        "state_to_kv_paged" => {
+            let l = need("l_max")?;
+            let blk = need("block")?;
+            let mxb = need("max_blocks")?;
+            let pool = pool_len(blk, mxb)?;
+            let mb = if blk == 0 { 0 } else { l / blk };
+            model(
+                vec![
+                    t("kv_state", F32, &[kv_len(l)?]),
+                    t("kv_pool", F32, &[pool]),
+                    t("block_table", I32, &[mb]),
+                    t("n_blocks", I32, &[]),
+                ],
+                vec![t("kv_pool", F32, &[pool])],
+                true,
+            )
+        }
         "attn_tsa_xla" | "attn_tsa_pallas" => {
             let b = need("batch")?;
             let n = need("n_sel")?;
@@ -542,7 +633,7 @@ mod tests {
         );
         let dims = golden_dims(g.get("config").unwrap());
         let entries = g.get("entries").and_then(Json::as_arr).unwrap();
-        assert_eq!(entries.len(), 16, "one golden entry per stage");
+        assert_eq!(entries.len(), 19, "one golden entry per stage");
         for e in entries {
             let name = e.get("name").and_then(Json::as_str).unwrap();
             let stage = e.get("stage").and_then(Json::as_str).unwrap();
@@ -589,6 +680,11 @@ mod tests {
         assert_eq!(dims.kv_state_len(256), Some(131_072));
         assert_eq!(dims.dev_state_len(256), Some(137_344));
         assert_eq!(dims.kv_state_len(0), Some(0));
+        // Paged pool at the golden geometry (block 32, max_blocks 9):
+        // 2 * 2 * 9 * 8 * 32 * 16 — and a full-capacity pool covers the
+        // kv_state tile exactly when max_blocks * block == l_max.
+        assert_eq!(dims.kv_pool_len(32, 9), Some(147_456));
+        assert_eq!(dims.kv_pool_len(32, 8), dims.kv_state_len(256));
     }
 
     #[test]
@@ -630,7 +726,9 @@ mod tests {
             "embed", "lm_head", "layer_step", "layer_step_dense", "prefill",
             "prefill_extend", "prefill_extend_dev", "layer_step_dense_dev",
             "kv_append_dev", "state_to_kv", "layer_step_dense_dev_batch",
-            "kv_append_dev_batch", "kv_slot_write_dev", "attn_tsa_xla",
+            "kv_append_dev_batch", "kv_slot_write_dev",
+            "layer_step_dense_dev_paged", "kv_append_dev_paged",
+            "state_to_kv_paged", "attn_tsa_xla",
             "attn_tsa_pallas", "attn_dense",
         ] {
             assert!(grid_keys(stage).is_some(), "{stage} has no grid keys");

@@ -256,6 +256,21 @@ pub struct EngineConfig {
     /// when the artifact set predates the batched stages, and ignores
     /// the flag entirely when `device_decode_kv` is off (DESIGN.md §2).
     pub batched_decode_dispatch: bool,
+    /// Keep decode KV residency *paged*: one shared
+    /// `[2, nl, max_blocks, H, block, d]` device pool per engine with a
+    /// refcounted host-side `BlockAllocator`, per-sequence block tables
+    /// fed as runtime graph operands, and dense reads / appends running
+    /// the paged stages (`layer_step_dense_dev_paged` /
+    /// `kv_append_dev_paged`, seeded via `state_to_kv_paged`).  Sequences
+    /// grow block-at-a-time with zero re-home copies
+    /// (`StepStats::kv_rehome_bytes` stays 0) and device memory tracks
+    /// live tokens (`device_blocks_live` = Σ ⌈len/block⌉) instead of
+    /// whole-tile padding.  On by default; the engine falls back to the
+    /// tile-mirror path — the parity oracle — when the artifact set
+    /// predates the paged stages, when a sequence outgrows the pool, or
+    /// when the flag is off; ignored entirely when `device_decode_kv` is
+    /// off (DESIGN.md §2/§3).
+    pub paged_device_kv: bool,
     /// Max prompt tokens the scheduler's prefill stage executes per
     /// iteration across all prefilling sequences (0 = unlimited).  Bounds
     /// the prefill work inserted between decode steps, so decode latency
@@ -300,6 +315,7 @@ impl Default for EngineConfig {
             device_prefill_kv: true,
             device_decode_kv: true,
             batched_decode_dispatch: true,
+            paged_device_kv: true,
             prefill_token_budget: 0,
             max_kv_pages: 0,
             planner_threads: 0,
@@ -342,6 +358,9 @@ impl EngineConfig {
             j.get("batched_decode_dispatch").and_then(Json::as_bool)
         {
             cfg.batched_decode_dispatch = b;
+        }
+        if let Some(b) = j.get("paged_device_kv").and_then(Json::as_bool) {
+            cfg.paged_device_kv = b;
         }
         if let Some(n) = j.get("prefill_token_budget").and_then(Json::as_usize)
         {
@@ -447,6 +466,10 @@ impl EngineConfig {
             Json::Bool(self.batched_decode_dispatch),
         );
         o.insert(
+            "paged_device_kv".into(),
+            Json::Bool(self.paged_device_kv),
+        );
+        o.insert(
             "prefill_token_budget".into(),
             num(self.prefill_token_budget),
         );
@@ -531,13 +554,19 @@ mod tests {
             "batched device-decode dispatch is the default (per-sequence \
              dispatch is the parity oracle / pre-batch-artifact fallback)"
         );
+        assert!(
+            c.paged_device_kv,
+            "paged device KV is the default (tile mirrors are the parity \
+             oracle / pre-paged-artifact fallback)"
+        );
         assert_eq!(c.prefill_token_budget, 0, "budget is opt-in");
         assert_eq!(c.max_kv_pages, 0, "KV cap is opt-in");
         let j = Json::parse(
             r#"{"prefill_chunk":256,"planner_threads":4,"max_batch":32,
                 "prefill_recompute":true,"prefill_token_budget":512,
                 "max_kv_pages":1024,"device_prefill_kv":false,
-                "device_decode_kv":false,"batched_decode_dispatch":false}"#,
+                "device_decode_kv":false,"batched_decode_dispatch":false,
+                "paged_device_kv":false}"#,
         )
         .unwrap();
         let c = EngineConfig::from_json(&j).unwrap();
@@ -548,6 +577,7 @@ mod tests {
         assert!(!c.device_prefill_kv);
         assert!(!c.device_decode_kv);
         assert!(!c.batched_decode_dispatch);
+        assert!(!c.paged_device_kv);
         assert_eq!(c.prefill_token_budget, 512);
         assert_eq!(c.max_kv_pages, 1024);
     }
@@ -570,6 +600,7 @@ mod tests {
         c.device_prefill_kv = false;
         c.device_decode_kv = false;
         c.batched_decode_dispatch = false;
+        c.paged_device_kv = false;
         c.prefill_token_budget = 192;
         c.max_kv_pages = 77;
         c.planner_threads = 5;
@@ -602,6 +633,7 @@ mod tests {
         assert_eq!(r.device_prefill_kv, c.device_prefill_kv);
         assert_eq!(r.device_decode_kv, c.device_decode_kv);
         assert_eq!(r.batched_decode_dispatch, c.batched_decode_dispatch);
+        assert_eq!(r.paged_device_kv, c.paged_device_kv);
         assert_eq!(r.prefill_token_budget, c.prefill_token_budget);
         assert_eq!(r.max_kv_pages, c.max_kv_pages);
         assert_eq!(r.planner_threads, c.planner_threads);
@@ -629,6 +661,7 @@ mod tests {
         let r = EngineConfig::from_json(&j).unwrap();
         assert!(r.device_prefill_kv && r.device_decode_kv);
         assert!(r.batched_decode_dispatch);
+        assert!(r.paged_device_kv);
         assert!(r.strict_manifest, "strict manifest checking defaults on");
         assert_eq!(r.prefill_chunk, d.prefill_chunk);
     }

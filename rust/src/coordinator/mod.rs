@@ -382,6 +382,11 @@ impl Scheduler {
                 self.engine.stats.decode_dev_dispatches;
             self.metrics.decode_probs_bytes =
                 self.engine.stats.decode_probs_bytes;
+            self.metrics.kv_rehome_bytes = self.engine.stats.kv_rehome_bytes;
+            self.metrics.device_blocks_live = self
+                .metrics
+                .device_blocks_live
+                .max(self.engine.stats.device_blocks_live);
         }
 
         // retire

@@ -35,43 +35,56 @@ pub enum ResidencyMode {
     HostStaged,
 }
 
-/// Per-sequence device KV mirror: `[2, n_layers, H, lb, d]` K|V tiles
-/// (the leading segment of the prefill dev state — `model.kv_state_len`)
-/// living in one of two homes (DESIGN.md §2):
+/// Per-sequence device KV residency record, living in one of three homes
+/// (DESIGN.md §2):
 ///
-/// * `Solo` — its own flat device buffer; `handle` indexes the engine's
-///   `DeviceArena` (PJRT buffers are not `Send`; the sequence carries
-///   only this handle).  The per-sequence dispatch path
-///   (`layer_step_dense_dev` / `kv_append_dev`), kept as the batched
-///   path's parity oracle and the fallback for pre-batch artifact sets.
-/// * `Slot` — slot `slot` of a stacked group buffer tracked by the
-///   engine's `runtime::SlotGroups` under group id `group`, so dense
-///   reads and appends batch across the group's members in one dispatch
-///   (`layer_step_dense_dev_batch` / `kv_append_dev_batch`) — decode
-///   dispatches per step are O(#groups), not O(#sequences).
+/// * `Solo` — a whole `[2, n_layers, H, lb, d]` K|V tile in its own flat
+///   device buffer; `handle` indexes the engine's `DeviceArena` (PJRT
+///   buffers are not `Send`; the sequence carries only this handle).
+///   The per-sequence dispatch path (`layer_step_dense_dev` /
+///   `kv_append_dev`), kept as the batched path's parity oracle and the
+///   fallback for pre-batch artifact sets.
+/// * `Slot` — slot `slot` of a stacked whole-tile group buffer tracked
+///   by the engine's `runtime::SlotGroups` under group id `group`, so
+///   dense reads and appends batch across the group's members in one
+///   dispatch (`layer_step_dense_dev_batch` / `kv_append_dev_batch`) —
+///   decode dispatches per step are O(#groups), not O(#sequences).
+/// * `Paged` — `blocks` physical block ids (from the engine's
+///   [`BlockAllocator`]) into the shared
+///   `[2, n_layers, max_blocks, H, block, d]` device pool, gathered
+///   in-graph through a block-table operand
+///   (`layer_step_dense_dev_paged` / `kv_append_dev_paged`).  The
+///   sequence grows block-at-a-time with zero re-home copies and its
+///   device footprint is ⌈len/block⌉ blocks, not a whole padded tile.
 ///
-/// `lb` is the compiled l_max bucket, `len` the valid row count.
-/// Invariant: while live, `len == cache.len()` and `len < lb` — the
-/// engine appends every decode step and drops or re-buckets the mirror
-/// instead of letting it go stale.
-#[derive(Clone, Copy, Debug)]
+/// For the tile homes `lb` is the compiled l_max bucket; for `Paged` the
+/// capacity is `blocks.len() · block` and grows with the table.  `len`
+/// is the valid row count.  Invariant: while live, `len == cache.len()`
+/// and `len < capacity` — the engine appends every decode step and
+/// drops, re-buckets, or extends the residency instead of letting it go
+/// stale.
+#[derive(Clone, Debug)]
 pub enum DevKvMirror {
     Solo { handle: ArenaHandle, lb: usize, len: usize },
     Slot { group: usize, slot: usize, lb: usize, len: usize },
+    Paged { blocks: Vec<usize>, block: usize, len: usize },
 }
 
 impl DevKvMirror {
+    /// Current row capacity: the compiled bucket for the tile homes, the
+    /// table's block span for the paged home.
     pub fn lb(&self) -> usize {
         match self {
             DevKvMirror::Solo { lb, .. } | DevKvMirror::Slot { lb, .. } => *lb,
+            DevKvMirror::Paged { blocks, block, .. } => blocks.len() * block,
         }
     }
 
     pub fn len(&self) -> usize {
         match self {
-            DevKvMirror::Solo { len, .. } | DevKvMirror::Slot { len, .. } => {
-                *len
-            }
+            DevKvMirror::Solo { len, .. }
+            | DevKvMirror::Slot { len, .. }
+            | DevKvMirror::Paged { len, .. } => *len,
         }
     }
 
@@ -81,9 +94,79 @@ impl DevKvMirror {
 
     pub fn set_len(&mut self, new_len: usize) {
         match self {
-            DevKvMirror::Solo { len, .. } | DevKvMirror::Slot { len, .. } => {
-                *len = new_len
-            }
+            DevKvMirror::Solo { len, .. }
+            | DevKvMirror::Slot { len, .. }
+            | DevKvMirror::Paged { len, .. } => *len = new_len,
+        }
+    }
+}
+
+/// Refcounted allocator for the paged device KV pool — the host-side
+/// twin of the `[2, nl, max_blocks, H, block, d]` pool buffer the engine
+/// keeps in its `DeviceArena`.  Hands out physical block ids; a block
+/// returns to the free list when its last holder releases it.
+/// Refcounts (rather than a plain free list) so block *sharing* — an
+/// in-device prefix cache seeding many sequences from one block run — is
+/// a `retain` away, mirroring `PagePool`'s role on the host side.
+// Clone lets the schedule explorer (`analysis::sched`) fork allocator
+// states in the loom_* lane; the engine never clones a live allocator.
+#[derive(Clone, Debug)]
+pub struct BlockAllocator {
+    /// Holder count per physical block; 0 = free.
+    refs: Vec<u32>,
+    /// Free ids, popped LIFO so fresh sequences reuse warm blocks.
+    free: Vec<usize>,
+}
+
+impl BlockAllocator {
+    pub fn new(capacity: usize) -> Self {
+        BlockAllocator {
+            refs: vec![0; capacity],
+            // Reversed so ids hand out in ascending order initially
+            // (deterministic pool layouts in tests and traces).
+            free: (0..capacity).rev().collect(),
+        }
+    }
+
+    /// Total physical blocks in the pool (`max_blocks`).
+    pub fn capacity(&self) -> usize {
+        self.refs.len()
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn in_use(&self) -> usize {
+        self.refs.len() - self.free.len()
+    }
+
+    pub fn ref_count(&self, id: usize) -> u32 {
+        self.refs[id]
+    }
+
+    /// Claim a free block (refcount 0 → 1).  `None` when the pool is
+    /// exhausted — the engine then falls back to the tile path for the
+    /// requesting sequence instead of evicting a neighbor.
+    pub fn alloc(&mut self) -> Option<usize> {
+        let id = self.free.pop()?;
+        debug_assert_eq!(self.refs[id], 0, "free list held a live block");
+        self.refs[id] = 1;
+        Some(id)
+    }
+
+    /// Add a holder to a live block (block sharing).
+    pub fn retain(&mut self, id: usize) {
+        debug_assert!(self.refs[id] > 0, "retain of free block {id}");
+        self.refs[id] += 1;
+    }
+
+    /// Drop one holder; the block frees when the count reaches 0.
+    pub fn release(&mut self, id: usize) {
+        debug_assert!(self.refs[id] > 0, "double free of block {id}");
+        self.refs[id] -= 1;
+        if self.refs[id] == 0 {
+            self.free.push(id);
         }
     }
 }
@@ -651,6 +734,195 @@ mod tests {
         )
         .unwrap_or_else(|v| panic!("{v}"));
         assert_eq!(n, 20, "C(6,3) interleavings of two 3-op scripts");
+    }
+
+    /// Issue satellite: the paged-pool allocator under a random schedule
+    /// of alloc / retain / release across several holders.  A physical
+    /// block must never be handed out twice while live, refcounts must
+    /// equal the model's holder counts, `free + in_use == capacity` at
+    /// every step, and the pool drains when every holder releases.
+    #[test]
+    fn prop_blocks_never_double_alloc_or_leak() {
+        Prop::new(40, 0xB10C).forall(
+            |rng| {
+                let cap = gen::usize_in(rng, 1, 10);
+                let ops: Vec<(usize, u8)> = (0..60)
+                    .map(|_| (rng.below(4), rng.below(3) as u8))
+                    .collect();
+                (cap, ops)
+            },
+            |(cap, ops)| {
+                let mut ba = BlockAllocator::new(*cap);
+                // model: per-holder multiset of held block ids
+                let mut held: Vec<Vec<usize>> = vec![Vec::new(); 4];
+                for &(holder, op) in ops {
+                    match op {
+                        0 => {
+                            if let Some(id) = ba.alloc() {
+                                if held.iter().flatten().any(|&h| h == id) {
+                                    return Err(format!(
+                                        "block {id} double-allocated"
+                                    ));
+                                }
+                                held[holder].push(id);
+                            } else if ba.free_blocks() > 0 {
+                                return Err("alloc failed with free blocks"
+                                    .into());
+                            }
+                        }
+                        1 => {
+                            // share a live block (cross-holder retain)
+                            let live = held.iter().flatten().next().copied();
+                            if let Some(id) = live {
+                                ba.retain(id);
+                                held[holder].push(id);
+                            }
+                        }
+                        _ => {
+                            if let Some(id) = held[holder].pop() {
+                                ba.release(id);
+                            }
+                        }
+                    }
+                    let mut counts = vec![0u32; *cap];
+                    for &id in held.iter().flatten() {
+                        counts[id] += 1;
+                    }
+                    for (id, &c) in counts.iter().enumerate() {
+                        if ba.ref_count(id) != c {
+                            return Err(format!(
+                                "block {id}: refcount {} != model {c}",
+                                ba.ref_count(id)
+                            ));
+                        }
+                    }
+                    let live = counts.iter().filter(|&&c| c > 0).count();
+                    if ba.in_use() != live {
+                        return Err(format!(
+                            "in_use {} != live {live}",
+                            ba.in_use()
+                        ));
+                    }
+                    if ba.free_blocks() + ba.in_use() != ba.capacity() {
+                        return Err("free + in_use != capacity".into());
+                    }
+                }
+                for ids in &mut held {
+                    for id in ids.drain(..) {
+                        ba.release(id);
+                    }
+                }
+                if ba.in_use() != 0 {
+                    return Err(format!("{} blocks leaked", ba.in_use()));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Concurrency model (loom lane): block accounting under every
+    /// interleaving of two sequences' grow/grow/release-all scripts
+    /// against a shared allocator — the schedule the engine's paged
+    /// append pass runs when two sequences cross a block boundary in the
+    /// same scheduler iteration.  No block may be live in two tables
+    /// (absent an explicit retain), `free + in_use == capacity` at every
+    /// step, and the pool drains when both sequences finish.
+    #[test]
+    fn loom_block_allocator_accounting_all_interleavings() {
+        use crate::analysis::sched::{explore, Op};
+        use crate::sched_ops;
+
+        #[derive(Clone)]
+        struct St {
+            ba: BlockAllocator,
+            tables: [Vec<usize>; 2],
+        }
+        let grow = |s: &mut St, i: usize| {
+            let id = s.ba.alloc().expect("capacity 4 fits 2×2 blocks");
+            s.tables[i].push(id);
+        };
+        let script = |i: usize| -> Vec<Op<St>> {
+            sched_ops![
+                move |s: &mut St| grow(s, i),
+                move |s: &mut St| grow(s, i),
+                move |s: &mut St| {
+                    for id in s.tables[i].drain(..) {
+                        s.ba.release(id);
+                    }
+                },
+            ]
+        };
+        let n = explore(
+            &St {
+                ba: BlockAllocator::new(4),
+                tables: [Vec::new(), Vec::new()],
+            },
+            &[script(0), script(1)],
+            &|s| {
+                let mut live = std::collections::HashSet::new();
+                for id in s.tables.iter().flatten() {
+                    if !live.insert(*id) {
+                        return Err(format!("block {id} in two tables"));
+                    }
+                }
+                if s.ba.in_use() != live.len() {
+                    return Err(format!(
+                        "in_use {} != held {}",
+                        s.ba.in_use(),
+                        live.len()
+                    ));
+                }
+                if s.ba.free_blocks() + s.ba.in_use() != s.ba.capacity() {
+                    return Err("free + in_use != capacity".into());
+                }
+                Ok(())
+            },
+            &|s| {
+                if s.ba.in_use() == 0 {
+                    Ok(())
+                } else {
+                    Err(format!("{} blocks leaked", s.ba.in_use()))
+                }
+            },
+        )
+        .unwrap_or_else(|v| panic!("{v}"));
+        assert_eq!(n, 20, "C(6,3) interleavings of two 3-op scripts");
+    }
+
+    /// Refcounted sharing: a retained block survives its first holder's
+    /// release and frees only when the last holder drops it.
+    #[test]
+    fn block_sharing_frees_on_last_release() {
+        let mut ba = BlockAllocator::new(2);
+        let a = ba.alloc().unwrap();
+        ba.retain(a); // second holder (e.g. a prefix-cache hit)
+        assert_eq!(ba.ref_count(a), 2);
+        ba.release(a);
+        assert_eq!(ba.in_use(), 1, "block must survive the first release");
+        ba.release(a);
+        assert_eq!(ba.in_use(), 0);
+        // freed id is reusable and capacity accounting holds
+        let b = ba.alloc().unwrap();
+        let c = ba.alloc().unwrap();
+        assert_ne!(b, c);
+        assert!(ba.alloc().is_none(), "pool of 2 is exhausted");
+        assert_eq!(ba.free_blocks() + ba.in_use(), ba.capacity());
+    }
+
+    /// Paged mirror capacity tracks the block table, not a compiled
+    /// bucket.
+    #[test]
+    fn paged_mirror_capacity_is_table_span() {
+        let mut m =
+            DevKvMirror::Paged { blocks: vec![3, 0, 7], block: 64, len: 130 };
+        assert_eq!(m.lb(), 192);
+        assert_eq!(m.len(), 130);
+        m.set_len(131);
+        assert_eq!(m.len(), 131);
+        if let DevKvMirror::Paged { blocks, .. } = &mut m {
+            blocks.push(5);
+        }
+        assert_eq!(m.lb(), 256, "capacity grows with the table");
     }
 
     #[test]

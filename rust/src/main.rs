@@ -81,7 +81,7 @@ fn info(rest: &[String]) -> Result<()> {
             mm.n_layers, mm.d_model, mm.n_heads, mm.head_dim, mm.vocab_size
         );
         println!("  {} artifacts, {} weights", mm.artifacts.len(), mm.weights.len());
-        for stage in ["embed", "lm_head", "layer_step", "layer_step_dense", "layer_step_dense_dev", "layer_step_dense_dev_batch", "kv_append_dev", "kv_append_dev_batch", "kv_slot_write_dev", "state_to_kv", "prefill", "prefill_extend", "prefill_extend_dev", "attn_tsa_xla", "attn_tsa_pallas", "attn_dense"] {
+        for stage in ["embed", "lm_head", "layer_step", "layer_step_dense", "layer_step_dense_dev", "layer_step_dense_dev_batch", "layer_step_dense_dev_paged", "kv_append_dev", "kv_append_dev_batch", "kv_append_dev_paged", "kv_slot_write_dev", "state_to_kv", "state_to_kv_paged", "prefill", "prefill_extend", "prefill_extend_dev", "attn_tsa_xla", "attn_tsa_pallas", "attn_dense"] {
             let n = mm.artifacts.iter().filter(|a| a.stage == stage).count();
             if n > 0 {
                 println!("    {stage}: {n}");
@@ -166,6 +166,7 @@ fn serve(rest: &[String]) -> Result<()> {
         .switch("host-prefill-kv", "stage the prefill context through the host each chunk (disable the device-resident prefill KV path)")
         .switch("host-decode-kv", "stage the decode dense/retrieval context through the host each call (disable the device-resident decode KV mirror)")
         .switch("per-seq-decode-dispatch", "dispatch the device decode path one sequence at a time (disable the batched mirror-group dispatch; parity oracle)")
+        .switch("tiled-decode-kv", "keep decode KV in whole-tile per-sequence mirrors (disable the paged block pool; parity oracle)")
         .flag("planner-threads", "0", "host-side planner pool width (0/1 = serial)");
     let args = cli.parse(rest).map_err(anyhow::Error::msg)?;
     let mut cfg = EngineConfig::default();
@@ -183,6 +184,7 @@ fn serve(rest: &[String]) -> Result<()> {
     cfg.device_prefill_kv = !args.get_bool("host-prefill-kv");
     cfg.device_decode_kv = !args.get_bool("host-decode-kv");
     cfg.batched_decode_dispatch = !args.get_bool("per-seq-decode-dispatch");
+    cfg.paged_device_kv = !args.get_bool("tiled-decode-kv");
     cfg.planner_threads = args.get_usize("planner-threads");
     cfg.strict_manifest = !args.get_bool("no-strict-manifest");
     // vocab comes from the manifest (read it without building an engine)

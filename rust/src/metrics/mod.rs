@@ -130,6 +130,16 @@ pub struct RunMetrics {
     /// `StepStats::decode_probs_bytes` — O(N_sel) per retrieval under
     /// the batched path's in-graph top-k, ∝ L on full-row paths.
     pub decode_probs_bytes: u64,
+    /// Bytes copied re-homing device KV residency (tile-path bucket
+    /// growth / group moves), mirrored from `StepStats::kv_rehome_bytes`
+    /// — pinned to 0 by the paged pool, where sequences grow
+    /// block-at-a-time through their block table (DESIGN.md §2).
+    pub kv_rehome_bytes: u64,
+    /// Peak live physical blocks in the paged device KV pool, mirrored
+    /// from `StepStats::device_blocks_live` — Θ(live tokens / block)
+    /// exactly (Σ ⌈len/block⌉), vs the whole-tile padded footprint of
+    /// the grouped-mirror layout.
+    pub device_blocks_live: u64,
     pub wall_s: f64,
     /// Decode-phase head-level retrievals only (prefill-side scoring is
     /// excluded from ρ̂ by definition — paper Sec. III, DESIGN.md §4).

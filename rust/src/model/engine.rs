@@ -17,7 +17,9 @@ use std::sync::Arc;
 use anyhow::{anyhow, Result};
 
 use crate::config::EngineConfig;
-use crate::kvcache::{DevKvMirror, PagePool, ResidencyMode, SeqKvCache};
+use crate::kvcache::{
+    BlockAllocator, DevKvMirror, PagePool, ResidencyMode, SeqKvCache,
+};
 use crate::runtime::{
     ArenaHandle, ArtifactSpec, DeviceArena, Input, ModelManifest, Output,
     Runtime, SlotGroups, WeightStore,
@@ -237,6 +239,65 @@ pub mod decode_staging {
         4 * (s * 2 * nl * h * d + 2 * s) as u64
     }
 
+    /// Batched paged dense/full-scoring dispatch
+    /// (`layer_step_dense_dev_paged`, one per (layer, context-bucket
+    /// chunk)): hidden + pos/length + the layer scalar + each slot's
+    /// block-table row (`mb = l_max / block` ids) up — the pool itself
+    /// is device-resident — and hidden + k/v rows per slot down.
+    /// Exactly `dense_dev_batch_call_bytes` plus the O(mb) table term;
+    /// probs downloads are charged separately, as on the tile batch
+    /// path.
+    pub fn dense_dev_paged_call_bytes(
+        s: usize,
+        dm: usize,
+        hkv: usize,
+        d: usize,
+        mb: usize,
+    ) -> u64 {
+        let up = s * dm + 2 * s + 1 + s * mb;
+        let down = s * dm + 2 * s * hkv * d;
+        4 * (up + down) as u64
+    }
+
+    /// Paged append (`kv_append_dev_paged`, ONE dispatch per ≤ S chunk
+    /// of paged sequences per step, regardless of context): every
+    /// slot's `[nl, H, d]` K/V rows + flat pool slot + valid gate up,
+    /// nothing down.  The same O(1)-in-context class as the tile batch
+    /// append — but a single artifact (no l_max axis) serves every
+    /// context length, which is the point of paging.
+    pub fn append_dev_paged_bytes(
+        s: usize,
+        nl: usize,
+        h: usize,
+        d: usize,
+    ) -> u64 {
+        4 * (s * 2 * nl * h * d + 2 * s) as u64
+    }
+
+    /// Paged mirror seed from the host pool (`state_to_kv_paged` over a
+    /// host-uploaded tile): the packed `[2, nl, H, l_max, d]` tile +
+    /// the block table + the n_blocks scalar.  A membership-change
+    /// cost (first dense need without an in-device handoff) — unlike
+    /// the tile path, the pool never pays a bigger-tile re-seed when
+    /// the context grows (`StepStats::kv_rehome_bytes` stays 0).
+    pub fn paged_seed_bytes(
+        nl: usize,
+        h: usize,
+        l_max: usize,
+        d: usize,
+        mb: usize,
+    ) -> u64 {
+        4 * (2 * nl * h * l_max * d + mb + 1) as u64
+    }
+
+    /// In-device paged prefill→decode handoff (`state_to_kv` then
+    /// `state_to_kv_paged`, back to back on device buffers): the KV
+    /// never crosses the host boundary — the upload is the block table
+    /// + the n_blocks scalar alone.
+    pub fn paged_handoff_bytes(mb: usize) -> u64 {
+        4 * (mb + 1) as u64
+    }
+
     /// Batched sparse TSA call (`layer_step`): hidden + pos + the
     /// gathered `[b, H, n_sel, d]` tile pair + mask up; hidden + k/v
     /// rows (+ probs rows for H2O-style observers) down — the O(N_sel)
@@ -291,6 +352,28 @@ pub mod decode_dispatch {
     pub fn groups_needed(n: usize, cap: usize) -> usize {
         n.div_ceil(cap.max(1))
     }
+
+    /// Paged mode: one `layer_step_dense_dev_paged` per (dense-needing
+    /// layer × ≤ S context-bucket chunk) + one `kv_append_dev_paged`
+    /// per ≤ S chunk of paged sequences — the same O(#chunks) class as
+    /// the grouped tile dispatch, with chunks partitioned by context
+    /// bucket instead of by mirror group (appends are bucket-free:
+    /// every paged sequence shares one append artifact).
+    pub fn paged_step(
+        append_chunks: usize,
+        dense_chunks: usize,
+        dense_layers: usize,
+    ) -> u64 {
+        (dense_layers * dense_chunks + append_chunks) as u64
+    }
+
+    /// Physical blocks a context of `tokens` occupies at block size
+    /// `block` — the pool-footprint model `StepStats::
+    /// device_blocks_live` is pinned against: ⌈tokens/block⌉, i.e.
+    /// Θ(live tokens / block) with no whole-tile padding.
+    pub fn blocks_needed(tokens: usize, block: usize) -> usize {
+        tokens.div_ceil(block.max(1))
+    }
 }
 
 /// How the decode device path dispatches at a given context size
@@ -301,8 +384,24 @@ pub mod decode_dispatch {
 /// the batched stages).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 enum DevDispatch {
+    Paged { s: usize, lb: usize },
     Batched { s: usize, lb: usize },
     Solo { lb: usize },
+}
+
+/// Engine-side state of the paged device KV pool (the tentpole,
+/// DESIGN.md §2): the arena handle of the ONE flat
+/// `[2, nl, max_blocks, H, block, d]` pool buffer shared by every
+/// decode sequence, its geometry, and the host-side refcounted block
+/// ledger (`kvcache::BlockAllocator` — the device pool's twin of
+/// `PagePool`'s host-KV role).  Sequences hold `DevKvMirror::Paged`
+/// block tables into it and grow block-at-a-time with zero re-home
+/// copies.
+struct PagedDev {
+    handle: ArenaHandle,
+    block: usize,
+    max_blocks: usize,
+    alloc: BlockAllocator,
 }
 
 /// Pack a sequence's cached K/V into `[nl, H, l_max, d]` tiles (one
@@ -627,6 +726,20 @@ pub struct StepStats {
     /// O(N_sel) (index, value) pairs (`decode_staging::
     /// probs_topk_bytes`; probe steps always download full rows).
     pub decode_probs_bytes: u64,
+    /// Bytes copied re-homing decode KV residency: the tile path
+    /// drops and re-seeds a whole (bigger) mirror tile whenever a
+    /// context outgrows its l_max bucket or changes dispatch home
+    /// (`decode_staging::mirror_seed_bytes` per re-home).  The paged
+    /// pool grows sequences block-at-a-time through their block
+    /// tables instead, so this counter is pinned to 0 there — the
+    /// copy-class collapse this PR's tentpole lands (DESIGN.md §2).
+    pub kv_rehome_bytes: u64,
+    /// Live physical blocks in the paged device KV pool — the
+    /// allocator's in-use count, Σ ⌈len/block⌉ over paged sequences
+    /// (`decode_dispatch::blocks_needed`): Θ(live tokens / block)
+    /// exactly, vs the whole-tile padded footprint of the tile
+    /// layouts.  Current value; the coordinator tracks the peak.
+    pub device_blocks_live: u64,
 }
 
 impl StepStats {
@@ -767,6 +880,21 @@ pub struct Engine {
     /// Mirror-seed staging tile `[2, nl, H, lb, d]` (K half then V half)
     /// for seeding/re-bucketing a decode mirror from the host pool.
     sc_mirror: Vec<f32>,
+    /// Paged device KV pool (the tentpole, DESIGN.md §2): ONE flat
+    /// `[2, nl, max_blocks, H, block, d]` arena buffer shared by every
+    /// decode sequence plus the refcounted block ledger.  Sequences
+    /// carry `DevKvMirror::Paged` block tables and grow
+    /// block-at-a-time — zero re-home copies, no whole-tile padding
+    /// (`StepStats::{kv_rehome_bytes, device_blocks_live}`).  Lazily
+    /// created on first paged need; `None` until then, or for good
+    /// when `cfg.paged_device_kv` is off / the artifact set predates
+    /// the paged stages (the tile paths then stay in charge).
+    paged: Option<PagedDev>,
+    /// Paged staging: block tables (`[s, lb/block]` for dense reads,
+    /// `[lb/block]` for seeds/handoffs) and the flat slot map of the
+    /// paged append.
+    sc_gt: Vec<i32>,
+    sc_sm: Vec<i32>,
     /// Batched-layout assembly buffers for the device-resident dense
     /// pass (hidden / k_new / v_new / probs): taken at pass start and
     /// returned at the end of the layer iteration, so the pass stays
@@ -853,6 +981,9 @@ impl Engine {
             sc_gb_pos: Vec::new(),
             sc_gb_len: Vec::new(),
             sc_mirror: Vec::new(),
+            paged: None,
+            sc_gt: Vec::new(),
+            sc_sm: Vec::new(),
             sc_do_hidden: Vec::new(),
             sc_do_k: Vec::new(),
             sc_do_v: Vec::new(),
@@ -881,6 +1012,16 @@ impl Engine {
         self.mm
             .bucket_for("layer_step", "batch", n)
             .ok_or_else(|| anyhow!("no batch tile ≥ {n}"))
+    }
+
+    /// Whole-tile padding of the grouped-mirror layout right now:
+    /// `(occupied, padded)` slots across live mirror groups.  Each padded
+    /// slot wastes a full `[2, nl, H, lb, d]` tile of device memory; the
+    /// paged pool's analogue is sub-block padding only (< `block` rows
+    /// per sequence, counted by `StepStats::device_blocks_live` ×
+    /// `block` − live tokens).  Benches report both columns side by side.
+    pub fn mirror_slot_usage(&self) -> (usize, usize) {
+        (self.groups.occupied_slots(), self.groups.padded_slots())
     }
 
     // -----------------------------------------------------------------
@@ -1138,11 +1279,240 @@ impl Engine {
         Some(lb)
     }
 
-    /// Dispatch home for the decode dense path at context `need`:
-    /// batched group slot when the batched stages cover it (the
-    /// default), per-sequence buffer as the parity oracle / pre-batch
-    /// fallback, `None` = host-staged.
+    /// Batch tile S of the paged decode stages (`kv_append_dev_paged`
+    /// carries the family's `batched` axis): the smallest compiled
+    /// tile ≥ `max_batch`, else the largest.  `None` turns the paged
+    /// pool off — `paged_device_kv`/`device_decode_kv` disabled or a
+    /// pre-paged artifact set (tile-path fallback).
+    fn dev_paged_tile(&self) -> Option<usize> {
+        if !self.cfg.paged_device_kv || !self.cfg.device_decode_kv {
+            return None;
+        }
+        let bs = self.mm.buckets("kv_append_dev_paged", "batched");
+        bs.iter()
+            .copied()
+            .find(|&s| s >= self.cfg.max_batch)
+            .or_else(|| bs.last().copied())
+    }
+
+    /// Smallest paged dense bucket ≥ `need` compiled at the engine's
+    /// paged batch tile (the append stage has no l_max axis — one
+    /// artifact per tile serves every bucket, so only the dense read
+    /// constrains the grid).
+    fn dense_dev_paged_bucket(&self, s: usize, need: usize) -> Option<usize> {
+        self.mm
+            .buckets("layer_step_dense_dev_paged", "l_max")
+            .into_iter()
+            .find(|&lb| {
+                lb >= need
+                    && self
+                        .mm
+                        .find(
+                            "layer_step_dense_dev_paged",
+                            &[("batched", s), ("l_max", lb)],
+                        )
+                        .is_some()
+            })
+    }
+
+    /// Lazily create the shared paged pool: ONE flat
+    /// `[2, nl, max_blocks, H, block, d]` zero buffer in the arena plus
+    /// the block ledger.  Geometry comes from the append artifact's
+    /// `block`/`max_blocks` params — `prhs check` enforces it is
+    /// uniform across the whole paged stage family, so any one
+    /// artifact is authoritative.
+    fn ensure_paged_pool(&mut self) -> Result<()> {
+        if self.paged.is_some() {
+            return Ok(());
+        }
+        let (name, block, max_blocks) = {
+            let art =
+                self.mm.find("kv_append_dev_paged", &[]).ok_or_else(|| {
+                    anyhow!("paged pool requested without a kv_append_dev_paged artifact")
+                })?;
+            (
+                art.name.clone(),
+                art.params.get("block").copied().unwrap_or(0),
+                art.params.get("max_blocks").copied().unwrap_or(0),
+            )
+        };
+        if block == 0 || max_blocks == 0 {
+            return Err(anyhow!(
+                "{name}: missing/zero `block`/`max_blocks` params"
+            ));
+        }
+        let len = crate::analysis::shape::Dims::of(&self.mm)
+            .kv_pool_len(block, max_blocks)
+            .expect("kv pool length overflows usize");
+        let zeros = vec![0f32; len];
+        let buf = self.rt.upload_f32(&zeros, &[len])?;
+        let handle = self.arena.alloc(buf);
+        self.paged = Some(PagedDev {
+            handle,
+            block,
+            max_blocks,
+            alloc: BlockAllocator::new(max_blocks),
+        });
+        Ok(())
+    }
+
+    /// Refresh `StepStats::device_blocks_live` from the allocator
+    /// ledger (the current live physical-block count; the coordinator
+    /// keeps the peak).
+    fn note_blocks_live(&mut self) {
+        self.stats.device_blocks_live =
+            self.paged.as_ref().map_or(0, |p| p.alloc.in_use() as u64);
+    }
+
+    /// Grow a paged mirror's block table to cover `need` tokens —
+    /// allocator pops only, NEVER a copy of resident KV (the zero
+    /// re-home property `kv_rehome_bytes == 0` pins).  False when the
+    /// pool cannot cover it (exhausted, or no paged mirror to grow);
+    /// the caller falls back to a tile home.
+    fn paged_reserve(&mut self, seq: &mut Sequence, need: usize) -> bool {
+        let mut ok = false;
+        if let (
+            Some(p),
+            Some(DevKvMirror::Paged { blocks, block, .. }),
+        ) = (self.paged.as_mut(), seq.kv_mirror.as_mut())
+        {
+            let want = decode_dispatch::blocks_needed(need, *block);
+            ok = want <= p.alloc.capacity();
+            while ok && blocks.len() < want {
+                match p.alloc.alloc() {
+                    Some(id) => blocks.push(id),
+                    None => ok = false,
+                }
+            }
+        }
+        self.note_blocks_live();
+        ok
+    }
+
+    /// Seed a paged mirror from the host page pool: allocate
+    /// ⌈t/block⌉ blocks, upload the packed dense tile ONCE, and
+    /// scatter it into them in-graph (`state_to_kv_paged`).  Also the
+    /// re-home route back into the pool for a sequence that fell to a
+    /// tile mirror during exhaustion.  `Ok(false)` (no state changed)
+    /// when the bridge isn't compiled at `lb` or the pool can't cover
+    /// the context — the caller falls back to a tile home.
+    fn seed_paged_from_host(
+        &mut self,
+        seq: &mut Sequence,
+        t: usize,
+    ) -> Result<bool> {
+        // the scatter's own smallest covering tile bucket — independent
+        // of the dense read bucket, any `lb ≥ t` lands the same blocks
+        let Some(lb) = self
+            .mm
+            .buckets("state_to_kv_paged", "l_max")
+            .into_iter()
+            .find(|&b| b >= t)
+        else {
+            return Ok(false);
+        };
+        let Some(art) =
+            self.mm.find("state_to_kv_paged", &[("l_max", lb)]).cloned()
+        else {
+            return Ok(false);
+        };
+        self.ensure_paged_pool()?;
+        let (pool_handle, block) = {
+            let p = self.paged.as_ref().expect("pool just ensured");
+            (p.handle, p.block)
+        };
+        let want = decode_dispatch::blocks_needed(t, block);
+        if want == 0 {
+            // nothing cached yet: an empty table needs no scatter
+            self.drop_mirror(seq);
+            seq.kv_mirror = Some(DevKvMirror::Paged {
+                blocks: Vec::new(),
+                block,
+                len: 0,
+            });
+            self.note_blocks_live();
+            return Ok(true);
+        }
+        let mut blocks = Vec::with_capacity(want);
+        {
+            let p = self.paged.as_mut().expect("pool just ensured");
+            for _ in 0..want {
+                match p.alloc.alloc() {
+                    Some(id) => blocks.push(id),
+                    None => {
+                        for id in blocks {
+                            p.alloc.release(id);
+                        }
+                        return Ok(false); // exhausted: tile fallback
+                    }
+                }
+            }
+        }
+        // any prior (tile) mirror is being re-homed into the pool
+        self.drop_mirror(seq);
+        let (nl, h, d) =
+            (self.mm.n_layers, self.mm.n_heads, self.mm.head_dim);
+        let per = h * lb * d;
+        let total = nl * per;
+        if self.sc_mirror.len() < 2 * total {
+            self.sc_mirror.resize(2 * total, 0.0);
+        }
+        self.sc_mirror[..2 * total].fill(0.0);
+        let (kh, vh) = self.sc_mirror[..2 * total].split_at_mut(total);
+        pack_dense_tiles(&self.pool, &seq.cache, nl, lb, kh, vh);
+        let mb = lb / block;
+        self.sc_gt.clear();
+        self.sc_gt.resize(mb, 0);
+        for (j, &id) in blocks.iter().enumerate() {
+            self.sc_gt[j] = id as i32;
+        }
+        // mem::take keeps the staging borrows off `self` while the
+        // arena-held pool buffer rides as an input
+        let tile = std::mem::take(&mut self.sc_mirror);
+        let table = std::mem::take(&mut self.sc_gt);
+        let inputs = [
+            Input::F32(&tile[..2 * total], vec![2 * total]),
+            Input::Buffer(self.arena.get(pool_handle)),
+            Input::I32(&table, vec![mb]),
+            Input::ScalarI32(want as i32),
+        ];
+        let res = self.rt.execute_keep(&art, &inputs, &[true]);
+        drop(inputs);
+        self.sc_mirror = tile;
+        self.sc_gt = table;
+        let buf =
+            res?.pop().and_then(Output::into_device).ok_or_else(|| {
+                anyhow!(
+                    "{}: expected a device-resident kv_pool output",
+                    art.name
+                )
+            })?;
+        self.arena.replace(pool_handle, buf);
+        self.stats.decode_host_bytes_staged +=
+            decode_staging::paged_seed_bytes(nl, h, lb, d, mb);
+        self.stats.decode_dev_dispatches += 1;
+        seq.kv_mirror = Some(DevKvMirror::Paged { blocks, block, len: t });
+        self.note_blocks_live();
+        Ok(true)
+    }
+
+    /// Dispatch home for the decode dense path at context `need`: the
+    /// paged pool when the paged stages cover it (the default), else
+    /// the tile homes (`dev_dispatch_tile`), `None` = host-staged.
     fn dev_dispatch(&self, need: usize) -> Option<DevDispatch> {
+        if let Some(s) = self.dev_paged_tile() {
+            if let Some(lb) = self.dense_dev_paged_bucket(s, need) {
+                return Some(DevDispatch::Paged { s, lb });
+            }
+        }
+        self.dev_dispatch_tile(need)
+    }
+
+    /// Tile-mirror dispatch home (the paged pool's parity oracle and
+    /// its exhaustion fallback): batched group slot when the batched
+    /// stages cover it, per-sequence buffer as the per-seq oracle /
+    /// pre-batch fallback, `None` = host-staged.
+    fn dev_dispatch_tile(&self, need: usize) -> Option<DevDispatch> {
         if !self.cfg.device_decode_kv {
             return None;
         }
@@ -1161,6 +1531,16 @@ impl Engine {
                 if let Some(handle) = self.groups.release(group, slot) {
                     self.arena.free(handle);
                 }
+            }
+            Some(DevKvMirror::Paged { blocks, .. }) => {
+                // blocks go back to the ledger; the pool buffer itself
+                // is shared and stays resident
+                if let Some(p) = self.paged.as_mut() {
+                    for id in blocks {
+                        p.alloc.release(id);
+                    }
+                }
+                self.note_blocks_live();
             }
             None => {}
         }
@@ -1258,13 +1638,119 @@ impl Engine {
     /// off, the artifact set lacks the stages at the prefill bucket, or
     /// the prompt already fills the tile (the next append would
     /// overflow; decode re-buckets from the host pool instead).
+    /// In-device prefill→decode handoff into the PAGED pool: the live
+    /// prefill state bridges to a flat kv tile on device
+    /// (`state_to_kv`) and scatters straight into freshly allocated
+    /// pool blocks (`state_to_kv_paged`) — the staged bytes are the
+    /// block table + count ONLY (`decode_staging::paged_handoff_bytes`),
+    /// never the KV itself.  `Ok(false)` (nothing changed) when the
+    /// paged stages/bridge aren't compiled at this bucket or the pool
+    /// can't cover the prompt — the tile handoff below takes over.
+    fn try_paged_handoff(
+        &mut self,
+        seq: &mut Sequence,
+        lb: usize,
+        len: usize,
+    ) -> Result<bool> {
+        let Some(s) = self.dev_paged_tile() else {
+            return Ok(false);
+        };
+        // decode's first dense read must be covered, or the mirror
+        // would be dropped again immediately
+        if self.dense_dev_paged_bucket(s, len + 1).is_none() {
+            return Ok(false);
+        }
+        let Some(bridge) =
+            self.mm.find("state_to_kv", &[("l_max", lb)]).cloned()
+        else {
+            return Ok(false);
+        };
+        let Some(scatter) =
+            self.mm.find("state_to_kv_paged", &[("l_max", lb)]).cloned()
+        else {
+            return Ok(false);
+        };
+        self.ensure_paged_pool()?;
+        let (pool_handle, block) = {
+            let p = self.paged.as_ref().expect("pool just ensured");
+            (p.handle, p.block)
+        };
+        let want = decode_dispatch::blocks_needed(len, block);
+        let mut blocks = Vec::with_capacity(want);
+        {
+            let p = self.paged.as_mut().expect("pool just ensured");
+            for _ in 0..want {
+                match p.alloc.alloc() {
+                    Some(id) => blocks.push(id),
+                    None => {
+                        for id in blocks {
+                            p.alloc.release(id);
+                        }
+                        return Ok(false); // exhausted: tile handoff
+                    }
+                }
+            }
+        }
+        // device state → flat kv tile, still on device
+        let slot = seq.dev_state_slot.expect("live device prefill state");
+        let inputs = [Input::Buffer(self.arena.get(slot))];
+        let res = self.rt.execute_keep(&bridge, &inputs, &[true]);
+        drop(inputs);
+        let kv_state = res?.pop().and_then(Output::into_device).ok_or_else(
+            || {
+                anyhow!(
+                    "{}: expected a device-resident kv_state output",
+                    bridge.name
+                )
+            },
+        )?;
+        self.stats.decode_dev_dispatches += 1;
+        // scatter the tile into the allocated blocks in-graph
+        let mb = lb / block;
+        self.sc_gt.clear();
+        self.sc_gt.resize(mb, 0);
+        for (j, &id) in blocks.iter().enumerate() {
+            self.sc_gt[j] = id as i32;
+        }
+        let table = std::mem::take(&mut self.sc_gt);
+        let inputs = [
+            Input::Buffer(&kv_state),
+            Input::Buffer(self.arena.get(pool_handle)),
+            Input::I32(&table, vec![mb]),
+            Input::ScalarI32(want as i32),
+        ];
+        let res = self.rt.execute_keep(&scatter, &inputs, &[true]);
+        drop(inputs);
+        self.sc_gt = table;
+        let buf =
+            res?.pop().and_then(Output::into_device).ok_or_else(|| {
+                anyhow!(
+                    "{}: expected a device-resident kv_pool output",
+                    scatter.name
+                )
+            })?;
+        self.arena.replace(pool_handle, buf);
+        self.stats.decode_dev_dispatches += 1;
+        self.stats.decode_host_bytes_staged +=
+            decode_staging::paged_handoff_bytes(mb);
+        seq.kv_mirror = Some(DevKvMirror::Paged { blocks, block, len });
+        self.note_blocks_live();
+        Ok(true)
+    }
+
     fn seed_mirror_from_prefill(
         &mut self,
         seq: &mut Sequence,
         lb: usize,
         len: usize,
     ) -> Result<()> {
-        if !self.cfg.device_decode_kv || len >= lb {
+        if !self.cfg.device_decode_kv {
+            return Ok(());
+        }
+        if self.try_paged_handoff(seq, lb, len)? {
+            return Ok(());
+        }
+        if len >= lb {
             return Ok(());
         }
         let batched = self
@@ -1319,9 +1805,15 @@ impl Engine {
         let want = self.dev_dispatch(t + 1).ok_or_else(|| {
             anyhow!("context {} exceeds decode-mirror buckets", t + 1)
         })?;
+        let mut had_mirror = false;
         if let Some(m) = &seq.kv_mirror {
             debug_assert_eq!(m.len(), t, "mirror out of sync with cache");
             let fits = match (m, want) {
+                // a paged mirror never re-buckets: its table grows
+                // below, alloc-only
+                (DevKvMirror::Paged { .. }, DevDispatch::Paged { .. }) => {
+                    true
+                }
                 (DevKvMirror::Solo { lb, .. }, DevDispatch::Solo { .. }) => {
                     *lb > t
                 }
@@ -1332,14 +1824,43 @@ impl Engine {
                 _ => false,
             };
             if fits {
-                return Ok(());
+                if matches!(seq.kv_mirror, Some(DevKvMirror::Paged { .. }))
+                {
+                    if self.paged_reserve(seq, t + 1) {
+                        return Ok(());
+                    }
+                    // pool exhausted mid-growth: fall to a tile home
+                    self.drop_mirror(seq);
+                } else {
+                    return Ok(());
+                }
+            } else {
+                self.drop_mirror(seq); // outgrown or re-homed: re-seed
             }
-            self.drop_mirror(seq); // outgrown or re-homed: re-seed below
+            had_mirror = true;
         }
+        // fresh home: the pool first — sequences seeded there never pay
+        // a re-home copy again
+        if matches!(want, DevDispatch::Paged { .. })
+            && self.seed_paged_from_host(seq, t)?
+        {
+            return Ok(());
+        }
+        let Some(tile) = self.dev_dispatch_tile(t + 1) else {
+            return Err(anyhow!(
+                "paged device pool exhausted at context {} with no \
+                 tile-mirror fallback compiled (block-granular swap-tier \
+                 eviction is the ROADMAP follow-up)",
+                t + 1
+            ));
+        };
         let (nl, h, d) =
             (self.mm.n_layers, self.mm.n_heads, self.mm.head_dim);
-        let lb = match want {
+        let lb = match tile {
             DevDispatch::Batched { lb, .. } | DevDispatch::Solo { lb } => lb,
+            DevDispatch::Paged { .. } => {
+                unreachable!("dev_dispatch_tile never pages")
+            }
         };
         let per = h * lb * d;
         let total = nl * per;
@@ -1351,7 +1872,13 @@ impl Engine {
         pack_dense_tiles(&self.pool, &seq.cache, nl, lb, kh, vh);
         self.stats.decode_host_bytes_staged +=
             decode_staging::mirror_seed_bytes(nl, h, lb, d);
-        match want {
+        if had_mirror {
+            // a device-resident context was copied to a new tile home —
+            // exactly the growth cost the paged pool pins to zero
+            self.stats.kv_rehome_bytes +=
+                decode_staging::mirror_seed_bytes(nl, h, lb, d);
+        }
+        match tile {
             DevDispatch::Solo { .. } => {
                 let buf = self
                     .rt
@@ -1371,6 +1898,9 @@ impl Engine {
                 seq.kv_mirror =
                     Some(DevKvMirror::Slot { group, slot, lb, len: t });
             }
+            DevDispatch::Paged { .. } => {
+                unreachable!("dev_dispatch_tile never pages")
+            }
         }
         Ok(())
     }
@@ -1384,22 +1914,45 @@ impl Engine {
     /// clamped `dynamic_update_slice` would corrupt the last row); the
     /// next dense need re-buckets it from the host pool.
     fn mirror_append_all(&mut self, seqs: &mut [&mut Sequence]) -> Result<()> {
+        enum Route {
+            Drop,
+            Solo,
+            Slot(usize),
+            Paged,
+        }
         let mut by_group: std::collections::BTreeMap<usize, Vec<usize>> =
             std::collections::BTreeMap::new();
+        let mut paged: Vec<usize> = Vec::new();
         for (i, seq) in seqs.iter_mut().enumerate() {
-            let Some(m) = seq.kv_mirror else { continue };
             let t = seq.cache.len();
-            if m.len() != t || t >= m.lb() {
-                self.drop_mirror(seq);
-                continue;
-            }
-            match m {
-                DevKvMirror::Solo { .. } => self.mirror_append_solo(seq)?,
-                DevKvMirror::Slot { group, .. } => {
-                    by_group.entry(group).or_default().push(i)
+            let route = match seq.kv_mirror.as_ref() {
+                None => continue,
+                Some(m) if m.len() != t => Route::Drop,
+                // a paged mirror never hits tile capacity — its table
+                // grows instead (checked in the Paged route below)
+                Some(DevKvMirror::Paged { .. }) => Route::Paged,
+                Some(m) if t >= m.lb() => Route::Drop,
+                Some(DevKvMirror::Solo { .. }) => Route::Solo,
+                Some(&DevKvMirror::Slot { group, .. }) => {
+                    Route::Slot(group)
+                }
+            };
+            match route {
+                Route::Drop => self.drop_mirror(seq),
+                Route::Solo => self.mirror_append_solo(seq)?,
+                Route::Slot(g) => by_group.entry(g).or_default().push(i),
+                Route::Paged => {
+                    // cover the incoming row now; on exhaustion the
+                    // mirror drops and the next dense need re-homes it
+                    if self.paged_reserve(seq, t + 1) {
+                        paged.push(i);
+                    } else {
+                        self.drop_mirror(seq);
+                    }
                 }
             }
         }
+        self.paged_append(seqs, &paged)?;
         for (gid, members) in by_group {
             self.group_append(seqs, gid, &members)?;
         }
@@ -1409,7 +1962,8 @@ impl Engine {
     /// One `kv_append_dev` for a solo mirror (the per-seq dispatch
     /// path); the output buffer replaces the mirror in place.
     fn mirror_append_solo(&mut self, seq: &mut Sequence) -> Result<()> {
-        let Some(DevKvMirror::Solo { handle, lb, .. }) = seq.kv_mirror
+        let Some(&DevKvMirror::Solo { handle, lb, .. }) =
+            seq.kv_mirror.as_ref()
         else {
             return Ok(());
         };
@@ -1462,7 +2016,9 @@ impl Engine {
         self.sc_ga_valid.resize(s, 0.0);
         for &i in members {
             let seq = &*seqs[i];
-            let Some(DevKvMirror::Slot { slot, .. }) = seq.kv_mirror else {
+            let Some(&DevKvMirror::Slot { slot, .. }) =
+                seq.kv_mirror.as_ref()
+            else {
                 unreachable!("group member without a slot mirror")
             };
             self.sc_ga_k[slot * n..(slot + 1) * n]
@@ -1498,6 +2054,86 @@ impl Engine {
         self.stats.decode_host_bytes_staged +=
             decode_staging::append_dev_batch_bytes(s, nl, h, d);
         self.stats.decode_dev_dispatches += 1;
+        Ok(())
+    }
+
+    /// ONE `kv_append_dev_paged` per ≤S chunk of paged members: each
+    /// member's new row rides up with its flat pool slot
+    /// (`phys_block · B + offset`); the valid gate leaves every other
+    /// pool byte bitwise untouched, so concurrent sequences share the
+    /// buffer safely.  Chunking keeps the dispatch count O(⌈n/S⌉) —
+    /// the same class as the grouped tile path.
+    fn paged_append(
+        &mut self,
+        seqs: &mut [&mut Sequence],
+        members: &[usize],
+    ) -> Result<()> {
+        if members.is_empty() {
+            return Ok(());
+        }
+        let s = self.dev_paged_tile().ok_or_else(|| {
+            anyhow!("paged mirrors live without paged append stages")
+        })?;
+        let art = self.art("kv_append_dev_paged", &[("batched", s)])?;
+        let pool_handle =
+            self.paged.as_ref().expect("paged pool live").handle;
+        let (nl, h, d) =
+            (self.mm.n_layers, self.mm.n_heads, self.mm.head_dim);
+        let n = nl * h * d;
+        for chunk in members.chunks(s) {
+            if self.sc_ga_k.len() < s * n {
+                self.sc_ga_k.resize(s * n, 0.0);
+                self.sc_ga_v.resize(s * n, 0.0);
+            }
+            self.sc_ga_k[..s * n].fill(0.0);
+            self.sc_ga_v[..s * n].fill(0.0);
+            self.sc_sm.clear();
+            self.sc_sm.resize(s, 0);
+            self.sc_ga_valid.clear();
+            self.sc_ga_valid.resize(s, 0.0);
+            for (j, &i) in chunk.iter().enumerate() {
+                let seq = &*seqs[i];
+                let t = seq.cache.len();
+                let Some(DevKvMirror::Paged { blocks, block, .. }) =
+                    seq.kv_mirror.as_ref()
+                else {
+                    unreachable!("paged member without a paged mirror")
+                };
+                let b = *block;
+                let phys = blocks[t / b];
+                self.sc_sm[j] = (phys * b + t % b) as i32;
+                self.sc_ga_valid[j] = 1.0;
+                self.sc_ga_k[j * n..(j + 1) * n]
+                    .copy_from_slice(&seq.scratch.dev_k[..n]);
+                self.sc_ga_v[j * n..(j + 1) * n]
+                    .copy_from_slice(&seq.scratch.dev_v[..n]);
+            }
+            let inputs = [
+                Input::Buffer(self.arena.get(pool_handle)),
+                Input::F32(&self.sc_ga_k[..s * n], vec![s, nl, h, d]),
+                Input::F32(&self.sc_ga_v[..s * n], vec![s, nl, h, d]),
+                Input::I32(&self.sc_sm, vec![s]),
+                Input::F32(&self.sc_ga_valid, vec![s]),
+            ];
+            let mut outs = self.rt.execute_keep(&art, &inputs, &[true])?;
+            drop(inputs);
+            let buf =
+                outs.pop().and_then(Output::into_device).ok_or_else(|| {
+                    anyhow!(
+                        "{}: expected a device-resident kv_pool output",
+                        art.name
+                    )
+                })?;
+            self.arena.replace(pool_handle, buf);
+            for &i in chunk {
+                let m = seqs[i].kv_mirror.as_mut().expect("paged mirror");
+                let new_len = m.len() + 1;
+                m.set_len(new_len);
+            }
+            self.stats.decode_host_bytes_staged +=
+                decode_staging::append_dev_paged_bytes(s, nl, h, d);
+            self.stats.decode_dev_dispatches += 1;
+        }
         Ok(())
     }
 
@@ -1877,14 +2513,18 @@ impl Engine {
         // Whether this step stages the per-layer K/V rows for device
         // mirror appends (`mirror_append_all` after the layer loop).
         // Gated on the manifest actually carrying an append stage
-        // (batched or per-seq) so pre-device artifact sets (the runtime
-        // fallback mode) don't pay the per-layer staging memcpys for
-        // mirrors that can never exist.
+        // (paged, batched, or per-seq) so pre-device artifact sets (the
+        // runtime fallback mode) don't pay the per-layer staging
+        // memcpys for mirrors that can never exist.
         let stage_dev_rows = self.cfg.device_decode_kv
             && (!self.mm.buckets("kv_append_dev", "l_max").is_empty()
                 || !self
                     .mm
                     .buckets("kv_append_dev_batch", "l_max")
+                    .is_empty()
+                || !self
+                    .mm
+                    .buckets("kv_append_dev_paged", "batched")
                     .is_empty());
 
         for layer in 0..nl {
@@ -2021,21 +2661,178 @@ impl Engine {
                 }
                 let mut o_probs =
                     HostTensor { shape: vec![b, h, row_w], data: buf };
-                // partition dense-needing members by mirror home: slot
-                // mirrors batch one dispatch per (layer, group); solo
-                // mirrors fall through to the per-seq oracle loop
+                // partition dense-needing members by mirror home: paged
+                // mirrors batch one dispatch per (layer, dense bucket,
+                // ≤S chunk) against the shared pool; slot mirrors batch
+                // one dispatch per (layer, group); solo mirrors fall
+                // through to the per-seq oracle loop
                 let mut group_members: std::collections::BTreeMap<
                     usize,
                     Vec<usize>,
                 > = std::collections::BTreeMap::new();
+                let mut paged_buckets: std::collections::BTreeMap<
+                    usize,
+                    Vec<usize>,
+                > = std::collections::BTreeMap::new();
+                let paged_s = self.dev_paged_tile();
                 for (i, seq) in seqs.iter().enumerate() {
                     if !need_dense[i] {
                         continue;
                     }
-                    if let Some(DevKvMirror::Slot { group, .. }) =
-                        seq.kv_mirror
-                    {
-                        group_members.entry(group).or_default().push(i);
+                    match seq.kv_mirror.as_ref() {
+                        Some(&DevKvMirror::Slot { group, .. }) => {
+                            group_members.entry(group).or_default().push(i);
+                        }
+                        Some(DevKvMirror::Paged { .. }) => {
+                            let ps =
+                                paged_s.expect("paged mirror without stages");
+                            let plb = self
+                                .dense_dev_paged_bucket(ps, seq.t() + 1)
+                                .expect("ensure_mirror verified the bucket");
+                            paged_buckets.entry(plb).or_default().push(i);
+                        }
+                        _ => {}
+                    }
+                }
+                for (&plb, members) in &paged_buckets {
+                    let ps = paged_s.expect("paged members without stages");
+                    let (pool_handle, pblock) = {
+                        let p =
+                            self.paged.as_ref().expect("paged pool live");
+                        (p.handle, p.block)
+                    };
+                    let mb = plb / pblock;
+                    let art = self.art(
+                        "layer_step_dense_dev_paged",
+                        &[("batched", ps), ("l_max", plb)],
+                    )?;
+                    let n_top =
+                        art.params.get("n_top").copied().unwrap_or(0);
+                    for chunk in members.chunks(ps) {
+                        // compact slot packing: ragged slots keep zero
+                        // hidden/pos/len and an all-zero table row (the
+                        // in-length mask blanks whatever they'd read)
+                        if self.sc_gb_hidden.len() < ps * dm {
+                            self.sc_gb_hidden.resize(ps * dm, 0.0);
+                        }
+                        self.sc_gb_hidden[..ps * dm].fill(0.0);
+                        self.sc_gb_pos.clear();
+                        self.sc_gb_pos.resize(ps, 0);
+                        self.sc_gb_len.clear();
+                        self.sc_gb_len.resize(ps, 0);
+                        self.sc_gt.clear();
+                        self.sc_gt.resize(ps * mb, 0);
+                        for (j, &i) in chunk.iter().enumerate() {
+                            let t = seqs[i].t();
+                            self.sc_gb_hidden[j * dm..(j + 1) * dm]
+                                .copy_from_slice(
+                                    &self.sc_hidden[i * dm..(i + 1) * dm],
+                                );
+                            self.sc_gb_pos[j] = t as i32;
+                            self.sc_gb_len[j] = t as i32;
+                            let Some(DevKvMirror::Paged {
+                                blocks, ..
+                            }) = seqs[i].kv_mirror.as_ref()
+                            else {
+                                unreachable!("paged member without mirror")
+                            };
+                            for (bi, &id) in blocks.iter().enumerate() {
+                                self.sc_gt[j * mb + bi] = id as i32;
+                            }
+                        }
+                        let topk_ok = want_dense_probs
+                            && !probing
+                            && n_top > 0
+                            && chunk.iter().all(|&i| match &plans[i] {
+                                PlanKind::Retrieve { .. } => seqs[i]
+                                    .selector
+                                    .probs_topk_budget()
+                                    .is_some_and(|req| req <= n_top),
+                                _ => true,
+                            });
+                        let want_full = want_dense_probs && !topk_ok;
+                        let wanted =
+                            [true, true, true, want_full, topk_ok, topk_ok];
+                        let mut inputs: Vec<Input<'_>> = vec![
+                            Input::F32(
+                                &self.sc_gb_hidden[..ps * dm],
+                                vec![ps, dm],
+                            ),
+                            Input::I32(&self.sc_gb_pos, vec![ps]),
+                            Input::ScalarI32(layer as i32),
+                            Input::I32(&self.sc_gb_len, vec![ps]),
+                            Input::Buffer(self.arena.get(pool_handle)),
+                            Input::I32(&self.sc_gt, vec![ps, mb]),
+                        ];
+                        inputs.extend(wl.iter().map(|w| Input::Buffer(*w)));
+                        let outs = self
+                            .rt
+                            .execute_select(&art, &inputs, Some(&wanted))?;
+                        drop(inputs);
+                        for (j, &i) in chunk.iter().enumerate() {
+                            let t = seqs[i].t();
+                            o_hidden.data[i * dm..(i + 1) * dm]
+                                .copy_from_slice(
+                                    &outs[0].data[j * dm..(j + 1) * dm],
+                                );
+                            o_k.data[i * hkv * d..(i + 1) * hkv * d]
+                                .copy_from_slice(
+                                    &outs[1].data
+                                        [j * hkv * d..(j + 1) * hkv * d],
+                                );
+                            o_v.data[i * hkv * d..(i + 1) * hkv * d]
+                                .copy_from_slice(
+                                    &outs[2].data
+                                        [j * hkv * d..(j + 1) * hkv * d],
+                                );
+                            if want_full {
+                                // repack [H, plb + 1] rows (self at slot
+                                // plb) into the [H, dev_lb + 1] layout
+                                for head in 0..h {
+                                    let src = (j * h + head) * (plb + 1);
+                                    let dst = (i * h + head) * row_w;
+                                    let valid = t.min(plb);
+                                    o_probs.data[dst..dst + valid]
+                                        .copy_from_slice(
+                                            &outs[3].data
+                                                [src..src + valid],
+                                        );
+                                    o_probs.data[dst + dev_lb] =
+                                        outs[3].data[src + plb];
+                                }
+                            } else if topk_ok {
+                                // sparse row from the (index, value)
+                                // pair — zeros off the top-k, self 0.0
+                                for head in 0..h {
+                                    let src = (j * h + head) * n_top;
+                                    let dst = (i * h + head) * row_w;
+                                    for jj in 0..n_top {
+                                        let idx = outs[4].data[src + jj]
+                                            as usize;
+                                        if idx < t {
+                                            o_probs.data[dst + idx] =
+                                                outs[5].data[src + jj];
+                                        }
+                                    }
+                                }
+                            }
+                            self.stats.decode_dense_dev_calls += 1;
+                            self.stats.dense_context_tokens += t as u64;
+                        }
+                        self.stats.decode_dev_dispatches += 1;
+                        self.stats.decode_host_bytes_staged +=
+                            decode_staging::dense_dev_paged_call_bytes(
+                                ps, dm, hkv, d, mb,
+                            );
+                        let probs_bytes = if want_full {
+                            decode_staging::probs_row_bytes(ps, h, plb)
+                        } else if topk_ok {
+                            decode_staging::probs_topk_bytes(ps, h, n_top)
+                        } else {
+                            0
+                        };
+                        self.stats.decode_host_bytes_staged += probs_bytes;
+                        self.stats.decode_probs_bytes += probs_bytes;
                     }
                 }
                 for (&gid, members) in &group_members {
@@ -2058,8 +2855,8 @@ impl Engine {
                     self.sc_gb_len.clear();
                     self.sc_gb_len.resize(gs, 0);
                     for &i in members {
-                        let Some(DevKvMirror::Slot { slot, .. }) =
-                            seqs[i].kv_mirror
+                        let Some(&DevKvMirror::Slot { slot, .. }) =
+                            seqs[i].kv_mirror.as_ref()
                         else {
                             unreachable!("group member without slot mirror")
                         };
@@ -2102,8 +2899,8 @@ impl Engine {
                         self.rt.execute_select(&art, &inputs, Some(&wanted))?;
                     drop(inputs);
                     for &i in members {
-                        let Some(DevKvMirror::Slot { slot, .. }) =
-                            seqs[i].kv_mirror
+                        let Some(&DevKvMirror::Slot { slot, .. }) =
+                            seqs[i].kv_mirror.as_ref()
                         else {
                             unreachable!("group member without slot mirror")
                         };
@@ -2175,10 +2972,10 @@ impl Engine {
                     if !need_dense[i] {
                         continue;
                     }
-                    let Some(DevKvMirror::Solo { handle, lb: mlb, .. }) =
-                        seq.kv_mirror
+                    let Some(&DevKvMirror::Solo { handle, lb: mlb, .. }) =
+                        seq.kv_mirror.as_ref()
                     else {
-                        continue; // slot mirrors served above
+                        continue; // slot + paged mirrors served above
                     };
                     let t = seq.t();
                     let art = self
@@ -2990,6 +3787,84 @@ mod tests {
         assert_eq!(
             dev_state_bytes(NL, H, D, 512, DM, VOCAB),
             4 * (2 * NL * H * 512 * D + DM + VOCAB + NL * H * 512) as u64
+        );
+    }
+
+    /// Tentpole acceptance criterion, engine-free: growing a paged
+    /// sequence allocates blocks — it NEVER copies resident KV — while
+    /// the tile path re-stages the whole packed tile at every bucket
+    /// crossing; and the pool's live footprint is Θ(live tokens / B),
+    /// not whole padded tiles.
+    #[test]
+    fn paged_growth_does_no_rehome_copies() {
+        use super::decode_dispatch::blocks_needed;
+        use super::decode_staging::*;
+        const B: usize = 64;
+        // tile path: decoding from 400 to 4096 tokens crosses the
+        // 512 → 1024 → 2048 → 4096 buckets, re-uploading the packed
+        // tile at each crossing — the kv_rehome_bytes the pool removes
+        let tile_rehome: u64 = L_BUCKETS[1..]
+            .iter()
+            .map(|&lb| mirror_seed_bytes(NL, H, lb, D))
+            .sum();
+        assert!(tile_rehome > 0);
+        // the same trajectory on the pool is allocator pops only: the
+        // byte model has no paged growth term at all, so the engine
+        // invariant `kv_rehome_bytes == 0` is structural, not tuned
+        assert_eq!(blocks_needed(0, B), 0);
+        assert_eq!(blocks_needed(1, B), 1);
+        assert_eq!(blocks_needed(B, B), 1);
+        assert_eq!(blocks_needed(B + 1, B), 2);
+        assert_eq!(blocks_needed(4096, B), 64);
+        assert_eq!(blocks_needed(5, 0), 5, "degenerate guard");
+        // live footprint at t = 1025: 17 blocks × 64 rows = 1088 slots
+        // held, vs the whole 2048-row tile a bucket home pads out to
+        let live_rows = blocks_needed(1025, B) * B;
+        assert_eq!(live_rows, 1088);
+        assert!(live_rows < 2048, "Θ(t/B) beats the padded tile");
+        // seeding the pool from the host stages the same packed tile as
+        // a tile seed plus ONLY the block table + count…
+        let mb = 2048 / B;
+        assert_eq!(
+            paged_seed_bytes(NL, H, 2048, D, mb),
+            mirror_seed_bytes(NL, H, 2048, D) + 4 * (mb + 1) as u64
+        );
+        // …and the in-device prefill handoff stages table + count alone
+        assert_eq!(paged_handoff_bytes(mb), 4 * (mb + 1) as u64);
+    }
+
+    /// Tentpole acceptance criterion, engine-free: paged decode
+    /// dispatches stay O(#chunks) per step — the same class as the
+    /// batched tile path, 1/n of the per-seq oracle — and the paged
+    /// calls stage O(s) bytes plus block tables, never the KV.
+    #[test]
+    fn paged_decode_dispatches_stay_o_groups() {
+        use super::decode_dispatch::*;
+        use super::decode_staging::*;
+        let (n, s) = (16usize, 16usize);
+        let chunks = groups_needed(n, s);
+        let paged = paged_step(chunks, chunks, NL);
+        assert_eq!(paged, (NL + 1) as u64, "O(#chunks): layers + append");
+        assert_eq!(paged, batched_step(chunks, NL), "same class as groups");
+        assert_eq!(solo_step(n, n, NL), paged * n as u64);
+        // doubling batch and tile together leaves the count unchanged
+        let c2 = groups_needed(2 * n, 2 * n);
+        assert_eq!(paged_step(c2, c2, NL), paged);
+        // past one tile the count grows with ⌈n/s⌉, not with n
+        let c3 = groups_needed(2 * n + 1, s);
+        assert_eq!(paged_step(c3, c3, NL), 3 * paged);
+        // the paged dense call is the batched call plus the [s, mb]
+        // block tables — no KV term, no l_max-proportional term
+        let mb = 4096 / 64;
+        assert_eq!(
+            dense_dev_paged_call_bytes(s, DM, H, D, mb),
+            dense_dev_batch_call_bytes(s, DM, H, D) + 4 * (s * mb) as u64
+        );
+        // the paged append stages rows + slot map + valid — bytewise
+        // identical to the batched tile append (pos ↔ flat slot)
+        assert_eq!(
+            append_dev_paged_bytes(s, NL, H, D),
+            append_dev_batch_bytes(s, NL, H, D)
         );
     }
 }

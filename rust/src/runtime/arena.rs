@@ -190,6 +190,27 @@ impl SlotGroups {
     pub fn live(&self) -> usize {
         self.groups.iter().filter(|g| g.is_some()).count()
     }
+
+    /// Member-held slots across all live groups.  Counts only claimed
+    /// slots — a ragged group's free tail is *padding*, not occupancy
+    /// (observers that walked `groups_len` × cap over-counted exactly
+    /// that tail).
+    pub fn occupied_slots(&self) -> usize {
+        self.groups.iter().flatten().map(SlotGroup::live).sum()
+    }
+
+    /// Allocated-but-unclaimed slots across all live groups — the
+    /// whole-tile padding waste of the grouped-mirror layout (each costs
+    /// a full `[2, nl, H, lb, d]` tile of device memory).  The paged
+    /// pool's analogue is sub-block padding only: at most `block − 1`
+    /// rows per sequence.
+    pub fn padded_slots(&self) -> usize {
+        self.groups
+            .iter()
+            .flatten()
+            .map(|g| g.cap - g.live())
+            .sum()
+    }
 }
 
 #[cfg(test)]
@@ -480,6 +501,28 @@ mod tests {
                     }
                     if gs.live() > arena.live() {
                         return Err("more groups than buffers".into());
+                    }
+                    // Padding accounting (issue satellite): occupancy
+                    // counts exactly the seated members — never a ragged
+                    // group's free tail — and occupied + padded tiles
+                    // the live groups' capacity exactly.
+                    let seated = members.iter().flatten().count();
+                    if gs.occupied_slots() != seated {
+                        return Err(format!(
+                            "occupied_slots {} != members {seated}",
+                            gs.occupied_slots()
+                        ));
+                    }
+                    let total_cap: usize = (0..gs.groups_len())
+                        .filter_map(|gid| gs.try_get(gid))
+                        .map(SlotGroup::cap)
+                        .sum();
+                    if gs.occupied_slots() + gs.padded_slots() != total_cap {
+                        return Err(format!(
+                            "occupied {} + padded {} != capacity {total_cap}",
+                            gs.occupied_slots(),
+                            gs.padded_slots()
+                        ));
                     }
                 }
                 for m in members.iter_mut() {

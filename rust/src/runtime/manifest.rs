@@ -191,15 +191,23 @@ fn artifact_spec(j: &Json, at: &str, unknown: &mut Vec<String>) -> Result<Artifa
     let at = &format!("{at}(`{name}`)");
     // Bucket params are the numeric entries; the stamped "model" string is
     // runtime-irrelevant and skipped, but a numeric param that is not a
-    // valid usize is an error, not a silent zero.
+    // valid usize is an error, not a silent zero.  Bool params (the paged
+    // family's `"paged": true`) coerce to 0/1 so flags survive into the
+    // usize param map the checker and dispatch tables read.
     let mut params = BTreeMap::new();
     if let Some(obj) = want(j, "params", at)?.as_obj() {
         for (k, v) in obj {
-            if matches!(v, Json::Num(_)) {
-                params.insert(
-                    k.clone(),
-                    usize_of(v, &format!("{at}.params.{k}"))?,
-                );
+            match v {
+                Json::Num(_) => {
+                    params.insert(
+                        k.clone(),
+                        usize_of(v, &format!("{at}.params.{k}"))?,
+                    );
+                }
+                Json::Bool(b) => {
+                    params.insert(k.clone(), *b as usize);
+                }
+                _ => {}
             }
         }
     } else {
@@ -485,6 +493,24 @@ mod tests {
             "{:?}",
             m.unknown_keys
         );
+    }
+
+    /// Bool params coerce to 0/1 — the paged stage family stamps
+    /// `"paged": true` and the flag must survive into the usize map.
+    #[test]
+    fn bool_params_coerce_to_usize() {
+        let doc = toy_manifest_json().replace(
+            "\"params\":{\"batch\":1,\"n_sel\":64}",
+            "\"params\":{\"batch\":1,\"n_sel\":64,\"paged\":true,\"tiled\":false}",
+        );
+        let m = Manifest::parse_str(&doc, PathBuf::from(".")).unwrap();
+        let a = m
+            .model("m")
+            .unwrap()
+            .find("layer_step", &[("batch", 1), ("paged", 1)])
+            .unwrap();
+        assert_eq!(a.params.get("paged"), Some(&1));
+        assert_eq!(a.params.get("tiled"), Some(&0));
     }
 
     /// Artifact sets predating the contract stamp still parse.

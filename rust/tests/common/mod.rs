@@ -26,17 +26,20 @@ use prhs::util::rng::Rng;
 /// Decode-side dispatch/residency mode under test.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DecodeMode {
-    /// Batched mirror-group dispatch (`batched_decode_dispatch`, the
-    /// default).
+    /// Paged pool dispatch (`paged_device_kv`, the default): shared
+    /// device pool + per-sequence block tables as graph operands.
+    PagedDev,
+    /// Batched mirror-group dispatch (`paged_device_kv = false`,
+    /// `batched_decode_dispatch` — the tile-path parity oracle).
     BatchedDev,
     /// Per-sequence device dispatch (`batched_decode_dispatch = false`
-    /// — the parity oracle).
+    /// — the per-seq parity oracle).
     PerSeqDev,
     /// Host-staged `export_dense_kv` oracle (`device_decode_kv = false`).
     HostStaged,
-    /// Device flags on, batched stages stripped from the manifest — the
-    /// runtime fallback for pre-batch artifact sets (must behave exactly
-    /// like `PerSeqDev`).
+    /// Device flags on, paged + batched stages stripped from the
+    /// manifest — the runtime fallback for pre-batch artifact sets
+    /// (must behave exactly like `PerSeqDev`).
     StrippedToPerSeq,
     /// Device flags on, ALL decode residency stages stripped — the
     /// fallback for pre-device artifact sets (must behave exactly like
@@ -45,7 +48,8 @@ pub enum DecodeMode {
 }
 
 impl DecodeMode {
-    pub const ALL: [DecodeMode; 5] = [
+    pub const ALL: [DecodeMode; 6] = [
+        DecodeMode::PagedDev,
         DecodeMode::BatchedDev,
         DecodeMode::PerSeqDev,
         DecodeMode::HostStaged,
@@ -115,6 +119,12 @@ pub struct ModeOut {
     pub dev_dispatches: u64,
     pub dense_dev_calls: u64,
     pub dense_calls: u64,
+    /// Bytes copied re-homing device KV (tile bucket growth); the paged
+    /// mode must pin this to exactly 0.
+    pub rehome_bytes: u64,
+    /// Live paged-pool blocks at run end, BEFORE release (Σ ⌈len/B⌉
+    /// over live sequences on the paged mode, 0 on every tile mode).
+    pub blocks_live: u64,
     /// Per-decode-step deltas of `decode_dev_dispatches` (steady-state
     /// dispatch cadence; membership events land in the first entries).
     pub step_dispatches: Vec<u64>,
@@ -141,10 +151,14 @@ pub fn run_mode(
     cfg.selector.kind = w.selector.clone();
     cfg.device_prefill_kv = device_prefill;
     match mode {
-        DecodeMode::BatchedDev
+        DecodeMode::PagedDev
         | DecodeMode::StrippedToPerSeq
         | DecodeMode::StrippedToHost => {}
-        DecodeMode::PerSeqDev => cfg.batched_decode_dispatch = false,
+        DecodeMode::BatchedDev => cfg.paged_device_kv = false,
+        DecodeMode::PerSeqDev => {
+            cfg.paged_device_kv = false;
+            cfg.batched_decode_dispatch = false;
+        }
         DecodeMode::HostStaged => cfg.device_decode_kv = false,
     }
     let mut engine = Engine::new(cfg).expect("engine");
@@ -152,6 +166,9 @@ pub fn run_mode(
         DecodeMode::StrippedToPerSeq => strip_stages(
             &mut engine,
             &[
+                "layer_step_dense_dev_paged",
+                "kv_append_dev_paged",
+                "state_to_kv_paged",
                 "layer_step_dense_dev_batch",
                 "kv_append_dev_batch",
                 "kv_slot_write_dev",
@@ -160,6 +177,9 @@ pub fn run_mode(
         DecodeMode::StrippedToHost => strip_stages(
             &mut engine,
             &[
+                "layer_step_dense_dev_paged",
+                "kv_append_dev_paged",
+                "state_to_kv_paged",
                 "layer_step_dense_dev_batch",
                 "kv_append_dev_batch",
                 "kv_slot_write_dev",
@@ -249,6 +269,8 @@ pub fn run_mode(
         dev_dispatches: engine.stats.decode_dev_dispatches,
         dense_dev_calls: engine.stats.decode_dense_dev_calls,
         dense_calls: engine.stats.dense_layer_calls,
+        rehome_bytes: engine.stats.kv_rehome_bytes,
+        blocks_live: engine.stats.device_blocks_live,
         step_dispatches,
         step_probs_bytes,
     };
@@ -259,6 +281,11 @@ pub fn run_mode(
         engine.device_slots_live(),
         0,
         "arena slots leaked ({label})"
+    );
+    assert_eq!(
+        engine.stats.device_blocks_live,
+        0,
+        "paged blocks leaked ({label})"
     );
     out
 }

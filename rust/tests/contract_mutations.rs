@@ -1,7 +1,8 @@
 //! Mutation tests for the static contract checker (`prhs check`).
 //!
-//! Build a full 16-stage manifest fixture from the shared python↔rust
-//! golden (`python/tests/data/contract_golden.json`), verify it is clean,
+//! Build a full-stage manifest fixture (19 entries, paged family
+//! included) from the shared python↔rust golden
+//! (`python/tests/data/contract_golden.json`), verify it is clean,
 //! then seed single-field corruptions and assert each one is flagged
 //! with its pinned diagnostic code — the checker's own test coverage
 //! demanded by the issue (a checker that misses its target mutations is
@@ -74,6 +75,10 @@ fn fixture() -> Manifest {
             for (k, v) in e.get("params").and_then(Json::as_obj).unwrap() {
                 if let Some(n) = v.as_usize() {
                     params.insert(k.clone(), n);
+                } else if let Some(b) = v.as_bool() {
+                    // `"paged": true` — same 0/1 coercion the runtime
+                    // manifest parser applies
+                    params.insert(k.clone(), b as usize);
                 }
             }
             ArtifactSpec {
@@ -117,7 +122,7 @@ fn fixture() -> Manifest {
     Manifest {
         dir: std::path::PathBuf::from("."),
         models,
-        contract_version: Some(1),
+        contract_version: Some(2),
         unknown_keys: Vec::new(),
     }
 }
@@ -365,9 +370,52 @@ fn mutation_ntop_above_lmax_is_e_ntop() {
 #[test]
 fn mutation_future_contract_version_is_e_version() {
     let r = mutated(|m| {
-        m.contract_version = Some(2);
+        m.contract_version = Some(3); // v2 is current (paged stages)
     });
     assert!(r.has_code(E_VERSION), "{}", r.render());
+}
+
+#[test]
+fn mutation_paged_block_nondivisible_is_e_block_divides() {
+    let r = mutated(|m| {
+        let a = art_mut(m, "layer_step_dense_dev_paged");
+        a.params.insert("block".to_string(), 48); // 48 ∤ l_max 256
+    });
+    assert!(r.has_code(E_BLOCK_DIVIDES), "{}", r.render());
+}
+
+#[test]
+fn mutation_paged_pool_capacity_shortfall_is_e_block_capacity() {
+    let r = mutated(|m| {
+        // shrink uniformly so ONLY the capacity check fires (geometry
+        // stays consistent across the family): 2·32 rows < l_max 256
+        for a in &mut m.models.get_mut("gqa").unwrap().artifacts {
+            if a.stage.ends_with("_paged") {
+                a.params.insert("max_blocks".to_string(), 2);
+            }
+        }
+    });
+    assert!(r.has_code(E_BLOCK_CAPACITY), "{}", r.render());
+    assert!(!r.has_code(E_BLOCK), "{}", r.render());
+}
+
+#[test]
+fn mutation_dropped_paged_scatter_bridge_is_e_grid_hole() {
+    // without `state_to_kv_paged` the paged dense bucket has no
+    // prefill→pool handoff program — a coupling hole, not a clean pass
+    let r = mutated(|m| {
+        m.models
+            .get_mut("gqa")
+            .unwrap()
+            .artifacts
+            .retain(|a| a.stage != "state_to_kv_paged");
+    });
+    let holes = r.with_code(E_GRID_HOLE);
+    assert!(
+        holes.iter().any(|d| d.subject == "state_to_kv_paged"),
+        "{}",
+        r.render()
+    );
 }
 
 #[test]

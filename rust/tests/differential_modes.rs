@@ -1,6 +1,7 @@
 //! Cross-mode differential tests (issue archetype headline): one
-//! workload through {batched-dev, per-seq-dev, host-staged} dispatch ×
-//! {device_prefill_kv on/off} × the stripped-manifest fallbacks, with
+//! workload through {paged-dev, batched-dev, per-seq-dev, host-staged}
+//! dispatch × {device_prefill_kv on/off} × the stripped-manifest
+//! fallbacks, with
 //! full trajectory/KV/selector-set/ρ̂/probe identity asserted by the
 //! reusable harness in `tests/common/mod.rs` — the acceptance gate for
 //! the batched device-decode tentpole, including a GQA (Hkv < H)
@@ -31,10 +32,13 @@ fn differential_identity_across_modes_and_prefill_residency() {
     // under the 512 bucket, decode crosses into 1024); the quick CI set
     // has a single 512 bucket, so stay inside it — every mode/fallback
     // still runs live there (the bench-smoke job's acceptance gate).
-    let prompt_len = {
+    let (prompt_len, has_paged) = {
         let rt = prhs::runtime::Runtime::new(&dir).unwrap();
         let mm = rt.model("small").unwrap();
-        if mm.bucket_for("layer_step_dense_dev", "l_max", 1024).is_some() {
+        let prompt_len = if mm
+            .bucket_for("layer_step_dense_dev", "l_max", 1024)
+            .is_some()
+        {
             508
         } else if mm
             .bucket_for("layer_step_dense_dev", "l_max", 512)
@@ -44,7 +48,14 @@ fn differential_identity_across_modes_and_prefill_residency() {
         } else {
             eprintln!("skipping: artifact set lacks decode residency buckets");
             return;
-        }
+        };
+        let has_paged = !mm
+            .buckets("kv_append_dev_paged", "batched")
+            .is_empty()
+            && mm
+                .bucket_for("layer_step_dense_dev_paged", "l_max", prompt_len + 1)
+                .is_some();
+        (prompt_len, has_paged)
     };
     let mut w = Workload::synthetic(
         "small",
@@ -77,6 +88,36 @@ fn differential_identity_across_modes_and_prefill_residency() {
     for r in by_label("BatchedDev").iter().chain(&by_label("PerSeqDev")) {
         assert!(r.dev_dispatches > 0, "{}: no dev dispatches", r.label);
         assert!(r.dense_dev_calls > 0, "{}: no dev dense reads", r.label);
+    }
+    // the paged pool's tentpole invariants: device work happened, KV
+    // was NEVER copied to re-home a growing sequence, and the live
+    // footprint is block-granular (only the pool holds blocks at all)
+    for r in by_label("PagedDev") {
+        assert!(r.dev_dispatches > 0, "{}: no dev dispatches", r.label);
+        assert!(r.dense_dev_calls > 0, "{}: no dev dense reads", r.label);
+        assert_eq!(
+            r.rehome_bytes, 0,
+            "{}: the paged pool must never re-home resident KV",
+            r.label
+        );
+        if has_paged {
+            assert!(
+                r.blocks_live > 0,
+                "{}: pool never engaged despite paged stages",
+                r.label
+            );
+        }
+    }
+    for r in DecodeMode::ALL
+        .iter()
+        .filter(|m| **m != DecodeMode::PagedDev)
+        .flat_map(|m| by_label(&format!("{m:?}")))
+    {
+        assert_eq!(
+            r.blocks_live, 0,
+            "{}: tile/host modes must not touch the pool ledger",
+            r.label
+        );
     }
     for r in by_label("HostStaged") {
         assert_eq!(r.dev_dispatches, 0, "{}", r.label);
@@ -268,5 +309,68 @@ fn batched_dispatches_scale_with_groups_not_sequences() {
     assert_eq!(
         decode_staging::probs_topk_bytes(s_cap, h, n_top),
         4 * (2 * s_cap * h * n_top) as u64
+    );
+
+    // paged mode: identical observables, the same O(#chunks) dispatch
+    // class as the grouped tile path, zero re-home copies, and a live
+    // footprint of EXACTLY Σ ⌈len/B⌉ blocks (counter == model identity,
+    // the tentpole's Θ(live tokens / B) pin).
+    let (ps, pn_top, pblock, dims_per_pos) = {
+        let rt = prhs::runtime::Runtime::new(&dir).unwrap();
+        let mm = rt.model("small").unwrap().clone();
+        let pbs = mm.buckets("kv_append_dev_paged", "batched");
+        if pbs.is_empty() {
+            eprintln!("skipping paged cadence: artifact set predates paging");
+            return;
+        }
+        let ps = pbs
+            .iter()
+            .copied()
+            .find(|&s| s >= 16)
+            .unwrap_or(*pbs.last().unwrap());
+        let Some(plb) = mm.bucket_for(
+            "layer_step_dense_dev_paged",
+            "l_max",
+            prompt_len + 1,
+        ) else {
+            eprintln!("skipping paged cadence: no covering dense bucket");
+            return;
+        };
+        let art = mm
+            .find(
+                "layer_step_dense_dev_paged",
+                &[("batched", ps), ("l_max", plb)],
+            )
+            .unwrap();
+        (
+            ps,
+            art.params["n_top"],
+            art.params["block"],
+            mm.n_layers * mm.n_heads * 2 * mm.head_dim,
+        )
+    };
+    let paged = run_mode(&dir, &w, DecodeMode::PagedDev, true);
+    assert_identical(&batched, &paged);
+    assert_eq!(paged.rehome_bytes, 0, "paged growth must never copy KV");
+    let chunks = decode_dispatch::groups_needed(n_seqs, ps);
+    let expect_p = decode_dispatch::paged_step(chunks, chunks, nl);
+    for &dd in &paged.step_dispatches[1..] {
+        assert_eq!(dd, expect_p, "paged per-step dispatches off model");
+    }
+    let expect_pp =
+        nl as u64 * decode_staging::probs_topk_bytes(ps, h, pn_top);
+    for &pbytes in &paged.step_probs_bytes[1..] {
+        assert_eq!(pbytes, expect_pp, "paged probs bytes off model");
+    }
+    let expect_blocks: usize = paged
+        .kv
+        .iter()
+        .map(|pages| {
+            decode_dispatch::blocks_needed(pages.len() / dims_per_pos, pblock)
+        })
+        .sum();
+    assert_eq!(
+        paged.blocks_live, expect_blocks as u64,
+        "pool footprint must be Σ ⌈len/B⌉ exactly"
     );
 }
