@@ -224,6 +224,7 @@ fn main() -> anyhow::Result<()> {
              \"append_dev_paged_bytes\":{},\
              \"mirror_seed_bytes\":{},\"paged_seed_bytes\":{},\
              \"paged_handoff_bytes\":{},\
+             \"prefix_seed_bytes\":{},\
              \"sparse_call_bytes\":{}}}",
             ds::dense_host_call_bytes(1, h, h, d, dmod, l2k, true),
             ds::dense_dev_call_bytes(dmod, h, h, d, l2k, true),
@@ -237,6 +238,9 @@ fn main() -> anyhow::Result<()> {
             ds::mirror_seed_bytes(nl, h, l2k, d),
             ds::paged_seed_bytes(nl, h, l2k, d, mb),
             ds::paged_handoff_bytes(mb),
+            // host seed cost of a prefix-cache hit covering half the 2k
+            // context (the shared-prefix chat profile's system prompt)
+            prhs::model::prefill_staging::prefix_seed_bytes(nl, h, d, l2k / 2),
             ds::sparse_call_bytes(1, h, h, d, dmod, 160, false),
         );
         let json = format!(

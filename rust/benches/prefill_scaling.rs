@@ -25,6 +25,7 @@ use prhs::model::{ChunkLedger, Engine};
 use prhs::runtime::{Runtime, WeightStore};
 use prhs::util::bench::arg_value;
 use prhs::util::rng::Rng;
+use prhs::workload;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -273,6 +274,113 @@ fn main() -> anyhow::Result<()> {
             slow.tokens
         ));
     }
+    // ── shared-prefix chat: cold vs warm prefill through the prefix
+    // cache (DESIGN.md §Serving).  Two conversations share the CHAT
+    // system prompt; the first request is cold, the second seeds its
+    // shared prefix from the cache and must execute only its unshared
+    // tail.  Requires the host extend path (the seed's staging target).
+    let mut chat_json = String::from("null");
+    let mut chat_spec = workload::CHAT;
+    // fit the chat geometry to the artifact set: system prompt + one
+    // jittered user turn must fit the largest compiled extend bucket
+    // (the quick CI set has a single 512 bucket — the system prompt
+    // shrinks to 384 there), and the system prompt must span at least
+    // one prefix-cache block (≤ 128 tokens on either tier) so the cold
+    // request actually registers an entry.
+    let ext_lmax = mm
+        .buckets("prefill_extend", "l_max")
+        .iter()
+        .copied()
+        .max()
+        .unwrap_or(0);
+    let head_room = chat_spec.turn_len + chat_spec.jitter;
+    if chat_spec.system_len + head_room > ext_lmax {
+        chat_spec.system_len = ext_lmax.saturating_sub(head_room);
+    }
+    let sys = workload::chat_system_prompt(
+        &chat_spec,
+        mm.vocab_size,
+        &mut Rng::new(0xC4A7),
+    );
+    let mut turn_rng = Rng::new(0x7EA);
+    let user_a = workload::chat_user_turn(&chat_spec, mm.vocab_size, &mut turn_rng);
+    let user_b = workload::chat_user_turn(&chat_spec, mm.vocab_size, &mut turn_rng);
+    let prompt_a = workload::chat_turn_prompt(&sys, &[], &user_a);
+    let prompt_b = workload::chat_turn_prompt(&sys, &[], &user_b);
+    let longest = prompt_a.len().max(prompt_b.len());
+    let can_chat = !mm.buckets("prefill_extend", "chunk").is_empty()
+        && chat_spec.system_len >= 128
+        && mm.bucket_for("prefill_extend", "l_max", longest).is_some();
+    if can_chat {
+        let mut cfg = base.clone();
+        cfg.prefill_chunk = chunk;
+        cfg.prefix_cache_blocks = 64;
+        let mut engine = Engine::with_shared(rt.clone(), ws.clone(), cfg);
+        let mut run_one = |prompt: &[i32]| -> anyhow::Result<(f64, u64, u64, u64, u64)> {
+            let tok0 = engine.stats.prefill_tokens_executed;
+            let hit0 = engine.stats.prefix_hit_tokens;
+            let blk0 = engine.stats.prefix_hit_blocks;
+            let rehome0 = engine.stats.kv_rehome_bytes;
+            let mut seq = engine.new_sequence(0, prompt.to_vec());
+            let t0 = Instant::now();
+            while !engine.prefill_chunk(&mut seq, chunk)? {}
+            let ms = t0.elapsed().as_secs_f64() * 1e3;
+            engine.release(&mut seq);
+            Ok((
+                ms,
+                engine.stats.prefill_tokens_executed - tok0,
+                engine.stats.prefix_hit_tokens - hit0,
+                engine.stats.prefix_hit_blocks - blk0,
+                engine.stats.kv_rehome_bytes - rehome0,
+            ))
+        };
+        let (cold_ms, cold_tok, cold_hit, _, cold_rehome) = run_one(&prompt_a)?;
+        let (warm_ms, warm_tok, warm_hit, warm_blk, warm_rehome) =
+            run_one(&prompt_b)?;
+        assert_eq!(cold_hit, 0, "first request must miss the prefix cache");
+        assert!(warm_hit > 0, "second request must hit the shared prefix");
+        assert_eq!(
+            warm_tok,
+            (prompt_b.len() as u64) - warm_hit,
+            "warm prefill must execute exactly the unshared tail"
+        );
+        assert_eq!(cold_rehome, 0, "prefix path must not re-home KV");
+        assert_eq!(warm_rehome, 0, "prefix path must not re-home KV");
+        let (_, _, hits, misses, _) = engine.prefix_cache_stats();
+        println!(
+            "  chat: cold {} tok {cold_ms:.1} ms → warm {} tok {warm_ms:.1} ms \
+             (hit {warm_hit} tok / {warm_blk} blocks; {hits} hits {misses} misses)",
+            cold_tok, warm_tok
+        );
+        md.push_str(&format!(
+            "\n### Shared-prefix chat (prefix cache)\n\n\
+             | request | prompt | prefill_tokens_executed | prefix hit tok | prefix hit blocks | ttft ms | rehome KB |\n\
+             |---|---|---|---|---|---|---|\n\
+             | cold | {} | {cold_tok} | 0 | 0 | {cold_ms:.1} | {} |\n\
+             | warm | {} | {warm_tok} | {warm_hit} | {warm_blk} | {warm_ms:.1} | {} |\n",
+            prompt_a.len(),
+            cold_rehome / 1024,
+            prompt_b.len(),
+            warm_rehome / 1024,
+        ));
+        chat_json = format!(
+            "{{\"system_len\":{},\"cold_prompt\":{},\"cold_ttft_ms\":{cold_ms:.3},\
+             \"cold_prefill_tokens_executed\":{cold_tok},\
+             \"warm_prompt\":{},\"warm_ttft_ms\":{warm_ms:.3},\
+             \"warm_prefill_tokens_executed\":{warm_tok},\
+             \"prefix_hit_tokens\":{warm_hit},\"prefix_hit_blocks\":{warm_blk},\
+             \"kv_rehome_bytes\":{warm_rehome}}}",
+            sys.len(),
+            prompt_a.len(),
+            prompt_b.len(),
+        );
+    } else {
+        println!(
+            "  chat: skipped (extend buckets absent or too small for a \
+             cached system prompt)"
+        );
+    }
+
     md.push_str(
         "\nDev/host tokens grow linearly in L (recompute grows with the sum \
          of prefixes); dev prefill host-bytes grow O(chunk) per chunk + one \
@@ -290,7 +398,8 @@ fn main() -> anyhow::Result<()> {
     println!("→ results/prefill_scaling.md");
     if let Some(path) = json_path {
         let json = format!(
-            "{{\"bench\":\"prefill_scaling\",\"chunk\":{chunk},\"rows\":[{}]}}\n",
+            "{{\"bench\":\"prefill_scaling\",\"chunk\":{chunk},\"rows\":[{}],\
+             \"chat\":{chat_json}}}\n",
             json_rows.join(",")
         );
         std::fs::write(&path, json)?;

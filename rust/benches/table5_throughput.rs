@@ -51,7 +51,12 @@ fn main() -> anyhow::Result<()> {
         let spec = workload::scaled(&workload::GSM8K, ctx);
         for id in 0..bs as u64 {
             let req = workload::generate(&spec, mm.vocab_size, &mut rng);
-            sched.submit(RequestIn { id, prompt: req.prompt, max_new_tokens: gen });
+            sched.submit(RequestIn {
+                id,
+                prompt: req.prompt,
+                max_new_tokens: gen,
+                sampling: Default::default(),
+            });
         }
         let outs = sched.run_to_completion()?;
         let toks: usize = outs.iter().map(|o| o.tokens.len()).sum();

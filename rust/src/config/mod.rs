@@ -284,6 +284,22 @@ pub struct EngineConfig {
     /// requests that can never fit are rejected instead of OOMing the
     /// host.
     pub max_kv_pages: usize,
+    /// Shared-prefix cache budget in *blocks* (0 = disabled, the
+    /// default — cold baselines and the differential harness run without
+    /// it).  When positive, `Engine::release` registers each finished
+    /// sequence's block-aligned context in a `kvcache::PrefixCache` and
+    /// `Engine::new_sequence` seeds new sequences from the longest
+    /// cached match, collapsing shared-prefix prefill to the unshared
+    /// tail (`StepStats::prefill_tokens_executed` drops to the tail
+    /// length; cached device blocks are pinned via
+    /// `BlockAllocator::retain`, so eviction releases refcounts and
+    /// never copies — DESIGN.md §Serving).
+    pub prefix_cache_blocks: usize,
+    /// Engine-default sampling temperature, applied to sequences whose
+    /// request carries no explicit sampling params (0 = greedy).  The
+    /// serving path overrides this per request via
+    /// `RequestIn::sampling` / `proj::SamplingParams`.
+    pub temperature: f32,
     /// Width of the host-side planner pool used by `decode_step` for
     /// per-sequence planning and KV staging (DESIGN.md §6a).  ≤ 1 runs
     /// serially; PJRT execution stays on the engine thread either way.
@@ -318,6 +334,8 @@ impl Default for EngineConfig {
             paged_device_kv: true,
             prefill_token_budget: 0,
             max_kv_pages: 0,
+            prefix_cache_blocks: 0,
+            temperature: 0.0,
             planner_threads: 0,
             use_pallas: false,
             strict_manifest: true,
@@ -368,6 +386,13 @@ impl EngineConfig {
         }
         if let Some(n) = j.get("max_kv_pages").and_then(Json::as_usize) {
             cfg.max_kv_pages = n;
+        }
+        if let Some(n) = j.get("prefix_cache_blocks").and_then(Json::as_usize)
+        {
+            cfg.prefix_cache_blocks = n;
+        }
+        if let Some(n) = j.get("temperature").and_then(Json::as_f64) {
+            cfg.temperature = n as f32;
         }
         if let Some(n) = j.get("planner_threads").and_then(Json::as_usize) {
             cfg.planner_threads = n;
@@ -474,6 +499,11 @@ impl EngineConfig {
             num(self.prefill_token_budget),
         );
         o.insert("max_kv_pages".into(), num(self.max_kv_pages));
+        o.insert(
+            "prefix_cache_blocks".into(),
+            num(self.prefix_cache_blocks),
+        );
+        o.insert("temperature".into(), f(self.temperature));
         o.insert("planner_threads".into(), num(self.planner_threads));
         o.insert("strict_manifest".into(), Json::Bool(self.strict_manifest));
         o.insert("selector".into(), Json::Obj(sel));
@@ -561,12 +591,15 @@ mod tests {
         );
         assert_eq!(c.prefill_token_budget, 0, "budget is opt-in");
         assert_eq!(c.max_kv_pages, 0, "KV cap is opt-in");
+        assert_eq!(c.prefix_cache_blocks, 0, "prefix cache is opt-in");
+        assert_eq!(c.temperature, 0.0, "greedy decoding is the default");
         let j = Json::parse(
             r#"{"prefill_chunk":256,"planner_threads":4,"max_batch":32,
                 "prefill_recompute":true,"prefill_token_budget":512,
                 "max_kv_pages":1024,"device_prefill_kv":false,
                 "device_decode_kv":false,"batched_decode_dispatch":false,
-                "paged_device_kv":false}"#,
+                "paged_device_kv":false,"prefix_cache_blocks":64,
+                "temperature":0.8}"#,
         )
         .unwrap();
         let c = EngineConfig::from_json(&j).unwrap();
@@ -580,6 +613,8 @@ mod tests {
         assert!(!c.paged_device_kv);
         assert_eq!(c.prefill_token_budget, 512);
         assert_eq!(c.max_kv_pages, 1024);
+        assert_eq!(c.prefix_cache_blocks, 64);
+        assert!((c.temperature - 0.8).abs() < 1e-6);
     }
 
     /// Issue satellite (CLI/config symmetry): `to_json` → `from_json`
@@ -603,6 +638,8 @@ mod tests {
         c.paged_device_kv = false;
         c.prefill_token_budget = 192;
         c.max_kv_pages = 77;
+        c.prefix_cache_blocks = 33;
+        c.temperature = 0.75;
         c.planner_threads = 5;
         c.strict_manifest = false;
         c.selector.kind = SelectorKind::Cpe;
@@ -636,6 +673,8 @@ mod tests {
         assert_eq!(r.paged_device_kv, c.paged_device_kv);
         assert_eq!(r.prefill_token_budget, c.prefill_token_budget);
         assert_eq!(r.max_kv_pages, c.max_kv_pages);
+        assert_eq!(r.prefix_cache_blocks, c.prefix_cache_blocks);
+        assert_eq!(r.temperature, c.temperature);
         assert_eq!(r.planner_threads, c.planner_threads);
         assert_eq!(r.strict_manifest, c.strict_manifest);
         assert_eq!(r.selector.kind, c.selector.kind);

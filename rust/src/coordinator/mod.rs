@@ -32,6 +32,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::metrics::RunMetrics;
+use crate::model::proj::SamplingParams;
 use crate::model::{Engine, Sequence};
 
 /// Pure admission/retirement policy — kept engine-free for unit testing.
@@ -127,6 +128,20 @@ pub struct RequestIn {
     pub id: u64,
     pub prompt: Vec<i32>,
     pub max_new_tokens: usize,
+    /// Per-request sampling controls (DESIGN.md §Serving).  The default is
+    /// exact greedy decoding; `EngineConfig::temperature` only seeds the
+    /// engine-side default for sequences created outside the scheduler.
+    pub sampling: SamplingParams,
+}
+
+/// Why a request was returned unserved (`RequestOut::rejected`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RejectReason {
+    /// The request's worst-case KV page need
+    /// (`BatchPolicy::pages_needed`) exceeds the whole `max_kv_pages`
+    /// pool cap, so it could never be admitted: resubmit with a shorter
+    /// prompt / smaller `max_new_tokens`, or raise the cap.
+    KvPagesExceedCap,
 }
 
 /// A finished request.
@@ -141,10 +156,10 @@ pub struct RequestOut {
     pub steps: u64,
     /// Decode-phase retrieval ratio (see `decode_rho_hat`).
     pub rho_hat: f64,
-    /// The request could never be served (its worst-case KV page need
-    /// exceeds `max_kv_pages`) and was returned with no tokens instead of
-    /// waiting forever or OOMing the pool.
-    pub rejected: bool,
+    /// `Some(reason)` when the request could never be served and was
+    /// returned with no tokens instead of waiting forever or OOMing the
+    /// pool; `None` for a normally completed request.
+    pub rejected: Option<RejectReason>,
 }
 
 /// The scheduler: owns the engine and drives admission + prefill chunks
@@ -165,6 +180,12 @@ pub struct Scheduler {
     /// (`budget_prefill_plan`) so a token budget rotates fairly across
     /// prefilling sequences.
     prefill_rr: usize,
+    /// Tokens sampled since the last `take_partials` drain, in sampling
+    /// order: `(request id, token)`.  The server loop forwards these to
+    /// per-request streaming channels (`ClientHandle::submit_streaming`);
+    /// non-streaming callers can ignore them — every token is still in
+    /// the final `RequestOut::tokens`.
+    partials: Vec<(u64, i32)>,
     pub metrics: RunMetrics,
     started: Instant,
 }
@@ -191,6 +212,11 @@ struct RunningSeq {
     t0_retrievals: u64,
     /// Admission-time worst-case page reservation (see `PrefillingSeq`).
     reserved_pages: usize,
+    /// How many of `seq.generated` have been pushed into
+    /// `Scheduler::partials` — the streaming cursor.  The first sampled
+    /// token (`seq.next_token` at promotion) is streamed before it lands
+    /// in `generated`, so this starts at 1.
+    reported: usize,
 }
 
 impl Scheduler {
@@ -205,6 +231,7 @@ impl Scheduler {
             prefilling: Vec::new(),
             running: Vec::new(),
             prefill_rr: 0,
+            partials: Vec::new(),
             metrics: RunMetrics::default(),
             started: Instant::now(),
         }
@@ -225,6 +252,13 @@ impl Scheduler {
             return;
         }
         self.waiting.push_back((req, Instant::now(), pages));
+    }
+
+    /// Drain the tokens sampled since the last call (streaming partials).
+    /// Call after `step`; tokens arrive in sampling order per request and
+    /// each token is surfaced exactly once.
+    pub fn take_partials(&mut self) -> Vec<(u64, i32)> {
+        std::mem::take(&mut self.partials)
     }
 
     pub fn pending(&self) -> usize {
@@ -250,7 +284,7 @@ impl Scheduler {
                 ttft_us: 0.0,
                 steps: 0,
                 rho_hat: 0.0,
-                rejected: true,
+                rejected: Some(RejectReason::KvPagesExceedCap),
             });
         }
 
@@ -288,6 +322,7 @@ impl Scheduler {
             let (req, submitted, pages) = self.waiting.pop_front().unwrap();
             let mut seq = self.engine.new_sequence(req.id, req.prompt);
             seq.max_new = req.max_new_tokens;
+            seq.sampling = req.sampling;
             self.prefilling.push(PrefillingSeq {
                 seq,
                 submitted,
@@ -331,6 +366,13 @@ impl Scheduler {
         // at the serving-metrics level (DESIGN.md §6a).
         self.metrics.prefill_host_bytes =
             self.engine.stats.prefill_host_bytes_staged;
+        // Mirror the prefix-cache counters so shared-prefix savings are
+        // observable at the serving-metrics level (DESIGN.md §Serving):
+        // executed prefill tokens collapse to the unshared tail on a hit.
+        self.metrics.prefill_tokens_executed =
+            self.engine.stats.prefill_tokens_executed;
+        self.metrics.prefix_hit_tokens = self.engine.stats.prefix_hit_tokens;
+        self.metrics.prefix_hit_blocks = self.engine.stats.prefix_hit_blocks;
         // remove completed prefills (descending indices keep swap_remove
         // from disturbing pending removals)
         finished.sort_unstable_by_key(|&i| std::cmp::Reverse(i));
@@ -345,6 +387,11 @@ impl Scheduler {
             // it rather than re-reading the counter here, so there is one
             // authoritative prefill/decode boundary
             let t0_retrievals = p.seq.prefill_retrievals;
+            // stream the first token immediately (it IS the TTFT token);
+            // the decode loop pushes it into `generated` before sampling
+            // the next one, so the cursor starts at 1 to avoid replaying
+            // it from `generated[0]`.
+            self.partials.push((p.seq.id, p.seq.next_token));
             self.running.push(RunningSeq {
                 seq: p.seq,
                 prefill_us: p.prefill_us,
@@ -353,6 +400,7 @@ impl Scheduler {
                 steps: 0,
                 t0_retrievals,
                 reserved_pages: p.reserved_pages,
+                reported: 1,
             });
         }
 
@@ -389,6 +437,16 @@ impl Scheduler {
                 .max(self.engine.stats.device_blocks_live);
         }
 
+        // flush newly committed tokens to the streaming channel
+        // (before retiring, so a request's last tokens are surfaced as
+        // partials before its final `RequestOut`)
+        for r in &mut self.running {
+            for &t in r.seq.generated.iter().skip(r.reported) {
+                self.partials.push((r.seq.id, t));
+            }
+            r.reported = r.reported.max(r.seq.generated.len());
+        }
+
         // retire
         let mut i = 0;
         while i < self.running.len() {
@@ -417,7 +475,7 @@ impl Scheduler {
                         r.t0_retrievals,
                         head_steps,
                     ),
-                    rejected: false,
+                    rejected: None,
                 });
             } else {
                 i += 1;

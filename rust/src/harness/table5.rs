@@ -61,6 +61,7 @@ pub fn run(args: &Args) -> Result<()> {
                         id,
                         prompt: req.prompt,
                         max_new_tokens: gen,
+                        sampling: Default::default(),
                     });
                 }
                 let outs = sched.run_to_completion()?;

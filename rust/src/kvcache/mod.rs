@@ -649,6 +649,314 @@ impl SeqKvCache {
     }
 }
 
+// ---------------------------------------------------------------------
+// shared-prefix cache (DESIGN.md §Serving)
+
+/// FNV-1a chain hash of one token block given the previous block's chain
+/// hash (`0` for the first block).  Chaining makes block *i*'s hash a
+/// digest of the whole prefix `[0, (i+1)·block)`, so two prompts share a
+/// cached prefix iff their leading chain hashes agree — one u64 compare
+/// per block instead of a token-by-token scan (token equality is still
+/// verified on a hash match before any KV is reused; a collision can
+/// cost a wasted compare, never a wrong seed).
+pub fn chain_hash(prev: u64, tokens: &[i32]) -> u64 {
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    fn mix(mut h: u64, b: u8) -> u64 {
+        h ^= b as u64;
+        h.wrapping_mul(PRIME)
+    }
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in prev.to_le_bytes() {
+        h = mix(h, b);
+    }
+    for &t in tokens {
+        for b in t.to_le_bytes() {
+            h = mix(h, b);
+        }
+    }
+    h
+}
+
+/// Chain hashes of every complete `block`-token block of `tokens`
+/// (the partial tail block is never hashed — prefix reuse is
+/// block-granular by construction).
+pub fn prefix_hashes(tokens: &[i32], block: usize) -> Vec<u64> {
+    let mut out = Vec::with_capacity(tokens.len() / block.max(1));
+    let mut prev = 0u64;
+    for chunk in tokens.chunks_exact(block) {
+        prev = chain_hash(prev, chunk);
+        out.push(prev);
+    }
+    out
+}
+
+/// One cached prompt prefix: its chain hashes, the exact tokens (hash
+/// collisions are verified away), a host snapshot of the prefix K/V, and
+/// the retained device-pool blocks covering it (empty when the donor had
+/// no paged mirror).  `k`/`v` are `[n_layers, tokens, H, d]` row-major —
+/// position-major within a layer so seeding a sequence is one contiguous
+/// `H·d` row per (layer, pos) `SeqKvCache::append`.
+struct PrefixEntry {
+    hashes: Vec<u64>,
+    tokens: Vec<i32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// Physical device-pool block ids pinned via `BlockAllocator::retain`
+    /// at insert; aligned 1:1 with `hashes` up to its (possibly shorter)
+    /// length.  Released — never copied — on eviction.
+    dev_blocks: Vec<usize>,
+    /// LRU clock value of the last hit/insert.
+    last_use: u64,
+}
+
+/// LRU-bounded registry of cached prompt prefixes (the shared-prefix
+/// tentpole, DESIGN.md §Serving; mistral.rs `PrefixCacheManager` is the
+/// exemplar).  Prefixes are keyed by block-granular chain hashes; the
+/// budget is counted in *blocks* (`max_blocks`), so the registry's host
+/// footprint and its device-pool pin count are both bounded.  Eviction
+/// releases the evicted entry's device-block refcounts through the
+/// engine's `BlockAllocator` — it never copies KV.
+pub struct PrefixCache {
+    /// Hash-block granularity in tokens.  Equals the paged device pool's
+    /// block size when the artifact set carries the paged stages (so one
+    /// hash block pins exactly one device block), else the host
+    /// `PagePool::page_len`.
+    block: usize,
+    /// Registry budget in blocks (Σ entry blocks ≤ this).
+    max_blocks: usize,
+    n_layers: usize,
+    n_heads: usize,
+    head_dim: usize,
+    tick: u64,
+    entries: Vec<PrefixEntry>,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+/// A successful [`PrefixCache::lookup`]: entry index + matched tokens
+/// (always a positive multiple of the cache's block size, and strictly
+/// shorter than the looked-up prompt so prefill always has a tail to
+/// execute real logits from).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PrefixHit {
+    pub entry: usize,
+    pub tokens: usize,
+}
+
+impl PrefixCache {
+    pub fn new(
+        block: usize,
+        max_blocks: usize,
+        n_layers: usize,
+        n_heads: usize,
+        head_dim: usize,
+    ) -> Self {
+        assert!(block > 0, "prefix cache needs a positive block size");
+        PrefixCache {
+            block,
+            max_blocks,
+            n_layers,
+            n_heads,
+            head_dim,
+            tick: 0,
+            entries: Vec::new(),
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    /// Hash-block granularity in tokens.
+    pub fn block(&self) -> usize {
+        self.block
+    }
+
+    pub fn entries(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Σ blocks across entries — the LRU budget's occupancy.
+    pub fn blocks_cached(&self) -> usize {
+        self.entries.iter().map(|e| e.hashes.len()).sum()
+    }
+
+    /// Longest cached prefix of `prompt`, capped one token short of the
+    /// whole prompt (the unshared tail must be ≥ 1 so prefill executes
+    /// real final-chunk logits).  On a hit the entry's LRU clock is
+    /// bumped; ties between equally-long matches go to the most recently
+    /// used entry.
+    pub fn lookup(&mut self, prompt: &[i32]) -> Option<PrefixHit> {
+        let limit_blocks = prompt.len().saturating_sub(1) / self.block;
+        let want = prefix_hashes(
+            &prompt[..(limit_blocks * self.block).min(prompt.len())],
+            self.block,
+        );
+        let mut best: Option<(usize, usize)> = None; // (blocks, idx)
+        for (i, e) in self.entries.iter().enumerate() {
+            let mut m = 0usize;
+            while m < want.len()
+                && m < e.hashes.len()
+                && e.hashes[m] == want[m]
+            {
+                m += 1;
+            }
+            // hash-collision guard: reuse only token-verified prefixes
+            while m > 0
+                && e.tokens[..m * self.block] != prompt[..m * self.block]
+            {
+                m -= 1;
+            }
+            let better = match best {
+                None => m > 0,
+                Some((bm, bi)) => {
+                    m > bm
+                        || (m == bm
+                            && self.entries[bi].last_use < e.last_use)
+                }
+            };
+            if better && m > 0 {
+                best = Some((m, i));
+            }
+        }
+        match best {
+            Some((m, i)) => {
+                self.hits += 1;
+                self.tick += 1;
+                self.entries[i].last_use = self.tick;
+                Some(PrefixHit { entry: i, tokens: m * self.block })
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// One contiguous `[H·d]` K row and V row for (layer, pos) of an
+    /// entry — exactly the unit `SeqKvCache::append` consumes.
+    pub fn entry_row(
+        &self,
+        entry: usize,
+        layer: usize,
+        pos: usize,
+    ) -> (&[f32], &[f32]) {
+        let e = &self.entries[entry];
+        let w = self.n_heads * self.head_dim;
+        let off = (layer * e.tokens.len() + pos) * w;
+        (&e.k[off..off + w], &e.v[off..off + w])
+    }
+
+    /// The entry's pinned device-pool blocks (may cover fewer blocks than
+    /// the host snapshot when the donor's paged mirror was shorter or
+    /// absent).
+    pub fn entry_dev_blocks(&self, entry: usize) -> &[usize] {
+        &self.entries[entry].dev_blocks
+    }
+
+    /// Register a finished sequence's context as a cached prefix.
+    /// `tokens` must be a positive multiple of `block`; `k`/`v` are the
+    /// `[n_layers, tokens, H, d]` host snapshot and `dev_blocks` carries
+    /// refcounts this call now *owns* (retained by the caller; released
+    /// here on rejection or later on eviction, via `alloc`).
+    ///
+    /// Dedup: an existing entry already covering `tokens` just has its
+    /// LRU clock bumped (the new snapshot is dropped); an existing entry
+    /// that is a strict prefix of `tokens` is replaced.  LRU entries are
+    /// evicted until the budget fits; an insert larger than the whole
+    /// budget is rejected.  Eviction/rejection releases device-block
+    /// refcounts — it never copies.
+    pub fn insert(
+        &mut self,
+        tokens: &[i32],
+        k: Vec<f32>,
+        v: Vec<f32>,
+        dev_blocks: Vec<usize>,
+        mut alloc: Option<&mut BlockAllocator>,
+    ) -> bool {
+        let mut drop_blocks = |blocks: &[usize], alloc: &mut Option<&mut BlockAllocator>| {
+            if let Some(a) = alloc.as_deref_mut() {
+                for &b in blocks {
+                    a.release(b);
+                }
+            }
+        };
+        if tokens.is_empty()
+            || tokens.len() % self.block != 0
+            || tokens.len() / self.block > self.max_blocks
+        {
+            drop_blocks(&dev_blocks, &mut alloc);
+            return false;
+        }
+        debug_assert_eq!(
+            k.len(),
+            self.n_layers * tokens.len() * self.n_heads * self.head_dim
+        );
+        let hashes = prefix_hashes(tokens, self.block);
+        // covered by an existing entry: bump it, drop the new snapshot
+        if let Some(e) = self.entries.iter_mut().find(|e| {
+            e.hashes.len() >= hashes.len()
+                && e.hashes[..hashes.len()] == hashes[..]
+                && e.tokens[..tokens.len()] == tokens[..]
+        }) {
+            self.tick += 1;
+            e.last_use = self.tick;
+            drop_blocks(&dev_blocks, &mut alloc);
+            return false;
+        }
+        // strict prefixes of the new entry are superseded by it
+        let mut i = 0;
+        while i < self.entries.len() {
+            let e = &self.entries[i];
+            if e.hashes.len() < hashes.len()
+                && hashes[..e.hashes.len()] == e.hashes[..]
+                && tokens[..e.tokens.len()] == e.tokens[..]
+            {
+                let old = self.entries.swap_remove(i);
+                drop_blocks(&old.dev_blocks, &mut alloc);
+            } else {
+                i += 1;
+            }
+        }
+        // LRU eviction until the budget fits (never copies — refcounts
+        // just drop, and the pool frees a block at its last holder)
+        while self.blocks_cached() + hashes.len() > self.max_blocks {
+            let lru = self
+                .entries
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| e.last_use)
+                .map(|(i, _)| i)
+                .expect("budget check guarantees an entry to evict");
+            let old = self.entries.swap_remove(lru);
+            drop_blocks(&old.dev_blocks, &mut alloc);
+            self.evictions += 1;
+        }
+        self.tick += 1;
+        self.entries.push(PrefixEntry {
+            hashes,
+            tokens: tokens.to_vec(),
+            k,
+            v,
+            dev_blocks,
+            last_use: self.tick,
+        });
+        true
+    }
+
+    /// Drop every entry, releasing all pinned device blocks.  The
+    /// engine's leak checks call this before asserting the pool drains.
+    pub fn clear(&mut self, mut alloc: Option<&mut BlockAllocator>) {
+        for e in self.entries.drain(..) {
+            if let Some(a) = alloc.as_deref_mut() {
+                for &b in &e.dev_blocks {
+                    a.release(b);
+                }
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1407,5 +1715,257 @@ mod tests {
                 }
             }
         }
+    }
+
+    // -----------------------------------------------------------------
+    // prefix cache
+
+    /// Host KV snapshot in the entry layout: `[nl, tokens, h, d]` with a
+    /// value derived from its coordinates so reuse checks are exact.
+    fn snap(nl: usize, tokens: usize, h: usize, d: usize, tag: f32) -> Vec<f32> {
+        (0..nl * tokens * h * d)
+            .map(|i| tag + i as f32)
+            .collect()
+    }
+
+    /// Chain hashing is a prefix digest: hashes of a longer prompt start
+    /// with the hashes of every shorter prompt sharing its prefix, and
+    /// diverge at (and after) the first differing block.
+    #[test]
+    fn chain_hash_is_a_prefix_digest() {
+        let block = 4;
+        let long: Vec<i32> = (0..16).collect();
+        let hl = prefix_hashes(&long, block);
+        assert_eq!(hl.len(), 4);
+        for cut in 1..=4 {
+            let hs = prefix_hashes(&long[..cut * block], block);
+            assert_eq!(hs[..], hl[..cut]);
+        }
+        // partial tail block is never hashed
+        assert_eq!(prefix_hashes(&long[..block + 1], block).len(), 1);
+        // a change in block 1 leaves block 0's hash alone but changes
+        // every chained hash from block 1 on
+        let mut other = long.clone();
+        other[block] += 1;
+        let ho = prefix_hashes(&other, block);
+        assert_eq!(ho[0], hl[0]);
+        assert!(ho[1..].iter().zip(&hl[1..]).all(|(a, b)| a != b));
+    }
+
+    /// `lookup` returns the longest token-verified match, strictly
+    /// shorter than the prompt (the tail is executed, never seeded), and
+    /// bumps the hit entry's LRU clock.
+    #[test]
+    fn prefix_lookup_longest_match_and_tail_guard() {
+        let (block, nl, h, d) = (4, 1, 2, 3);
+        let mut pc = PrefixCache::new(block, 16, nl, h, d);
+        let toks: Vec<i32> = (100..116).collect();
+        let mk = |n: usize, tag: f32| {
+            (
+                toks[..n].to_vec(),
+                snap(nl, n, h, d, tag),
+                snap(nl, n, h, d, -tag),
+            )
+        };
+        let (t8, k8, v8) = mk(8, 1.0);
+        assert!(pc.insert(&t8, k8, v8, Vec::new(), None));
+        let (t12, k12, v12) = mk(12, 2.0);
+        assert!(pc.insert(&t12, k12, v12, Vec::new(), None));
+        // inserting t12 superseded t8 (a strict prefix of it)
+        assert_eq!(pc.entries(), 1);
+
+        // whole prompt cached → match caps at prompt.len()-1 rounded
+        // down to a block boundary (here: 8 of 12 tokens)
+        let hit = pc.lookup(&toks[..12]).expect("prefix cached");
+        assert_eq!(hit.tokens, 8, "tail of ≥1 token must stay unshared");
+        // longer prompt sharing all 12 tokens → full 12-token match
+        let hit = pc.lookup(&toks).expect("prefix cached");
+        assert_eq!(hit.tokens, 12);
+        // entry rows round-trip the snapshot at the entry layout
+        let (kr, vr) = pc.entry_row(hit.entry, 0, 5);
+        assert_eq!(kr, &snap(nl, 12, h, d, 2.0)[5 * h * d..6 * h * d]);
+        assert_eq!(vr, &snap(nl, 12, h, d, -2.0)[5 * h * d..6 * h * d]);
+        // diverging block 0 → miss
+        let mut cold = toks.clone();
+        cold[0] += 1;
+        assert!(pc.lookup(&cold).is_none());
+        assert_eq!((pc.hits, pc.misses), (2, 1));
+    }
+
+    /// A chain-hash collision cannot seed wrong KV: token equality is
+    /// re-verified, so a forged entry with matching hashes but different
+    /// tokens is never returned.
+    #[test]
+    fn prefix_lookup_rejects_hash_collisions() {
+        let (block, nl, h, d) = (2, 1, 1, 2);
+        let mut pc = PrefixCache::new(block, 8, nl, h, d);
+        let toks: Vec<i32> = vec![1, 2, 3, 4];
+        let k = snap(nl, 4, h, d, 0.0);
+        let v = snap(nl, 4, h, d, 0.5);
+        assert!(pc.insert(&toks, k, v, Vec::new(), None));
+        // forge a collision: same hashes, different tokens
+        pc.entries[0].tokens = vec![9, 9, 9, 9];
+        assert!(pc.lookup(&[1, 2, 3, 4, 5]).is_none());
+    }
+
+    /// LRU eviction under a block budget releases the evicted entry's
+    /// device refcounts (never copies); an insert larger than the whole
+    /// budget is rejected and its refcounts released immediately.
+    #[test]
+    fn prefix_insert_evicts_lru_and_releases_refcounts() {
+        let (block, nl, h, d) = (2, 1, 1, 2);
+        let mut ba = BlockAllocator::new(8);
+        let mut pc = PrefixCache::new(block, 4, nl, h, d);
+        // three 2-block entries against a 4-block budget
+        let mut ins = |toks: &[i32], ba: &mut BlockAllocator| {
+            let dev: Vec<usize> =
+                (0..toks.len() / block).map(|_| ba.alloc().unwrap()).collect();
+            pc.insert(
+                toks,
+                snap(nl, toks.len(), h, d, 0.0),
+                snap(nl, toks.len(), h, d, 0.0),
+                dev,
+                Some(ba),
+            )
+        };
+        assert!(ins(&[1, 2, 3, 4], &mut ba));
+        assert!(ins(&[5, 6, 7, 8], &mut ba));
+        assert_eq!((pc.blocks_cached(), ba.in_use()), (4, 4));
+        // keep the first entry warm, then overflow: the *second* entry
+        // is the LRU victim and its blocks free
+        assert!(pc.lookup(&[1, 2, 3, 4, 0]).is_some());
+        assert!(ins(&[9, 10, 11, 12], &mut ba));
+        assert_eq!(pc.evictions, 1);
+        assert_eq!((pc.blocks_cached(), ba.in_use()), (4, 4));
+        assert!(pc.lookup(&[5, 6, 7, 8, 0]).is_none(), "LRU entry evicted");
+        assert!(pc.lookup(&[1, 2, 3, 4, 0]).is_some(), "warm entry kept");
+        // over-budget insert: rejected, refcounts released
+        let before = ba.in_use();
+        assert!(!ins(&(20..32).collect::<Vec<i32>>(), &mut ba));
+        assert_eq!(ba.in_use(), before);
+        // duplicate insert: bumped, new refcounts released
+        assert!(!ins(&[1, 2, 3, 4], &mut ba));
+        assert_eq!(ba.in_use(), before);
+        // clear drains every pinned block
+        pc.clear(Some(&mut ba));
+        assert_eq!(ba.in_use(), 0);
+        assert_eq!(pc.entries(), 0);
+    }
+
+    /// Issue satellite: `BlockAllocator::retain` under prefix-cache
+    /// eviction.  Random schedule of insert (retaining live blocks into
+    /// the cache), lookup+retain (a warm sequence pinning the hit
+    /// entry's blocks into its own table), sequence release, and
+    /// over-budget inserts forcing LRU eviction — refcounts must always
+    /// equal cache-pins + sequence-pins per block, eviction must never
+    /// free a block a sequence still holds, and the pool must drain
+    /// after `clear` + all sequence releases.
+    #[test]
+    fn prop_prefix_retain_under_eviction() {
+        let (block, nl, h, d) = (2, 1, 1, 2);
+        Prop::new(40, 0x9EF1_B10C).forall(
+            |rng| {
+                let budget = gen::usize_in(rng, 2, 6);
+                let ops: Vec<(u8, usize)> = (0..40)
+                    .map(|_| (rng.below(3) as u8, rng.below(4)))
+                    .collect();
+                (budget, ops)
+            },
+            |(budget, ops)| {
+                let mut ba = BlockAllocator::new(16);
+                let mut pc = PrefixCache::new(block, *budget, nl, h, d);
+                // model: per-sequence pinned blocks
+                let mut seqs: Vec<Vec<usize>> = vec![Vec::new(); 4];
+                let mut next_tok = 0i32;
+                for &(op, slot) in ops {
+                    match op {
+                        0 => {
+                            // donor release → insert a fresh 1–3 block
+                            // prefix with freshly-allocated dev blocks
+                            let nb = 1 + (slot % 3);
+                            let mut dev = Vec::new();
+                            for _ in 0..nb {
+                                match ba.alloc() {
+                                    Some(id) => dev.push(id),
+                                    None => break,
+                                }
+                            }
+                            if dev.len() < nb {
+                                for id in dev {
+                                    ba.release(id);
+                                }
+                                continue;
+                            }
+                            let toks: Vec<i32> = (0..(nb * block) as i32)
+                                .map(|i| next_tok + i)
+                                .collect();
+                            next_tok += 100;
+                            pc.insert(
+                                &toks,
+                                snap(nl, toks.len(), h, d, 0.0),
+                                snap(nl, toks.len(), h, d, 0.0),
+                                dev,
+                                Some(&mut ba),
+                            );
+                        }
+                        1 => {
+                            // warm admission: retain the hit entry's
+                            // blocks into sequence `slot`'s table
+                            let probe: Vec<i32> =
+                                pc.entries.first().map_or_else(Vec::new, |e| {
+                                    let mut t = e.tokens.clone();
+                                    t.push(-1);
+                                    t
+                                });
+                            if let Some(hit) = pc.lookup(&probe) {
+                                for &b in pc.entry_dev_blocks(hit.entry) {
+                                    ba.retain(b);
+                                    seqs[slot].push(b);
+                                }
+                            }
+                        }
+                        _ => {
+                            for id in seqs[slot].drain(..) {
+                                ba.release(id);
+                            }
+                        }
+                    }
+                    // invariant: refcount == cache pins + sequence pins
+                    let mut want = vec![0u32; ba.capacity()];
+                    for e in &pc.entries {
+                        for &b in &e.dev_blocks {
+                            want[b] += 1;
+                        }
+                    }
+                    for &b in seqs.iter().flatten() {
+                        want[b] += 1;
+                    }
+                    for (id, &c) in want.iter().enumerate() {
+                        if ba.ref_count(id) != c {
+                            return Err(format!(
+                                "block {id}: refcount {} != pins {c}",
+                                ba.ref_count(id)
+                            ));
+                        }
+                    }
+                    if pc.blocks_cached() > *budget {
+                        return Err(format!(
+                            "cache {} blocks over budget {budget}",
+                            pc.blocks_cached()
+                        ));
+                    }
+                }
+                pc.clear(Some(&mut ba));
+                for ids in &mut seqs {
+                    for id in ids.drain(..) {
+                        ba.release(id);
+                    }
+                }
+                if ba.in_use() != 0 {
+                    return Err(format!("{} blocks leaked", ba.in_use()));
+                }
+                Ok(())
+            },
+        );
     }
 }

@@ -10,7 +10,9 @@
 use anyhow::Result;
 use prhs::config::{EngineConfig, SelectorKind};
 use prhs::coordinator::RequestIn;
+use prhs::model::proj::SamplingParams;
 use prhs::model::Engine;
+use prhs::server::SubmitError;
 use prhs::util::cli::Cli;
 use prhs::util::rng::Rng;
 use prhs::workload;
@@ -167,7 +169,12 @@ fn serve(rest: &[String]) -> Result<()> {
         .switch("host-decode-kv", "stage the decode dense/retrieval context through the host each call (disable the device-resident decode KV mirror)")
         .switch("per-seq-decode-dispatch", "dispatch the device decode path one sequence at a time (disable the batched mirror-group dispatch; parity oracle)")
         .switch("tiled-decode-kv", "keep decode KV in whole-tile per-sequence mirrors (disable the paged block pool; parity oracle)")
-        .flag("planner-threads", "0", "host-side planner pool width (0/1 = serial)");
+        .flag("planner-threads", "0", "host-side planner pool width (0/1 = serial)")
+        .flag("prefix-cache-blocks", "0", "shared-prefix cache budget in KV blocks (0 = disabled)")
+        .flag("temperature", "0.0", "per-request sampling temperature (0 = greedy)")
+        .flag("top-k", "0", "per-request top-k sampling cutoff (0 = disabled)")
+        .flag("top-p", "1.0", "per-request nucleus sampling mass (1 = disabled)")
+        .switch("chat", "run the multi-turn chat workload with streamed replies (each turn extends the previous context — exercises the prefix cache)");
     let args = cli.parse(rest).map_err(anyhow::Error::msg)?;
     let mut cfg = EngineConfig::default();
     cfg.artifacts_dir = args.get("artifacts").to_string();
@@ -187,6 +194,14 @@ fn serve(rest: &[String]) -> Result<()> {
     cfg.paged_device_kv = !args.get_bool("tiled-decode-kv");
     cfg.planner_threads = args.get_usize("planner-threads");
     cfg.strict_manifest = !args.get_bool("no-strict-manifest");
+    cfg.prefix_cache_blocks = args.get_usize("prefix-cache-blocks");
+    cfg.temperature = args.get_f64("temperature") as f32;
+    let sampling = SamplingParams {
+        temperature: args.get_f64("temperature") as f32,
+        top_k: args.get_usize("top-k"),
+        top_p: args.get_f64("top-p") as f32,
+        ..Default::default()
+    };
     // vocab comes from the manifest (read it without building an engine)
     let vocab = prhs::runtime::Manifest::load(args.get("artifacts"))?
         .model(&cfg.model)?
@@ -195,6 +210,9 @@ fn serve(rest: &[String]) -> Result<()> {
     let client = server.client();
 
     let mut rng = Rng::new(args.get_usize("seed") as u64);
+    if args.get_bool("chat") {
+        return serve_chat(&args, vocab, &client, sampling, &mut rng, server);
+    }
     let spec = workload::scaled(&workload::GSM8K, args.get_usize("prompt-len"));
     let n = args.get_usize("requests");
     let t0 = std::time::Instant::now();
@@ -206,6 +224,7 @@ fn serve(rest: &[String]) -> Result<()> {
                     id,
                     prompt: req.prompt,
                     max_new_tokens: args.get_usize("gen"),
+                    sampling: sampling.clone(),
                 })
                 .expect("submit")
         })
@@ -214,12 +233,9 @@ fn serve(rest: &[String]) -> Result<()> {
     let mut rejected = 0usize;
     for rx in rxs {
         let out = rx.recv()?;
-        if out.rejected {
+        if let Some(reason) = out.rejected {
             rejected += 1;
-            println!(
-                "req {}: REJECTED (worst-case KV pages exceed --max-kv-pages)",
-                out.id
-            );
+            println!("req {}: REJECTED ({reason:?})", out.id);
             continue;
         }
         total_tokens += out.tokens.len();
@@ -242,6 +258,91 @@ fn serve(rest: &[String]) -> Result<()> {
         } else {
             String::new()
         }
+    );
+    server.shutdown()?;
+    Ok(())
+}
+
+/// `prhs serve --chat`: multi-turn conversations over a shared system
+/// prompt, each turn streamed token-by-token.  Turn N+1's prompt is turn
+/// N's full context plus the generated reply plus a fresh user message,
+/// so with `--prefix-cache-blocks > 0` every warm turn's prefill
+/// collapses to its unshared tail (watch the per-turn prefill column
+/// drop after turn 1).
+fn serve_chat(
+    args: &prhs::util::cli::Args,
+    vocab: usize,
+    client: &prhs::server::ClientHandle,
+    sampling: SamplingParams,
+    rng: &mut Rng,
+    server: prhs::server::Server,
+) -> Result<()> {
+    let spec = workload::CHAT;
+    // the system prompt is seeded independently of --seed so every
+    // conversation shares it (that sharing is what the prefix cache
+    // exploits across conversations)
+    let sys =
+        workload::chat_system_prompt(&spec, vocab, &mut Rng::new(0xC4A7));
+    let conversations = args.get_usize("requests").max(1);
+    let gen = args.get_usize("gen");
+    let mut id = 0u64;
+    let t0 = std::time::Instant::now();
+    let mut total_tokens = 0usize;
+    for conv in 0..conversations {
+        let mut prompt = sys.clone();
+        let mut reply: Vec<i32> = Vec::new();
+        for turn in 0..spec.turns {
+            let user = workload::chat_user_turn(&spec, vocab, rng);
+            prompt = workload::chat_turn_prompt(&prompt, &reply, &user);
+            let mut req = RequestIn {
+                id,
+                prompt: prompt.clone(),
+                max_new_tokens: gen,
+                sampling: sampling.clone(),
+            };
+            id += 1;
+            // backpressure: retry the request verbatim until accepted
+            let (trx, frx) = loop {
+                match client.submit_streaming(req) {
+                    Ok(ch) => break ch,
+                    Err(SubmitError::Busy(back)) => {
+                        req = back;
+                        std::thread::sleep(
+                            std::time::Duration::from_millis(1),
+                        );
+                    }
+                    Err(SubmitError::Closed) => {
+                        anyhow::bail!("server closed")
+                    }
+                }
+            };
+            let mut streamed = 0usize;
+            while trx.recv().is_ok() {
+                streamed += 1;
+            }
+            let out = frx.recv()?;
+            if let Some(reason) = out.rejected {
+                println!("conv {conv} turn {turn}: REJECTED ({reason:?})");
+                break;
+            }
+            total_tokens += out.tokens.len();
+            println!(
+                "conv {conv} turn {turn}: prompt {} → {} tokens \
+                 ({streamed} streamed), prefill {:.1} ms, ttft {:.1} ms",
+                prompt.len(),
+                out.tokens.len(),
+                out.prefill_us / 1e3,
+                out.ttft_us / 1e3,
+            );
+            reply = out.tokens;
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "chat: {conversations} conversations x {} turns, {total_tokens} \
+         tokens in {dt:.2}s → {:.1} tok/s",
+        spec.turns,
+        total_tokens as f64 / dt
     );
     server.shutdown()?;
     Ok(())

@@ -110,6 +110,18 @@ pub struct RunMetrics {
     /// `EngineConfig::device_prefill_kv`, ∝ context tile per chunk on
     /// the host-staged paths (DESIGN.md §6a).
     pub prefill_host_bytes: u64,
+    /// Prompt tokens the engine actually ran transformer layers over
+    /// during prefill, mirrored from
+    /// `StepStats::prefill_tokens_executed` — on a prefix-cache hit this
+    /// drops to the unshared-tail length (DESIGN.md §Serving).
+    pub prefill_tokens_executed: u64,
+    /// Prompt tokens seeded from the shared-prefix cache instead of being
+    /// prefilled, mirrored from `StepStats::prefix_hit_tokens`.
+    pub prefix_hit_tokens: u64,
+    /// Device KV blocks adopted by reference (`BlockAllocator::retain`)
+    /// from the prefix cache, mirrored from
+    /// `StepStats::prefix_hit_blocks` — shared, never copied.
+    pub prefix_hit_blocks: u64,
     /// Host↔device bytes staged for decode artifacts, mirrored from
     /// `StepStats::decode_host_bytes_staged` — with
     /// `EngineConfig::device_decode_kv` the dense/retrieval KV rides the

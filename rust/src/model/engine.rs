@@ -18,7 +18,8 @@ use anyhow::{anyhow, Result};
 
 use crate::config::EngineConfig;
 use crate::kvcache::{
-    BlockAllocator, DevKvMirror, PagePool, ResidencyMode, SeqKvCache,
+    BlockAllocator, DevKvMirror, PagePool, PrefixCache, ResidencyMode,
+    SeqKvCache,
 };
 use crate::runtime::{
     ArenaHandle, ArtifactSpec, DeviceArena, Input, ModelManifest, Output,
@@ -103,6 +104,22 @@ pub mod prefill_staging {
         vocab: usize,
     ) -> u64 {
         4 * (2 * nl * h * l_max * d + dm + vocab + nl * h * l_max) as u64
+    }
+
+    /// Prefix-cache seed: host→host copy of the matched prefix's
+    /// `[nl, matched, H, d]` K/V pair out of the cache entry into the
+    /// sequence's page pool (`StepStats::prefix_seed_bytes`).  This is
+    /// deliberately *not* folded into `prefill_host_bytes_staged` — that
+    /// counter models host↔device transfers, and a prefix hit's whole
+    /// point is that the device pays only the unshared tail (shared
+    /// device blocks arrive by `BlockAllocator::retain`, zero bytes).
+    pub fn prefix_seed_bytes(
+        nl: usize,
+        h: usize,
+        d: usize,
+        matched: usize,
+    ) -> u64 {
+        4 * (2 * nl * h * matched * d) as u64
     }
 }
 
@@ -505,6 +522,36 @@ impl ChunkLedger {
         }
         sum
     }
+
+    /// [`ChunkLedger::executed_tokens`] for a prefix-seeded sequence:
+    /// the first `seeded` tokens arrive from the prefix cache (zero
+    /// executed tokens — the ledger starts at `done = seeded`), so only
+    /// the unshared tail `[seeded, total)` runs through the prefill
+    /// artifacts.  With the KV-in extend path that is exactly
+    /// `total - seeded` — the acceptance criterion's "warm request
+    /// executes only its tail" (DESIGN.md §Serving).  The recompute
+    /// oracle never seeds (`Engine::try_seed_prefix` gates on it), so
+    /// `kv_in = false` here models a hypothetical only, charged from the
+    /// seeded offset for symmetry.
+    pub fn executed_tokens_warm(
+        seeded: usize,
+        total: usize,
+        chunk: usize,
+        kv_in: bool,
+    ) -> u64 {
+        let tail = total.saturating_sub(seeded);
+        if chunk == 0 || tail == 0 {
+            return tail as u64;
+        }
+        let mut done = seeded;
+        let mut sum = 0u64;
+        while done < total {
+            let end = total.min(done + chunk);
+            sum += if kv_in { (end - done) as u64 } else { end as u64 };
+            done = end;
+        }
+        sum
+    }
 }
 
 /// Reusable per-sequence host-side scratch.  Owned by the sequence so the
@@ -636,6 +683,22 @@ pub struct Sequence {
     /// bucket) when the context outgrows its tile; freed by
     /// `Engine::release`.
     pub kv_mirror: Option<DevKvMirror>,
+    /// Per-request sampling parameters (DESIGN.md §Serving).  Defaults
+    /// to greedy; the scheduler copies `RequestIn::sampling` in at
+    /// admission, and `Engine::new_sequence` folds in the config-level
+    /// `temperature` for engine-direct callers (benches/harnesses).
+    pub sampling: proj::SamplingParams,
+    /// Prompt tokens seeded from the shared-prefix cache before any
+    /// prefill chunk ran (0 = cold).  The prefill ledger starts at this
+    /// offset; `prefill_tokens_executed` counts only `[seeded_prefix,
+    /// total)` — the acceptance observable (DESIGN.md §Serving).
+    pub seeded_prefix: usize,
+    /// Device-pool blocks retained from the prefix-cache entry at
+    /// seeding, awaiting adoption by `seed_paged_from_host` (which takes
+    /// them as the leading entries of the paged mirror's block table —
+    /// no copy, no upload).  Released by `Engine::release` if decode
+    /// never built a paged mirror.
+    pub prefix_blocks: Vec<usize>,
 }
 
 impl Sequence {
@@ -662,6 +725,9 @@ impl Sequence {
             scratch: PlanScratch::default(),
             dev_state_slot: None,
             kv_mirror: None,
+            sampling: proj::SamplingParams::default(),
+            seeded_prefix: 0,
+            prefix_blocks: Vec::new(),
         }
     }
 
@@ -740,6 +806,21 @@ pub struct StepStats {
     /// exactly, vs the whole-tile padded footprint of the tile
     /// layouts.  Current value; the coordinator tracks the peak.
     pub device_blocks_live: u64,
+    /// Prompt tokens seeded from the shared-prefix cache instead of
+    /// being executed by prefill artifacts — the complement of
+    /// `prefill_tokens_executed` for warm requests: a warm prompt's
+    /// executed count drops to exactly `prompt − prefix_hit_tokens`
+    /// (its unshared tail; DESIGN.md §Serving).
+    pub prefix_hit_tokens: u64,
+    /// Device-pool blocks adopted from the prefix cache by retain (the
+    /// new bench column): each is a physical block a warm sequence's
+    /// block table shares with the cache — zero upload, zero copy.
+    pub prefix_hit_blocks: u64,
+    /// Host→host bytes copied seeding warm sequences' page pools from
+    /// cache entries (`prefill_staging::prefix_seed_bytes`).  Kept out
+    /// of `prefill_host_bytes_staged`, which models host↔device
+    /// transfers only.
+    pub prefix_seed_bytes: u64,
 }
 
 impl StepStats {
@@ -827,8 +908,16 @@ pub struct Engine {
     pub cfg: EngineConfig,
     pub stats: StepStats,
     pub rng: Rng,
-    pub temperature: f32,
     pub probe: Option<Probe>,
+    /// Shared-prefix cache (DESIGN.md §Serving), present when
+    /// `cfg.prefix_cache_blocks > 0`: `Engine::release` registers each
+    /// finished sequence's block-aligned context here and
+    /// `new_sequence` seeds fresh sequences from the longest cached
+    /// match, so shared-prefix prefill executes only the unshared tail.
+    /// Cached entries pin device-pool blocks via
+    /// `BlockAllocator::retain`; eviction releases refcounts, never
+    /// copies.
+    prefix: Option<PrefixCache>,
     // scratch (reused across steps to keep the hot loop allocation-free)
     sc_kc: Vec<f32>,
     sc_vc: Vec<f32>,
@@ -947,6 +1036,30 @@ impl Engine {
             128,
             cfg.max_kv_pages,
         );
+        // Prefix-hash granularity: the paged device pool's block size
+        // when the paged stages are in play (one hash block then pins
+        // exactly one device block), else the host pool's page length —
+        // either way a cached prefix is page/block aligned on both
+        // tiers.
+        let prefix = if cfg.prefix_cache_blocks > 0 {
+            let block = if cfg.device_decode_kv && cfg.paged_device_kv {
+                mm.find("kv_append_dev_paged", &[])
+                    .and_then(|a| a.params.get("block").copied())
+                    .filter(|&b| b > 0)
+                    .unwrap_or(pool.page_len)
+            } else {
+                pool.page_len
+            };
+            Some(PrefixCache::new(
+                block,
+                cfg.prefix_cache_blocks,
+                mm.n_layers,
+                mm.n_heads,
+                mm.head_dim,
+            ))
+        } else {
+            None
+        };
         let seed = cfg.seed;
         Engine {
             rt,
@@ -956,8 +1069,8 @@ impl Engine {
             cfg,
             stats: StepStats::default(),
             rng: Rng::new(seed),
-            temperature: 0.0,
             probe: None,
+            prefix,
             sc_kc: Vec::new(),
             sc_vc: Vec::new(),
             sc_ks: Vec::new(),
@@ -991,14 +1104,125 @@ impl Engine {
         }
     }
 
-    pub fn new_sequence(&self, id: u64, prompt: Vec<i32>) -> Sequence {
+    /// Build a sequence for `prompt`.  `&mut self` because a prefix-
+    /// cache hit seeds the sequence's host KV (pool pages) and retains
+    /// cached device blocks before any prefill chunk runs — cold
+    /// construction mutates nothing beyond the hit/miss counters.
+    pub fn new_sequence(&mut self, id: u64, prompt: Vec<i32>) -> Sequence {
         let sel = crate::selector::build(
             &self.cfg.selector,
             self.mm.n_layers,
             self.mm.n_heads,
             self.mm.head_dim,
         );
-        Sequence::new(id, prompt, sel, self.mm.n_layers, self.cfg.max_new_tokens)
+        let mut seq = Sequence::new(
+            id,
+            prompt,
+            sel,
+            self.mm.n_layers,
+            self.cfg.max_new_tokens,
+        );
+        seq.sampling.temperature = self.cfg.temperature;
+        self.try_seed_prefix(&mut seq);
+        seq
+    }
+
+    /// Seed `seq` from the longest prefix-cache match, if any: copy the
+    /// matched K/V into the sequence's host pool pages, advance the
+    /// prefill ledger past them (so prefill executes only the unshared
+    /// tail), replay the cached keys into the fresh selector, and
+    /// retain the entry's device blocks for adoption by the paged
+    /// mirror.  No-ops (cold start) when the cache is off, the prompt
+    /// is trivial, the recompute oracle is forced (its chunks re-run
+    /// `[0, end)` and cannot start mid-prefix), or no compiled extend
+    /// bucket can resume from a non-zero offset.
+    fn try_seed_prefix(&mut self, seq: &mut Sequence) {
+        if self.prefix.is_none()
+            || self.cfg.prefill_recompute
+            || seq.prompt.len() < 2
+        {
+            return;
+        }
+        // the warm path resumes via `prefill_extend[_dev]`-style KV-in
+        // chunks; without an l_max bucket covering the prompt or any
+        // extend chunk bucket, only cold paths exist — don't seed
+        if self
+            .mm
+            .bucket_for("prefill_extend", "l_max", seq.prompt.len())
+            .is_none()
+        {
+            return;
+        }
+        let chunks = self.mm.buckets("prefill_extend", "chunk");
+        let tail_cap = chunks.iter().copied().max().unwrap_or(0);
+        if tail_cap == 0 {
+            return;
+        }
+        let Some(hit) = self
+            .prefix
+            .as_mut()
+            .and_then(|pc| pc.lookup(&seq.prompt))
+        else {
+            return;
+        };
+        let matched = hit.tokens;
+        // monolithic prefill (chunk = 0) runs the whole tail as ONE
+        // extend chunk — it must fit a compiled chunk bucket
+        if self.cfg.prefill_chunk == 0
+            && seq.prompt.len() - matched > tail_cap
+        {
+            return;
+        }
+        // host seed: one contiguous [H·d] row per (layer, pos) out of
+        // the entry into the sequence's pool pages
+        let pc = self.prefix.as_ref().expect("hit implies cache");
+        let nl = self.mm.n_layers;
+        for pos in 0..matched {
+            for layer in 0..nl {
+                let (k, v) = pc.entry_row(hit.entry, layer, pos);
+                if seq.cache.append(&mut self.pool, layer, k, v).is_err() {
+                    // pool cap: roll back and run cold
+                    seq.cache.release(&mut self.pool);
+                    return;
+                }
+            }
+            seq.cache.commit_token();
+        }
+        seq.prefill.advance(matched);
+        seq.seeded_prefix = matched;
+        // replay cached keys into the fresh selector in the same
+        // (layer → head → pos) order the dev prefill path reports —
+        // chunk-order insensitivity is already a selector contract
+        for layer in 0..nl {
+            for head in 0..self.mm.n_heads {
+                for pos in 0..matched {
+                    let k = seq.cache.key(&self.pool, layer, head, pos);
+                    seq.selector.observe_new_key(layer, head, pos, k);
+                }
+            }
+        }
+        // pin the entry's device blocks for the paged mirror to adopt
+        let pc = self.prefix.as_ref().expect("hit implies cache");
+        let dev = pc.entry_dev_blocks(hit.entry);
+        let block = pc.block();
+        let share = (matched / block).min(dev.len());
+        if share > 0 {
+            if let Some(p) = self.paged.as_mut() {
+                for &b in &dev[..share] {
+                    p.alloc.retain(b);
+                    seq.prefix_blocks.push(b);
+                }
+                self.stats.prefix_hit_blocks += share as u64;
+            }
+        }
+        self.stats.prefix_hit_tokens += matched as u64;
+        self.stats.prefix_seed_bytes += prefill_staging::prefix_seed_bytes(
+            nl,
+            self.mm.n_heads,
+            self.mm.head_dim,
+            matched,
+        );
+        self.note_blocks_live();
     }
 
     fn art(&self, stage: &str, params: &[(&str, usize)]) -> Result<ArtifactSpec> {
@@ -1075,9 +1299,17 @@ impl Engine {
         }
         let chunk = self.effective_chunk(chunk);
         let (start, end) = seq.prefill.next(chunk);
-        if let Some((cb, lb)) = self.dev_buckets(start, end, seq.prompt.len())
-        {
-            return self.prefill_chunk_dev(seq, start, end, cb, lb);
+        // Prefix-seeded sequences skip the device path: its loop-carried
+        // state starts from the zero template, so it cannot resume from
+        // cached KV — the host KV-in extend path (which stages the
+        // seeded `[0, start)` context) is the warm route (DESIGN.md
+        // §Serving).
+        if seq.seeded_prefix == 0 {
+            if let Some((cb, lb)) =
+                self.dev_buckets(start, end, seq.prompt.len())
+            {
+                return self.prefill_chunk_dev(seq, start, end, cb, lb);
+            }
         }
         debug_assert_eq!(start, seq.cache.len(), "chunk must resume at cache end");
         if let Some((cb, lb)) = self.extend_buckets(start, end) {
@@ -1146,7 +1378,8 @@ impl Engine {
     pub fn prefill_chunk_cost(&self, seq: &Sequence, chunk: usize) -> usize {
         let chunk = self.effective_chunk(chunk);
         let (start, end) = seq.prefill.next(chunk);
-        if self.dev_buckets(start, end, seq.prompt.len()).is_some()
+        if (seq.seeded_prefix == 0
+            && self.dev_buckets(start, end, seq.prompt.len()).is_some())
             || self.extend_buckets(start, end).is_some()
         {
             end - start
@@ -1196,8 +1429,12 @@ impl Engine {
     /// record logits, sample the first token.
     fn finish_prefill(&mut self, seq: &mut Sequence, logits: &[f32]) {
         seq.last_logits = logits.to_vec();
-        seq.next_token =
-            proj::sample(logits, self.temperature, &mut self.rng) as i32;
+        seq.next_token = proj::sample_params(
+            logits,
+            &seq.sampling,
+            &seq.generated,
+            &mut self.rng,
+        ) as i32;
         seq.prefill_retrievals = seq.selector.retrievals();
     }
 
@@ -1433,16 +1670,31 @@ impl Engine {
             self.note_blocks_live();
             return Ok(true);
         }
-        let mut blocks = Vec::with_capacity(want);
+        // Adopt prefix-cache blocks retained at seeding as the leading
+        // table entries — refcounts already held, zero upload for the
+        // shared span.  (The scatter below still writes them, but with
+        // bitwise-identical floats: donor blocks and the warm host rows
+        // derive from the same KV, so sharing's win is device *memory*,
+        // not scatter bandwidth.)  A seeded sequence always has
+        // want > shared: the tail is ≥ 1 token by the lookup contract,
+        // and decode appends land at positions ≥ seeded_prefix — never
+        // inside the shared span.
+        let shared = std::mem::take(&mut seq.prefix_blocks);
+        debug_assert!(shared.len() <= want);
+        let mut blocks = shared;
+        let shared_len = blocks.len();
         {
             let p = self.paged.as_mut().expect("pool just ensured");
-            for _ in 0..want {
+            while blocks.len() < want {
                 match p.alloc.alloc() {
                     Some(id) => blocks.push(id),
                     None => {
-                        for id in blocks {
+                        for id in blocks.drain(shared_len..) {
                             p.alloc.release(id);
                         }
+                        // keep the retained prefix blocks for a later
+                        // attempt (or release at `Engine::release`)
+                        seq.prefix_blocks = blocks;
                         return Ok(false); // exhausted: tile fallback
                     }
                 }
@@ -3503,10 +3755,20 @@ impl Engine {
             seq.cache.commit_token();
             let row = &logits[i * vocab..(i + 1) * vocab];
             seq.last_logits = row.to_vec();
-            let tok = proj::sample(row, self.temperature, &mut self.rng) as i32;
+            // commit the in-flight token BEFORE sampling so the
+            // repeat/presence penalties see it; with default (greedy)
+            // params the order is observationally identical
             seq.generated.push(seq.next_token);
+            let tok = proj::sample_params(
+                row,
+                &seq.sampling,
+                &seq.generated,
+                &mut self.rng,
+            ) as i32;
             seq.next_token = tok;
-            if seq.generated.len() >= seq.max_new {
+            if seq.generated.len() >= seq.max_new
+                || seq.sampling.hit_stop(&seq.generated)
+            {
                 seq.done = true;
             }
         }
@@ -3527,11 +3789,108 @@ impl Engine {
 
     /// Release a finished sequence's pages, its decode KV mirror, and
     /// (for a sequence abandoned mid-prefill) its device-resident
-    /// prefill state.
+    /// prefill state.  With the prefix cache on, the sequence's
+    /// block-aligned context is registered first — snapshotting host KV
+    /// and retaining its paged device blocks — so the next
+    /// shared-prefix request prefills only its unshared tail.
     pub fn release(&mut self, seq: &mut Sequence) {
+        self.prefix_insert(seq);
         seq.cache.release(&mut self.pool);
         self.dev_release(seq);
         self.drop_mirror(seq);
+        // prefix blocks retained at seeding but never adopted by a
+        // paged mirror (e.g. decode stayed on a tile/host path) still
+        // hold refcounts
+        if let Some(p) = self.paged.as_mut() {
+            for id in seq.prefix_blocks.drain(..) {
+                p.alloc.release(id);
+            }
+        } else {
+            seq.prefix_blocks.clear();
+        }
+        self.note_blocks_live();
+    }
+
+    /// Register `seq`'s context (prompt + generated, truncated to the
+    /// cached length and then to a block boundary) in the prefix cache.
+    fn prefix_insert(&mut self, seq: &Sequence) {
+        let Some(pc) = self.prefix.as_mut() else {
+            return;
+        };
+        let block = pc.block();
+        let t = seq.cache.len();
+        let cb = (t / block) * block;
+        if cb == 0 {
+            return;
+        }
+        // context token at position p: prompt for p < prompt.len(),
+        // else generated[p - prompt.len()] (committed KV trails the
+        // in-flight `next_token` by exactly the cache length)
+        let mut tokens = Vec::with_capacity(cb);
+        tokens.extend_from_slice(&seq.prompt[..cb.min(seq.prompt.len())]);
+        if cb > seq.prompt.len() {
+            tokens.extend_from_slice(&seq.generated[..cb - seq.prompt.len()]);
+        }
+        let (nl, h, d) =
+            (self.mm.n_layers, self.mm.n_heads, self.mm.head_dim);
+        let mut k = vec![0f32; nl * cb * h * d];
+        let mut v = vec![0f32; nl * cb * h * d];
+        for layer in 0..nl {
+            for pos in 0..cb {
+                for head in 0..h {
+                    let off = ((layer * cb + pos) * h + head) * d;
+                    k[off..off + d].copy_from_slice(
+                        seq.cache.key(&self.pool, layer, head, pos),
+                    );
+                    v[off..off + d].copy_from_slice(
+                        seq.cache.value(&self.pool, layer, head, pos),
+                    );
+                }
+            }
+        }
+        // pin the covering device blocks (if the sequence decoded on
+        // the paged pool with a matching block size) so a future hit
+        // shares them by retain instead of re-uploading
+        let mut dev = Vec::new();
+        if let (
+            Some(p),
+            Some(DevKvMirror::Paged { blocks, block: mb, .. }),
+        ) = (self.paged.as_mut(), seq.kv_mirror.as_ref())
+        {
+            if *mb == block {
+                for &id in blocks.iter().take(cb / block) {
+                    p.alloc.retain(id);
+                    dev.push(id);
+                }
+            }
+        }
+        let pc = self.prefix.as_mut().expect("checked above");
+        pc.insert(
+            &tokens,
+            k,
+            v,
+            dev,
+            self.paged.as_mut().map(|p| &mut p.alloc),
+        );
+    }
+
+    /// Drop every prefix-cache entry, releasing all device blocks it
+    /// pinned — the leak-check drain for tests/benches that assert the
+    /// paged pool empties after all sequences release.
+    pub fn prefix_cache_clear(&mut self) {
+        let alloc = self.paged.as_mut().map(|p| &mut p.alloc);
+        if let Some(pc) = self.prefix.as_mut() {
+            pc.clear(alloc);
+        }
+        self.note_blocks_live();
+    }
+
+    /// Prefix-cache observability: `(entries, blocks_cached, hits,
+    /// misses, evictions)`; all zeros when the cache is off.
+    pub fn prefix_cache_stats(&self) -> (usize, usize, u64, u64, u64) {
+        self.prefix.as_ref().map_or((0, 0, 0, 0, 0), |pc| {
+            (pc.entries(), pc.blocks_cached(), pc.hits, pc.misses, pc.evictions)
+        })
     }
 
     /// Live device-arena slots (prefill states + decode mirrors) — the
@@ -3866,5 +4225,129 @@ mod tests {
             append_dev_paged_bytes(s, NL, H, D),
             append_dev_batch_bytes(s, NL, H, D)
         );
+    }
+
+    /// Issue acceptance criterion, engine-free: two sequences sharing a
+    /// ≥ N-block prompt prefix.  The first (cold) runs a full prefill
+    /// and registers its context; the second (warm) seeds the shared
+    /// span from the cache and executes exactly its unshared tail —
+    /// `prefill_tokens_executed == tail`, `kv_rehome_bytes == 0` (the
+    /// warm route is seed + extend chunks; nothing re-homes), and the
+    /// shared device blocks' refcounts drain to zero once both
+    /// sequences release and the cache is cleared (leak check).
+    #[test]
+    fn shared_prefix_skips_prefill_work() {
+        use crate::kvcache::{BlockAllocator, PrefixCache};
+
+        let block = 64usize;
+        let chunk = 128usize;
+        let shared: Vec<i32> = (0..512).map(|i| i as i32).collect(); // 8 blocks
+        let tail_a: Vec<i32> = (1000..1096).collect();
+        let tail_b: Vec<i32> = (2000..2112).collect();
+
+        let mut ba = BlockAllocator::new(64);
+        let mut pc = PrefixCache::new(block, 32, NL, H, D);
+        let mut stats = super::StepStats::default();
+
+        // --- sequence A: cold. lookup misses; full prompt executes ---
+        let prompt_a: Vec<i32> =
+            shared.iter().chain(&tail_a).copied().collect();
+        assert!(pc.lookup(&prompt_a).is_none());
+        stats.prefill_tokens_executed +=
+            ChunkLedger::executed_tokens(prompt_a.len(), chunk, true);
+        assert_eq!(stats.prefill_tokens_executed, prompt_a.len() as u64);
+        // A decodes on the paged pool, then releases: its block-aligned
+        // context is registered, pinning the covering device blocks
+        let a_blocks: Vec<usize> = (0..prompt_a.len() / block)
+            .map(|_| ba.alloc().unwrap())
+            .collect();
+        let cb = (prompt_a.len() / block) * block; // 576 of 608
+        let mut dev = Vec::new();
+        for &id in &a_blocks[..cb / block] {
+            ba.retain(id);
+            dev.push(id);
+        }
+        let snap = vec![0f32; NL * cb * H * D];
+        assert!(pc.insert(
+            &prompt_a[..cb],
+            snap.clone(),
+            snap,
+            dev,
+            Some(&mut ba),
+        ));
+        // A's own mirror releases; cached pins keep the blocks live
+        for id in a_blocks {
+            ba.release(id);
+        }
+        assert_eq!(ba.in_use(), cb / block, "cache pins survive A");
+
+        // --- sequence B: warm. longest match = the shared 8 blocks ---
+        let prompt_b: Vec<i32> =
+            shared.iter().chain(&tail_b).copied().collect();
+        let hit = pc.lookup(&prompt_b).expect("shared prefix cached");
+        assert_eq!(hit.tokens, shared.len(), "matched at block granularity");
+        let tail = prompt_b.len() - hit.tokens;
+        // B's ledger starts at the seeded offset: executed == tail
+        let warm =
+            ChunkLedger::executed_tokens_warm(hit.tokens, prompt_b.len(), chunk, true);
+        assert_eq!(warm, tail as u64, "warm prefill executes only the tail");
+        stats.prefill_tokens_executed += warm;
+        stats.prefix_hit_tokens += hit.tokens as u64;
+        stats.prefix_seed_bytes +=
+            prefix_seed_bytes(NL, H, D, hit.tokens);
+        assert_eq!(
+            stats.prefill_tokens_executed,
+            (prompt_a.len() + tail) as u64
+        );
+        assert_eq!(
+            stats.prefix_seed_bytes,
+            4 * (2 * NL * H * hit.tokens * D) as u64
+        );
+        // B retains the hit entry's device blocks into its own table —
+        // refcounts, never copies: kv_rehome stays exactly 0
+        let mut b_table: Vec<usize> = Vec::new();
+        for &id in pc.entry_dev_blocks(hit.entry)[..hit.tokens / block].iter()
+        {
+            ba.retain(id);
+            b_table.push(id);
+        }
+        stats.prefix_hit_blocks += b_table.len() as u64;
+        assert_eq!(stats.prefix_hit_blocks, (shared.len() / block) as u64);
+        assert_eq!(stats.kv_rehome_bytes, 0);
+        // B's tail grows fresh blocks
+        let need = prompt_b.len().div_ceil(block);
+        while b_table.len() < need {
+            b_table.push(ba.alloc().unwrap());
+        }
+
+        // --- leak check: both releases + cache clear drain the pool ---
+        for id in b_table {
+            ba.release(id);
+        }
+        assert_eq!(ba.in_use(), cb / block, "only cache pins remain");
+        pc.clear(Some(&mut ba));
+        assert_eq!(ba.in_use(), 0, "refcounts drop to zero — no leaks");
+    }
+
+    /// Warm executed-token model edge cases: monolithic warm prefill is
+    /// one tail-sized extend chunk; chunked warm prefill sums to the
+    /// tail on the KV-in path; an unseeded sequence degenerates to the
+    /// cold model.
+    #[test]
+    fn executed_tokens_warm_matches_tail() {
+        let f = ChunkLedger::executed_tokens_warm;
+        assert_eq!(f(512, 608, 0, true), 96);
+        assert_eq!(f(512, 608, 128, true), 96);
+        assert_eq!(f(512, 512, 128, true), 0, "fully-seeded: no work");
+        assert_eq!(f(512, 513, 1, true), 1);
+        for chunk in [0usize, 64, 128, 1000] {
+            assert_eq!(
+                f(0, 608, chunk, true),
+                ChunkLedger::executed_tokens(608, chunk, true),
+                "unseeded warm model == cold model at chunk {chunk}"
+            );
+        }
+        // recompute hypothetical: each chunk re-runs [0, end)
+        assert_eq!(f(512, 768, 128, false), (640 + 768) as u64);
     }
 }

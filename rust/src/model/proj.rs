@@ -125,6 +125,128 @@ pub fn sample(logits: &[f32], temperature: f32, rng: &mut Rng) -> usize {
     rng.sample_weighted(&probs)
 }
 
+/// Per-request sampling parameters (DESIGN.md §Serving).  The default is
+/// exact greedy decoding — every knob at its neutral value — so a
+/// request that sets nothing reproduces the engine's historical
+/// `temperature = 0` path bit-for-bit (pinned by
+/// `sample_params_default_is_greedy`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SamplingParams {
+    /// ≤ 0 → greedy argmax (penalties still apply); > 0 → softmax over
+    /// `logits / temperature`.
+    pub temperature: f32,
+    /// Keep only the `top_k` highest logits before softmax; 0 disables.
+    pub top_k: usize,
+    /// Nucleus sampling: keep the smallest probability-sorted set with
+    /// cumulative mass ≥ `top_p`, renormalized.  Values ≤ 0 or ≥ 1
+    /// disable.
+    pub top_p: f32,
+    /// Divide positive / multiply negative logits of already-generated
+    /// tokens by this factor (the llama.cpp convention); 1.0 disables.
+    pub repeat_penalty: f32,
+    /// Flat logit subtraction for any token present in the history
+    /// (OpenAI-style); 0.0 disables.
+    pub presence_penalty: f32,
+    /// Stop sequences over token ids: generation ends when the generated
+    /// suffix equals one of these (the stop tokens stay in the output).
+    pub stop: Vec<Vec<i32>>,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        SamplingParams {
+            temperature: 0.0,
+            top_k: 0,
+            top_p: 1.0,
+            repeat_penalty: 1.0,
+            presence_penalty: 0.0,
+            stop: Vec::new(),
+        }
+    }
+}
+
+impl SamplingParams {
+    /// True once `generated` ends with any configured stop sequence.
+    pub fn hit_stop(&self, generated: &[i32]) -> bool {
+        self.stop.iter().any(|s| {
+            !s.is_empty() && generated.len() >= s.len()
+                && &generated[generated.len() - s.len()..] == s.as_slice()
+        })
+    }
+}
+
+/// Full per-request sampling chain: repeat/presence penalties over the
+/// `history` of already-emitted tokens, then temperature → top-k mask →
+/// softmax → top-p nucleus → weighted draw.  Pure (all state in the
+/// arguments) so it unit-tests against [`sample`]'s greedy path without
+/// an engine.
+pub fn sample_params(
+    logits: &[f32],
+    p: &SamplingParams,
+    history: &[i32],
+    rng: &mut Rng,
+) -> usize {
+    use crate::util::fx;
+    let neutral = p.repeat_penalty == 1.0 && p.presence_penalty == 0.0;
+    let mut work: Vec<f32>;
+    let row: &[f32] = if neutral {
+        logits
+    } else {
+        work = logits.to_vec();
+        for (i, &t) in history.iter().enumerate() {
+            // penalize each distinct token once, however often it recurs
+            if t < 0 || t as usize >= work.len() || history[..i].contains(&t)
+            {
+                continue;
+            }
+            let l = &mut work[t as usize];
+            if p.repeat_penalty != 1.0 {
+                *l = if *l > 0.0 {
+                    *l / p.repeat_penalty
+                } else {
+                    *l * p.repeat_penalty
+                };
+            }
+            *l -= p.presence_penalty;
+        }
+        &work
+    };
+    if p.temperature <= 0.0 {
+        return fx::argmax(row);
+    }
+    let mut probs: Vec<f32> =
+        row.iter().map(|&x| x / p.temperature).collect();
+    if p.top_k > 0 && p.top_k < probs.len() {
+        let keep = fx::top_k_indices(&probs, p.top_k);
+        let mut masked = vec![f32::NEG_INFINITY; probs.len()];
+        for i in keep {
+            masked[i] = probs[i];
+        }
+        probs = masked;
+    }
+    fx::softmax(&mut probs);
+    if p.top_p > 0.0 && p.top_p < 1.0 {
+        // nucleus: smallest prob-desc set with cumulative mass ≥ top_p
+        let order = fx::top_k_indices(&probs, probs.len());
+        let mut cum = 0.0f32;
+        let mut keep = vec![false; probs.len()];
+        for i in order {
+            keep[i] = true;
+            cum += probs[i];
+            if cum >= p.top_p {
+                break;
+            }
+        }
+        for (i, &k) in keep.iter().enumerate() {
+            if !k {
+                probs[i] = 0.0;
+            }
+        }
+        // sample_weighted renormalizes (weights need not sum to 1)
+    }
+    rng.sample_weighted(&probs)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -220,5 +342,111 @@ mod tests {
             .filter(|_| sample(&logits, 1.0, &mut rng) == 1)
             .count();
         assert!(hits > 190);
+    }
+
+    /// The satellite contract: default params reproduce the historical
+    /// greedy path exactly, for any logits and any rng state.
+    #[test]
+    fn sample_params_default_is_greedy() {
+        let p = SamplingParams::default();
+        let mut rng = Rng::new(7);
+        let mut rng2 = Rng::new(7);
+        for seed in 0..20 {
+            let mut g = Rng::new(seed);
+            let logits: Vec<f32> = (0..64).map(|_| g.normal()).collect();
+            assert_eq!(
+                sample_params(&logits, &p, &[3, 3, 5], &mut rng),
+                sample(&logits, 0.0, &mut rng2),
+            );
+        }
+        // and with temperature only, it matches `sample` draw-for-draw
+        let p = SamplingParams { temperature: 0.7, ..Default::default() };
+        let logits = [0.5f32, 1.5, -0.25, 0.0];
+        let mut a = Rng::new(11);
+        let mut b = Rng::new(11);
+        for _ in 0..50 {
+            assert_eq!(
+                sample_params(&logits, &p, &[], &mut a),
+                sample(&logits, 0.7, &mut b),
+            );
+        }
+    }
+
+    #[test]
+    fn sample_params_top_k_masks_tail() {
+        let p = SamplingParams {
+            temperature: 1.0,
+            top_k: 2,
+            ..Default::default()
+        };
+        let logits = [5.0f32, 4.0, -10.0, -10.0];
+        let mut rng = Rng::new(2);
+        for _ in 0..200 {
+            assert!(sample_params(&logits, &p, &[], &mut rng) < 2);
+        }
+    }
+
+    #[test]
+    fn sample_params_top_p_keeps_nucleus() {
+        // probs ≈ [0.72, 0.26, 0.01, 0.01]; top_p=0.9 keeps {0, 1}
+        let p = SamplingParams {
+            temperature: 1.0,
+            top_p: 0.9,
+            ..Default::default()
+        };
+        let logits = [4.0f32, 3.0, -0.5, -0.5];
+        let mut rng = Rng::new(3);
+        let mut seen1 = false;
+        for _ in 0..300 {
+            let t = sample_params(&logits, &p, &[], &mut rng);
+            assert!(t < 2, "tail token {t} escaped the nucleus");
+            seen1 |= t == 1;
+        }
+        assert!(seen1, "nucleus keeps the minimal set, not just argmax");
+    }
+
+    #[test]
+    fn sample_params_penalties_demote_history() {
+        // repeat penalty flips the argmax off a repeated token ...
+        let p = SamplingParams {
+            repeat_penalty: 2.0,
+            ..Default::default()
+        };
+        let logits = [3.0f32, 2.0, 1.0];
+        let mut rng = Rng::new(4);
+        assert_eq!(sample_params(&logits, &p, &[], &mut rng), 0);
+        assert_eq!(sample_params(&logits, &p, &[0], &mut rng), 1);
+        // ... once per distinct token, however often it recurs
+        assert_eq!(sample_params(&logits, &p, &[0, 0, 0], &mut rng), 1);
+        // negative logits move away from zero (llama.cpp convention)
+        let neg = [-1.0f32, -3.0];
+        assert_eq!(sample_params(&neg, &p, &[0], &mut rng), 0);
+        // presence penalty is flat and stacks on distinct tokens
+        let p = SamplingParams {
+            presence_penalty: 2.5,
+            ..Default::default()
+        };
+        assert_eq!(sample_params(&logits, &p, &[0, 1], &mut rng), 2);
+        // out-of-range history ids are ignored, not a panic
+        assert_eq!(sample_params(&logits, &p, &[-1, 99], &mut rng), 0);
+    }
+
+    #[test]
+    fn hit_stop_matches_suffix_only() {
+        let p = SamplingParams {
+            stop: vec![vec![7, 8], vec![5]],
+            ..Default::default()
+        };
+        assert!(p.hit_stop(&[1, 7, 8]));
+        assert!(p.hit_stop(&[5]));
+        assert!(!p.hit_stop(&[7, 8, 9]), "stop must be a suffix");
+        assert!(!p.hit_stop(&[7]), "partial stop is not a stop");
+        let none = SamplingParams::default();
+        assert!(!none.hit_stop(&[1, 2, 3]));
+        let empty = SamplingParams {
+            stop: vec![vec![]],
+            ..Default::default()
+        };
+        assert!(!empty.hit_stop(&[1]), "empty stop sequence never fires");
     }
 }

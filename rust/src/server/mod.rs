@@ -16,7 +16,10 @@ use crate::coordinator::{RequestIn, RequestOut, Scheduler};
 use crate::model::Engine;
 
 enum Msg {
-    Request(RequestIn, SyncSender<RequestOut>),
+    /// A request, its final-reply channel, and (for streaming submits) a
+    /// per-token channel the server loop feeds from the scheduler's
+    /// partials (DESIGN.md §Serving).
+    Request(RequestIn, SyncSender<RequestOut>, Option<SyncSender<i32>>),
     Shutdown,
 }
 
@@ -29,7 +32,9 @@ pub struct ClientHandle {
 #[derive(Debug)]
 pub enum SubmitError {
     /// Ingress queue full (backpressure signal).  Carries the rejected
-    /// request back to the caller so a retry needs no reconstruction.
+    /// request back to the caller so a retry needs no reconstruction —
+    /// back off and resubmit the returned request verbatim (see
+    /// [`ClientHandle::submit`] for the retry pattern).
     Busy(RequestIn),
     /// Server shut down.
     Closed,
@@ -37,24 +42,109 @@ pub enum SubmitError {
 
 impl ClientHandle {
     /// Blocking request/response.
+    ///
+    /// Unlike [`submit`](Self::submit) this *blocks* when the ingress
+    /// queue is full (backpressure propagates to the caller's thread),
+    /// so it never returns [`SubmitError::Busy`] — only
+    /// [`SubmitError::Closed`] after shutdown.  Check
+    /// `RequestOut::rejected` on the reply: `Some(reason)` means the
+    /// request was never served (e.g. its worst-case KV page need
+    /// exceeds `max_kv_pages`) and carries no tokens.
+    ///
+    /// ```no_run
+    /// use prhs::config::EngineConfig;
+    /// use prhs::coordinator::RequestIn;
+    /// use prhs::server::Server;
+    ///
+    /// let server = Server::spawn_with_config(EngineConfig::default(), 8);
+    /// let client = server.client();
+    /// let out = client
+    ///     .generate(RequestIn {
+    ///         id: 1,
+    ///         prompt: vec![11, 12, 13],
+    ///         max_new_tokens: 4,
+    ///         sampling: Default::default(),
+    ///     })
+    ///     .expect("server alive");
+    /// match out.rejected {
+    ///     None => println!("{} tokens", out.tokens.len()),
+    ///     Some(reason) => eprintln!("unservable: {reason:?}"),
+    /// }
+    /// ```
     pub fn generate(&self, req: RequestIn) -> Result<RequestOut, SubmitError> {
         let (rtx, rrx) = sync_channel(1);
         self.tx
-            .send(Msg::Request(req, rtx))
+            .send(Msg::Request(req, rtx, None))
             .map_err(|_| SubmitError::Closed)?;
         rrx.recv().map_err(|_| SubmitError::Closed)
     }
 
     /// Non-blocking submit; returns the reply receiver.  On backpressure
-    /// the request is handed back inside `SubmitError::Busy` for retry.
+    /// the request is handed back inside [`SubmitError::Busy`] for retry:
+    /// take the returned request, back off, and resubmit it verbatim —
+    /// no reconstruction needed.
+    ///
+    /// ```no_run
+    /// use prhs::config::EngineConfig;
+    /// use prhs::coordinator::RequestIn;
+    /// use prhs::server::{Server, SubmitError};
+    ///
+    /// let server = Server::spawn_with_config(EngineConfig::default(), 2);
+    /// let client = server.client();
+    /// let mut req = RequestIn {
+    ///     id: 1,
+    ///     prompt: vec![11, 12, 13],
+    ///     max_new_tokens: 4,
+    ///     sampling: Default::default(),
+    /// };
+    /// let reply = loop {
+    ///     match client.submit(req) {
+    ///         Ok(rx) => break rx,
+    ///         // queue full: back off, retry the same request verbatim
+    ///         Err(SubmitError::Busy(back)) => {
+    ///             req = back;
+    ///             std::thread::sleep(std::time::Duration::from_millis(1));
+    ///         }
+    ///         Err(SubmitError::Closed) => panic!("server shut down"),
+    ///     }
+    /// };
+    /// let out = reply.recv().expect("server alive");
+    /// assert!(out.rejected.is_none(), "rejected: {:?}", out.rejected);
+    /// ```
     pub fn submit(
         &self,
         req: RequestIn,
     ) -> Result<Receiver<RequestOut>, SubmitError> {
         let (rtx, rrx) = sync_channel(1);
-        match self.tx.try_send(Msg::Request(req, rtx)) {
+        match self.tx.try_send(Msg::Request(req, rtx, None)) {
             Ok(()) => Ok(rrx),
-            Err(TrySendError::Full(Msg::Request(req, _))) => {
+            Err(TrySendError::Full(Msg::Request(req, _, _))) => {
+                Err(SubmitError::Busy(req))
+            }
+            Err(TrySendError::Full(_)) => unreachable!("submit sends requests"),
+            Err(TrySendError::Disconnected(_)) => Err(SubmitError::Closed),
+        }
+    }
+
+    /// Streaming submit: like [`submit`](Self::submit), but also returns
+    /// a per-token receiver that yields each sampled token as the
+    /// scheduler commits it, in order.  The token channel closes when the
+    /// request completes; the final [`RequestOut`] (with the full token
+    /// list, timings, and rejection status) still arrives on the reply
+    /// receiver.  Backpressure behaves exactly like `submit`:
+    /// [`SubmitError::Busy`] hands the request back for a verbatim retry.
+    ///
+    /// The token channel is sized to `max_new_tokens + 1`, so a slow
+    /// consumer can never block the engine thread.
+    pub fn submit_streaming(
+        &self,
+        req: RequestIn,
+    ) -> Result<(Receiver<i32>, Receiver<RequestOut>), SubmitError> {
+        let (rtx, rrx) = sync_channel(1);
+        let (ttx, trx) = sync_channel(req.max_new_tokens + 1);
+        match self.tx.try_send(Msg::Request(req, rtx, Some(ttx))) {
+            Ok(()) => Ok((trx, rrx)),
+            Err(TrySendError::Full(Msg::Request(req, _, _))) => {
                 Err(SubmitError::Busy(req))
             }
             Err(TrySendError::Full(_)) => unreachable!("submit sends requests"),
@@ -75,8 +165,10 @@ impl ClientHandle {
 #[derive(Clone)]
 struct ReplyTable {
     next_ticket: u64,
-    /// (ticket, client id, reply channel).
-    entries: Vec<(u64, u64, SyncSender<RequestOut>)>,
+    /// (ticket, client id, reply channel, optional streaming channel).
+    #[allow(clippy::type_complexity)]
+    entries:
+        Vec<(u64, u64, SyncSender<RequestOut>, Option<SyncSender<i32>>)>,
 }
 
 impl ReplyTable {
@@ -84,22 +176,42 @@ impl ReplyTable {
         ReplyTable { next_ticket: 0, entries: Vec::new() }
     }
 
-    /// Register a reply channel; returns the ticket to submit under.
-    fn register(&mut self, client_id: u64, tx: SyncSender<RequestOut>) -> u64 {
+    /// Register a reply channel (plus an optional per-token streaming
+    /// channel); returns the ticket to submit under.
+    fn register(
+        &mut self,
+        client_id: u64,
+        tx: SyncSender<RequestOut>,
+        stream: Option<SyncSender<i32>>,
+    ) -> u64 {
         let ticket = self.next_ticket;
         self.next_ticket += 1;
-        self.entries.push((ticket, client_id, tx));
+        self.entries.push((ticket, client_id, tx, stream));
         ticket
     }
 
+    /// Route one streamed token to its request's token channel.  Silently
+    /// drops tokens for non-streaming requests, unknown tickets, and
+    /// hung-up consumers — streaming is best-effort; the final
+    /// `RequestOut` always carries the complete token list.
+    fn partial(&mut self, ticket: u64, tok: i32) {
+        if let Some((_, _, _, Some(stream))) =
+            self.entries.iter().find(|(t, _, _, _)| *t == ticket)
+        {
+            let _ = stream.try_send(tok);
+        }
+    }
+
     /// Route a completion (whose `id` is the ticket) back to its reply
-    /// channel with the client's original id restored.
+    /// channel with the client's original id restored.  Dropping the
+    /// table entry also drops the streaming sender, which closes the
+    /// client's token receiver — the end-of-stream signal.
     fn complete(
         &mut self,
         mut out: RequestOut,
     ) -> Option<(RequestOut, SyncSender<RequestOut>)> {
-        let i = self.entries.iter().position(|(t, _, _)| *t == out.id)?;
-        let (_, client_id, tx) = self.entries.swap_remove(i);
+        let i = self.entries.iter().position(|(t, _, _, _)| *t == out.id)?;
+        let (_, client_id, tx, _stream) = self.entries.swap_remove(i);
         out.id = client_id;
         Some((out, tx))
     }
@@ -153,10 +265,10 @@ impl Server {
                         }
                     };
                     match msg {
-                        Some(Msg::Request(mut req, reply)) => {
+                        Some(Msg::Request(mut req, reply, stream)) => {
                             // route by ticket, not the client-supplied id
                             // (duplicate ids must not cross-wire replies)
-                            req.id = replies.register(req.id, reply);
+                            req.id = replies.register(req.id, reply, stream);
                             sched.submit(req);
                         }
                         Some(Msg::Shutdown) => {
@@ -167,8 +279,15 @@ impl Server {
                     }
                 }
                 if sched.pending() > 0 {
-                    for done in sched.step()? {
-                        if let Some((out, reply)) = replies.complete(done) {
+                    let done = sched.step()?;
+                    // deliver streamed tokens before finals, so a
+                    // request's token channel is fully fed before its
+                    // completion closes it
+                    for (ticket, tok) in sched.take_partials() {
+                        replies.partial(ticket, tok);
+                    }
+                    for out in done {
+                        if let Some((out, reply)) = replies.complete(out) {
                             let _ = reply.send(out);
                         }
                     }
@@ -213,11 +332,21 @@ mod tests {
     fn busy_submit_returns_request_for_retry() {
         let (tx, rx) = sync_channel::<Msg>(1);
         let client = ClientHandle { tx };
-        let first = RequestIn { id: 1, prompt: vec![1, 2, 3], max_new_tokens: 4 };
+        let first = RequestIn {
+            id: 1,
+            prompt: vec![1, 2, 3],
+            max_new_tokens: 4,
+            sampling: Default::default(),
+        };
         let _reply1 = client.submit(first).expect("queue has capacity 1");
 
         // Queue full: the second request must come back intact.
-        let second = RequestIn { id: 2, prompt: vec![9, 8], max_new_tokens: 6 };
+        let second = RequestIn {
+            id: 2,
+            prompt: vec![9, 8],
+            max_new_tokens: 6,
+            sampling: Default::default(),
+        };
         let returned = match client.submit(second) {
             Err(SubmitError::Busy(r)) => r,
             other => panic!("expected Busy(req), got {:?}", other.map(|_| ())),
@@ -228,12 +357,12 @@ mod tests {
 
         // Drain one slot; the returned request retries successfully.
         match rx.try_recv() {
-            Ok(Msg::Request(req, _)) => assert_eq!(req.id, 1),
+            Ok(Msg::Request(req, _, _)) => assert_eq!(req.id, 1),
             other => panic!("expected queued request, got {:?}", other.is_ok()),
         }
         let _reply2 = client.submit(returned).expect("retry after drain");
         match rx.try_recv() {
-            Ok(Msg::Request(req, _)) => assert_eq!(req.id, 2),
+            Ok(Msg::Request(req, _, _)) => assert_eq!(req.id, 2),
             other => panic!("expected retried request, got {:?}", other.is_ok()),
         }
     }
@@ -249,8 +378,8 @@ mod tests {
         let (tx_a, rx_a) = sync_channel::<RequestOut>(1);
         let (tx_b, rx_b) = sync_channel::<RequestOut>(1);
         // both clients chose id 7
-        let ticket_a = table.register(7, tx_a);
-        let ticket_b = table.register(7, tx_b);
+        let ticket_a = table.register(7, tx_a, None);
+        let ticket_b = table.register(7, tx_b, None);
         assert_ne!(ticket_a, ticket_b, "tickets are unique");
 
         let out = |ticket: u64, n_tokens: usize| RequestOut {
@@ -261,7 +390,7 @@ mod tests {
             ttft_us: 0.0,
             steps: n_tokens as u64,
             rho_hat: 0.0,
-            rejected: false,
+            rejected: None,
         };
         // B completes first — with id-keyed routing this used to land on
         // whichever channel registered first (A)
@@ -306,7 +435,7 @@ mod tests {
             ttft_us: 0.0,
             steps: 1,
             rho_hat: 0.0,
-            rejected: false,
+            rejected: None,
         };
         // Both clients chose the same id (7) — the historical cross-wire
         // trigger.  Client i's reply channel is identified by capacity i+1.
@@ -314,7 +443,7 @@ mod tests {
             sched_ops![
                 move |s: &mut St| {
                     let (tx, _rx) = sync_channel::<RequestOut>(i + 1);
-                    s.ticket[i] = Some(s.table.register(7, tx));
+                    s.ticket[i] = Some(s.table.register(7, tx, None));
                 },
                 move |s: &mut St| {
                     let t = s.ticket[i].unwrap();
@@ -381,7 +510,65 @@ mod tests {
         let (tx, rx) = sync_channel::<Msg>(1);
         drop(rx);
         let client = ClientHandle { tx };
-        let req = RequestIn { id: 7, prompt: vec![1], max_new_tokens: 1 };
+        let req = RequestIn {
+            id: 7,
+            prompt: vec![1],
+            max_new_tokens: 1,
+            sampling: Default::default(),
+        };
         assert!(matches!(client.submit(req), Err(SubmitError::Closed)));
+        let req2 = RequestIn {
+            id: 8,
+            prompt: vec![1],
+            max_new_tokens: 1,
+            sampling: Default::default(),
+        };
+        assert!(matches!(
+            client.submit_streaming(req2),
+            Err(SubmitError::Closed)
+        ));
+    }
+
+    /// Streaming contract, engine-free: the reply table routes partial
+    /// tokens to the registered token channel in order, ignores
+    /// non-streaming and unknown tickets, and closes the token channel
+    /// (end-of-stream) when the request completes.
+    #[test]
+    fn reply_table_routes_partials_and_closes_stream() {
+        let mut table = ReplyTable::new();
+        let (ftx, _frx) = sync_channel::<RequestOut>(1);
+        let (stx, srx) = sync_channel::<i32>(8);
+        let streamed = table.register(1, ftx, Some(stx));
+        let (ftx2, _frx2) = sync_channel::<RequestOut>(1);
+        let plain = table.register(2, ftx2, None);
+
+        table.partial(streamed, 10);
+        table.partial(streamed, 11);
+        table.partial(plain, 99); // no stream registered: dropped
+        table.partial(12345, 7); // unknown ticket: dropped, no panic
+        assert_eq!(srx.try_recv(), Ok(10));
+        assert_eq!(srx.try_recv(), Ok(11));
+        assert!(srx.try_recv().is_err(), "no stray tokens");
+
+        table.partial(streamed, 12);
+        let out = RequestOut {
+            id: streamed,
+            tokens: vec![10, 11, 12],
+            prefill_us: 0.0,
+            decode_us: 0.0,
+            ttft_us: 0.0,
+            steps: 3,
+            rho_hat: 0.0,
+            rejected: None,
+        };
+        let (out, _reply) = table.complete(out).unwrap();
+        assert_eq!(out.id, 1, "client id restored");
+        // tokens routed before completion are still readable, then the
+        // dropped sender surfaces as a disconnect = end of stream
+        assert_eq!(srx.try_recv(), Ok(12));
+        assert!(matches!(
+            srx.try_recv(),
+            Err(std::sync::mpsc::TryRecvError::Disconnected)
+        ));
     }
 }

@@ -104,6 +104,98 @@ pub fn generate(spec: &WorkloadSpec, vocab: usize, rng: &mut Rng) -> Request {
     Request { prompt, gen_tokens: spec.gen_tokens, needle_positions }
 }
 
+/// Multi-turn chat profile (shared-prefix serving traffic, DESIGN.md
+/// §Serving): every conversation starts from the same system prompt, and
+/// each turn's prompt is the previous turn's full context plus the
+/// assistant reply plus a fresh user message — so turn N+1 shares its
+/// whole [0, |turn N| + |reply|) prefix with turn N and the prefix cache
+/// should collapse its prefill to the unshared tail.
+#[derive(Clone, Debug)]
+pub struct ChatSpec {
+    pub name: &'static str,
+    /// Shared system-prompt length in tokens (the cross-conversation
+    /// shared prefix).
+    pub system_len: usize,
+    /// Mean user-message length per turn.
+    pub turn_len: usize,
+    /// Uniform jitter around `turn_len` (±).
+    pub jitter: usize,
+    /// User turns per conversation.
+    pub turns: usize,
+    /// Assistant reply tokens generated per turn.
+    pub gen_tokens: usize,
+}
+
+pub const CHAT: ChatSpec = ChatSpec {
+    name: "chat",
+    system_len: 512,
+    turn_len: 96,
+    jitter: 32,
+    turns: 4,
+    gen_tokens: 32,
+};
+
+/// Markov-ish token body shared by the chat generators (same latent-topic
+/// chain as `generate`, without needle planting).
+fn token_stream(len: usize, vocab: usize, rng: &mut Rng) -> Vec<i32> {
+    let n_topics = 8;
+    let topic_vocab = (vocab / n_topics).max(1);
+    let mut topic = rng.below(n_topics);
+    let mut out = Vec::with_capacity(len);
+    while out.len() < len {
+        if rng.f32() < 0.03 {
+            topic = rng.below(n_topics);
+        }
+        let r = rng.f32();
+        let off = ((r * r) * topic_vocab as f32) as usize % topic_vocab;
+        out.push((2 + topic * topic_vocab + off) as i32 % vocab as i32);
+    }
+    out
+}
+
+/// The conversation-shared system prompt: BOS sink + `system_len - 1`
+/// body tokens.  Call with a fixed-seed `Rng` to share it across
+/// conversations (that sharing is what the prefix cache exploits).
+pub fn chat_system_prompt(
+    spec: &ChatSpec,
+    vocab: usize,
+    rng: &mut Rng,
+) -> Vec<i32> {
+    let mut p = vec![1i32];
+    p.extend(token_stream(spec.system_len.saturating_sub(1), vocab, rng));
+    p
+}
+
+/// One user message (`turn_len ± jitter` tokens, at least 1).
+pub fn chat_user_turn(
+    spec: &ChatSpec,
+    vocab: usize,
+    rng: &mut Rng,
+) -> Vec<i32> {
+    let len = if spec.jitter > 0 {
+        spec.turn_len.saturating_sub(spec.jitter) + rng.below(2 * spec.jitter)
+    } else {
+        spec.turn_len
+    }
+    .max(1);
+    token_stream(len, vocab, rng)
+}
+
+/// Turn N+1's prompt: turn N's full prompt ++ the assistant reply ++ the
+/// next user message.  The shared prefix with turn N is exactly
+/// `prev.len() + reply.len()` tokens.
+pub fn chat_turn_prompt(
+    prev: &[i32],
+    reply: &[i32],
+    user: &[i32],
+) -> Vec<i32> {
+    let mut p = Vec::with_capacity(prev.len() + reply.len() + user.len());
+    p.extend_from_slice(prev);
+    p.extend_from_slice(reply);
+    p.extend_from_slice(user);
+    p
+}
+
 /// Scale a workload's prompt length (harness sweeps).
 pub fn scaled(spec: &WorkloadSpec, mean_len: usize) -> WorkloadSpec {
     WorkloadSpec {
@@ -146,6 +238,54 @@ mod tests {
         assert_eq!(
             generate(&GSM8K, 8192, &mut r1).prompt,
             generate(&GSM8K, 8192, &mut r2).prompt
+        );
+    }
+
+    /// The shared-prefix contract the prefix cache relies on (engine-free):
+    /// turn N+1's prompt starts with turn N's prompt ++ turn N's reply,
+    /// the system prompt is byte-identical across conversations generated
+    /// from the same seed, and all tokens stay in-vocab.
+    #[test]
+    fn chat_turns_extend_the_previous_context() {
+        let vocab = 8192usize;
+        let sys = chat_system_prompt(&CHAT, vocab, &mut Rng::new(0xC4A7));
+        assert_eq!(sys.len(), CHAT.system_len);
+        assert_eq!(sys[0], 1, "BOS sink leads the shared prefix");
+        assert_eq!(
+            sys,
+            chat_system_prompt(&CHAT, vocab, &mut Rng::new(0xC4A7)),
+            "system prompt is deterministic per seed — shareable"
+        );
+
+        let mut rng = Rng::new(3);
+        let mut prompt = sys.clone();
+        for turn in 0..CHAT.turns {
+            let user = chat_user_turn(&CHAT, vocab, &mut rng);
+            assert!(
+                user.len() >= CHAT.turn_len - CHAT.jitter
+                    && user.len() < CHAT.turn_len + CHAT.jitter
+            );
+            // a fake assistant reply (the engine supplies real ones)
+            let reply: Vec<i32> =
+                (0..CHAT.gen_tokens as i32).map(|t| 2 + t).collect();
+            let next = chat_turn_prompt(&prompt, &reply, &user);
+            let shared = prompt.len() + reply.len();
+            assert_eq!(&next[..prompt.len()], &prompt[..]);
+            assert_eq!(&next[prompt.len()..shared], &reply[..]);
+            assert_eq!(&next[shared..], &user[..]);
+            assert!(next.iter().all(|&t| (0..vocab as i32).contains(&t)));
+            prompt = next;
+            let _ = turn;
+        }
+        assert_eq!(
+            prompt.len(),
+            CHAT.system_len + CHAT.turns * CHAT.gen_tokens + {
+                // user lengths jitter; recompute them from the same seed
+                let mut r = Rng::new(3);
+                (0..CHAT.turns)
+                    .map(|_| chat_user_turn(&CHAT, vocab, &mut r).len())
+                    .sum::<usize>()
+            }
         );
     }
 

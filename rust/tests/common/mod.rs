@@ -290,6 +290,71 @@ pub fn run_mode(
     out
 }
 
+/// Run one sequence (chunked prefill + decode to `max_new`) on an
+/// existing engine and collect the same observable surface as
+/// `run_mode`, then release the sequence.  Used by the prefix-cache
+/// differential: the caller owns the engine so a donor request can
+/// populate the prefix cache before the measured run, and engine-level
+/// counters (hit tokens, executed tokens, leaks) stay inspectable.
+pub fn run_seq(
+    engine: &mut Engine,
+    id: u64,
+    prompt: &[i32],
+    max_new: usize,
+    chunk: usize,
+) -> ModeOut {
+    let label = format!("seq{id}/prefix_cache={}", engine.cfg.prefix_cache_blocks);
+    let mut s = engine.new_sequence(id, prompt.to_vec());
+    s.max_new = max_new;
+    while !engine.prefill_chunk(&mut s, chunk).expect("prefill") {}
+    let mut step_dispatches = Vec::new();
+    let mut step_probs_bytes = Vec::new();
+    while !s.done {
+        let d0 = engine.stats.decode_dev_dispatches;
+        let p0 = engine.stats.decode_probs_bytes;
+        let mut group = [&mut s];
+        engine.decode_step(&mut group).expect("decode_step");
+        step_dispatches.push(engine.stats.decode_dev_dispatches - d0);
+        step_probs_bytes.push(engine.stats.decode_probs_bytes - p0);
+    }
+    let (nl, h) = (engine.mm.n_layers, engine.mm.n_heads);
+    let mut pages = Vec::new();
+    for layer in 0..nl {
+        for head in 0..h {
+            for pos in 0..s.cache.len() {
+                pages.extend_from_slice(
+                    s.cache.key(&engine.pool, layer, head, pos),
+                );
+                pages.extend_from_slice(
+                    s.cache.value(&engine.pool, layer, head, pos),
+                );
+            }
+        }
+    }
+    let out = ModeOut {
+        label,
+        generated: vec![s.generated.clone()],
+        logits: vec![s.last_logits.clone()],
+        sets: vec![
+            (0..nl).map(|layer| s.selector.sets(layer).to_vec()).collect(),
+        ],
+        kv: vec![pages],
+        rho: vec![engine.retrieval_ratio(&s, s.generated.len() as u64)],
+        probe_delta: 0.0,
+        decode_bytes: engine.stats.decode_host_bytes_staged,
+        probs_bytes: engine.stats.decode_probs_bytes,
+        dev_dispatches: engine.stats.decode_dev_dispatches,
+        dense_dev_calls: engine.stats.decode_dense_dev_calls,
+        dense_calls: engine.stats.dense_layer_calls,
+        rehome_bytes: engine.stats.kv_rehome_bytes,
+        blocks_live: engine.stats.device_blocks_live,
+        step_dispatches,
+        step_probs_bytes,
+    };
+    engine.release(&mut s);
+    out
+}
+
 /// Full observable identity between two mode runs: trajectories,
 /// selector sets, KV pages, final logits, decode-only ρ̂, probe δ, and
 /// the full-scoring cadence (`dense_layer_calls` — residency must never

@@ -13,11 +13,11 @@
 mod common;
 
 use common::{
-    artifacts_dir, assert_identical, can_batch, run_mode, DecodeMode,
-    ModeOut, Workload,
+    artifacts_dir, assert_identical, can_batch, run_mode, run_seq,
+    DecodeMode, ModeOut, Workload,
 };
-use prhs::config::SelectorKind;
-use prhs::model::{decode_dispatch, decode_staging};
+use prhs::config::{EngineConfig, SelectorKind};
+use prhs::model::{decode_dispatch, decode_staging, Engine};
 
 /// Identity across every decode dispatch mode × prefill residency on
 /// the default serving model, with retrieval steps, probe steps, and a
@@ -373,4 +373,115 @@ fn batched_dispatches_scale_with_groups_not_sequences() {
         paged.blocks_live, expect_blocks as u64,
         "pool footprint must be Σ ⌈len/B⌉ exactly"
     );
+}
+
+/// Prefix-cache differential (issue satellite): a warm engine that
+/// seeds a request from a cached donor prefix must be observably
+/// identical to a cold engine running the same prompt end to end —
+/// trajectory, logits, final KV, selector sets, ρ̂ — while executing
+/// only the unshared tail of the prefill (`prefill_tokens_executed`
+/// delta == tail) and never copying KV to re-home it.  Includes the
+/// GQA config so grouped-query head counts flow through the host
+/// seed + selector replay too.  Artifact-gated self-skip.
+#[test]
+fn differential_identity_prefix_seeded_vs_cold() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = prhs::runtime::Runtime::new(&dir).unwrap();
+    let tail_len = 40usize;
+    let max_new = 8usize;
+    for (model, vocab, chunk, seed) in
+        [("small", 8192usize, 96usize, 71u64), ("gqa", 2048, 48, 73)]
+    {
+        let Ok(mm) = rt.model(model) else {
+            eprintln!("skipping {model}: not in artifact set");
+            continue;
+        };
+        let tail_cap = mm
+            .buckets("prefill_extend", "chunk")
+            .iter()
+            .copied()
+            .max()
+            .unwrap_or(0);
+        if tail_cap < tail_len {
+            eprintln!(
+                "skipping {model}: no extend chunk bucket covers the tail"
+            );
+            continue;
+        }
+        // Longest donor whose warm prompt (donor + tail + decode) still
+        // fits an extend l_max bucket.  The donor must span at least
+        // one cache block — the host pool's page (128 tokens) upper-
+        // bounds the block size, so 128 is the shortest safe donor.
+        let Some(donor_len) = [256usize, 128].into_iter().find(|dl| {
+            let need = dl + tail_len + max_new;
+            mm.bucket_for("prefill_extend", "l_max", need).is_some()
+                && mm.bucket_for("layer_step_dense", "l_max", need).is_some()
+        }) else {
+            eprintln!(
+                "skipping {model}: extend buckets too small for a cached donor"
+            );
+            continue;
+        };
+        let mut rng = prhs::util::rng::Rng::new(seed);
+        let donor_prompt: Vec<i32> =
+            (0..donor_len).map(|_| rng.below(vocab) as i32).collect();
+        let mut warm_prompt = donor_prompt.clone();
+        warm_prompt
+            .extend((0..tail_len).map(|_| rng.below(vocab) as i32));
+
+        let mk_cfg = |cache_blocks: usize| {
+            let mut cfg = EngineConfig::default();
+            cfg.artifacts_dir = dir.clone();
+            cfg.model = model.to_string();
+            cfg.selector.kind = SelectorKind::Cis;
+            cfg.prefill_chunk = chunk;
+            cfg.prefix_cache_blocks = cache_blocks;
+            cfg
+        };
+
+        // warm engine: a donor request populates the cache on release
+        let mut warm_engine = Engine::new(mk_cfg(64)).expect("engine");
+        let mut donor =
+            warm_engine.new_sequence(1, donor_prompt.clone());
+        while !warm_engine
+            .prefill_chunk(&mut donor, chunk)
+            .expect("donor prefill")
+        {}
+        warm_engine.release(&mut donor);
+        let (entries, ..) = warm_engine.prefix_cache_stats();
+        assert!(
+            entries > 0,
+            "{model}: donor release must register a prefix entry"
+        );
+
+        let tok0 = warm_engine.stats.prefill_tokens_executed;
+        let hit0 = warm_engine.stats.prefix_hit_tokens;
+        let warm = run_seq(&mut warm_engine, 2, &warm_prompt, max_new, chunk);
+        let hit = warm_engine.stats.prefix_hit_tokens - hit0;
+        assert!(
+            hit > 0,
+            "{model}: warm request missed the cached donor prefix"
+        );
+        assert_eq!(
+            warm_engine.stats.prefill_tokens_executed - tok0,
+            warm_prompt.len() as u64 - hit,
+            "{model}: warm prefill must execute exactly the unshared tail"
+        );
+        assert_eq!(
+            warm_engine.stats.kv_rehome_bytes, 0,
+            "{model}: prefix seeding must never re-home KV"
+        );
+
+        // leak check: dropping the registry returns every pinned block
+        warm_engine.prefix_cache_clear();
+        assert_eq!(
+            warm_engine.stats.device_blocks_live, 0,
+            "{model}: device blocks leaked past release + cache clear"
+        );
+
+        // cold oracle: the same prompt end to end, cache disabled
+        let mut cold_engine = Engine::new(mk_cfg(0)).expect("engine");
+        let cold = run_seq(&mut cold_engine, 2, &warm_prompt, max_new, chunk);
+        assert_identical(&warm, &cold);
+    }
 }

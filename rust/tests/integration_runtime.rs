@@ -670,11 +670,13 @@ fn chunked_prefill_bounds_ttft_behind_long_prompt() {
         id: 0,
         prompt: long_prompt,
         max_new_tokens: 1,
+        sampling: Default::default(),
     });
     sched.submit(prhs::coordinator::RequestIn {
         id: 1,
         prompt: short_prompt,
         max_new_tokens: 3,
+        sampling: Default::default(),
     });
 
     let long_prefill_iters = 1200usize.div_ceil(128); // 10
@@ -737,6 +739,7 @@ fn scheduler_rho_hat_is_decode_only() {
         id: 0,
         prompt: (0..200).map(|_| rng.below(vocab) as i32).collect(),
         max_new_tokens: 5,
+        sampling: Default::default(),
     });
     let outs = sched.run_to_completion().unwrap();
     assert_eq!(outs.len(), 1);
@@ -781,12 +784,14 @@ fn scheduler_prefill_token_budget_bounds_iteration_work() {
         id: 0,
         prompt: (0..long_len).map(|_| rng.below(vocab) as i32).collect(),
         max_new_tokens: 1,
+        sampling: Default::default(),
     });
     for (i, &sl) in short_lens.iter().enumerate() {
         sched.submit(prhs::coordinator::RequestIn {
             id: 1 + i as u64,
             prompt: (0..sl).map(|_| rng.below(vocab) as i32).collect(),
             max_new_tokens: 2,
+            sampling: Default::default(),
         });
     }
 
@@ -803,7 +808,7 @@ fn scheduler_prefill_token_budget_bounds_iteration_work() {
         prev_tokens = executed;
         for out in outs {
             finish_iter[out.id as usize] = iters;
-            assert!(!out.rejected);
+            assert!(out.rejected.is_none());
         }
     }
     // (b) per-iteration prefill work is bounded by the budget even with
@@ -852,6 +857,7 @@ fn kv_page_cap_serializes_burst_without_oom() {
             id,
             prompt: (0..200).map(|_| rng.below(vocab) as i32).collect(),
             max_new_tokens: 4,
+            sampling: Default::default(),
         });
     }
     // this one needs ⌈(3000+4)/128⌉·4 = 96 pages > 16: can never fit
@@ -859,6 +865,7 @@ fn kv_page_cap_serializes_burst_without_oom() {
         id: 99,
         prompt: (0..3000).map(|_| rng.below(vocab) as i32).collect(),
         max_new_tokens: 4,
+        sampling: Default::default(),
     });
     let mut iters = 0;
     let mut outs = Vec::new();
@@ -875,10 +882,10 @@ fn kv_page_cap_serializes_burst_without_oom() {
     outs.sort_by_key(|o| o.id);
     assert_eq!(outs.len(), 6);
     for o in &outs[..5] {
-        assert!(!o.rejected);
+        assert!(o.rejected.is_none());
         assert_eq!(o.tokens.len(), 4, "capped run still serves request {}", o.id);
     }
-    assert!(outs[5].rejected, "over-capacity request is rejected");
+    assert!(outs[5].rejected.is_some(), "over-capacity request is rejected");
     assert!(outs[5].tokens.is_empty());
     assert_eq!(sched.engine.pool.in_use_pages(), 0, "all pages released");
 }
@@ -908,11 +915,13 @@ fn kv_admission_reserves_worst_case_pages() {
         id: 0,
         prompt: (0..250).map(|_| rng.below(vocab) as i32).collect(),
         max_new_tokens: 10,
+        sampling: Default::default(),
     });
     sched.submit(prhs::coordinator::RequestIn {
         id: 1,
         prompt: (0..120).map(|_| rng.below(vocab) as i32).collect(),
         max_new_tokens: 8,
+        sampling: Default::default(),
     });
     let mut iters = 0;
     let mut outs = Vec::new();
@@ -926,7 +935,7 @@ fn kv_admission_reserves_worst_case_pages() {
     assert_eq!(outs.len(), 2);
     assert_eq!(outs[0].tokens.len(), 10, "A decodes past the page boundary");
     assert_eq!(outs[1].tokens.len(), 8, "B completes after waiting");
-    assert!(outs.iter().all(|o| !o.rejected));
+    assert!(outs.iter().all(|o| o.rejected.is_none()));
 }
 
 /// Regression (issue satellite 2), end-to-end: two in-flight requests
@@ -951,6 +960,7 @@ fn server_routes_duplicate_request_ids() {
             id: 7,
             prompt: prompt(60),
             max_new_tokens: 2,
+            sampling: Default::default(),
         })
         .unwrap();
     let rx_b = client
@@ -958,6 +968,7 @@ fn server_routes_duplicate_request_ids() {
             id: 7,
             prompt: prompt(80),
             max_new_tokens: 5,
+            sampling: Default::default(),
         })
         .unwrap();
     let out_a = rx_a.recv().unwrap();
@@ -989,6 +1000,7 @@ fn server_round_trip() {
                     id,
                     prompt: req.prompt,
                     max_new_tokens: 4,
+                    sampling: Default::default(),
                 })
                 .unwrap()
         })
