@@ -381,6 +381,112 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
+    // ── overload smoke: a mixed-priority burst 3×-overcommitting a
+    // capped paged device pool through the scheduler (DESIGN.md
+    // §Overload).  Emits throughput + tail latency + the preemption /
+    // swap economics columns, and asserts the graceful-degradation
+    // invariants: zero failed requests, zero re-home bytes, and
+    // suspend/restore conservation.
+    let mut overload_json = String::from("null");
+    let can_overload = has_paged
+        && mm.bucket_for("layer_step", "batch", 3).is_some()
+        && mm.bucket_for("layer_step_dense", "l_max", 256).is_some();
+    if can_overload {
+        use prhs::coordinator::overload::Priority;
+        use prhs::coordinator::{RequestIn, Scheduler};
+
+        let mut cfg = base.clone();
+        cfg.max_batch = 3;
+        // block 64: six 2-block requests against a 4-block cap
+        cfg.device_block_cap = 4;
+        let engine = Engine::with_shared(rt.clone(), ws.clone(), cfg);
+        let mut sched = Scheduler::new(engine);
+        let mut rng = Rng::new(0x0E71);
+        let classes =
+            [Priority::Low, Priority::Normal, Priority::High];
+        let n_reqs = 6u64;
+        for id in 0..n_reqs {
+            sched.submit(RequestIn {
+                id,
+                prompt: (0..120)
+                    .map(|_| rng.below(mm.vocab_size) as i32)
+                    .collect(),
+                max_new_tokens: 4,
+                sampling: Default::default(),
+                priority: Some(classes[id as usize % classes.len()]),
+            });
+        }
+        let outs = sched.run_to_completion()?;
+        let completed =
+            outs.iter().filter(|o| o.rejected.is_none()).count();
+        assert_eq!(
+            completed,
+            n_reqs as usize,
+            "overload smoke: every request must complete"
+        );
+        let m = &mut sched.metrics;
+        assert_eq!(
+            m.kv_rehome_bytes, 0,
+            "overload smoke: preemption must pre-empt re-homing"
+        );
+        assert_eq!(
+            m.preemptions,
+            m.restores_reseed + m.restores_restage,
+            "overload smoke: every suspension must resume"
+        );
+        assert_eq!(m.swap_in_bytes, m.swap_out_bytes);
+        assert_eq!(m.shed_requests, 0);
+        let tput = m.throughput_tps();
+        let ttft_p50 = m.ttft_lat.percentile_us(50.0) / 1e3;
+        let ttft_p95 = m.ttft_lat.percentile_us(95.0) / 1e3;
+        let step_p95 = m.step_lat.percentile_us(95.0) / 1e3;
+        println!(
+            "  overload: {completed}/{n_reqs} served at 3× block \
+             overcommit, {} preemptions ({} reseed / {} restage), \
+             {} pressure events, {tput:.1} tok/s, ttft p95 \
+             {ttft_p95:.1} ms",
+            m.preemptions,
+            m.restores_reseed,
+            m.restores_restage,
+            m.kv_pressure_events
+        );
+        md.push_str(&format!(
+            "\n### Overload (3× device-block overcommit, mixed priorities)\n\n\
+             | requests | completed | shed | preemptions | reseed | restage | swap out KB | swap in KB | pressure events | rehome KB | tok/s | ttft p50 ms | ttft p95 ms | step p95 ms |\n\
+             |---|---|---|---|---|---|---|---|---|---|---|---|---|---|\n\
+             | {n_reqs} | {completed} | {} | {} | {} | {} | {} | {} | {} | {} | {tput:.1} | {ttft_p50:.1} | {ttft_p95:.1} | {step_p95:.1} |\n",
+            m.shed_requests,
+            m.preemptions,
+            m.restores_reseed,
+            m.restores_restage,
+            m.swap_out_bytes / 1024,
+            m.swap_in_bytes / 1024,
+            m.kv_pressure_events,
+            m.kv_rehome_bytes / 1024,
+        ));
+        overload_json = format!(
+            "{{\"requests\":{n_reqs},\"completed\":{completed},\
+             \"shed_requests\":{},\"preemptions\":{},\
+             \"restores_reseed\":{},\"restores_restage\":{},\
+             \"swap_out_bytes\":{},\"swap_in_bytes\":{},\
+             \"kv_pressure_events\":{},\"kv_rehome_bytes\":{},\
+             \"throughput_tps\":{tput:.3},\"ttft_p50_ms\":{ttft_p50:.3},\
+             \"ttft_p95_ms\":{ttft_p95:.3},\"step_p95_ms\":{step_p95:.3}}}",
+            m.shed_requests,
+            m.preemptions,
+            m.restores_reseed,
+            m.restores_restage,
+            m.swap_out_bytes,
+            m.swap_in_bytes,
+            m.kv_pressure_events,
+            m.kv_rehome_bytes,
+        );
+    } else {
+        println!(
+            "  overload: skipped (paged stages or batch-3 buckets absent)"
+        );
+    }
+
     md.push_str(
         "\nDev/host tokens grow linearly in L (recompute grows with the sum \
          of prefixes); dev prefill host-bytes grow O(chunk) per chunk + one \
@@ -399,7 +505,7 @@ fn main() -> anyhow::Result<()> {
     if let Some(path) = json_path {
         let json = format!(
             "{{\"bench\":\"prefill_scaling\",\"chunk\":{chunk},\"rows\":[{}],\
-             \"chat\":{chat_json}}}\n",
+             \"chat\":{chat_json},\"overload\":{overload_json}}}\n",
             json_rows.join(",")
         );
         std::fs::write(&path, json)?;

@@ -56,6 +56,7 @@ fn main() -> anyhow::Result<()> {
                 prompt: req.prompt,
                 max_new_tokens: gen,
                 sampling: Default::default(),
+                priority: None,
             });
         }
         let outs = sched.run_to_completion()?;

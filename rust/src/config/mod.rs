@@ -300,6 +300,35 @@ pub struct EngineConfig {
     /// serving path overrides this per request via
     /// `RequestIn::sampling` / `proj::SamplingParams`.
     pub temperature: f32,
+    /// Let the scheduler preempt running decodes under KV pressure
+    /// (DESIGN.md §Overload): when the paged device pool or the page cap
+    /// cannot cover the batch's next step, victims are suspended (device
+    /// blocks released, KV optionally swapped to the host tier) and
+    /// resumed later instead of the engine degrading to tile fallbacks
+    /// or admission blocking.  On by default; off restores the pre-
+    /// overload behavior exactly.
+    pub preemption: bool,
+    /// Host swap-tier budget in KV blocks (0 = unbounded, the default).
+    /// When a bounded tier cannot hold another victim's KV snapshot the
+    /// victim is *shed* — completed with its partial tokens and
+    /// `RejectReason::Preempted` — rather than silently dropped.
+    pub swap_budget_blocks: usize,
+    /// Priority class stamped on requests that carry none
+    /// (`RequestIn::priority = None`): 0 = low, 1 = normal (default),
+    /// 2 = high.  Higher classes admit first and preempt lower ones
+    /// under pressure.
+    pub default_priority: usize,
+    /// Anti-starvation aging: a waiting or suspended request gains one
+    /// priority level per `aging_iters` scheduler iterations, so a
+    /// low-priority request can be delayed but never starved
+    /// (`coordinator::overload::effective_priority`).  0 disables aging.
+    pub aging_iters: u64,
+    /// Clamp on the paged device pool's *usable* blocks (0 = the
+    /// artifact set's full `max_blocks`, the default).  The pool buffer
+    /// keeps its compiled geometry; only the `BlockAllocator` capacity
+    /// shrinks — the overcommit lever the exhaustion-pressure tests and
+    /// the overload bench drive to provoke preemption deterministically.
+    pub device_block_cap: usize,
     /// Width of the host-side planner pool used by `decode_step` for
     /// per-sequence planning and KV staging (DESIGN.md §6a).  ≤ 1 runs
     /// serially; PJRT execution stays on the engine thread either way.
@@ -336,6 +365,11 @@ impl Default for EngineConfig {
             max_kv_pages: 0,
             prefix_cache_blocks: 0,
             temperature: 0.0,
+            preemption: true,
+            swap_budget_blocks: 0,
+            default_priority: 1,
+            aging_iters: 64,
+            device_block_cap: 0,
             planner_threads: 0,
             use_pallas: false,
             strict_manifest: true,
@@ -393,6 +427,22 @@ impl EngineConfig {
         }
         if let Some(n) = j.get("temperature").and_then(Json::as_f64) {
             cfg.temperature = n as f32;
+        }
+        if let Some(b) = j.get("preemption").and_then(Json::as_bool) {
+            cfg.preemption = b;
+        }
+        if let Some(n) = j.get("swap_budget_blocks").and_then(Json::as_usize)
+        {
+            cfg.swap_budget_blocks = n;
+        }
+        if let Some(n) = j.get("default_priority").and_then(Json::as_usize) {
+            cfg.default_priority = n;
+        }
+        if let Some(n) = j.get("aging_iters").and_then(Json::as_usize) {
+            cfg.aging_iters = n as u64;
+        }
+        if let Some(n) = j.get("device_block_cap").and_then(Json::as_usize) {
+            cfg.device_block_cap = n;
         }
         if let Some(n) = j.get("planner_threads").and_then(Json::as_usize) {
             cfg.planner_threads = n;
@@ -504,6 +554,14 @@ impl EngineConfig {
             num(self.prefix_cache_blocks),
         );
         o.insert("temperature".into(), f(self.temperature));
+        o.insert("preemption".into(), Json::Bool(self.preemption));
+        o.insert(
+            "swap_budget_blocks".into(),
+            num(self.swap_budget_blocks),
+        );
+        o.insert("default_priority".into(), num(self.default_priority));
+        o.insert("aging_iters".into(), num(self.aging_iters as usize));
+        o.insert("device_block_cap".into(), num(self.device_block_cap));
         o.insert("planner_threads".into(), num(self.planner_threads));
         o.insert("strict_manifest".into(), Json::Bool(self.strict_manifest));
         o.insert("selector".into(), Json::Obj(sel));
@@ -593,13 +651,20 @@ mod tests {
         assert_eq!(c.max_kv_pages, 0, "KV cap is opt-in");
         assert_eq!(c.prefix_cache_blocks, 0, "prefix cache is opt-in");
         assert_eq!(c.temperature, 0.0, "greedy decoding is the default");
+        assert!(c.preemption, "overload preemption defaults on");
+        assert_eq!(c.swap_budget_blocks, 0, "swap tier is unbounded");
+        assert_eq!(c.default_priority, 1, "requests default to normal");
+        assert_eq!(c.aging_iters, 64, "anti-starvation aging defaults on");
+        assert_eq!(c.device_block_cap, 0, "full artifact pool by default");
         let j = Json::parse(
             r#"{"prefill_chunk":256,"planner_threads":4,"max_batch":32,
                 "prefill_recompute":true,"prefill_token_budget":512,
                 "max_kv_pages":1024,"device_prefill_kv":false,
                 "device_decode_kv":false,"batched_decode_dispatch":false,
                 "paged_device_kv":false,"prefix_cache_blocks":64,
-                "temperature":0.8}"#,
+                "temperature":0.8,"preemption":false,
+                "swap_budget_blocks":48,"default_priority":2,
+                "aging_iters":16,"device_block_cap":12}"#,
         )
         .unwrap();
         let c = EngineConfig::from_json(&j).unwrap();
@@ -615,6 +680,11 @@ mod tests {
         assert_eq!(c.max_kv_pages, 1024);
         assert_eq!(c.prefix_cache_blocks, 64);
         assert!((c.temperature - 0.8).abs() < 1e-6);
+        assert!(!c.preemption);
+        assert_eq!(c.swap_budget_blocks, 48);
+        assert_eq!(c.default_priority, 2);
+        assert_eq!(c.aging_iters, 16);
+        assert_eq!(c.device_block_cap, 12);
     }
 
     /// Issue satellite (CLI/config symmetry): `to_json` → `from_json`
@@ -640,6 +710,11 @@ mod tests {
         c.max_kv_pages = 77;
         c.prefix_cache_blocks = 33;
         c.temperature = 0.75;
+        c.preemption = false;
+        c.swap_budget_blocks = 21;
+        c.default_priority = 0;
+        c.aging_iters = 7;
+        c.device_block_cap = 9;
         c.planner_threads = 5;
         c.strict_manifest = false;
         c.selector.kind = SelectorKind::Cpe;
@@ -675,6 +750,11 @@ mod tests {
         assert_eq!(r.max_kv_pages, c.max_kv_pages);
         assert_eq!(r.prefix_cache_blocks, c.prefix_cache_blocks);
         assert_eq!(r.temperature, c.temperature);
+        assert_eq!(r.preemption, c.preemption);
+        assert_eq!(r.swap_budget_blocks, c.swap_budget_blocks);
+        assert_eq!(r.default_priority, c.default_priority);
+        assert_eq!(r.aging_iters, c.aging_iters);
+        assert_eq!(r.device_block_cap, c.device_block_cap);
         assert_eq!(r.planner_threads, c.planner_threads);
         assert_eq!(r.strict_manifest, c.strict_manifest);
         assert_eq!(r.selector.kind, c.selector.kind);
@@ -702,6 +782,8 @@ mod tests {
         assert!(r.batched_decode_dispatch);
         assert!(r.paged_device_kv);
         assert!(r.strict_manifest, "strict manifest checking defaults on");
+        assert!(r.preemption, "overload preemption defaults on");
+        assert_eq!(r.aging_iters, d.aging_iters);
         assert_eq!(r.prefill_chunk, d.prefill_chunk);
     }
 }

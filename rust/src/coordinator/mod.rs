@@ -20,11 +20,33 @@
 //!   * finished sequences retire immediately and release their KV pages,
 //!     so a long request never blocks short ones beyond one iteration.
 //!
+//! Overload model (DESIGN.md §Overload, the graceful-overload subsystem):
+//!   * requests carry a priority class (`RequestIn::priority`, default
+//!     `EngineConfig::default_priority`); admission scans the queue by
+//!     *effective* priority (base + anti-starvation aging,
+//!     `overload::effective_priority`) with FIFO order within a class —
+//!     an all-default workload schedules exactly as before;
+//!   * when the paged device pool cannot cover the next decode step, the
+//!     scheduler suspends victims (`overload::pick_victim`) at *device*
+//!     depth — drop the mirror, keep host KV, zero bytes moved — before
+//!     the engine could fall to a tile home (`kv_rehome_bytes` stays 0);
+//!   * when a higher-priority request cannot be admitted for slots or
+//!     pages, strictly-lower-priority running sequences are suspended at
+//!     *host* depth — KV snapshots into `kvcache::SwapTier`, pages and
+//!     reservations free — and resume (bitwise identical) when capacity
+//!     returns; a victim the swap budget cannot hold is shed with
+//!     `RejectReason::Preempted` instead of failing silently;
+//!   * suspended sequences re-admit before new ones, ordered by
+//!     effective priority then suspension time, so aging bounds how long
+//!     a preempted request waits.
+//!
 //! ρ̂ accounting (DESIGN.md §4): `RequestOut::rho_hat` is defined over the
 //! decode phase only — the retrieval counter is snapshotted when prefill
 //! completes and the delta is divided by decode head-steps.  Charging
 //! prefill-side scoring against decode head-steps (the pre-fix behavior)
 //! inflates ρ̂ versus the paper's R_t definition.
+
+pub mod overload;
 
 use std::collections::VecDeque;
 use std::time::Instant;
@@ -34,6 +56,8 @@ use anyhow::Result;
 use crate::metrics::RunMetrics;
 use crate::model::proj::SamplingParams;
 use crate::model::{Engine, Sequence};
+
+use overload::{effective_priority, pick_victim, Priority, VictimCand};
 
 /// Pure admission/retirement policy — kept engine-free for unit testing.
 #[derive(Debug)]
@@ -56,6 +80,30 @@ impl BatchPolicy {
         n_layers: usize,
     ) -> usize {
         (prompt_len + max_new).div_ceil(page_len.max(1)) * n_layers
+    }
+
+    /// Expected KV page need of a request whose first `matched` prompt
+    /// tokens hit the shared-prefix cache (issue satellite: the admission
+    /// bugfix).  Charging the full `pages_needed` for a warm request
+    /// serializes bursts of near-identical prompts that the prefix cache
+    /// would serve concurrently; the expected cost is the unshared tail
+    /// plus generation.  This is an *estimate* — a cache entry can be
+    /// evicted between admission and seeding — so the scheduler backs it
+    /// with runtime pressure checks (prefill-chunk deferral, decode-time
+    /// preemption) instead of treating the reservation as a guarantee.
+    pub fn pages_needed_tail(
+        prompt_len: usize,
+        matched: usize,
+        max_new: usize,
+        page_len: usize,
+        n_layers: usize,
+    ) -> usize {
+        Self::pages_needed(
+            prompt_len.saturating_sub(matched),
+            max_new,
+            page_len,
+            n_layers,
+        )
     }
 
     /// How many waiting sequences to admit given the occupied count
@@ -123,7 +171,7 @@ pub use crate::metrics::decode_rho_hat;
 pub use crate::model::ChunkLedger;
 
 /// A request as submitted by a client.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct RequestIn {
     pub id: u64,
     pub prompt: Vec<i32>,
@@ -132,6 +180,11 @@ pub struct RequestIn {
     /// exact greedy decoding; `EngineConfig::temperature` only seeds the
     /// engine-side default for sequences created outside the scheduler.
     pub sampling: SamplingParams,
+    /// Priority class for admission ordering and victim selection
+    /// (DESIGN.md §Overload).  `None` takes
+    /// `EngineConfig::default_priority`, so existing clients schedule
+    /// exactly as before.
+    pub priority: Option<Priority>,
 }
 
 /// Why a request was returned unserved (`RequestOut::rejected`).
@@ -142,6 +195,13 @@ pub enum RejectReason {
     /// pool cap, so it could never be admitted: resubmit with a shorter
     /// prompt / smaller `max_new_tokens`, or raise the cap.
     KvPagesExceedCap,
+    /// The request was preempted under KV pressure and its state could
+    /// not be parked in the swap tier (`EngineConfig::swap_budget_blocks`
+    /// exhausted), so it was shed with whatever tokens it had produced.
+    /// A suspended-and-resumed request is NOT `Preempted` — it completes
+    /// normally with `rejected: None` (the distinction the overload tests
+    /// pin down).
+    Preempted,
 }
 
 /// A finished request.
@@ -167,15 +227,25 @@ pub struct RequestOut {
 pub struct Scheduler {
     pub engine: Engine,
     pub policy: BatchPolicy,
-    /// FIFO queue with each request's worst-case page need precomputed at
-    /// submit (it is immutable, so the per-iteration admission check is
-    /// O(max_batch), not O(queue)).
-    waiting: VecDeque<(RequestIn, Instant, usize)>,
+    /// Arrival-ordered queue with each request's page estimates
+    /// precomputed at submit (immutable thereafter).  Admission scans by
+    /// effective priority with arrival order breaking ties, so an
+    /// all-default-priority workload admits FIFO exactly as before.
+    waiting: VecDeque<WaitingReq>,
     /// Requests rejected at submit (worst-case pages exceed the whole
     /// cap), drained into `RequestOut`s on the next `step`.
     rejected: Vec<RequestIn>,
     prefilling: Vec<PrefillingSeq>,
     running: Vec<RunningSeq>,
+    /// Sequences preempted under KV pressure, awaiting re-admission
+    /// (DESIGN.md §Overload).  Device-depth victims keep their host pool
+    /// pages and reservation; host-depth victims parked theirs in the
+    /// swap tier and re-charge the reservation on resume.
+    suspended: Vec<SuspendedSeq>,
+    /// Scheduler iteration counter — the aging clock
+    /// (`overload::effective_priority`) and the victim-selection
+    /// idleness ordinal.
+    iter: u64,
     /// Round-robin cursor for the budgeted prefill stage
     /// (`budget_prefill_plan`) so a token budget rotates fairly across
     /// prefilling sequences.
@@ -190,14 +260,30 @@ pub struct Scheduler {
     started: Instant,
 }
 
+struct WaitingReq {
+    req: RequestIn,
+    submitted: Instant,
+    /// Expected page need charged at admission: the unshared tail plus
+    /// generation (`BatchPolicy::pages_needed_tail`, probed against the
+    /// prefix cache at submit) — equal to the worst case when the cache
+    /// is cold or absent.
+    est_pages: usize,
+    /// Resolved priority class (`req.priority` or the config default).
+    priority: Priority,
+    /// Scheduler iteration at submit — the aging reference point.
+    arrival: u64,
+}
+
 struct PrefillingSeq {
     seq: Sequence,
     submitted: Instant,
     prefill_us: f64,
-    /// Worst-case KV pages charged at admission
-    /// (`BatchPolicy::pages_needed`) — held until retirement so
-    /// admission can never over-commit the capped pool.
+    /// Expected KV pages charged at admission (`WaitingReq::est_pages`)
+    /// — held until retirement so admission cannot over-commit the
+    /// capped pool beyond the prefix-sharing estimate.
     reserved_pages: usize,
+    /// Priority class, carried through to the running stage.
+    priority: Priority,
 }
 
 struct RunningSeq {
@@ -210,13 +296,58 @@ struct RunningSeq {
     /// subtracts this so prefill-phase retrievals are never charged
     /// against decode head-steps.
     t0_retrievals: u64,
-    /// Admission-time worst-case page reservation (see `PrefillingSeq`).
+    /// Admission-time expected page reservation (see `PrefillingSeq`).
     reserved_pages: usize,
     /// How many of `seq.generated` have been pushed into
     /// `Scheduler::partials` — the streaming cursor.  The first sampled
     /// token (`seq.next_token` at promotion) is streamed before it lands
     /// in `generated`, so this starts at 1.
     reported: usize,
+    /// Priority class for victim selection (base class — a running
+    /// sequence does not age; it is being served).
+    priority: Priority,
+    /// Iteration this sequence (re-)entered the running stage — victim
+    /// selection prefers the longest-running among equal-priority,
+    /// equal-reclaim candidates.
+    since: u64,
+}
+
+/// A preempted sequence parked between `running` and re-admission.
+struct SuspendedSeq {
+    seq: Sequence,
+    prefill_us: f64,
+    ttft_us: f64,
+    decode_us: f64,
+    steps: u64,
+    t0_retrievals: u64,
+    reserved_pages: usize,
+    reported: usize,
+    priority: Priority,
+    /// Iteration of suspension — the aging reference for re-admission
+    /// ordering (older suspensions resume first within a class).
+    suspended_at: u64,
+    /// Host-depth suspension: pool pages and the page reservation were
+    /// released (KV parked in the swap tier) and must be re-acquired on
+    /// resume.  Device-depth suspensions keep both.
+    host: bool,
+}
+
+/// A resumed sequence rejoins the decode batch with every latency and
+/// streaming cursor it left with — the interruption is invisible in its
+/// `RequestOut` except through wall-clock time.
+fn resumed_to_running(s: SuspendedSeq, now: u64) -> RunningSeq {
+    RunningSeq {
+        seq: s.seq,
+        prefill_us: s.prefill_us,
+        ttft_us: s.ttft_us,
+        decode_us: s.decode_us,
+        steps: s.steps,
+        t0_retrievals: s.t0_retrievals,
+        reserved_pages: s.reserved_pages,
+        reported: s.reported,
+        priority: s.priority,
+        since: now,
+    }
 }
 
 impl Scheduler {
@@ -230,6 +361,8 @@ impl Scheduler {
             rejected: Vec::new(),
             prefilling: Vec::new(),
             running: Vec::new(),
+            suspended: Vec::new(),
+            iter: 0,
             prefill_rr: 0,
             partials: Vec::new(),
             metrics: RunMetrics::default(),
@@ -246,12 +379,36 @@ impl Scheduler {
         );
         // A request whose worst-case page need exceeds the whole pool can
         // never be admitted — reject it here instead of wedging the FIFO
-        // queue; `step` returns it as a `rejected` RequestOut.
+        // queue; `step` returns it as a `rejected` RequestOut.  The
+        // never-fit check stays worst-case (full prompt): a prefix hit is
+        // an expectation, not a guarantee.
         if self.policy.max_kv_pages > 0 && pages > self.policy.max_kv_pages {
             self.rejected.push(req);
             return;
         }
-        self.waiting.push_back((req, Instant::now(), pages));
+        // Admission charges the *expected* pages: probe the prefix cache
+        // (side-effect-free) and discount the shared prefix
+        // (`pages_needed_tail`).  Cold or cache-less submits match the
+        // worst case exactly, so the pre-overload admission schedule is
+        // unchanged for them.
+        let matched = self.engine.prefix_match_tokens(&req.prompt);
+        let est_pages = BatchPolicy::pages_needed_tail(
+            req.prompt.len(),
+            matched,
+            req.max_new_tokens,
+            self.engine.pool.page_len,
+            self.engine.mm.n_layers,
+        );
+        let priority = req.priority.unwrap_or(Priority::from_index(
+            self.engine.cfg.default_priority,
+        ));
+        self.waiting.push_back(WaitingReq {
+            req,
+            submitted: Instant::now(),
+            est_pages,
+            priority,
+            arrival: self.iter,
+        });
     }
 
     /// Drain the tokens sampled since the last call (streaming partials).
@@ -266,6 +423,7 @@ impl Scheduler {
             + self.rejected.len()
             + self.prefilling.len()
             + self.running.len()
+            + self.suspended.len()
     }
 
     /// One scheduler iteration: admit → prefill chunks (under the token
@@ -288,47 +446,74 @@ impl Scheduler {
             });
         }
 
+        self.iter += 1;
+        let now = self.iter;
+
+        // re-admit suspended sequences ahead of new arrivals — they were
+        // already served once and hold client-visible streams
+        // (DESIGN.md §Overload)
+        self.resume_pass(now)?;
+
         // admit into the prefilling stage (cheap; the prefill work itself
         // is spread over subsequent iterations), gated on batch slots AND
-        // estimated KV pages so a burst of long prompts waits instead of
+        // expected KV pages so a burst of long prompts waits instead of
         // growing the pool past its cap.  The page headroom is the cap
-        // minus the *worst-case reservations* of every in-flight
-        // sequence — not the pool's current occupancy — so a sequence
-        // that has not yet grown into its reservation (decode appends
-        // pages after admission) can never be over-committed against.
-        // Page needs were precomputed at submit; only the first
-        // `max_batch` queue entries can be admitted, so this is
-        // O(max_batch + in-flight), independent of queue depth.
-        let occupied = self.running.len() + self.prefilling.len();
-        let waiting_pages: Vec<usize> = self
-            .waiting
-            .iter()
-            .take(self.policy.max_batch)
-            .map(|(_, _, pages)| *pages)
-            .collect();
-        let reserved: usize = self
-            .prefilling
-            .iter()
-            .map(|p| p.reserved_pages)
-            .chain(self.running.iter().map(|r| r.reserved_pages))
-            .sum();
-        let headroom = if self.policy.max_kv_pages == 0 {
-            usize::MAX
-        } else {
-            self.policy.max_kv_pages.saturating_sub(reserved)
-        };
-        let n_admit = self.policy.admit(occupied, headroom, &waiting_pages);
-        for _ in 0..n_admit {
-            let (req, submitted, pages) = self.waiting.pop_front().unwrap();
-            let mut seq = self.engine.new_sequence(req.id, req.prompt);
-            seq.max_new = req.max_new_tokens;
-            seq.sampling = req.sampling;
-            self.prefilling.push(PrefillingSeq {
-                seq,
-                submitted,
-                prefill_us: 0.0,
-                reserved_pages: pages,
-            });
+        // minus the reservations of every in-flight sequence — not the
+        // pool's current occupancy, which lags behind what admitted
+        // sequences will still grow into.  The queue is scanned by
+        // effective priority (aging) with arrival order breaking ties,
+        // stopping at the first candidate that neither fits nor can
+        // preempt — on an all-default workload this is exactly the FIFO
+        // stop-at-first-misfit policy (`BatchPolicy::admit`).
+        let aging = self.engine.cfg.aging_iters;
+        loop {
+            let Some(best) = (0..self.waiting.len()).max_by_key(|&i| {
+                let w = &self.waiting[i];
+                let eff = effective_priority(
+                    w.priority,
+                    now.saturating_sub(w.arrival),
+                    aging,
+                );
+                (eff, std::cmp::Reverse(w.arrival), std::cmp::Reverse(i))
+            }) else {
+                break;
+            };
+            // Preemption eligibility uses the BASE class, not the aged
+            // one: aging decides who is served next, never who gets
+            // evicted — an aged default-priority request must not start
+            // preempting its own class, or a uniform workload would
+            // stop matching the pre-overload schedule.
+            let w_base = self.waiting[best].priority;
+            let fits_slot = self.running.len() + self.prefilling.len()
+                < self.policy.max_batch;
+            let fits_pages =
+                self.waiting[best].est_pages <= self.page_headroom();
+            if fits_slot && fits_pages {
+                let w = self.waiting.remove(best).unwrap();
+                let mut seq =
+                    self.engine.new_sequence(w.req.id, w.req.prompt);
+                seq.max_new = w.req.max_new_tokens;
+                seq.sampling = w.req.sampling;
+                self.prefilling.push(PrefillingSeq {
+                    seq,
+                    submitted: w.submitted,
+                    prefill_us: 0.0,
+                    reserved_pages: w.est_pages,
+                    priority: w.priority,
+                });
+                continue;
+            }
+            // blocked: a strictly-lower-priority running victim can yield
+            // its slot, pages, and reservation (host-depth suspension) —
+            // equal priority never preempts, so uniform workloads keep
+            // the pre-overload admission schedule exactly
+            if !self.engine.cfg.preemption {
+                break;
+            }
+            if !self.preempt_one(Some(w_base), true, now, &mut done_out)? {
+                break;
+            }
+            // retry the same candidate against the freed capacity
         }
 
         // prefill chunks under the per-iteration token budget, walking
@@ -349,7 +534,33 @@ impl Scheduler {
             self.prefill_rr = (self.prefill_rr + 1) % self.prefilling.len();
         }
         let mut finished: Vec<usize> = Vec::new();
+        let mut ran_any = false;
         for &i in &plan {
+            // Page-feasibility gate (DESIGN.md §Overload): reservations
+            // are prefix-discounted *estimates*, so check the real pool
+            // before committing a chunk — worst case the final chunk of a
+            // device-path prefill loads the whole prompt's KV at once.
+            // Deferral is cheap (the chunk ledger is untouched; the
+            // sequence retries next iteration once retirements free
+            // pages); when nothing is running and nothing ran yet this
+            // iteration the first chunk goes through regardless, the same
+            // progress guarantee `budget_prefill_plan` makes.
+            let avail = self.engine.pool.available_pages();
+            if avail != usize::MAX && (ran_any || !self.running.is_empty())
+            {
+                let seq = &self.prefilling[i].seq;
+                let total = self.engine.mm.n_layers
+                    * seq
+                        .prompt
+                        .len()
+                        .div_ceil(self.engine.pool.page_len.max(1));
+                let need = total.saturating_sub(seq.cache.pages_held());
+                if need > avail {
+                    self.engine.stats.kv_pressure_events += 1;
+                    continue;
+                }
+            }
+            ran_any = true;
             let t0 = Instant::now();
             let done = self
                 .engine
@@ -401,7 +612,93 @@ impl Scheduler {
                 t0_retrievals,
                 reserved_pages: p.reserved_pages,
                 reported: 1,
+                priority: p.priority,
+                since: now,
             });
+        }
+
+        // Pre-decode feasibility against the paged DEVICE pool
+        // (DESIGN.md §Overload): resolve block pressure by device-depth
+        // suspension (drop mirrors, zero bytes moved) BEFORE the step,
+        // so the engine's mid-step drop-to-tile path — which charges
+        // `kv_rehome_bytes` — stays unreachable by scheduling, not luck.
+        if !self.running.is_empty() {
+            // a paged mirror the capped pool can never grow to cover
+            // falls off the paged path now, as a fresh seed elsewhere
+            for r in &mut self.running {
+                if self.engine.paged_overflows(&r.seq) {
+                    self.engine.stats.kv_pressure_events += 1;
+                    self.engine.demote_paged_mirror(&mut r.seq);
+                }
+            }
+            loop {
+                let free = self.engine.paged_free_blocks();
+                if free == usize::MAX {
+                    break;
+                }
+                let need: usize = self
+                    .running
+                    .iter()
+                    .map(|r| self.engine.paged_step_need(&r.seq))
+                    .sum();
+                if need <= free {
+                    break;
+                }
+                self.engine.stats.kv_pressure_events += 1;
+                if !self.engine.cfg.preemption || self.running.len() <= 1 {
+                    // cannot shrink the batch: grant blocks in batch
+                    // order (the order `decode_step` seeds mirrors) and
+                    // demote whoever the pool cannot cover, so their
+                    // fallback is a fresh tile seed, never a re-home
+                    let mut avail = free;
+                    for r in &mut self.running {
+                        let n = self.engine.paged_step_need(&r.seq);
+                        if n <= avail {
+                            avail -= n;
+                        } else if n > 0 {
+                            self.engine.demote_paged_mirror(&mut r.seq);
+                        }
+                    }
+                    break;
+                }
+                if !self.preempt_one(None, false, now, &mut done_out)? {
+                    break;
+                }
+            }
+        }
+
+        // Host-POOL page feasibility: each decode append that crosses a
+        // page boundary draws one page per layer.  Prefix-discounted
+        // reservations make admission an estimate, so check the real
+        // pool and free pages by host-depth suspension when it cannot
+        // cover every append (never below one runner — the submit-time
+        // worst-case check guarantees a lone sequence always fits).
+        if !self.running.is_empty() {
+            let nl = self.engine.mm.n_layers;
+            let page_len = self.engine.pool.page_len.max(1);
+            loop {
+                let avail = self.engine.pool.available_pages();
+                if avail == usize::MAX {
+                    break;
+                }
+                let need: usize = self
+                    .running
+                    .iter()
+                    .map(|r| {
+                        if r.seq.cache.len() % page_len == 0 { nl } else { 0 }
+                    })
+                    .sum();
+                if need <= avail {
+                    break;
+                }
+                self.engine.stats.kv_pressure_events += 1;
+                if !self.engine.cfg.preemption || self.running.len() <= 1 {
+                    break;
+                }
+                if !self.preempt_one(None, true, now, &mut done_out)? {
+                    break;
+                }
+            }
         }
 
         // decode one token for everyone
@@ -451,38 +748,223 @@ impl Scheduler {
         let mut i = 0;
         while i < self.running.len() {
             if self.running[i].seq.done {
-                let mut r = self.running.swap_remove(i);
-                let head_steps = self.engine.mm.n_heads as u64
-                    * self.engine.mm.n_layers as u64
-                    * r.steps;
-                let retr = r
-                    .seq
-                    .selector
-                    .retrievals()
-                    .saturating_sub(r.t0_retrievals);
-                self.metrics.retrievals += retr;
-                self.metrics.head_steps += head_steps;
-                self.engine.release(&mut r.seq);
-                done_out.push(RequestOut {
-                    id: r.seq.id,
-                    tokens: r.seq.generated.clone(),
-                    prefill_us: r.prefill_us,
-                    decode_us: r.decode_us,
-                    ttft_us: r.ttft_us,
-                    steps: r.steps,
-                    rho_hat: decode_rho_hat(
-                        r.seq.selector.retrievals(),
-                        r.t0_retrievals,
-                        head_steps,
-                    ),
-                    rejected: None,
-                });
+                let r = self.running.swap_remove(i);
+                let out = self.finish(r, None);
+                done_out.push(out);
             } else {
                 i += 1;
             }
         }
+        // mirror the overload counters so preemption/swap economics are
+        // observable at the serving-metrics level (DESIGN.md §Overload);
+        // `shed_requests` is scheduler-side and counted at the shed site
+        self.metrics.preemptions = self.engine.stats.preemptions;
+        self.metrics.swap_out_blocks = self.engine.stats.swap_out_blocks;
+        self.metrics.swap_out_bytes = self.engine.stats.swap_out_bytes;
+        self.metrics.swap_in_bytes = self.engine.stats.swap_in_bytes;
+        self.metrics.restores_reseed = self.engine.stats.restores_reseed;
+        self.metrics.restores_restage =
+            self.engine.stats.restores_restage;
+        self.metrics.kv_pressure_events =
+            self.engine.stats.kv_pressure_events;
         self.metrics.wall_s = self.started.elapsed().as_secs_f64();
         Ok(done_out)
+    }
+
+    /// Release a departing running sequence's resources and build its
+    /// final `RequestOut` — shared by normal retirement (`rejected:
+    /// None`) and shedding (`Some(Preempted)`), so a shed request is
+    /// never silently absent from the output stream: it carries every
+    /// token it produced plus the explicit reason (DESIGN.md §Overload).
+    fn finish(
+        &mut self,
+        mut r: RunningSeq,
+        rejected: Option<RejectReason>,
+    ) -> RequestOut {
+        let head_steps = self.engine.mm.n_heads as u64
+            * self.engine.mm.n_layers as u64
+            * r.steps;
+        let retr =
+            r.seq.selector.retrievals().saturating_sub(r.t0_retrievals);
+        self.metrics.retrievals += retr;
+        self.metrics.head_steps += head_steps;
+        self.engine.release(&mut r.seq);
+        RequestOut {
+            id: r.seq.id,
+            tokens: r.seq.generated.clone(),
+            prefill_us: r.prefill_us,
+            decode_us: r.decode_us,
+            ttft_us: r.ttft_us,
+            steps: r.steps,
+            rho_hat: decode_rho_hat(
+                r.seq.selector.retrievals(),
+                r.t0_retrievals,
+                head_steps,
+            ),
+            rejected,
+        }
+    }
+
+    /// Total expected-page reservation charged against the cap:
+    /// prefilling + running + device-depth suspended (their pool pages
+    /// are still live).  Host-depth suspensions parked their KV in the
+    /// swap tier and released theirs until resume.
+    fn reserved_pages_total(&self) -> usize {
+        self.prefilling
+            .iter()
+            .map(|p| p.reserved_pages)
+            .chain(self.running.iter().map(|r| r.reserved_pages))
+            .chain(
+                self.suspended
+                    .iter()
+                    .filter(|s| !s.host)
+                    .map(|s| s.reserved_pages),
+            )
+            .sum()
+    }
+
+    /// Page headroom admission/resume may charge against
+    /// (`usize::MAX` when the pool is uncapped).
+    fn page_headroom(&self) -> usize {
+        if self.policy.max_kv_pages == 0 {
+            usize::MAX
+        } else {
+            self.policy
+                .max_kv_pages
+                .saturating_sub(self.reserved_pages_total())
+        }
+    }
+
+    /// Re-admit suspended sequences, best candidate first: effective
+    /// priority (aging while suspended) descending, then oldest
+    /// suspension — so a preempted request's wait is bounded by the
+    /// aging quantum even under a steady high-priority stream.  Gates:
+    /// a batch slot, the page reservation (host-depth re-charges it),
+    /// block feasibility for device-depth candidates, and — inside
+    /// `Engine::resume_from_swap` — actual pool pages for the restage.
+    /// Safety valve: when literally everything live is suspended, the
+    /// best resumable candidate comes back regardless of estimates
+    /// (a device-depth resume always succeeds, so the scheduler cannot
+    /// wedge with work parked forever).
+    fn resume_pass(&mut self, now: u64) -> Result<()> {
+        if self.suspended.is_empty() {
+            return Ok(());
+        }
+        let aging = self.engine.cfg.aging_iters;
+        let mut parked = std::mem::take(&mut self.suspended);
+        parked.sort_by_key(|s| {
+            let eff = effective_priority(
+                s.priority,
+                now.saturating_sub(s.suspended_at),
+                aging,
+            );
+            (std::cmp::Reverse(eff), s.suspended_at, s.seq.id)
+        });
+        for mut s in parked {
+            let fits_slot = self.running.len() + self.prefilling.len()
+                < self.policy.max_batch;
+            let fits_pages =
+                !s.host || s.reserved_pages <= self.page_headroom();
+            let free = self.engine.paged_free_blocks();
+            let fits_blocks = s.host
+                || free == usize::MAX
+                || self.engine.paged_step_need(&s.seq) <= free;
+            if fits_slot
+                && fits_pages
+                && fits_blocks
+                && self.engine.resume_from_swap(&mut s.seq)?
+            {
+                self.running.push(resumed_to_running(s, now));
+            } else {
+                self.suspended.push(s);
+            }
+        }
+        if self.running.is_empty()
+            && self.prefilling.is_empty()
+            && self.waiting.is_empty()
+            && !self.suspended.is_empty()
+        {
+            let mut parked = std::mem::take(&mut self.suspended);
+            parked.sort_by_key(|s| {
+                let eff = effective_priority(
+                    s.priority,
+                    now.saturating_sub(s.suspended_at),
+                    aging,
+                );
+                (std::cmp::Reverse(eff), s.suspended_at, s.seq.id)
+            });
+            let mut took = false;
+            for mut s in parked {
+                if !took && self.engine.resume_from_swap(&mut s.seq)? {
+                    took = true;
+                    self.running.push(resumed_to_running(s, now));
+                } else {
+                    self.suspended.push(s);
+                }
+            }
+            if !took {
+                anyhow::bail!(
+                    "overload wedge: every live sequence is suspended \
+                     and none can restage (host pool exhausted?)"
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Suspend — or, when host depth is asked for and the swap tier
+    /// cannot hold the victim, shed — one running sequence with
+    /// effective priority strictly below `below` (`None` = any).
+    /// Host depth parks KV in the swap tier, freeing pool pages, the
+    /// page reservation, and the batch slot; device depth drops only
+    /// the device mirror (blocks), keeping pages warm for a cheap
+    /// resume.  Returns whether a victim left the running set.
+    fn preempt_one(
+        &mut self,
+        below: Option<Priority>,
+        host: bool,
+        now: u64,
+        done_out: &mut Vec<RequestOut>,
+    ) -> Result<bool> {
+        let cands: Vec<VictimCand> = self
+            .running
+            .iter()
+            .enumerate()
+            .map(|(i, r)| VictimCand {
+                idx: i,
+                effective: r.priority,
+                reclaimable_blocks: self.engine.paged_reclaimable(&r.seq),
+                last_active: r.since,
+            })
+            .collect();
+        let Some(v) = pick_victim(&cands, below) else {
+            return Ok(false);
+        };
+        let mut r = self.running.swap_remove(v);
+        if host && !self.engine.swap.can_stash(r.seq.cache.len()) {
+            // swap budget exhausted: shed with everything it produced —
+            // an explicit `Preempted` reject, never a silent drop
+            self.metrics.shed_requests += 1;
+            self.engine.stats.kv_pressure_events += 1;
+            let out = self.finish(r, Some(RejectReason::Preempted));
+            done_out.push(out);
+            return Ok(true);
+        }
+        self.engine.suspend_to_swap(&mut r.seq, host)?;
+        self.suspended.push(SuspendedSeq {
+            seq: r.seq,
+            prefill_us: r.prefill_us,
+            ttft_us: r.ttft_us,
+            decode_us: r.decode_us,
+            steps: r.steps,
+            t0_retrievals: r.t0_retrievals,
+            reserved_pages: r.reserved_pages,
+            reported: r.reported,
+            priority: r.priority,
+            suspended_at: now,
+            host,
+        });
+        Ok(true)
     }
 
     /// Drive until all submitted requests finish.
@@ -577,6 +1059,48 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    /// Regression (issue satellite 1): admission must charge a warm
+    /// request's *expected unshared tail*, not its full prompt.  With
+    /// the worst-case estimate, a near-identical follower cannot batch
+    /// with the first request under a tight page cap (the burst
+    /// serializes even though the prefix cache would deduplicate almost
+    /// all of its pages); the tail estimate admits it immediately.
+    #[test]
+    fn warm_admission_charges_unshared_tail() {
+        let (page, nl) = (128usize, 4usize);
+        let full = BatchPolicy::pages_needed(448, 16, page, nl);
+        // 384 of the 448 prompt tokens hit the prefix cache
+        let warm = BatchPolicy::pages_needed_tail(448, 384, 16, page, nl);
+        assert_eq!(full, 16);
+        assert_eq!(warm, 4);
+        // a cold probe (no match) degenerates to the worst case exactly,
+        // so cache-less serving keeps the pre-fix admission schedule
+        assert_eq!(
+            BatchPolicy::pages_needed_tail(448, 0, 16, page, nl),
+            full
+        );
+        // a fully cached prompt charges only its generation pages
+        assert_eq!(BatchPolicy::pages_needed_tail(448, 448, 16, page, nl), 4);
+        // the serialization bug, engine-free: a 20-page cap fits one
+        // worst-case request; the warm follower batches only under the
+        // tail estimate
+        let p = BatchPolicy { max_batch: 8, max_kv_pages: 20 };
+        assert_eq!(p.admit(0, 20, &[full, full]), 1, "worst case serializes");
+        assert_eq!(p.admit(0, 20, &[full, warm]), 2, "tail estimate batches");
+    }
+
+    /// `RequestIn` gained `priority` + `Default` for the overload
+    /// subsystem: unset priority must defer to the engine config (None),
+    /// so every existing client schedules exactly as before.
+    #[test]
+    fn request_in_default_leaves_priority_unset() {
+        let r = RequestIn::default();
+        assert_eq!(r.id, 0);
+        assert!(r.prompt.is_empty());
+        assert_eq!(r.max_new_tokens, 0);
+        assert!(r.priority.is_none(), "unset priority defers to config");
     }
 
     #[test]

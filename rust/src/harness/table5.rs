@@ -62,6 +62,7 @@ pub fn run(args: &Args) -> Result<()> {
                         prompt: req.prompt,
                         max_new_tokens: gen,
                         sampling: Default::default(),
+                        priority: None,
                     });
                 }
                 let outs = sched.run_to_completion()?;

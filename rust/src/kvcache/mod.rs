@@ -650,6 +650,135 @@ impl SeqKvCache {
 }
 
 // ---------------------------------------------------------------------
+// host swap tier (DESIGN.md §Overload)
+
+/// One suspended sequence's host KV snapshot: `k`/`v` are
+/// `[n_layers, tokens, H, d]` row-major — the same position-major entry
+/// layout as [`PrefixCache`] snapshots, so restore is one contiguous
+/// `H·d` row per (layer, pos).
+struct SwapEntry {
+    id: u64,
+    tokens: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+/// Host-memory swap tier for preempted sequences (the overload
+/// subsystem's capacity lever, DESIGN.md §Overload).  When the scheduler
+/// suspends a sequence at *host* depth — freeing its `PagePool` pages,
+/// not just its device blocks — the exact KV bytes move here and move
+/// back bitwise on resume, so a preempted trajectory is
+/// indistinguishable from an uninterrupted one.  The budget is counted
+/// in blocks of `block` tokens (the same granularity as the paged
+/// device pool and the prefix cache); 0 means unbounded.  When a stash
+/// would exceed the budget the caller sheds the victim instead
+/// (`RejectReason::Preempted`) — the tier never evicts silently,
+/// because its contents are the only copy of a live sequence's state.
+pub struct SwapTier {
+    block: usize,
+    budget_blocks: usize,
+    entries: Vec<SwapEntry>,
+    /// Lifetime counters (mirrored into `StepStats` by the engine).
+    pub stashes: u64,
+    pub restores: u64,
+    /// High-water mark of `resident_blocks` (the pressure gauge).
+    pub peak_blocks: usize,
+}
+
+impl SwapTier {
+    pub fn new(budget_blocks: usize, block: usize) -> Self {
+        SwapTier {
+            block: block.max(1),
+            budget_blocks,
+            entries: Vec::new(),
+            stashes: 0,
+            restores: 0,
+            peak_blocks: 0,
+        }
+    }
+
+    /// Budget granularity in tokens.
+    pub fn block(&self) -> usize {
+        self.block
+    }
+
+    /// Budget in blocks; 0 = unbounded.
+    pub fn budget_blocks(&self) -> usize {
+        self.budget_blocks
+    }
+
+    fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block)
+    }
+
+    /// Σ blocks across stashed entries — the budget's occupancy.
+    pub fn resident_blocks(&self) -> usize {
+        self.entries.iter().map(|e| self.blocks_for(e.tokens)).sum()
+    }
+
+    pub fn entries(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn contains(&self, id: u64) -> bool {
+        self.entries.iter().any(|e| e.id == id)
+    }
+
+    /// Tokens of a stashed snapshot, without removing it — the restore
+    /// path's feasibility probe (page math before `take`).
+    pub fn stashed_tokens(&self, id: u64) -> Option<usize> {
+        self.entries.iter().find(|e| e.id == id).map(|e| e.tokens)
+    }
+
+    /// Whether a `tokens`-long snapshot fits the remaining budget.
+    pub fn can_stash(&self, tokens: usize) -> bool {
+        self.budget_blocks == 0
+            || self.resident_blocks() + self.blocks_for(tokens)
+                <= self.budget_blocks
+    }
+
+    /// Stash a suspended sequence's KV snapshot.  Returns `false` (and
+    /// drops nothing — the caller still owns the sequence) when the
+    /// budget would be exceeded or the id is already stashed.
+    pub fn stash(
+        &mut self,
+        id: u64,
+        tokens: usize,
+        k: Vec<f32>,
+        v: Vec<f32>,
+    ) -> bool {
+        if tokens == 0 || !self.can_stash(tokens) || self.contains(id) {
+            return false;
+        }
+        self.entries.push(SwapEntry { id, tokens, k, v });
+        self.stashes += 1;
+        self.peak_blocks = self.peak_blocks.max(self.resident_blocks());
+        true
+    }
+
+    /// Remove and return a stashed snapshot: `(tokens, k, v)`.
+    pub fn take(&mut self, id: u64) -> Option<(usize, Vec<f32>, Vec<f32>)> {
+        let i = self.entries.iter().position(|e| e.id == id)?;
+        let e = self.entries.swap_remove(i);
+        self.restores += 1;
+        Some((e.tokens, e.k, e.v))
+    }
+
+    /// Drop a stashed snapshot without restoring it (the sequence was
+    /// shed or retired while suspended).  Returns whether an entry
+    /// existed.
+    pub fn discard(&mut self, id: u64) -> bool {
+        match self.entries.iter().position(|e| e.id == id) {
+            Some(i) => {
+                self.entries.swap_remove(i);
+                true
+            }
+            None => false,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
 // shared-prefix cache (DESIGN.md §Serving)
 
 /// FNV-1a chain hash of one token block given the previous block's chain
@@ -781,12 +910,10 @@ impl PrefixCache {
         self.entries.iter().map(|e| e.hashes.len()).sum()
     }
 
-    /// Longest cached prefix of `prompt`, capped one token short of the
-    /// whole prompt (the unshared tail must be ≥ 1 so prefill executes
-    /// real final-chunk logits).  On a hit the entry's LRU clock is
-    /// bumped; ties between equally-long matches go to the most recently
-    /// used entry.
-    pub fn lookup(&mut self, prompt: &[i32]) -> Option<PrefixHit> {
+    /// Shared match scan: longest token-verified cached prefix of
+    /// `prompt` as `(blocks, entry index)`, with no counter or LRU-clock
+    /// side effects.
+    fn best_match(&self, prompt: &[i32]) -> Option<(usize, usize)> {
         let limit_blocks = prompt.len().saturating_sub(1) / self.block;
         let want = prefix_hashes(
             &prompt[..(limit_blocks * self.block).min(prompt.len())],
@@ -819,7 +946,16 @@ impl PrefixCache {
                 best = Some((m, i));
             }
         }
-        match best {
+        best
+    }
+
+    /// Longest cached prefix of `prompt`, capped one token short of the
+    /// whole prompt (the unshared tail must be ≥ 1 so prefill executes
+    /// real final-chunk logits).  On a hit the entry's LRU clock is
+    /// bumped; ties between equally-long matches go to the most recently
+    /// used entry.
+    pub fn lookup(&mut self, prompt: &[i32]) -> Option<PrefixHit> {
+        match self.best_match(prompt) {
             Some((m, i)) => {
                 self.hits += 1;
                 self.tick += 1;
@@ -831,6 +967,15 @@ impl PrefixCache {
                 None
             }
         }
+    }
+
+    /// Side-effect-free probe: the tokens a [`lookup`](Self::lookup) at
+    /// this instant would match, without perturbing hit/miss counters or
+    /// LRU order.  Admission control uses this to estimate a warm
+    /// request's unshared prefill tail (`Scheduler::submit`) — an
+    /// estimate must not count as cache traffic or keep entries warm.
+    pub fn peek(&self, prompt: &[i32]) -> usize {
+        self.best_match(prompt).map_or(0, |(m, _)| m * self.block)
     }
 
     /// One contiguous `[H·d]` K row and V row for (layer, pos) of an
@@ -1967,5 +2112,220 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    // -----------------------------------------------------------------
+    // swap tier (DESIGN.md §Overload)
+
+    /// Stash/take round-trips the snapshot bitwise, the block budget
+    /// gates admission, 0 means unbounded, and discard drops a shed
+    /// sequence's entry without counting as a restore.
+    #[test]
+    fn swap_tier_budget_and_roundtrip() {
+        let mut st = SwapTier::new(4, 8); // 4-block budget, 8-token blocks
+        let (k, v) = (vec![1.5f32; 24], vec![-2.5f32; 24]);
+        // 17 tokens → 3 blocks of 8
+        assert!(st.can_stash(17));
+        assert!(st.stash(7, 17, k.clone(), v.clone()));
+        assert_eq!(st.resident_blocks(), 3);
+        assert!(st.contains(7));
+        // duplicate ids are rejected
+        assert!(!st.stash(7, 1, Vec::new(), Vec::new()));
+        // 2 more blocks would exceed the 4-block budget; 1 fits
+        assert!(!st.can_stash(9));
+        assert!(!st.stash(8, 9, Vec::new(), Vec::new()));
+        assert!(st.stash(8, 8, vec![0.0; 8], vec![0.0; 8]));
+        assert_eq!((st.resident_blocks(), st.peak_blocks), (4, 4));
+        // take returns the exact bytes and frees the budget
+        let (tokens, k2, v2) = st.take(7).expect("stashed");
+        assert_eq!((tokens, k2, v2), (17, k, v));
+        assert_eq!(st.resident_blocks(), 1);
+        assert!(st.take(7).is_none(), "take removes the entry");
+        // discard (shed path) drops without a restore
+        assert!(st.discard(8));
+        assert!(!st.discard(8));
+        assert_eq!((st.stashes, st.restores), (2, 1));
+        assert_eq!(st.peak_blocks, 4, "high-water mark survives drains");
+        // unbounded tier never refuses on capacity
+        let mut un = SwapTier::new(0, 8);
+        assert!(un.can_stash(1_000_000));
+        assert!(un.stash(1, 100, vec![0.0; 4], vec![0.0; 4]));
+        // empty snapshots are meaningless and rejected
+        assert!(!un.stash(2, 0, Vec::new(), Vec::new()));
+    }
+
+    /// Issue satellite (admission probe): `peek` returns exactly what
+    /// `lookup` would match, with zero side effects — counters, LRU
+    /// order, and subsequent eviction decisions are all unchanged by any
+    /// number of peeks.
+    #[test]
+    fn prefix_peek_matches_lookup_without_side_effects() {
+        let (block, nl, h, d) = (4, 1, 2, 3);
+        let mut pc = PrefixCache::new(block, 8, nl, h, d);
+        let toks: Vec<i32> = (100..116).collect();
+        assert!(pc.insert(
+            &toks[..8],
+            snap(nl, 8, h, d, 1.0),
+            snap(nl, 8, h, d, -1.0),
+            Vec::new(),
+            None,
+        ));
+        assert!(pc.insert(
+            &(200..204).collect::<Vec<i32>>(),
+            snap(nl, 4, h, d, 2.0),
+            snap(nl, 4, h, d, -2.0),
+            Vec::new(),
+            None,
+        ));
+        // peek agrees with lookup on hits, tail-guard, and misses
+        assert_eq!(pc.peek(&toks), 8);
+        assert_eq!(pc.peek(&toks[..8]), 4, "tail of ≥1 token stays unshared");
+        assert_eq!(pc.peek(&[9, 9, 9, 9, 9]), 0);
+        // ... and none of that touched the counters
+        assert_eq!((pc.hits, pc.misses), (0, 0));
+        // peeks must not keep entries warm: the 8-token entry stays the
+        // LRU victim even after many peeks at it, so inserting past the
+        // budget evicts it — a lookup in peek's place would have
+        // protected it.
+        pc.lookup(&(200..205).collect::<Vec<i32>>()).expect("warm entry");
+        for _ in 0..10 {
+            assert_eq!(pc.peek(&toks), 8);
+        }
+        assert!(pc.insert(
+            &(300..316).collect::<Vec<i32>>(),
+            snap(nl, 16, h, d, 3.0),
+            snap(nl, 16, h, d, -3.0),
+            Vec::new(),
+            None,
+        ));
+        assert_eq!(pc.peek(&toks), 0, "peeked-only entry was the LRU victim");
+        assert_eq!(pc.peek(&(200..205).collect::<Vec<i32>>()), 4);
+    }
+
+    /// Concurrency model (loom lane, issue satellite): the
+    /// SwapTier↔BlockAllocator evict/retain/restore state machine under
+    /// every interleaving of a victim sequence's suspend/resume script
+    /// against a prefix-cache client sharing one of its blocks.  The
+    /// victim holds blocks {b0, b1} with b0 also pinned by the prefix
+    /// cache; thread A evicts (releasing the sequence's refs and
+    /// stashing to the tier) then restores (fresh allocation + take);
+    /// thread B retains the pinned block into a warm sequence, then
+    /// releases the cache pin.  A cache-pinned block must never dangle —
+    /// its refcount must cover every model holder at every step, eviction
+    /// must free only last-holder blocks, the tier must hold the victim
+    /// exactly while suspended, and the pool must drain at the end.
+    #[test]
+    fn loom_swap_tier_block_allocator_all_interleavings() {
+        use crate::analysis::sched::{explore, Op};
+        use crate::sched_ops;
+
+        const VICTIM: u64 = 7;
+        #[derive(Clone)]
+        struct St {
+            ba: BlockAllocator,
+            tier: SwapTier,
+            victim: Vec<usize>, // the suspended sequence's block table
+            warm: Vec<usize>,   // a prefix-warm sequence's pins
+            cache_pin: Option<usize>,
+            suspended: bool,
+        }
+        let a_ops: Vec<Op<St>> = sched_ops![
+            |s: &mut St| {
+                // evict: release the victim's refs (the cache pin keeps
+                // b0 alive) and stash its KV in the tier
+                for id in s.victim.drain(..) {
+                    s.ba.release(id);
+                }
+                assert!(s.tier.stash(VICTIM, 5, vec![0.5; 4], vec![1.5; 4]));
+                s.suspended = true;
+            },
+            |s: &mut St| {
+                // restore: take the snapshot back and re-seed into
+                // freshly allocated blocks
+                let (tokens, _k, _v) =
+                    s.tier.take(VICTIM).expect("stashed while suspended");
+                assert_eq!(tokens, 5);
+                for _ in 0..2 {
+                    s.victim.push(s.ba.alloc().expect("cap 4 fits"));
+                }
+                s.suspended = false;
+            },
+            |s: &mut St| {
+                for id in s.victim.drain(..) {
+                    s.ba.release(id);
+                }
+            },
+        ];
+        let b_ops: Vec<Op<St>> = sched_ops![
+            |s: &mut St| {
+                // warm admission retains the cache-pinned block — valid
+                // under any interleaving because the cache pin is alive
+                // until B's own release op below
+                let b0 = s.cache_pin.expect("pin released only by op 2");
+                s.ba.retain(b0);
+                s.warm.push(b0);
+            },
+            |s: &mut St| {
+                // prefix-cache eviction: drop the cache's pin
+                let b0 = s.cache_pin.take().expect("released once");
+                s.ba.release(b0);
+            },
+            |s: &mut St| {
+                for id in s.warm.drain(..) {
+                    s.ba.release(id);
+                }
+            },
+        ];
+        let mut ba = BlockAllocator::new(4);
+        let b0 = ba.alloc().unwrap();
+        ba.retain(b0); // prefix-cache pin
+        let b1 = ba.alloc().unwrap();
+        let n = explore(
+            &St {
+                ba,
+                tier: SwapTier::new(0, 4),
+                victim: vec![b0, b1],
+                warm: Vec::new(),
+                cache_pin: Some(b0),
+                suspended: false,
+            },
+            &[a_ops, b_ops],
+            &|s| {
+                // refcount == model holders for every block, always
+                let mut want = vec![0u32; s.ba.capacity()];
+                for &id in s.victim.iter().chain(&s.warm) {
+                    want[id] += 1;
+                }
+                if let Some(id) = s.cache_pin {
+                    want[id] += 1;
+                }
+                for (id, &c) in want.iter().enumerate() {
+                    if s.ba.ref_count(id) != c {
+                        return Err(format!(
+                            "block {id}: refcount {} != holders {c}",
+                            s.ba.ref_count(id)
+                        ));
+                    }
+                }
+                if s.ba.free_blocks() + s.ba.in_use() != s.ba.capacity() {
+                    return Err("free + in_use != capacity".into());
+                }
+                if s.suspended != s.tier.contains(VICTIM) {
+                    return Err("tier residency out of sync".into());
+                }
+                Ok(())
+            },
+            &|s| {
+                if s.ba.in_use() != 0 {
+                    return Err(format!("{} blocks leaked", s.ba.in_use()));
+                }
+                if s.tier.entries() != 0 {
+                    return Err("tier entry leaked".into());
+                }
+                Ok(())
+            },
+        )
+        .unwrap_or_else(|v| panic!("{v}"));
+        assert_eq!(n, 20, "C(6,3) interleavings of two 3-op scripts");
     }
 }

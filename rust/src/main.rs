@@ -9,6 +9,7 @@
 
 use anyhow::Result;
 use prhs::config::{EngineConfig, SelectorKind};
+use prhs::coordinator::overload::Priority;
 use prhs::coordinator::RequestIn;
 use prhs::model::proj::SamplingParams;
 use prhs::model::Engine;
@@ -174,6 +175,11 @@ fn serve(rest: &[String]) -> Result<()> {
         .flag("temperature", "0.0", "per-request sampling temperature (0 = greedy)")
         .flag("top-k", "0", "per-request top-k sampling cutoff (0 = disabled)")
         .flag("top-p", "1.0", "per-request nucleus sampling mass (1 = disabled)")
+        .flag("priority", "default", "priority class stamped on every submitted request: low|normal|high (default = the engine's default-priority)")
+        .flag("device-block-cap", "0", "clamp the paged device KV pool to this many blocks — an overcommit knob for exercising preemption (0 = artifact capacity)")
+        .flag("swap-budget-blocks", "0", "host swap-tier budget in KV blocks for preempted sequences (0 = unbounded)")
+        .flag("aging-iters", "64", "scheduler iterations per anti-starvation priority boost (0 = aging off)")
+        .switch("no-preemption", "disable decode preemption under KV pressure (pressure falls back to deferral/demotion)")
         .switch("chat", "run the multi-turn chat workload with streamed replies (each turn extends the previous context — exercises the prefix cache)");
     let args = cli.parse(rest).map_err(anyhow::Error::msg)?;
     let mut cfg = EngineConfig::default();
@@ -196,6 +202,17 @@ fn serve(rest: &[String]) -> Result<()> {
     cfg.strict_manifest = !args.get_bool("no-strict-manifest");
     cfg.prefix_cache_blocks = args.get_usize("prefix-cache-blocks");
     cfg.temperature = args.get_f64("temperature") as f32;
+    cfg.device_block_cap = args.get_usize("device-block-cap");
+    cfg.swap_budget_blocks = args.get_usize("swap-budget-blocks");
+    cfg.aging_iters = args.get_usize("aging-iters") as u64;
+    cfg.preemption = !args.get_bool("no-preemption");
+    let priority = match args.get("priority") {
+        "default" => None,
+        "low" => Some(Priority::Low),
+        "normal" => Some(Priority::Normal),
+        "high" => Some(Priority::High),
+        other => anyhow::bail!("bad --priority `{other}`"),
+    };
     let sampling = SamplingParams {
         temperature: args.get_f64("temperature") as f32,
         top_k: args.get_usize("top-k"),
@@ -211,7 +228,9 @@ fn serve(rest: &[String]) -> Result<()> {
 
     let mut rng = Rng::new(args.get_usize("seed") as u64);
     if args.get_bool("chat") {
-        return serve_chat(&args, vocab, &client, sampling, &mut rng, server);
+        return serve_chat(
+            &args, vocab, &client, sampling, priority, &mut rng, server,
+        );
     }
     let spec = workload::scaled(&workload::GSM8K, args.get_usize("prompt-len"));
     let n = args.get_usize("requests");
@@ -225,6 +244,7 @@ fn serve(rest: &[String]) -> Result<()> {
                     prompt: req.prompt,
                     max_new_tokens: args.get_usize("gen"),
                     sampling: sampling.clone(),
+                    priority,
                 })
                 .expect("submit")
         })
@@ -269,11 +289,13 @@ fn serve(rest: &[String]) -> Result<()> {
 /// so with `--prefix-cache-blocks > 0` every warm turn's prefill
 /// collapses to its unshared tail (watch the per-turn prefill column
 /// drop after turn 1).
+#[allow(clippy::too_many_arguments)]
 fn serve_chat(
     args: &prhs::util::cli::Args,
     vocab: usize,
     client: &prhs::server::ClientHandle,
     sampling: SamplingParams,
+    priority: Option<Priority>,
     rng: &mut Rng,
     server: prhs::server::Server,
 ) -> Result<()> {
@@ -299,6 +321,7 @@ fn serve_chat(
                 prompt: prompt.clone(),
                 max_new_tokens: gen,
                 sampling: sampling.clone(),
+                priority,
             };
             id += 1;
             // backpressure: retry the request verbatim until accepted

@@ -152,6 +152,34 @@ pub struct RunMetrics {
     /// exactly (Σ ⌈len/block⌉), vs the whole-tile padded footprint of
     /// the grouped-mirror layout.
     pub device_blocks_live: u64,
+    /// Sequences suspended by the overload subsystem, mirrored from
+    /// `StepStats::preemptions` (DESIGN.md §Overload).
+    pub preemptions: u64,
+    /// Paged-pool blocks handed back by suspensions, mirrored from
+    /// `StepStats::swap_out_blocks`.
+    pub swap_out_blocks: u64,
+    /// Host bytes snapshotted into the swap tier (host-depth
+    /// suspensions), mirrored from `StepStats::swap_out_bytes` —
+    /// `swap_model::swap_kv_bytes` per victim, exactly.
+    pub swap_out_bytes: u64,
+    /// Host bytes restaged out of the swap tier on resume, mirrored
+    /// from `StepStats::swap_in_bytes`; equals `swap_out_bytes` once
+    /// every suspended sequence resumed (conservation).
+    pub swap_in_bytes: u64,
+    /// Device-depth resumes (host pool never drained; mirror re-seeds
+    /// lazily), mirrored from `StepStats::restores_reseed`.
+    pub restores_reseed: u64,
+    /// Host-depth resumes (snapshot restaged into pool pages),
+    /// mirrored from `StepStats::restores_restage`.
+    pub restores_restage: u64,
+    /// KV-pressure events the scheduler resolved by preemption,
+    /// deferral, or shedding, mirrored from
+    /// `StepStats::kv_pressure_events` — the overload gauge.
+    pub kv_pressure_events: u64,
+    /// Requests shed with `RejectReason::Preempted` (the swap budget
+    /// could not hold their state) — 0 is the exhaustion test's
+    /// no-client-visible-failure criterion.
+    pub shed_requests: u64,
     pub wall_s: f64,
     /// Decode-phase head-level retrievals only (prefill-side scoring is
     /// excluded from ρ̂ by definition — paper Sec. III, DESIGN.md §4).

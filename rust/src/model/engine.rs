@@ -19,7 +19,7 @@ use anyhow::{anyhow, Result};
 use crate::config::EngineConfig;
 use crate::kvcache::{
     BlockAllocator, DevKvMirror, PagePool, PrefixCache, ResidencyMode,
-    SeqKvCache,
+    SeqKvCache, SwapTier,
 };
 use crate::runtime::{
     ArenaHandle, ArtifactSpec, DeviceArena, Input, ModelManifest, Output,
@@ -390,6 +390,33 @@ pub mod decode_dispatch {
     /// Θ(live tokens / block) with no whole-tile padding.
     pub fn blocks_needed(tokens: usize, block: usize) -> usize {
         tokens.div_ceil(block.max(1))
+    }
+}
+
+/// Pure model of the bytes the overload subsystem moves suspending a
+/// sequence to / restoring it from the host swap tier
+/// (`kvcache::SwapTier`, DESIGN.md §Overload).  The engine's
+/// `StepStats::{swap_out_bytes, swap_in_bytes}` counters are computed
+/// THROUGH this function, so the exhaustion/differential tests can pin
+/// them exactly: a host-depth suspension snapshots the sequence's whole
+/// cached context once, a restore copies the same bytes back, and a
+/// device-depth suspension moves ZERO bytes (the host `PagePool` is the
+/// always-fresh source of truth — dropping device residency is
+/// bookkeeping only).  Rebuild-by-recompute is deliberately NOT modeled:
+/// chunked prefill reduces in a different float order than the decode
+/// path that produced the KV, so a recomputed trajectory would not be
+/// bitwise identical to the uninterrupted one (the acceptance
+/// criterion); restore is always a byte copy.
+pub mod swap_model {
+    /// One host KV snapshot: the `[nl, tokens, H, d]` K and V arrays a
+    /// suspension stashes and a restore copies back (4 bytes per f32).
+    pub fn swap_kv_bytes(
+        nl: usize,
+        h: usize,
+        d: usize,
+        tokens: usize,
+    ) -> u64 {
+        4 * (2 * nl * tokens * h * d) as u64
     }
 }
 
@@ -821,6 +848,35 @@ pub struct StepStats {
     /// of `prefill_host_bytes_staged`, which models host↔device
     /// transfers only.
     pub prefix_seed_bytes: u64,
+    /// Sequences suspended by the overload subsystem
+    /// (`Engine::suspend_to_swap`) — device- and host-depth combined
+    /// (DESIGN.md §Overload).
+    pub preemptions: u64,
+    /// Paged-pool block-table entries released by suspensions — the
+    /// capacity a preemption handed back to the `BlockAllocator`
+    /// (`decode_dispatch::blocks_needed` of the victim's context when
+    /// its mirror was in sync).
+    pub swap_out_blocks: u64,
+    /// Host→host bytes snapshotted into the swap tier by host-depth
+    /// suspensions (`swap_model::swap_kv_bytes`; device-depth
+    /// suspensions move zero bytes).  Kept out of the host↔device
+    /// staging counters, like `prefix_seed_bytes`.
+    pub swap_out_bytes: u64,
+    /// Host→host bytes copied back out of the swap tier by restores —
+    /// equals `swap_out_bytes` once every suspended sequence has
+    /// resumed (the exhaustion test's conservation check).
+    pub swap_in_bytes: u64,
+    /// Resumes of device-depth suspensions: the host pool still held
+    /// the KV, so only the device mirror re-seeds (lazily, on the next
+    /// dense need) — zero swap bytes.
+    pub restores_reseed: u64,
+    /// Resumes of host-depth suspensions: the snapshot restaged into
+    /// pool pages (`swap_in_bytes` charged), device mirror again lazy.
+    pub restores_restage: u64,
+    /// KV-pressure events the scheduler observed (admission or decode
+    /// blocked on blocks/pages and resolved by preemption, deferral, or
+    /// shedding) — the overload pressure gauge.
+    pub kv_pressure_events: u64,
 }
 
 impl StepStats {
@@ -909,6 +965,13 @@ pub struct Engine {
     pub stats: StepStats,
     pub rng: Rng,
     pub probe: Option<Probe>,
+    /// Host-memory swap tier for preempted sequences (DESIGN.md
+    /// §Overload): host-depth suspensions snapshot their KV here and
+    /// free their pool pages; restores copy the same bytes back.  The
+    /// scheduler gates suspensions on `SwapTier::can_stash` and sheds
+    /// (`RejectReason::Preempted`) when the budget
+    /// (`EngineConfig::swap_budget_blocks`) is out.
+    pub swap: SwapTier,
     /// Shared-prefix cache (DESIGN.md §Serving), present when
     /// `cfg.prefix_cache_blocks > 0`: `Engine::release` registers each
     /// finished sequence's block-aligned context here and
@@ -1036,20 +1099,21 @@ impl Engine {
             128,
             cfg.max_kv_pages,
         );
-        // Prefix-hash granularity: the paged device pool's block size
-        // when the paged stages are in play (one hash block then pins
-        // exactly one device block), else the host pool's page length —
-        // either way a cached prefix is page/block aligned on both
-        // tiers.
+        // Prefix-hash / swap-budget granularity: the paged device
+        // pool's block size when the paged stages are in play (one hash
+        // block then pins exactly one device block), else the host
+        // pool's page length — either way a cached prefix is page/block
+        // aligned on both tiers, and the swap tier's budget counts the
+        // same units the allocator frees.
+        let block = if cfg.device_decode_kv && cfg.paged_device_kv {
+            mm.find("kv_append_dev_paged", &[])
+                .and_then(|a| a.params.get("block").copied())
+                .filter(|&b| b > 0)
+                .unwrap_or(pool.page_len)
+        } else {
+            pool.page_len
+        };
         let prefix = if cfg.prefix_cache_blocks > 0 {
-            let block = if cfg.device_decode_kv && cfg.paged_device_kv {
-                mm.find("kv_append_dev_paged", &[])
-                    .and_then(|a| a.params.get("block").copied())
-                    .filter(|&b| b > 0)
-                    .unwrap_or(pool.page_len)
-            } else {
-                pool.page_len
-            };
             Some(PrefixCache::new(
                 block,
                 cfg.prefix_cache_blocks,
@@ -1060,6 +1124,7 @@ impl Engine {
         } else {
             None
         };
+        let swap = SwapTier::new(cfg.swap_budget_blocks, block);
         let seed = cfg.seed;
         Engine {
             rt,
@@ -1070,6 +1135,7 @@ impl Engine {
             stats: StepStats::default(),
             rng: Rng::new(seed),
             probe: None,
+            swap,
             prefix,
             sc_kc: Vec::new(),
             sc_vc: Vec::new(),
@@ -1584,11 +1650,20 @@ impl Engine {
         let zeros = vec![0f32; len];
         let buf = self.rt.upload_f32(&zeros, &[len])?;
         let handle = self.arena.alloc(buf);
+        // `device_block_cap` clamps only the LEDGER capacity (the
+        // overload tests' overcommit lever): the pool buffer keeps the
+        // compiled `max_blocks` geometry, so every allocatable block id
+        // stays a valid table index.
+        let cap = if self.cfg.device_block_cap > 0 {
+            max_blocks.min(self.cfg.device_block_cap)
+        } else {
+            max_blocks
+        };
         self.paged = Some(PagedDev {
             handle,
             block,
             max_blocks,
-            alloc: BlockAllocator::new(max_blocks),
+            alloc: BlockAllocator::new(cap),
         });
         Ok(())
     }
@@ -2101,8 +2176,9 @@ impl Engine {
         let Some(tile) = self.dev_dispatch_tile(t + 1) else {
             return Err(anyhow!(
                 "paged device pool exhausted at context {} with no \
-                 tile-mirror fallback compiled (block-granular swap-tier \
-                 eviction is the ROADMAP follow-up)",
+                 tile-mirror fallback compiled — the scheduler's \
+                 pre-decode feasibility check should have suspended a \
+                 victim to the swap tier first (DESIGN.md §Overload)",
                 t + 1
             ));
         };
@@ -3787,6 +3863,222 @@ impl Engine {
         Ok(seq.generated.clone())
     }
 
+    // -----------------------------------------------------------------
+    // overload: suspend / resume (DESIGN.md §Overload)
+
+    /// Paged device-pool geometry `(block, capacity_blocks)` as the
+    /// scheduler's feasibility model — readable before the pool's lazy
+    /// creation (capacity honors `cfg.device_block_cap`).  `None` when
+    /// the paged path is not in play (config off / artifacts absent).
+    pub fn paged_geometry(&self) -> Option<(usize, usize)> {
+        if let Some(p) = self.paged.as_ref() {
+            return Some((p.block, p.alloc.capacity()));
+        }
+        if !self.cfg.device_decode_kv || !self.cfg.paged_device_kv {
+            return None;
+        }
+        let art = self.mm.find("kv_append_dev_paged", &[])?;
+        let block = art.params.get("block").copied().unwrap_or(0);
+        let mb = art.params.get("max_blocks").copied().unwrap_or(0);
+        if block == 0 || mb == 0 {
+            return None;
+        }
+        let cap = if self.cfg.device_block_cap > 0 {
+            mb.min(self.cfg.device_block_cap)
+        } else {
+            mb
+        };
+        Some((block, cap))
+    }
+
+    /// Free blocks in the paged pool right now (full capacity before
+    /// its lazy creation); `usize::MAX` when the paged path is off —
+    /// the scheduler's pre-decode feasibility input.
+    pub fn paged_free_blocks(&self) -> usize {
+        match self.paged.as_ref() {
+            Some(p) => p.alloc.free_blocks(),
+            None => self.paged_geometry().map_or(usize::MAX, |(_, c)| c),
+        }
+    }
+
+    /// Pool blocks `seq`'s NEXT decode step must be able to draw:
+    /// table growth for a live paged mirror, the whole seed for a
+    /// sequence whose next dense need re-homes it into the pool, 0 for
+    /// tile-homed mirrors and for contexts the pool can never cover
+    /// (those live on tile/host paths and draw nothing).
+    pub fn paged_step_need(&self, seq: &Sequence) -> usize {
+        let Some((block, cap)) = self.paged_geometry() else {
+            return 0;
+        };
+        let want =
+            decode_dispatch::blocks_needed(seq.cache.len() + 1, block);
+        if want > cap {
+            return 0;
+        }
+        match seq.kv_mirror.as_ref() {
+            Some(DevKvMirror::Paged { blocks, .. }) => {
+                want.saturating_sub(blocks.len())
+            }
+            Some(_) => 0,
+            None => want.saturating_sub(seq.prefix_blocks.len()),
+        }
+    }
+
+    /// Whether `seq` holds a paged mirror whose next step can NEVER
+    /// fit the (possibly capped) pool — the scheduler demotes such a
+    /// sequence preemptively (device-depth suspension) so the
+    /// mid-step drop-to-tile path, which charges `kv_rehome_bytes`,
+    /// stays unreachable.
+    pub fn paged_overflows(&self, seq: &Sequence) -> bool {
+        let Some((block, cap)) = self.paged_geometry() else {
+            return false;
+        };
+        matches!(seq.kv_mirror.as_ref(), Some(DevKvMirror::Paged { .. }))
+            && decode_dispatch::blocks_needed(seq.cache.len() + 1, block)
+                > cap
+    }
+
+    /// Blocks a suspension of `seq` would hand back to the free list —
+    /// its paged-mirror table entries with no other holder (prefix-
+    /// cache-pinned blocks stay resident), the victim-selection input
+    /// (`coordinator::overload::VictimCand::reclaimable_blocks`).
+    pub fn paged_reclaimable(&self, seq: &Sequence) -> usize {
+        match (self.paged.as_ref(), seq.kv_mirror.as_ref()) {
+            (Some(p), Some(DevKvMirror::Paged { blocks, .. })) => blocks
+                .iter()
+                .filter(|&&b| p.alloc.ref_count(b) == 1)
+                .count(),
+            _ => 0,
+        }
+    }
+
+    /// Side-effect-free prefix-cache probe: matched tokens for
+    /// `prompt` (admission's unshared-tail page estimate, DESIGN.md
+    /// §Overload); 0 when the cache is off.
+    pub fn prefix_match_tokens(&self, prompt: &[i32]) -> usize {
+        self.prefix.as_ref().map_or(0, |pc| pc.peek(prompt))
+    }
+
+    /// Drop `seq`'s device mirror WITHOUT suspending it — the sequence
+    /// keeps running and its next dense need seeds a fresh home (tile or
+    /// pool, whichever fits).  The scheduler's guard for a sequence the
+    /// capped pool can never cover (`paged_overflows`) and for batches
+    /// it cannot shrink: dropping BEFORE the step keeps the mid-step
+    /// drop-to-tile re-home (`kv_rehome_bytes`) unreachable, and no
+    /// preemption counters move because nothing left the batch.
+    pub fn demote_paged_mirror(&mut self, seq: &mut Sequence) {
+        self.drop_mirror(seq);
+        self.note_blocks_live();
+    }
+
+    /// Suspend `seq` under KV pressure — the preemption primitive
+    /// (DESIGN.md §Overload).  Device depth (`to_host = false`): drop
+    /// its device mirror, handing the blocks back to the allocator;
+    /// the host pool keeps the KV (zero bytes moved), and the next
+    /// dense need after resume re-seeds the mirror fresh (no re-home
+    /// charge — the mirror is gone before any tile fallback could
+    /// copy it).  Host depth (`to_host = true`): additionally snapshot
+    /// the host KV into the swap tier and free the pool pages.  The
+    /// caller gates host depth on `swap.can_stash` and sheds instead
+    /// when the budget is out; an uncoordinated over-budget call
+    /// errors with state intact (mirror dropped, pages still live).
+    pub fn suspend_to_swap(
+        &mut self,
+        seq: &mut Sequence,
+        to_host: bool,
+    ) -> Result<()> {
+        debug_assert!(
+            seq.prefill.is_done(),
+            "only decoding sequences are preempted"
+        );
+        let t = seq.cache.len();
+        let freed = match seq.kv_mirror.as_ref() {
+            Some(DevKvMirror::Paged { blocks, .. }) => blocks.len() as u64,
+            _ => 0,
+        };
+        self.dev_release(seq);
+        self.drop_mirror(seq);
+        self.stats.preemptions += 1;
+        self.stats.swap_out_blocks += freed;
+        if to_host && t > 0 {
+            let (nl, h, d) =
+                (self.mm.n_layers, self.mm.n_heads, self.mm.head_dim);
+            // same [nl, t, H, d] snapshot layout as prefix-cache entries
+            let mut k = vec![0f32; nl * t * h * d];
+            let mut v = vec![0f32; nl * t * h * d];
+            for layer in 0..nl {
+                for pos in 0..t {
+                    for head in 0..h {
+                        let off = ((layer * t + pos) * h + head) * d;
+                        k[off..off + d].copy_from_slice(
+                            seq.cache.key(&self.pool, layer, head, pos),
+                        );
+                        v[off..off + d].copy_from_slice(
+                            seq.cache.value(&self.pool, layer, head, pos),
+                        );
+                    }
+                }
+            }
+            if !self.swap.stash(seq.id, t, k, v) {
+                return Err(anyhow!(
+                    "swap tier cannot hold seq {} ({} tokens): the \
+                     scheduler must gate host-depth suspension on \
+                     can_stash and shed instead",
+                    seq.id,
+                    t
+                ));
+            }
+            seq.cache.release(&mut self.pool);
+            self.stats.swap_out_bytes +=
+                swap_model::swap_kv_bytes(nl, h, d, t);
+        }
+        self.note_blocks_live();
+        Ok(())
+    }
+
+    /// Restore a suspended sequence's residency before it rejoins the
+    /// decode batch.  Host-swapped sequences restage their snapshot
+    /// into pool pages — bitwise the same floats that left, so the
+    /// resumed trajectory is indistinguishable from an uninterrupted
+    /// one; device-depth suspensions never drained the host pool, so
+    /// only counters move.  Either way the device mirror re-seeds
+    /// lazily on the next dense need (`ensure_mirror` — a fresh seed,
+    /// not a re-home).  `Ok(false)`: the host pool cannot cover the
+    /// restage right now; the snapshot stays in the tier, nothing
+    /// changed.
+    pub fn resume_from_swap(&mut self, seq: &mut Sequence) -> Result<bool> {
+        let Some(t) = self.swap.stashed_tokens(seq.id) else {
+            self.stats.restores_reseed += 1;
+            return Ok(true);
+        };
+        let (nl, h, d) =
+            (self.mm.n_layers, self.mm.n_heads, self.mm.head_dim);
+        debug_assert!(
+            seq.cache.is_empty(),
+            "host-swapped sequence still holds pool pages"
+        );
+        let need = nl * t.div_ceil(self.pool.page_len);
+        if self.pool.available_pages() < need {
+            return Ok(false);
+        }
+        let (t, k, v) = self.swap.take(seq.id).expect("probed above");
+        for pos in 0..t {
+            for layer in 0..nl {
+                let off = (layer * t + pos) * h * d;
+                seq.cache.append(
+                    &mut self.pool,
+                    layer,
+                    &k[off..off + h * d],
+                    &v[off..off + h * d],
+                )?;
+            }
+            seq.cache.commit_token();
+        }
+        self.stats.restores_restage += 1;
+        self.stats.swap_in_bytes += swap_model::swap_kv_bytes(nl, h, d, t);
+        Ok(true)
+    }
+
     /// Release a finished sequence's pages, its decode KV mirror, and
     /// (for a sequence abandoned mid-prefill) its device-resident
     /// prefill state.  With the prefix cache on, the sequence's
@@ -3798,6 +4090,9 @@ impl Engine {
         seq.cache.release(&mut self.pool);
         self.dev_release(seq);
         self.drop_mirror(seq);
+        // a sequence shed/retired while host-swapped leaves its
+        // snapshot in the tier; drop it (no restore counted)
+        self.swap.discard(seq.id);
         // prefix blocks retained at seeding but never adopted by a
         // paged mirror (e.g. decode stayed on a tile/host path) still
         // hold refcounts
@@ -4349,5 +4644,34 @@ mod tests {
         }
         // recompute hypothetical: each chunk re-runs [0, end)
         assert_eq!(f(512, 768, 128, false), (640 + 768) as u64);
+    }
+
+    /// Swap byte model (DESIGN.md §Overload): a host-depth suspension
+    /// moves the whole `[nl, t, H, d]` K/V snapshot once, a restore
+    /// moves the same bytes back, and the round trip conserves — the
+    /// conservation law the exhaustion test pins on live counters.
+    #[test]
+    fn swap_model_bytes_round_trip() {
+        use super::swap_model::swap_kv_bytes;
+        assert_eq!(swap_kv_bytes(NL, H, D, 0), 0);
+        assert_eq!(
+            swap_kv_bytes(NL, H, D, 1),
+            4 * (2 * NL * H * D) as u64
+        );
+        for t in [1usize, 17, 200, 512] {
+            let out = swap_kv_bytes(NL, H, D, t);
+            assert_eq!(out, 4 * (2 * NL * t * H * D) as u64);
+            // linear in tokens: suspending twice at t/2 + t/2 costs the
+            // same as once at t (block-granular, no tile padding)
+            if t % 2 == 0 {
+                assert_eq!(
+                    swap_kv_bytes(NL, H, D, t / 2) * 2,
+                    out,
+                    "swap bytes are linear in tokens"
+                );
+            }
+            // restore is the same model — conservation by construction
+            assert_eq!(out, swap_kv_bytes(NL, H, D, t));
+        }
     }
 }

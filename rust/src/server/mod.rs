@@ -63,7 +63,7 @@ impl ClientHandle {
     ///         id: 1,
     ///         prompt: vec![11, 12, 13],
     ///         max_new_tokens: 4,
-    ///         sampling: Default::default(),
+    ///         ..Default::default()
     ///     })
     ///     .expect("server alive");
     /// match out.rejected {
@@ -95,7 +95,7 @@ impl ClientHandle {
     ///     id: 1,
     ///     prompt: vec![11, 12, 13],
     ///     max_new_tokens: 4,
-    ///     sampling: Default::default(),
+    ///     ..Default::default()
     /// };
     /// let reply = loop {
     ///     match client.submit(req) {
@@ -337,6 +337,7 @@ mod tests {
             prompt: vec![1, 2, 3],
             max_new_tokens: 4,
             sampling: Default::default(),
+            priority: None,
         };
         let _reply1 = client.submit(first).expect("queue has capacity 1");
 
@@ -346,6 +347,7 @@ mod tests {
             prompt: vec![9, 8],
             max_new_tokens: 6,
             sampling: Default::default(),
+            priority: None,
         };
         let returned = match client.submit(second) {
             Err(SubmitError::Busy(r)) => r,
@@ -408,6 +410,53 @@ mod tests {
         assert_eq!(table.len(), 0, "table drains");
         // unknown ticket: no panic, no routing
         assert!(table.complete(out(99, 1)).is_none());
+    }
+
+    /// Overload contract (issue satellite 2): when the scheduler sheds a
+    /// streaming request under KV pressure, the client experience is
+    /// deterministic — the tokens streamed so far arrive, the token
+    /// channel closes (EOS via the table entry's sender drop, the same
+    /// mechanism as normal completion), and the final `RequestOut`
+    /// carries the explicit `Preempted` reject with the partial output.
+    /// A shed request is never silently absent from the reply stream.
+    #[test]
+    fn shed_streaming_request_gets_eos_and_explicit_reject() {
+        use crate::coordinator::RejectReason;
+
+        let mut table = ReplyTable::new();
+        let (tx, rx) = sync_channel::<RequestOut>(1);
+        let (stx, srx) = sync_channel::<i32>(8);
+        let ticket = table.register(42, tx, Some(stx));
+        // two tokens stream before the scheduler sheds the request
+        table.partial(ticket, 11);
+        table.partial(ticket, 12);
+        let shed = RequestOut {
+            id: ticket,
+            tokens: vec![11, 12],
+            prefill_us: 5.0,
+            decode_us: 3.0,
+            ttft_us: 5.0,
+            steps: 2,
+            rho_hat: 0.0,
+            rejected: Some(RejectReason::Preempted),
+        };
+        let (out, reply) = table.complete(shed).expect("ticket known");
+        assert_eq!(out.id, 42, "client id restored");
+        reply.send(out).unwrap();
+        // streamed tokens first, then a deterministic end-of-stream
+        assert_eq!(srx.try_recv(), Ok(11));
+        assert_eq!(srx.try_recv(), Ok(12));
+        assert!(
+            matches!(
+                srx.try_recv(),
+                Err(std::sync::mpsc::TryRecvError::Disconnected)
+            ),
+            "shed request's stream must EOS, not hang"
+        );
+        let fin = rx.try_recv().unwrap();
+        assert_eq!(fin.rejected, Some(RejectReason::Preempted));
+        assert_eq!(fin.tokens, vec![11, 12], "partial output preserved");
+        assert_eq!(table.len(), 0, "table drains on shed like on success");
     }
 
     /// Concurrency model (loom lane): two clients register/complete in
@@ -515,6 +564,7 @@ mod tests {
             prompt: vec![1],
             max_new_tokens: 1,
             sampling: Default::default(),
+            priority: None,
         };
         assert!(matches!(client.submit(req), Err(SubmitError::Closed)));
         let req2 = RequestIn {
@@ -522,6 +572,7 @@ mod tests {
             prompt: vec![1],
             max_new_tokens: 1,
             sampling: Default::default(),
+            priority: None,
         };
         assert!(matches!(
             client.submit_streaming(req2),

@@ -485,3 +485,136 @@ fn differential_identity_prefix_seeded_vs_cold() {
         assert_identical(&warm, &cold);
     }
 }
+
+/// Overload acceptance (DESIGN.md §Overload): a decode suspended
+/// mid-run and resumed must be bitwise indistinguishable from an
+/// uninterrupted run — trajectory, final logits, KV pages, selector
+/// sets, ρ̂ — at BOTH suspension depths, and the swap byte counters
+/// must match the analytic model (`swap_model::swap_kv_bytes`)
+/// exactly.  Host depth snapshots the whole cached context into the
+/// swap tier and restages the same floats; device depth drops only
+/// the device mirror (zero bytes — the host pool stays the source of
+/// truth and the mirror re-seeds fresh).  Restore is always a byte
+/// copy, never a recompute: chunked prefill reduces in a different
+/// float order, so recompute could not be bitwise identical.
+#[test]
+fn differential_identity_preempted_resumed_vs_uninterrupted() {
+    use prhs::model::engine::swap_model;
+
+    let Some(dir) = artifacts_dir() else { return };
+    let prompt_len = 120usize;
+    let max_new = 8usize;
+    let chunk = 96usize;
+    let mut rng = prhs::util::rng::Rng::new(89);
+    let prompt: Vec<i32> =
+        (0..prompt_len).map(|_| rng.below(8192) as i32).collect();
+    let mk_cfg = || {
+        let mut cfg = EngineConfig::default();
+        cfg.artifacts_dir = dir.clone();
+        cfg.selector.kind = SelectorKind::Cis;
+        cfg
+    };
+
+    // the uninterrupted oracle
+    let mut cold_engine = Engine::new(mk_cfg()).expect("engine");
+    let cold = run_seq(&mut cold_engine, 7, &prompt, max_new, chunk);
+
+    for host in [true, false] {
+        let depth = if host { "host" } else { "device" };
+        let mut engine = Engine::new(mk_cfg()).expect("engine");
+        let (nl, h, d) =
+            (engine.mm.n_layers, engine.mm.n_heads, engine.mm.head_dim);
+        let mut s = engine.new_sequence(7, prompt.clone());
+        s.max_new = max_new;
+        while !engine.prefill_chunk(&mut s, chunk).expect("prefill") {}
+        for _ in 0..3 {
+            let mut group = [&mut s];
+            engine.decode_step(&mut group).expect("decode");
+        }
+        assert!(!s.done, "suspension must land mid-decode");
+        let t = s.cache.len();
+        assert_eq!(t, prompt_len + 3);
+
+        engine.suspend_to_swap(&mut s, host).expect("suspend");
+        let expect_bytes =
+            if host { swap_model::swap_kv_bytes(nl, h, d, t) } else { 0 };
+        assert_eq!(
+            engine.stats.swap_out_bytes, expect_bytes,
+            "{depth}: swap-out bytes off the cost model"
+        );
+        assert_eq!(engine.stats.preemptions, 1);
+        if host {
+            assert!(s.cache.is_empty(), "host depth frees the pool pages");
+            assert_eq!(engine.pool.in_use_pages(), 0);
+        } else {
+            assert_eq!(
+                s.cache.len(),
+                t,
+                "device depth must keep the host KV"
+            );
+        }
+
+        assert!(
+            engine.resume_from_swap(&mut s).expect("resume"),
+            "{depth}: resume must succeed with a free pool"
+        );
+        assert_eq!(
+            engine.stats.swap_in_bytes, expect_bytes,
+            "{depth}: swap-in bytes off the cost model"
+        );
+        assert_eq!(engine.stats.restores_restage, u64::from(host));
+        assert_eq!(engine.stats.restores_reseed, u64::from(!host));
+        assert_eq!(s.cache.len(), t, "{depth}: context must be restored");
+
+        while !s.done {
+            let mut group = [&mut s];
+            engine.decode_step(&mut group).expect("decode");
+        }
+        let mut pages = Vec::new();
+        for layer in 0..nl {
+            for head in 0..h {
+                for pos in 0..s.cache.len() {
+                    pages.extend_from_slice(
+                        s.cache.key(&engine.pool, layer, head, pos),
+                    );
+                    pages.extend_from_slice(
+                        s.cache.value(&engine.pool, layer, head, pos),
+                    );
+                }
+            }
+        }
+        let interrupted = ModeOut {
+            label: format!("preempted@{depth}"),
+            generated: vec![s.generated.clone()],
+            logits: vec![s.last_logits.clone()],
+            sets: vec![(0..nl)
+                .map(|layer| s.selector.sets(layer).to_vec())
+                .collect()],
+            kv: vec![pages],
+            rho: vec![
+                engine.retrieval_ratio(&s, s.generated.len() as u64)
+            ],
+            probe_delta: 0.0,
+            decode_bytes: engine.stats.decode_host_bytes_staged,
+            probs_bytes: engine.stats.decode_probs_bytes,
+            dev_dispatches: engine.stats.decode_dev_dispatches,
+            dense_dev_calls: engine.stats.decode_dense_dev_calls,
+            dense_calls: engine.stats.dense_layer_calls,
+            rehome_bytes: engine.stats.kv_rehome_bytes,
+            blocks_live: engine.stats.device_blocks_live,
+            step_dispatches: Vec::new(),
+            step_probs_bytes: Vec::new(),
+        };
+        // the acceptance criterion: the interruption is invisible
+        assert_identical(&cold, &interrupted);
+        assert_eq!(
+            interrupted.rehome_bytes, 0,
+            "{depth}: suspension must never re-home KV"
+        );
+        engine.release(&mut s);
+        assert_eq!(
+            engine.stats.device_blocks_live, 0,
+            "{depth}: blocks leaked"
+        );
+    }
+}

@@ -671,12 +671,14 @@ fn chunked_prefill_bounds_ttft_behind_long_prompt() {
         prompt: long_prompt,
         max_new_tokens: 1,
         sampling: Default::default(),
+        priority: None,
     });
     sched.submit(prhs::coordinator::RequestIn {
         id: 1,
         prompt: short_prompt,
         max_new_tokens: 3,
         sampling: Default::default(),
+        priority: None,
     });
 
     let long_prefill_iters = 1200usize.div_ceil(128); // 10
@@ -740,6 +742,7 @@ fn scheduler_rho_hat_is_decode_only() {
         prompt: (0..200).map(|_| rng.below(vocab) as i32).collect(),
         max_new_tokens: 5,
         sampling: Default::default(),
+        priority: None,
     });
     let outs = sched.run_to_completion().unwrap();
     assert_eq!(outs.len(), 1);
@@ -785,6 +788,7 @@ fn scheduler_prefill_token_budget_bounds_iteration_work() {
         prompt: (0..long_len).map(|_| rng.below(vocab) as i32).collect(),
         max_new_tokens: 1,
         sampling: Default::default(),
+        priority: None,
     });
     for (i, &sl) in short_lens.iter().enumerate() {
         sched.submit(prhs::coordinator::RequestIn {
@@ -792,6 +796,7 @@ fn scheduler_prefill_token_budget_bounds_iteration_work() {
             prompt: (0..sl).map(|_| rng.below(vocab) as i32).collect(),
             max_new_tokens: 2,
             sampling: Default::default(),
+            priority: None,
         });
     }
 
@@ -858,6 +863,7 @@ fn kv_page_cap_serializes_burst_without_oom() {
             prompt: (0..200).map(|_| rng.below(vocab) as i32).collect(),
             max_new_tokens: 4,
             sampling: Default::default(),
+            priority: None,
         });
     }
     // this one needs ⌈(3000+4)/128⌉·4 = 96 pages > 16: can never fit
@@ -866,6 +872,7 @@ fn kv_page_cap_serializes_burst_without_oom() {
         prompt: (0..3000).map(|_| rng.below(vocab) as i32).collect(),
         max_new_tokens: 4,
         sampling: Default::default(),
+        priority: None,
     });
     let mut iters = 0;
     let mut outs = Vec::new();
@@ -916,12 +923,14 @@ fn kv_admission_reserves_worst_case_pages() {
         prompt: (0..250).map(|_| rng.below(vocab) as i32).collect(),
         max_new_tokens: 10,
         sampling: Default::default(),
+        priority: None,
     });
     sched.submit(prhs::coordinator::RequestIn {
         id: 1,
         prompt: (0..120).map(|_| rng.below(vocab) as i32).collect(),
         max_new_tokens: 8,
         sampling: Default::default(),
+        priority: None,
     });
     let mut iters = 0;
     let mut outs = Vec::new();
@@ -961,6 +970,7 @@ fn server_routes_duplicate_request_ids() {
             prompt: prompt(60),
             max_new_tokens: 2,
             sampling: Default::default(),
+            priority: None,
         })
         .unwrap();
     let rx_b = client
@@ -969,6 +979,7 @@ fn server_routes_duplicate_request_ids() {
             prompt: prompt(80),
             max_new_tokens: 5,
             sampling: Default::default(),
+            priority: None,
         })
         .unwrap();
     let out_a = rx_a.recv().unwrap();
@@ -1001,6 +1012,7 @@ fn server_round_trip() {
                     prompt: req.prompt,
                     max_new_tokens: 4,
                     sampling: Default::default(),
+                    priority: None,
                 })
                 .unwrap()
         })
@@ -1048,4 +1060,225 @@ fn cpe_psaw_shrinks_sets() {
         cpe_avg < cis_avg,
         "PSAW must shrink sets: cpe {cpe_avg} vs cis {cis_avg}"
     );
+}
+
+/// Overload tentpole acceptance: a burst whose aggregate device-block
+/// need overcommits a capped paged pool 3× is served by device-depth
+/// preemption — every request completes (zero client-visible failures),
+/// the pool never falls back to tile re-homes (`kv_rehome_bytes == 0`),
+/// nothing is shed, and the preemption/restore counters conserve exactly
+/// (every suspension resumed).
+#[test]
+fn kv_block_overcommit_preempts_without_failures() {
+    let Some(dir) = artifacts_dir() else { return };
+    if !common::can_batch(&dir, "small", 3, 256) {
+        return;
+    }
+    let mut cfg = EngineConfig::default();
+    cfg.artifacts_dir = dir;
+    cfg.selector.kind = SelectorKind::Cis;
+    cfg.max_batch = 3;
+    // block 64: each request wants ⌈124/64⌉ = 2 blocks; 6 requests ×
+    // 2 = 12 blocks against a 4-block cap — 3× overcommit, at most two
+    // sequences device-resident at once
+    cfg.device_block_cap = 4;
+    let engine = Engine::new(cfg).unwrap();
+    if engine.paged_geometry().is_none() {
+        eprintln!("skipping: artifact set has no paged stages");
+        return;
+    }
+    let vocab = engine.mm.vocab_size;
+    let mut sched = prhs::coordinator::Scheduler::new(engine);
+    let mut rng = Rng::new(71);
+    for id in 0..6u64 {
+        sched.submit(prhs::coordinator::RequestIn {
+            id,
+            prompt: (0..120).map(|_| rng.below(vocab) as i32).collect(),
+            max_new_tokens: 4,
+            sampling: Default::default(),
+            priority: None,
+        });
+    }
+    let mut iters = 0;
+    let mut outs = Vec::new();
+    while sched.pending() > 0 {
+        iters += 1;
+        assert!(iters < 500, "overloaded scheduler failed to converge");
+        outs.extend(sched.step().unwrap());
+        assert!(
+            sched.engine.stats.device_blocks_live <= 4,
+            "paged pool grew past the cap: {}",
+            sched.engine.stats.device_blocks_live
+        );
+    }
+    outs.sort_by_key(|o| o.id);
+    assert_eq!(outs.len(), 6);
+    for o in &outs {
+        assert!(o.rejected.is_none(), "request {} failed under overload", o.id);
+        assert_eq!(o.tokens.len(), 4, "request {} lost tokens", o.id);
+    }
+    let s = &sched.engine.stats;
+    assert!(s.preemptions > 0, "3× overcommit must have preempted");
+    assert_eq!(s.kv_rehome_bytes, 0, "preemption must pre-empt re-homing");
+    assert_eq!(sched.metrics.shed_requests, 0, "nothing may be shed");
+    // conservation: every suspension came back (device depth re-seeds,
+    // host depth restages — either way the counters must balance)
+    assert_eq!(
+        s.preemptions,
+        s.restores_reseed + s.restores_restage,
+        "suspensions ({}) != restores ({} + {})",
+        s.preemptions,
+        s.restores_reseed,
+        s.restores_restage
+    );
+    assert_eq!(s.swap_in_bytes, s.swap_out_bytes, "swap byte conservation");
+    assert_eq!(s.device_blocks_live, 0, "all blocks released");
+    assert_eq!(sched.engine.pool.in_use_pages(), 0, "all pages released");
+}
+
+/// Overload: a high-priority arrival preempts a low-priority decode at
+/// HOST depth (pages freed through the swap tier), runs to completion
+/// first, and the victim then resumes and completes normally — its
+/// `RequestOut` carries `rejected: None` (resumed ≠ `Preempted`) and the
+/// swap bytes match the analytic cost model exactly.
+#[test]
+fn high_priority_preempts_low_at_host_depth_and_victim_resumes() {
+    use prhs::coordinator::overload::Priority;
+    use prhs::model::engine::swap_model;
+
+    let Some(dir) = artifacts_dir() else { return };
+    let mut cfg = EngineConfig::default();
+    cfg.artifacts_dir = dir;
+    cfg.selector.kind = SelectorKind::Cis;
+    cfg.max_batch = 4;
+    // one 200-token + 4-new request reserves ⌈204/128⌉·4 = 8 pages —
+    // the whole cap, so admitting the second request REQUIRES evicting
+    // the first (host depth: device-depth suspension frees no pages)
+    cfg.max_kv_pages = 8;
+    let engine = Engine::new(cfg).unwrap();
+    let vocab = engine.mm.vocab_size;
+    let (nl, h, d) =
+        (engine.mm.n_layers, engine.mm.n_heads, engine.mm.head_dim);
+    let mut sched = prhs::coordinator::Scheduler::new(engine);
+    let mut rng = Rng::new(73);
+    let mut prompt =
+        |n: usize| (0..n).map(|_| rng.below(vocab) as i32).collect();
+    sched.submit(prhs::coordinator::RequestIn {
+        id: 0,
+        prompt: prompt(200),
+        max_new_tokens: 4,
+        sampling: Default::default(),
+        priority: Some(Priority::Low),
+    });
+    // one iteration: the low request prefills (monolithic) and decodes
+    // its first token — 201 cached tokens when the preemption lands
+    let mut outs = sched.step().unwrap();
+    assert!(outs.is_empty());
+    sched.submit(prhs::coordinator::RequestIn {
+        id: 1,
+        prompt: prompt(200),
+        max_new_tokens: 4,
+        sampling: Default::default(),
+        priority: Some(Priority::High),
+    });
+    let mut iters = 1;
+    let mut finish_iter = vec![0usize; 2];
+    while sched.pending() > 0 {
+        iters += 1;
+        assert!(iters < 100, "scheduler failed to converge");
+        for out in sched.step().unwrap() {
+            finish_iter[out.id as usize] = iters;
+            outs.push(out);
+        }
+    }
+    outs.sort_by_key(|o| o.id);
+    assert_eq!(outs.len(), 2);
+    for o in &outs {
+        assert!(o.rejected.is_none(), "request {} must complete", o.id);
+        assert_eq!(o.tokens.len(), 4);
+    }
+    assert!(
+        finish_iter[1] < finish_iter[0],
+        "high priority ({}) must finish before its victim ({})",
+        finish_iter[1],
+        finish_iter[0]
+    );
+    let s = &sched.engine.stats;
+    assert_eq!(s.preemptions, 1, "exactly one host-depth preemption");
+    assert_eq!(s.restores_restage, 1, "the victim restaged from the tier");
+    assert_eq!(s.restores_reseed, 0);
+    // the pure cost model, exactly: one 201-token [nl, t, H, d] K+V
+    // snapshot out and the same bytes back in
+    let expect = swap_model::swap_kv_bytes(nl, h, d, 201);
+    assert_eq!(s.swap_out_bytes, expect, "swap-out bytes off the model");
+    assert_eq!(s.swap_in_bytes, expect, "swap-in bytes off the model");
+    assert_eq!(s.kv_rehome_bytes, 0);
+    assert_eq!(sched.metrics.shed_requests, 0);
+    assert_eq!(sched.engine.pool.in_use_pages(), 0, "all pages released");
+}
+
+/// Overload (the `Preempted`-vs-resumed distinction): with a swap budget
+/// too small to park the victim, the host-depth preemption SHEDS it —
+/// an explicit `RejectReason::Preempted` carrying every token produced,
+/// never a silent drop — while the preemptor completes normally.
+/// Together with the resume test above this pins the contract: resumed
+/// victims finish with `rejected: None`, shed victims with
+/// `Some(Preempted)` plus their partial output.
+#[test]
+fn swap_budget_exhaustion_sheds_with_explicit_preempted_reject() {
+    use prhs::coordinator::overload::Priority;
+    use prhs::coordinator::RejectReason;
+
+    let Some(dir) = artifacts_dir() else { return };
+    let mut cfg = EngineConfig::default();
+    cfg.artifacts_dir = dir;
+    cfg.selector.kind = SelectorKind::Cis;
+    cfg.max_batch = 4;
+    cfg.max_kv_pages = 8;
+    // a 201-token victim needs ≥ 2 swap blocks; budget 1 forces a shed
+    cfg.swap_budget_blocks = 1;
+    let engine = Engine::new(cfg).unwrap();
+    let vocab = engine.mm.vocab_size;
+    let mut sched = prhs::coordinator::Scheduler::new(engine);
+    let mut rng = Rng::new(79);
+    let mut prompt =
+        |n: usize| (0..n).map(|_| rng.below(vocab) as i32).collect();
+    sched.submit(prhs::coordinator::RequestIn {
+        id: 0,
+        prompt: prompt(200),
+        max_new_tokens: 4,
+        sampling: Default::default(),
+        priority: Some(Priority::Low),
+    });
+    let mut outs = sched.step().unwrap();
+    assert!(outs.is_empty());
+    sched.submit(prhs::coordinator::RequestIn {
+        id: 1,
+        prompt: prompt(200),
+        max_new_tokens: 4,
+        sampling: Default::default(),
+        priority: Some(Priority::High),
+    });
+    let mut iters = 1;
+    while sched.pending() > 0 {
+        iters += 1;
+        assert!(iters < 100, "scheduler failed to converge");
+        outs.extend(sched.step().unwrap());
+    }
+    outs.sort_by_key(|o| o.id);
+    assert_eq!(outs.len(), 2);
+    // the victim: explicit reject + the one token it decoded before the
+    // preemption — partial output is preserved, not silently dropped
+    assert_eq!(outs[0].rejected, Some(RejectReason::Preempted));
+    assert_eq!(outs[0].tokens.len(), 1, "partial output preserved");
+    assert_eq!(outs[0].steps, 1);
+    // the preemptor: a normal completion
+    assert!(outs[1].rejected.is_none());
+    assert_eq!(outs[1].tokens.len(), 4);
+    let s = &sched.engine.stats;
+    assert_eq!(sched.metrics.shed_requests, 1);
+    assert_eq!(s.preemptions, 0, "a shed is not a suspension");
+    assert_eq!(s.swap_out_bytes, 0, "nothing entered the tier");
+    assert_eq!(s.restores_reseed + s.restores_restage, 0);
+    assert_eq!(sched.engine.pool.in_use_pages(), 0, "all pages released");
 }
