@@ -4,8 +4,8 @@
 //! batched-decode planning stage (serial vs planner pool).
 
 use prhs::config::{SelectorConfig, SelectorKind};
-use prhs::kvcache::{PagePool, SeqKvCache};
-use prhs::model::{proj, Sequence};
+use prhs::kvcache::{dequantize_row, quantize_row, KvQuant, PagePool, SeqKvCache};
+use prhs::model::{kv_bytes, proj, Sequence};
 use prhs::selector::{self, PlanKind, SelectorCtx};
 use prhs::util::bench::{arg_value, Bencher, Report};
 use prhs::util::fx;
@@ -183,6 +183,53 @@ fn main() -> anyhow::Result<()> {
         report.push(m_pool);
     }
 
+    // --- int8 residency codec + selector-sketch fidelity ------------------
+    // Row codec throughput (the per-append / per-read cost the quantized
+    // pool adds), plus an engine-free measure of how much of the exact
+    // f32 top-n_sel set a selector scoring against the int8 sketch keeps
+    // (DESIGN.md §Quantized-Residency) — exported into the CI `quant`
+    // object below.
+    let krow_q: Vec<f32> = (0..d).map(|_| rng.normal() * 2.0).collect();
+    let mut q8 = vec![0i8; d];
+    let mut deq = vec![0f32; d];
+    let s_q = quantize_row(&krow_q, &mut q8);
+    report.push(b.run("quantize_row d32", || {
+        let mut q = [0i8; 32];
+        std::hint::black_box(quantize_row(&krow_q, &mut q));
+    }));
+    report.push(b.run("dequantize_row d32", || {
+        dequantize_row(&q8, s_q, &mut deq);
+        std::hint::black_box(&deq);
+    }));
+    let sketch_overlap = {
+        let t_q = 2048usize;
+        let n_sel_q = 256usize;
+        let qv: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+        let mut exact = vec![0f32; t_q];
+        let mut sketch = vec![0f32; t_q];
+        let mut kq = vec![0i8; d];
+        let mut khat = vec![0f32; d];
+        for i in 0..t_q {
+            let k: Vec<f32> = (0..d).map(|_| rng.normal() * 2.0).collect();
+            let s = quantize_row(&k, &mut kq);
+            dequantize_row(&kq, s, &mut khat);
+            let (mut ze, mut zs) = (0f32, 0f32);
+            for j in 0..d {
+                ze += qv[j] * k[j];
+                zs += qv[j] * khat[j];
+            }
+            exact[i] = ze;
+            sketch[i] = zs;
+        }
+        let want: std::collections::HashSet<usize> =
+            fx::top_k_indices(&exact, n_sel_q).into_iter().collect();
+        let got = fx::top_k_indices(&sketch, n_sel_q);
+        let hit = got.iter().filter(|i| want.contains(i)).count();
+        let overlap = hit as f64 / n_sel_q as f64;
+        println!("  int8 sketch top-{n_sel_q} overlap vs f32: {overlap:.4}");
+        overlap
+    };
+
     // --- top-k over a 4k row ---------------------------------------------
     let row4k: Vec<f32> = (0..4096).map(|_| rng.f32()).collect();
     report.push(b.run("top_k 88 of 4096", || {
@@ -243,8 +290,25 @@ fn main() -> anyhow::Result<()> {
             prhs::model::prefill_staging::prefix_seed_bytes(nl, h, d, l2k / 2),
             ds::sparse_call_bytes(1, h, h, d, dmod, 160, false),
         );
+        // quantized-residency byte model at the same small-model geometry
+        // (engine-free: pure `model::kv_bytes`), plus the measured sketch
+        // fidelity — the max-concurrent-at-fixed-quality columns CI tracks
+        let ptb_f32 = kv_bytes::per_token_bytes(KvQuant::Off, nl, h, d);
+        let ptb_int8 = kv_bytes::per_token_bytes(KvQuant::Int8, nl, h, d);
+        let budget = 1u64 << 30; // 1 GiB host residency budget
+        let quant = format!(
+            "{{\"per_token_bytes_f32\":{ptb_f32},\
+             \"per_token_bytes_int8\":{ptb_int8},\
+             \"bytes_ratio\":{:.4},\
+             \"max_concurrent_f32_1gib_4k\":{},\
+             \"max_concurrent_int8_1gib_4k\":{},\
+             \"sketch_overlap_top256\":{sketch_overlap:.4}}}",
+            ptb_f32 as f64 / ptb_int8 as f64,
+            kv_bytes::max_concurrent(budget, KvQuant::Off, nl, h, d, 4096),
+            kv_bytes::max_concurrent(budget, KvQuant::Int8, nl, h, d, 4096),
+        );
         let json = format!(
-            "{{\"report\":{},\"decode_staging\":{staging}}}\n",
+            "{{\"report\":{},\"decode_staging\":{staging},\"quant\":{quant}}}\n",
             report.to_json().trim_end()
         );
         std::fs::write(&path, json)?;

@@ -21,7 +21,8 @@
 //! it requires `make artifacts`.
 
 use prhs::config::{EngineConfig, SelectorKind};
-use prhs::model::{ChunkLedger, Engine};
+use prhs::kvcache::KvQuant;
+use prhs::model::{kv_bytes, ChunkLedger, Engine};
 use prhs::runtime::{Runtime, WeightStore};
 use prhs::util::bench::arg_value;
 use prhs::util::rng::Rng;
@@ -487,6 +488,86 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
+    // ── quantized residency: the same prefill + short decode with the
+    // host KV tier at f32 vs int8 (DESIGN.md §Quantized-Residency).  The
+    // page count is identical in both modes, so the resident-bytes ratio
+    // is exactly the row-byte ratio 4d/(d+4) — ≥ 3× at d ≥ 12 — and the
+    // engine's `StepStats::kv_resident_bytes` gauge is computed through
+    // the same pure `model::kv_bytes` model CI tracks here.
+    let mut quant_json = String::from("null");
+    {
+        let l = lens[0];
+        let can_decode = mm
+            .bucket_for("layer_step_dense", "l_max", l + DECODE_STEPS)
+            .is_some();
+        let run_q = |quant: KvQuant| -> anyhow::Result<(f64, u64, u64, u64)> {
+            let mut cfg = base.clone();
+            cfg.kv_quant = quant;
+            let mut engine = Engine::with_shared(rt.clone(), ws.clone(), cfg);
+            let mut rng = Rng::new(0x1A78);
+            let prompt: Vec<i32> =
+                (0..l).map(|_| rng.below(mm.vocab_size) as i32).collect();
+            let mut seq = engine.new_sequence(0, prompt);
+            seq.max_new = DECODE_STEPS;
+            let t0 = Instant::now();
+            while !engine.prefill_chunk(&mut seq, chunk)? {}
+            while can_decode && !seq.done {
+                let mut g = [&mut seq];
+                engine.decode_step(&mut g)?;
+            }
+            let ms = t0.elapsed().as_secs_f64() * 1e3;
+            let toks = seq.cache.len() as u64;
+            let out = (
+                ms,
+                toks,
+                engine.stats.kv_resident_bytes,
+                engine.stats.dequant_rows,
+            );
+            engine.release(&mut seq);
+            Ok(out)
+        };
+        let (f_ms, f_toks, f_res, f_deq) = run_q(KvQuant::Off)?;
+        let (q_ms, q_toks, q_res, q_deq) = run_q(KvQuant::Int8)?;
+        assert_eq!(f_toks, q_toks, "precision must not change the context");
+        assert_eq!(f_deq, 0, "f32 residency must never dequantize");
+        assert!(
+            f_res >= 3 * q_res,
+            "int8 residency must be ≥3× smaller ({f_res} vs {q_res})"
+        );
+        let per_tok_f = f_res as f64 / f_toks.max(1) as f64;
+        let per_tok_q = q_res as f64 / q_toks.max(1) as f64;
+        let budget = 1u64 << 30;
+        let (nl, nh, hd) = (mm.n_layers, mm.n_heads, mm.head_dim);
+        let mc_f = kv_bytes::max_concurrent(budget, KvQuant::Off, nl, nh, hd, 4096);
+        let mc_q = kv_bytes::max_concurrent(budget, KvQuant::Int8, nl, nh, hd, 4096);
+        println!(
+            "  quant: L {l} resident {} KB f32 → {} KB int8 \
+             ({per_tok_f:.0} → {per_tok_q:.0} B/tok, {q_deq} rows \
+             dequantized); 1 GiB @4k fits {mc_f} f32 / {mc_q} int8 seqs",
+            f_res / 1024,
+            q_res / 1024,
+        );
+        md.push_str(&format!(
+            "\n### Quantized residency (host KV tier, L = {l})\n\n\
+             | precision | prefill+decode ms | resident KB | B/token | dequant rows | max seqs @1 GiB, 4k tok |\n\
+             |---|---|---|---|---|---|\n\
+             | f32 | {f_ms:.1} | {} | {per_tok_f:.0} | {f_deq} | {mc_f} |\n\
+             | int8 | {q_ms:.1} | {} | {per_tok_q:.0} | {q_deq} | {mc_q} |\n",
+            f_res / 1024,
+            q_res / 1024,
+        ));
+        quant_json = format!(
+            "{{\"l\":{l},\"kv_resident_bytes_f32\":{f_res},\
+             \"kv_resident_bytes_int8\":{q_res},\
+             \"resident_bytes_per_token_f32\":{per_tok_f:.1},\
+             \"resident_bytes_per_token_int8\":{per_tok_q:.1},\
+             \"bytes_ratio\":{:.4},\"dequant_rows_int8\":{q_deq},\
+             \"max_concurrent_f32_1gib_4k\":{mc_f},\
+             \"max_concurrent_int8_1gib_4k\":{mc_q}}}",
+            f_res as f64 / q_res.max(1) as f64,
+        );
+    }
+
     md.push_str(
         "\nDev/host tokens grow linearly in L (recompute grows with the sum \
          of prefixes); dev prefill host-bytes grow O(chunk) per chunk + one \
@@ -505,7 +586,8 @@ fn main() -> anyhow::Result<()> {
     if let Some(path) = json_path {
         let json = format!(
             "{{\"bench\":\"prefill_scaling\",\"chunk\":{chunk},\"rows\":[{}],\
-             \"chat\":{chat_json},\"overload\":{overload_json}}}\n",
+             \"chat\":{chat_json},\"overload\":{overload_json},\
+             \"quant\":{quant_json}}}\n",
             json_rows.join(",")
         );
         std::fs::write(&path, json)?;

@@ -6,6 +6,7 @@
 //!   2. a serving config (this module) loadable from a JSON file;
 //!   3. CLI overrides (see `main.rs`).
 
+use crate::kvcache::KvQuant;
 use crate::util::json::Json;
 
 /// Which KV-selection policy the engine runs.  Names follow the paper's
@@ -335,6 +336,22 @@ pub struct EngineConfig {
     pub planner_threads: usize,
     /// Use the Pallas-kernel attention variant where available.
     pub use_pallas: bool,
+    /// Precision of the *host* KV residency tier (`off` = f32, the
+    /// default; `int8` = per-(head, row) power-of-two-scaled int8,
+    /// `kvcache::QuantPage`).  Under `int8` the host `PagePool` pages,
+    /// `SwapTier` snapshots, and `PrefixCache` entries store a scale
+    /// row + i8 payload (~3.6× smaller at d=32, → `model::kv_bytes`),
+    /// rows are canonicalized (quantize→dequantize) once on append so
+    /// every downstream consumer — device staging, selector scoring,
+    /// swap/prefix snapshots — sees the *same* floats, and dequant
+    /// happens inside the existing f32 staging paths (`gather`,
+    /// `export_dense*`, `key_into`/`value_into`), so the engine's
+    /// surfaces are unchanged.  The selector scores against the
+    /// quantized keys (a resident *sketch*); exact f32 K/V is
+    /// reconstructed only for staged rows.  Selection error induced by
+    /// quantization is bounded by `theory::quant_delta_bound`
+    /// (DESIGN.md §Quantized-Residency).
+    pub kv_quant: KvQuant,
     /// Run the static contract checker (`analysis::check_model`) over the
     /// served model's manifest at engine startup and refuse to start on
     /// any error — shape drift between `python/compile/aot.py` and the
@@ -371,6 +388,7 @@ impl Default for EngineConfig {
             aging_iters: 64,
             device_block_cap: 0,
             planner_threads: 0,
+            kv_quant: KvQuant::Off,
             use_pallas: false,
             strict_manifest: true,
             seed: 0xC0FFEE,
@@ -446,6 +464,10 @@ impl EngineConfig {
         }
         if let Some(n) = j.get("planner_threads").and_then(Json::as_usize) {
             cfg.planner_threads = n;
+        }
+        if let Some(s) = j.get("kv_quant").and_then(Json::as_str) {
+            cfg.kv_quant = KvQuant::parse(s)
+                .ok_or_else(|| format!("unknown kv_quant `{s}`"))?;
         }
         if let Some(b) = j.get("strict_manifest").and_then(Json::as_bool) {
             cfg.strict_manifest = b;
@@ -563,6 +585,7 @@ impl EngineConfig {
         o.insert("aging_iters".into(), num(self.aging_iters as usize));
         o.insert("device_block_cap".into(), num(self.device_block_cap));
         o.insert("planner_threads".into(), num(self.planner_threads));
+        o.insert("kv_quant".into(), Json::Str(self.kv_quant.name().into()));
         o.insert("strict_manifest".into(), Json::Bool(self.strict_manifest));
         o.insert("selector".into(), Json::Obj(sel));
         Json::Obj(o).to_string_compact()
@@ -656,6 +679,11 @@ mod tests {
         assert_eq!(c.default_priority, 1, "requests default to normal");
         assert_eq!(c.aging_iters, 64, "anti-starvation aging defaults on");
         assert_eq!(c.device_block_cap, 0, "full artifact pool by default");
+        assert_eq!(
+            c.kv_quant,
+            KvQuant::Off,
+            "quantized host residency is opt-in (f32 is the oracle)"
+        );
         let j = Json::parse(
             r#"{"prefill_chunk":256,"planner_threads":4,"max_batch":32,
                 "prefill_recompute":true,"prefill_token_budget":512,
@@ -664,7 +692,8 @@ mod tests {
                 "paged_device_kv":false,"prefix_cache_blocks":64,
                 "temperature":0.8,"preemption":false,
                 "swap_budget_blocks":48,"default_priority":2,
-                "aging_iters":16,"device_block_cap":12}"#,
+                "aging_iters":16,"device_block_cap":12,
+                "kv_quant":"int8"}"#,
         )
         .unwrap();
         let c = EngineConfig::from_json(&j).unwrap();
@@ -685,6 +714,12 @@ mod tests {
         assert_eq!(c.default_priority, 2);
         assert_eq!(c.aging_iters, 16);
         assert_eq!(c.device_block_cap, 12);
+        assert_eq!(c.kv_quant, KvQuant::Int8);
+        let bad = Json::parse(r#"{"kv_quant":"fp4"}"#).unwrap();
+        assert!(
+            EngineConfig::from_json(&bad).is_err(),
+            "unknown kv_quant must be rejected, not defaulted"
+        );
     }
 
     /// Issue satellite (CLI/config symmetry): `to_json` → `from_json`
@@ -716,6 +751,7 @@ mod tests {
         c.aging_iters = 7;
         c.device_block_cap = 9;
         c.planner_threads = 5;
+        c.kv_quant = KvQuant::Int8;
         c.strict_manifest = false;
         c.selector.kind = SelectorKind::Cpe;
         c.selector.c_sink = 4;
@@ -756,6 +792,7 @@ mod tests {
         assert_eq!(r.aging_iters, c.aging_iters);
         assert_eq!(r.device_block_cap, c.device_block_cap);
         assert_eq!(r.planner_threads, c.planner_threads);
+        assert_eq!(r.kv_quant, c.kv_quant);
         assert_eq!(r.strict_manifest, c.strict_manifest);
         assert_eq!(r.selector.kind, c.selector.kind);
         assert_eq!(r.selector.c_sink, c.selector.c_sink);
@@ -783,6 +820,7 @@ mod tests {
         assert!(r.paged_device_kv);
         assert!(r.strict_manifest, "strict manifest checking defaults on");
         assert!(r.preemption, "overload preemption defaults on");
+        assert_eq!(r.kv_quant, KvQuant::Off, "f32 residency defaults on");
         assert_eq!(r.aging_iters, d.aging_iters);
         assert_eq!(r.prefill_chunk, d.prefill_chunk);
     }

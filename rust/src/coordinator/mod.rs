@@ -767,6 +767,13 @@ impl Scheduler {
             self.engine.stats.restores_restage;
         self.metrics.kv_pressure_events =
             self.engine.stats.kv_pressure_events;
+        // host-residency gauges (DESIGN.md §Quantized-Residency): peak
+        // resident bytes over the run, cumulative dequantized rows
+        self.metrics.kv_resident_bytes = self
+            .metrics
+            .kv_resident_bytes
+            .max(self.engine.stats.kv_resident_bytes);
+        self.metrics.dequant_rows = self.engine.stats.dequant_rows;
         self.metrics.wall_s = self.started.elapsed().as_secs_f64();
         Ok(done_out)
     }

@@ -271,6 +271,19 @@ pub fn eval_selector_chunked(
     Ok(acc)
 }
 
+/// Scale a workload's mean prompt length by a CLI-supplied factor.
+///
+/// `(mean_len as f64 * scale) as usize` silently saturates negative or
+/// NaN products to 0, which used to turn a typo'd `--scale -1` into a
+/// degenerate zero-length workload.  Round explicitly and reject
+/// non-finite or non-positive scales up front.
+pub fn scaled_mean_len(mean_len: usize, scale: f64) -> Result<usize> {
+    if !scale.is_finite() || scale <= 0.0 {
+        anyhow::bail!("--scale must be a finite positive number, got {scale}");
+    }
+    Ok((mean_len as f64 * scale).round().max(1.0) as usize)
+}
+
 /// Generate n requests for a workload spec with a fixed seed.
 pub fn requests(
     spec: &crate::workload::WorkloadSpec,
@@ -330,4 +343,29 @@ pub fn standard_cli(name: &'static str, about: &'static str) -> crate::util::cli
         .flag("seed", "7", "workload seed")
         .flag("probe-every", "4", "fidelity probe period (steps)")
         .switch("quick", "smaller sweep for smoke runs")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::scaled_mean_len;
+
+    #[test]
+    fn scaled_mean_len_rounds_and_floors_at_one() {
+        assert_eq!(scaled_mean_len(1000, 0.5).unwrap(), 500);
+        // rounds to nearest, not truncates: 1000 * 0.0015 = 1.5 -> 2
+        assert_eq!(scaled_mean_len(1000, 0.0015).unwrap(), 2);
+        // tiny positive scales floor at 1 token, never 0
+        assert_eq!(scaled_mean_len(1000, 1e-9).unwrap(), 1);
+        assert_eq!(scaled_mean_len(0, 2.0).unwrap(), 1);
+    }
+
+    #[test]
+    fn scaled_mean_len_rejects_bad_scales() {
+        // the old `as usize` cast silently saturated all of these to 0
+        assert!(scaled_mean_len(1000, -1.0).is_err());
+        assert!(scaled_mean_len(1000, 0.0).is_err());
+        assert!(scaled_mean_len(1000, f64::NAN).is_err());
+        assert!(scaled_mean_len(1000, f64::INFINITY).is_err());
+        assert!(scaled_mean_len(1000, f64::NEG_INFINITY).is_err());
+    }
 }

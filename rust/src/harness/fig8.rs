@@ -22,7 +22,7 @@ pub fn run(args: &Args) -> Result<()> {
         .find(|t| t.name == "narrativeqa")
         .unwrap();
     let mut spec =
-        workload::scaled(&base, (base.mean_len as f64 * scale) as usize);
+        workload::scaled(&base, common::scaled_mean_len(base.mean_len, scale)?);
     spec.gen_tokens = gen;
     let vocab = lab.rt.model("small")?.vocab_size;
     let reqs = common::requests(&spec, args.get_usize("requests"), vocab, seed);

@@ -58,7 +58,7 @@ pub fn run(args: &Args) -> Result<()> {
     let mut n_tasks = 0.0f64;
     for task in &tasks {
         let mut spec =
-            workload::scaled(task, (task.mean_len as f64 * scale) as usize);
+            workload::scaled(task, common::scaled_mean_len(task.mean_len, scale)?);
         spec.gen_tokens = gen;
         let reqs = common::requests(&spec, n_req, vocab, seed);
         println!("[table3] {}: dense references…", task.name);

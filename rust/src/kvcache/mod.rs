@@ -20,9 +20,217 @@
 //! the parity oracle (`EngineConfig::device_decode_kv = false`) and the
 //! fallback for pre-device artifact sets.
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
 use anyhow::{anyhow, Result};
 
 use crate::runtime::ArenaHandle;
+
+// ---------------------------------------------------------------------
+// quantized residency (DESIGN.md §Quantized-Residency)
+
+/// Host KV residency precision (`EngineConfig::kv_quant`).  `Int8` stores
+/// the page pool, swap-tier snapshots, and prefix-cache snapshots as
+/// per-(head, position) scaled int8 rows — `d + 4` bytes per resident row
+/// instead of `4·d` (`kv_bytes::row_bytes`) — and dequantizes into the
+/// existing f32 staging paths, so every surface above the pool is
+/// unchanged.  The accuracy impact is bounded by `theory::quant_delta_bound`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KvQuant {
+    /// f32 pages and snapshots (the pre-quantization behavior; default).
+    Off,
+    /// Per-row scaled int8: one power-of-two f32 scale per `d`-length
+    /// (head, position) row plus an i8 payload.
+    Int8,
+}
+
+impl KvQuant {
+    pub fn parse(s: &str) -> Option<KvQuant> {
+        match s {
+            "off" | "f32" => Some(KvQuant::Off),
+            "int8" => Some(KvQuant::Int8),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            KvQuant::Off => "off",
+            KvQuant::Int8 => "int8",
+        }
+    }
+}
+
+/// Smallest power of two `s` with `127·s ≥ max_abs`, clamped up to
+/// `f32::MIN_POSITIVE` so denormal rows still quantize with exact
+/// arithmetic.  All-zero (or all-non-finite) rows get scale `0.0` and an
+/// all-zero payload.
+///
+/// The power-of-two restriction is what makes the quantizer *exact*
+/// arithmetic end to end: `x / s` is a pure exponent shift, `round` is
+/// exact, and `q · s` with `|q| ≤ 127` (7 mantissa bits) is exactly
+/// representable — so the round-trip error is precisely
+/// `|x − round(x/s)·s| ≤ s/2`, and requantizing a dequantized row is
+/// bitwise lossless (snapshots round-trip exactly; see
+/// DESIGN.md §Quantized-Residency).
+pub fn quant_scale(max_abs: f32) -> f32 {
+    if !max_abs.is_finite() || max_abs == 0.0 {
+        return 0.0;
+    }
+    let target = max_abs / 127.0;
+    let mut s = target.log2().ceil().exp2();
+    if !s.is_finite() || s <= 0.0 {
+        s = f32::MIN_POSITIVE;
+    }
+    // log2/exp2 float fuzz guard: land on the exact smallest power of two
+    while s < target {
+        s *= 2.0;
+    }
+    while s * 0.5 >= target && s * 0.5 > 0.0 {
+        s *= 0.5;
+    }
+    s.max(f32::MIN_POSITIVE)
+}
+
+/// Quantize one `d`-length f32 row into `out`, returning the
+/// power-of-two scale.  Non-finite elements are ignored by the max-abs
+/// scan (NaN quantizes to 0, ±inf saturates to ±127), so one poisoned
+/// element cannot zero out its neighbors through an infinite scale.
+pub fn quantize_row(src: &[f32], out: &mut [i8]) -> f32 {
+    debug_assert_eq!(src.len(), out.len());
+    let mut max_abs = 0f32;
+    for &x in src {
+        let a = x.abs();
+        if a.is_finite() && a > max_abs {
+            max_abs = a;
+        }
+    }
+    let s = quant_scale(max_abs);
+    if s == 0.0 {
+        out.fill(0);
+        return 0.0;
+    }
+    for (o, &x) in out.iter_mut().zip(src) {
+        // saturating float→int cast (NaN → 0 by Rust `as` semantics)
+        *o = (x / s).round().clamp(-127.0, 127.0) as i8;
+    }
+    s
+}
+
+/// Dequantize one i8 row back to f32 (exact: power-of-two scale × 7-bit
+/// integer).
+pub fn dequantize_row(src: &[i8], scale: f32, out: &mut [f32]) {
+    debug_assert_eq!(src.len(), out.len());
+    for (o, &q) in out.iter_mut().zip(src) {
+        *o = q as f32 * scale;
+    }
+}
+
+/// `dequantize(quantize(row))` in place — the canonicalization the
+/// engine applies to fresh K/V rows *before* they reach the device
+/// mirrors, the host pool, or the selector under `KvQuant::Int8`, so all
+/// three see identical floats and the pool's own quantization of those
+/// floats is a lossless no-op.
+pub fn canonicalize_row(row: &mut [f32]) {
+    let mut stack = [0i8; 256];
+    if row.len() <= stack.len() {
+        let q = &mut stack[..row.len()];
+        let s = quantize_row(row, q);
+        dequantize_row(q, s, row);
+    } else {
+        let mut q = vec![0i8; row.len()];
+        let s = quantize_row(row, &mut q);
+        dequantize_row(&q, s, row);
+    }
+}
+
+/// One quantized K or V page: the int8 twin of a `PagePool` f32 page.
+/// `data` is the page's `[n_heads, page_len, d]` i8 payload (the same
+/// row layout as the f32 pages — `PagePool::row` offsets apply
+/// unchanged) and `scales` holds one power-of-two f32 scale per
+/// (head, slot) row.  Scales are per *row* rather than per whole page
+/// because pages fill incrementally (decode appends one slot at a time);
+/// a page-wide scale would force requantizing stored history whenever a
+/// new outlier row lands (DESIGN.md §Quantized-Residency).
+#[derive(Clone)]
+pub struct QuantPage {
+    /// `n_heads · page_len` per-row scales.
+    scales: Box<[f32]>,
+    /// `n_heads · page_len · d` i8 payload.
+    data: Box<[i8]>,
+}
+
+/// Quantized twin of a flat `[rows, d]` f32 buffer: per-row power-of-two
+/// scales + i8 payload — the storage behind `SwapTier` / `PrefixCache`
+/// host snapshots under `KvQuant::Int8`.
+#[derive(Clone)]
+pub struct QuantBuf {
+    d: usize,
+    scales: Vec<f32>,
+    data: Vec<i8>,
+}
+
+impl QuantBuf {
+    /// Quantize `src` (length a multiple of `d`) row by row.
+    pub fn quantize(src: &[f32], d: usize) -> QuantBuf {
+        debug_assert_eq!(src.len() % d, 0);
+        let rows = src.len() / d;
+        let mut scales = vec![0f32; rows];
+        let mut data = vec![0i8; src.len()];
+        for r in 0..rows {
+            scales[r] =
+                quantize_row(&src[r * d..(r + 1) * d], &mut data[r * d..(r + 1) * d]);
+        }
+        QuantBuf { d, scales, data }
+    }
+
+    /// Dequantize rows `[start_row, start_row + rows)` into `out`.
+    pub fn dequantize_range(&self, start_row: usize, rows: usize, out: &mut [f32]) {
+        let d = self.d;
+        for i in 0..rows {
+            let r = start_row + i;
+            dequantize_row(
+                &self.data[r * d..(r + 1) * d],
+                self.scales[r],
+                &mut out[i * d..(i + 1) * d],
+            );
+        }
+    }
+
+    pub fn dequantize(&self) -> Vec<f32> {
+        let mut out = vec![0f32; self.data.len()];
+        self.dequantize_range(0, self.scales.len(), &mut out);
+        out
+    }
+}
+
+/// A host KV snapshot payload in either residency precision.  `SwapTier`
+/// and `PrefixCache` store one per K and one per V buffer; the f32
+/// surfaces (`stash`/`take`, `insert`/`entry_row_into`) are unchanged —
+/// quantization happens on the way in, dequantization on the way out.
+/// Because the engine canonicalizes rows before they reach any store
+/// under `Int8`, the requantization here is bitwise lossless.
+#[derive(Clone)]
+enum HostKv {
+    F32(Vec<f32>),
+    Int8(QuantBuf),
+}
+
+impl HostKv {
+    fn from_f32(buf: Vec<f32>, d: usize, quant: KvQuant) -> HostKv {
+        match quant {
+            KvQuant::Off => HostKv::F32(buf),
+            KvQuant::Int8 => HostKv::Int8(QuantBuf::quantize(&buf, d)),
+        }
+    }
+
+    fn into_f32(self) -> Vec<f32> {
+        match self {
+            HostKv::F32(b) => b,
+            HostKv::Int8(q) => q.dequantize(),
+        }
+    }
+}
 
 /// Where a sequence's dense-path KV is staged from on this step
 /// (`Engine::decode_kv_residency`): `Device` reads the per-sequence
@@ -179,18 +387,46 @@ impl BlockAllocator {
 /// fails instead of growing past the cap, so a burst of long prompts
 /// surfaces as a scheduling decision (`BatchPolicy::admit` holds requests
 /// in the waiting queue until pages free up) rather than a host OOM.
-// Clone lets the schedule explorer (`analysis::sched`) fork pool states
-// in the loom_* accounting model; the engine never clones a live pool.
-#[derive(Clone)]
 pub struct PagePool {
     pub n_heads: usize,
     pub head_dim: usize,
     pub page_len: usize,
+    /// Residency precision of this pool's pages (`EngineConfig::kv_quant`):
+    /// `Off` uses `k_pages`/`v_pages`, `Int8` uses `qk_pages`/`qv_pages`.
+    quant: KvQuant,
     /// Hard cap on allocated pages; 0 = unbounded (the pre-cap behavior).
     max_pages: usize,
     k_pages: Vec<Box<[f32]>>,
     v_pages: Vec<Box<[f32]>>,
+    qk_pages: Vec<QuantPage>,
+    qv_pages: Vec<QuantPage>,
+    /// `d`-length rows dequantized by read paths since construction
+    /// (gather / export / `key_into` staging; mirrored into
+    /// `StepStats::dequant_rows`).  Relaxed atomic so `&self` read paths
+    /// running on planner threads can count without a lock.
+    dequant_rows: AtomicU64,
     free: Vec<usize>,
+}
+
+// Clone lets the schedule explorer (`analysis::sched`) fork pool states
+// in the loom_* accounting model; the engine never clones a live pool.
+// Manual because `AtomicU64` is not `Clone`.
+impl Clone for PagePool {
+    fn clone(&self) -> Self {
+        PagePool {
+            n_heads: self.n_heads,
+            head_dim: self.head_dim,
+            page_len: self.page_len,
+            quant: self.quant,
+            max_pages: self.max_pages,
+            k_pages: self.k_pages.clone(),
+            v_pages: self.v_pages.clone(),
+            qk_pages: self.qk_pages.clone(),
+            qv_pages: self.qv_pages.clone(),
+            dequant_rows: AtomicU64::new(self.dequant_rows.load(Ordering::Relaxed)),
+            free: self.free.clone(),
+        }
+    }
 }
 
 impl PagePool {
@@ -204,13 +440,27 @@ impl PagePool {
         page_len: usize,
         max_pages: usize,
     ) -> Self {
+        Self::with_limit_quant(n_heads, head_dim, page_len, max_pages, KvQuant::Off)
+    }
+
+    pub fn with_limit_quant(
+        n_heads: usize,
+        head_dim: usize,
+        page_len: usize,
+        max_pages: usize,
+        quant: KvQuant,
+    ) -> Self {
         PagePool {
             n_heads,
             head_dim,
             page_len,
+            quant,
             max_pages,
             k_pages: Vec::new(),
             v_pages: Vec::new(),
+            qk_pages: Vec::new(),
+            qv_pages: Vec::new(),
+            dequant_rows: AtomicU64::new(0),
             free: Vec::new(),
         }
     }
@@ -219,8 +469,22 @@ impl PagePool {
         self.n_heads * self.page_len * self.head_dim
     }
 
+    /// Residency precision of this pool's pages.
+    pub fn quant(&self) -> KvQuant {
+        self.quant
+    }
+
+    /// Lifetime count of `d`-length rows dequantized by read paths
+    /// (always 0 with `kv_quant = off`).
+    pub fn dequant_rows(&self) -> u64 {
+        self.dequant_rows.load(Ordering::Relaxed)
+    }
+
     pub fn allocated_pages(&self) -> usize {
-        self.k_pages.len()
+        match self.quant {
+            KvQuant::Off => self.k_pages.len(),
+            KvQuant::Int8 => self.qk_pages.len(),
+        }
     }
 
     pub fn free_pages(&self) -> usize {
@@ -228,7 +492,7 @@ impl PagePool {
     }
 
     pub fn in_use_pages(&self) -> usize {
-        self.k_pages.len() - self.free.len()
+        self.allocated_pages() - self.free.len()
     }
 
     pub fn max_pages(&self) -> usize {
@@ -254,18 +518,32 @@ impl PagePool {
         if let Some(id) = self.free.pop() {
             return Ok(id);
         }
-        if self.max_pages > 0 && self.k_pages.len() >= self.max_pages {
+        if self.max_pages > 0 && self.allocated_pages() >= self.max_pages {
             return Err(anyhow!(
                 "KV page pool exhausted: {} pages allocated (max_kv_pages = {}); \
                  admission control should have held this request",
-                self.k_pages.len(),
+                self.allocated_pages(),
                 self.max_pages
             ));
         }
         let n = self.page_elems();
-        self.k_pages.push(vec![0f32; n].into_boxed_slice());
-        self.v_pages.push(vec![0f32; n].into_boxed_slice());
-        Ok(self.k_pages.len() - 1)
+        match self.quant {
+            KvQuant::Off => {
+                self.k_pages.push(vec![0f32; n].into_boxed_slice());
+                self.v_pages.push(vec![0f32; n].into_boxed_slice());
+                Ok(self.k_pages.len() - 1)
+            }
+            KvQuant::Int8 => {
+                let rows = self.n_heads * self.page_len;
+                let fresh = || QuantPage {
+                    scales: vec![0f32; rows].into_boxed_slice(),
+                    data: vec![0i8; n].into_boxed_slice(),
+                };
+                self.qk_pages.push(fresh());
+                self.qv_pages.push(fresh());
+                Ok(self.qk_pages.len() - 1)
+            }
+        }
     }
 
     fn release(&mut self, id: usize) {
@@ -328,12 +606,33 @@ impl SeqKvCache {
             self.tables[layer].push(id);
         }
         let page_id = self.tables[layer][pi];
-        for head in 0..h {
-            let off = pool.row(head, slot);
-            pool.k_pages[page_id][off..off + d]
-                .copy_from_slice(&k[head * d..(head + 1) * d]);
-            pool.v_pages[page_id][off..off + d]
-                .copy_from_slice(&v[head * d..(head + 1) * d]);
+        match pool.quant {
+            KvQuant::Off => {
+                for head in 0..h {
+                    let off = pool.row(head, slot);
+                    pool.k_pages[page_id][off..off + d]
+                        .copy_from_slice(&k[head * d..(head + 1) * d]);
+                    pool.v_pages[page_id][off..off + d]
+                        .copy_from_slice(&v[head * d..(head + 1) * d]);
+                }
+            }
+            KvQuant::Int8 => {
+                let pl = pool.page_len;
+                for head in 0..h {
+                    let off = (head * pl + slot) * d;
+                    let r = head * pl + slot;
+                    let kp = &mut pool.qk_pages[page_id];
+                    kp.scales[r] = quantize_row(
+                        &k[head * d..(head + 1) * d],
+                        &mut kp.data[off..off + d],
+                    );
+                    let vp = &mut pool.qv_pages[page_id];
+                    vp.scales[r] = quantize_row(
+                        &v[head * d..(head + 1) * d],
+                        &mut vp.data[off..off + d],
+                    );
+                }
+            }
         }
         Ok(())
     }
@@ -486,10 +785,33 @@ impl SeqKvCache {
                     let off = pool.row(head, slot);
                     let src =
                         ((layer * h + head) * tile_w + tile_off + done) * d;
-                    pool.k_pages[page_id][off..off + run * d]
-                        .copy_from_slice(&k[src..src + run * d]);
-                    pool.v_pages[page_id][off..off + run * d]
-                        .copy_from_slice(&v[src..src + run * d]);
+                    match pool.quant {
+                        KvQuant::Off => {
+                            pool.k_pages[page_id][off..off + run * d]
+                                .copy_from_slice(&k[src..src + run * d]);
+                            pool.v_pages[page_id][off..off + run * d]
+                                .copy_from_slice(&v[src..src + run * d]);
+                        }
+                        KvQuant::Int8 => {
+                            // one quantize per d-row of the run (the run's
+                            // page rows are contiguous, so `off/d + i` is
+                            // the scale index of row i)
+                            let kp = &mut pool.qk_pages[page_id];
+                            let vp = &mut pool.qv_pages[page_id];
+                            for i in 0..run {
+                                let ro = off + i * d;
+                                let so = src + i * d;
+                                kp.scales[ro / d] = quantize_row(
+                                    &k[so..so + d],
+                                    &mut kp.data[ro..ro + d],
+                                );
+                                vp.scales[ro / d] = quantize_row(
+                                    &v[so..so + d],
+                                    &mut vp.data[ro..ro + d],
+                                );
+                            }
+                        }
+                    }
                     done += run;
                 }
             }
@@ -499,7 +821,9 @@ impl SeqKvCache {
     }
 
     /// Key row accessor (selectors use this for Quest summaries / DS
-    /// channel scoring / similarity ablations).
+    /// channel scoring / similarity ablations).  Borrowed f32 rows only
+    /// exist with `kv_quant = off`; quant-proof callers use
+    /// [`key_into`](Self::key_into).
     pub fn key<'p>(
         &self,
         pool: &'p PagePool,
@@ -507,6 +831,11 @@ impl SeqKvCache {
         head: usize,
         pos: usize,
     ) -> &'p [f32] {
+        assert_eq!(
+            pool.quant,
+            KvQuant::Off,
+            "key(): no borrowed f32 rows under int8 residency; use key_into"
+        );
         debug_assert!(pos < self.len);
         let (pi, slot) = (pos / pool.page_len, pos % pool.page_len);
         let page = &pool.k_pages[self.tables[layer][pi]];
@@ -521,10 +850,71 @@ impl SeqKvCache {
         head: usize,
         pos: usize,
     ) -> &'p [f32] {
+        assert_eq!(
+            pool.quant,
+            KvQuant::Off,
+            "value(): no borrowed f32 rows under int8 residency; use value_into"
+        );
         let (pi, slot) = (pos / pool.page_len, pos % pool.page_len);
         let page = &pool.v_pages[self.tables[layer][pi]];
         let off = pool.row(head, slot);
         &page[off..off + pool.head_dim]
+    }
+
+    /// Copy (dequantizing under `Int8`) the (layer, head, pos) key row
+    /// into `out[..d]` — the quant-proof twin of [`key`](Self::key).
+    /// Under `Int8` the selector's score pass reads the *quantized* keys
+    /// through this path (the resident key sketch); exact-path consumers
+    /// get the same canonical floats the device mirrors hold.
+    pub fn key_into(
+        &self,
+        pool: &PagePool,
+        layer: usize,
+        head: usize,
+        pos: usize,
+        out: &mut [f32],
+    ) {
+        debug_assert!(pos < self.len);
+        let d = pool.head_dim;
+        let (pi, slot) = (pos / pool.page_len, pos % pool.page_len);
+        let page_id = self.tables[layer][pi];
+        let off = pool.row(head, slot);
+        match pool.quant {
+            KvQuant::Off => {
+                out[..d].copy_from_slice(&pool.k_pages[page_id][off..off + d]);
+            }
+            KvQuant::Int8 => {
+                let p = &pool.qk_pages[page_id];
+                dequantize_row(&p.data[off..off + d], p.scales[off / d], &mut out[..d]);
+                pool.dequant_rows.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Copy (dequantizing under `Int8`) the (layer, head, pos) value row
+    /// into `out[..d]` — the quant-proof twin of [`value`](Self::value).
+    pub fn value_into(
+        &self,
+        pool: &PagePool,
+        layer: usize,
+        head: usize,
+        pos: usize,
+        out: &mut [f32],
+    ) {
+        let d = pool.head_dim;
+        let (pi, slot) = (pos / pool.page_len, pos % pool.page_len);
+        let page_id = self.tables[layer][pi];
+        let off = pool.row(head, slot);
+        match pool.quant {
+            KvQuant::Off => {
+                out[..d].copy_from_slice(&pool.v_pages[page_id][off..off + d]);
+            }
+            KvQuant::Int8 => {
+                let p = &pool.qv_pages[page_id];
+                dequantize_row(&p.data[off..off + d], p.scales[off / d], &mut out[..d]);
+                pool.dequant_rows.fetch_add(1, Ordering::Relaxed);
+            }
+        }
     }
 
     /// Gather `indices` rows of (K, V) for (layer, head) into `out_k` /
@@ -545,10 +935,35 @@ impl SeqKvCache {
             let (pi, slot) = (pos / pool.page_len, pos % pool.page_len);
             let page_id = self.tables[layer][pi];
             let off = pool.row(head, slot);
-            out_k[i * d..(i + 1) * d]
-                .copy_from_slice(&pool.k_pages[page_id][off..off + d]);
-            out_v[i * d..(i + 1) * d]
-                .copy_from_slice(&pool.v_pages[page_id][off..off + d]);
+            match pool.quant {
+                KvQuant::Off => {
+                    out_k[i * d..(i + 1) * d]
+                        .copy_from_slice(&pool.k_pages[page_id][off..off + d]);
+                    out_v[i * d..(i + 1) * d]
+                        .copy_from_slice(&pool.v_pages[page_id][off..off + d]);
+                }
+                KvQuant::Int8 => {
+                    // exact f32 reconstruction happens only here, for the
+                    // selected rows — the N_sel-proportional dequant cost
+                    // the sketch path is designed around
+                    let kp = &pool.qk_pages[page_id];
+                    let vp = &pool.qv_pages[page_id];
+                    dequantize_row(
+                        &kp.data[off..off + d],
+                        kp.scales[off / d],
+                        &mut out_k[i * d..(i + 1) * d],
+                    );
+                    dequantize_row(
+                        &vp.data[off..off + d],
+                        vp.scales[off / d],
+                        &mut out_v[i * d..(i + 1) * d],
+                    );
+                }
+            }
+        }
+        if pool.quant == KvQuant::Int8 {
+            pool.dequant_rows
+                .fetch_add(2 * indices.len() as u64, Ordering::Relaxed);
         }
     }
 
@@ -568,7 +983,8 @@ impl SeqKvCache {
         let n = self.len.min(l_max);
         // Per-(head, page) chunk copies: within a page, a head's rows are
         // contiguous, so the inner loop is one memcpy of up to
-        // page_len*d floats (perf log §Perf item 2).
+        // page_len*d floats (perf log §Perf item 2) — or, under int8
+        // residency, one dequant per d-row of the run.
         for head in 0..h {
             let mut pos = 0usize;
             while pos < n {
@@ -578,14 +994,40 @@ impl SeqKvCache {
                 let page_id = self.tables[layer][pi];
                 let off = pool.row(head, slot);
                 let dst = (head * l_max + pos) * d;
-                out_k[dst..dst + run * d].copy_from_slice(
-                    &pool.k_pages[page_id][off..off + run * d],
-                );
-                out_v[dst..dst + run * d].copy_from_slice(
-                    &pool.v_pages[page_id][off..off + run * d],
-                );
+                match pool.quant {
+                    KvQuant::Off => {
+                        out_k[dst..dst + run * d].copy_from_slice(
+                            &pool.k_pages[page_id][off..off + run * d],
+                        );
+                        out_v[dst..dst + run * d].copy_from_slice(
+                            &pool.v_pages[page_id][off..off + run * d],
+                        );
+                    }
+                    KvQuant::Int8 => {
+                        let kp = &pool.qk_pages[page_id];
+                        let vp = &pool.qv_pages[page_id];
+                        for i in 0..run {
+                            let ro = off + i * d;
+                            let dd = dst + i * d;
+                            dequantize_row(
+                                &kp.data[ro..ro + d],
+                                kp.scales[ro / d],
+                                &mut out_k[dd..dd + d],
+                            );
+                            dequantize_row(
+                                &vp.data[ro..ro + d],
+                                vp.scales[ro / d],
+                                &mut out_v[dd..dd + d],
+                            );
+                        }
+                    }
+                }
                 pos += run;
             }
+        }
+        if pool.quant == KvQuant::Int8 {
+            pool.dequant_rows
+                .fetch_add(2 * (h * n) as u64, Ordering::Relaxed);
         }
     }
 
@@ -623,14 +1065,40 @@ impl SeqKvCache {
                 let page_id = self.tables[layer][pi];
                 let off = pool.row(head, slot);
                 let dst = (g * l_max + pos) * d;
-                out_k[dst..dst + run * d].copy_from_slice(
-                    &pool.k_pages[page_id][off..off + run * d],
-                );
-                out_v[dst..dst + run * d].copy_from_slice(
-                    &pool.v_pages[page_id][off..off + run * d],
-                );
+                match pool.quant {
+                    KvQuant::Off => {
+                        out_k[dst..dst + run * d].copy_from_slice(
+                            &pool.k_pages[page_id][off..off + run * d],
+                        );
+                        out_v[dst..dst + run * d].copy_from_slice(
+                            &pool.v_pages[page_id][off..off + run * d],
+                        );
+                    }
+                    KvQuant::Int8 => {
+                        let kp = &pool.qk_pages[page_id];
+                        let vp = &pool.qv_pages[page_id];
+                        for i in 0..run {
+                            let ro = off + i * d;
+                            let dd = dst + i * d;
+                            dequantize_row(
+                                &kp.data[ro..ro + d],
+                                kp.scales[ro / d],
+                                &mut out_k[dd..dd + d],
+                            );
+                            dequantize_row(
+                                &vp.data[ro..ro + d],
+                                vp.scales[ro / d],
+                                &mut out_v[dd..dd + d],
+                            );
+                        }
+                    }
+                }
                 pos += run;
             }
+        }
+        if pool.quant == KvQuant::Int8 {
+            pool.dequant_rows
+                .fetch_add(2 * (n_kv * n) as u64, Ordering::Relaxed);
         }
     }
 
@@ -656,11 +1124,12 @@ impl SeqKvCache {
 /// `[n_layers, tokens, H, d]` row-major — the same position-major entry
 /// layout as [`PrefixCache`] snapshots, so restore is one contiguous
 /// `H·d` row per (layer, pos).
+#[derive(Clone)]
 struct SwapEntry {
     id: u64,
     tokens: usize,
-    k: Vec<f32>,
-    v: Vec<f32>,
+    k: HostKv,
+    v: HostKv,
 }
 
 /// Host-memory swap tier for preempted sequences (the overload
@@ -674,10 +1143,24 @@ struct SwapEntry {
 /// would exceed the budget the caller sheds the victim instead
 /// (`RejectReason::Preempted`) — the tier never evicts silently,
 /// because its contents are the only copy of a live sequence's state.
+#[derive(Clone)]
 pub struct SwapTier {
     block: usize,
     budget_blocks: usize,
+    /// Snapshot residency precision; `Int8` quantizes per `row_d`-length
+    /// row on stash and dequantizes on take.  The engine hands this tier
+    /// *canonical* (already quantize→dequantize'd) floats under `Int8`,
+    /// so the round trip here stays bitwise lossless.
+    quant: KvQuant,
+    /// Quantization row length (`head_dim`); unused with `quant = Off`.
+    row_d: usize,
     entries: Vec<SwapEntry>,
+    /// Running Σ of `blocks_for(entry.tokens)` across `entries`, updated
+    /// in `stash`/`take`/`discard` so the scheduler's per-victim
+    /// `can_stash` feasibility probes are O(1) instead of a full-tier
+    /// re-sum per probe (the Σ-recompute survives as a debug assertion
+    /// in `resident_blocks`).
+    resident: usize,
     /// Lifetime counters (mirrored into `StepStats` by the engine).
     pub stashes: u64,
     pub restores: u64,
@@ -687,10 +1170,22 @@ pub struct SwapTier {
 
 impl SwapTier {
     pub fn new(budget_blocks: usize, block: usize) -> Self {
+        Self::with_quant(budget_blocks, block, KvQuant::Off, 1)
+    }
+
+    pub fn with_quant(
+        budget_blocks: usize,
+        block: usize,
+        quant: KvQuant,
+        row_d: usize,
+    ) -> Self {
         SwapTier {
             block: block.max(1),
             budget_blocks,
+            quant,
+            row_d: row_d.max(1),
             entries: Vec::new(),
+            resident: 0,
             stashes: 0,
             restores: 0,
             peak_blocks: 0,
@@ -711,9 +1206,19 @@ impl SwapTier {
         tokens.div_ceil(self.block)
     }
 
-    /// Σ blocks across stashed entries — the budget's occupancy.
+    /// Blocks across stashed entries — the budget's occupancy.  O(1):
+    /// maintained as a running counter by `stash`/`take`/`discard`; the
+    /// old Σ-recompute is kept as a drift assertion.
     pub fn resident_blocks(&self) -> usize {
-        self.entries.iter().map(|e| self.blocks_for(e.tokens)).sum()
+        debug_assert_eq!(
+            self.resident,
+            self.entries
+                .iter()
+                .map(|e| self.blocks_for(e.tokens))
+                .sum::<usize>(),
+            "SwapTier running block counter drifted from Σ over entries"
+        );
+        self.resident
     }
 
     pub fn entries(&self) -> usize {
@@ -750,18 +1255,27 @@ impl SwapTier {
         if tokens == 0 || !self.can_stash(tokens) || self.contains(id) {
             return false;
         }
-        self.entries.push(SwapEntry { id, tokens, k, v });
+        self.entries.push(SwapEntry {
+            id,
+            tokens,
+            k: HostKv::from_f32(k, self.row_d, self.quant),
+            v: HostKv::from_f32(v, self.row_d, self.quant),
+        });
         self.stashes += 1;
+        self.resident += self.blocks_for(tokens);
         self.peak_blocks = self.peak_blocks.max(self.resident_blocks());
         true
     }
 
-    /// Remove and return a stashed snapshot: `(tokens, k, v)`.
+    /// Remove and return a stashed snapshot: `(tokens, k, v)`
+    /// (dequantized back to f32 under `Int8` — bitwise the stashed
+    /// floats, since the engine stashes canonical values).
     pub fn take(&mut self, id: u64) -> Option<(usize, Vec<f32>, Vec<f32>)> {
         let i = self.entries.iter().position(|e| e.id == id)?;
         let e = self.entries.swap_remove(i);
         self.restores += 1;
-        Some((e.tokens, e.k, e.v))
+        self.resident -= self.blocks_for(e.tokens);
+        Some((e.tokens, e.k.into_f32(), e.v.into_f32()))
     }
 
     /// Drop a stashed snapshot without restoring it (the sequence was
@@ -770,7 +1284,8 @@ impl SwapTier {
     pub fn discard(&mut self, id: u64) -> bool {
         match self.entries.iter().position(|e| e.id == id) {
             Some(i) => {
-                self.entries.swap_remove(i);
+                let e = self.entries.swap_remove(i);
+                self.resident -= self.blocks_for(e.tokens);
                 true
             }
             None => false,
@@ -828,8 +1343,8 @@ pub fn prefix_hashes(tokens: &[i32], block: usize) -> Vec<u64> {
 struct PrefixEntry {
     hashes: Vec<u64>,
     tokens: Vec<i32>,
-    k: Vec<f32>,
-    v: Vec<f32>,
+    k: HostKv,
+    v: HostKv,
     /// Physical device-pool block ids pinned via `BlockAllocator::retain`
     /// at insert; aligned 1:1 with `hashes` up to its (possibly shorter)
     /// length.  Released — never copied — on eviction.
@@ -856,6 +1371,11 @@ pub struct PrefixCache {
     n_layers: usize,
     n_heads: usize,
     head_dim: usize,
+    /// Host-snapshot residency precision (`EngineConfig::kv_quant`);
+    /// `Int8` quantizes per `head_dim`-length row on `insert` and
+    /// dequantizes in `entry_row_into` — lossless, because the engine
+    /// inserts canonical (already quantize→dequantize'd) floats.
+    quant: KvQuant,
     tick: u64,
     entries: Vec<PrefixEntry>,
     pub hits: u64,
@@ -881,6 +1401,17 @@ impl PrefixCache {
         n_heads: usize,
         head_dim: usize,
     ) -> Self {
+        Self::with_quant(block, max_blocks, n_layers, n_heads, head_dim, KvQuant::Off)
+    }
+
+    pub fn with_quant(
+        block: usize,
+        max_blocks: usize,
+        n_layers: usize,
+        n_heads: usize,
+        head_dim: usize,
+        quant: KvQuant,
+    ) -> Self {
         assert!(block > 0, "prefix cache needs a positive block size");
         PrefixCache {
             block,
@@ -888,6 +1419,7 @@ impl PrefixCache {
             n_layers,
             n_heads,
             head_dim,
+            quant,
             tick: 0,
             entries: Vec::new(),
             hits: 0,
@@ -979,7 +1511,9 @@ impl PrefixCache {
     }
 
     /// One contiguous `[H·d]` K row and V row for (layer, pos) of an
-    /// entry — exactly the unit `SeqKvCache::append` consumes.
+    /// entry — exactly the unit `SeqKvCache::append` consumes.  Borrowed
+    /// f32 rows only exist with `kv_quant = off`; quant-proof callers
+    /// use [`entry_row_into`](Self::entry_row_into).
     pub fn entry_row(
         &self,
         entry: usize,
@@ -989,7 +1523,45 @@ impl PrefixCache {
         let e = &self.entries[entry];
         let w = self.n_heads * self.head_dim;
         let off = (layer * e.tokens.len() + pos) * w;
-        (&e.k[off..off + w], &e.v[off..off + w])
+        match (&e.k, &e.v) {
+            (HostKv::F32(k), HostKv::F32(v)) => {
+                (&k[off..off + w], &v[off..off + w])
+            }
+            _ => panic!(
+                "entry_row: no borrowed f32 rows under int8 residency; \
+                 use entry_row_into"
+            ),
+        }
+    }
+
+    /// Copy (dequantizing under `Int8`) one `[H·d]` K row and V row for
+    /// (layer, pos) into `out_k`/`out_v` — the quant-proof twin of
+    /// [`entry_row`](Self::entry_row), feeding `SeqKvCache::append` when
+    /// a sequence seeds from this cache.
+    pub fn entry_row_into(
+        &self,
+        entry: usize,
+        layer: usize,
+        pos: usize,
+        out_k: &mut [f32],
+        out_v: &mut [f32],
+    ) {
+        let e = &self.entries[entry];
+        let (h, d) = (self.n_heads, self.head_dim);
+        let w = h * d;
+        let row0 = (layer * e.tokens.len() + pos) * h; // in d-rows
+        match &e.k {
+            HostKv::F32(k) => {
+                out_k[..w].copy_from_slice(&k[row0 * d..row0 * d + w]);
+            }
+            HostKv::Int8(q) => q.dequantize_range(row0, h, &mut out_k[..w]),
+        }
+        match &e.v {
+            HostKv::F32(v) => {
+                out_v[..w].copy_from_slice(&v[row0 * d..row0 * d + w]);
+            }
+            HostKv::Int8(q) => q.dequantize_range(row0, h, &mut out_v[..w]),
+        }
     }
 
     /// The entry's pinned device-pool blocks (may cover fewer blocks than
@@ -1078,11 +1650,12 @@ impl PrefixCache {
             self.evictions += 1;
         }
         self.tick += 1;
+        let d = self.head_dim;
         self.entries.push(PrefixEntry {
             hashes,
             tokens: tokens.to_vec(),
-            k,
-            v,
+            k: HostKv::from_f32(k, d, self.quant),
+            v: HostKv::from_f32(v, d, self.quant),
             dev_blocks,
             last_use: self.tick,
         });
@@ -2327,5 +2900,319 @@ mod tests {
         )
         .unwrap_or_else(|v| panic!("{v}"));
         assert_eq!(n, 20, "C(6,3) interleavings of two 3-op scripts");
+    }
+
+    // -----------------------------------------------------------------
+    // quantized residency (DESIGN.md §Quantized-Residency)
+
+    /// Issue satellite: per-row int8 quantize→dequantize round-trip
+    /// error stays within the scale-derived bound `s/2` for adversarial
+    /// value ranges — all-equal rows, denormals, a single outlier, and
+    /// plain gaussian rows — and the scale is the *smallest* power of
+    /// two covering the row (so the bound is tight, not just safe).
+    #[test]
+    fn prop_quant_round_trip_within_scale_bound() {
+        Prop::new(200, 0x0A11_7E57).forall(
+            |rng| {
+                let d = gen::usize_in(rng, 1, 64);
+                let kind = rng.below(4);
+                let row: Vec<f32> = match kind {
+                    // all-equal (scale must cover the common value)
+                    0 => vec![rng.normal() * 10.0; d],
+                    // denormal magnitudes (scale clamps at MIN_POSITIVE)
+                    1 => (0..d).map(|_| rng.normal() * 1e-41).collect(),
+                    // one huge outlier among tiny values
+                    2 => {
+                        let mut r: Vec<f32> =
+                            (0..d).map(|_| rng.normal() * 1e-3).collect();
+                        let i = rng.below(d);
+                        r[i] = rng.normal() * 1e6;
+                        r
+                    }
+                    _ => (0..d).map(|_| rng.normal()).collect(),
+                };
+                row
+            },
+            |row| {
+                let mut q = vec![0i8; row.len()];
+                let s = quantize_row(row, &mut q);
+                let mut deq = vec![0f32; row.len()];
+                dequantize_row(&q, s, &mut deq);
+                let max_abs = row
+                    .iter()
+                    .map(|x| x.abs())
+                    .filter(|a| a.is_finite())
+                    .fold(0f32, f32::max);
+                if max_abs == 0.0 {
+                    if s != 0.0 || deq.iter().any(|&x| x != 0.0) {
+                        return Err("zero row must quantize to zeros".into());
+                    }
+                    return Ok(());
+                }
+                // scale covers the row and is the smallest such pow2
+                if 127.0 * s < max_abs {
+                    return Err(format!("scale {s} too small for {max_abs}"));
+                }
+                let target = max_abs / 127.0;
+                if s > f32::MIN_POSITIVE && s * 0.5 >= target {
+                    return Err(format!("scale {s} not minimal for {max_abs}"));
+                }
+                for (i, (&x, &y)) in row.iter().zip(&deq).enumerate() {
+                    if (x - y).abs() > s * 0.5 {
+                        return Err(format!(
+                            "row[{i}]: |{x} - {y}| > s/2 = {}",
+                            s * 0.5
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Requantizing dequantized values is bitwise lossless (power-of-two
+    /// scales + exact 7-bit products), which is what makes canonical
+    /// values survive pool→swap→pool and pool→prefix→pool round trips
+    /// exactly.
+    #[test]
+    fn quant_requantize_is_bitwise_lossless() {
+        let mut rng = Rng::new(0x1D3);
+        for _ in 0..50 {
+            let mut row: Vec<f32> = (0..16).map(|_| rng.normal()).collect();
+            canonicalize_row(&mut row);
+            let once = row.clone();
+            canonicalize_row(&mut row);
+            assert_eq!(once, row, "canonicalize must be idempotent");
+            // QuantBuf round trip of canonical values is exact too
+            let qb = QuantBuf::quantize(&once, 4);
+            assert_eq!(qb.dequantize(), once);
+        }
+    }
+
+    /// Non-finite and degenerate rows: all-zero → zero scale and zero
+    /// payload; NaN elements quantize to 0 without poisoning the scale;
+    /// an infinite element saturates without zeroing its neighbors.
+    #[test]
+    fn quant_edge_rows() {
+        let mut q = vec![0i8; 4];
+        assert_eq!(quantize_row(&[0.0; 4], &mut q), 0.0);
+        assert_eq!(q, vec![0i8; 4]);
+
+        let s = quantize_row(&[1.0, f32::NAN, -1.0, 0.5], &mut q);
+        assert!(s > 0.0);
+        assert_eq!(q[1], 0, "NaN element quantizes to 0");
+        let mut deq = vec![0f32; 4];
+        dequantize_row(&q, s, &mut deq);
+        assert!((deq[0] - 1.0).abs() <= s * 0.5);
+        assert!((deq[2] + 1.0).abs() <= s * 0.5);
+
+        let s = quantize_row(&[f32::INFINITY, 2.0, -2.0, 0.0], &mut q);
+        assert!(s.is_finite() && s > 0.0, "inf is ignored by the scale scan");
+        assert_eq!(q[0], 127, "inf saturates");
+        dequantize_row(&q, s, &mut deq);
+        assert!((deq[1] - 2.0).abs() <= s * 0.5);
+
+        // all-non-finite rows degenerate to the zero row
+        assert_eq!(quantize_row(&[f32::NAN, f32::INFINITY], &mut q[..2]), 0.0);
+        assert_eq!(&q[..2], &[0, 0]);
+    }
+
+    /// An int8 pool fed canonicalized rows reads back *bitwise* what an
+    /// f32 pool fed the same canonical rows reads back, across every
+    /// read surface (`key_into`/`value_into`, `gather`, `export_dense`,
+    /// `export_dense_kv`) — and the dequant-row counter advances only on
+    /// the int8 pool.
+    #[test]
+    fn int8_pool_reads_match_f32_pool_on_canonical_rows() {
+        let (h, d, pl, nl, toks) = (2usize, 4usize, 8usize, 2usize, 20usize);
+        let mut pf = PagePool::new(h, d, pl);
+        let mut pq = PagePool::with_limit_quant(h, d, pl, 0, KvQuant::Int8);
+        assert_eq!(pq.quant(), KvQuant::Int8);
+        let mut cf = SeqKvCache::new(nl);
+        let mut cq = SeqKvCache::new(nl);
+        let mut rng = Rng::new(0xCA_0);
+        for _ in 0..toks {
+            for layer in 0..nl {
+                let mut k = row(&mut rng, h * d);
+                let mut v = row(&mut rng, h * d);
+                for hh in 0..h {
+                    canonicalize_row(&mut k[hh * d..(hh + 1) * d]);
+                    canonicalize_row(&mut v[hh * d..(hh + 1) * d]);
+                }
+                cf.append(&mut pf, layer, &k, &v).unwrap();
+                cq.append(&mut pq, layer, &k, &v).unwrap();
+            }
+            cf.commit_token();
+            cq.commit_token();
+        }
+        assert_eq!(pq.dequant_rows(), 0, "writes never dequantize");
+        let mut a = vec![0f32; d];
+        let mut b = vec![0f32; d];
+        for layer in 0..nl {
+            for head in 0..h {
+                for pos in 0..toks {
+                    cf.key_into(&pf, layer, head, pos, &mut a);
+                    cq.key_into(&pq, layer, head, pos, &mut b);
+                    assert_eq!(a, b, "key L{layer} H{head} P{pos}");
+                    cf.value_into(&pf, layer, head, pos, &mut a);
+                    cq.value_into(&pq, layer, head, pos, &mut b);
+                    assert_eq!(a, b, "value L{layer} H{head} P{pos}");
+                    // Off-mode *_into agrees with the borrow accessors
+                    cf.key_into(&pf, layer, head, pos, &mut a);
+                    assert_eq!(&a[..], cf.key(&pf, layer, head, pos));
+                }
+            }
+        }
+        let idx = [0usize, 7, 8, 15, 19];
+        let (mut gk_f, mut gv_f) = (vec![0f32; idx.len() * d], vec![0f32; idx.len() * d]);
+        let (mut gk_q, mut gv_q) = (vec![0f32; idx.len() * d], vec![0f32; idx.len() * d]);
+        cf.gather(&pf, 1, 1, &idx, &mut gk_f, &mut gv_f);
+        cq.gather(&pq, 1, 1, &idx, &mut gk_q, &mut gv_q);
+        assert_eq!(gk_f, gk_q);
+        assert_eq!(gv_f, gv_q);
+        let l_max = 24;
+        let (mut ek_f, mut ev_f) = (vec![0f32; h * l_max * d], vec![0f32; h * l_max * d]);
+        let (mut ek_q, mut ev_q) = (vec![0f32; h * l_max * d], vec![0f32; h * l_max * d]);
+        cf.export_dense(&pf, 0, l_max, &mut ek_f, &mut ev_f);
+        cq.export_dense(&pq, 0, l_max, &mut ek_q, &mut ev_q);
+        assert_eq!(ek_f, ek_q);
+        assert_eq!(ev_f, ev_q);
+        cf.export_dense_kv(&pf, 0, l_max, h, &mut ek_f, &mut ev_f);
+        cq.export_dense_kv(&pq, 0, l_max, h, &mut ek_q, &mut ev_q);
+        assert_eq!(ek_f, ek_q);
+        assert_eq!(ev_f, ev_q);
+        assert_eq!(pf.dequant_rows(), 0, "f32 pool never dequantizes");
+        // int8 counter: key_into+value_into (2·nl·h·toks) + gather
+        // (2·|idx|) + export_dense (2·h·toks) + export_dense_kv (2·h·toks)
+        let want = 2 * (nl * h * toks + idx.len() + 2 * h * toks) as u64;
+        assert_eq!(pq.dequant_rows(), want);
+        // page accounting is precision-independent
+        assert_eq!(pf.in_use_pages(), pq.in_use_pages());
+        cq.release(&mut pq);
+        assert_eq!(pq.in_use_pages(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "use key_into")]
+    fn key_borrow_accessor_panics_under_int8() {
+        let mut pool = PagePool::with_limit_quant(2, 4, 8, 0, KvQuant::Int8);
+        let mut c = SeqKvCache::new(1);
+        c.append(&mut pool, 0, &[1.0; 8], &[2.0; 8]).unwrap();
+        c.commit_token();
+        let _ = c.key(&pool, 0, 0, 0);
+    }
+
+    /// Issue satellite: the SwapTier running block counter equals the
+    /// Σ-recompute across a random stash/take/discard schedule (the
+    /// debug assertion inside `resident_blocks` cross-checks every call).
+    #[test]
+    fn prop_swap_tier_running_counter_matches_sigma() {
+        Prop::new(60, 0x5AB_C0DE).forall(
+            |rng| {
+                let budget = gen::usize_in(rng, 0, 6);
+                let ops: Vec<(u8, u64, usize)> = (0..40)
+                    .map(|_| {
+                        (rng.below(3) as u8, rng.below(5) as u64,
+                         gen::usize_in(rng, 1, 20))
+                    })
+                    .collect();
+                (budget, ops)
+            },
+            |(budget, ops)| {
+                let mut st = SwapTier::new(*budget, 4);
+                let mut model: Vec<(u64, usize)> = Vec::new();
+                for &(op, id, tokens) in ops {
+                    match op {
+                        0 => {
+                            let n = tokens * 2; // [tokens, H=2, d=1] say
+                            if st.stash(id, tokens, vec![0.1; n], vec![0.2; n])
+                            {
+                                model.push((id, tokens));
+                            }
+                        }
+                        1 => {
+                            if st.take(id).is_some() {
+                                model.retain(|&(i, _)| i != id);
+                            }
+                        }
+                        _ => {
+                            if st.discard(id) {
+                                model.retain(|&(i, _)| i != id);
+                            }
+                        }
+                    }
+                    let want: usize =
+                        model.iter().map(|&(_, t)| t.div_ceil(4)).sum();
+                    if st.resident_blocks() != want {
+                        return Err(format!(
+                            "resident {} != model {want}",
+                            st.resident_blocks()
+                        ));
+                    }
+                    if *budget > 0 && st.resident_blocks() > *budget {
+                        return Err("budget exceeded".into());
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// An int8 swap tier round-trips canonical snapshots bitwise — the
+    /// invariant that keeps preempted-vs-uninterrupted trajectories
+    /// identical under quantized residency.
+    #[test]
+    fn swap_tier_int8_round_trips_canonical_snapshots() {
+        let d = 4usize;
+        let mut st = SwapTier::with_quant(0, 8, KvQuant::Int8, d);
+        let mut rng = Rng::new(0x5AB);
+        let mut k: Vec<f32> = (0..3 * 5 * 2 * d).map(|_| rng.normal()).collect();
+        let mut v: Vec<f32> = (0..3 * 5 * 2 * d).map(|_| rng.normal()).collect();
+        for r in 0..k.len() / d {
+            canonicalize_row(&mut k[r * d..(r + 1) * d]);
+            canonicalize_row(&mut v[r * d..(r + 1) * d]);
+        }
+        assert!(st.stash(1, 5, k.clone(), v.clone()));
+        let (tokens, k2, v2) = st.take(1).expect("stashed");
+        assert_eq!(tokens, 5);
+        assert_eq!(k2, k, "canonical K must round-trip bitwise");
+        assert_eq!(v2, v, "canonical V must round-trip bitwise");
+    }
+
+    /// An int8 prefix cache hands back canonical snapshots bitwise via
+    /// `entry_row_into`, agreeing with an f32 cache fed the same rows
+    /// (and with the Off-mode borrow accessor).
+    #[test]
+    fn prefix_cache_int8_entry_rows_match_f32() {
+        let (block, nl, h, d) = (4usize, 2usize, 2usize, 3usize);
+        let mut pf = PrefixCache::new(block, 16, nl, h, d);
+        let mut pq =
+            PrefixCache::with_quant(block, 16, nl, h, d, KvQuant::Int8);
+        let toks: Vec<i32> = (0..8).collect();
+        let mut rng = Rng::new(0x9E1);
+        let mut k: Vec<f32> =
+            (0..nl * toks.len() * h * d).map(|_| rng.normal()).collect();
+        let mut v: Vec<f32> =
+            (0..nl * toks.len() * h * d).map(|_| rng.normal()).collect();
+        for r in 0..k.len() / d {
+            canonicalize_row(&mut k[r * d..(r + 1) * d]);
+            canonicalize_row(&mut v[r * d..(r + 1) * d]);
+        }
+        assert!(pf.insert(&toks, k.clone(), v.clone(), Vec::new(), None));
+        assert!(pq.insert(&toks, k, v, Vec::new(), None));
+        let w = h * d;
+        let (mut ka, mut va) = (vec![0f32; w], vec![0f32; w]);
+        let (mut kb, mut vb) = (vec![0f32; w], vec![0f32; w]);
+        for layer in 0..nl {
+            for pos in 0..toks.len() {
+                pf.entry_row_into(0, layer, pos, &mut ka, &mut va);
+                pq.entry_row_into(0, layer, pos, &mut kb, &mut vb);
+                assert_eq!(ka, kb, "K L{layer} P{pos}");
+                assert_eq!(va, vb, "V L{layer} P{pos}");
+                let (kr, vr) = pf.entry_row(0, layer, pos);
+                assert_eq!(kr, &ka[..]);
+                assert_eq!(vr, &va[..]);
+            }
+        }
     }
 }

@@ -178,6 +178,7 @@ fn serve(rest: &[String]) -> Result<()> {
         .flag("priority", "default", "priority class stamped on every submitted request: low|normal|high (default = the engine's default-priority)")
         .flag("device-block-cap", "0", "clamp the paged device KV pool to this many blocks — an overcommit knob for exercising preemption (0 = artifact capacity)")
         .flag("swap-budget-blocks", "0", "host swap-tier budget in KV blocks for preempted sequences (0 = unbounded)")
+        .flag("kv-quant", "off", "host KV residency precision: off|int8 (int8 stores pool/swap/prefix pages as scaled int8 and scores the selector against the quantized keys)")
         .flag("aging-iters", "64", "scheduler iterations per anti-starvation priority boost (0 = aging off)")
         .switch("no-preemption", "disable decode preemption under KV pressure (pressure falls back to deferral/demotion)")
         .switch("chat", "run the multi-turn chat workload with streamed replies (each turn extends the previous context — exercises the prefix cache)");
@@ -206,6 +207,10 @@ fn serve(rest: &[String]) -> Result<()> {
     cfg.swap_budget_blocks = args.get_usize("swap-budget-blocks");
     cfg.aging_iters = args.get_usize("aging-iters") as u64;
     cfg.preemption = !args.get_bool("no-preemption");
+    cfg.kv_quant = prhs::kvcache::KvQuant::parse(args.get("kv-quant"))
+        .ok_or_else(|| {
+            anyhow::anyhow!("bad --kv-quant `{}` (off|int8)", args.get("kv-quant"))
+        })?;
     let priority = match args.get("priority") {
         "default" => None,
         "low" => Some(Priority::Low),

@@ -46,11 +46,18 @@ impl Histogram {
         }
         if self.dirty || self.sorted.len() != self.samples_us.len() {
             self.sorted.clone_from(&self.samples_us);
-            self.sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            // total_cmp: a NaN sample (e.g. a poisoned timer delta) must
+            // not panic the report path — NaNs sort to the top and only
+            // perturb the extreme percentiles they'd dominate anyway
+            self.sorted.sort_by(f64::total_cmp);
             self.dirty = false;
         }
-        let idx =
-            ((self.sorted.len() as f64 - 1.0) * p / 100.0).round() as usize;
+        // clamp: out-of-range p (and a NaN p, which saturates to 0 via
+        // the `as usize` cast) answers with the nearest extreme instead
+        // of indexing out of bounds
+        let n = self.sorted.len() as f64;
+        let idx = (((n - 1.0) * p / 100.0).round().clamp(0.0, n - 1.0))
+            as usize;
         self.sorted[idx]
     }
 }
@@ -180,6 +187,17 @@ pub struct RunMetrics {
     /// could not hold their state) — 0 is the exhaustion test's
     /// no-client-visible-failure criterion.
     pub shed_requests: u64,
+    /// Host bytes the engine's page pool holds allocated, mirrored from
+    /// `StepStats::kv_resident_bytes` (computed through
+    /// `model::kv_bytes::pool_bytes` at `EngineConfig::kv_quant`'s
+    /// precision — ~3.6× lower under `int8` at d = 32; DESIGN.md
+    /// §Quantized-Residency).  Peak over the run.
+    pub kv_resident_bytes: u64,
+    /// Rows dequantized out of the int8 host pool into f32 staging
+    /// paths, mirrored from `StepStats::dequant_rows` — always 0 at
+    /// `kv_quant = off`; the dequant-work gauge for the selector's
+    /// sketch-scoring path.
+    pub dequant_rows: u64,
     pub wall_s: f64,
     /// Decode-phase head-level retrievals only (prefill-side scoring is
     /// excluded from ρ̂ by definition — paper Sec. III, DESIGN.md §4).
@@ -243,6 +261,41 @@ mod tests {
         c.record_us(0.5);
         assert_eq!(c.percentile_us(0.0), 0.5);
         assert_eq!(h.percentile_us(0.0), 1.0, "original unaffected");
+    }
+
+    /// Regression (issue satellite): a NaN sample used to panic the
+    /// sort (`partial_cmp().unwrap()`); `total_cmp` sorts it to the top
+    /// and every query still answers.
+    #[test]
+    fn histogram_survives_nan_samples() {
+        let mut h = Histogram::default();
+        h.record_us(3.0);
+        h.record_us(f64::NAN);
+        h.record_us(1.0);
+        h.record_us(2.0);
+        // no panic, and finite percentiles are untouched by the NaN
+        assert_eq!(h.percentile_us(0.0), 1.0);
+        assert_eq!(h.percentile_us(50.0), 2.0);
+        // NaN sorts above every finite value → p100 reports it
+        assert!(h.percentile_us(100.0).is_nan());
+        assert!(h.mean_us().is_nan(), "mean is honest about poison");
+    }
+
+    /// Regression (issue satellite): p > 100 / p < 0 used to index out
+    /// of bounds; both must clamp to the nearest extreme, and a NaN p
+    /// must not panic either.
+    #[test]
+    fn histogram_out_of_range_percentile_clamps() {
+        let mut h = Histogram::default();
+        for i in 1..=10 {
+            h.record_us(i as f64);
+        }
+        assert_eq!(h.percentile_us(150.0), 10.0, "p>100 clamps to max");
+        assert_eq!(h.percentile_us(-5.0), 1.0, "p<0 clamps to min");
+        assert_eq!(h.percentile_us(1e18), 10.0, "huge p clamps to max");
+        assert_eq!(h.percentile_us(f64::NAN), 1.0, "NaN p answers min");
+        assert_eq!(h.percentile_us(0.0), 1.0);
+        assert_eq!(h.percentile_us(100.0), 10.0);
     }
 
     #[test]

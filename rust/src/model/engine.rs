@@ -18,8 +18,8 @@ use anyhow::{anyhow, Result};
 
 use crate::config::EngineConfig;
 use crate::kvcache::{
-    BlockAllocator, DevKvMirror, PagePool, PrefixCache, ResidencyMode,
-    SeqKvCache, SwapTier,
+    canonicalize_row, BlockAllocator, DevKvMirror, KvQuant, PagePool,
+    PrefixCache, ResidencyMode, SeqKvCache, SwapTier,
 };
 use crate::runtime::{
     ArenaHandle, ArtifactSpec, DeviceArena, Input, ModelManifest, Output,
@@ -420,6 +420,85 @@ pub mod swap_model {
     }
 }
 
+/// Pure model of host KV residency cost under `EngineConfig::kv_quant`
+/// (DESIGN.md §Quantized-Residency).  The engine's
+/// `StepStats::kv_resident_bytes` is computed THROUGH `pool_bytes`, the
+/// swap counters are charged through `snapshot_bytes` (which reduces to
+/// `swap_model::swap_kv_bytes` at `Off` — pinned by
+/// `snapshot_bytes_off_matches_swap_model`), and the benches' resident
+/// bytes/token + max-concurrent columns come from `per_token_bytes` /
+/// `max_concurrent` — so the ≥3× capacity claim is testable engine-free
+/// and pinned exactly on the running engine.
+pub mod kv_bytes {
+    use crate::kvcache::KvQuant;
+
+    /// Bytes one `d`-length (head, position) row occupies resident:
+    /// `4·d` as f32, `d + 4` as scaled int8 (i8 payload + one f32 scale
+    /// per row — `kvcache::QuantPage`).  Ratio 4d/(d+4) ≥ 3 for d ≥ 12,
+    /// ≈ 3.56× at the testbed's d = 32.
+    pub fn row_bytes(quant: KvQuant, d: usize) -> u64 {
+        match quant {
+            KvQuant::Off => 4 * d as u64,
+            KvQuant::Int8 => d as u64 + 4,
+        }
+    }
+
+    /// Resident bytes of `pages` allocated pool pages (K and V planes:
+    /// each page holds `[H, page_len]` rows per plane).
+    pub fn pool_bytes(
+        quant: KvQuant,
+        pages: usize,
+        h: usize,
+        page_len: usize,
+        d: usize,
+    ) -> u64 {
+        2 * (pages * h * page_len) as u64 * row_bytes(quant, d)
+    }
+
+    /// Resident bytes of one `[nl, tokens, H, d]` K + V snapshot — the
+    /// `SwapTier` / `PrefixCache` entry footprint.  At `Off` this is
+    /// exactly `swap_model::swap_kv_bytes`.
+    pub fn snapshot_bytes(
+        quant: KvQuant,
+        nl: usize,
+        h: usize,
+        d: usize,
+        tokens: usize,
+    ) -> u64 {
+        2 * (nl * tokens * h) as u64 * row_bytes(quant, d)
+    }
+
+    /// Marginal resident bytes one cached token costs across all
+    /// layers/heads (both planes) — the bench's bytes/token column.
+    pub fn per_token_bytes(
+        quant: KvQuant,
+        nl: usize,
+        h: usize,
+        d: usize,
+    ) -> u64 {
+        2 * (nl * h) as u64 * row_bytes(quant, d)
+    }
+
+    /// Max concurrent sequences of `tokens` context a host-KV byte
+    /// budget covers at this precision — the capacity → throughput
+    /// lever the ROADMAP item names (quantization raises it ~3.6× at
+    /// d = 32 without touching the budget).
+    pub fn max_concurrent(
+        budget_bytes: u64,
+        quant: KvQuant,
+        nl: usize,
+        h: usize,
+        d: usize,
+        tokens: usize,
+    ) -> u64 {
+        let per_seq = per_token_bytes(quant, nl, h, d) * tokens as u64;
+        if per_seq == 0 {
+            return 0;
+        }
+        budget_bytes / per_seq
+    }
+}
+
 /// How the decode device path dispatches at a given context size
 /// (`Engine::dev_dispatch`): `Batched` — mirrors live as slots of
 /// stacked group buffers and one PJRT dispatch serves a whole group
@@ -666,9 +745,8 @@ impl PlanScratch {
         }
         self.last_keys.resize(n_heads, Vec::new());
         for head in 0..n_heads {
-            let src = cache.key(pool, layer, head, t - 1);
-            self.last_keys[head].clear();
-            self.last_keys[head].extend_from_slice(src);
+            self.last_keys[head].resize(pool.head_dim, 0.0);
+            cache.key_into(pool, layer, head, t - 1, &mut self.last_keys[head]);
         }
     }
 }
@@ -877,6 +955,19 @@ pub struct StepStats {
     /// blocked on blocks/pages and resolved by preemption, deferral, or
     /// shedding) — the overload pressure gauge.
     pub kv_pressure_events: u64,
+    /// Host bytes the engine's `PagePool` currently holds allocated,
+    /// computed THROUGH `kv_bytes::pool_bytes` at the pool's precision
+    /// (`EngineConfig::kv_quant`) — the residency observable the
+    /// quantized-vs-f32 differential pins exactly against the pure byte
+    /// model, and the source of the benches' resident bytes/token
+    /// column (DESIGN.md §Quantized-Residency).  Current value,
+    /// refreshed at every residency-changing site.
+    pub kv_resident_bytes: u64,
+    /// Cumulative `d`-length rows dequantized out of the int8 host pool
+    /// into f32 staging paths (`kvcache::PagePool::dequant_rows`) —
+    /// always 0 at `kv_quant = off`.  The dequant-work gauge: selector
+    /// sketch scoring keeps it O(reads), not O(resident).
+    pub dequant_rows: u64,
 }
 
 impl StepStats {
@@ -1093,11 +1184,12 @@ impl Engine {
         cfg: EngineConfig,
     ) -> Self {
         let mm = rt.model(&cfg.model).expect("model in manifest").clone();
-        let pool = PagePool::with_limit(
+        let pool = PagePool::with_limit_quant(
             mm.n_heads,
             mm.head_dim,
             128,
             cfg.max_kv_pages,
+            cfg.kv_quant,
         );
         // Prefix-hash / swap-budget granularity: the paged device
         // pool's block size when the paged stages are in play (one hash
@@ -1114,17 +1206,23 @@ impl Engine {
             pool.page_len
         };
         let prefix = if cfg.prefix_cache_blocks > 0 {
-            Some(PrefixCache::new(
+            Some(PrefixCache::with_quant(
                 block,
                 cfg.prefix_cache_blocks,
                 mm.n_layers,
                 mm.n_heads,
                 mm.head_dim,
+                cfg.kv_quant,
             ))
         } else {
             None
         };
-        let swap = SwapTier::new(cfg.swap_budget_blocks, block);
+        let swap = SwapTier::with_quant(
+            cfg.swap_budget_blocks,
+            block,
+            cfg.kv_quant,
+            mm.head_dim,
+        );
         let seed = cfg.seed;
         Engine {
             rt,
@@ -1240,13 +1338,30 @@ impl Engine {
             return;
         }
         // host seed: one contiguous [H·d] row per (layer, pos) out of
-        // the entry into the sequence's pool pages
-        let pc = self.prefix.as_ref().expect("hit implies cache");
+        // the entry into the sequence's pool pages (dequantized when the
+        // entry is int8 — requantizing canonical rows is lossless, so a
+        // warm sequence's pool is bitwise the cold sequence's)
         let nl = self.mm.n_layers;
+        let hd = self.mm.n_heads * self.mm.head_dim;
+        let mut krow = vec![0f32; hd];
+        let mut vrow = vec![0f32; hd];
         for pos in 0..matched {
             for layer in 0..nl {
-                let (k, v) = pc.entry_row(hit.entry, layer, pos);
-                if seq.cache.append(&mut self.pool, layer, k, v).is_err() {
+                {
+                    let pc = self.prefix.as_ref().expect("hit implies cache");
+                    pc.entry_row_into(
+                        hit.entry,
+                        layer,
+                        pos,
+                        &mut krow,
+                        &mut vrow,
+                    );
+                }
+                if seq
+                    .cache
+                    .append(&mut self.pool, layer, &krow, &vrow)
+                    .is_err()
+                {
                     // pool cap: roll back and run cold
                     seq.cache.release(&mut self.pool);
                     return;
@@ -1259,11 +1374,18 @@ impl Engine {
         // replay cached keys into the fresh selector in the same
         // (layer → head → pos) order the dev prefill path reports —
         // chunk-order insensitivity is already a selector contract
+        let mut kbuf = vec![0f32; self.mm.head_dim];
         for layer in 0..nl {
             for head in 0..self.mm.n_heads {
                 for pos in 0..matched {
-                    let k = seq.cache.key(&self.pool, layer, head, pos);
-                    seq.selector.observe_new_key(layer, head, pos, k);
+                    seq.cache.key_into(
+                        &self.pool,
+                        layer,
+                        head,
+                        pos,
+                        &mut kbuf,
+                    );
+                    seq.selector.observe_new_key(layer, head, pos, &kbuf);
                 }
             }
         }
@@ -1365,6 +1487,18 @@ impl Engine {
         }
         let chunk = self.effective_chunk(chunk);
         let (start, end) = seq.prefill.next(chunk);
+        // refresh the host-residency gauges after the chunk's pool loads
+        let done = self.prefill_chunk_inner(seq, start, end)?;
+        self.note_kv_resident();
+        Ok(done)
+    }
+
+    fn prefill_chunk_inner(
+        &mut self,
+        seq: &mut Sequence,
+        start: usize,
+        end: usize,
+    ) -> Result<bool> {
         // Prefix-seeded sequences skip the device path: its loop-carried
         // state starts from the zero template, so it cannot resume from
         // cached KV — the host KV-in extend path (which stages the
@@ -1670,10 +1804,28 @@ impl Engine {
 
     /// Refresh `StepStats::device_blocks_live` from the allocator
     /// ledger (the current live physical-block count; the coordinator
-    /// keeps the peak).
+    /// keeps the peak), plus the host-residency gauges
+    /// (`kv_resident_bytes` through the pure byte model,
+    /// `dequant_rows` from the pool's counter).
     fn note_blocks_live(&mut self) {
         self.stats.device_blocks_live =
             self.paged.as_ref().map_or(0, |p| p.alloc.in_use() as u64);
+        self.note_kv_resident();
+    }
+
+    /// Refresh `StepStats::{kv_resident_bytes, dequant_rows}` — called
+    /// from every residency-changing site (`note_blocks_live`, decode
+    /// commit, prefill loads) so the counters are exact whenever the
+    /// coordinator mirrors them.
+    fn note_kv_resident(&mut self) {
+        self.stats.kv_resident_bytes = kv_bytes::pool_bytes(
+            self.pool.quant(),
+            self.pool.allocated_pages(),
+            self.mm.n_heads,
+            self.pool.page_len,
+            self.mm.head_dim,
+        );
+        self.stats.dequant_rows = self.pool.dequant_rows();
     }
 
     /// Grow a paged mirror's block table to cover `need` tokens —
@@ -2072,6 +2224,17 @@ impl Engine {
         len: usize,
     ) -> Result<()> {
         if !self.cfg.device_decode_kv {
+            return Ok(());
+        }
+        // Under quantized host residency the canonical KV is what the
+        // pool holds AFTER quantization — an in-device handoff would
+        // seed the mirror with the exact prefill floats the host oracle
+        // no longer has, and the dense and host paths would diverge.
+        // Skip it: the mirror seeds lazily from the host pool on first
+        // dense need (`ensure_mirror` / `seed_paged_from_host`, whose
+        // `pack_dense_tiles` staging dequantizes), so device and host
+        // reads see identical canonical floats.
+        if self.pool.quant() != KvQuant::Off {
             return Ok(());
         }
         if self.try_paged_handoff(seq, lb, len)? {
@@ -2562,12 +2725,15 @@ impl Engine {
 
         // Report every context key once (Quest summaries / DS caches) —
         // same per-(layer, head) position order as the per-chunk reports
-        // of the host-staged paths, so selector state is identical.
+        // of the host-staged paths, so selector state is identical.  Read
+        // back through the pool (dequantized under int8) so the selector
+        // scores the resident sketch, not floats the pool no longer holds.
+        let mut kbuf = vec![0f32; d];
         for layer in 0..nl {
             for head in 0..h {
                 for pos in 0..len {
-                    let krow = seq.cache.key(&self.pool, layer, head, pos);
-                    seq.selector.observe_new_key(layer, head, pos, krow);
+                    seq.cache.key_into(&self.pool, layer, head, pos, &mut kbuf);
+                    seq.selector.observe_new_key(layer, head, pos, &kbuf);
                 }
             }
         }
@@ -2639,11 +2805,12 @@ impl Engine {
 
         // Report the chunk's new keys (Quest summaries / DS caches).
         let h = self.mm.n_heads;
+        let mut kbuf = vec![0f32; self.mm.head_dim];
         for layer in 0..nl {
             for head in 0..h {
                 for pos in start..end {
-                    let krow = seq.cache.key(&self.pool, layer, head, pos);
-                    seq.selector.observe_new_key(layer, head, pos, krow);
+                    seq.cache.key_into(&self.pool, layer, head, pos, &mut kbuf);
+                    seq.selector.observe_new_key(layer, head, pos, &kbuf);
                 }
             }
         }
@@ -2743,11 +2910,12 @@ impl Engine {
         seq.cache.load_chunk(&mut self.pool, &k.data, &v.data, cb, new_len)?;
 
         // Report the chunk's new keys (Quest summaries / DS caches).
+        let mut kbuf = vec![0f32; d];
         for layer in 0..nl {
             for head in 0..h {
                 for pos in start..end {
-                    let krow = seq.cache.key(&self.pool, layer, head, pos);
-                    seq.selector.observe_new_key(layer, head, pos, krow);
+                    seq.cache.key_into(&self.pool, layer, head, pos, &mut kbuf);
+                    seq.selector.observe_new_key(layer, head, pos, &kbuf);
                 }
             }
         }
@@ -3641,6 +3809,7 @@ impl Engine {
                         // output-level L2: Σ (A - Â) v
                         let tau = 1.0 - delta;
                         let mut diff = vec![0f64; d];
+                        let mut vbuf = vec![0f32; d];
                         for (pos, &a) in row.iter().enumerate() {
                             let in_set = set.binary_search(&pos).is_ok();
                             let ahat = if in_set && tau > 1e-9 {
@@ -3652,9 +3821,10 @@ impl Engine {
                             if w.abs() < 1e-12 {
                                 continue;
                             }
-                            let vrow =
-                                seq.cache.value(&self.pool, layer, head, pos);
-                            for (j, &vv) in vrow.iter().enumerate() {
+                            seq.cache.value_into(
+                                &self.pool, layer, head, pos, &mut vbuf,
+                            );
+                            for (j, &vv) in vbuf.iter().enumerate() {
                                 diff[j] += w * vv as f64;
                             }
                         }
@@ -3757,6 +3927,21 @@ impl Engine {
                     scratch.vrow[hh * d..(hh + 1) * d]
                         .copy_from_slice(&v_new.data[base..base + d]);
                 }
+                if self.pool.quant() != KvQuant::Off {
+                    // Canonicalize (quantize→dequantize) per head row
+                    // BEFORE any consumer: the device mirror, the host
+                    // pool (whose quantization of a canonical row is
+                    // bitwise lossless), and the selector then all see
+                    // the same floats (DESIGN.md §Quantized-Residency).
+                    for hh in 0..h {
+                        canonicalize_row(
+                            &mut scratch.krow[hh * d..(hh + 1) * d],
+                        );
+                        canonicalize_row(
+                            &mut scratch.vrow[hh * d..(hh + 1) * d],
+                        );
+                    }
+                }
                 if stage_dev_rows {
                     // stage this layer's expanded rows for the one
                     // device-mirror append after the layer loop — the
@@ -3849,6 +4034,7 @@ impl Engine {
             }
         }
         self.stats.decode_steps += 1;
+        self.note_kv_resident();
         Ok(())
     }
 
@@ -4010,11 +4196,19 @@ impl Engine {
                 for pos in 0..t {
                     for head in 0..h {
                         let off = ((layer * t + pos) * h + head) * d;
-                        k[off..off + d].copy_from_slice(
-                            seq.cache.key(&self.pool, layer, head, pos),
+                        seq.cache.key_into(
+                            &self.pool,
+                            layer,
+                            head,
+                            pos,
+                            &mut k[off..off + d],
                         );
-                        v[off..off + d].copy_from_slice(
-                            seq.cache.value(&self.pool, layer, head, pos),
+                        seq.cache.value_into(
+                            &self.pool,
+                            layer,
+                            head,
+                            pos,
+                            &mut v[off..off + d],
                         );
                     }
                 }
@@ -4029,8 +4223,10 @@ impl Engine {
                 ));
             }
             seq.cache.release(&mut self.pool);
+            // quantized snapshots move (and hold) proportionally fewer
+            // bytes; reduces to `swap_model::swap_kv_bytes` at `off`
             self.stats.swap_out_bytes +=
-                swap_model::swap_kv_bytes(nl, h, d, t);
+                kv_bytes::snapshot_bytes(self.pool.quant(), nl, h, d, t);
         }
         self.note_blocks_live();
         Ok(())
@@ -4075,7 +4271,9 @@ impl Engine {
             seq.cache.commit_token();
         }
         self.stats.restores_restage += 1;
-        self.stats.swap_in_bytes += swap_model::swap_kv_bytes(nl, h, d, t);
+        self.stats.swap_in_bytes +=
+            kv_bytes::snapshot_bytes(self.pool.quant(), nl, h, d, t);
+        self.note_kv_resident();
         Ok(true)
     }
 
@@ -4134,11 +4332,19 @@ impl Engine {
             for pos in 0..cb {
                 for head in 0..h {
                     let off = ((layer * cb + pos) * h + head) * d;
-                    k[off..off + d].copy_from_slice(
-                        seq.cache.key(&self.pool, layer, head, pos),
+                    seq.cache.key_into(
+                        &self.pool,
+                        layer,
+                        head,
+                        pos,
+                        &mut k[off..off + d],
                     );
-                    v[off..off + d].copy_from_slice(
-                        seq.cache.value(&self.pool, layer, head, pos),
+                    seq.cache.value_into(
+                        &self.pool,
+                        layer,
+                        head,
+                        pos,
+                        &mut v[off..off + d],
                     );
                 }
             }
@@ -4673,5 +4879,88 @@ mod tests {
             // restore is the same model — conservation by construction
             assert_eq!(out, swap_kv_bytes(NL, H, D, t));
         }
+    }
+
+    /// Residency byte model (DESIGN.md §Quantized-Residency): int8 rows
+    /// cost `d + 4` bytes against f32's `4·d` — ≥3× smaller for every
+    /// d ≥ 12 (3.56× at the testbed's D = 32) — and the acceptance
+    /// criterion's ≥3× resident-bytes/token claim follows from the
+    /// per-token model alone, engine-free.
+    #[test]
+    fn kv_bytes_int8_is_at_least_3x_smaller() {
+        use super::kv_bytes::{per_token_bytes, row_bytes};
+        use crate::kvcache::KvQuant;
+        assert_eq!(row_bytes(KvQuant::Off, D), 4 * D as u64);
+        assert_eq!(row_bytes(KvQuant::Int8, D), D as u64 + 4);
+        for d in 12..=256usize {
+            let (f, q) = (
+                row_bytes(KvQuant::Off, d),
+                row_bytes(KvQuant::Int8, d),
+            );
+            assert!(
+                f as f64 / q as f64 >= 3.0,
+                "4d/(d+4) < 3 at d={d}"
+            );
+        }
+        // per-token mirrors the row model across layers/heads/planes
+        assert_eq!(
+            per_token_bytes(KvQuant::Off, NL, H, D),
+            (2 * NL * H) as u64 * row_bytes(KvQuant::Off, D)
+        );
+        let ratio = per_token_bytes(KvQuant::Off, NL, H, D) as f64
+            / per_token_bytes(KvQuant::Int8, NL, H, D) as f64;
+        assert!(ratio >= 3.0, "bytes/token ratio {ratio} < 3 at D={D}");
+    }
+
+    /// `snapshot_bytes(off)` must equal the PR-9 swap byte model — the
+    /// swap counters switched to charging through `kv_bytes`, and the
+    /// overload differential's exact-byte assertions rely on the `off`
+    /// path being unchanged.
+    #[test]
+    fn snapshot_bytes_off_matches_swap_model() {
+        use super::kv_bytes::snapshot_bytes;
+        use super::swap_model::swap_kv_bytes;
+        use crate::kvcache::KvQuant;
+        for t in [0usize, 1, 17, 200, 512] {
+            assert_eq!(
+                snapshot_bytes(KvQuant::Off, NL, H, D, t),
+                swap_kv_bytes(NL, H, D, t)
+            );
+        }
+        // and the int8 snapshot shrinks by the row ratio exactly
+        assert_eq!(
+            snapshot_bytes(KvQuant::Int8, NL, H, D, 64),
+            (2 * NL * 64 * H) as u64 * (D as u64 + 4)
+        );
+    }
+
+    /// Capacity lever: at a fixed byte budget, int8 residency admits
+    /// ≥3× the concurrent sequences (the max-concurrent-at-fixed-
+    /// quality bench column), and the pool model matches a hand
+    /// computation at both precisions.
+    #[test]
+    fn kv_bytes_max_concurrent_and_pool_model() {
+        use super::kv_bytes::{max_concurrent, pool_bytes};
+        use crate::kvcache::KvQuant;
+        let budget = 1u64 << 30; // 1 GiB of host KV
+        let toks = 4096;
+        let f = max_concurrent(budget, KvQuant::Off, NL, H, D, toks);
+        let q = max_concurrent(budget, KvQuant::Int8, NL, H, D, toks);
+        assert!(f > 0, "budget must admit at least one f32 sequence");
+        assert!(
+            q as f64 / f as f64 >= 3.0,
+            "int8 admits {q} vs f32 {f} — less than 3×"
+        );
+        assert_eq!(max_concurrent(0, KvQuant::Off, NL, H, D, toks), 0);
+        assert_eq!(max_concurrent(budget, KvQuant::Off, NL, H, D, 0), 0);
+        // pool model: pages × rows-per-page × planes × row bytes
+        assert_eq!(
+            pool_bytes(KvQuant::Off, 3, H, 128, D),
+            (2 * 3 * H * 128 * 4 * D) as u64
+        );
+        assert_eq!(
+            pool_bytes(KvQuant::Int8, 3, H, 128, D),
+            (2 * 3 * H * 128) as u64 * (D as u64 + 4)
+        );
     }
 }

@@ -6,6 +6,6 @@ pub mod engine;
 pub mod proj;
 
 pub use engine::{
-    decode_dispatch, decode_staging, prefill_staging, ChunkLedger, Engine,
-    PlanScratch, Probe, ProbeRow, Sequence, StepStats,
+    decode_dispatch, decode_staging, kv_bytes, prefill_staging, ChunkLedger,
+    Engine, PlanScratch, Probe, ProbeRow, Sequence, StepStats,
 };

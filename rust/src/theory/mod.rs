@@ -113,6 +113,53 @@ pub fn etf_beta_bound(
     q_max / (head_dim as f64).sqrt() * b_drift * (-mu * depth_past_ls).exp()
 }
 
+// ---------------------------------------------------------------------
+// Quantized-residency bounds (DESIGN.md §Quantized-Residency).
+//
+// Under `EngineConfig::kv_quant = int8` the selector scores against
+// dequantized keys k̂ with per-element error |k̂_j − k_j| ≤ s/2 (s the
+// row's power-of-two scale, `kvcache::quant_scale`).  The chain is:
+// elementwise key error → per-position logit error (Hölder) → softmax
+// total-variation (ratio bound) → dropped-mass excess (Lemma 3) → MI
+// loss (Eq. 4).  Every link is worst-case, so the composite is a sound
+// upper bound on quantization-induced selection error.
+
+/// Worst-case logit perturbation from quantized keys: with scaled-dot
+/// scores z_i = q·k_i/√d and per-element key error ≤ step/2,
+/// |ẑ_i − z_i| ≤ ‖q‖₁ · (step/2) / √d  (Hölder: |q·e| ≤ ‖q‖₁‖e‖∞).
+/// `step` is the largest quantization scale over the scored rows
+/// (`kvcache::QuantPage` stores one per row; the max dominates).
+pub fn quant_logit_eps(q_l1: f64, step: f64, head_dim: usize) -> f64 {
+    q_l1.max(0.0) * step.max(0.0) * 0.5 / (head_dim as f64).sqrt()
+}
+
+/// Softmax total-variation bound under an ℓ∞ logit perturbation:
+/// if |ẑ_i − z_i| ≤ ε for all i then each ratio p̂_i/p_i lies in
+/// [e^{−2ε}, e^{2ε}], so TV(p, p̂) = ½·Σ p_i·|1 − p̂_i/p_i|
+/// ≤ ½·(e^{2ε} − 1).  Clamped to 1 (TV can never exceed it).
+pub fn quant_tv_bound(logit_eps: f64) -> f64 {
+    if logit_eps <= 0.0 {
+        return 0.0;
+    }
+    ((2.0 * logit_eps).exp_m1() * 0.5).min(1.0)
+}
+
+/// Dropped-mass bound for top-k selection against quantized scores
+/// (Lemma 3 applied to the softmax-TV bound): selecting top-k on the
+/// perturbed row Â drops at most δ* + 2·TV(A, Â) of the true row's
+/// mass, so δ_sel ≤ δ* + 2·quant_tv_bound(ε).  Clamped to 1.
+pub fn quant_dropped_mass_bound(delta_star: f64, logit_eps: f64) -> f64 {
+    (delta_star + 2.0 * quant_tv_bound(logit_eps)).min(1.0)
+}
+
+/// Quantization MI-loss bound: g(δ* + 2·TV) (Eq. 4 composed with the
+/// Lemma-3 excess).  Monotone non-decreasing in the quantization step —
+/// the property `prhs harness theory_check` claim 5 and the
+/// `quant_delta_bound_monotone_in_step` test pin.
+pub fn quant_delta_bound(delta_star: f64, logit_eps: f64, l: usize) -> f64 {
+    mi_bound(quant_dropped_mass_bound(delta_star, logit_eps), l)
+}
+
 /// Fit a geometric-tail recency model A_i ≤ κ(1−ρ)ρ^{t−i} (Eq. 44) to an
 /// observed attention row (positions beyond the sink region), returning
 /// (κ, λ = −ln ρ).  Least-squares in log space over nonzero entries.
@@ -292,5 +339,105 @@ mod tests {
     fn kl_loss_bound_monotone() {
         assert!(kl_loss_bound(0.9) < kl_loss_bound(0.5));
         assert_eq!(kl_loss_bound(1.0), 0.0);
+    }
+
+    fn softmax64(z: &[f64]) -> Vec<f64> {
+        let m = z.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let e: Vec<f64> = z.iter().map(|&x| (x - m).exp()).collect();
+        let s: f64 = e.iter().sum();
+        e.iter().map(|&x| x / s).collect()
+    }
+
+    #[test]
+    fn quant_tv_bound_holds_for_softmax_perturbations() {
+        // The ratio bound behind `quant_tv_bound`: any ℓ∞-ε logit
+        // perturbation moves the softmax by at most (e^{2ε}−1)/2 in TV.
+        Prop::new(300, 0x50F7_3A95).forall(
+            |rng| {
+                let n = gen::usize_in(rng, 2, 64);
+                let z: Vec<f64> =
+                    (0..n).map(|_| rng.normal() as f64 * 3.0).collect();
+                let eps = rng.f64() * 0.5;
+                let zh: Vec<f64> = z
+                    .iter()
+                    .map(|&x| x + (rng.f64() * 2.0 - 1.0) * eps)
+                    .collect();
+                (z, zh, eps)
+            },
+            |(z, zh, eps)| {
+                let (p, ph) = (softmax64(z), softmax64(zh));
+                let tv = 0.5
+                    * p.iter()
+                        .zip(&ph)
+                        .map(|(a, b)| (a - b).abs())
+                        .sum::<f64>();
+                let bound = quant_tv_bound(*eps);
+                if tv <= bound + 1e-9 {
+                    Ok(())
+                } else {
+                    Err(format!("TV {tv} > bound {bound} at ε={eps}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn quant_dropped_mass_bound_holds_end_to_end() {
+        // Composition: key error → logit ε → softmax TV → Lemma 3.
+        // Top-k chosen on the perturbed row drops at most
+        // δ* + 2·quant_tv_bound(ε) of the *true* row's mass.
+        Prop::new(300, 0x0DE1_7A00).forall(
+            |rng| {
+                let n = gen::usize_in(rng, 4, 48);
+                let k = gen::usize_in(rng, 1, n);
+                let z: Vec<f64> =
+                    (0..n).map(|_| rng.normal() as f64 * 2.0).collect();
+                let eps = rng.f64() * 0.3;
+                let zh: Vec<f64> = z
+                    .iter()
+                    .map(|&x| x + (rng.f64() * 2.0 - 1.0) * eps)
+                    .collect();
+                (z, zh, eps, k)
+            },
+            |(z, zh, eps, k)| {
+                let a: Vec<f32> =
+                    softmax64(z).iter().map(|&x| x as f32).collect();
+                let ahat: Vec<f32> =
+                    softmax64(zh).iter().map(|&x| x as f32).collect();
+                let sel = crate::util::fx::top_k_indices(&ahat, *k);
+                let d_sel = dropped_mass(&a, &sel);
+                let d_star = oracle_dropped_mass(&a, *k);
+                let bound = quant_dropped_mass_bound(d_star, *eps);
+                if d_sel <= bound + 1e-6 {
+                    Ok(())
+                } else {
+                    Err(format!("δ_sel {d_sel} > bound {bound} (ε={eps})"))
+                }
+            },
+        );
+    }
+
+    /// Issue satellite: the δ bound must be monotone in the quantization
+    /// step — a coarser scale can never *improve* the certificate.
+    #[test]
+    fn quant_delta_bound_monotone_in_step() {
+        let (q_l1, d, l, d_star) = (8.0, 32usize, 1024usize, 0.05);
+        assert_eq!(
+            quant_delta_bound(d_star, quant_logit_eps(q_l1, 0.0, d), l),
+            mi_bound(d_star, l),
+            "zero step must reduce to the unquantized bound"
+        );
+        let mut prev = -1.0;
+        for i in 0..=400 {
+            let step = i as f64 * 0.005;
+            let eps = quant_logit_eps(q_l1, step, d);
+            let g = quant_delta_bound(d_star, eps, l);
+            assert!(g >= prev - 1e-12, "δ bound not monotone at step={step}");
+            prev = g;
+        }
+        // the TV link is monotone on its own too
+        assert!(quant_tv_bound(0.1) < quant_tv_bound(0.2));
+        assert_eq!(quant_tv_bound(0.0), 0.0);
+        assert_eq!(quant_tv_bound(1e9), 1.0);
     }
 }

@@ -20,6 +20,7 @@
 #![allow(dead_code)] // each test binary uses a subset of the harness
 
 use prhs::config::{EngineConfig, SelectorKind};
+use prhs::kvcache::KvQuant;
 use prhs::model::{Engine, Probe, Sequence};
 use prhs::util::rng::Rng;
 
@@ -136,6 +137,27 @@ fn strip_stages(engine: &mut Engine, stages: &[&str]) {
     engine.mm.artifacts.retain(|a| !stages.contains(&a.stage.as_str()));
 }
 
+/// Export one sequence's KV pages per (layer, head, pos) through the
+/// precision-agnostic accessors (the int8 pool dequantizes in place;
+/// the f32 pool copies), so the fingerprint works under every
+/// `kv_quant` mode.
+pub fn kv_fingerprint(engine: &Engine, s: &Sequence) -> Vec<f32> {
+    let (nl, h, d) = (engine.mm.n_layers, engine.mm.n_heads, engine.mm.head_dim);
+    let mut pages = Vec::new();
+    let mut row = vec![0f32; d];
+    for layer in 0..nl {
+        for head in 0..h {
+            for pos in 0..s.cache.len() {
+                s.cache.key_into(&engine.pool, layer, head, pos, &mut row);
+                pages.extend_from_slice(&row);
+                s.cache.value_into(&engine.pool, layer, head, pos, &mut row);
+                pages.extend_from_slice(&row);
+            }
+        }
+    }
+    pages
+}
+
 /// Run `w` under one mode and collect the observable surface.  Panics on
 /// engine errors (test context) and asserts the arena leak check.
 pub fn run_mode(
@@ -144,12 +166,30 @@ pub fn run_mode(
     mode: DecodeMode,
     device_prefill: bool,
 ) -> ModeOut {
-    let label = format!("{mode:?}/device_prefill={device_prefill}");
+    run_mode_quant(dir, w, mode, device_prefill, KvQuant::Off)
+}
+
+/// `run_mode` with an explicit host-residency precision — the
+/// quantized-residency differential runs the same workload at
+/// `KvQuant::Off` and `KvQuant::Int8` and compares the surfaces
+/// (identity at off, bounded drift at int8).
+pub fn run_mode_quant(
+    dir: &str,
+    w: &Workload,
+    mode: DecodeMode,
+    device_prefill: bool,
+    quant: KvQuant,
+) -> ModeOut {
+    let label = format!(
+        "{mode:?}/device_prefill={device_prefill}/kv_quant={}",
+        quant.name()
+    );
     let mut cfg = EngineConfig::default();
     cfg.artifacts_dir = dir.to_string();
     cfg.model = w.model.to_string();
     cfg.selector.kind = w.selector.clone();
     cfg.device_prefill_kv = device_prefill;
+    cfg.kv_quant = quant;
     match mode {
         DecodeMode::PagedDev
         | DecodeMode::StrippedToPerSeq
@@ -224,7 +264,7 @@ pub fn run_mode(
         step_probs_bytes.push(engine.stats.decode_probs_bytes - p0);
     }
 
-    let (nl, h) = (engine.mm.n_layers, engine.mm.n_heads);
+    let nl = engine.mm.n_layers;
     let mut generated = Vec::new();
     let mut logits = Vec::new();
     let mut sets = Vec::new();
@@ -238,20 +278,7 @@ pub fn run_mode(
                 .map(|layer| s.selector.sets(layer).to_vec())
                 .collect(),
         );
-        let mut pages = Vec::new();
-        for layer in 0..nl {
-            for head in 0..h {
-                for pos in 0..s.cache.len() {
-                    pages.extend_from_slice(
-                        s.cache.key(&engine.pool, layer, head, pos),
-                    );
-                    pages.extend_from_slice(
-                        s.cache.value(&engine.pool, layer, head, pos),
-                    );
-                }
-            }
-        }
-        kv.push(pages);
+        kv.push(kv_fingerprint(&engine, s));
         rho.push(engine.retrieval_ratio(s, s.generated.len() as u64));
     }
     let probe_delta =
@@ -317,20 +344,8 @@ pub fn run_seq(
         step_dispatches.push(engine.stats.decode_dev_dispatches - d0);
         step_probs_bytes.push(engine.stats.decode_probs_bytes - p0);
     }
-    let (nl, h) = (engine.mm.n_layers, engine.mm.n_heads);
-    let mut pages = Vec::new();
-    for layer in 0..nl {
-        for head in 0..h {
-            for pos in 0..s.cache.len() {
-                pages.extend_from_slice(
-                    s.cache.key(&engine.pool, layer, head, pos),
-                );
-                pages.extend_from_slice(
-                    s.cache.value(&engine.pool, layer, head, pos),
-                );
-            }
-        }
-    }
+    let nl = engine.mm.n_layers;
+    let pages = kv_fingerprint(engine, &s);
     let out = ModeOut {
         label,
         generated: vec![s.generated.clone()],

@@ -13,8 +13,8 @@
 mod common;
 
 use common::{
-    artifacts_dir, assert_identical, can_batch, run_mode, run_seq,
-    DecodeMode, ModeOut, Workload,
+    artifacts_dir, assert_identical, can_batch, kv_fingerprint, run_mode,
+    run_mode_quant, run_seq, DecodeMode, ModeOut, Workload,
 };
 use prhs::config::{EngineConfig, SelectorKind};
 use prhs::model::{decode_dispatch, decode_staging, Engine};
@@ -570,19 +570,7 @@ fn differential_identity_preempted_resumed_vs_uninterrupted() {
             let mut group = [&mut s];
             engine.decode_step(&mut group).expect("decode");
         }
-        let mut pages = Vec::new();
-        for layer in 0..nl {
-            for head in 0..h {
-                for pos in 0..s.cache.len() {
-                    pages.extend_from_slice(
-                        s.cache.key(&engine.pool, layer, head, pos),
-                    );
-                    pages.extend_from_slice(
-                        s.cache.value(&engine.pool, layer, head, pos),
-                    );
-                }
-            }
-        }
+        let pages = kv_fingerprint(&engine, &s);
         let interrupted = ModeOut {
             label: format!("preempted@{depth}"),
             generated: vec![s.generated.clone()],
@@ -617,4 +605,173 @@ fn differential_identity_preempted_resumed_vs_uninterrupted() {
             "{depth}: blocks leaked"
         );
     }
+}
+
+/// Quantized-residency differential (PR tentpole acceptance): at
+/// `kv_quant = off` the wiring is inert — bit-identical to the plain
+/// baseline in every residency home; at `int8` the host tier holds
+/// EXACTLY the canonicalized (quantize∘dequantize) floats, so
+/// paged-device and host-staged decode still agree bitwise with each
+/// other, the selector keeps most of the f32 selected set, the probe's
+/// dropped mass stays inside the theory chain's δ* + 2·TV bound, and
+/// `StepStats::kv_resident_bytes` matches an independent recompute of
+/// the pure `model::kv_bytes` model at ≥3× below the f32 footprint.
+#[test]
+fn differential_quantized_residency_int8_vs_f32() {
+    use prhs::kvcache::{canonicalize_row, quant_scale, KvQuant};
+    use prhs::model::kv_bytes;
+    use prhs::theory;
+
+    let Some(dir) = artifacts_dir() else { return };
+    let prompt_len = 120usize;
+    let max_new = 12usize;
+    let (nl, h, d) = {
+        let rt = prhs::runtime::Runtime::new(&dir).unwrap();
+        let mm = rt.model("small").unwrap();
+        if mm
+            .bucket_for("layer_step_dense", "l_max", prompt_len + max_new)
+            .is_none()
+        {
+            eprintln!("skipping: no dense bucket covers the workload");
+            return;
+        }
+        (mm.n_layers, mm.n_heads, mm.head_dim)
+    };
+    let mut w = Workload::synthetic(
+        "small",
+        SelectorKind::Cis,
+        1,
+        prompt_len,
+        8192,
+        131,
+    );
+    w.max_new = max_new;
+    w.probe_every = 3;
+
+    // kv_quant = off is the identity: same surface as the plain baseline
+    // across residency homes
+    let base = run_mode(&dir, &w, DecodeMode::PagedDev, true);
+    let off_paged =
+        run_mode_quant(&dir, &w, DecodeMode::PagedDev, true, KvQuant::Off);
+    let off_host =
+        run_mode_quant(&dir, &w, DecodeMode::HostStaged, true, KvQuant::Off);
+    assert_identical(&base, &off_paged);
+    assert_identical(&off_paged, &off_host);
+
+    // int8: canonicalization makes the residency home invisible — the
+    // device mirror seeds from the dequantized pool and decode appends
+    // are canonicalized before staging, so paged and host-staged runs
+    // must still agree bitwise WITH EACH OTHER
+    let q_paged =
+        run_mode_quant(&dir, &w, DecodeMode::PagedDev, true, KvQuant::Int8);
+    let q_host =
+        run_mode_quant(&dir, &w, DecodeMode::HostStaged, true, KvQuant::Int8);
+    assert_identical(&q_paged, &q_host);
+
+    // the int8 pool stores exactly the canonicalized f32 rows: over the
+    // prompt region (identical inputs in both runs — the trajectories
+    // may drift only in decode) every stored row is quantize∘dequantize
+    // of the f32 run's row, bitwise
+    let t_off = off_paged.kv[0].len() / (nl * h * 2 * d);
+    let t_q = q_paged.kv[0].len() / (nl * h * 2 * d);
+    assert!(t_off >= prompt_len && t_q >= prompt_len);
+    for layer in 0..nl {
+        for head in 0..h {
+            for pos in 0..prompt_len {
+                for half in 0..2 {
+                    let o =
+                        ((layer * h + head) * t_off + pos) * 2 * d + half * d;
+                    let q =
+                        ((layer * h + head) * t_q + pos) * 2 * d + half * d;
+                    let mut want = off_paged.kv[0][o..o + d].to_vec();
+                    canonicalize_row(&mut want);
+                    assert_eq!(
+                        want,
+                        &q_paged.kv[0][q..q + d],
+                        "int8 pool row != canonicalized f32 row \
+                         (layer {layer} head {head} pos {pos} half {half})"
+                    );
+                }
+            }
+        }
+    }
+
+    // selector-set overlap: the int8 sketch must keep most of the f32
+    // selected set
+    let (mut inter, mut denom) = (0usize, 0usize);
+    for (ls_f, ls_q) in off_paged.sets[0].iter().zip(&q_paged.sets[0]) {
+        for (sf, sq) in ls_f.iter().zip(ls_q) {
+            let fset: std::collections::HashSet<usize> =
+                sf.iter().copied().collect();
+            inter += sq.iter().filter(|i| fset.contains(i)).count();
+            denom += sf.len().max(sq.len());
+        }
+    }
+    assert!(denom > 0, "selector never materialized a set");
+    let overlap = inter as f64 / denom as f64;
+    assert!(
+        overlap >= 0.5,
+        "selector-set overlap collapsed under int8: {overlap:.3}"
+    );
+
+    // probe δ inside the theory chain: bound the logit perturbation with
+    // the measured max quantization step over all stored rows and a
+    // query-L1 proxy (2× the largest row L1 — queries and keys are
+    // same-scale projections on this testbed), then the int8 run's mean
+    // dropped mass must sit under δ* + 2·TV at that ε (small slack for
+    // decode-trajectory drift between the two runs)
+    let mut step_max = 0f64;
+    let mut l1_max = 0f64;
+    for row in off_paged.kv[0].chunks(d) {
+        let max_abs = row.iter().fold(0f32, |m, x| m.max(x.abs()));
+        step_max = step_max.max(quant_scale(max_abs) as f64);
+        l1_max = l1_max.max(row.iter().map(|x| x.abs() as f64).sum());
+    }
+    let eps = theory::quant_logit_eps(2.0 * l1_max, step_max, d);
+    let bound = theory::quant_dropped_mass_bound(off_paged.probe_delta, eps);
+    assert!(
+        q_paged.probe_delta <= bound + 0.05,
+        "int8 probe δ {:.4} above theory bound {:.4}",
+        q_paged.probe_delta,
+        bound
+    );
+
+    // resident-bytes gauge == the pure byte model, recomputed
+    // independently from the context length (one live sequence: the
+    // pool holds nl·⌈t/page_len⌉ pages); int8 sits ≥3× under f32
+    let run_res = |quant: KvQuant| -> u64 {
+        let mut cfg = EngineConfig::default();
+        cfg.artifacts_dir = dir.clone();
+        cfg.selector.kind = SelectorKind::Cis;
+        cfg.kv_quant = quant;
+        let mut engine = Engine::new(cfg).expect("engine");
+        let mut s = engine.new_sequence(0, w.prompts[0].clone());
+        s.max_new = max_new;
+        while !engine
+            .prefill_chunk(&mut s, w.prefill_chunk)
+            .expect("prefill")
+        {}
+        while !s.done {
+            let mut g = [&mut s];
+            engine.decode_step(&mut g).expect("decode");
+        }
+        let t = s.cache.len();
+        let pl = engine.pool.page_len;
+        let pages = nl * ((t + pl - 1) / pl);
+        let want = kv_bytes::pool_bytes(quant, pages, h, pl, d);
+        assert_eq!(
+            engine.stats.kv_resident_bytes, want,
+            "kv_resident_bytes off the pure byte model at {}",
+            quant.name()
+        );
+        let got = engine.stats.kv_resident_bytes;
+        engine.release(&mut s);
+        got
+    };
+    let res_f = run_res(KvQuant::Off);
+    let res_q = run_res(KvQuant::Int8);
+    assert!(
+        res_f >= 3 * res_q,
+        "int8 residency must be ≥3× smaller ({res_f} vs {res_q})"
+    );
 }
